@@ -1,0 +1,390 @@
+"""AOT compile path: lower L2/L1 computations to HLO text + build manifest.
+
+``make artifacts`` runs this module once; afterwards Python is never on the
+request path. For every (model, pack-size, rank, batch) variant in the grid
+we lower a fused packed-LoRA train step and an eval step; for the Table-7/8
+kernel microbenchmarks we lower standalone packed fwd/bwd kernels. The Rust
+runtime discovers everything through ``artifacts/manifest.json``.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+``xla`` crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import io_bin, pretrain, tasks
+from compile import model as M
+from compile.kernels import packed_lora as pk
+
+# ---------------------------------------------------------------------------
+# Variant grids (kept small enough for single-core compile times; the Rust
+# planner maps any requested pack onto the nearest available bucket).
+# ---------------------------------------------------------------------------
+
+# (n_adapters, r_pad, batch) buckets per model.
+TRAIN_GRID = {
+    "nano": [(1, 8, 1), (2, 8, 1), (4, 8, 1), (2, 8, 2)],
+    "tiny": [
+        (n, r, b)
+        for n in (1, 2, 4, 8)
+        for r in (8, 32)
+        for b in (1, 4)
+    ],
+    "small": [(1, 32, 1), (4, 32, 1), (8, 32, 1)],
+    "base": [(1, 32, 1), (2, 32, 1)],
+}
+
+# Pretraining budgets: (steps, batch) — see pretrain.py for why these exist.
+PRETRAIN = {"nano": (200, 16), "tiny": (300, 16), "small": (120, 8), "base": (60, 4)}
+
+DEFAULT_MODELS = ["nano", "tiny", "small", "base"]
+
+# Kernel microbenchmark geometries (Table 7/8 scaled to testbed: the paper
+# uses d in {2048, 3584, 11008, 18944} with r=64 at seq 512-2048; we scale to
+# the `small` TinyLM geometry with r=16, m=128 — DESIGN.md §3).
+KERNEL_GEOMS = {"attn": (256, 256), "mlp": (256, 1024)}
+KERNEL_NS = [1, 2, 8, 32]
+KERNEL_R = 16
+KERNEL_M = 16  # small m: the paper's low-arithmetic-intensity regime — per-adapter compute sits below the dispatch overhead that packing amortizes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dt(d) -> str:
+    return {jnp.dtype(jnp.float32): "f32", jnp.dtype(jnp.int32): "i32"}[jnp.dtype(d)]
+
+
+def _io_entry(name, s):
+    return {"name": name, "dtype": _dt(s.dtype), "shape": list(s.shape)}
+
+
+# ---------------------------------------------------------------------------
+# Train / eval step signatures (flat argument lists; order is the contract
+# with rust/src/runtime — names recorded per-artifact in the manifest).
+# ---------------------------------------------------------------------------
+
+
+def train_signature(spec: M.ModelSpec, n: int, r: int, bs: int):
+    """Ordered (name, ShapeDtypeStruct) inputs for a train-step artifact."""
+    sig = []
+    base = M.init_base(spec, jax.random.PRNGKey(0))
+    for k in M.BASE_ORDER:
+        sig.append((k, _sds(base[k].shape)))
+    lora_shapes = {}
+    for p in M.PROJS:
+        din, dout = M.proj_dims(spec, p)
+        lora_shapes[f"a_{p}"] = (spec.n_layers, n, din, r)
+        lora_shapes[f"b_{p}"] = (spec.n_layers, n, r, dout)
+    for k in M.LORA_ORDER:
+        sig.append((k, _sds(lora_shapes[k])))
+    for k in M.LORA_ORDER:
+        sig.append((f"m_{k}", _sds(lora_shapes[k])))
+    for k in M.LORA_ORDER:
+        sig.append((f"v_{k}", _sds(lora_shapes[k])))
+    sig += [
+        ("t", _sds(())),
+        ("tokens", _sds((n, bs, spec.seq), jnp.int32)),
+        ("targets", _sds((n, bs, spec.seq), jnp.int32)),
+        ("loss_mask", _sds((n, bs, spec.seq))),
+        ("scale", _sds((n,))),
+        ("lr", _sds((n,))),
+        ("rmask", _sds((n, r))),
+    ]
+    return sig
+
+
+def make_train_fn(spec: M.ModelSpec):
+    nb, nl = len(M.BASE_ORDER), len(M.LORA_ORDER)
+
+    def fn(*flat):
+        base = M.unflatten_base(flat[:nb])
+        lora = M.unflatten_lora(flat[nb : nb + nl])
+        m = M.unflatten_lora(flat[nb + nl : nb + 2 * nl])
+        v = M.unflatten_lora(flat[nb + 2 * nl : nb + 3 * nl])
+        t, tokens, targets, mask, scale, lr, rmask = flat[nb + 3 * nl :]
+        lora2, m2, v2, t2, per = M.train_step(
+            spec, base, lora, m, v, t, tokens, targets, mask, scale, lr, rmask
+        )
+        return (
+            tuple(M.flatten_lora(lora2))
+            + tuple(M.flatten_lora(m2))
+            + tuple(M.flatten_lora(v2))
+            + (t2, per)
+        )
+
+    return fn
+
+
+def train_output_names():
+    return (
+        list(M.LORA_ORDER)
+        + [f"m_{k}" for k in M.LORA_ORDER]
+        + [f"v_{k}" for k in M.LORA_ORDER]
+        + ["t", "per_loss"]
+    )
+
+
+def eval_signature(spec: M.ModelSpec, n: int, r: int, bs: int):
+    sig = train_signature(spec, n, r, bs)
+    names = {"tokens", "targets", "loss_mask", "scale"}
+    keep = [e for e in sig if e[0] in set(M.BASE_ORDER) | set(M.LORA_ORDER) | names]
+    return keep
+
+
+def make_eval_fn(spec: M.ModelSpec):
+    nb, nl = len(M.BASE_ORDER), len(M.LORA_ORDER)
+
+    def fn(*flat):
+        base = M.unflatten_base(flat[:nb])
+        lora = M.unflatten_lora(flat[nb : nb + nl])
+        tokens, targets, mask, scale = flat[nb + nl :]
+        loss, acc = M.eval_step(spec, base, lora, scale, tokens, targets, mask)
+        return (loss, acc)
+
+    return fn
+
+
+# NB: eval_signature ordering must match make_eval_fn: base, lora, then
+# (tokens, targets, loss_mask, scale) — train_signature lists them in exactly
+# that relative order, so the filtered list is already correct.
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbenchmark artifacts (Table 7/8)
+# ---------------------------------------------------------------------------
+
+
+def kernel_fwd_signature(n, d, k, r, m):
+    return [
+        ("x", _sds((n, m, d))),
+        ("a", _sds((n, d, r))),
+        ("b", _sds((n, r, k))),
+        ("alpha", _sds((n,))),
+    ]
+
+
+def kernel_bwd_signature(n, d, k, r, m):
+    return kernel_fwd_signature(n, d, k, r, m) + [("g", _sds((n, m, k)))]
+
+
+def kernel_fwd_fn(x, a, b, alpha):
+    # Full-block tiling (tile_n = n, tile_k = k): one interpret-mode grid
+    # block — the CPU-roofline configuration found in the §Perf L1 pass
+    # (tile_n=1 costs O(blocks x output) interpreter copies). A real-TPU
+    # build would keep k-tiling and let auto_tile_n bound VMEM.
+    n, _, _ = x.shape
+    k = b.shape[2]
+    return (pk.packed_lora_fwd(x, a, b, alpha, tile_n=n, tile_k=k),)
+
+
+def kernel_bwd_fn(x, a, b, alpha, g):
+    n, m, _ = x.shape
+    k = g.shape[2]
+    d = x.shape[2]
+    db = pk.packed_lora_db(x, a, g, alpha, tile_n=n, tile_k=k)
+    dh = pk.packed_lora_dh(g, b, alpha, tile_n=n, tile_k=k)
+    da = pk.packed_lora_da(x, dh, tile_n=n, tile_d=d)
+    dx = pk.packed_lora_dx(dh, a, tile_n=n, tile_d=d)
+    return (dx, da, db)
+
+
+def kernel_report(n, d, k, r, m):
+    """Analytic VMEM/MXU estimate for a packed-LoRA fwd block (DESIGN.md §8).
+
+    interpret=True gives CPU-numpy timing only, so real-TPU efficiency is
+    estimated structurally: VMEM residency of one grid block and the MXU
+    utilization implied by the inner dot shapes (128x128 systolic array).
+    """
+    bm = min(m, pk.DEF_TILE_M)
+    bk = min(k, pk.DEF_TILE_K)
+    vmem = 4 * (bm * d + d * r + r * bk + bm * bk)  # x, a, b, y blocks (f32)
+    # Two chained dots per block: (bm,d)x(d,r) and (bm,r)x(r,bk).
+    # MXU lanes used are bounded by each dot's inner/outer dims vs 128.
+    util1 = min(bm, 128) * min(r, 128) / (128 * 128)
+    util2 = min(bm, 128) * min(bk, 128) / (128 * 128)
+    flops = 2 * n * m * r * (d + k)
+    return {
+        "vmem_bytes_per_block": vmem,
+        "mxu_util_dot1": util1,
+        "mxu_util_dot2": util2,
+        "flops": flops,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def lower_artifact(out_dir, name, fn, sig, kind, meta, out_names=None):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*[s for _, s in sig])
+    text = to_hlo_text(lowered)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *[s for _, s in sig])
+    outs = [
+        _io_entry(out_names[i] if out_names else f"out{i}", s)
+        for i, s in enumerate(out_shapes)
+    ]
+    entry = {
+        "name": name,
+        "kind": kind,
+        "path": path,
+        "inputs": [_io_entry(nm, s) for nm, s in sig],
+        "outputs": outs,
+        **meta,
+    }
+    print(f"  lowered {name} ({len(text) / 1e6:.2f} MB HLO, {time.time() - t0:.1f}s)")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=DEFAULT_MODELS)
+    ap.add_argument("--force-pretrain", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--kernels-only", action="store_true",
+                    help="re-lower only the kernel artifacts, patching the existing manifest")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    if args.kernels_only:
+        mpath = os.path.join(out, "manifest.json")
+        manifest = json.load(open(mpath))
+        manifest["artifacts"] = [
+            a for a in manifest["artifacts"]
+            if a["kind"] not in ("kernel_fwd", "kernel_bwd")
+        ]
+        manifest["kernel_report"] = {}
+        for geom, (d, k) in KERNEL_GEOMS.items():
+            for n in KERNEL_NS:
+                meta = {"geom": geom, "n": n, "d": d, "k": k,
+                        "r": KERNEL_R, "m": KERNEL_M}
+                manifest["artifacts"].append(
+                    lower_artifact(out, f"kfwd_{geom}_n{n}", kernel_fwd_fn,
+                                   kernel_fwd_signature(n, d, k, KERNEL_R, KERNEL_M),
+                                   "kernel_fwd", meta, out_names=["y"]))
+                manifest["artifacts"].append(
+                    lower_artifact(out, f"kbwd_{geom}_n{n}", kernel_bwd_fn,
+                                   kernel_bwd_signature(n, d, k, KERNEL_R, KERNEL_M),
+                                   "kernel_bwd", meta, out_names=["dx", "da", "db"]))
+                manifest["kernel_report"][f"{geom}_n{n}"] = kernel_report(
+                    n, d, k, KERNEL_R, KERNEL_M)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"patched {mpath} (kernels only)")
+        return
+
+    manifest = {
+        "version": 1,
+        "token_layout": {
+            "pad": tasks.PAD, "bos": tasks.BOS, "sep": tasks.SEP,
+            "eos": tasks.EOS, "alpha0": tasks.ALPHA0,
+        },
+        "tasks": list(tasks.TASKS),
+        "models": {},
+        "artifacts": [],
+        "kernel_report": {},
+    }
+
+    for mname in args.models:
+        spec = M.MODELS[mname]
+        wpath = os.path.join(out, f"weights_{mname}.bin")
+        metrics = {}
+        if os.path.exists(wpath) and not args.force_pretrain:
+            print(f"[{mname}] reusing pretrained weights {wpath}")
+            mpath = wpath + ".metrics.json"
+            if os.path.exists(mpath):
+                metrics = json.load(open(mpath))
+        else:
+            steps, bsz = PRETRAIN[mname]
+            print(f"[{mname}] pretraining base ({spec.param_count()/1e6:.2f}M params, "
+                  f"{steps} steps, bs {bsz})")
+            base, metrics = pretrain.pretrain(spec, steps=steps, bsz=bsz)
+            io_bin.write_tensors(
+                wpath, [(k, np.asarray(base[k])) for k in M.BASE_ORDER]
+            )
+            json.dump(metrics, open(wpath + ".metrics.json", "w"))
+        manifest["models"][mname] = {
+            "vocab": spec.vocab, "d_model": spec.d_model,
+            "n_layers": spec.n_layers, "n_heads": spec.n_heads,
+            "d_ff": spec.d_ff, "seq": spec.seq,
+            "params": spec.param_count(),
+            "weights": f"weights_{mname}.bin",
+            "pretrain": metrics,
+        }
+
+        for (n, r, bs) in TRAIN_GRID[mname]:
+            meta = {"model": mname, "n": n, "r": r, "bs": bs, "seq": spec.seq}
+            manifest["artifacts"].append(
+                lower_artifact(
+                    out, f"train_{mname}_n{n}_r{r}_b{bs}", make_train_fn(spec),
+                    train_signature(spec, n, r, bs), "train", meta,
+                    out_names=train_output_names(),
+                )
+            )
+            manifest["artifacts"].append(
+                lower_artifact(
+                    out, f"eval_{mname}_n{n}_r{r}_b{bs}", make_eval_fn(spec),
+                    eval_signature(spec, n, r, bs), "eval", meta,
+                    out_names=["loss", "acc"],
+                )
+            )
+
+    if not args.skip_kernels:
+        for geom, (d, k) in KERNEL_GEOMS.items():
+            for n in KERNEL_NS:
+                meta = {"geom": geom, "n": n, "d": d, "k": k,
+                        "r": KERNEL_R, "m": KERNEL_M}
+                manifest["artifacts"].append(
+                    lower_artifact(
+                        out, f"kfwd_{geom}_n{n}", kernel_fwd_fn,
+                        kernel_fwd_signature(n, d, k, KERNEL_R, KERNEL_M),
+                        "kernel_fwd", meta, out_names=["y"],
+                    )
+                )
+                manifest["artifacts"].append(
+                    lower_artifact(
+                        out, f"kbwd_{geom}_n{n}", kernel_bwd_fn,
+                        kernel_bwd_signature(n, d, k, KERNEL_R, KERNEL_M),
+                        "kernel_bwd", meta, out_names=["dx", "da", "db"],
+                    )
+                )
+                manifest["kernel_report"][f"{geom}_n{n}"] = kernel_report(
+                    n, d, k, KERNEL_R, KERNEL_M
+                )
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(out, 'manifest.json')} "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""PLORAT01 tensor container — the weights interchange format.
+
+Written once at build time (pretrained base checkpoints, initial LoRA/opt
+state), read by the Rust runtime (``rust/src/runtime/tensor_file.rs``). The
+format is deliberately trivial so both sides stay in lock-step:
+
+    magic   8 bytes  b"PLORAT01"
+    count   u32 LE
+    tensor* count times:
+        name_len u32 LE, name utf-8
+        dtype    u8      (0 = f32, 1 = i32)
+        ndim     u8
+        dims     u32 LE * ndim
+        data     raw LE bytes (prod(dims) * itemsize)
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"PLORAT01"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.dtype(np.float32), 1: np.dtype(np.int32)}
+
+
+def write_tensors(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = DTYPES_INV[dt]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims)
+    return out

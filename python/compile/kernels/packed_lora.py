@@ -1,0 +1,331 @@
+"""L1: Packed multi-adapter LoRA kernels (Pallas).
+
+This is the PLoRA §5 kernel contribution re-thought for the TPU/Pallas
+programming model (see DESIGN.md §Hardware-Adaptation):
+
+  paper (CUDA/CUTLASS)                      here (Pallas)
+  ------------------------------------      ----------------------------------
+  threadblock tiles over (seq, hidden)      BlockSpec grid (adapter, seq-tile,
+                                            out-tile)
+  never tile the rank dim (r is tiny)       rank lives whole inside every block
+  shared-memory staging of A/B slices       A_i / B_i blocks are VMEM-resident
+  warp MMA (16,8,16) on tensor cores        MXU-shaped jnp.dot per block
+  streams for concurrent adapters           adapters are a leading grid axis
+
+All kernels use ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret-mode lowers to plain HLO that runs everywhere.
+Correctness oracle: :mod:`compile.kernels.ref` (pure jnp), checked by pytest +
+hypothesis sweeps in ``python/tests/test_kernel.py``.
+
+Shapes (n = adapters packed in the job, m = batch*seq flattened):
+  x      (n, m, d)   per-adapter input activations
+  a      (n, d, r)   LoRA A (rank-padded to the pack's r_pad)
+  b      (n, r, k)   LoRA B
+  alpha  (n,)        per-adapter scaling factor
+  y      (n, m, k)   LoRA delta output:  y_i = alpha_i * (x_i @ a_i) @ b_i
+
+Backward (upstream g = dL/dy, shape (n, m, k)) — the paper's four cases:
+  case 1  dB_i = alpha_i * (x_i a_i)^T g_i      tile k, accumulate over m
+  case 2  dH_i = alpha_i * g_i b_i^T            tile m, accumulate over k
+  case 3  dA_i = x_i^T dH_i                     tile d, accumulate over m
+  case 4  dX_i = dH_i a_i^T                     tile (m, d), reduce over r
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles. Actual tiles shrink to divisors for small
+# problems (tests sweep tiny shapes); see _tile().
+DEF_TILE_M = 128
+DEF_TILE_K = 128
+DEF_TILE_D = 128
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _tile(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (keeps grids exact)."""
+    t = min(dim, pref)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+# Adapters per block (the CUTLASS "threadblock shape" analogue for the pack
+# axis). On TPU, VMEM bounds tile_n near 1-4; on interpret-mode CPU, large
+# tile_n collapses the grid and avoids the O(blocks x output) copy cost of
+# dynamic-update-slice in the interpreter's while loop (§Perf L1 — measured
+# quadratic blow-up with tile_n=1). `auto_tile_n` picks the largest tile_n
+# whose block working set stays under a VMEM budget.
+VMEM_BUDGET = 12 * 1024 * 1024  # bytes (TPU v4 VMEM is 16 MiB/core)
+
+
+def auto_tile_n(n: int, block_bytes_per_adapter: int, budget: int = VMEM_BUDGET) -> int:
+    per = max(block_bytes_per_adapter, 1)
+    return _tile(n, max(budget // per, 1))
+
+
+# ---------------------------------------------------------------------------
+# Forward: y_i = alpha_i * (x_i @ a_i) @ b_i
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, a_ref, b_ref, alpha_ref, y_ref):
+    # Blocks: x (bn, bm, d), a (bn, d, r), b (bn, r, bk), alpha (bn,),
+    # y (bn, bm, bk) — batched over the bn adapters resident in the block.
+    h = jnp.einsum(
+        "nmd,ndr->nmr", x_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+    y = jnp.einsum("nmr,nrk->nmk", h, b_ref[...], preferred_element_type=jnp.float32)
+    y_ref[...] = (alpha_ref[...][:, None, None] * y).astype(y_ref.dtype)
+
+
+def packed_lora_fwd(
+    x, a, b, alpha, *, tile_m: int = DEF_TILE_M, tile_k: int = DEF_TILE_K, tile_n: int = 0
+):
+    """Packed LoRA delta forward for n adapters in one kernel launch."""
+    n, m, d = x.shape
+    _, _, r = a.shape
+    k = b.shape[2]
+    bm, bk = _tile(m, tile_m), _tile(k, tile_k)
+    bn = _tile(n, tile_n) if tile_n else auto_tile_n(n, 4 * (bm * d + d * r + r * bk + bm * bk))
+    grid = (n // bn, m // bm, k // bk)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm, d), lambda i, j, l: (i, j, 0)),
+            pl.BlockSpec((bn, d, r), lambda i, j, l: (i, 0, 0)),
+            pl.BlockSpec((bn, r, bk), lambda i, j, l: (i, 0, l)),
+            pl.BlockSpec((bn,), lambda i, j, l: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm, bk), lambda i, j, l: (i, j, l)),
+        out_shape=jax.ShapeDtypeStruct((n, m, k), x.dtype),
+        interpret=INTERPRET,
+    )(x, a, b, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Backward case 1: dB_i = alpha_i * (x_i @ a_i)^T @ g_i
+#   Grid (n, k-tiles, m-tiles); m is the innermost (accumulation) axis so the
+#   output block for a (n, k-tile) pair is revisited consecutively.
+# ---------------------------------------------------------------------------
+
+
+def _db_kernel(x_ref, a_ref, g_ref, alpha_ref, db_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    h = jnp.einsum(
+        "nmd,ndr->nmr", x_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+    part = jnp.einsum("nmr,nmk->nrk", h, g_ref[...].astype(jnp.float32))
+    db_ref[...] += (alpha_ref[...][:, None, None] * part).astype(db_ref.dtype)
+
+
+def packed_lora_db(
+    x, a, g, alpha, *, tile_m: int = DEF_TILE_M, tile_k: int = DEF_TILE_K, tile_n: int = 0
+):
+    n, m, d = x.shape
+    r = a.shape[2]
+    k = g.shape[2]
+    bm, bk = _tile(m, tile_m), _tile(k, tile_k)
+    bn = _tile(n, tile_n) if tile_n else auto_tile_n(n, 4 * (bm * d + d * r + bm * bk + r * bk))
+    grid = (n // bn, k // bk, m // bm)
+    return pl.pallas_call(
+        _db_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm, d), lambda i, l, j: (i, j, 0)),
+            pl.BlockSpec((bn, d, r), lambda i, l, j: (i, 0, 0)),
+            pl.BlockSpec((bn, bm, bk), lambda i, l, j: (i, j, l)),
+            pl.BlockSpec((bn,), lambda i, l, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn, r, bk), lambda i, l, j: (i, 0, l)),
+        out_shape=jax.ShapeDtypeStruct((n, r, k), a.dtype),
+        interpret=INTERPRET,
+    )(x, a, g, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Backward case 2: dH_i = alpha_i * g_i @ b_i^T   (grad wrt h = x a)
+#   Tile over the sequence dim; accumulate over k-tiles (innermost axis).
+# ---------------------------------------------------------------------------
+
+
+def _dh_kernel(g_ref, b_ref, alpha_ref, dh_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        dh_ref[...] = jnp.zeros_like(dh_ref)
+
+    part = jnp.einsum(
+        "nmk,nrk->nmr",
+        g_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+    )
+    dh_ref[...] += (alpha_ref[...][:, None, None] * part).astype(dh_ref.dtype)
+
+
+def packed_lora_dh(
+    g, b, alpha, *, tile_m: int = DEF_TILE_M, tile_k: int = DEF_TILE_K, tile_n: int = 0
+):
+    n, m, k = g.shape
+    r = b.shape[1]
+    bm, bk = _tile(m, tile_m), _tile(k, tile_k)
+    bn = _tile(n, tile_n) if tile_n else auto_tile_n(n, 4 * (bm * bk + r * bk + bm * r))
+    grid = (n // bn, m // bm, k // bk)
+    return pl.pallas_call(
+        _dh_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm, bk), lambda i, j, l: (i, j, l)),
+            pl.BlockSpec((bn, r, bk), lambda i, j, l: (i, 0, l)),
+            pl.BlockSpec((bn,), lambda i, j, l: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm, r), lambda i, j, l: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m, r), g.dtype),
+        interpret=INTERPRET,
+    )(g, b, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Backward case 3: dA_i = x_i^T @ dH_i
+#   Tile over the hidden dim d; accumulate over m-tiles (innermost axis).
+# ---------------------------------------------------------------------------
+
+
+def _da_kernel(x_ref, dh_ref, da_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        da_ref[...] = jnp.zeros_like(da_ref)
+
+    part = jnp.einsum(
+        "nmd,nmr->ndr",
+        x_ref[...].astype(jnp.float32),
+        dh_ref[...].astype(jnp.float32),
+    )
+    da_ref[...] += part.astype(da_ref.dtype)
+
+
+def packed_lora_da(
+    x, dh, *, tile_m: int = DEF_TILE_M, tile_d: int = DEF_TILE_D, tile_n: int = 0
+):
+    n, m, d = x.shape
+    r = dh.shape[2]
+    bm, bd = _tile(m, tile_m), _tile(d, tile_d)
+    bn = _tile(n, tile_n) if tile_n else auto_tile_n(n, 4 * (bm * bd + bm * r + bd * r))
+    grid = (n // bn, d // bd, m // bm)
+    return pl.pallas_call(
+        _da_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm, bd), lambda i, l, j: (i, j, l)),
+            pl.BlockSpec((bn, bm, r), lambda i, l, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd, r), lambda i, l, j: (i, l, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d, r), x.dtype),
+        interpret=INTERPRET,
+    )(x, dh)
+
+
+# ---------------------------------------------------------------------------
+# Backward case 4: dX_i = dH_i @ a_i^T
+#   Tile over (m, d); the rank dim is the (whole, in-VMEM) reduction axis.
+# ---------------------------------------------------------------------------
+
+
+def _dx_kernel(dh_ref, a_ref, dx_ref):
+    part = jnp.einsum(
+        "nmr,ndr->nmd",
+        dh_ref[...].astype(jnp.float32),
+        a_ref[...].astype(jnp.float32),
+    )
+    dx_ref[...] = part.astype(dx_ref.dtype)
+
+
+def packed_lora_dx(
+    dh, a, *, tile_m: int = DEF_TILE_M, tile_d: int = DEF_TILE_D, tile_n: int = 0
+):
+    n, m, r = dh.shape
+    d = a.shape[1]
+    bm, bd = _tile(m, tile_m), _tile(d, tile_d)
+    bn = _tile(n, tile_n) if tile_n else auto_tile_n(n, 4 * (bm * r + bd * r + bm * bd))
+    grid = (n // bn, m // bm, d // bd)
+    return pl.pallas_call(
+        _dx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm, r), lambda i, j, l: (i, j, 0)),
+            pl.BlockSpec((bn, bd, r), lambda i, j, l: (i, l, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm, bd), lambda i, j, l: (i, j, l)),
+        out_shape=jax.ShapeDtypeStruct((n, m, d), dh.dtype),
+        interpret=INTERPRET,
+    )(dh, a)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable packed LoRA delta (custom VJP wiring the four cases).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def packed_lora_delta(x, a, b, alpha):
+    """alpha_i * (x_i @ a_i) @ b_i for every adapter i, as one fused kernel.
+
+    ``alpha`` is a hyperparameter (per-adapter scaling), not a trained
+    weight — its cotangent is zero.
+    """
+    return packed_lora_fwd(x, a, b, alpha)
+
+
+def _delta_fwd(x, a, b, alpha):
+    return packed_lora_fwd(x, a, b, alpha), (x, a, b, alpha)
+
+
+def _delta_bwd(res, g):
+    x, a, b, alpha = res
+    db = packed_lora_db(x, a, g, alpha)  # case 1
+    dh = packed_lora_dh(g, b, alpha)  # case 2
+    da = packed_lora_da(x, dh)  # case 3
+    dx = packed_lora_dx(dh, a)  # case 4
+    dalpha = jnp.zeros_like(alpha)
+    return dx, da, db, dalpha
+
+
+packed_lora_delta.defvjp(_delta_fwd, _delta_bwd)
+
+
+def packed_lora_apply(x, w, a, b, alpha):
+    """Full packed-LoRA projection: y_i = x_i @ W + alpha_i (x_i a_i) b_i.
+
+    The frozen base weight ``w (d, k)`` is shared: its GEMM is batched over
+    the concatenation of every adapter's tokens (the paper's §3.2 workflow),
+    while the adapter deltas go through the packed kernels.
+    """
+    n, m, d = x.shape
+    k = w.shape[1]
+    base = jnp.dot(x.reshape(n * m, d), w).reshape(n, m, k)
+    return base + packed_lora_delta(x, a, b, alpha)
+
+
+def sequential_lora_apply(x, w, a, b, alpha):
+    """Naive baseline (paper §5.1): batch the base GEMM, then loop adapters.
+
+    Used by the Table-7/8 benches as the 'sequential LoRA computation'
+    comparator and by tests as a second oracle.
+    """
+    n, m, d = x.shape
+    k = w.shape[1]
+    base = jnp.dot(x.reshape(n * m, d), w).reshape(n, m, k)
+    deltas = []
+    for i in range(n):
+        h = jnp.dot(x[i], a[i])
+        deltas.append(alpha[i] * jnp.dot(h, b[i]))
+    return base + jnp.stack(deltas)

@@ -1,0 +1,300 @@
+"""L2: TinyLM — a decoder-only transformer with *packed* multi-adapter LoRA.
+
+This is the compute graph that PLoRA fine-tunes. It mirrors the paper's
+setup at testbed scale (see DESIGN.md §3 substitution ledger):
+
+- A frozen base model (the paper: Qwen-2.5 / LLaMa-3; here: TinyLM sizes
+  ``nano``/``tiny``/``small``/``base`` with the same architectural skeleton —
+  pre-LN attention + gated MLP).
+- LoRA adapters on the paper's seven projections: Q, K, V, O in attention and
+  up, gate, down in the MLP (Appendix A, Eq. 20).
+- ``n`` adapters are packed into one job: every adapter receives its own
+  token batch; the base GEMMs are batched across adapters while the adapter
+  deltas go through the L1 packed Pallas kernels (§5).
+- Heterogeneous packs: ranks are zero-padded to the pack's ``r_pad`` and
+  batches padded to the pack max with a loss mask (gradient-stable; tested).
+
+Everything here is build-time Python: ``aot.py`` lowers ``train_step`` /
+``eval_step`` to HLO text once, and the Rust engine replays them via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.packed_lora import packed_lora_delta
+
+# ---------------------------------------------------------------------------
+# Model geometry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int  # fixed training sequence length (paper uses 1024)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d  # attn + mlp + 2 LN
+        return v * d + self.seq * d + L * per_layer + d
+
+    def lora_param_count(self, r: int) -> int:
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        # Q,K,V,O: (d->d) x4 ; up,gate: d->f ; down: f->d
+        per_layer = 4 * (d * r + r * d) + 2 * (d * r + r * f) + (f * r + r * d)
+        return L * per_layer
+
+
+MODELS: Dict[str, ModelSpec] = {
+    "nano": ModelSpec("nano", vocab=256, d_model=64, n_layers=2, n_heads=2, d_ff=256, seq=32),
+    "tiny": ModelSpec("tiny", vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=512, seq=64),
+    "small": ModelSpec("small", vocab=1024, d_model=256, n_layers=6, n_heads=8, d_ff=1024, seq=64),
+    "base": ModelSpec("base", vocab=4096, d_model=512, n_layers=8, n_heads=8, d_ff=2048, seq=128),
+}
+
+# The seven LoRA-able projections (paper Appendix A): name -> (in, out) dims.
+PROJS = ("q", "k", "v", "o", "up", "gate", "down")
+
+
+def proj_dims(spec: ModelSpec, p: str) -> Tuple[int, int]:
+    d, f = spec.d_model, spec.d_ff
+    return {
+        "q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+        "up": (d, f), "gate": (d, f), "down": (f, d),
+    }[p]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation (base is "pretrained" by pretrain.py at build time)
+# ---------------------------------------------------------------------------
+
+
+def init_base(spec: ModelSpec, key) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 12)
+    d, f, v, L, s = spec.d_model, spec.d_ff, spec.vocab, spec.n_layers, spec.seq
+
+    def norm(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    return {
+        "embed": norm(ks[0], (v, d), 0.02),
+        "pos": norm(ks[1], (s, d), 0.02),
+        "ln1": jnp.ones((L, d), jnp.float32),
+        "ln2": jnp.ones((L, d), jnp.float32),
+        "wq": norm(ks[2], (L, d, d), d ** -0.5),
+        "wk": norm(ks[3], (L, d, d), d ** -0.5),
+        "wv": norm(ks[4], (L, d, d), d ** -0.5),
+        "wo": norm(ks[5], (L, d, d), d ** -0.5),
+        "wup": norm(ks[6], (L, d, f), d ** -0.5),
+        "wgate": norm(ks[7], (L, d, f), d ** -0.5),
+        "wdown": norm(ks[8], (L, f, d), f ** -0.5),
+        "lnf": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_lora(spec: ModelSpec, n: int, r: int, key) -> Dict[str, jnp.ndarray]:
+    """LoRA params for a pack of ``n`` adapters at (padded) rank ``r``.
+
+    A ~ N(0, 1/d_in); B = 0 (the standard LoRA init: delta starts at zero).
+    Layout: {"a_<p>": (L, n, d_in, r), "b_<p>": (L, n, r, d_out)}.
+    """
+    params = {}
+    ks = jax.random.split(key, len(PROJS))
+    for kk, p in zip(ks, PROJS):
+        din, dout = proj_dims(spec, p)
+        params[f"a_{p}"] = (
+            jax.random.normal(kk, (spec.n_layers, n, din, r)) / np.sqrt(din)
+        ).astype(jnp.float32)
+        params[f"b_{p}"] = jnp.zeros((spec.n_layers, n, r, dout), jnp.float32)
+    return params
+
+
+def rank_mask(n: int, r_pad: int, ranks) -> jnp.ndarray:
+    """(n, r_pad) 0/1 mask: adapter i uses its true rank ranks[i] <= r_pad."""
+    ranks = jnp.asarray(ranks)
+    return (jnp.arange(r_pad)[None, :] < ranks[:, None]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def _proj(x_flat, w, a, b, scale):
+    """Packed-LoRA projection: x (n, m, din) -> (n, m, dout)."""
+    n, m, din = x_flat.shape
+    base = jnp.dot(x_flat.reshape(n * m, din), w).reshape(n, m, -1)
+    return base + packed_lora_delta(x_flat, a, b, scale)
+
+
+def forward(spec: ModelSpec, base, lora, scale, tokens):
+    """Packed forward. tokens (n, bsz, s) int32 -> logits (n, bsz, s, vocab).
+
+    ``scale`` is the per-adapter effective scaling alpha_i / r_i (n,).
+    The base weights are shared across adapters (frozen); adapter deltas use
+    the L1 packed kernels. Layers run under lax.scan to keep the lowered HLO
+    compact (DESIGN.md §Perf L2).
+    """
+    n, bsz, s = tokens.shape
+    d, H, dh = spec.d_model, spec.n_heads, spec.d_head
+    x = base["embed"][tokens] + base["pos"][None, None, :s, :]
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    layer_ws = (
+        base["ln1"], base["wq"], base["wk"], base["wv"], base["wo"],
+        base["ln2"], base["wup"], base["wgate"], base["wdown"],
+    )
+    layer_lora = tuple(lora[f"a_{p}"] for p in PROJS) + tuple(
+        lora[f"b_{p}"] for p in PROJS
+    )
+
+    def layer(x, ws):
+        (ln1, wq, wk, wv, wo, ln2, wup, wgate, wdown), (
+            aq, ak, av, ao, aup, agate, adown,
+            bq, bk, bv, bo, bup, bgate, bdown,
+        ) = ws
+        h = _layernorm(x, ln1)
+        hf = h.reshape(n, bsz * s, d)
+        q = _proj(hf, wq, aq, bq, scale).reshape(n, bsz, s, H, dh)
+        k = _proj(hf, wk, ak, bk, scale).reshape(n, bsz, s, H, dh)
+        v = _proj(hf, wv, av, bv, scale).reshape(n, bsz, s, H, dh)
+        att = jnp.einsum("nbqhd,nbkhd->nbhqk", q, k) / np.sqrt(dh)
+        att = jnp.where(causal[None, None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("nbhqk,nbkhd->nbqhd", att, v).reshape(n, bsz * s, d)
+        x = x + _proj(o, wo, ao, bo, scale).reshape(n, bsz, s, d)
+
+        h = _layernorm(x, ln2)
+        hf = h.reshape(n, bsz * s, d)
+        up = _proj(hf, wup, aup, bup, scale)
+        gate = _proj(hf, wgate, agate, bgate, scale)
+        act = jax.nn.silu(gate) * up
+        x = x + _proj(act, wdown, adown, bdown, scale).reshape(n, bsz, s, d)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, (layer_ws, layer_lora))
+    x = _layernorm(x, base["lnf"])
+    logits = jnp.einsum("nbsd,vd->nbsv", x, base["embed"])
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step (AdamW on LoRA params only, per-adapter learning rate)
+# ---------------------------------------------------------------------------
+
+
+def packed_loss(spec, base, lora, scale, tokens, targets, loss_mask):
+    """Per-adapter mean CE loss. loss_mask (n, bsz, s): 1 on answer tokens of
+    real (non-padding) samples, 0 elsewhere. Returns (sum_loss, per_adapter)."""
+    logits = forward(spec, base, lora, scale, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    per = jnp.sum(nll * loss_mask, axis=(1, 2)) / jnp.maximum(
+        jnp.sum(loss_mask, axis=(1, 2)), 1.0
+    )
+    # Sum (not mean) over adapters: gradients of adapter i must not depend on
+    # how many other adapters are packed with it (paper §3.2: computation is
+    # identical to single-adapter fine-tuning).
+    return jnp.sum(per), per
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.999, 1e-8, 0.0
+
+
+def train_step(spec, base, lora, m, v, t, tokens, targets, loss_mask, scale, lr, rmask):
+    """One packed fine-tuning step: fwd + bwd + per-adapter AdamW on LoRA.
+
+    ``lr`` (n,) per-adapter learning rate; ``rmask`` (n, r_pad) keeps padded
+    rank columns exactly zero (belt-and-braces on top of the zero-grad
+    property). Returns (lora', m', v', t+1, per_adapter_loss).
+    """
+    (_, per), grads = jax.value_and_grad(
+        lambda lp: packed_loss(spec, base, lp, scale, tokens, targets, loss_mask),
+        has_aux=True,
+    )(lora)
+
+    t = t + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+
+    new_lora, new_m, new_v = {}, {}, {}
+    for key in sorted(lora):
+        g = grads[key]
+        # mask padded ranks: a_* has rank on axis -1, b_* on axis -2
+        if key.startswith("a_"):
+            km = rmask[None, :, None, :]
+        else:
+            km = rmask[None, :, :, None]
+        g = g * km
+        m1 = ADAM_B1 * m[key] + (1 - ADAM_B1) * g
+        v1 = ADAM_B2 * v[key] + (1 - ADAM_B2) * g * g
+        mh = m1 / bc1
+        vh = v1 / bc2
+        lr_b = lr[None, :, None, None]
+        upd = lr_b * mh / (jnp.sqrt(vh) + ADAM_EPS)
+        if WEIGHT_DECAY:
+            upd = upd + lr_b * WEIGHT_DECAY * lora[key]
+        new_lora[key] = (lora[key] - upd) * km
+        new_m[key] = m1
+        new_v[key] = v1
+    return new_lora, new_m, new_v, t, per
+
+
+def eval_step(spec, base, lora, scale, tokens, targets, loss_mask):
+    """Per-adapter eval: (loss, token-level accuracy on masked positions)."""
+    logits = forward(spec, base, lora, scale, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask, axis=(1, 2)), 1.0)
+    loss = jnp.sum(nll * loss_mask, axis=(1, 2)) / denom
+    pred = jnp.argmax(logits, axis=-1)
+    acc = jnp.sum((pred == targets) * loss_mask, axis=(1, 2)) / denom
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Deterministic flatten order (shared with aot.py and the Rust runtime)
+# ---------------------------------------------------------------------------
+
+BASE_ORDER = [
+    "embed", "pos", "ln1", "ln2", "wq", "wk", "wv", "wo",
+    "wup", "wgate", "wdown", "lnf",
+]
+LORA_ORDER = sorted(f"{t}_{p}" for p in PROJS for t in ("a", "b"))
+
+
+def flatten_base(base) -> List[jnp.ndarray]:
+    return [base[k] for k in BASE_ORDER]
+
+
+def unflatten_base(flat) -> Dict[str, jnp.ndarray]:
+    return dict(zip(BASE_ORDER, flat))
+
+
+def flatten_lora(lora) -> List[jnp.ndarray]:
+    return [lora[k] for k in LORA_ORDER]
+
+
+def unflatten_lora(flat) -> Dict[str, jnp.ndarray]:
+    return dict(zip(LORA_ORDER, flat))

@@ -1,0 +1,127 @@
+"""Build-time pretraining of the TinyLM base models.
+
+The paper fine-tunes pretrained Qwen/LLaMa checkpoints; we have no weights to
+download, so ``make artifacts`` *produces* the frozen base checkpoints by
+pretraining each TinyLM size on a mixture of the four synthetic tasks
+(DESIGN.md §3). The mixture gives the base partial competence on every task —
+LoRA fine-tuning then specializes it, which is exactly the regime the paper's
+quality study (Tables 2–4, 6) needs: a base that is decent but improvable.
+
+This module is plain jitted JAX (no Pallas) — it never ships to the Rust
+side; only the resulting weights do, via ``io_bin.write_tensors``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import tasks as T
+from compile.model import ModelSpec, init_base
+
+
+def forward_base(spec: ModelSpec, base, tokens):
+    """Base-only forward (no LoRA), tokens (b, s) -> logits (b, s, v)."""
+    b, s = tokens.shape
+    d, H, dh = spec.d_model, spec.n_heads, spec.d_head
+    x = base["embed"][tokens] + base["pos"][None, :s, :]
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    def ln(x, g):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+    layer_ws = tuple(
+        base[k]
+        for k in ("ln1", "wq", "wk", "wv", "wo", "ln2", "wup", "wgate", "wdown")
+    )
+
+    def layer(x, ws):
+        ln1, wq, wk, wv, wo, ln2, wup, wgate, wdown = ws
+        h = ln(x, ln1)
+        q = (h @ wq).reshape(b, s, H, dh)
+        k = (h @ wk).reshape(b, s, H, dh)
+        v = (h @ wv).reshape(b, s, H, dh)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+        x = x + o @ wo
+        h = ln(x, ln2)
+        x = x + (jax.nn.silu(h @ wgate) * (h @ wup)) @ wdown
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, layer_ws)
+    x = ln(x, base["lnf"])
+    return jnp.einsum("bsd,vd->bsv", x, base["embed"])
+
+
+def _loss(spec, base, tokens, targets, mask):
+    logits = forward_base(spec, base, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    # Pretrain on the full sequence (LM objective), not just answer spans:
+    lm_mask = (targets != T.PAD).astype(jnp.float32)
+    return jnp.sum(nll * lm_mask) / jnp.maximum(jnp.sum(lm_mask), 1.0)
+
+
+def pretrain(
+    spec: ModelSpec,
+    steps: int = 400,
+    bsz: int = 32,
+    lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 100,
+) -> Tuple[Dict[str, jnp.ndarray], Dict[str, float]]:
+    """AdamW pretraining on the uniform task mixture; returns (weights, metrics)."""
+    rng = np.random.default_rng(seed)
+    base = init_base(spec, jax.random.PRNGKey(seed))
+    m = jax.tree.map(jnp.zeros_like, base)
+    v = jax.tree.map(jnp.zeros_like, base)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(base, m, v, t, tokens, targets, mask):
+        loss, g = jax.value_and_grad(lambda p: _loss(spec, p, tokens, targets, mask))(base)
+        m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
+        v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
+        bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+        base = jax.tree.map(
+            lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+            base, m, v,
+        )
+        return base, m, v, loss
+
+    t0 = time.time()
+    first = last = None
+    for i in range(1, steps + 1):
+        task = T.TASKS[(i - 1) % len(T.TASKS)]
+        tokens, targets, mask = T.batch(task, rng, bsz, spec.seq, spec.vocab)
+        base, m, v, loss = step(base, m, v, float(i), tokens, targets, mask)
+        loss = float(loss)
+        if first is None:
+            first = loss
+        last = loss
+        if i % log_every == 0 or i == 1:
+            print(f"  pretrain[{spec.name}] step {i:4d}/{steps} loss {loss:.4f}")
+
+    # Per-task answer-span accuracy of the pretrained base (manifest metric).
+    accs = {}
+    for task in T.TASKS:
+        tokens, targets, mask = T.batch(task, rng, 64, spec.seq, spec.vocab)
+        logits = forward_base(spec, base, tokens)
+        pred = np.asarray(jnp.argmax(logits, axis=-1))
+        hit = ((pred == targets) * mask).sum() / max(mask.sum(), 1.0)
+        accs[task] = float(hit)
+    metrics = {
+        "loss_first": first,
+        "loss_last": last,
+        "seconds": time.time() - t0,
+        **{f"acc_{k}": v for k, v in accs.items()},
+    }
+    return base, metrics

@@ -1,0 +1,119 @@
+"""Synthetic downstream tasks (build-time side).
+
+The paper evaluates on GSM8K / mrpc / cola / wnli; those need model+data
+downloads this environment does not have (repro band 0/5), so we substitute
+four synthetic seq2seq tasks with the same *role*: distinguishable skills
+whose optimal LoRA hyperparameters differ (DESIGN.md §3).
+
+Token layout (shared with the Rust generators in ``rust/src/train/tasks.rs``
+— keep in sync, the layout is also recorded in artifacts/manifest.json):
+
+    0 PAD   1 BOS   2 SEP   3 EOS   4.. unused   8.. payload alphabet
+
+Each sample is a fixed-length next-token-prediction triple
+``(tokens, targets, loss_mask)`` of length ``seq``: ``targets`` is the
+one-step shift and ``loss_mask`` is 1 exactly on positions whose target is
+part of the answer span.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAD, BOS, SEP, EOS = 0, 1, 2, 3
+ALPHA0 = 8  # first payload token
+
+TASKS = ("modadd", "copy", "parity", "needle")
+
+
+def _finalize(seq_tokens, answer_lo, answer_hi, seq):
+    """Build (tokens, targets, mask) from a full sequence + answer span."""
+    full = np.full(seq + 1, PAD, dtype=np.int32)
+    L = min(len(seq_tokens), seq + 1)
+    full[:L] = seq_tokens[:L]
+    tokens = full[:-1]
+    targets = full[1:]
+    mask = np.zeros(seq, dtype=np.float32)
+    # target position t predicts full[t+1]; answers live at [lo, hi) in full
+    lo = max(answer_lo - 1, 0)
+    hi = min(answer_hi - 1, seq)
+    mask[lo:hi] = 1.0
+    return tokens, targets, mask
+
+
+def gen_modadd(rng: np.random.Generator, seq: int, vocab: int):
+    """a + b = c (mod P): mathematical-reasoning stand-in (gsm8k)."""
+    p = min(vocab - ALPHA0, 97)
+    a, b = int(rng.integers(p)), int(rng.integers(p))
+    c = (a + b) % p
+    s = [BOS, ALPHA0 + a, ALPHA0 + b, SEP, ALPHA0 + c, EOS]
+    return _finalize(s, 4, 5, seq)
+
+
+def gen_copy(rng: np.random.Generator, seq: int, vocab: int):
+    """Copy a random string after SEP: language-understanding stand-in (mrpc)."""
+    alpha = min(vocab - ALPHA0, 64)
+    ln = (seq - 3) // 2
+    payload = rng.integers(alpha, size=ln)
+    s = [BOS] + [ALPHA0 + int(t) for t in payload] + [SEP] + [
+        ALPHA0 + int(t) for t in payload
+    ] + [EOS]
+    return _finalize(s, ln + 2, 2 * ln + 2, seq)
+
+
+def gen_parity(rng: np.random.Generator, seq: int, vocab: int):
+    """Parity of a bit string: logic-reasoning stand-in (wnli)."""
+    ln = max(seq - 4, 1)
+    bits = rng.integers(2, size=ln)
+    ans = int(bits.sum() % 2)
+    s = [BOS] + [ALPHA0 + int(b) for b in bits] + [SEP, ALPHA0 + ans, EOS]
+    return _finalize(s, ln + 2, ln + 3, seq)
+
+
+def gen_needle(rng: np.random.Generator, seq: int, vocab: int):
+    """Key-value retrieval: commonsense/lookup stand-in (cola)."""
+    nk = min((seq - 5) // 2, 8)
+    key_alpha = min((vocab - ALPHA0) // 2, 32)
+    val_base = ALPHA0 + key_alpha
+    keys = rng.permutation(key_alpha)[:nk]
+    vals = rng.integers(key_alpha, size=nk)
+    qi = int(rng.integers(nk))
+    s = [BOS]
+    for kk, vv in zip(keys, vals):
+        s += [ALPHA0 + int(kk), val_base + int(vv)]
+    s += [SEP, ALPHA0 + int(keys[qi]), SEP, val_base + int(vals[qi]), EOS]
+    return _finalize(s, 2 * nk + 4, 2 * nk + 5, seq)
+
+
+GEN = {"modadd": gen_modadd, "copy": gen_copy, "parity": gen_parity, "needle": gen_needle}
+
+
+def batch(task: str, rng: np.random.Generator, bsz: int, seq: int, vocab: int):
+    toks, tgts, masks = [], [], []
+    for _ in range(bsz):
+        t, g, m = GEN[task](rng, seq, vocab)
+        toks.append(t)
+        tgts.append(g)
+        masks.append(m)
+    return (
+        np.stack(toks).astype(np.int32),
+        np.stack(tgts).astype(np.int32),
+        np.stack(masks).astype(np.float32),
+    )
+
+
+def packed_batch(tasks, rng, bsz: int, seq: int, vocab: int, real_bsz=None):
+    """A packed batch for n adapters: tokens (n,bsz,seq), targets, mask.
+
+    ``real_bsz[i] <= bsz`` pads adapter i's batch with zero-mask samples
+    (heterogeneous batch sizes inside a pack, DESIGN.md §2).
+    """
+    n = len(tasks)
+    toks = np.zeros((n, bsz, seq), np.int32)
+    tgts = np.zeros((n, bsz, seq), np.int32)
+    mask = np.zeros((n, bsz, seq), np.float32)
+    for i, task in enumerate(tasks):
+        rb = bsz if real_bsz is None else real_bsz[i]
+        t, g, m = batch(task, rng, rb, seq, vocab)
+        toks[i, :rb], tgts[i, :rb], mask[i, :rb] = t, g, m
+    return toks, tgts, mask

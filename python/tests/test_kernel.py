@@ -1,0 +1,160 @@
+# pytest: packed LoRA Pallas kernels vs the pure-jnp oracle — the CORE
+# correctness signal for L1. Hypothesis sweeps shapes/dtypes; explicit cases
+# pin the paper's geometries (Table 7: d in {2048, 3584, 11008, 18944}-like).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import packed_lora as pk
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def make_inputs(n, m, d, r, k, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(ks[0], (n, m, d), dtype)
+    a = rand(ks[1], (n, d, r), dtype, scale=1.0 / np.sqrt(d))
+    b = rand(ks[2], (n, r, k), dtype, scale=1.0 / np.sqrt(r))
+    alpha = jnp.abs(rand(ks[3], (n,), jnp.float32)) + 0.25
+    return x, a, b, alpha
+
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+# Small-but-representative geometry grid (m = batch*seq flattened).
+GRID = [
+    (1, 8, 16, 4, 16),
+    (2, 16, 32, 8, 24),
+    (3, 24, 48, 8, 32),
+    (4, 32, 64, 16, 64),
+    (8, 16, 128, 8, 96),
+]
+
+
+@pytest.mark.parametrize("n,m,d,r,k", GRID)
+def test_fwd_matches_ref(n, m, d, r, k):
+    x, a, b, alpha = make_inputs(n, m, d, r, k)
+    got = pk.packed_lora_fwd(x, a, b, alpha)
+    want = ref.ref_delta(x, a, b, alpha)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("n,m,d,r,k", GRID)
+def test_backward_cases_match_ref(n, m, d, r, k):
+    x, a, b, alpha = make_inputs(n, m, d, r, k)
+    g = rand(jax.random.PRNGKey(7), (n, m, k))
+    dx_r, da_r, db_r = ref.ref_grads(x, a, b, alpha, g)
+    dh = pk.packed_lora_dh(g, b, alpha)
+    np.testing.assert_allclose(pk.packed_lora_db(x, a, g, alpha), db_r, **TOL)
+    np.testing.assert_allclose(pk.packed_lora_da(x, dh), da_r, **TOL)
+    np.testing.assert_allclose(pk.packed_lora_dx(dh, a), dx_r, **TOL)
+
+
+@pytest.mark.parametrize("n,m,d,r,k", GRID[:3])
+def test_custom_vjp_matches_jax_vjp(n, m, d, r, k):
+    x, a, b, alpha = make_inputs(n, m, d, r, k, seed=3)
+    g = rand(jax.random.PRNGKey(11), (n, m, k))
+    out, pull = jax.vjp(lambda x_, a_, b_: pk.packed_lora_delta(x_, a_, b_, alpha), x, a, b)
+    np.testing.assert_allclose(out, ref.ref_delta(x, a, b, alpha), **TOL)
+    got = pull(g)
+    want = ref.ref_vjp(x, a, b, alpha, g)
+    for gi, wi in zip(got, want):
+        np.testing.assert_allclose(gi, wi, **TOL)
+
+
+def test_apply_includes_base_weight():
+    n, m, d, r, k = 2, 16, 32, 8, 24
+    x, a, b, alpha = make_inputs(n, m, d, r, k, seed=5)
+    w = rand(jax.random.PRNGKey(9), (d, k))
+    got = pk.packed_lora_apply(x, w, a, b, alpha)
+    np.testing.assert_allclose(got, ref.ref_apply(x, w, a, b, alpha), **TOL)
+
+
+def test_sequential_matches_packed():
+    # The §5.1 naive baseline must be numerically identical to the packed path.
+    n, m, d, r, k = 4, 8, 32, 8, 16
+    x, a, b, alpha = make_inputs(n, m, d, r, k, seed=8)
+    w = rand(jax.random.PRNGKey(2), (d, k))
+    np.testing.assert_allclose(
+        pk.sequential_lora_apply(x, w, a, b, alpha),
+        pk.packed_lora_apply(x, w, a, b, alpha),
+        **TOL,
+    )
+
+
+def test_rank_padding_is_gradient_stable():
+    # DESIGN.md: packs mix ranks by zero-padding to r_pad. Padded entries of
+    # A (columns) and B (rows) must receive exactly-zero gradients.
+    n, m, d, r, k = 2, 16, 32, 8, 24
+    r_pad = 16
+    x, a, b, alpha = make_inputs(n, m, d, r, k, seed=13)
+    a_p = jnp.pad(a, ((0, 0), (0, 0), (0, r_pad - r)))
+    b_p = jnp.pad(b, ((0, 0), (0, r_pad - r), (0, 0)))
+    g = rand(jax.random.PRNGKey(17), (n, m, k))
+    # Padded forward must equal unpadded forward.
+    np.testing.assert_allclose(
+        pk.packed_lora_fwd(x, a_p, b_p, alpha), pk.packed_lora_fwd(x, a, b, alpha), **TOL
+    )
+    _, pull = jax.vjp(lambda a_, b_: pk.packed_lora_delta(x, a_, b_, alpha), a_p, b_p)
+    da, db = pull(g)
+    np.testing.assert_array_equal(np.asarray(da[:, :, r:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(db[:, r:, :]), 0.0)
+
+
+def test_alpha_scales_linearly():
+    n, m, d, r, k = 2, 8, 16, 4, 8
+    x, a, b, alpha = make_inputs(n, m, d, r, k, seed=21)
+    y1 = pk.packed_lora_fwd(x, a, b, alpha)
+    y2 = pk.packed_lora_fwd(x, a, b, 2.0 * alpha)
+    np.testing.assert_allclose(y2, 2.0 * y1, **TOL)
+
+
+def test_bfloat16_forward():
+    n, m, d, r, k = 2, 16, 32, 8, 16
+    x, a, b, alpha = make_inputs(n, m, d, r, k, dtype=jnp.bfloat16, seed=4)
+    got = pk.packed_lora_fwd(x, a, b, alpha).astype(jnp.float32)
+    want = ref.ref_delta(
+        x.astype(jnp.float32), a.astype(jnp.float32), b.astype(jnp.float32), alpha
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5),
+    m=st.integers(1, 48),
+    d=st.integers(1, 96),
+    r=st.sampled_from([1, 2, 4, 8, 16]),
+    k=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_fwd_bwd(n, m, d, r, k, seed):
+    x, a, b, alpha = make_inputs(n, m, d, r, k, seed=seed)
+    got = pk.packed_lora_fwd(x, a, b, alpha)
+    np.testing.assert_allclose(got, ref.ref_delta(x, a, b, alpha), **TOL)
+    g = rand(jax.random.PRNGKey(seed + 1), (n, m, k))
+    dx_r, da_r, db_r = ref.ref_grads(x, a, b, alpha, g)
+    dh = pk.packed_lora_dh(g, b, alpha)
+    np.testing.assert_allclose(pk.packed_lora_db(x, a, g, alpha), db_r, **TOL)
+    np.testing.assert_allclose(pk.packed_lora_da(x, dh), da_r, **TOL)
+    np.testing.assert_allclose(pk.packed_lora_dx(dh, a), dx_r, **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tile_m=st.sampled_from([1, 2, 3, 8, 128]),
+    tile_k=st.sampled_from([1, 2, 3, 8, 128]),
+)
+def test_tiling_invariance(tile_m, tile_k):
+    # Output must not depend on the tile choice (grid decomposition).
+    n, m, d, r, k = 2, 12, 24, 4, 18
+    x, a, b, alpha = make_inputs(n, m, d, r, k, seed=30)
+    base = ref.ref_delta(x, a, b, alpha)
+    got = pk.packed_lora_fwd(x, a, b, alpha, tile_m=tile_m, tile_k=tile_k)
+    np.testing.assert_allclose(got, base, **TOL)

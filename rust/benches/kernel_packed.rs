@@ -1,0 +1,98 @@
+//! Table 7/8 — packed-LoRA kernel throughput vs the sequential
+//! per-adapter baseline, measured **live** on the PJRT runtime against the
+//! AOT kernel artifacts (L1 Pallas kernels lowered through L2).
+//!
+//! The paper reports near-linear speedup up to 32 packed adapters on both
+//! Attention (d = 2048/3584) and MLP (d = 11008/18944) projections; at
+//! testbed scale the artifacts use the `small` TinyLM dims (attn 256x256,
+//! mlp 256x1024, r=16, m=128 — DESIGN.md §6) and per-launch overhead on
+//! CPU-PJRT plays the role of GPU underutilization.
+//!
+//! Run: `cargo bench --bench kernel_packed`
+
+use plora::bench::Bench;
+use plora::metrics::{fmt_x, Table};
+use plora::runtime::{HostTensor, Runtime};
+use plora::util::json::Json;
+
+fn inputs(n: usize, d: usize, k: usize, r: usize, m: usize, bwd: bool) -> Vec<HostTensor> {
+    let mut v = vec![
+        HostTensor::f32(vec![n, m, d], vec![0.01; n * m * d]).unwrap(),
+        HostTensor::f32(vec![n, d, r], vec![0.02; n * d * r]).unwrap(),
+        HostTensor::f32(vec![n, r, k], vec![0.03; n * r * k]).unwrap(),
+        HostTensor::f32(vec![n], vec![1.0; n]).unwrap(),
+    ];
+    if bwd {
+        v.push(HostTensor::f32(vec![n, m, k], vec![0.05; n * m * k]).unwrap());
+    }
+    v
+}
+
+fn main() {
+    let rt = match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("kernel_packed: artifacts not built ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let mut bench = Bench::new("kernel_packed");
+    bench.target_secs = 1.0;
+
+    let ns = [1usize, 2, 8, 32];
+    let mut table = Table::new(
+        "Table 7/8 analogue — packed kernel speedup over sequential (live CPU-PJRT)",
+        &["geom", "n", "fwd", "bwd"],
+    );
+
+    for geom in ["attn", "mlp"] {
+        let mut base: Option<(f64, f64)> = None;
+        for &n in &ns {
+            let fwd = rt.executable(&format!("kfwd_{geom}_n{n}")).unwrap();
+            let bwd = rt.executable(&format!("kbwd_{geom}_n{n}")).unwrap();
+            let (d, k, r, m) = (
+                fwd.info.meta_usize("d").unwrap(),
+                fwd.info.meta_usize("k").unwrap(),
+                fwd.info.meta_usize("r").unwrap(),
+                fwd.info.meta_usize("m").unwrap(),
+            );
+            let fin = inputs(n, d, k, r, m, false);
+            let bin = inputs(n, d, k, r, m, true);
+            let meta = Json::obj(vec![
+                ("geom", Json::str(geom)),
+                ("n", Json::num(n as f64)),
+                ("d", Json::num(d as f64)),
+                ("k", Json::num(k as f64)),
+            ]);
+            let sf = bench.measure_meta(&format!("{geom}/fwd/n{n}"), meta.clone(), &mut || {
+                fwd.run(&fin).unwrap();
+            });
+            let sb = bench.measure_meta(&format!("{geom}/bwd/n{n}"), meta, &mut || {
+                bwd.run(&bin).unwrap();
+            });
+            if n == 1 {
+                base = Some((sf.p50, sb.p50));
+            }
+            let (bf, bb) = base.unwrap();
+            // Sequential baseline: n independent single-adapter launches.
+            table.row(vec![
+                geom.to_string(),
+                n.to_string(),
+                fmt_x(n as f64 * bf / sf.p50),
+                fmt_x(n as f64 * bb / sb.p50),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\npaper (A100, r=64): n=2 ~2.0x, n=8 ~7.5-8.0x, n=32 ~26.5-31x.\n\
+         On single-core CPU-PJRT the amortizable overhead is the executable\n\
+         dispatch (~0.2-0.3 ms) while per-adapter compute is *serial* — the\n\
+         measured ratio is bounded by overhead/compute and saturates near\n\
+         1-1.6x (attn) instead of the GPU's ~30x, where the n adapters run\n\
+         on idle SMs at zero marginal cost. The GPU-regime near-linearity\n\
+         is pinned by the calibrated cost model\n\
+         (costmodel::throughput::tests::packed_kernel_speedup_is_near_linear)."
+    );
+    bench.finish().unwrap();
+}

@@ -1,0 +1,93 @@
+//! Figure 4 — end-to-end makespan of the 120-configuration sweep on
+//! 8×A100-40G for all six base models, four methods each (Min GPU,
+//! Max GPU, Sequential PLoRA, PLoRA), via the planner + discrete-event
+//! simulator. Also measures planner wall time per model.
+//!
+//! Run: `cargo bench --bench makespan`
+//! (one model: `cargo bench --bench makespan -- --model qwen2.5-7b`)
+
+use plora::bench::Bench;
+use plora::config::{geometry::geom, pool, SearchSpace};
+use plora::costmodel::{CostModel, TrainBudget};
+use plora::metrics::{fmt_dur, fmt_x, Table};
+use plora::planner::{max_gpu_plan, min_gpu_plan, sequential_plora_plan, JobPlanner};
+use plora::sim::{SimOptions, Simulator};
+use plora::util::cli::Args;
+use plora::util::json::Json;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let models: Vec<String> = match args.get("model") {
+        Some(m) => vec![m.to_string()],
+        None => ["qwen2.5-3b", "qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b", "llama3.2-3b", "llama3.1-8b"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    let gpus = 8;
+    let budget = TrainBudget::default();
+    let grid = SearchSpace::default().grid("gsm8k");
+    let mut bench = Bench::new("makespan");
+
+    let mut fig4 = Table::new(
+        "Figure 4 — normalized makespan, 120 configs on 8 x A100-40G (Min GPU = 1.00)",
+        &["model", "Min GPU", "Max GPU", "Seq PLoRA", "PLoRA", "PLoRA speedup"],
+    );
+    // The paper's reported speedups, for side-by-side comparison.
+    let paper: &[(&str, f64)] = &[
+        ("qwen2.5-3b", 7.08),
+        ("qwen2.5-7b", 6.52),
+        ("qwen2.5-14b", 6.51),
+        ("qwen2.5-32b", 6.33),
+        ("llama3.2-3b", 7.52),
+        ("llama3.1-8b", 6.78),
+    ];
+
+    for model in &models {
+        let cm = CostModel::new(geom(model).unwrap(), &pool::A100_40G);
+        let sim = Simulator { cm: cm.clone(), budget, gpus };
+        let opts = SimOptions::default();
+        let run = |p: &plora::planner::Plan| {
+            let q: Vec<_> = p.jobs.iter().map(|j| j.job.clone()).collect();
+            sim.run_queue(&q, &opts).makespan
+        };
+        eprintln!("[{model}] planning + simulating 4 methods ...");
+        let min = run(&min_gpu_plan(&cm, &budget, gpus, &grid).unwrap());
+        let max = run(&max_gpu_plan(&cm, &budget, gpus, &grid).unwrap());
+        let seq = run(&sequential_plora_plan(&cm, &budget, gpus, &grid).unwrap());
+        let mut planner = JobPlanner::new(cm, gpus);
+        planner.budget = budget;
+        let t0 = std::time::Instant::now();
+        let plan = planner.plan(&grid).unwrap();
+        let plan_secs = t0.elapsed().as_secs_f64();
+        let plora = run(&plan);
+
+        let speedup = min / plora;
+        let paper_x = paper.iter().find(|(m, _)| m == model).map(|(_, x)| *x).unwrap_or(f64::NAN);
+        bench.record(
+            &format!("{model}/plora_makespan"),
+            &[plora],
+            Json::obj(vec![
+                ("model", Json::str(model.clone())),
+                ("min_gpu_s", Json::num(min)),
+                ("max_gpu_s", Json::num(max)),
+                ("seq_plora_s", Json::num(seq)),
+                ("speedup", Json::num(speedup)),
+                ("paper_speedup", Json::num(paper_x)),
+                ("plan_secs", Json::num(plan_secs)),
+                ("ar_bound", Json::num(plan.ar_bound)),
+                ("empirical_ratio", Json::num(plan.empirical_ratio())),
+            ]),
+        );
+        fig4.row(vec![
+            model.clone(),
+            format!("1.00 ({})", fmt_dur(min)),
+            format!("{:.2}", max / min),
+            format!("{:.2}", seq / min),
+            format!("{:.2}", plora / min),
+            format!("{} (paper {})", fmt_x(speedup), fmt_x(paper_x)),
+        ]);
+    }
+    fig4.print();
+    bench.finish().unwrap();
+}

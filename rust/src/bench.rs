@@ -1,0 +1,133 @@
+//! Criterion-like benchmark harness (criterion is not in the offline set).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that builds a
+//! [`Bench`] and registers measurements. The harness does warmup, adaptive
+//! iteration counts, and prints a compact table; results are also appended
+//! as JSON lines to `target/plora-bench.jsonl` so EXPERIMENTS.md tables can
+//! be regenerated from raw data.
+
+use crate::util::json::Json;
+use crate::util::stats::{fmt_secs, summarize, Summary};
+use std::io::Write;
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_secs: f64,
+    results: Vec<(String, Summary, Json)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // Keep budgets small: single-core machine, real numeric workloads.
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 50,
+            target_secs: 2.0,
+            results: vec![],
+        }
+    }
+
+    /// Measure `f` (one call = one iteration). Returns the summary.
+    pub fn measure<F: FnMut()>(&mut self, label: &str, mut f: F) -> Summary {
+        self.measure_meta(label, Json::Null, &mut f)
+    }
+
+    /// Measure with attached metadata (written to the JSONL record).
+    pub fn measure_meta<F: FnMut()>(&mut self, label: &str, meta: Json, f: &mut F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = vec![];
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.target_secs
+                && samples.len() < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = summarize(&samples);
+        println!(
+            "{:<44} {:>10} ± {:>9}  (p50 {:>10}, n={})",
+            format!("{}/{}", self.name, label),
+            fmt_secs(s.mean),
+            fmt_secs(s.std),
+            fmt_secs(s.p50),
+            s.n
+        );
+        self.results.push((label.to_string(), s.clone(), meta));
+        s
+    }
+
+    /// Record an externally-measured duration series under this bench.
+    pub fn record(&mut self, label: &str, samples: &[f64], meta: Json) -> Summary {
+        let s = summarize(samples);
+        println!(
+            "{:<44} {:>10} (recorded, n={})",
+            format!("{}/{}", self.name, label),
+            fmt_secs(s.mean),
+            s.n
+        );
+        self.results.push((label.to_string(), s.clone(), meta));
+        s
+    }
+
+    /// Write all results as JSON lines (append) and return them.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let path = std::path::Path::new("target").join("plora-bench.jsonl");
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        for (label, s, meta) in &self.results {
+            let rec = Json::obj(vec![
+                ("bench", Json::str(self.name.clone())),
+                ("label", Json::str(label.clone())),
+                ("mean_s", Json::num(s.mean)),
+                ("std_s", Json::num(s.std)),
+                ("p50_s", Json::num(s.p50)),
+                ("n", Json::num(s.n as f64)),
+                ("meta", meta.clone()),
+            ]);
+            writeln!(f, "{rec}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint based).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_summarizes() {
+        let mut b = Bench::new("unit");
+        b.warmup_iters = 0;
+        b.min_iters = 3;
+        b.max_iters = 3;
+        let s = b.measure("noop", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.n, 3);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn record_external_series() {
+        let mut b = Bench::new("unit");
+        let s = b.record("ext", &[1.0, 2.0, 3.0], Json::Null);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Hardware pool abstraction for the execution engine: a set of devices
+//! with memory capacity, allocation/release, and blocking acquisition —
+//! the **Resource Monitor** of Figure 3.
+//!
+//! In live mode the "devices" are capacity slots over the shared CPU PJRT
+//! backend (cpu-sim profile): the engine's packing decisions and job
+//! lifecycle are identical to a real pool; only the duration model differs
+//! (documented in DESIGN.md §7).
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::config::GpuProfile;
+
+/// One device.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub mem_bytes: f64,
+}
+
+/// A granted allocation; returned to the pool via [`ResourceMonitor::release`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub devices: Vec<usize>,
+}
+
+impl Allocation {
+    pub fn d(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+#[derive(Debug)]
+struct PoolState {
+    free: BTreeSet<usize>,
+    total: usize,
+}
+
+/// Thread-safe device pool with blocking acquisition (condvar-based —
+/// worker threads park until enough devices free up).
+#[derive(Clone)]
+pub struct ResourceMonitor {
+    profile: GpuProfile,
+    state: Arc<(Mutex<PoolState>, Condvar)>,
+}
+
+impl ResourceMonitor {
+    pub fn new(profile: &GpuProfile, count: usize) -> ResourceMonitor {
+        ResourceMonitor {
+            profile: profile.clone(),
+            state: Arc::new((
+                Mutex::new(PoolState { free: (0..count).collect(), total: count }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    pub fn profile(&self) -> &GpuProfile {
+        &self.profile
+    }
+
+    pub fn total(&self) -> usize {
+        self.state.0.lock().unwrap().total
+    }
+
+    pub fn available(&self) -> usize {
+        self.state.0.lock().unwrap().free.len()
+    }
+
+    /// Try to allocate `d` devices without blocking.
+    pub fn try_acquire(&self, d: usize) -> Option<Allocation> {
+        let (lock, _) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        if st.free.len() < d {
+            return None;
+        }
+        let devices: Vec<usize> = st.free.iter().take(d).copied().collect();
+        for id in &devices {
+            st.free.remove(id);
+        }
+        Some(Allocation { devices })
+    }
+
+    /// Block until `d` devices are free, then allocate them. Errors if the
+    /// request can never be satisfied (d > pool size).
+    pub fn acquire(&self, d: usize) -> Result<Allocation> {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        if d > st.total {
+            bail!("requested {d} devices from a pool of {}", st.total);
+        }
+        while st.free.len() < d {
+            st = cv.wait(st).unwrap();
+        }
+        let devices: Vec<usize> = st.free.iter().take(d).copied().collect();
+        for id in &devices {
+            st.free.remove(id);
+        }
+        Ok(Allocation { devices })
+    }
+
+    /// Return an allocation to the pool and wake waiters.
+    pub fn release(&self, alloc: Allocation) {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        for id in alloc.devices {
+            assert!(st.free.insert(id), "double release of device {id}");
+        }
+        cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::pool::CPU_SIM;
+    use std::time::Duration;
+
+    #[test]
+    fn try_acquire_and_release() {
+        let m = ResourceMonitor::new(&CPU_SIM, 4);
+        assert_eq!(m.available(), 4);
+        let a = m.try_acquire(3).unwrap();
+        assert_eq!(a.d(), 3);
+        assert_eq!(m.available(), 1);
+        assert!(m.try_acquire(2).is_none());
+        m.release(a);
+        assert_eq!(m.available(), 4);
+    }
+
+    #[test]
+    fn acquire_blocks_until_release() {
+        let m = ResourceMonitor::new(&CPU_SIM, 2);
+        let a = m.try_acquire(2).unwrap();
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            let alloc = m2.acquire(1).unwrap();
+            m2.release(alloc);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "acquire must block while pool is empty");
+        m.release(a);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_request_errors() {
+        let m = ResourceMonitor::new(&CPU_SIM, 2);
+        assert!(m.acquire(3).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let m = ResourceMonitor::new(&CPU_SIM, 2);
+        let a = m.try_acquire(1).unwrap();
+        m.release(a.clone());
+        m.release(a);
+    }
+}

@@ -1,0 +1,144 @@
+//! Model geometries.
+//!
+//! Two families:
+//! - **TinyLM** sizes (nano/tiny/small/base) — the models this repo actually
+//!   trains end-to-end via the AOT artifacts;
+//! - **paper-scale** shapes (Qwen-2.5 3B/7B/14B/32B, LLaMa-3.2-3B,
+//!   LLaMa-3.1-8B) — used by the cost model + discrete-event simulator to
+//!   regenerate the paper's figures at their original scale.
+
+/// Transformer geometry — everything the Appendix-A memory/FLOP model needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelGeom {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    /// Training sequence length (paper §7.1 uses 1024).
+    pub seq: usize,
+    /// Bytes per parameter of the frozen base (2 = bf16, 0.5 = QLoRA 4-bit).
+    pub base_bytes: f64,
+    /// Bytes per LoRA/optimizer element (4 = f32 master weights).
+    pub lora_bytes: f64,
+}
+
+impl ModelGeom {
+    /// Total base parameters (embedding + blocks; unquantized count).
+    pub fn params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let v = self.vocab as f64;
+        let per_layer = 4.0 * d * d + 3.0 * d * f + 2.0 * d;
+        v * d + self.n_layers as f64 * per_layer + d
+    }
+
+    /// LoRA parameters for one adapter at rank `r` on all 7 projections
+    /// (Appendix A Eq. 20: Q,K,V,O + up,gate,down).
+    pub fn lora_params(&self, r: usize) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let r = r as f64;
+        let per_layer =
+            4.0 * (d * r + r * d) + 2.0 * (d * r + r * f) + (f * r + r * d);
+        self.n_layers as f64 * per_layer
+    }
+
+    /// FLOPs of one training step for the *base* path over `tokens` tokens.
+    /// Frozen base: fwd (2P) + activation-grad bwd (2P); no dW pass.
+    pub fn base_step_flops(&self, tokens: f64) -> f64 {
+        4.0 * self.params() * tokens
+    }
+
+    /// FLOPs of one training step for a single LoRA adapter of rank `r`
+    /// over `tokens` tokens: fwd + full bwd (dW and dX) = 6 x params.
+    pub fn lora_step_flops(&self, r: usize, tokens: f64) -> f64 {
+        6.0 * self.lora_params(r) * tokens
+    }
+
+    /// Activation memory of the base path for `bs` sequences (Appendix A):
+    /// embeddings + attention + MLP intermediates per layer, f32.
+    pub fn base_act_bytes(&self, bs: f64) -> f64 {
+        let s = self.seq as f64;
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let per_layer = s * (2.0 * d + 2.0 * f) + (self.n_heads as f64) * s * s;
+        bs * 4.0 * (s * d + self.n_layers as f64 * per_layer)
+    }
+
+    pub fn scaled(&self, name: &'static str, base_bytes: f64) -> ModelGeom {
+        ModelGeom { name, base_bytes, ..self.clone() }
+    }
+}
+
+/// Paper-scale geometries (public model-card shapes).
+pub const GEOMS: &[ModelGeom] = &[
+    ModelGeom { name: "qwen2.5-3b", n_layers: 36, d_model: 2048, d_ff: 11008, n_heads: 16, vocab: 151_936, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
+    ModelGeom { name: "qwen2.5-7b", n_layers: 28, d_model: 3584, d_ff: 18944, n_heads: 28, vocab: 152_064, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
+    ModelGeom { name: "qwen2.5-14b", n_layers: 48, d_model: 5120, d_ff: 13824, n_heads: 40, vocab: 152_064, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
+    ModelGeom { name: "qwen2.5-32b", n_layers: 64, d_model: 5120, d_ff: 27648, n_heads: 40, vocab: 152_064, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
+    ModelGeom { name: "llama3.2-3b", n_layers: 28, d_model: 3072, d_ff: 8192, n_heads: 24, vocab: 128_256, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
+    ModelGeom { name: "llama3.1-8b", n_layers: 32, d_model: 4096, d_ff: 14336, n_heads: 32, vocab: 128_256, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
+];
+
+pub fn geom(name: &str) -> Option<&'static ModelGeom> {
+    GEOMS.iter().find(|g| g.name == name)
+}
+
+/// Build a TinyLM geometry from manifest fields (runtime models).
+pub fn tiny_geom(
+    name: &'static str,
+    n_layers: usize,
+    d_model: usize,
+    d_ff: usize,
+    n_heads: usize,
+    vocab: usize,
+    seq: usize,
+) -> ModelGeom {
+    ModelGeom { name, n_layers, d_model, d_ff, n_heads, vocab, seq, base_bytes: 4.0, lora_bytes: 4.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen_param_counts_are_plausible() {
+        // Sanity: our analytic counts should land within ~25% of the
+        // advertised sizes (we ignore GQA/bias details on purpose).
+        let within = |name: &str, b: f64| {
+            let p = geom(name).unwrap().params();
+            assert!(
+                (p / b - 1.0).abs() < 0.35,
+                "{name}: {p:.2e} vs advertised {b:.2e}"
+            );
+        };
+        within("qwen2.5-7b", 7.6e9);
+        within("llama3.1-8b", 8.0e9);
+        within("qwen2.5-32b", 32.8e9);
+    }
+
+    #[test]
+    fn lora_fraction_matches_paper_claim() {
+        // Paper §2.1: rank-64 adapter on Qwen-2.5-7B updates ~3.4% of params.
+        let g = geom("qwen2.5-7b").unwrap();
+        let frac = g.lora_params(64) / g.params();
+        assert!(frac > 0.015 && frac < 0.05, "fraction {frac}");
+    }
+
+    #[test]
+    fn lora_flops_linear_in_rank() {
+        // §2.1: "additional FLOPs incurred by LoRA is linear to its rank".
+        let g = geom("qwen2.5-3b").unwrap();
+        let f8 = g.lora_step_flops(8, 1024.0);
+        let f64_ = g.lora_step_flops(64, 1024.0);
+        assert!((f64_ / f8 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activation_memory_scales_with_batch() {
+        let g = geom("qwen2.5-7b").unwrap();
+        assert!((g.base_act_bytes(8.0) / g.base_act_bytes(1.0) - 8.0).abs() < 1e-9);
+    }
+}

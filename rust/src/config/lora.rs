@@ -1,0 +1,122 @@
+//! LoRA hyperparameter configurations and the tuning search space (Table 1).
+
+/// One point in the search space: the four knobs of paper Table 1 plus the
+/// downstream task it fine-tunes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoraConfig {
+    pub id: usize,
+    /// Learning rate (paper range 2e-5 .. 4e-4).
+    pub lr: f64,
+    /// Per-adapter batch size (paper range 1 .. 32; Obs. 4: small wins).
+    pub batch: usize,
+    /// LoRA rank (paper range 8 .. 128).
+    pub rank: usize,
+    /// LoRA alpha as the *ratio* alpha/r (paper range r/4 .. 4r, i.e. 0.25..4).
+    pub alpha_ratio: f64,
+    /// Downstream task name (one of manifest `tasks`).
+    pub task: String,
+}
+
+impl LoraConfig {
+    /// Effective forward scaling s = alpha / r applied to the delta.
+    pub fn scale(&self) -> f64 {
+        self.alpha_ratio
+    }
+}
+
+/// The hyperparameter search space. `grid()` builds the paper's 120-point
+/// grid; `sample()` draws random-search points (PLoRA is agnostic to the
+/// tuning algorithm — §8 Related Work).
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub lrs: Vec<f64>,
+    pub batches: Vec<usize>,
+    pub ranks: Vec<usize>,
+    pub alpha_ratios: Vec<f64>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        // 5 LR x 3 BS x 4 rank x 2 alpha = 120 configurations (§7.1).
+        SearchSpace {
+            lrs: vec![2e-5, 6e-5, 1e-4, 2e-4, 4e-4],
+            batches: vec![1, 2, 4],
+            ranks: vec![8, 16, 32, 64],
+            alpha_ratios: vec![0.25, 1.0],
+        }
+    }
+}
+
+impl SearchSpace {
+    pub fn grid(&self, task: &str) -> Vec<LoraConfig> {
+        let mut out = vec![];
+        let mut id = 0;
+        for &lr in &self.lrs {
+            for &batch in &self.batches {
+                for &rank in &self.ranks {
+                    for &alpha_ratio in &self.alpha_ratios {
+                        out.push(LoraConfig {
+                            id,
+                            lr,
+                            batch,
+                            rank,
+                            alpha_ratio,
+                            task: task.to_string(),
+                        });
+                        id += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Random search: `n` i.i.d. draws (log-uniform LR, uniform in lists).
+    pub fn sample(&self, task: &str, n: usize, rng: &mut crate::util::rng::Rng) -> Vec<LoraConfig> {
+        let (lo, hi) = (
+            self.lrs.iter().cloned().fold(f64::MAX, f64::min),
+            self.lrs.iter().cloned().fold(0.0, f64::max),
+        );
+        (0..n)
+            .map(|id| LoraConfig {
+                id,
+                lr: (lo.ln() + (hi.ln() - lo.ln()) * rng.f64()).exp(),
+                batch: *rng.choice(&self.batches),
+                rank: *rng.choice(&self.ranks),
+                alpha_ratio: *rng.choice(&self.alpha_ratios),
+                task: task.to_string(),
+            })
+            .collect()
+    }
+
+    pub fn size(&self) -> usize {
+        self.lrs.len() * self.batches.len() * self.ranks.len() * self.alpha_ratios.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_is_120() {
+        let g = SearchSpace::default().grid("gsm8k");
+        assert_eq!(g.len(), 120);
+        assert_eq!(g.len(), SearchSpace::default().size());
+        // ids unique
+        let mut ids: Vec<_> = g.iter().map(|c| c.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 120);
+    }
+
+    #[test]
+    fn sample_respects_bounds() {
+        let s = SearchSpace::default();
+        let mut rng = crate::util::rng::Rng::new(4);
+        for c in s.sample("copy", 200, &mut rng) {
+            assert!(c.lr >= 2e-5 * 0.999 && c.lr <= 4e-4 * 1.001);
+            assert!(s.batches.contains(&c.batch));
+            assert!(s.ranks.contains(&c.rank));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration: LoRA search space (Table 1), model geometries (TinyLM and
+//! the paper-scale Qwen/LLaMa shapes used by the simulator), GPU profiles,
+//! and hardware pools.
+
+pub mod geometry;
+pub mod lora;
+pub mod pool;
+
+pub use geometry::{ModelGeom, GEOMS};
+pub use lora::{LoraConfig, SearchSpace};
+pub use pool::{GpuProfile, HardwarePool, PROFILES};

@@ -1,0 +1,114 @@
+//! GPU profiles and hardware pools.
+//!
+//! The planner and simulator only observe (memory capacity, peak FLOPs,
+//! per-launch overhead, utilization curve). Profiles for the paper's
+//! testbeds (A100-40G P4d, A10-24G G5) drive the simulator; the `cpu-sim`
+//! profile describes this machine for live runs.
+
+/// Hardware profile of one accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    pub mem_bytes: f64,
+    /// Peak dense bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth (bytes/s) — bounds low-arithmetic-intensity kernels.
+    pub mem_bw: f64,
+    /// Fixed overhead per kernel launch (s). Sequential per-adapter LoRA
+    /// compute pays this per adapter per projection — the §3.1/§5.1
+    /// underutilization effect.
+    pub launch_overhead: f64,
+    /// Tokens at which the base-GEMM utilization curve reaches half of its
+    /// maximum (small batches underutilize SMs: §3.1 "SM occupancy 16.7%").
+    pub tokens_half_util: f64,
+    /// Maximum achievable fraction of peak for the big base GEMMs.
+    pub max_eff: f64,
+    /// Per-hop tensor-parallel efficiency (all-reduce cost): t(d) =
+    /// t(1) / (d * tp_eff^log2(d)).
+    pub tp_eff: f64,
+}
+
+pub const A100_40G: GpuProfile = GpuProfile {
+    name: "a100-40g",
+    mem_bytes: 40.0e9,
+    peak_flops: 312.0e12,
+    mem_bw: 1.555e12,
+    launch_overhead: 8.0e-6,
+    tokens_half_util: 4096.0,
+    max_eff: 0.55,
+    tp_eff: 0.88,
+};
+
+pub const A10_24G: GpuProfile = GpuProfile {
+    name: "a10-24g",
+    mem_bytes: 24.0e9,
+    peak_flops: 125.0e12,
+    mem_bw: 0.6e12,
+    launch_overhead: 10.0e-6,
+    tokens_half_util: 2048.0,
+    max_eff: 0.50,
+    tp_eff: 0.80, // PCIe Gen4, no NVLink (§7.1)
+};
+
+/// This machine, for live-engine accounting: a single CPU core behind the
+/// PJRT CPU client. Memory capacity is what matters for packing decisions;
+/// speed constants are calibrated by `costmodel::calibrate`.
+pub const CPU_SIM: GpuProfile = GpuProfile {
+    name: "cpu-sim",
+    mem_bytes: 4.0e9,
+    peak_flops: 5.0e9,
+    mem_bw: 2.0e10,
+    launch_overhead: 50.0e-6,
+    tokens_half_util: 256.0,
+    max_eff: 0.9,
+    tp_eff: 1.0,
+};
+
+pub const PROFILES: &[&GpuProfile] = &[&A100_40G, &A10_24G, &CPU_SIM];
+
+pub fn profile(name: &str) -> Option<&'static GpuProfile> {
+    PROFILES.iter().copied().find(|p| p.name == name)
+}
+
+/// A homogeneous pool of `count` devices (paper testbed: 8 per instance).
+#[derive(Debug, Clone)]
+pub struct HardwarePool {
+    pub profile: GpuProfile,
+    pub count: usize,
+}
+
+impl HardwarePool {
+    pub fn new(profile: &GpuProfile, count: usize) -> Self {
+        HardwarePool { profile: profile.clone(), count }
+    }
+
+    pub fn p4d() -> Self {
+        Self::new(&A100_40G, 8)
+    }
+    pub fn g5() -> Self {
+        Self::new(&A10_24G, 8)
+    }
+
+    pub fn total_mem(&self) -> f64 {
+        self.profile.mem_bytes * self.count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_profiles() {
+        assert_eq!(profile("a100-40g").unwrap().name, "a100-40g");
+        assert_eq!(profile("a10-24g").unwrap().mem_bytes, 24.0e9);
+        assert!(profile("h100").is_none());
+    }
+
+    #[test]
+    fn pools() {
+        let p = HardwarePool::p4d();
+        assert_eq!(p.count, 8);
+        assert!((p.total_mem() - 320.0e9).abs() < 1.0);
+    }
+}

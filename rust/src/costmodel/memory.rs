@@ -1,0 +1,309 @@
+//! Appendix-A memory model: per-device bytes of a packed LoRA fine-tuning
+//! job under TP/PP/FSDP-ZeRO sharding, and the feasibility constraint
+//! Eq. (14)/(19): `M_base + Σ_k M_lora,k ≤ C · M_gpu · d`.
+//!
+//! Calibration targets pinned by tests (paper §3.2, Qwen-2.5-7B on A100-40G):
+//! one rank-64 adapter ⇒ ≈18.2 GB, two ⇒ ≈20.4 GB, ≈10 adapters fit.
+
+use crate::config::{GpuProfile, LoraConfig, ModelGeom};
+use crate::costmodel::Pack;
+
+/// FSDP/ZeRO stage (Appendix A.1.1). `None` keeps every replica whole.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Zero {
+    None,
+    /// Optimizer state sharded.
+    Zero1,
+    /// Optimizer state + gradients sharded.
+    Zero2,
+    /// Optimizer state + gradients + parameters sharded.
+    Zero3,
+}
+
+/// Parallelization of one fine-tuning job (Appendix A.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sharding {
+    pub tp: usize,
+    pub pp: usize,
+    pub fsdp: usize,
+    pub zero: Zero,
+}
+
+impl Sharding {
+    /// Pure tensor parallelism over `d` devices — the paper's evaluated
+    /// setting (§7.1); `d_j` in Eq. (14)–(16).
+    pub fn tp(d: usize) -> Sharding {
+        Sharding { tp: d.max(1), pp: 1, fsdp: 1, zero: Zero::None }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.tp * self.pp * self.fsdp
+    }
+
+    /// Model-weight shard factor: TP and PP split parameters (App. A:
+    /// `M / (d_tp · d_pp)`), ZeRO-3 additionally splits them over FSDP.
+    fn param_div(&self) -> f64 {
+        let base = (self.tp * self.pp) as f64;
+        match self.zero {
+            Zero::Zero3 => base * self.fsdp as f64,
+            _ => base,
+        }
+    }
+
+    fn grad_div(&self) -> f64 {
+        let base = (self.tp * self.pp) as f64;
+        match self.zero {
+            Zero::Zero2 | Zero::Zero3 => base * self.fsdp as f64,
+            _ => base,
+        }
+    }
+
+    fn opt_div(&self) -> f64 {
+        let base = (self.tp * self.pp) as f64;
+        match self.zero {
+            Zero::None => base,
+            _ => base * self.fsdp as f64,
+        }
+    }
+}
+
+/// The Appendix-A memory model for one (geometry, profile) pair.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub geom: ModelGeom,
+    /// AdamW stores momentum + velocity (2 optimizer tensors per param).
+    pub c_opt: f64,
+    /// One gradient tensor per param during the step.
+    pub c_grad: f64,
+    /// Fragmentation / workspace multiplier on activations.
+    pub c_act: f64,
+}
+
+impl MemoryModel {
+    pub fn new(geom: &ModelGeom) -> MemoryModel {
+        MemoryModel { geom: geom.clone(), c_opt: 2.0, c_grad: 1.0, c_act: 1.2 }
+    }
+
+    // -- base model -------------------------------------------------------
+
+    /// Frozen base weights (bytes, unsharded).
+    pub fn base_weight_bytes(&self) -> f64 {
+        self.geom.params() * self.geom.base_bytes
+    }
+
+    /// Base-path activation bytes for `bs` concurrent sequences with
+    /// activation checkpointing: layer-boundary residuals are stored, the
+    /// interior is recomputed (standard LoRA fine-tuning practice; without
+    /// it a 7B at seq 1024 would not fit 40 GB with any adapter).
+    pub fn base_act_bytes(&self, bs: f64) -> f64 {
+        let g = &self.geom;
+        let s = g.seq as f64;
+        let d = g.d_model as f64;
+        // stored: embedding output + one residual per layer + final LN +
+        // the live layer's interior (attention scores + MLP intermediates).
+        let boundaries = (g.n_layers as f64 + 2.0) * s * d;
+        let live = s * (2.0 * d + 2.0 * g.d_ff as f64)
+            + g.n_heads as f64 * s * s;
+        bs * 4.0 * (boundaries + live) * self.c_act
+    }
+
+    /// Per-device base-model bytes for a job running `total_bs` sequences.
+    pub fn base_bytes(&self, total_bs: f64, sh: Sharding) -> f64 {
+        self.base_weight_bytes() / sh.param_div()
+            + self.base_act_bytes(total_bs) / (sh.tp * sh.pp) as f64
+    }
+
+    // -- LoRA adapters ----------------------------------------------------
+
+    /// Trainable parameter bytes of one adapter at rank `r` (f32 masters).
+    pub fn lora_param_bytes(&self, r: usize) -> f64 {
+        self.geom.lora_params(r) * self.geom.lora_bytes
+    }
+
+    /// LoRA activation bytes: Eq. (A) `b · s · r` per LoRA-able projection
+    /// per layer — the rank-r intermediate `x A` kept for the backward pass.
+    pub fn lora_act_bytes(&self, c: &LoraConfig) -> f64 {
+        let g = &self.geom;
+        (c.batch * g.seq * c.rank) as f64 * 4.0 * (g.n_layers * 7) as f64
+    }
+
+    /// Per-device bytes of fine-tuning one adapter (Eq. 21 + A.1.1).
+    pub fn lora_bytes(&self, c: &LoraConfig, sh: Sharding) -> f64 {
+        let p = self.lora_param_bytes(c.rank);
+        p / sh.param_div()
+            + self.c_grad * p / sh.grad_div()
+            + self.c_opt * p / sh.opt_div()
+            + self.lora_act_bytes(c) / (sh.tp * sh.pp) as f64
+    }
+
+    // -- jobs -------------------------------------------------------------
+
+    /// Per-device bytes of a packed job. With `charge_padding`, adapters are
+    /// charged at the pack's static-shape buckets (`r_pad`, `bs_pad`) —
+    /// what the AOT live path actually allocates; the paper-scale simulator
+    /// charges true shapes (CUDA kernels handle heterogeneity natively).
+    pub fn job_bytes(&self, pack: &Pack, sh: Sharding, charge_padding: bool) -> f64 {
+        if pack.n() == 0 {
+            return 0.0;
+        }
+        let (total_bs, lora): (f64, f64) = if charge_padding {
+            let r = pack.r_pad();
+            let b = pack.bs_pad();
+            let padded: Vec<LoraConfig> = pack
+                .configs
+                .iter()
+                .map(|c| LoraConfig { rank: r, batch: b, ..c.clone() })
+                .collect();
+            (
+                (pack.n() * b) as f64,
+                padded.iter().map(|c| self.lora_bytes(c, sh)).sum(),
+            )
+        } else {
+            (
+                pack.total_bs() as f64,
+                pack.configs.iter().map(|c| self.lora_bytes(c, sh)).sum(),
+            )
+        };
+        self.base_bytes(total_bs, sh) + lora
+    }
+
+    /// Eq. (14)/(19): does the pack fit on `d` TP devices at load factor `c`?
+    pub fn fits(&self, pack: &Pack, d: usize, prof: &GpuProfile, c_load: f64, charge_padding: bool) -> bool {
+        self.job_bytes(pack, Sharding::tp(d), charge_padding) <= c_load * prof.mem_bytes
+    }
+
+    /// Minimum TP degree (power of two, ≤ `gmax`) whose per-device memory
+    /// admits even a single adapter of config `c`; `None` if none does.
+    pub fn min_tp(&self, c: &LoraConfig, prof: &GpuProfile, c_load: f64, gmax: usize) -> Option<usize> {
+        let pack = Pack::new(vec![c.clone()]);
+        let mut d = 1;
+        while d <= gmax {
+            if self.fits(&pack, d, prof, c_load, false) {
+                return Some(d);
+            }
+            d *= 2;
+        }
+        None
+    }
+
+    /// Largest number of homogeneous `(r, bs)` adapters that fit on `d`
+    /// devices (the §3.2 "up to 10 concurrent adapters" computation).
+    pub fn max_adapters(&self, r: usize, bs: usize, d: usize, prof: &GpuProfile, c_load: f64) -> usize {
+        let proto = LoraConfig {
+            id: 0,
+            lr: 1e-4,
+            batch: bs,
+            rank: r,
+            alpha_ratio: 1.0,
+            task: String::new(),
+        };
+        let mut n = 0;
+        loop {
+            let pack = Pack::new(vec![proto.clone(); n + 1]);
+            if !self.fits(&pack, d, prof, c_load, false) {
+                return n;
+            }
+            n += 1;
+            if n > 4096 {
+                return n; // defensive cap; never hit with real geometries
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::geometry::geom;
+    use crate::config::pool::A100_40G;
+
+    fn cfg(r: usize, bs: usize) -> LoraConfig {
+        LoraConfig { id: 0, lr: 1e-4, batch: bs, rank: r, alpha_ratio: 1.0, task: "t".into() }
+    }
+
+    /// Paper §3.2: Qwen-2.5-7B + one rank-64 adapter ≈ 18.2 GB on A100.
+    #[test]
+    fn qwen7b_single_adapter_memory_matches_paper() {
+        let m = MemoryModel::new(geom("qwen2.5-7b").unwrap());
+        let pack = Pack::new(vec![cfg(64, 1)]);
+        let gb = m.job_bytes(&pack, Sharding::tp(1), false) / 1e9;
+        assert!((15.0..21.0).contains(&gb), "got {gb:.1} GB, paper 18.2");
+    }
+
+    /// Paper §3.2: the second adapter adds ≈2.2 GB (20.4 − 18.2).
+    #[test]
+    fn qwen7b_second_adapter_increment_matches_paper() {
+        let m = MemoryModel::new(geom("qwen2.5-7b").unwrap());
+        let one = m.job_bytes(&Pack::new(vec![cfg(64, 1)]), Sharding::tp(1), false);
+        let two = m.job_bytes(&Pack::new(vec![cfg(64, 1); 2]), Sharding::tp(1), false);
+        let inc = (two - one) / 1e9;
+        // We land ~3.7 GB vs the paper's 2.2: we ignore GQA (full-width K/V
+        // projections) and charge checkpointed activations at max seq — a
+        // deliberate overestimate (OOM-safe packing, Appendix A).
+        assert!((1.2..4.2).contains(&inc), "increment {inc:.2} GB, paper ≈2.2");
+    }
+
+    /// Paper §3.2: ≈10 rank-64 adapters fit a 40 GB A100 without OOM.
+    #[test]
+    fn qwen7b_packs_about_ten_adapters() {
+        let m = MemoryModel::new(geom("qwen2.5-7b").unwrap());
+        let n = m.max_adapters(64, 1, 1, &A100_40G, 1.0);
+        assert!((6..=14).contains(&n), "got {n}, paper ≈10");
+    }
+
+    /// TP over d devices increases pack capacity (§3.2 last sentence).
+    #[test]
+    fn tp_increases_capacity() {
+        let m = MemoryModel::new(geom("qwen2.5-14b").unwrap());
+        let n1 = m.max_adapters(64, 1, 2, &A100_40G, 0.9);
+        let n2 = m.max_adapters(64, 1, 4, &A100_40G, 0.9);
+        assert!(n2 > n1, "d=4 ({n2}) should pack more than d=2 ({n1})");
+    }
+
+    /// 14B needs 2 A100s, 32B needs 4 (paper §7.2.1 Min GPU setting).
+    #[test]
+    fn min_tp_matches_paper_testbed() {
+        let c = cfg(32, 1);
+        let m3 = MemoryModel::new(geom("qwen2.5-3b").unwrap());
+        let m14 = MemoryModel::new(geom("qwen2.5-14b").unwrap());
+        let m32 = MemoryModel::new(geom("qwen2.5-32b").unwrap());
+        assert_eq!(m3.min_tp(&c, &A100_40G, 0.9, 8), Some(1));
+        assert_eq!(m14.min_tp(&c, &A100_40G, 0.9, 8), Some(2));
+        assert_eq!(m32.min_tp(&c, &A100_40G, 0.9, 8), Some(4));
+    }
+
+    /// ZeRO stages are monotone: higher stages never use more memory.
+    #[test]
+    fn zero_stages_monotone() {
+        let m = MemoryModel::new(geom("qwen2.5-7b").unwrap());
+        let c = cfg(64, 2);
+        let mk = |zero| Sharding { tp: 1, pp: 1, fsdp: 4, zero };
+        let none = m.lora_bytes(&c, mk(Zero::None));
+        let z1 = m.lora_bytes(&c, mk(Zero::Zero1));
+        let z2 = m.lora_bytes(&c, mk(Zero::Zero2));
+        let z3 = m.lora_bytes(&c, mk(Zero::Zero3));
+        assert!(none >= z1 && z1 >= z2 && z2 >= z3);
+        assert!(z3 < none);
+    }
+
+    /// Padding charge is an upper bound on the true charge.
+    #[test]
+    fn padded_charge_dominates_true_charge() {
+        let m = MemoryModel::new(geom("qwen2.5-3b").unwrap());
+        let pack = Pack::new(vec![cfg(8, 1), cfg(64, 4), cfg(16, 2)]);
+        let sh = Sharding::tp(1);
+        assert!(m.job_bytes(&pack, sh, true) >= m.job_bytes(&pack, sh, false));
+    }
+
+    /// QLoRA (4-bit base) frees memory for more adapters (§7.5).
+    #[test]
+    fn qlora_packs_more_adapters() {
+        let g = geom("qwen2.5-7b").unwrap();
+        let m16 = MemoryModel::new(g);
+        let mq = MemoryModel::new(&g.scaled("qwen2.5-7b-q4", 0.5));
+        let a10 = crate::config::pool::A10_24G;
+        let n16 = m16.max_adapters(32, 1, 1, &a10, 0.9);
+        let nq = mq.max_adapters(32, 1, 1, &a10, 0.9);
+        assert!(nq > n16, "QLoRA {nq} vs bf16 {n16}");
+    }
+}

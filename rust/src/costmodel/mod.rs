@@ -1,0 +1,99 @@
+//! Cost model: memory (paper Appendix A) and step-time T(H, d) (§4, §6).
+//!
+//! The planner never touches real hardware — it sees this model, exactly as
+//! the paper's planner sees its profiled cost model ("profiling data from
+//! the first few iterations"). Two calibrations feed it:
+//!
+//! - **paper-scale**: constants in `config::pool` are set so the model
+//!   reproduces the paper's published measurements — §5.1 "+10% iteration
+//!   time from batch 1 to 8", "naive 8-adapter packing is 3.6x worse",
+//!   Table 7 "near-linear packed-kernel speedup", §3.2 "Qwen-7B + 1 adapter
+//!   = 18.2 GB, + 2 adapters = 20.4 GB". Unit tests pin each of these.
+//! - **live**: `calibrate()` fits the same functional form to measured PJRT
+//!   step times of the TinyLM artifacts on this machine.
+
+pub mod memory;
+pub mod throughput;
+
+pub use memory::MemoryModel;
+pub use throughput::{CostModel, ExecMode};
+
+use crate::config::LoraConfig;
+
+/// A pack: the set of LoRA configurations fine-tuned by one job (H_{j,k}).
+#[derive(Debug, Clone, Default)]
+pub struct Pack {
+    pub configs: Vec<LoraConfig>,
+}
+
+impl Pack {
+    pub fn new(configs: Vec<LoraConfig>) -> Self {
+        Pack { configs }
+    }
+    pub fn n(&self) -> usize {
+        self.configs.len()
+    }
+    /// Static-shape rank bucket: every adapter zero-padded to the max rank.
+    pub fn r_pad(&self) -> usize {
+        self.configs.iter().map(|c| c.rank).max().unwrap_or(0)
+    }
+    /// Static-shape batch bucket: batches padded to the pack max.
+    pub fn bs_pad(&self) -> usize {
+        self.configs.iter().map(|c| c.batch).max().unwrap_or(0)
+    }
+    /// Total *real* sequences per step across adapters (activation memory).
+    pub fn total_bs(&self) -> usize {
+        self.configs.iter().map(|c| c.batch).sum()
+    }
+    /// Sum of ranks — the numerator of the DTM objective (Eq. 13 uses
+    /// sum of r_k by the FLOP-linear-in-rank property).
+    pub fn rank_sum(&self) -> usize {
+        self.configs.iter().map(|c| c.rank).sum()
+    }
+}
+
+/// Fine-tuning length of one configuration: epochs over a fixed-size task
+/// dataset; small batches take proportionally more steps (paper §7:
+/// each configuration fine-tunes the same data budget).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainBudget {
+    pub dataset: usize,
+    pub epochs: usize,
+}
+
+impl Default for TrainBudget {
+    fn default() -> Self {
+        TrainBudget { dataset: 256, epochs: 3 }
+    }
+}
+
+impl TrainBudget {
+    pub fn steps(&self, batch: usize) -> usize {
+        let total = self.dataset * self.epochs;
+        total.div_ceil(batch.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchSpace;
+
+    #[test]
+    fn pack_buckets() {
+        let cfgs = SearchSpace::default().grid("t");
+        let p = Pack::new(cfgs[..6].to_vec());
+        assert_eq!(p.n(), 6);
+        assert!(p.r_pad() >= p.configs.iter().map(|c| c.rank).max().unwrap());
+        assert_eq!(p.total_bs(), p.configs.iter().map(|c| c.batch).sum());
+    }
+
+    #[test]
+    fn budget_steps_inverse_in_batch() {
+        let b = TrainBudget::default();
+        assert_eq!(b.steps(1), 768);
+        assert_eq!(b.steps(2), 384);
+        assert_eq!(b.steps(4), 192);
+        assert_eq!(b.steps(3), 256);
+    }
+}

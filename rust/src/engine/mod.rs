@@ -1,0 +1,214 @@
+//! The **LoRA Execution Engine** (§4, Figure 3): dequeues planned jobs
+//! from the LoRA Job Queue, acquires devices from the Resource Monitor,
+//! launches packed fine-tuning jobs concurrently on worker threads, and
+//! saves every finished adapter into the Checkpoint Pool.
+//!
+//! Live mode runs real PJRT training (the AOT artifacts); the degree of
+//! parallelism `d_j` is honored as a capacity allocation on the simulated
+//! pool — on this machine all jobs share one CPU backend, so wall time
+//! measures end-to-end composition, not hardware scaling (DESIGN.md §7).
+
+pub mod checkpoint;
+
+pub use checkpoint::CheckpointPool;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::ResourceMonitor;
+use crate::costmodel::throughput::Calib;
+use crate::planner::PlannedJob;
+use crate::runtime::Runtime;
+use crate::train::{run_pack_full, JobReport, TrainOptions};
+use crate::util::threadpool::ThreadPool;
+
+/// One finished job with its engine-side timeline.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job_id: usize,
+    pub devices: Vec<usize>,
+    /// Seconds after engine start when the job launched / finished.
+    pub start: f64,
+    pub end: f64,
+    pub report: JobReport,
+}
+
+/// Engine run summary.
+#[derive(Debug)]
+pub struct EngineReport {
+    pub outcomes: Vec<JobOutcome>,
+    pub makespan: f64,
+    /// Live cost-model fit `(a, b, c)` of `t = a + b·tokens + c·n` over all
+    /// profiled steps (§4: calibration from the first iterations).
+    pub calib_fit: (f64, f64, f64),
+}
+
+impl EngineReport {
+    pub fn total_adapters(&self) -> usize {
+        self.outcomes.iter().map(|o| o.report.adapters.len()).sum()
+    }
+}
+
+/// The execution engine.
+pub struct Engine {
+    pub runtime: Arc<Runtime>,
+    pub monitor: ResourceMonitor,
+    pub checkpoints: Option<CheckpointPool>,
+    pub options: TrainOptions,
+    /// Worker threads (≥ the max number of concurrent jobs).
+    pub workers: usize,
+}
+
+impl Engine {
+    pub fn new(runtime: Arc<Runtime>, monitor: ResourceMonitor) -> Engine {
+        Engine {
+            runtime,
+            monitor,
+            checkpoints: None,
+            options: TrainOptions::default(),
+            workers: 4,
+        }
+    }
+
+    /// Run a queue of planned jobs to completion, FIFO with blocking device
+    /// acquisition (jobs launch concurrently whenever capacity allows —
+    /// "PLoRA will deploy multiple fine-tuning jobs concurrently, as long
+    /// as the hardware pool has sufficient resources", §4).
+    pub fn run(&self, model: &str, queue: &[PlannedJob]) -> Result<EngineReport> {
+        let t0 = Instant::now();
+        let pool = ThreadPool::new(self.workers.max(1));
+        let (tx, rx) = mpsc::channel::<Result<JobOutcome>>();
+        let errors = Arc::new(AtomicUsize::new(0));
+        let outcomes = Arc::new(Mutex::new(Vec::<JobOutcome>::new()));
+
+        for job in queue.iter().cloned() {
+            // Acquire devices *before* spawning: preserves the queue order
+            // (FIFO semantics of the LoRA Job Queue) and applies
+            // backpressure when the pool is exhausted.
+            let alloc = self.monitor.acquire(job.d)?;
+            let start = t0.elapsed().as_secs_f64();
+            let rt = self.runtime.clone();
+            let monitor = self.monitor.clone();
+            let ckpt = self.checkpoints.clone();
+            let opts = self.options.clone();
+            let model = model.to_string();
+            let tx = tx.clone();
+            let errors = errors.clone();
+            let outcomes_ref = outcomes.clone();
+            pool.spawn(move || {
+                let result =
+                    run_pack_full(&rt, &model, &job.pack.configs, &opts).and_then(|(report, state)| {
+                        if let Some(ckpt) = &ckpt {
+                            ckpt.save_job(&model, &job, &report)?;
+                            let slots: Vec<(usize, usize, usize)> = job
+                                .pack
+                                .configs
+                                .iter()
+                                .enumerate()
+                                .map(|(slot, c)| (slot, c.id, c.rank))
+                                .collect();
+                            ckpt.save_state(&model, &state, &slots)?;
+                        }
+                        Ok(JobOutcome {
+                            job_id: job.id,
+                            devices: alloc.devices.clone(),
+                            start,
+                            end: t0.elapsed().as_secs_f64(),
+                            report,
+                        })
+                    });
+                monitor.release(alloc);
+                match result {
+                    Ok(out) => outcomes_ref.lock().unwrap().push(out),
+                    Err(e) => {
+                        errors.fetch_add(1, Ordering::SeqCst);
+                        let _ = tx.send(Err(e));
+                    }
+                }
+            });
+        }
+        drop(tx);
+        pool.join();
+
+        if errors.load(Ordering::SeqCst) > 0 {
+            let first = rx.into_iter().find_map(|r| r.err());
+            return Err(first.unwrap_or_else(|| anyhow!("job failed")));
+        }
+        let mut outcomes = Arc::try_unwrap(outcomes)
+            .map_err(|_| anyhow!("outcome collection still shared"))?
+            .into_inner()
+            .unwrap();
+        outcomes.sort_by_key(|o| o.job_id);
+
+        let makespan = outcomes.iter().map(|o| o.end).fold(0.0, f64::max);
+        let samples: Vec<(f64, f64, f64)> =
+            outcomes.iter().flat_map(|o| o.report.profile.iter().copied()).collect();
+        let calib_fit = Calib::fit_live(&samples);
+        Ok(EngineReport { outcomes, makespan, calib_fit })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::pool::CPU_SIM;
+    use crate::config::LoraConfig;
+    use crate::costmodel::{ExecMode, Pack, TrainBudget};
+
+    fn runtime() -> Option<Arc<Runtime>> {
+        let dir = Runtime::default_dir();
+        dir.join("manifest.json").exists().then(|| Arc::new(Runtime::load(&dir).unwrap()))
+    }
+
+    fn cfg(id: usize, task: &str) -> LoraConfig {
+        LoraConfig { id, lr: 2e-3, batch: 1, rank: 8, alpha_ratio: 1.0, task: task.into() }
+    }
+
+    fn job(id: usize, d: usize, configs: Vec<LoraConfig>) -> PlannedJob {
+        PlannedJob { id, pack: Pack::new(configs), d, mode: ExecMode::Packed }
+    }
+
+    /// Two jobs on a 2-slot pool run concurrently; a third waits its turn.
+    #[test]
+    fn engine_runs_queue_with_device_backpressure() {
+        let Some(rt) = runtime() else { return };
+        let mut engine = Engine::new(rt, ResourceMonitor::new(&CPU_SIM, 2));
+        engine.options.budget = TrainBudget { dataset: 6, epochs: 1 };
+        engine.options.eval_batches = 1;
+        engine.options.log_every = 0;
+        let queue = vec![
+            job(0, 1, vec![cfg(0, "modadd")]),
+            job(1, 1, vec![cfg(1, "parity")]),
+            job(2, 2, vec![cfg(2, "copy"), cfg(3, "needle")]),
+        ];
+        let report = engine.run("nano", &queue).unwrap();
+        assert_eq!(report.outcomes.len(), 3);
+        assert_eq!(report.total_adapters(), 4);
+        assert!(report.makespan > 0.0);
+        // Job 2 needs both devices: it must start after one of job 0/1 ends.
+        let j2 = &report.outcomes[2];
+        let first_end = report.outcomes[..2].iter().map(|o| o.end).fold(f64::MAX, f64::min);
+        assert!(
+            j2.start >= first_end - 0.05,
+            "job2 started at {:.3}s before capacity freed at {:.3}s",
+            j2.start,
+            first_end
+        );
+        assert_eq!(engine.monitor.available(), 2, "all devices returned");
+    }
+
+    /// Errors surface and the pool is not leaked.
+    #[test]
+    fn engine_propagates_job_errors_and_releases_devices() {
+        let Some(rt) = runtime() else { return };
+        let engine = Engine::new(rt, ResourceMonitor::new(&CPU_SIM, 2));
+        // rank 99 has no artifact bucket -> run_pack fails.
+        let bad = LoraConfig { id: 0, lr: 1e-3, batch: 1, rank: 99, alpha_ratio: 1.0, task: "copy".into() };
+        let queue = vec![job(0, 1, vec![bad])];
+        assert!(engine.run("nano", &queue).is_err());
+        assert_eq!(engine.monitor.available(), 2);
+    }
+}

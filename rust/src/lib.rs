@@ -1,0 +1,32 @@
+//! # PLoRA — efficient LoRA hyperparameter tuning
+//!
+//! Reproduction of *"PLoRA: Efficient LoRA Hyperparameter Tuning for Large
+//! Models"* (Yan, Wang, Jia, Venkataraman, Wang — cs.LG 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the coordinator — Appendix-A cost model, the
+//!   ILP + DTM packing planner (§6), the live execution engine (§4), and a
+//!   discrete-event simulator that regenerates the paper's figures at the
+//!   original 8×A100 / 8×A10 scale.
+//! - **L2/L1 (`python/compile/`)**: the packed multi-adapter TinyLM train
+//!   step and the packed-LoRA Pallas kernels, AOT-lowered once to HLO text
+//!   (`make artifacts`); Python is never on the request path.
+//! - **Runtime**: [`runtime`] loads `artifacts/*.hlo.txt` via the PJRT CPU
+//!   client (`xla` crate) and replays them from the Rust hot path.
+//!
+//! Entry points: [`planner::JobPlanner`] (Alg. 2), [`engine::Engine`]
+//! (live packed fine-tuning), [`sim::Simulator`] (paper-scale makespan),
+//! and the `plora` binary (`rust/src/main.rs`).
+
+pub mod bench;
+pub mod cluster;
+pub mod engine;
+pub mod runtime;
+pub mod train;
+pub mod config;
+pub mod costmodel;
+pub mod metrics;
+pub mod planner;
+pub mod search;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,456 @@
+//! `plora` — the CLI leader process.
+//!
+//! Subcommands map onto the paper's workflow (Figure 3) and evaluation:
+//!
+//! ```text
+//! plora plan     offline planning (Alg. 1+2): schedule a search space
+//! plora sim      paper-scale makespan simulation (Figs. 4/6) per method
+//! plora train    one live packed fine-tuning job on the PJRT runtime
+//! plora sweep    live end-to-end sweep through planner + engine
+//! plora quality  quality tables (Tables 2/3/4/6 analogues)
+//! plora kernels  packed-kernel micro-benchmarks, live (Tables 7/8)
+//! plora calib    print the live cost-model fit for this machine
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use plora::cluster::ResourceMonitor;
+use plora::config::{geometry, pool, LoraConfig, SearchSpace};
+use plora::costmodel::{CostModel, TrainBudget};
+use plora::engine::{CheckpointPool, Engine};
+use plora::metrics::{fmt_dur, fmt_x, Table};
+use plora::planner::{max_gpu_plan, min_gpu_plan, sequential_plora_plan, JobPlanner};
+use plora::runtime::{HostTensor, Runtime};
+use plora::search;
+use plora::sim::{SimOptions, Simulator};
+use plora::train::{run_pack, TrainOptions};
+use plora::util::cli::Args;
+
+const USAGE: &str = "\
+plora — efficient LoRA hyperparameter tuning (PLoRA reproduction)
+
+USAGE: plora <subcommand> [flags]
+
+  plan     --model <geom> --gpus N [--configs N] [--budget N]
+  sim      --model <geom> --gpus N [--a10] [--qlora] [--noise S]
+  train    --model <tinylm> --task T [--rank R] [--lr X] [--batch B] [--steps N]
+  sweep    --model <tinylm> --configs N [--gpus N] [--steps N] [--ckpt DIR]
+  quality  --model <tinylm> [--steps N] [--per-task N]
+  kernels  [--ns 1,2,8,32] [--geoms attn,mlp] [--iters N]
+  calib    --model <tinylm> [--steps N]
+
+Geometries: qwen2.5-{3b,7b,14b,32b}, llama3.2-3b, llama3.1-8b (sim) or
+nano/tiny/small/base (live TinyLM models).";
+
+fn main() {
+    let args = Args::parse();
+    let r = match args.subcommand.as_deref() {
+        Some("plan") => cmd_plan(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("quality") => cmd_quality(&args),
+        Some("kernels") => cmd_kernels(&args),
+        Some("calib") => cmd_calib(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn geom_cm(args: &Args) -> Result<CostModel> {
+    let model = args.get_or("model", "qwen2.5-7b");
+    let g = geometry::geom(model).ok_or_else(|| anyhow!("unknown geometry '{model}'"))?;
+    let prof = if args.flag("a10") { &pool::A10_24G } else { &pool::A100_40G };
+    let mut g = g.clone();
+    if args.flag("qlora") {
+        g.base_bytes = 0.5; // 4-bit base (§7.5)
+    }
+    Ok(CostModel::new(&g, prof))
+}
+
+fn grid(args: &Args) -> Result<Vec<LoraConfig>> {
+    let n = args.usize("configs", 120)?;
+    let task = args.get_or("task", "modadd");
+    let mut g = SearchSpace::default().grid(task);
+    g.truncate(n);
+    Ok(g)
+}
+
+fn budget(args: &Args) -> Result<TrainBudget> {
+    Ok(TrainBudget { dataset: args.usize("budget", 256)?, epochs: args.usize("epochs", 3)? })
+}
+
+fn runtime() -> Result<Arc<Runtime>> {
+    Ok(Arc::new(Runtime::load(&Runtime::default_dir())?))
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cm = geom_cm(args)?;
+    let gpus = args.usize("gpus", 8)?;
+    let configs = grid(args)?;
+    let mut planner = JobPlanner::new(cm, gpus);
+    planner.budget = budget(args)?;
+    let plan = planner.plan(&configs)?;
+    let mut t = Table::new(
+        &format!("PLoRA plan — {} configs on {} x {}", configs.len(), gpus, planner.cm.profile.name),
+        &["job", "n", "r_pad", "d", "start", "end"],
+    );
+    for j in &plan.jobs {
+        t.row(vec![
+            j.job.id.to_string(),
+            j.job.pack.n().to_string(),
+            j.job.pack.r_pad().to_string(),
+            j.job.d.to_string(),
+            fmt_dur(j.start),
+            fmt_dur(j.end),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmakespan {}  AR bound {:.3}  occupancy {:.0}%  ilp calls {}  planned in {:.2}s",
+        fmt_dur(plan.makespan),
+        plan.ar_bound,
+        plan.occupancy() * 100.0,
+        plan.stats.ilp_calls,
+        plan.plan_secs
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cm = geom_cm(args)?;
+    let gpus = args.usize("gpus", 8)?;
+    let configs = grid(args)?;
+    let b = budget(args)?;
+    let noise = args.f64("noise", 0.0)?;
+    let sim = Simulator { cm: cm.clone(), budget: b, gpus };
+    let opts = SimOptions { noise, seed: args.usize("seed", 42)? as u64 };
+
+    let run = |plan: &plora::planner::Plan| {
+        let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+        sim.run_queue(&queue, &opts)
+    };
+    let min = run(&min_gpu_plan(&cm, &b, gpus, &configs)?);
+    let max = run(&max_gpu_plan(&cm, &b, gpus, &configs)?);
+    let seq = run(&sequential_plora_plan(&cm, &b, gpus, &configs)?);
+    let mut planner = JobPlanner::new(cm.clone(), gpus);
+    planner.budget = b;
+    let plora_plan = planner.plan(&configs)?;
+    let plora = run(&plora_plan);
+
+    let mut t = Table::new(
+        &format!(
+            "Makespan — {} on {} x {} ({} configs)",
+            cm.geom.name,
+            gpus,
+            cm.profile.name,
+            configs.len()
+        ),
+        &["method", "makespan", "norm (MinGPU=1)", "speedup vs MinGPU", "pool util"],
+    );
+    for (name, r) in
+        [("Min GPU", &min), ("Max GPU", &max), ("Sequential PLoRA", &seq), ("PLoRA", &plora)]
+    {
+        t.row(vec![
+            name.to_string(),
+            fmt_dur(r.makespan),
+            format!("{:.2}", r.makespan / min.makespan),
+            fmt_x(min.makespan / r.makespan),
+            format!("{:.0}%", r.utilization() * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\nPLoRA planner AR bound: {:.3}", plora_plan.ar_bound);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let model = args.get_or("model", "nano").to_string();
+    let task = args.get_or("task", "modadd").to_string();
+    let config = LoraConfig {
+        id: 0,
+        lr: args.f64("lr", 2e-3)?,
+        batch: args.usize("batch", 1)?,
+        rank: args.usize("rank", 8)?,
+        alpha_ratio: args.f64("alpha", 1.0)?,
+        task,
+    };
+    let opts = TrainOptions {
+        budget: TrainBudget { dataset: args.usize("steps", 64)?, epochs: 1 },
+        eval_batches: args.usize("eval-batches", 4)?,
+        seed: args.usize("seed", 17)? as u64,
+        log_every: args.usize("log-every", 8)?,
+    };
+    let rep = run_pack(&rt, &model, &[config], &opts)?;
+    let a = &rep.adapters[0];
+    println!(
+        "artifact {}  steps {}  wall {:.1}s  ({:.3}s/step, compile {:.1}s)",
+        rep.artifact, rep.steps, rep.wall_secs, rep.step_secs, rep.compile_secs
+    );
+    println!(
+        "task {}: base acc {:.3} -> eval acc {:.3} | loss {:.3} -> {:.3}",
+        a.config.task, a.base_acc, a.eval_acc, a.base_loss, a.eval_loss
+    );
+    for (s, l) in &a.curve {
+        println!("  step {s:>4}  loss {l:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let model = args.get_or("model", "nano").to_string();
+    let gpus = args.usize("gpus", 4)?;
+    let n = args.usize("configs", 8)?;
+    let steps = args.usize("steps", 48)?;
+
+    // Plan against the live profile, then execute on the live engine.
+    let mi = rt.manifest.model(&model)?;
+    let geom = geometry::tiny_geom(
+        Box::leak(model.clone().into_boxed_str()),
+        mi.n_layers,
+        mi.d_model,
+        mi.d_ff,
+        mi.n_heads,
+        mi.vocab,
+        mi.seq,
+    );
+    let mut cm = CostModel::new(&geom, &pool::CPU_SIM);
+    cm.charge_padding = true;
+    cm.buckets = Some(rt.manifest.train_buckets(&model));
+    let tasks = rt.manifest.tasks.clone();
+    let space = SearchSpace {
+        lrs: vec![5e-4, 2e-3, 5e-3],
+        batches: vec![1, 2],
+        ranks: vec![8, 16],
+        alpha_ratios: vec![0.5, 1.0],
+    };
+    let mut rng = plora::util::rng::Rng::new(7);
+    let mut configs = vec![];
+    for i in 0..n {
+        let mut c = space.sample(&tasks[i % tasks.len()], 1, &mut rng).remove(0);
+        c.id = i;
+        c.task = tasks[i % tasks.len()].clone();
+        configs.push(c);
+    }
+
+    let mut planner = JobPlanner::new(cm, gpus);
+    planner.budget = TrainBudget { dataset: steps, epochs: 1 };
+    let plan = planner.plan(&configs)?;
+    println!(
+        "plan: {} jobs, predicted makespan {} (cost-model time)",
+        plan.jobs.len(),
+        fmt_dur(plan.makespan)
+    );
+
+    let mut engine = Engine::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, gpus));
+    engine.options.budget = planner.budget;
+    engine.options.eval_batches = 2;
+    engine.options.log_every = 0;
+    if let Some(dir) = args.get("ckpt") {
+        engine.checkpoints = Some(CheckpointPool::new(&PathBuf::from(dir), rt.clone())?);
+    }
+    let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+    let report = engine.run(&model, &queue)?;
+
+    let mut t = Table::new(
+        &format!("Live sweep — {} configs on {model} ({} jobs)", n, report.outcomes.len()),
+        &["config", "task", "rank", "bs", "lr", "base acc", "eval acc"],
+    );
+    for o in &report.outcomes {
+        for a in &o.report.adapters {
+            t.row(vec![
+                a.config.id.to_string(),
+                a.config.task.clone(),
+                a.config.rank.to_string(),
+                a.config.batch.to_string(),
+                format!("{:.0e}", a.config.lr),
+                format!("{:.3}", a.base_acc),
+                format!("{:.3}", a.eval_acc),
+            ]);
+        }
+    }
+    t.print();
+    let (a, b, c) = report.calib_fit;
+    println!(
+        "\nlive makespan {}  adapters {}  calib fit: t = {:.4} + {:.2e}*tokens + {:.2e}*n",
+        fmt_dur(report.makespan),
+        report.total_adapters(),
+        a,
+        b,
+        c
+    );
+    Ok(())
+}
+
+fn cmd_quality(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let model = args.get_or("model", "nano").to_string();
+    let steps = args.usize("steps", 96)?;
+    let per_task = args.usize("per-task", 12)?;
+
+    let opts = search::SweepOptions {
+        budget: TrainBudget { dataset: steps, epochs: 1 },
+        eval_batches: 4,
+        seed: 23,
+    };
+    // Small grid per task around live-scale learning rates.
+    let space = SearchSpace {
+        lrs: vec![5e-4, 2e-3, 8e-3],
+        batches: vec![1, 2],
+        ranks: vec![8, 16],
+        alpha_ratios: vec![0.5, 1.0],
+    };
+    let tasks = rt.manifest.tasks.clone();
+    let mut all = vec![];
+    let mut defaults = vec![];
+    for task in &tasks {
+        let mut g = space.grid(task);
+        g.truncate(per_task);
+        for (i, c) in g.iter_mut().enumerate() {
+            c.id = i;
+        }
+        println!("[{model}/{task}] sweeping {} configs ...", g.len());
+        all.extend(search::sweep(&rt, &model, &g, &opts)?);
+        let mut d = search::default_config(task);
+        d.lr = 2e-3; // live-scale default
+        d.id = 9999;
+        let rep = run_pack(
+            &rt,
+            &model,
+            &[d],
+            &TrainOptions {
+                budget: opts.budget,
+                eval_batches: opts.eval_batches,
+                seed: opts.seed,
+                log_every: 0,
+            },
+        )?;
+        defaults.extend(rep.adapters);
+    }
+    search::table2(&all).print();
+    search::table3(&all).print();
+    search::table4(&model, &all).print();
+    search::table6(&model, &all, &defaults).print();
+    Ok(())
+}
+
+fn cmd_kernels(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let ns = args.list_usize("ns", &[1, 2, 8, 32])?;
+    let geoms: Vec<String> = args
+        .get_or("geoms", "attn,mlp")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let iters = args.usize("iters", 10)?;
+
+    let mut t = Table::new(
+        "Packed-LoRA kernels — live speedup over sequential per-adapter launches (Table 7 analogue)",
+        &["geom", "n", "fwd", "bwd"],
+    );
+    for geom in &geoms {
+        let (base_f, base_b) = kernel_time(&rt, geom, 1, iters)?;
+        for &n in &ns {
+            let (tf, tb) = kernel_time(&rt, geom, n, iters)?;
+            // Sequential baseline: n separate n=1 launches.
+            t.row(vec![
+                geom.clone(),
+                n.to_string(),
+                fmt_x(n as f64 * base_f / tf),
+                fmt_x(n as f64 * base_b / tb),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+/// Median wall time of the packed fwd/bwd kernel artifacts at pack size `n`.
+fn kernel_time(rt: &Runtime, geom: &str, n: usize, iters: usize) -> Result<(f64, f64)> {
+    let fwd = rt.executable(&format!("kfwd_{geom}_n{n}"))?;
+    let bwd = rt.executable(&format!("kbwd_{geom}_n{n}"))?;
+    let (d, k, r, m) = (
+        fwd.info.meta_usize("d").unwrap(),
+        fwd.info.meta_usize("k").unwrap(),
+        fwd.info.meta_usize("r").unwrap(),
+        fwd.info.meta_usize("m").unwrap(),
+    );
+    let x = HostTensor::f32(vec![n, m, d], vec![0.01; n * m * d])?;
+    let a = HostTensor::f32(vec![n, d, r], vec![0.02; n * d * r])?;
+    let bt = HostTensor::f32(vec![n, r, k], vec![0.03; n * r * k])?;
+    let alpha = HostTensor::f32(vec![n], vec![1.0; n])?;
+    let g = HostTensor::f32(vec![n, m, k], vec![0.05; n * m * k])?;
+
+    let time = |exe: &plora::runtime::Executable, inputs: &[HostTensor]| -> Result<f64> {
+        exe.run(inputs)?; // warmup
+        let mut samples = vec![];
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            exe.run(inputs)?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|p, q| p.total_cmp(q));
+        Ok(samples[samples.len() / 2])
+    };
+    let tf = time(&fwd, &[x.clone(), a.clone(), bt.clone(), alpha.clone()])?;
+    let tb = time(&bwd, &[x, a, bt, alpha, g])?;
+    Ok((tf, tb))
+}
+
+fn cmd_calib(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let model = args.get_or("model", "nano").to_string();
+    let steps = args.usize("steps", 16)?;
+    let mut samples = vec![];
+    for (n, bs) in [(1usize, 1usize), (2, 1), (4, 1), (2, 2)] {
+        let configs: Vec<LoraConfig> = (0..n)
+            .map(|i| LoraConfig {
+                id: i,
+                lr: 1e-3,
+                batch: bs,
+                rank: 8,
+                alpha_ratio: 1.0,
+                task: "modadd".into(),
+            })
+            .collect();
+        let opts = TrainOptions {
+            budget: TrainBudget { dataset: steps * bs, epochs: 1 },
+            eval_batches: 1,
+            seed: 3,
+            log_every: 0,
+        };
+        match run_pack(&rt, &model, &configs, &opts) {
+            Ok(rep) => {
+                println!("n={n} bs={bs}: {:.4}s/step", rep.step_secs);
+                samples.extend(rep.profile);
+            }
+            Err(e) => println!("n={n} bs={bs}: skipped ({e})"),
+        }
+    }
+    if samples.is_empty() {
+        bail!("no profile samples collected");
+    }
+    let (a, b, c) = plora::costmodel::throughput::Calib::fit_live(&samples);
+    println!(
+        "\nlive fit over {} steps: t = {:.4} + {:.3e}*tokens + {:.3e}*n_adapters",
+        samples.len(),
+        a,
+        b,
+        c
+    );
+    println!("(feed these into CostModel::calib for cpu-sim planning)");
+    Ok(())
+}

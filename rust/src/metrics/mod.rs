@@ -1,0 +1,165 @@
+//! Result tables and run reports: the uniform way benches, examples, and
+//! the CLI emit paper-style tables (markdown for EXPERIMENTS.md, CSV for
+//! downstream plotting, JSON lines for machine consumption).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// A rows × columns table with a title — one paper table/figure series.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: Vec<S>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.into_iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    /// GitHub-flavored markdown rendering.
+    pub fn markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        s.push_str(&format!("|{}\n", "---|".repeat(self.headers.len())));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+
+    pub fn csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("headers", Json::arr(self.headers.iter().map(|h| Json::str(h.clone())))),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::arr(r.iter().map(|c| Json::str(c.clone())))),
+                ),
+            ),
+        ])
+    }
+
+    /// Print to stdout (aligned plain text).
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+    }
+}
+
+/// Append a table (as markdown) to a report file, creating it if needed.
+pub fn append_markdown(path: &Path, table: &Table) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{}", table.markdown())
+}
+
+/// Format a speedup/slowdown factor the way the paper does (`6.51x`).
+pub fn fmt_x(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format seconds compactly (`42s`, `3.2m`, `1.4h`).
+pub fn fmt_dur(secs: f64) -> String {
+    if secs < 120.0 {
+        format!("{secs:.0}s")
+    } else if secs < 7200.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{:.2}h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_and_csv_shapes() {
+        let mut t = Table::new("Makespan", &["method", "makespan", "speedup"]);
+        t.row(vec!["Min GPU", "100", "1.00x"]);
+        t.row(vec!["PLoRA", "14", "7.08x"]);
+        let md = t.markdown();
+        assert!(md.contains("### Makespan"));
+        assert!(md.lines().count() >= 5);
+        assert!(md.contains("| PLoRA | 14 | 7.08x |"));
+        let csv = t.csv();
+        assert_eq!(csv.lines().next().unwrap(), "method,makespan,speedup");
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["hello, world"]);
+        assert!(t.csv().contains("\"hello, world\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one"]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_x(6.513), "6.51x");
+        assert_eq!(fmt_dur(42.0), "42s");
+        assert_eq!(fmt_dur(300.0), "5.0m");
+        assert_eq!(fmt_dur(10000.0), "2.78h");
+    }
+}

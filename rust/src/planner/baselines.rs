@@ -1,0 +1,193 @@
+//! Evaluation baselines (§7.1) as planners producing the same [`Plan`]
+//! shape as PLoRA's job planner, so the simulator and benches compare
+//! like-for-like:
+//!
+//! - **Min GPU**: one configuration per job, each at the *minimum* TP
+//!   degree that fits its memory; jobs fill all GPUs concurrently.
+//! - **Max GPU**: one configuration per job at TP = G (one job at a time).
+//! - **Sequential PLoRA** (Fig. 6 ablation): PLoRA's packing planner, but
+//!   jobs execute with the naive sequential per-adapter loop (§5.1) —
+//!   isolates planner gains from kernel gains.
+
+use anyhow::{bail, Result};
+
+use crate::config::LoraConfig;
+use crate::costmodel::{CostModel, ExecMode, Pack, TrainBudget};
+use crate::planner::job_planner::{Plan, ScheduledJob};
+use crate::planner::{DtmStats, JobPlanner, PlannedJob};
+
+/// Greedy event-driven placement of fixed single-config jobs (shared by the
+/// Min/Max GPU baselines): schedule each job as soon as `d` GPUs free up.
+fn place_fixed_jobs(
+    cm: &CostModel,
+    budget: &TrainBudget,
+    gpus: usize,
+    jobs: Vec<(Pack, usize)>,
+) -> Plan {
+    let t_wall = std::time::Instant::now();
+    let mut queue: Vec<ScheduledJob> = vec![];
+    let mut running: Vec<(f64, usize)> = vec![]; // (end, d)
+    let mut g_avail = gpus;
+    let mut now = 0.0f64;
+    let mut pending: std::collections::VecDeque<(Pack, usize)> = jobs.into();
+    let mut next_id = 0usize;
+
+    while !pending.is_empty() {
+        // Launch everything that fits right now (FIFO, like a cluster queue).
+        while let Some((_pack, d)) = pending.front() {
+            if *d <= g_avail {
+                let (pack, d) = pending.pop_front().unwrap();
+                let dur = cm.job_time(&pack, d, ExecMode::Sequential, budget);
+                g_avail -= d;
+                running.push((now + dur, d));
+                queue.push(ScheduledJob {
+                    job: PlannedJob { id: next_id, pack, d, mode: ExecMode::Sequential },
+                    start: now,
+                    end: now + dur,
+                });
+                next_id += 1;
+            } else {
+                break;
+            }
+        }
+        if pending.is_empty() {
+            break;
+        }
+        // Advance to the next completion.
+        let (idx, _) = running
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+            .expect("pending jobs but nothing running");
+        let (end, d) = running.swap_remove(idx);
+        now = end.max(now);
+        g_avail += d;
+    }
+
+    let makespan = queue.iter().map(|j| j.end).fold(0.0, f64::max);
+    Plan {
+        jobs: queue,
+        makespan,
+        ar_bound: f64::NAN, // Theorem 6.1 applies to the PLoRA planner only
+        lb_makespan: f64::NAN,
+        gpus,
+        stats: DtmStats::default(),
+        plan_secs: t_wall.elapsed().as_secs_f64(),
+    }
+}
+
+/// **Min GPU**: every config is its own sequential job at the model's
+/// minimum TP degree. As in §7.2.1 the degree is *per model*, uniform over
+/// the space (the minimum set of hardware that satisfies the memory
+/// constraint for every job: 3B/7B → 1, 14B → 2, 32B → 4).
+pub fn min_gpu_plan(
+    cm: &CostModel,
+    budget: &TrainBudget,
+    gpus: usize,
+    configs: &[LoraConfig],
+) -> Result<Plan> {
+    let mut d_model = 1usize;
+    for c in configs {
+        let Some(d) = cm.memory.min_tp(c, &cm.profile, cm.c_load, gpus) else {
+            bail!("config {} does not fit the pool", c.id);
+        };
+        d_model = d_model.max(d);
+    }
+    let jobs = configs.iter().map(|c| (Pack::new(vec![c.clone()]), d_model)).collect();
+    Ok(place_fixed_jobs(cm, budget, gpus, jobs))
+}
+
+/// **Max GPU**: every config is its own sequential job at TP = G (§7.1) —
+/// one job occupies the whole instance at a time.
+pub fn max_gpu_plan(
+    cm: &CostModel,
+    budget: &TrainBudget,
+    gpus: usize,
+    configs: &[LoraConfig],
+) -> Result<Plan> {
+    let jobs = configs.iter().map(|c| (Pack::new(vec![c.clone()]), gpus)).collect();
+    Ok(place_fixed_jobs(cm, budget, gpus, jobs))
+}
+
+/// **Sequential PLoRA** (Fig. 6): PLoRA's packing plan, executed with the
+/// naive per-adapter kernel loop instead of the packed kernels.
+pub fn sequential_plora_plan(
+    cm: &CostModel,
+    budget: &TrainBudget,
+    gpus: usize,
+    configs: &[LoraConfig],
+) -> Result<Plan> {
+    let mut planner = JobPlanner::new(cm.clone(), gpus);
+    planner.budget = *budget;
+    planner.mode = ExecMode::Sequential;
+    planner.plan(configs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::geometry::geom;
+    use crate::config::pool::A100_40G;
+    use crate::config::SearchSpace;
+
+    fn cm(model: &str) -> CostModel {
+        CostModel::new(geom(model).unwrap(), &A100_40G)
+    }
+
+    #[test]
+    fn min_gpu_runs_eight_concurrent_jobs_for_7b() {
+        let m = cm("qwen2.5-7b");
+        let b = TrainBudget::default();
+        let grid = SearchSpace::default().grid("t");
+        let plan = min_gpu_plan(&m, &b, 8, &grid).unwrap();
+        assert_eq!(plan.total_configs(), 120);
+        // At t=0+, exactly 8 jobs should be running (one per GPU).
+        let at0 = plan.jobs.iter().filter(|j| j.start == 0.0).count();
+        assert_eq!(at0, 8);
+        assert!(plan.jobs.iter().all(|j| j.job.d == 1));
+    }
+
+    #[test]
+    fn min_gpu_uses_tp2_for_14b() {
+        let m = cm("qwen2.5-14b");
+        let b = TrainBudget::default();
+        let grid = SearchSpace::default().grid("t");
+        let plan = min_gpu_plan(&m, &b, 8, &grid[..16]).unwrap();
+        assert!(plan.jobs.iter().all(|j| j.job.d == 2));
+        let at0 = plan.jobs.iter().filter(|j| j.start == 0.0).count();
+        assert_eq!(at0, 4, "four concurrent 2-GPU jobs");
+    }
+
+    #[test]
+    fn max_gpu_serializes_everything() {
+        let m = cm("qwen2.5-7b");
+        let b = TrainBudget::default();
+        let grid = SearchSpace::default().grid("t");
+        let plan = max_gpu_plan(&m, &b, 8, &grid[..10]).unwrap();
+        assert!(plan.jobs.iter().all(|j| j.job.d == 8));
+        // Strictly serialized: starts are non-decreasing, no overlap.
+        for w in plan.jobs.windows(2) {
+            assert!(w[1].start >= w[0].end - 1e-9);
+        }
+    }
+
+    /// Fig. 4 ordering: PLoRA < Sequential-PLoRA < Min GPU < Max GPU.
+    #[test]
+    fn makespan_ordering_matches_figure_4() {
+        let m = cm("qwen2.5-7b");
+        let b = TrainBudget::default();
+        let grid = SearchSpace::default().grid("t");
+        let min = min_gpu_plan(&m, &b, 8, &grid).unwrap().makespan;
+        let max = max_gpu_plan(&m, &b, 8, &grid).unwrap().makespan;
+        let seq = sequential_plora_plan(&m, &b, 8, &grid).unwrap().makespan;
+        let plora = JobPlanner::new(m.clone(), 8).plan(&grid).unwrap().makespan;
+        assert!(max > min, "Max GPU ({max:.0}s) must trail Min GPU ({min:.0}s)");
+        assert!(seq < min, "Sequential PLoRA ({seq:.0}s) must beat Min GPU ({min:.0}s)");
+        assert!(plora < seq, "PLoRA ({plora:.0}s) must beat Sequential PLoRA ({seq:.0}s)");
+        let speedup = min / plora;
+        assert!(
+            (3.0..12.0).contains(&speedup),
+            "PLoRA speedup over Min GPU {speedup:.2} (paper: 6.5-7.5x)"
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! Algorithm 1 — **Decomposed Throughput Maximization (DTM)**.
+//!
+//! Given `g` free GPUs and the remaining configuration set `K`, enumerate
+//! parallelism degrees (powers of two, Eq. 16), solve the per-job packing
+//! ILP `F(d, K)` for each, and recurse on the leftover GPUs; return the set
+//! of concurrent jobs maximizing instantaneous throughput (Eq. 13).
+//!
+//! Degrees are explored non-increasingly along a policy — the
+//! monotonicity condition used by the Theorem-6.1 proof — which also
+//! de-duplicates permutations of the same partition.
+
+use crate::config::LoraConfig;
+use crate::costmodel::{CostModel, ExecMode, TrainBudget};
+use crate::planner::ilp::PackProblem;
+use crate::planner::PlannedJob;
+
+/// One DTM invocation (the paper's `DTM(G, K)`).
+pub struct Dtm<'a> {
+    pub cm: &'a CostModel,
+    pub budget: &'a TrainBudget,
+    pub mode: ExecMode,
+    /// Cap on ILP invocations (paper: 286 calls for 8 GPUs; this guards
+    /// adversarial pool sizes).
+    pub max_ilp_calls: usize,
+}
+
+/// Statistics of one DTM run (observability + §6.2 "computation time").
+#[derive(Debug, Clone, Default)]
+pub struct DtmStats {
+    pub ilp_calls: usize,
+    pub policies: usize,
+    pub nodes: usize,
+}
+
+impl<'a> Dtm<'a> {
+    pub fn new(cm: &'a CostModel, budget: &'a TrainBudget, mode: ExecMode) -> Self {
+        Dtm { cm, budget, mode, max_ilp_calls: 4096 }
+    }
+
+    /// `DTM(g, K)`: the best set of concurrent jobs for `g` free GPUs.
+    /// Jobs in the result use disjoint configs; configs that fit nowhere
+    /// are left unscheduled (the caller retries when more GPUs free up).
+    pub fn plan(&self, g: usize, configs: &[LoraConfig]) -> (Vec<PlannedJob>, DtmStats) {
+        let mut stats = DtmStats::default();
+        let mut best: Option<(f64, Vec<PlannedJob>)> = None;
+        let mut current = vec![];
+        self.helper(g, usize::MAX, configs.to_vec(), &mut current, &mut best, &mut stats);
+        (best.map(|(_, jobs)| jobs).unwrap_or_default(), stats)
+    }
+
+    /// `DTMHelper(g, P_tmp, K, P)` with non-increasing degree `d ≤ d_max`.
+    fn helper(
+        &self,
+        g: usize,
+        d_max: usize,
+        remaining: Vec<LoraConfig>,
+        current: &mut Vec<PlannedJob>,
+        best: &mut Option<(f64, Vec<PlannedJob>)>,
+        stats: &mut DtmStats,
+    ) {
+        // Terminal: no GPUs left, no configs left, or ILP budget exhausted.
+        if g == 0 || remaining.is_empty() || stats.ilp_calls >= self.max_ilp_calls {
+            self.offer(current, best, stats);
+            return;
+        }
+        // d ∈ {g', g'/2, …, 1} with g' = 2^⌊log2 g⌋ (Alg. 1 line 4–5).
+        let mut gp = 1usize;
+        while gp * 2 <= g {
+            gp *= 2;
+        }
+        // Ensure d ≤ d_max (non-increasing policies).
+        let mut d = gp;
+        while d > d_max {
+            d /= 2;
+        }
+        let mut any_child = false;
+        while d >= 1 {
+            stats.ilp_calls += 1;
+            let prob = PackProblem::new(self.cm, d, self.mode, self.budget);
+            if let Some(sol) = prob.solve(&remaining) {
+                stats.nodes += sol.nodes;
+                if sol.pack.n() > 0 {
+                    any_child = true;
+                    let used: Vec<usize> = sol.pack.configs.iter().map(|c| c.id).collect();
+                    let rest: Vec<LoraConfig> =
+                        remaining.iter().filter(|c| !used.contains(&c.id)).cloned().collect();
+                    current.push(PlannedJob {
+                        id: 0, // assigned by the job planner
+                        pack: sol.pack,
+                        d,
+                        mode: self.mode,
+                    });
+                    self.helper(g - d, d, rest, current, best, stats);
+                    current.pop();
+                }
+            }
+            if d == 1 {
+                break;
+            }
+            d /= 2;
+        }
+        if !any_child {
+            // Nothing fits on any degree ≤ g: close this policy as-is.
+            self.offer(current, best, stats);
+        }
+    }
+
+    /// Score a complete policy — Alg. 1 line 11 (`arg min T(p)`), adapted
+    /// for policies that schedule different amounts of work: **round
+    /// effective throughput** = total scheduled rank / longest job time.
+    /// At equal work this is exactly min-makespan selection.
+    ///
+    /// A plain Σ_j (rank_j / T_j) sum (the literal Eq. 13 reading) is
+    /// degenerate here: it rewards dumping all slow configurations into one
+    /// sacrificial long job so the remaining jobs look fast — which
+    /// *maximizes* the makespan the outer problem (Eq. 12) minimizes.
+    fn offer(
+        &self,
+        current: &[PlannedJob],
+        best: &mut Option<(f64, Vec<PlannedJob>)>,
+        stats: &mut DtmStats,
+    ) {
+        stats.policies += 1;
+        let work: f64 = current.iter().map(|j| j.pack.rank_sum() as f64).sum();
+        let t = self.longest(current);
+        let score = if t > 0.0 { work / t } else { 0.0 };
+        if std::env::var("PLORA_DTM_DEBUG").is_ok() {
+            let ds: Vec<usize> = current.iter().map(|j| j.d).collect();
+            let ns: Vec<usize> = current.iter().map(|j| j.pack.n()).collect();
+            eprintln!("policy d={ds:?} n={ns:?} score={score:.3} T={t:.0}");
+        }
+        let better = match best {
+            None => true,
+            Some((b, _)) => score > *b * (1.0 + 1e-12),
+        };
+        if better && !current.is_empty() {
+            *best = Some((score, current.to_vec()));
+        } else if best.is_none() {
+            *best = Some((0.0, vec![]));
+        }
+    }
+
+    fn longest(&self, jobs: &[PlannedJob]) -> f64 {
+        jobs.iter()
+            .map(|j| self.cm.job_time(&j.pack, j.d, j.mode, self.budget))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::geometry::geom;
+    use crate::config::pool::A100_40G;
+    use crate::config::SearchSpace;
+
+    fn cm(model: &str) -> CostModel {
+        CostModel::new(geom(model).unwrap(), &A100_40G)
+    }
+
+    #[test]
+    fn dtm_schedules_disjoint_configs() {
+        let m = cm("qwen2.5-7b");
+        let b = TrainBudget::default();
+        let dtm = Dtm::new(&m, &b, ExecMode::Packed);
+        let configs = SearchSpace::default().grid("t");
+        let (jobs, stats) = dtm.plan(8, &configs);
+        assert!(!jobs.is_empty());
+        assert!(stats.ilp_calls >= 1);
+        let total_d: usize = jobs.iter().map(|j| j.d).sum();
+        assert!(total_d <= 8, "jobs use {total_d} GPUs > 8");
+        let mut seen = std::collections::BTreeSet::new();
+        for j in &jobs {
+            for c in &j.pack.configs {
+                assert!(seen.insert(c.id), "config {} scheduled twice", c.id);
+            }
+            assert!(m.fits(&j.pack, j.d), "infeasible pack returned");
+        }
+    }
+
+    #[test]
+    fn degrees_are_powers_of_two_within_pool() {
+        let m = cm("qwen2.5-14b"); // needs d >= 2
+        let b = TrainBudget::default();
+        let dtm = Dtm::new(&m, &b, ExecMode::Packed);
+        let configs = SearchSpace::default().grid("t");
+        let (jobs, _) = dtm.plan(8, &configs);
+        assert!(!jobs.is_empty());
+        for j in &jobs {
+            assert!(j.d.is_power_of_two() && j.d <= 8);
+            assert!(j.d >= 2, "14B cannot fit a single GPU");
+        }
+    }
+
+    #[test]
+    fn dtm_prefers_packing_over_spreading() {
+        // With packing available, one 7B job per GPU packed full beats any
+        // TP spreading: expect 8 single-GPU jobs over the big grid.
+        let m = cm("qwen2.5-7b");
+        let b = TrainBudget::default();
+        let dtm = Dtm::new(&m, &b, ExecMode::Packed);
+        let configs = SearchSpace::default().grid("t");
+        let (jobs, _) = dtm.plan(8, &configs);
+        assert!(jobs.iter().all(|j| j.d == 1), "7B packs best at d=1");
+        assert_eq!(jobs.len(), 8);
+        // Every job should pack several adapters.
+        assert!(jobs.iter().all(|j| j.pack.n() >= 2));
+    }
+
+    #[test]
+    fn empty_config_set_yields_empty_plan() {
+        let m = cm("qwen2.5-7b");
+        let b = TrainBudget::default();
+        let dtm = Dtm::new(&m, &b, ExecMode::Packed);
+        let (jobs, _) = dtm.plan(8, &[]);
+        assert!(jobs.is_empty());
+    }
+
+    #[test]
+    fn nothing_fits_yields_empty_plan_not_hang() {
+        let m = cm("qwen2.5-32b"); // ~69 GB of weights: never fits one A100
+        let b = TrainBudget::default();
+        let dtm = Dtm::new(&m, &b, ExecMode::Packed);
+        let configs = SearchSpace::default().grid("t");
+        let (jobs, _) = dtm.plan(1, &configs); // only 1 free
+        assert!(jobs.is_empty());
+    }
+}

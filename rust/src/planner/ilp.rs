@@ -1,0 +1,329 @@
+//! Exact solver for the per-job packing problem `F(D, K)` (Eq. 18–19):
+//! choose the subset of LoRA configurations that maximizes
+//! `Σ_k H_k · r_k / T(H, D)` under the Eq.-(19) memory constraint.
+//!
+//! The paper hands this to Gurobi; the offline crate set has no solver, so
+//! we built one: **branch & bound over inclusion decisions** with a
+//! fractional-knapsack upper bound. The bound is valid because
+//! `T(S, D)` is monotone in `S` (adding an adapter never makes a step
+//! faster), so for any superset `S' ⊇ S`:
+//! `f(S') ≤ (r(S) + fracknap(remaining)) / T(S, D)`.
+//!
+//! Instances here are small (≤ 120 items, capacity admits ~10–40), and the
+//! include-first dive in density order *is* the greedy solution, so an
+//! incumbent exists immediately; a node cap keeps worst cases bounded
+//! (the paper reports < 1 s per Gurobi instance — same contract).
+
+use crate::config::LoraConfig;
+use crate::costmodel::{CostModel, ExecMode, Pack, TrainBudget};
+
+/// One `F(D, K)` instance.
+pub struct PackProblem<'a> {
+    pub cm: &'a CostModel,
+    /// Parallelism degree `D` of the job being formed.
+    pub d: usize,
+    pub mode: ExecMode,
+    pub budget: &'a TrainBudget,
+    /// Node budget for branch & bound; on exhaustion the incumbent (≥ the
+    /// greedy solution) is returned.
+    pub max_nodes: usize,
+}
+
+/// Solver outcome: the selected pack and its objective value.
+#[derive(Debug, Clone)]
+pub struct PackSolution {
+    pub pack: Pack,
+    /// `Σ r_k / T(H, D)` — rank-units per second.
+    pub throughput: f64,
+    /// Nodes explored (observability; planner stats).
+    pub nodes: usize,
+    /// True iff the node cap was hit (solution may be suboptimal).
+    pub truncated: bool,
+}
+
+struct Item {
+    cfg: LoraConfig,
+    rank: f64,
+    mem: f64,
+}
+
+struct Search<'a> {
+    prob: &'a PackProblem<'a>,
+    items: Vec<Item>,
+    best_val: f64,
+    best_set: Vec<usize>,
+    nodes: usize,
+    truncated: bool,
+    /// Per-device memory is additive per item when charging true shapes —
+    /// include-feasibility then runs on scalars (the ILP hot path).
+    additive_mem: bool,
+}
+
+impl<'a> PackProblem<'a> {
+    pub fn new(cm: &'a CostModel, d: usize, mode: ExecMode, budget: &'a TrainBudget) -> Self {
+        PackProblem { cm, d, mode, budget, max_nodes: 200_000 }
+    }
+
+    /// Solve `F(D, K)` over `configs`. Returns `None` if not even a single
+    /// configuration fits on `d` devices.
+    pub fn solve(&self, configs: &[LoraConfig]) -> Option<PackSolution> {
+        let sh = crate::costmodel::memory::Sharding::tp(self.d);
+        let mut items: Vec<Item> = configs
+            .iter()
+            .filter(|c| self.cm.fits(&Pack::new(vec![(*c).clone()]), self.d))
+            .map(|c| Item {
+                cfg: c.clone(),
+                rank: c.rank as f64,
+                // Additive per-device cost: adapter state + the base-path
+                // activation its samples add (both linear in the item).
+                mem: self.cm.memory.lora_bytes(c, sh)
+                    + self.cm.memory.base_act_bytes(c.batch as f64)
+                        / (sh.tp * sh.pp) as f64,
+            })
+            .collect();
+        if items.is_empty() {
+            return None;
+        }
+        // Density order (rank per byte): both the dive order and the
+        // fractional-bound order.
+        items.sort_by(|a, b| (b.rank / b.mem).total_cmp(&(a.rank / a.mem)));
+
+        let mut s = Search {
+            prob: self,
+            items,
+            best_val: 0.0,
+            best_set: vec![],
+            nodes: 0,
+            truncated: false,
+            additive_mem: !self.cm.charge_padding,
+        };
+        s.branch(&mut vec![]);
+        let pack = Pack::new(s.best_set.iter().map(|&i| s.items[i].cfg.clone()).collect());
+        let throughput = self.objective(&pack);
+        Some(PackSolution { pack, throughput, nodes: s.nodes, truncated: s.truncated })
+    }
+
+    /// The Eq.-(18) objective for a candidate pack.
+    pub fn objective(&self, pack: &Pack) -> f64 {
+        if pack.n() == 0 {
+            return 0.0;
+        }
+        self.cm.throughput(pack, self.d, self.mode, self.budget)
+    }
+}
+
+impl Search<'_> {
+    fn pack_of(&self, chosen: &[usize]) -> Pack {
+        Pack::new(chosen.iter().map(|&i| self.items[i].cfg.clone()).collect())
+    }
+
+    /// Per-device bytes the pack occupies beyond the frozen base — additive
+    /// per item when shapes are true (sim mode), so include-feasibility and
+    /// the knapsack bound run on scalars instead of rebuilding packs.
+    fn mem_cap(&self) -> f64 {
+        let sh = crate::costmodel::memory::Sharding::tp(self.prob.d);
+        self.prob.cm.c_load * self.prob.cm.profile.mem_bytes
+            - self.prob.cm.memory.base_bytes(0.0, sh)
+    }
+
+    /// Upper bound for any completion of `chosen` using items `>= next`:
+    /// numerator by fractional knapsack on memory headroom; denominator by
+    /// monotonicity of `T` — `T(S') >= T(S)`, and `T(S) = rank(S)/obj(S)`
+    /// which the caller already computed (no job_time re-evaluation).
+    fn upper_bound(&self, rank_sum: f64, obj: f64, mem_used: f64, next: usize) -> f64 {
+        let mut headroom = (self.mem_cap() - mem_used).max(0.0);
+        let mut num = rank_sum;
+        for it in &self.items[next..] {
+            if it.mem <= headroom {
+                headroom -= it.mem;
+                num += it.rank;
+            } else {
+                if headroom > 0.0 {
+                    num += it.rank * headroom / it.mem;
+                }
+                break;
+            }
+        }
+        if rank_sum <= 0.0 {
+            // Empty prefix: bound by the best single-item throughput times
+            // the knapsack numerator over that item's rank (coarse but
+            // valid: T of any pack >= T of its cheapest member alone).
+            let t_min = self
+                .items[next..]
+                .iter()
+                .map(|it| {
+                    self.prob.cm.job_time(
+                        &Pack::new(vec![it.cfg.clone()]),
+                        self.prob.d,
+                        self.prob.mode,
+                        self.prob.budget,
+                    )
+                })
+                .fold(f64::INFINITY, f64::min);
+            return if t_min.is_finite() { num / t_min } else { f64::INFINITY };
+        }
+        num * obj / rank_sum // = num / T(S)
+    }
+
+    fn branch(&mut self, chosen: &mut Vec<usize>) {
+        self.branch_from(chosen, 0, 0.0, 0.0, 0.0);
+    }
+
+    /// `rank_sum`, `obj`, `mem_used` describe `chosen` (incremental state).
+    fn branch_from(
+        &mut self,
+        chosen: &mut Vec<usize>,
+        next: usize,
+        rank_sum: f64,
+        obj: f64,
+        mem_used: f64,
+    ) {
+        self.nodes += 1;
+        if self.nodes > self.prob.max_nodes {
+            self.truncated = true;
+            return;
+        }
+        if next >= self.items.len() {
+            return;
+        }
+        if self.upper_bound(rank_sum, obj, mem_used, next) <= self.best_val {
+            return; // prune: no completion can beat the incumbent
+        }
+        // Include item `next` if it fits (dive first: greedy incumbent).
+        let it_mem = self.items[next].mem;
+        let fits = if self.additive_mem {
+            mem_used + it_mem <= self.mem_cap() && self.bucket_ok(chosen, next)
+        } else {
+            chosen.push(next);
+            let ok = self.prob.cm.fits(&self.pack_of(chosen), self.prob.d);
+            chosen.pop();
+            ok
+        };
+        if fits {
+            chosen.push(next);
+            let pack = self.pack_of(chosen);
+            let v = self.prob.objective(&pack);
+            let r2 = rank_sum + self.items[next].rank;
+            if v > self.best_val {
+                self.best_val = v;
+                self.best_set = chosen.clone();
+            }
+            self.branch_from(chosen, next + 1, r2, v, mem_used + it_mem);
+            chosen.pop();
+        }
+        // Exclude item `next`.
+        self.branch_from(chosen, next + 1, rank_sum, obj, mem_used);
+    }
+
+    /// Static-bucket feasibility of `chosen + {next}` (live mode only).
+    fn bucket_ok(&self, chosen: &[usize], next: usize) -> bool {
+        let Some(buckets) = &self.prob.cm.buckets else { return true };
+        let n = chosen.len() + 1;
+        let r = chosen
+            .iter()
+            .chain(std::iter::once(&next))
+            .map(|&i| self.items[i].cfg.rank)
+            .max()
+            .unwrap_or(0);
+        let bs = chosen
+            .iter()
+            .chain(std::iter::once(&next))
+            .map(|&i| self.items[i].cfg.batch)
+            .max()
+            .unwrap_or(0);
+        buckets.iter().any(|&(bn, br, bb)| bn >= n && br >= r && bb >= bs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::geometry::geom;
+    use crate::config::pool::A100_40G;
+    use crate::config::SearchSpace;
+
+    fn cm() -> CostModel {
+        CostModel::new(geom("qwen2.5-7b").unwrap(), &A100_40G)
+    }
+
+    fn cfg(id: usize, r: usize, bs: usize) -> LoraConfig {
+        LoraConfig { id, lr: 1e-4, batch: bs, rank: r, alpha_ratio: 1.0, task: "t".into() }
+    }
+
+    #[test]
+    fn picks_everything_when_it_all_fits() {
+        let m = cm();
+        let b = TrainBudget::default();
+        let p = PackProblem::new(&m, 1, ExecMode::Packed, &b);
+        let configs: Vec<_> = (0..4).map(|i| cfg(i, 16, 1)).collect();
+        let sol = p.solve(&configs).unwrap();
+        assert_eq!(sol.pack.n(), 4, "4 rank-16 adapters easily fit an A100");
+        assert!(!sol.truncated);
+    }
+
+    #[test]
+    fn respects_memory_capacity() {
+        let m = cm();
+        let b = TrainBudget::default();
+        let p = PackProblem::new(&m, 1, ExecMode::Packed, &b);
+        let configs: Vec<_> = (0..64).map(|i| cfg(i, 128, 4)).collect();
+        let sol = p.solve(&configs).unwrap();
+        assert!(sol.pack.n() < 64, "64 rank-128 bs-4 adapters cannot fit");
+        assert!(m.fits(&sol.pack, 1), "returned pack must be feasible");
+        assert!(sol.pack.n() >= 1);
+    }
+
+    #[test]
+    fn returns_none_when_nothing_fits() {
+        let m = CostModel::new(geom("qwen2.5-32b").unwrap(), &A100_40G);
+        let b = TrainBudget::default();
+        let p = PackProblem::new(&m, 1, ExecMode::Packed, &b); // 32B needs 4 GPUs
+        assert!(p.solve(&[cfg(0, 8, 1)]).is_none());
+        let p4 = PackProblem::new(&m, 4, ExecMode::Packed, &b);
+        assert!(p4.solve(&[cfg(0, 8, 1)]).is_some());
+    }
+
+    #[test]
+    fn beats_or_matches_greedy_density_packing() {
+        let m = cm();
+        let b = TrainBudget::default();
+        let p = PackProblem::new(&m, 1, ExecMode::Packed, &b);
+        let configs = SearchSpace::default().grid("t");
+        let sol = p.solve(&configs).unwrap();
+        // Greedy-by-density baseline.
+        let sh = crate::costmodel::memory::Sharding::tp(1);
+        let mut sorted = configs.clone();
+        sorted.sort_by(|a, b2| {
+            let da = a.rank as f64 / m.memory.lora_bytes(a, sh);
+            let db = b2.rank as f64 / m.memory.lora_bytes(b2, sh);
+            db.total_cmp(&da)
+        });
+        let mut greedy = Pack::default();
+        for c in sorted {
+            let mut cand = greedy.clone();
+            cand.configs.push(c);
+            if m.fits(&cand, 1) {
+                greedy = cand;
+            }
+        }
+        let g = p.objective(&greedy);
+        assert!(
+            sol.throughput >= g * 0.999,
+            "B&B {:.3} must be >= greedy {:.3}",
+            sol.throughput,
+            g
+        );
+    }
+
+    #[test]
+    fn solution_improves_with_more_devices() {
+        let m = CostModel::new(geom("qwen2.5-14b").unwrap(), &A100_40G);
+        let b = TrainBudget::default();
+        let configs: Vec<_> = (0..32).map(|i| cfg(i, 64, 2)).collect();
+        let p2 = PackProblem::new(&m, 2, ExecMode::Packed, &b);
+        let p4 = PackProblem::new(&m, 4, ExecMode::Packed, &b);
+        let s2 = p2.solve(&configs).unwrap();
+        let s4 = p4.solve(&configs).unwrap();
+        assert!(s4.pack.n() >= s2.pack.n(), "more devices pack at least as many");
+    }
+}

@@ -1,0 +1,44 @@
+//! The PLoRA packing planner (§6): the per-job packing ILP (`ilp`), the
+//! DTM enumeration over parallelism degrees (`dtm`, Alg. 1), the job
+//! planner that emits the LoRA Job Queue (`job_planner`, Alg. 2 +
+//! Theorem 6.1), and the evaluation baselines (`baselines`: Min GPU,
+//! Max GPU, Sequential-PLoRA).
+
+pub mod baselines;
+pub mod dtm;
+pub mod ilp;
+pub mod job_planner;
+pub mod rebalance;
+
+pub use baselines::{max_gpu_plan, min_gpu_plan, sequential_plora_plan};
+pub use dtm::{Dtm, DtmStats};
+pub use ilp::{PackProblem, PackSolution};
+pub use job_planner::{JobPlanner, Plan};
+pub use rebalance::rebalance_round;
+
+use crate::costmodel::{ExecMode, Pack};
+
+/// One fine-tuning job produced by planning: a pack of LoRA configurations
+/// plus the parallelism degree and kernel mode it will execute with.
+#[derive(Debug, Clone)]
+pub struct PlannedJob {
+    pub id: usize,
+    pub pack: Pack,
+    /// Parallelism degree `d_j` (number of GPUs, power of two).
+    pub d: usize,
+    pub mode: ExecMode,
+}
+
+impl PlannedJob {
+    /// Short human-readable summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "job{} [n={} r̄={} d={} {:?}]",
+            self.id,
+            self.pack.n(),
+            self.pack.r_pad(),
+            self.d,
+            self.mode
+        )
+    }
+}

@@ -1,0 +1,158 @@
+//! Round load balancing: after DTM forms a round's jobs, durations can be
+//! badly skewed — the sequential per-job ILP greedily builds one maximal
+//! pack at a time, so the first job hoards the long (small-batch)
+//! configurations and finishes long after the rest, idling GPUs.
+//!
+//! This pass moves configurations between the round's jobs while the
+//! round's longest duration strictly decreases and memory stays feasible —
+//! the scheduling-side "load balancing for heterogeneous adapters" the
+//! paper applies inside its kernels (§5.2), applied at job granularity.
+
+use crate::costmodel::{CostModel, Pack, TrainBudget};
+use crate::planner::PlannedJob;
+
+/// Balance a round of concurrent jobs in place. Returns the number of
+/// configuration moves applied.
+pub fn rebalance_round(
+    cm: &CostModel,
+    budget: &TrainBudget,
+    jobs: &mut [PlannedJob],
+    max_moves: usize,
+) -> usize {
+    if jobs.len() < 2 {
+        return 0;
+    }
+    let dur = |j: &PlannedJob| cm.job_time(&j.pack, j.d, j.mode, budget);
+    let mut moves = 0;
+    while moves < max_moves {
+        // Current longest / shortest jobs.
+        let (hi, hi_t) = match jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| (i, dur(j)))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+        {
+            Some(x) => x,
+            None => return moves,
+        };
+        let mut improved = false;
+        // Try moving each config of the longest job to any shorter job,
+        // best destination first.
+        let mut dests: Vec<(usize, f64)> = jobs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != hi)
+            .map(|(i, j)| (i, dur(j)))
+            .collect();
+        dests.sort_by(|a, b| a.1.total_cmp(&b.1));
+        'outer: for ci in 0..jobs[hi].pack.n() {
+            let c = jobs[hi].pack.configs[ci].clone();
+            for &(di, dest_t) in &dests {
+                if dest_t >= hi_t {
+                    break;
+                }
+                // Candidate move.
+                let mut new_dest = jobs[di].pack.clone();
+                new_dest.configs.push(c.clone());
+                if !cm.fits(&new_dest, jobs[di].d) {
+                    continue;
+                }
+                let mut new_src = jobs[hi].pack.clone();
+                new_src.configs.remove(ci);
+                let t_src = if new_src.n() == 0 {
+                    0.0
+                } else {
+                    cm.job_time(&new_src, jobs[hi].d, jobs[hi].mode, budget)
+                };
+                let t_dst = cm.job_time(&new_dest, jobs[di].d, jobs[di].mode, budget);
+                if t_src.max(t_dst) < hi_t * (1.0 - 1e-6) {
+                    jobs[hi].pack = new_src;
+                    jobs[di].pack = new_dest;
+                    moves += 1;
+                    improved = true;
+                    break 'outer;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    // Drop jobs that were emptied by the moves.
+    moves
+}
+
+/// Remove jobs whose packs became empty after rebalancing.
+pub fn drop_empty(jobs: Vec<PlannedJob>) -> Vec<PlannedJob> {
+    jobs.into_iter().filter(|j| j.pack.n() > 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::geometry::geom;
+    use crate::config::pool::A100_40G;
+    use crate::config::LoraConfig;
+    use crate::costmodel::ExecMode;
+
+    fn cfg(id: usize, r: usize, bs: usize) -> LoraConfig {
+        LoraConfig { id, lr: 1e-4, batch: bs, rank: r, alpha_ratio: 1.0, task: "t".into() }
+    }
+
+    fn job(id: usize, configs: Vec<LoraConfig>) -> PlannedJob {
+        PlannedJob { id, pack: Pack::new(configs), d: 1, mode: ExecMode::Sequential }
+    }
+
+    #[test]
+    fn rebalance_reduces_round_makespan() {
+        let cm = CostModel::new(geom("qwen2.5-3b").unwrap(), &A100_40G);
+        let b = TrainBudget::default();
+        // Skewed round: job 0 hoards 12 long (bs=1) configs; job 1 has two
+        // short (bs=4) ones.
+        let mut jobs = vec![
+            job(0, (0..12).map(|i| cfg(i, 16, 1)).collect()),
+            job(1, vec![cfg(100, 16, 4), cfg(101, 16, 4)]),
+        ];
+        let t_before: f64 = jobs
+            .iter()
+            .map(|j| cm.job_time(&j.pack, j.d, j.mode, &b))
+            .fold(0.0, f64::max);
+        let moves = rebalance_round(&cm, &b, &mut jobs, 100);
+        assert!(moves > 0, "skewed round must trigger moves");
+        let t_after: f64 = jobs
+            .iter()
+            .map(|j| cm.job_time(&j.pack, j.d, j.mode, &b))
+            .fold(0.0, f64::max);
+        assert!(t_after < t_before * 0.8, "round T {t_before:.0} -> {t_after:.0}");
+        // No config lost or duplicated.
+        let mut ids: Vec<usize> =
+            jobs.iter().flat_map(|j| j.pack.configs.iter().map(|c| c.id)).collect();
+        ids.sort();
+        assert_eq!(ids.len(), 14);
+        ids.dedup();
+        assert_eq!(ids.len(), 14);
+        // All packs still feasible.
+        for j in &jobs {
+            assert!(cm.fits(&j.pack, j.d));
+        }
+    }
+
+    #[test]
+    fn balanced_round_is_left_alone() {
+        let cm = CostModel::new(geom("qwen2.5-3b").unwrap(), &A100_40G);
+        let b = TrainBudget::default();
+        let mut jobs = vec![
+            job(0, (0..4).map(|i| cfg(i, 16, 1)).collect()),
+            job(1, (4..8).map(|i| cfg(i, 16, 1)).collect()),
+        ];
+        assert_eq!(rebalance_round(&cm, &b, &mut jobs, 100), 0);
+    }
+
+    #[test]
+    fn single_job_round_noop() {
+        let cm = CostModel::new(geom("qwen2.5-3b").unwrap(), &A100_40G);
+        let b = TrainBudget::default();
+        let mut jobs = vec![job(0, vec![cfg(0, 8, 1)])];
+        assert_eq!(rebalance_round(&cm, &b, &mut jobs, 100), 0);
+    }
+}

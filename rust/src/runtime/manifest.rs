@@ -1,0 +1,350 @@
+//! `artifacts/manifest.json` — the contract between the build-time Python
+//! (aot.py) and the Rust runtime. Everything the coordinator knows about
+//! the AOT executables (names, argument order, shapes, bucket grid, token
+//! layout, pretrained-model metadata) comes from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+/// Shape+dtype of one executable argument or result.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.field("name")?.as_str().ok_or_else(|| anyhow!("spec name"))?.to_string(),
+            dtype: DType::parse(j.field("dtype")?.as_str().unwrap_or(""))?,
+            shape: j
+                .field("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("spec shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("shape dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Fused packed train step (lora/opt state in, updated state out).
+    Train,
+    /// Per-adapter eval (loss, accuracy).
+    Eval,
+    /// Standalone packed-LoRA forward kernel (Table 7/8 benches).
+    KernelFwd,
+    /// Standalone packed-LoRA backward kernel (4 grad cases fused).
+    KernelBwd,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "train" => ArtifactKind::Train,
+            "eval" => ArtifactKind::Eval,
+            "kernel_fwd" => ArtifactKind::KernelFwd,
+            "kernel_bwd" => ArtifactKind::KernelBwd,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// HLO text file, relative to the artifacts dir.
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (model/n/r/bs for train-eval; geom/d/k/r/m for
+    /// kernels) — typed accessors below.
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactInfo {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|j| j.as_usize())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|j| j.as_str())
+    }
+
+    pub fn input(&self, name: &str) -> Result<&TensorSpec> {
+        self.inputs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("{}: no input '{name}'", self.name))
+    }
+}
+
+/// Pretrained TinyLM metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub params: usize,
+    /// Weight container file, relative to the artifacts dir.
+    pub weights: String,
+}
+
+/// Token ids shared with the Python task generators.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenLayout {
+    pub pad: i32,
+    pub bos: i32,
+    pub sep: i32,
+    pub eos: i32,
+    pub alpha0: i32,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tokens: TokenLayout,
+    pub tasks: Vec<String>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e:?}", path.display()))?;
+
+        let tl = j.field("token_layout")?;
+        let tok = |k: &str| -> Result<i32> {
+            Ok(tl.field(k)?.as_f64().ok_or_else(|| anyhow!("token {k}"))? as i32)
+        };
+        let tokens = TokenLayout {
+            pad: tok("pad")?,
+            bos: tok("bos")?,
+            sep: tok("sep")?,
+            eos: tok("eos")?,
+            alpha0: tok("alpha0")?,
+        };
+
+        let tasks = j
+            .field("tasks")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("tasks"))?
+            .iter()
+            .filter_map(|t| t.as_str().map(|s| s.to_string()))
+            .collect();
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.field("models")?.as_obj().ok_or_else(|| anyhow!("models"))? {
+            let u = |k: &str| -> Result<usize> {
+                m.field(k)?.as_usize().ok_or_else(|| anyhow!("model {name}.{k}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    vocab: u("vocab")?,
+                    d_model: u("d_model")?,
+                    n_layers: u("n_layers")?,
+                    n_heads: u("n_heads")?,
+                    d_ff: u("d_ff")?,
+                    seq: u("seq")?,
+                    params: u("params")?,
+                    weights: m
+                        .field("weights")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("model {name}.weights"))?
+                        .to_string(),
+                },
+            );
+        }
+
+        let mut artifacts = vec![];
+        for a in j.field("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts"))? {
+            let obj = a.as_obj().ok_or_else(|| anyhow!("artifact entry"))?;
+            let get_str = |k: &str| -> Result<String> {
+                a.field(k)?
+                    .as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow!("artifact field {k}"))
+            };
+            let parse_specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                a.field(k)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("artifact {k}"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            let known = ["name", "kind", "path", "inputs", "outputs"];
+            let meta = obj
+                .iter()
+                .filter(|(k, _)| !known.contains(&k.as_str()))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            artifacts.push(ArtifactInfo {
+                name: get_str("name")?,
+                kind: ArtifactKind::parse(&get_str("kind")?)?,
+                path: get_str("path")?,
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                meta,
+            });
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), tokens, tasks, models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Artifacts of one kind for one model.
+    pub fn by_kind<'a>(&'a self, kind: ArtifactKind) -> impl Iterator<Item = &'a ArtifactInfo> {
+        self.artifacts.iter().filter(move |a| a.kind == kind)
+    }
+
+    /// The static-shape **bucket grid** for a model: the smallest available
+    /// `(n, r, bs)` train artifact that dominates the requested pack shape
+    /// (n' ≥ n, r' ≥ r, bs' ≥ bs), minimizing padding waste by total padded
+    /// element count `n'·r'·bs'`. Returns `None` if no bucket fits.
+    pub fn train_bucket(&self, model: &str, n: usize, r: usize, bs: usize) -> Option<&ArtifactInfo> {
+        self.by_kind(ArtifactKind::Train)
+            .filter(|a| a.meta_str("model") == Some(model))
+            .filter(|a| {
+                a.meta_usize("n").unwrap_or(0) >= n
+                    && a.meta_usize("r").unwrap_or(0) >= r
+                    && a.meta_usize("bs").unwrap_or(0) >= bs
+            })
+            .min_by_key(|a| {
+                a.meta_usize("n").unwrap_or(0)
+                    * a.meta_usize("r").unwrap_or(0)
+                    * a.meta_usize("bs").unwrap_or(0)
+            })
+    }
+
+    /// The eval artifact matching a train bucket's `(model, n, r, bs)`.
+    pub fn eval_for(&self, train: &ArtifactInfo) -> Result<&ArtifactInfo> {
+        self.by_kind(ArtifactKind::Eval)
+            .find(|a| {
+                ["model", "n", "r", "bs"].iter().all(|k| {
+                    a.meta.get(*k).map(|v| format!("{v:?}")) == train.meta.get(*k).map(|v| format!("{v:?}"))
+                })
+            })
+            .ok_or_else(|| anyhow!("no eval artifact for {}", train.name))
+    }
+
+    /// All `(n, r, bs)` train buckets available for `model` — the
+    /// static-shape grid the planner must respect in live mode
+    /// (`CostModel::buckets`).
+    pub fn train_buckets(&self, model: &str) -> Vec<(usize, usize, usize)> {
+        self.by_kind(ArtifactKind::Train)
+            .filter(|a| a.meta_str("model") == Some(model))
+            .filter_map(|a| {
+                Some((a.meta_usize("n")?, a.meta_usize("r")?, a.meta_usize("bs")?))
+            })
+            .collect()
+    }
+
+    /// Largest packed-adapter count available for a model's train buckets.
+    pub fn max_bucket_n(&self, model: &str) -> usize {
+        self.by_kind(ArtifactKind::Train)
+            .filter(|a| a.meta_str("model") == Some(model))
+            .filter_map(|a| a.meta_usize("n"))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn load() -> Option<Manifest> {
+        let d = manifest_dir();
+        d.join("manifest.json").exists().then(|| Manifest::load(&d).unwrap())
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = load() else { return };
+        assert!(m.models.contains_key("nano"));
+        assert!(m.tasks.iter().any(|t| t == "modadd"));
+        assert_eq!(m.tokens.bos, 1);
+        assert!(!m.artifacts.is_empty());
+    }
+
+    #[test]
+    fn train_bucket_selection_dominates_and_minimizes() {
+        let Some(m) = load() else { return };
+        // tiny grid has n in {1,2,4,8}, r in {8,32}, bs in {1,4}.
+        let b = m.train_bucket("tiny", 3, 8, 1).unwrap();
+        assert_eq!(b.meta_usize("n"), Some(4));
+        assert_eq!(b.meta_usize("r"), Some(8));
+        assert_eq!(b.meta_usize("bs"), Some(1));
+        // Exact hit.
+        let b = m.train_bucket("tiny", 8, 32, 4).unwrap();
+        assert_eq!(
+            (b.meta_usize("n"), b.meta_usize("r"), b.meta_usize("bs")),
+            (Some(8), Some(32), Some(4))
+        );
+        // Nothing dominates an oversized request.
+        assert!(m.train_bucket("tiny", 9, 8, 1).is_none());
+        assert!(m.train_bucket("tiny", 1, 256, 1).is_none());
+    }
+
+    #[test]
+    fn eval_artifact_pairs_with_train() {
+        let Some(m) = load() else { return };
+        let t = m.train_bucket("nano", 1, 8, 1).unwrap();
+        let e = m.eval_for(t).unwrap();
+        assert_eq!(e.kind, ArtifactKind::Eval);
+        assert_eq!(e.meta_usize("n"), t.meta_usize("n"));
+    }
+
+    #[test]
+    fn train_signature_shape_sanity() {
+        let Some(m) = load() else { return };
+        let t = m.train_bucket("tiny", 2, 8, 1).unwrap();
+        let tok = t.input("tokens").unwrap();
+        assert_eq!(tok.dtype, DType::I32);
+        let mi = m.model("tiny").unwrap();
+        assert_eq!(tok.shape, vec![2, 1, mi.seq]);
+        // outputs: 14 lora + 14 m + 14 v + t + per_loss
+        assert_eq!(t.outputs.len(), 44);
+    }
+}

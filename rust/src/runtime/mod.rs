@@ -1,0 +1,265 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust hot path. Python is build-time only — after `make artifacts` the
+//! coordinator talks exclusively to this module.
+//!
+//! Wiring (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! HLO **text** is the interchange format; jax ≥ 0.5 serialized protos are
+//! rejected by xla_extension 0.5.1 (64-bit instruction ids).
+
+pub mod manifest;
+pub mod state;
+pub mod tensor;
+pub mod tensor_file;
+
+pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec};
+pub use state::TrainState;
+pub use tensor::{DType, HostTensor, TensorData};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A compiled artifact bound to its manifest entry.
+///
+/// # Thread safety
+/// `xla::PjRtLoadedExecutable` holds raw pointers and is `!Send` by
+/// default, but the underlying PJRT C API object is thread-safe (XLA
+/// guarantees concurrent `Execute` calls); the engine executes jobs from
+/// worker threads, so we assert Send+Sync here.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: PjRtLoadedExecutable,
+    /// Wall time spent compiling (profiling/§Perf bookkeeping).
+    pub compile_secs: f64,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with host tensors; validates dtypes/shapes against the
+    /// manifest before crossing the FFI boundary (shape bugs surface as
+    /// Rust errors, not XLA aborts).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()
+            .with_context(|| format!("{}: building literals", self.info.name))?;
+        let outs = self.run_literals(&lits)?;
+        outs.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute with prebuilt literals, returning untupled output literals.
+    pub fn run_literals(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("{}: execute", self.info.name))?;
+        // Single replica; jax lowers with return_tuple=True so the one
+        // output buffer is a tuple literal — decompose it.
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("{}: fetch result", self.info.name))?;
+        let parts = lit.to_tuple().with_context(|| format!("{}: untuple", self.info.name))?;
+        if parts.len() != self.info.outputs.len() {
+            bail!(
+                "{}: manifest promises {} outputs, executable returned {}",
+                self.info.name,
+                self.info.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&self.info.inputs) {
+            if t.shape != spec.shape || t.dtype() != spec.dtype {
+                bail!(
+                    "{}: input '{}' expects {:?} {:?}, got {:?} {:?}",
+                    self.info.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.dtype(),
+                    t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The runtime: one PJRT CPU client + the manifest + a compile cache.
+/// Compilation happens lazily on first use and is shared across threads.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+// PjRtClient is a thread-safe C++ object behind raw pointers (see
+// `Executable` note).
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load the manifest and start the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("PjRtClient::cpu()")?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Default artifacts directory (crate-root `artifacts/`).
+    pub fn default_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.dir.join(&info.path);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        let compiled =
+            Arc::new(Executable { info, exe, compile_secs: t0.elapsed().as_secs_f64() });
+        let mut cache = self.cache.lock().unwrap();
+        // Benign race: if another thread compiled meanwhile, keep the first.
+        Ok(cache.entry(name.to_string()).or_insert(compiled).clone())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Read a model's pretrained base weights in `BASE_ORDER`
+    /// (the train/eval artifact argument order).
+    pub fn base_weights(&self, model: &str) -> Result<Vec<HostTensor>> {
+        let mi = self.manifest.model(model)?;
+        let path = self.manifest.dir.join(&mi.weights);
+        let mut by_name = tensor_file::read_tensors(&path)?;
+        BASE_ORDER
+            .iter()
+            .map(|k| {
+                by_name
+                    .remove(*k)
+                    .ok_or_else(|| anyhow::anyhow!("{}: missing base tensor '{k}'", mi.weights))
+            })
+            .collect()
+    }
+}
+
+/// Base-weight argument order — must match `model.py::BASE_ORDER`.
+pub const BASE_ORDER: [&str; 12] = [
+    "embed", "pos", "ln1", "ln2", "wq", "wk", "wv", "wo", "wup", "wgate", "wdown", "lnf",
+];
+
+/// LoRA tensor order — must match `model.py::LORA_ORDER`
+/// (sorted `{a,b}_{proj}` names).
+pub const LORA_ORDER: [&str; 14] = [
+    "a_down", "a_gate", "a_k", "a_o", "a_q", "a_up", "a_v", "b_down", "b_gate", "b_k", "b_o",
+    "b_q", "b_up", "b_v",
+];
+
+/// The seven LoRA-able projections (paper Appendix A).
+pub const PROJS: [&str; 7] = ["q", "k", "v", "o", "up", "gate", "down"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        dir.join("manifest.json").exists().then(|| Runtime::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn lora_order_is_sorted_ab_projections() {
+        let mut names: Vec<String> = PROJS
+            .iter()
+            .flat_map(|p| ["a", "b"].iter().map(move |t| format!("{t}_{p}")))
+            .collect();
+        names.sort();
+        assert_eq!(names, LORA_ORDER.to_vec());
+    }
+
+    #[test]
+    fn compiles_and_runs_kernel_artifact() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.executable("kfwd_attn_n1").unwrap();
+        let info = rt.manifest.artifact("kfwd_attn_n1").unwrap();
+        let (n, m, d, r, k) = (
+            1,
+            info.meta_usize("m").unwrap(),
+            info.meta_usize("d").unwrap(),
+            info.meta_usize("r").unwrap(),
+            info.meta_usize("k").unwrap(),
+        );
+        let x = HostTensor::f32(vec![n, m, d], vec![0.01; n * m * d]).unwrap();
+        let a = HostTensor::f32(vec![n, d, r], vec![0.02; n * d * r]).unwrap();
+        let b = HostTensor::f32(vec![n, r, k], vec![0.03; n * r * k]).unwrap();
+        let alpha = HostTensor::f32(vec![n], vec![2.0]).unwrap();
+        let out = exe.run(&[x, a, b, alpha]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![n, m, k]);
+        // y = alpha * x @ a @ b = 2 * (d * .01*.02) * (r * .03) per elem
+        let want = 2.0 * (d as f32 * 0.01 * 0.02) * (r as f32 * 0.03);
+        let got = out[0].as_f32().unwrap()[0];
+        assert!((got - want).abs() < 1e-4, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shapes() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.executable("kfwd_attn_n1").unwrap();
+        let bad = vec![HostTensor::scalar_f32(0.0); 4];
+        assert!(exe.run(&bad).is_err());
+        assert!(exe.run(&[]).is_err());
+    }
+
+    #[test]
+    fn compile_cache_hits() {
+        let Some(rt) = runtime() else { return };
+        let a = rt.executable("kfwd_attn_n1").unwrap();
+        let b = rt.executable("kfwd_attn_n1").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn base_weights_match_model_shapes() {
+        let Some(rt) = runtime() else { return };
+        let w = rt.base_weights("nano").unwrap();
+        let mi = rt.manifest.model("nano").unwrap();
+        assert_eq!(w.len(), 12);
+        assert_eq!(w[0].shape, vec![mi.vocab, mi.d_model]); // embed
+        assert_eq!(w[1].shape, vec![mi.seq, mi.d_model]); // pos
+    }
+}

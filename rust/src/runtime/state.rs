@@ -1,0 +1,270 @@
+//! On-host training state for one packed fine-tuning job: LoRA parameters,
+//! AdamW moments, and the step counter, in the exact argument order of the
+//! train/eval artifacts (`aot.py::train_signature`).
+//!
+//! Per-adapter heterogeneity enters through runtime *inputs*, not shapes:
+//! `scale` (α/r), `lr`, the rank mask (true rank ≤ padded bucket rank) and
+//! the loss mask (true batch ≤ padded bucket batch) — DESIGN.md §2.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ModelInfo;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{Executable, LORA_ORDER};
+use crate::util::rng::Rng;
+
+/// `(d_in, d_out)` of one LoRA-able projection.
+pub fn proj_dims(mi: &ModelInfo, p: &str) -> (usize, usize) {
+    let (d, f) = (mi.d_model, mi.d_ff);
+    match p {
+        "q" | "k" | "v" | "o" => (d, d),
+        "up" | "gate" => (d, f),
+        "down" => (f, d),
+        other => panic!("unknown projection '{other}'"),
+    }
+}
+
+/// Shape of LoRA tensor `name` (an `LORA_ORDER` entry) for a pack of `n`
+/// adapters at padded rank `r`.
+pub fn lora_shape(mi: &ModelInfo, name: &str, n: usize, r: usize) -> Vec<usize> {
+    let (kind, p) = name.split_once('_').expect("lora tensor name");
+    let (din, dout) = proj_dims(mi, p);
+    match kind {
+        "a" => vec![mi.n_layers, n, din, r],
+        "b" => vec![mi.n_layers, n, r, dout],
+        other => panic!("unknown lora tensor kind '{other}'"),
+    }
+}
+
+/// The mutable state of one packed job between steps.
+pub struct TrainState {
+    pub model: ModelInfo,
+    /// Packed adapter count (bucket `n`).
+    pub n: usize,
+    /// Padded rank (bucket `r`).
+    pub r: usize,
+    /// LoRA params in `LORA_ORDER`.
+    pub lora: Vec<HostTensor>,
+    /// AdamW first moments, same order.
+    pub m: Vec<HostTensor>,
+    /// AdamW second moments, same order.
+    pub v: Vec<HostTensor>,
+    /// Step counter (f32 scalar, as the artifact expects).
+    pub t: f32,
+}
+
+impl TrainState {
+    /// Fresh state: `A ~ N(0, 1/d_in)`, `B = 0` (standard LoRA init — the
+    /// delta starts at exactly zero), moments zeroed.
+    pub fn init(mi: &ModelInfo, n: usize, r: usize, seed: u64) -> TrainState {
+        let mut rng = Rng::new(seed);
+        let mut lora = Vec::with_capacity(LORA_ORDER.len());
+        for name in LORA_ORDER {
+            let shape = lora_shape(mi, name, n, r);
+            let count: usize = shape.iter().product();
+            let tensor = if name.starts_with("a_") {
+                let p = name.split_once('_').unwrap().1;
+                let din = proj_dims(mi, p).0 as f64;
+                let std = 1.0 / din.sqrt();
+                let data = (0..count).map(|_| (rng.normal() * std) as f32).collect();
+                HostTensor::f32(shape, data).unwrap()
+            } else {
+                HostTensor::f32(shape, vec![0.0; count]).unwrap()
+            };
+            lora.push(tensor);
+        }
+        let m = lora
+            .iter()
+            .map(|t| HostTensor::f32(t.shape.clone(), vec![0.0; t.len()]).unwrap())
+            .collect();
+        let v = lora
+            .iter()
+            .map(|t| HostTensor::f32(t.shape.clone(), vec![0.0; t.len()]).unwrap())
+            .collect();
+        TrainState { model: mi.clone(), n, r, lora, m, v, t: 0.0 }
+    }
+
+    /// Rank mask `(n, r_pad)`: adapter `i` keeps columns `< ranks[i]`.
+    pub fn rank_mask(&self, ranks: &[usize]) -> Result<HostTensor> {
+        if ranks.len() != self.n {
+            bail!("rank_mask: {} ranks for pack of {}", ranks.len(), self.n);
+        }
+        let mut data = vec![0.0f32; self.n * self.r];
+        for (i, &rk) in ranks.iter().enumerate() {
+            if rk > self.r {
+                bail!("rank_mask: adapter rank {rk} exceeds padded rank {}", self.r);
+            }
+            for c in 0..rk {
+                data[i * self.r + c] = 1.0;
+            }
+        }
+        HostTensor::f32(vec![self.n, self.r], data)
+    }
+
+    /// One training step. `base` is the frozen weight list (`BASE_ORDER`);
+    /// `tokens`/`targets` are `(n, bs, seq)` i32; `loss_mask` `(n, bs, seq)`
+    /// f32; `scale`/`lr` per-adapter `(n,)`. Returns per-adapter losses.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        exe: &Executable,
+        base: &[HostTensor],
+        tokens: HostTensor,
+        targets: HostTensor,
+        loss_mask: HostTensor,
+        scale: &[f32],
+        lr: &[f32],
+        rmask: &HostTensor,
+    ) -> Result<Vec<f32>> {
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(12 + 3 * 14 + 7);
+        inputs.extend_from_slice(base);
+        inputs.extend(self.lora.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(self.t));
+        inputs.push(tokens);
+        inputs.push(targets);
+        inputs.push(loss_mask);
+        inputs.push(HostTensor::f32(vec![self.n], scale.to_vec())?);
+        inputs.push(HostTensor::f32(vec![self.n], lr.to_vec())?);
+        inputs.push(rmask.clone());
+
+        let mut outs = exe.run(&inputs)?;
+        // Outputs: 14 lora, 14 m, 14 v, t, per_loss (train_output_names()).
+        if outs.len() != 3 * LORA_ORDER.len() + 2 {
+            bail!("train step returned {} outputs", outs.len());
+        }
+        let per = outs.pop().unwrap();
+        let t = outs.pop().unwrap();
+        self.t = t.as_f32()?[0];
+        let nl = LORA_ORDER.len();
+        self.v = outs.split_off(2 * nl);
+        self.m = outs.split_off(nl);
+        self.lora = outs;
+        Ok(per.as_f32()?.to_vec())
+    }
+
+    /// Per-adapter eval: returns `(loss, accuracy)` vectors.
+    pub fn eval(
+        &self,
+        exe: &Executable,
+        base: &[HostTensor],
+        tokens: HostTensor,
+        targets: HostTensor,
+        loss_mask: HostTensor,
+        scale: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(12 + 14 + 4);
+        inputs.extend_from_slice(base);
+        inputs.extend(self.lora.iter().cloned());
+        inputs.push(tokens);
+        inputs.push(targets);
+        inputs.push(loss_mask);
+        inputs.push(HostTensor::f32(vec![self.n], scale.to_vec())?);
+        let outs = exe.run(&inputs)?;
+        if outs.len() != 2 {
+            bail!("eval step returned {} outputs", outs.len());
+        }
+        Ok((outs[0].as_f32()?.to_vec(), outs[1].as_f32()?.to_vec()))
+    }
+
+    /// Extract adapter `slot`'s LoRA tensors at its true rank — the
+    /// checkpoint written to the Checkpoint Pool when a job completes (§4).
+    pub fn extract_adapter(&self, slot: usize, rank: usize) -> Result<Vec<(String, HostTensor)>> {
+        if slot >= self.n || rank > self.r {
+            bail!("extract_adapter: slot {slot}/{} rank {rank}/{}", self.n, self.r);
+        }
+        let mut out = vec![];
+        for (name, tensor) in LORA_ORDER.iter().zip(&self.lora) {
+            let (kind, _) = name.split_once('_').unwrap();
+            // Packed shape: a = (L, n, din, r_pad), b = (L, n, r_pad, dout).
+            let (l, n, d2, d3) =
+                (tensor.shape[0], tensor.shape[1], tensor.shape[2], tensor.shape[3]);
+            assert_eq!(n, self.n);
+            let src = tensor.as_f32()?;
+            let (rows, cols) = if kind == "a" { (d2, rank) } else { (rank, d3) };
+            let mut data = Vec::with_capacity(l * rows * cols);
+            for layer in 0..l {
+                let base_off = (layer * n + slot) * d2 * d3;
+                for i in 0..rows {
+                    let row = &src[base_off + i * d3..base_off + i * d3 + d3];
+                    data.extend_from_slice(&row[..cols]);
+                }
+            }
+            out.push((name.to_string(), HostTensor::f32(vec![l, rows, cols], data)?));
+        }
+        Ok(out)
+    }
+
+    /// Total f32 elements held (params + moments) — memory accounting.
+    pub fn elements(&self) -> usize {
+        3 * self.lora.iter().map(|t| t.len()).sum::<usize>() + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mi() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 16,
+            seq: 8,
+            params: 0,
+            weights: String::new(),
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_b_zero() {
+        let st = TrainState::init(&mi(), 3, 4, 7);
+        assert_eq!(st.lora.len(), 14);
+        // a_q: (L=2, n=3, d=8, r=4); b_q: (2, 3, 4, 8)
+        let aq = &st.lora[LORA_ORDER.iter().position(|x| *x == "a_q").unwrap()];
+        assert_eq!(aq.shape, vec![2, 3, 8, 4]);
+        let bq = &st.lora[LORA_ORDER.iter().position(|x| *x == "b_q").unwrap()];
+        assert_eq!(bq.shape, vec![2, 3, 4, 8]);
+        assert!(bq.as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(aq.as_f32().unwrap().iter().any(|&x| x != 0.0));
+        // moments zeroed
+        assert!(st.m.iter().all(|t| t.as_f32().unwrap().iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn rank_mask_marks_true_ranks() {
+        let st = TrainState::init(&mi(), 2, 4, 1);
+        let m = st.rank_mask(&[2, 4]).unwrap();
+        assert_eq!(m.as_f32().unwrap(), &[1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0]);
+        assert!(st.rank_mask(&[5, 1]).is_err());
+        assert!(st.rank_mask(&[1]).is_err());
+    }
+
+    #[test]
+    fn extract_adapter_slices_true_rank() {
+        let m = mi();
+        let mut st = TrainState::init(&m, 2, 4, 1);
+        // Fill a_q with a recognizable pattern: value = slot as f32.
+        let idx = LORA_ORDER.iter().position(|x| *x == "a_q").unwrap();
+        let t = &mut st.lora[idx];
+        let (l, n, d, r) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+        let buf = t.as_f32_mut().unwrap();
+        for layer in 0..l {
+            for slot in 0..n {
+                for i in 0..d * r {
+                    buf[(layer * n + slot) * d * r + i] = slot as f32;
+                }
+            }
+        }
+        let ckpt = st.extract_adapter(1, 2).unwrap();
+        let (name, aq) = &ckpt[idx];
+        assert_eq!(name, "a_q");
+        assert_eq!(aq.shape, vec![2, 8, 2]); // (L, din, true rank)
+        assert!(aq.as_f32().unwrap().iter().all(|&x| x == 1.0));
+        assert!(st.extract_adapter(5, 2).is_err());
+    }
+}

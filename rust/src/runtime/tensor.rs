@@ -1,0 +1,176 @@
+//! Host-side tensors and conversion to/from PJRT [`xla::Literal`]s.
+//!
+//! Only the two dtypes the artifacts use exist (f32, i32) — keeping the
+//! enum closed lets every call site match exhaustively.
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal};
+
+/// Element type of a host tensor (mirrors `python/compile/io_bin.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// Tensor payload.
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor with shape. The runtime moves these across the PJRT
+/// boundary; everything upstream (task generators, LoRA state) works on
+/// plain `Vec`s.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!("shape {shape:?} wants {want} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape, data: TensorData::F32(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<HostTensor> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!("shape {shape:?} wants {want} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape, data: TensorData::I32(data) })
+    }
+
+    /// All-zero tensor of the given dtype/shape.
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => TensorData::F32(vec![0.0; n]),
+            DType::I32 => TensorData::I32(vec![0; n]),
+        };
+        HostTensor { shape, data }
+    }
+
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: TensorData::F32(vec![x]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    /// Convert to an [`xla::Literal`] (rank-0 scalars included).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => Literal::vec1(v),
+            TensorData::I32(v) => Literal::vec1(v),
+        };
+        lit.reshape(&dims).with_context(|| format!("reshape to {:?}", self.shape))
+    }
+
+    /// Read back from an [`xla::Literal`].
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostTensor { shape: dims, data: TensorData::F32(lit.to_vec()?) }),
+            ElementType::S32 => Ok(HostTensor { shape: dims, data: TensorData::I32(lit.to_vec()?) }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 2]);
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_round_trip_i32_and_scalar() {
+        let t = HostTensor::i32(vec![3], vec![7, -1, 5]).unwrap();
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[7, -1, 5]);
+
+        let s = HostTensor::scalar_f32(2.5);
+        let back = HostTensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert!(back.shape.is_empty());
+        assert_eq!(back.as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    fn zeros_dtypes() {
+        let z = HostTensor::zeros(DType::I32, vec![2, 2]);
+        assert_eq!(z.as_i32().unwrap(), &[0; 4]);
+        assert_eq!(z.dtype(), DType::I32);
+    }
+}

@@ -1,0 +1,182 @@
+//! Reader for the `PLORAT01` tensor container (see
+//! `python/compile/io_bin.py` — the two sides must stay in lock-step).
+//!
+//! Layout: `b"PLORAT01"`, `count u32le`, then per tensor:
+//! `name_len u32le, name, dtype u8 (0=f32 1=i32), ndim u8, dims u32le*,
+//! raw LE data`.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{HostTensor, TensorData};
+
+const MAGIC: &[u8; 8] = b"PLORAT01";
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+/// Read every tensor in the container, keyed by name.
+pub fn read_tensors(path: &Path) -> Result<BTreeMap<String, HostTensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    let mut r: &[u8] = &bytes;
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {magic:?}", path.display());
+    }
+    let count = read_u32(&mut r)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; nlen];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        let dt = read_u8(&mut r)?;
+        let ndim = read_u8(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        r.read_exact(&mut raw)
+            .with_context(|| format!("{name}: truncated data ({n} elems)"))?;
+        let data = match dt {
+            0 => TensorData::F32(
+                raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+            ),
+            1 => TensorData::I32(
+                raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+            ),
+            other => bail!("{name}: unsupported dtype tag {other}"),
+        };
+        out.insert(name, HostTensor { shape: dims, data });
+    }
+    Ok(out)
+}
+
+/// Write tensors in the `PLORAT01` container format (checkpoint pool;
+/// readable back by both this module and `io_bin.py`).
+pub fn write_tensors(path: &Path, tensors: &[(String, HostTensor)]) -> Result<()> {
+    let mut buf: Vec<u8> = vec![];
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        let tag = match t.data {
+            TensorData::F32(_) => 0u8,
+            TensorData::I32(_) => 1u8,
+        };
+        buf.push(tag);
+        buf.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, buf).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn write_read_round_trip() {
+        let dir = std::env::temp_dir().join("plora_test_tf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.bin");
+        let tensors = vec![
+            ("a".to_string(), HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap()),
+            ("b".to_string(), HostTensor::i32(vec![3], vec![-1, 0, 9]).unwrap()),
+        ];
+        write_tensors(&p, &tensors).unwrap();
+        let back = read_tensors(&p).unwrap();
+        assert_eq!(back["a"].as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back["a"].shape, vec![2, 2]);
+        assert_eq!(back["b"].as_i32().unwrap(), &[-1, 0, 9]);
+    }
+
+    fn write_container(tensors: &[(&str, u8, Vec<u32>, Vec<u8>)]) -> Vec<u8> {
+        let mut f = vec![];
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, dt, dims, data) in tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            f.write_all(&[*dt, dims.len() as u8]).unwrap();
+            for d in dims {
+                f.write_all(&d.to_le_bytes()).unwrap();
+            }
+            f.write_all(data).unwrap();
+        }
+        f
+    }
+
+    #[test]
+    fn parses_hand_built_container() {
+        let payload: Vec<u8> = [1.5f32, -2.0].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let ints: Vec<u8> = [3i32].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let bytes = write_container(&[
+            ("w", 0, vec![2], payload),
+            ("idx", 1, vec![1], ints),
+        ]);
+        let dir = std::env::temp_dir().join("plora_test_tf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        std::fs::write(&p, bytes).unwrap();
+        let ts = read_tensors(&p).unwrap();
+        assert_eq!(ts["w"].as_f32().unwrap(), &[1.5, -2.0]);
+        assert_eq!(ts["idx"].as_i32().unwrap(), &[3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("plora_test_tf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC\x00\x00\x00\x00").unwrap();
+        assert!(read_tensors(&p).is_err());
+    }
+
+    #[test]
+    fn reads_real_pretrained_weights_if_present() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights_nano.bin");
+        if !p.exists() {
+            return; // artifacts not built yet
+        }
+        let ts = read_tensors(&p).unwrap();
+        // BASE_ORDER has 12 tensors (model.py).
+        assert_eq!(ts.len(), 12);
+        assert_eq!(ts["embed"].shape, vec![256, 64]);
+        assert!(ts["wq"].shape.len() == 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Live fine-tuning: synthetic task generators (the Rust twin of
+//! `python/compile/tasks.py`) and the packed-job train driver that replays
+//! the AOT train/eval artifacts via PJRT.
+
+pub mod driver;
+pub mod tasks;
+
+pub use driver::{run_pack, run_pack_full, AdapterReport, JobReport, TrainOptions};
+pub use tasks::{packed_batch, PackedBatch, Sample, TASKS};

@@ -1,0 +1,269 @@
+//! Synthetic downstream tasks — the Rust twin of
+//! `python/compile/tasks.py` (keep the two in lock-step; the shared token
+//! layout is recorded in `artifacts/manifest.json`).
+//!
+//! The paper evaluates on GSM8K / mrpc / cola / wnli; this environment has
+//! no model/data downloads (repro band 0/5), so four synthetic seq2seq
+//! skills play their role (DESIGN.md §3): `modadd` (math reasoning),
+//! `copy` (language understanding), `parity` (logic), `needle` (lookup).
+//! Each sample is `(tokens, targets, loss_mask)` of fixed length `seq`,
+//! with the mask set exactly on answer positions.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::TokenLayout;
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// The four tasks, in manifest order.
+pub const TASKS: [&str; 4] = ["modadd", "copy", "parity", "needle"];
+
+/// One generated sample.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+/// Build `(tokens, targets, mask)` from a full sequence + answer span
+/// `[lo, hi)` in *full-sequence* coordinates (tasks.py `_finalize`).
+fn finalize(tl: &TokenLayout, seq: usize, full_seq: &[i32], lo: usize, hi: usize) -> Sample {
+    let mut full = vec![tl.pad; seq + 1];
+    let l = full_seq.len().min(seq + 1);
+    full[..l].copy_from_slice(&full_seq[..l]);
+    let tokens = full[..seq].to_vec();
+    let targets = full[1..].to_vec();
+    let mut mask = vec![0.0f32; seq];
+    let lo = lo.saturating_sub(1);
+    let hi = hi.saturating_sub(1).min(seq);
+    for m in mask.iter_mut().take(hi).skip(lo) {
+        *m = 1.0;
+    }
+    Sample { tokens, targets, mask }
+}
+
+/// `a + b = c (mod P)` — mathematical reasoning (gsm8k stand-in).
+pub fn gen_modadd(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Sample {
+    let p = (vocab as i64 - tl.alpha0 as i64).min(97) as u64;
+    let a = rng.below(p) as i32;
+    let b = rng.below(p) as i32;
+    let c = (a + b) % p as i32;
+    let s = [tl.bos, tl.alpha0 + a, tl.alpha0 + b, tl.sep, tl.alpha0 + c, tl.eos];
+    finalize(tl, seq, &s, 4, 5)
+}
+
+/// Copy a random string after SEP — language understanding (mrpc stand-in).
+pub fn gen_copy(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Sample {
+    let alpha = (vocab as i64 - tl.alpha0 as i64).min(64) as u64;
+    let ln = (seq - 3) / 2;
+    let payload: Vec<i32> = (0..ln).map(|_| rng.below(alpha) as i32).collect();
+    let mut s = vec![tl.bos];
+    s.extend(payload.iter().map(|&t| tl.alpha0 + t));
+    s.push(tl.sep);
+    s.extend(payload.iter().map(|&t| tl.alpha0 + t));
+    s.push(tl.eos);
+    finalize(tl, seq, &s, ln + 2, 2 * ln + 2)
+}
+
+/// Parity of a bit string — logic reasoning (wnli stand-in).
+pub fn gen_parity(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Sample {
+    let _ = vocab;
+    let ln = seq.saturating_sub(4).max(1);
+    let bits: Vec<i32> = (0..ln).map(|_| rng.below(2) as i32).collect();
+    let ans: i32 = bits.iter().sum::<i32>() % 2;
+    let mut s = vec![tl.bos];
+    s.extend(bits.iter().map(|&b| tl.alpha0 + b));
+    s.extend([tl.sep, tl.alpha0 + ans, tl.eos]);
+    finalize(tl, seq, &s, ln + 2, ln + 3)
+}
+
+/// Key-value retrieval — commonsense/lookup (cola stand-in).
+pub fn gen_needle(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Sample {
+    let nk = ((seq - 5) / 2).min(8);
+    let key_alpha = ((vocab as i64 - tl.alpha0 as i64) / 2).min(32) as usize;
+    let val_base = tl.alpha0 + key_alpha as i32;
+    let mut keys: Vec<i32> = (0..key_alpha as i32).collect();
+    rng.shuffle(&mut keys);
+    keys.truncate(nk);
+    let vals: Vec<i32> = (0..nk).map(|_| rng.below(key_alpha as u64) as i32).collect();
+    let qi = rng.usize_below(nk);
+    let mut s = vec![tl.bos];
+    for (k, v) in keys.iter().zip(&vals) {
+        s.extend([tl.alpha0 + k, val_base + v]);
+    }
+    s.extend([tl.sep, tl.alpha0 + keys[qi], tl.sep, val_base + vals[qi], tl.eos]);
+    finalize(tl, seq, &s, 2 * nk + 4, 2 * nk + 5)
+}
+
+/// Generate one sample of `task`.
+pub fn gen(task: &str, tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Result<Sample> {
+    Ok(match task {
+        "modadd" => gen_modadd(tl, rng, seq, vocab),
+        "copy" => gen_copy(tl, rng, seq, vocab),
+        "parity" => gen_parity(tl, rng, seq, vocab),
+        "needle" => gen_needle(tl, rng, seq, vocab),
+        other => bail!("unknown task '{other}'"),
+    })
+}
+
+/// A packed batch for `n` adapters: `(n, bs, seq)` tensors ready for the
+/// train/eval artifacts. Adapter `i` draws `real_bs[i] ≤ bs` samples of its
+/// own task; padding rows stay all-zero with zero loss mask
+/// (heterogeneous batch sizes inside a pack, DESIGN.md §2).
+pub struct PackedBatch {
+    pub tokens: HostTensor,
+    pub targets: HostTensor,
+    pub mask: HostTensor,
+}
+
+pub fn packed_batch(
+    tasks: &[&str],
+    tl: &TokenLayout,
+    rng: &mut Rng,
+    bs: usize,
+    seq: usize,
+    vocab: usize,
+    real_bs: Option<&[usize]>,
+) -> Result<PackedBatch> {
+    let n = tasks.len();
+    let mut tokens = vec![0i32; n * bs * seq];
+    let mut targets = vec![0i32; n * bs * seq];
+    let mut mask = vec![0.0f32; n * bs * seq];
+    for (i, task) in tasks.iter().enumerate() {
+        let rb = real_bs.map(|r| r[i]).unwrap_or(bs);
+        if rb > bs {
+            bail!("adapter {i}: real batch {rb} exceeds bucket batch {bs}");
+        }
+        for b in 0..rb {
+            let s = gen(task, tl, rng, seq, vocab)?;
+            let off = (i * bs + b) * seq;
+            tokens[off..off + seq].copy_from_slice(&s.tokens);
+            targets[off..off + seq].copy_from_slice(&s.targets);
+            mask[off..off + seq].copy_from_slice(&s.mask);
+        }
+    }
+    Ok(PackedBatch {
+        tokens: HostTensor::i32(vec![n, bs, seq], tokens)?,
+        targets: HostTensor::i32(vec![n, bs, seq], targets)?,
+        mask: HostTensor::f32(vec![n, bs, seq], mask)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl() -> TokenLayout {
+        TokenLayout { pad: 0, bos: 1, sep: 2, eos: 3, alpha0: 8 }
+    }
+
+    fn check_sample(s: &Sample, seq: usize, vocab: usize) {
+        assert_eq!(s.tokens.len(), seq);
+        assert_eq!(s.targets.len(), seq);
+        assert_eq!(s.mask.len(), seq);
+        assert!(s.tokens.iter().all(|&t| (0..vocab as i32).contains(&t)));
+        assert!(s.targets.iter().all(|&t| (0..vocab as i32).contains(&t)));
+        let m: f32 = s.mask.iter().sum();
+        assert!(m >= 1.0, "answer span must be maskable");
+        // targets are the one-step shift of tokens
+        for i in 0..seq - 1 {
+            assert_eq!(s.targets[i], s.tokens[i + 1]);
+        }
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_samples() {
+        let tl = tl();
+        let mut rng = Rng::new(3);
+        for task in TASKS {
+            for _ in 0..50 {
+                let s = gen(task, &tl, &mut rng, 32, 256).unwrap();
+                check_sample(&s, 32, 256);
+            }
+        }
+    }
+
+    #[test]
+    fn modadd_answer_is_correct_mod_sum() {
+        let tl = tl();
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let s = gen_modadd(&tl, &mut rng, 32, 256).unwrap_sample();
+            let (a, b) = (s.tokens[1] - tl.alpha0, s.tokens[2] - tl.alpha0);
+            // answer token is at full[4] = tokens[4]
+            assert_eq!(s.tokens[4] - tl.alpha0, (a + b) % 97);
+            // masked position predicts it: mask[3] == 1, targets[3] == answer
+            assert_eq!(s.mask[3], 1.0);
+            assert_eq!(s.targets[3], s.tokens[4]);
+        }
+    }
+
+    // gen_modadd returns Sample directly; tiny shim so the test above reads
+    // uniformly with fallible `gen`.
+    trait UnwrapSample {
+        fn unwrap_sample(self) -> Sample;
+    }
+    impl UnwrapSample for Sample {
+        fn unwrap_sample(self) -> Sample {
+            self
+        }
+    }
+
+    #[test]
+    fn parity_answer_matches_bit_sum() {
+        let tl = tl();
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let s = gen_parity(&tl, &mut rng, 16, 256);
+            let ln = 12;
+            let bits: i32 = s.tokens[1..1 + ln].iter().map(|&b| b - tl.alpha0).sum();
+            assert_eq!(s.tokens[ln + 2] - tl.alpha0, bits % 2);
+        }
+    }
+
+    #[test]
+    fn needle_answer_is_queried_value() {
+        let tl = tl();
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let s = gen_needle(&tl, &mut rng, 32, 256);
+            let nk = 8.min((32 - 5) / 2);
+            let key_alpha = ((256 - 8) / 2).min(32);
+            let val_base = tl.alpha0 + key_alpha;
+            // Find the queried key (position 2nk+2) among the pairs.
+            let query = s.tokens[2 * nk + 2];
+            let answer = s.tokens[2 * nk + 4];
+            let mut found = false;
+            for pair in 0..nk {
+                if s.tokens[1 + 2 * pair] == query {
+                    assert_eq!(s.tokens[2 + 2 * pair], answer);
+                    found = true;
+                }
+            }
+            assert!(found, "query key must appear among pairs");
+            assert!(answer >= val_base);
+        }
+    }
+
+    #[test]
+    fn packed_batch_pads_heterogeneous_batches() {
+        let tl = tl();
+        let mut rng = Rng::new(13);
+        let pb =
+            packed_batch(&["modadd", "copy"], &tl, &mut rng, 4, 32, 256, Some(&[1, 4])).unwrap();
+        assert_eq!(pb.tokens.shape, vec![2, 4, 32]);
+        let mask = pb.mask.as_f32().unwrap();
+        // Adapter 0 rows 1..4 are padding: zero mask.
+        let row = |i: usize, b: usize| &mask[(i * 4 + b) * 32..(i * 4 + b + 1) * 32];
+        assert!(row(0, 0).iter().sum::<f32>() > 0.0);
+        for b in 1..4 {
+            assert_eq!(row(0, b).iter().sum::<f32>(), 0.0);
+        }
+        for b in 0..4 {
+            assert!(row(1, b).iter().sum::<f32>() > 0.0);
+        }
+        // Oversized real batch is rejected.
+        assert!(packed_batch(&["modadd"], &tl, &mut rng, 2, 32, 256, Some(&[3])).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser (no clap in the offline crate set).
+//!
+//! Grammar: `plora <subcommand> [--flag] [--key value] [positional...]`.
+//! Every flag lookup is typed and records the flag for `--help` synthesis.
+
+use std::collections::BTreeMap;
+
+/// Flags that never take a value, so `--verbose out.json` leaves `out.json`
+/// positional. Space-separated `--key value` is otherwise ambiguous;
+/// `--key=value` always works regardless of this list.
+const KNOWN_BOOLS: &[&str] = &[
+    "help", "verbose", "quiet", "json", "force", "a10", "qlora", "live",
+    "sim", "packed", "sequential", "markdown", "list", "fast",
+];
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit list (testable) — `argv[0]` must be dropped.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args {
+            subcommand: None,
+            positional: vec![],
+            flags: BTreeMap::new(),
+            bools: vec![],
+        };
+        let mut items: Vec<String> = it.into_iter().collect();
+        items.reverse();
+        while let Some(a) = items.pop() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if KNOWN_BOOLS.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else if items.last().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = items.pop().unwrap();
+                    out.flags.entry(name.to_string()).or_default().push(v);
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list flag: `--sizes 1,2,8`.
+    pub fn list_usize(&self, name: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| anyhow::anyhow!("--{name}: bad item '{s}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = mk("plan --gpus 8 --model tiny --verbose file.json");
+        assert_eq!(a.subcommand.as_deref(), Some("plan"));
+        assert_eq!(a.get("gpus"), Some("8"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.json"]);
+    }
+
+    #[test]
+    fn eq_form_and_typed() {
+        let a = mk("run --steps=200 --lr 0.5");
+        assert_eq!(a.usize("steps", 0).unwrap(), 200);
+        assert!((a.f64("lr", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = mk("bench --ns 1,2,8,32");
+        assert_eq!(a.list_usize("ns", &[]).unwrap(), vec![1, 2, 8, 32]);
+        assert_eq!(a.list_usize("other", &[3]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn bool_flag_before_positional_consumes_nothing_when_next_is_flag() {
+        let a = mk("run --fast --steps 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize("steps", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = mk("run --steps abc");
+        assert!(a.usize("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON, CLI parsing, deterministic RNG, a thread pool, timing statistics,
+//! and a mini property-testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

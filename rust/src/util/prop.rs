@@ -1,0 +1,185 @@
+//! Mini property-testing harness (no proptest in the offline crate set).
+//!
+//! `check(cases, gen, prop)` draws `cases` random inputs, runs the property,
+//! and on failure greedily shrinks using the input's `Shrink` implementation
+//! before panicking with the minimal counterexample. Coordinator invariants
+//! (planner feasibility, queue ordering, memory accounting) use this.
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+pub trait Shrink: Sized + Clone {
+    /// Candidate strictly-smaller inputs (empty when minimal).
+    fn shrink(&self) -> Vec<Self> {
+        vec![]
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if self.abs() > 1e-9 {
+            vec![self / 2.0, 0.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if self.is_empty() {
+            return out;
+        }
+        // remove halves, remove single elements, shrink single elements
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..self.len() {
+                for s in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` on `cases` random inputs from `gen`; shrink on failure.
+pub fn check<T, G, P>(cases: usize, seed: u64, mut gen: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  input: {min_input:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink + Debug, P: Fn(&T) -> Result<(), String>>(
+    mut input: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    let mut budget = 500;
+    'outer: while budget > 0 {
+        for cand in input.shrink() {
+            budget -= 1;
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    (input, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(200, 1, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(200, 2, |r| r.below(100), |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinks_to_small_counterexample() {
+        // Property: all vectors have length < 3. Shrinker should find a
+        // counterexample of exactly length 3.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                50,
+                3,
+                |r| (0..r.usize_below(20)).map(|_| r.below(5)).collect::<Vec<u64>>(),
+                |v| {
+                    if v.len() < 3 {
+                        Ok(())
+                    } else {
+                        Err("too long".into())
+                    }
+                },
+            );
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        // The minimal failing vector has exactly 3 elements.
+        assert!(msg.contains("input: ["), "{msg}");
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (4usize, 2u64);
+        let shrunk = t.shrink();
+        assert!(shrunk.iter().any(|(a, _)| *a < 4));
+        assert!(shrunk.iter().any(|(_, b)| *b < 2));
+    }
+}

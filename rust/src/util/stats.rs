@@ -1,0 +1,130 @@
+//! Timing statistics for the bench harness and engine metrics.
+
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Summarize a sample (seconds, or any unit). Percentiles by nearest-rank.
+pub fn summarize(samples: &[f64]) -> Summary {
+    if samples.is_empty() {
+        return Summary::default();
+    }
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let mean = v.iter().sum::<f64>() / n as f64;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let pct = |p: f64| v[(((n as f64) * p).ceil() as usize).clamp(1, n) - 1];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: v[0],
+        p50: pct(0.50),
+        p90: pct(0.90),
+        p99: pct(0.99),
+        max: v[n - 1],
+    }
+}
+
+/// Online mean/variance (Welford) — allocation-free for the hot loop.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [0.3, 1.7, 2.9, -4.0, 8.1, 0.0];
+        let mut o = Online::default();
+        for &x in &xs {
+            o.push(x);
+        }
+        let s = summarize(&xs);
+        assert!((o.mean() - s.mean).abs() < 1e-12);
+        assert_eq!(o.min, s.min);
+        assert_eq!(o.max, s.max);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-5).ends_with("µs"));
+        assert!(fmt_secs(2e-2).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(400.0).ends_with("min"));
+    }
+}

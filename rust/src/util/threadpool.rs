@@ -1,0 +1,119 @@
+//! Minimal worker pool over std threads + mpsc (no tokio offline).
+//!
+//! The execution engine uses one logical worker per fine-tuning job slot.
+//! Jobs are boxed closures; `join` drains outstanding work. This is
+//! deliberately simple — the engine's concurrency unit is a whole
+//! fine-tuning job (seconds+), so per-task overhead is irrelevant.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Task>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let inflight = Arc::clone(&inflight);
+                thread::Builder::new()
+                    .name(format!("plora-worker-{i}"))
+                    .spawn(move || loop {
+                        let task = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(t) => {
+                                t();
+                                inflight.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, inflight }
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool alive");
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Busy-wait (with sleep) until all submitted tasks completed.
+    pub fn join(&self) {
+        while self.inflight() > 0 {
+            thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers exit on recv error
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn join_waits_for_slow_tasks() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicU64::new(0));
+        for _ in 0..4 {
+            let d = Arc::clone(&done);
+            pool.spawn(move || {
+                thread::sleep(std::time::Duration::from_millis(20));
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.spawn(|| {});
+        pool.join();
+        drop(pool); // must not hang
+    }
+}

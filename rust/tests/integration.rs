@@ -1,0 +1,189 @@
+//! Integration tests across modules: planner → engine → runtime → train →
+//! checkpoint pool, and planner → simulator consistency. These exercise the
+//! real PJRT path on the `nano` TinyLM (skipped if artifacts are missing).
+
+use std::sync::Arc;
+
+use plora::cluster::ResourceMonitor;
+use plora::config::{geometry, pool, LoraConfig, SearchSpace};
+use plora::costmodel::{CostModel, TrainBudget};
+use plora::engine::{CheckpointPool, Engine};
+use plora::planner::{min_gpu_plan, JobPlanner};
+use plora::runtime::Runtime;
+use plora::sim::{SimOptions, Simulator};
+use plora::train::{run_pack_full, TrainOptions};
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = Runtime::default_dir();
+    dir.join("manifest.json").exists().then(|| Arc::new(Runtime::load(&dir).unwrap()))
+}
+
+fn cfg(id: usize, task: &str, rank: usize, bs: usize) -> LoraConfig {
+    LoraConfig { id, lr: 2e-3, batch: bs, rank, alpha_ratio: 1.0, task: task.into() }
+}
+
+/// Full pipeline: plan a small space with the PLoRA planner against the
+/// live profile, execute the queue on the engine (concurrent PJRT jobs),
+/// save checkpoints, reload one, and check invariants along the way.
+#[test]
+fn plan_execute_checkpoint_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let mi = rt.manifest.model("nano").unwrap().clone();
+    let geom = geometry::tiny_geom("nano", mi.n_layers, mi.d_model, mi.d_ff, mi.n_heads, mi.vocab, mi.seq);
+    let mut cm = CostModel::new(&geom, &pool::CPU_SIM);
+    cm.charge_padding = true;
+    cm.buckets = Some(rt.manifest.train_buckets("nano"));
+
+    let tasks = ["modadd", "copy", "parity", "needle"];
+    let configs: Vec<LoraConfig> =
+        (0..6).map(|i| cfg(i, tasks[i % 4], 8, 1 + (i % 2))).collect();
+
+    let mut planner = JobPlanner::new(cm, 2);
+    planner.budget = TrainBudget { dataset: 8, epochs: 1 };
+    let plan = planner.plan(&configs).unwrap();
+    assert_eq!(plan.total_configs(), 6);
+
+    let ckpt_dir = std::env::temp_dir().join("plora_it_ckpts");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let mut engine = Engine::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 2));
+    engine.options.budget = planner.budget;
+    engine.options.eval_batches = 1;
+    engine.options.log_every = 0;
+    engine.checkpoints = Some(CheckpointPool::new(&ckpt_dir, rt.clone()).unwrap());
+
+    let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+    let report = engine.run("nano", &queue).unwrap();
+    assert_eq!(report.total_adapters(), 6);
+    assert!(report.makespan > 0.0);
+
+    // All six adapters checkpointed, tensors reload at true rank.
+    let pool_ref = engine.checkpoints.as_ref().unwrap();
+    assert_eq!(pool_ref.list("nano"), vec![0, 1, 2, 3, 4, 5]);
+    let t = pool_ref.load("nano", 3).unwrap();
+    assert_eq!(t.len(), 14);
+    let (name, aq) = t.iter().find(|(n, _)| n == "a_q").unwrap();
+    assert_eq!(name, "a_q");
+    assert_eq!(aq.shape, vec![mi.n_layers, mi.d_model, 8]);
+    let meta = pool_ref.load_meta("nano", 3).unwrap();
+    assert_eq!(meta.field("task").unwrap().as_str().unwrap(), tasks[3]);
+}
+
+/// A reloaded checkpoint reproduces the packed state's slice exactly.
+#[test]
+fn checkpoint_tensors_match_state_slices() {
+    let Some(rt) = runtime() else { return };
+    let configs = vec![cfg(0, "modadd", 8, 1), cfg(1, "needle", 8, 1)];
+    let opts = TrainOptions {
+        budget: TrainBudget { dataset: 4, epochs: 1 },
+        eval_batches: 1,
+        seed: 5,
+        log_every: 0,
+    };
+    let (_, state) = run_pack_full(&rt, "nano", &configs, &opts).unwrap();
+    let dir = std::env::temp_dir().join("plora_it_slice");
+    let _ = std::fs::remove_dir_all(&dir);
+    let pool_ = CheckpointPool::new(&dir, rt.clone()).unwrap();
+    pool_.save_state("nano", &state, &[(1, 1, 8)]).unwrap();
+    let loaded = pool_.load("nano", 1).unwrap();
+    let direct = state.extract_adapter(1, 8).unwrap();
+    for ((ln, lt), (dn, dt)) in loaded.iter().zip(&direct) {
+        assert_eq!(ln, dn);
+        assert_eq!(lt.shape, dt.shape);
+        assert_eq!(lt.as_f32().unwrap(), dt.as_f32().unwrap());
+    }
+}
+
+/// Determinism: the same seed reproduces the same training trajectory.
+#[test]
+fn training_is_deterministic_per_seed() {
+    let Some(rt) = runtime() else { return };
+    let configs = vec![cfg(0, "parity", 8, 1)];
+    let opts = TrainOptions {
+        budget: TrainBudget { dataset: 6, epochs: 1 },
+        eval_batches: 1,
+        seed: 99,
+        log_every: 1,
+    };
+    let a = plora::train::run_pack(&rt, "nano", &configs, &opts).unwrap();
+    let b = plora::train::run_pack(&rt, "nano", &configs, &opts).unwrap();
+    assert_eq!(a.adapters[0].final_loss, b.adapters[0].final_loss);
+    assert_eq!(a.adapters[0].eval_acc, b.adapters[0].eval_acc);
+    let mut opts2 = opts.clone();
+    opts2.seed = 100;
+    let c = plora::train::run_pack(&rt, "nano", &configs, &opts2).unwrap();
+    assert_ne!(a.adapters[0].final_loss, c.adapters[0].final_loss);
+}
+
+/// Packing isolation (§3.2 "computation of each adapter is identical to
+/// single-adapter fine-tuning"): an adapter's trajectory must not depend
+/// on *which* other adapters are packed with it. We train config X alone
+/// and packed next to a very different neighbour and compare eval metrics.
+#[test]
+fn packed_adapter_matches_solo_training() {
+    let Some(rt) = runtime() else { return };
+    let x = cfg(0, "modadd", 8, 1);
+    let noisy_neighbor = LoraConfig {
+        id: 1,
+        lr: 8e-3,
+        batch: 2,
+        rank: 8,
+        alpha_ratio: 2.0,
+        task: "copy".into(),
+    };
+    let opts = TrainOptions {
+        budget: TrainBudget { dataset: 12, epochs: 1 },
+        eval_batches: 2,
+        seed: 31,
+        log_every: 0,
+    };
+    let solo = plora::train::run_pack(&rt, "nano", &[x.clone()], &opts).unwrap();
+    let packed = plora::train::run_pack(&rt, "nano", &[x, noisy_neighbor], &opts).unwrap();
+    let (s, p) = (&solo.adapters[0], &packed.adapters[0]);
+    // Data streams differ across bucket shapes (shared generator), so exact
+    // equality is not expected — but quality must be statistically
+    // indistinguishable: same base metrics, close eval loss.
+    assert_eq!(s.base_acc, p.base_acc, "frozen-base eval must be identical");
+    assert!(
+        (s.eval_loss - p.eval_loss).abs() < 0.35 * s.eval_loss.max(0.1),
+        "solo {} vs packed {} eval loss diverged",
+        s.eval_loss,
+        p.eval_loss
+    );
+}
+
+/// Planner predictions and the DES agree on Min-GPU queues too.
+#[test]
+fn baseline_plan_matches_simulated_timeline() {
+    let cm = CostModel::new(geometry::geom("qwen2.5-7b").unwrap(), &pool::A100_40G);
+    let budget = TrainBudget::default();
+    let grid = SearchSpace::default().grid("t");
+    let plan = min_gpu_plan(&cm, &budget, 8, &grid).unwrap();
+    let sim = Simulator { cm, budget, gpus: 8 };
+    let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+    let res = sim.run_queue(&queue, &SimOptions::default());
+    assert!((res.makespan - plan.makespan).abs() / plan.makespan < 1e-6);
+    assert_eq!(res.jobs.len(), plan.jobs.len());
+}
+
+/// The engine honours FIFO queue order under contention: with one device,
+/// outcomes complete in queue order.
+#[test]
+fn engine_fifo_with_single_device() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = Engine::new(rt, ResourceMonitor::new(&pool::CPU_SIM, 1));
+    engine.options.budget = TrainBudget { dataset: 3, epochs: 1 };
+    engine.options.eval_batches = 1;
+    engine.options.log_every = 0;
+    let queue: Vec<_> = (0..3)
+        .map(|i| plora::planner::PlannedJob {
+            id: i,
+            pack: plora::costmodel::Pack::new(vec![cfg(i, "copy", 8, 1)]),
+            d: 1,
+            mode: plora::costmodel::ExecMode::Packed,
+        })
+        .collect();
+    let report = engine.run("nano", &queue).unwrap();
+    for w in report.outcomes.windows(2) {
+        assert!(w[0].start <= w[1].start + 1e-9, "FIFO violated");
+    }
+}

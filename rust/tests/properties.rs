@@ -1,0 +1,290 @@
+//! Property-based tests on coordinator invariants (planner, packing,
+//! scheduling, cost model) using the in-tree mini property harness
+//! (`plora::util::prop`) — random search spaces, shrunk counterexamples.
+
+use plora::config::geometry::geom;
+use plora::config::pool::A100_40G;
+use plora::config::LoraConfig;
+use plora::costmodel::{CostModel, ExecMode, Pack, TrainBudget};
+use plora::planner::{min_gpu_plan, JobPlanner, PackProblem};
+use plora::sim::{SimOptions, Simulator};
+use plora::util::prop::{check, Shrink};
+use plora::util::rng::Rng;
+
+/// A random LoRA configuration encoded as (rank_idx, bs_idx, lr_idx, alpha_idx).
+#[derive(Debug, Clone)]
+struct Space(Vec<(usize, usize)>); // (rank, batch)
+
+impl Shrink for Space {
+    fn shrink(&self) -> Vec<Self> {
+        self.0.shrink().into_iter().filter(|v| !v.is_empty()).map(Space).collect()
+    }
+}
+
+fn gen_space(rng: &mut Rng, max_n: usize) -> Space {
+    let ranks = [8usize, 16, 32, 64, 128];
+    let batches = [1usize, 2, 4, 8];
+    let n = 1 + rng.usize_below(max_n);
+    Space(
+        (0..n)
+            .map(|_| (*rng.choice(&ranks), *rng.choice(&batches)))
+            .collect(),
+    )
+}
+
+fn configs_of(s: &Space) -> Vec<LoraConfig> {
+    s.0.iter()
+        .enumerate()
+        .map(|(id, &(rank, batch))| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch,
+            rank,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        })
+        .collect()
+}
+
+/// Every random space is fully scheduled: each config exactly once, every
+/// pack memory-feasible at its degree, no GPU oversubscription at any time,
+/// and the makespan respects the certified lower bound.
+#[test]
+fn planner_schedules_every_space_feasibly() {
+    let cm = CostModel::new(geom("qwen2.5-7b").unwrap(), &A100_40G);
+    check(
+        12,
+        71,
+        |rng| gen_space(rng, 24),
+        |s| {
+            let configs = configs_of(s);
+            let mut planner = JobPlanner::new(cm.clone(), 8);
+            planner.budget = TrainBudget { dataset: 64, epochs: 1 };
+            let plan = planner.plan(&configs).map_err(|e| e.to_string())?;
+            // exactly-once
+            let mut ids: Vec<usize> =
+                plan.jobs.iter().flat_map(|j| j.job.pack.configs.iter().map(|c| c.id)).collect();
+            ids.sort();
+            let want: Vec<usize> = (0..configs.len()).collect();
+            if ids != want {
+                return Err(format!("scheduled ids {ids:?} != {want:?}"));
+            }
+            // feasibility
+            for j in &plan.jobs {
+                if !cm.fits(&j.job.pack, j.job.d) {
+                    return Err(format!("infeasible pack in {}", j.job.summary()));
+                }
+                if !j.job.d.is_power_of_two() || j.job.d > 8 {
+                    return Err(format!("bad degree {}", j.job.d));
+                }
+            }
+            // no oversubscription
+            for t in plan.jobs.iter().map(|j| j.start + 1e-9) {
+                let used: usize = plan
+                    .jobs
+                    .iter()
+                    .filter(|j| j.start <= t && t < j.end)
+                    .map(|j| j.job.d)
+                    .sum();
+                if used > 8 {
+                    return Err(format!("{used} GPUs at t={t}"));
+                }
+            }
+            // lower bound
+            if plan.makespan < plan.lb_makespan - 1e-6 {
+                return Err(format!(
+                    "makespan {} below its lower bound {}",
+                    plan.makespan, plan.lb_makespan
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The ILP never returns an infeasible pack and never loses to the
+/// trivial single-best-config solution.
+#[test]
+fn ilp_solution_feasible_and_dominates_singletons() {
+    let cm = CostModel::new(geom("qwen2.5-7b").unwrap(), &A100_40G);
+    let budget = TrainBudget::default();
+    check(
+        20,
+        13,
+        |rng| gen_space(rng, 40),
+        |s| {
+            let configs = configs_of(s);
+            let p = PackProblem::new(&cm, 1, ExecMode::Packed, &budget);
+            let Some(sol) = p.solve(&configs) else {
+                return Ok(()); // nothing fits: fine
+            };
+            if sol.pack.n() > 0 && !cm.fits(&sol.pack, 1) {
+                return Err("infeasible ILP pack".into());
+            }
+            let best_single = configs
+                .iter()
+                .filter(|c| cm.fits(&Pack::new(vec![(*c).clone()]), 1))
+                .map(|c| p.objective(&Pack::new(vec![c.clone()])))
+                .fold(0.0, f64::max);
+            if sol.throughput + 1e-9 < best_single {
+                return Err(format!(
+                    "ILP {} worse than best singleton {}",
+                    sol.throughput, best_single
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Simulator executes any Min-GPU queue without oversubscription, and the
+/// deterministic makespan is invariant to re-running.
+#[test]
+fn sim_is_deterministic_and_safe() {
+    let cm = CostModel::new(geom("qwen2.5-3b").unwrap(), &A100_40G);
+    let budget = TrainBudget { dataset: 64, epochs: 1 };
+    check(
+        12,
+        29,
+        |rng| gen_space(rng, 32),
+        |s| {
+            let configs = configs_of(s);
+            let plan = min_gpu_plan(&cm, &budget, 8, &configs).map_err(|e| e.to_string())?;
+            let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+            let sim = Simulator { cm: cm.clone(), budget, gpus: 8 };
+            let a = sim.run_queue(&queue, &SimOptions::default());
+            let b = sim.run_queue(&queue, &SimOptions::default());
+            if (a.makespan - b.makespan).abs() > 1e-9 {
+                return Err("nondeterministic sim".into());
+            }
+            if a.jobs.len() != configs.len() {
+                return Err("lost jobs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cost-model monotonicity: adding an adapter never reduces job time or
+/// per-device memory; packing never hurts rank throughput per job time
+/// versus the smaller pack trained alone at the same degree.
+#[test]
+fn cost_model_monotone_in_pack() {
+    let cm = CostModel::new(geom("qwen2.5-7b").unwrap(), &A100_40G);
+    let budget = TrainBudget::default();
+    check(
+        40,
+        41,
+        |rng| gen_space(rng, 12),
+        |s| {
+            let configs = configs_of(s);
+            let pack = Pack::new(configs.clone());
+            let sub = Pack::new(configs[..configs.len() - 1].to_vec());
+            for mode in [ExecMode::Packed, ExecMode::Sequential] {
+                let t_full = cm.job_time(&pack, 1, mode, &budget);
+                let t_sub = cm.job_time(&sub, 1, mode, &budget);
+                if t_full + 1e-12 < t_sub {
+                    return Err(format!("job_time not monotone: {t_sub} -> {t_full} ({mode:?})"));
+                }
+            }
+            let sh = plora::costmodel::memory::Sharding::tp(1);
+            let m_full = cm.memory.job_bytes(&pack, sh, false);
+            let m_sub = cm.memory.job_bytes(&sub, sh, false);
+            if m_full < m_sub {
+                return Err("memory not monotone".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Rank masking in the padded state is exactly the identity on true ranks:
+/// random (n, r_pad, ranks) always produce a 0/1 mask with row sums = ranks.
+#[test]
+fn rank_mask_row_sums_equal_ranks() {
+    use plora::runtime::{ModelInfo, TrainState};
+    let mi = ModelInfo {
+        name: "t".into(),
+        vocab: 64,
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 16,
+        seq: 8,
+        params: 0,
+        weights: String::new(),
+    };
+    check(
+        30,
+        7,
+        |rng| {
+            let n = 1 + rng.usize_below(6);
+            let r_pad = [4usize, 8, 16][rng.usize_below(3)];
+            let ranks: Vec<usize> = (0..n).map(|_| 1 + rng.usize_below(r_pad)).collect();
+            (n, ranks.iter().map(|&r| (r, r_pad)).collect::<Vec<(usize, usize)>>())
+        },
+        |(n, ranks_pairs)| {
+            let r_pad = ranks_pairs.first().map(|&(_, p)| p).unwrap_or(4);
+            if ranks_pairs.iter().any(|&(_, p)| p != r_pad) || ranks_pairs.len() != *n {
+                return Ok(()); // shrunk into an inconsistent shape; skip
+            }
+            let ranks: Vec<usize> = ranks_pairs.iter().map(|&(r, _)| r.min(r_pad)).collect();
+            let st = TrainState::init(&mi, *n, r_pad, 1);
+            let mask = st.rank_mask(&ranks).map_err(|e| e.to_string())?;
+            let data = mask.as_f32().map_err(|e| e.to_string())?;
+            for (i, &r) in ranks.iter().enumerate() {
+                let row = &data[i * r_pad..(i + 1) * r_pad];
+                let sum: f32 = row.iter().sum();
+                if sum != r as f32 {
+                    return Err(format!("row {i} sum {sum} != rank {r}"));
+                }
+                if row.iter().any(|&x| x != 0.0 && x != 1.0) {
+                    return Err("non 0/1 mask".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Task generators: for random seeds and sequence lengths the samples are
+/// in-vocab, target-shifted, and have a non-empty answer mask.
+#[test]
+fn task_samples_always_valid() {
+    use plora::runtime::manifest::TokenLayout;
+    use plora::train::tasks;
+    let tl = TokenLayout { pad: 0, bos: 1, sep: 2, eos: 3, alpha0: 8 };
+    check(
+        60,
+        97,
+        |rng| {
+            let seq = [16usize, 32, 64][rng.usize_below(3)];
+            let task = rng.usize_below(4);
+            (task, seq)
+        },
+        |&(task, seq)| {
+            let name = tasks::TASKS[task.min(3)];
+            let mut rng = Rng::new((task * 1000 + seq) as u64);
+            for _ in 0..8 {
+                let s = tasks::gen(name, &tl, &mut rng, seq.max(16), 256)
+                    .map_err(|e| e.to_string())?;
+                let seq = seq.max(16);
+                if s.tokens.len() != seq || s.targets.len() != seq {
+                    return Err("bad lengths".into());
+                }
+                if s.tokens.iter().chain(&s.targets).any(|&t| !(0..256).contains(&t)) {
+                    return Err("token out of vocab".into());
+                }
+                for i in 0..seq - 1 {
+                    if s.targets[i] != s.tokens[i + 1] {
+                        return Err(format!("targets not shifted at {i}"));
+                    }
+                }
+                if s.mask.iter().sum::<f32>() < 1.0 {
+                    return Err("empty answer mask".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
