@@ -1,0 +1,30 @@
+# PLoRA build entry points.
+#
+# The Rust system builds and runs WITHOUT any of these targets: the default
+# reference backend synthesizes its manifest and base weights (see
+# rust/src/runtime/reference/). `make artifacts` is the optional L2 AOT
+# step: it pretrains the TinyLM bases and lowers the packed train/eval
+# steps + Pallas kernels to HLO text for the PJRT backend (`--features
+# pjrt`). It requires a Python environment with jax installed.
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: build test bench artifacts clean-artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench planner
+
+# L2 AOT compile path (optional; python + jax required). Produces
+# $(ARTIFACTS)/manifest.json, weights_<model>.bin and *.hlo.txt — the
+# runtime picks them up automatically on the next start.
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

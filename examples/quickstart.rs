@@ -1,9 +1,11 @@
 //! Quickstart: fine-tune two LoRA adapters *packed* into one job on the
-//! pretrained TinyLM `nano` model, fully live through the PJRT runtime.
+//! TinyLM `nano` model, fully live through the default pure-Rust reference
+//! backend — no artifacts or native libraries required.
 //!
 //! ```bash
-//! make artifacts               # once: AOT-compile the train/eval steps
 //! cargo run --release --example quickstart
+//! # optional: `make artifacts` + `--features pjrt` to run the same job
+//! # through the AOT/PJRT path with a pretrained base.
 //! ```
 //!
 //! This is the paper's Figure-2 workflow end to end: two adapters with
@@ -20,10 +22,10 @@ use plora::train::{run_pack, TrainOptions};
 
 fn main() -> Result<()> {
     let rt = Runtime::load(&Runtime::default_dir())?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("execution backend: {}", rt.platform());
 
-    // Two LoRA configurations — different tasks, ranks, and learning rates,
-    // packed into ONE job (the paper's core idea, §3.2).
+    // Two LoRA configurations — different tasks, learning rates, and
+    // alphas, packed into ONE job (the paper's core idea, §3.2).
     let configs = vec![
         LoraConfig {
             id: 0,
@@ -31,7 +33,7 @@ fn main() -> Result<()> {
             batch: 1,
             rank: 8,
             alpha_ratio: 1.0,
-            task: "modadd".into(), // math-reasoning stand-in
+            task: "parity".into(), // logic-reasoning stand-in
         },
         LoraConfig {
             id: 1,
@@ -39,7 +41,7 @@ fn main() -> Result<()> {
             batch: 1,
             rank: 8,
             alpha_ratio: 0.5,
-            task: "parity".into(), // logic-reasoning stand-in
+            task: "needle".into(), // lookup/retrieval stand-in
         },
     ];
 

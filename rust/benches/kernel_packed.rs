@@ -5,8 +5,8 @@
 //! The paper reports near-linear speedup up to 32 packed adapters on both
 //! Attention (d = 2048/3584) and MLP (d = 11008/18944) projections; at
 //! testbed scale the artifacts use the `small` TinyLM dims (attn 256x256,
-//! mlp 256x1024, r=16, m=128 — DESIGN.md §6) and per-launch overhead on
-//! CPU-PJRT plays the role of GPU underutilization.
+//! mlp 256x1024, r=16, m=16 — DESIGN.md §6) and per-launch overhead on
+//! the CPU backend plays the role of GPU underutilization.
 //!
 //! Run: `cargo bench --bench kernel_packed`
 

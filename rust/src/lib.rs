@@ -10,13 +10,19 @@
 //!   original 8×A100 / 8×A10 scale.
 //! - **L2/L1 (`python/compile/`)**: the packed multi-adapter TinyLM train
 //!   step and the packed-LoRA Pallas kernels, AOT-lowered once to HLO text
-//!   (`make artifacts`); Python is never on the request path.
-//! - **Runtime**: [`runtime`] loads `artifacts/*.hlo.txt` via the PJRT CPU
-//!   client (`xla` crate) and replays them from the Rust hot path.
+//!   (`make artifacts`, optional); Python is never on the request path.
+//! - **Runtime**: [`runtime`] executes the artifact contract through a
+//!   pluggable [`runtime::ExecutionBackend`]. The default **reference
+//!   backend** interprets the packed-LoRA computations in pure Rust and
+//!   synthesizes the manifest + base weights when `artifacts/` is absent,
+//!   so everything runs end-to-end offline; with `--features pjrt` (and
+//!   the `xla` crate available) the AOT `artifacts/*.hlo.txt` are replayed
+//!   via the PJRT CPU client instead.
 //!
 //! Entry points: [`planner::JobPlanner`] (Alg. 2), [`engine::Engine`]
 //! (live packed fine-tuning), [`sim::Simulator`] (paper-scale makespan),
-//! and the `plora` binary (`rust/src/main.rs`).
+//! and the `plora` binary (`rust/src/main.rs`). Architecture and design
+//! rationale live in `DESIGN.md`; user-facing docs in `README.md`.
 
 pub mod bench;
 pub mod cluster;

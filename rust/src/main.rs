@@ -42,8 +42,11 @@ USAGE: plora <subcommand> [flags]
   kernels  [--ns 1,2,8,32] [--geoms attn,mlp] [--iters N]
   calib    --model <tinylm> [--steps N]
 
-Geometries: qwen2.5-{3b,7b,14b,32b}, llama3.2-3b, llama3.1-8b (sim) or
-nano/tiny/small/base (live TinyLM models).";
+Geometries (plan/sim): qwen2.5-{3b,7b,14b,32b}, llama3.2-3b, llama3.1-8b,
+or the TinyLM sizes nano/tiny/small/base. Live subcommands (train/sweep/
+quality/kernels/calib) take a TinyLM model and run on the default pure-Rust
+reference backend. The PJRT/XLA runtime is opt-in: vendor the xla crate,
+run `make artifacts`, build with --features pjrt (README 'Feature matrix').";
 
 fn main() {
     let args = Args::parse();
@@ -91,6 +94,16 @@ fn budget(args: &Args) -> Result<TrainBudget> {
 
 fn runtime() -> Result<Arc<Runtime>> {
     Ok(Arc::new(Runtime::load(&Runtime::default_dir())?))
+}
+
+/// Largest (rank, batch) any train bucket of `model` admits — live sweeps
+/// must keep their sampled spaces inside the static bucket grid (nano tops
+/// out at r=8, bs=2; tiny at r=32, bs=4).
+fn bucket_caps(rt: &Runtime, model: &str) -> (usize, usize) {
+    let buckets = rt.manifest.train_buckets(model);
+    let max_r = buckets.iter().map(|b| b.1).max().unwrap_or(8);
+    let max_bs = buckets.iter().map(|b| b.2).max().unwrap_or(1);
+    (max_r, max_bs)
 }
 
 // ---------------------------------------------------------------------------
@@ -231,10 +244,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     cm.charge_padding = true;
     cm.buckets = Some(rt.manifest.train_buckets(&model));
     let tasks = rt.manifest.tasks.clone();
+    let (max_r, max_bs) = bucket_caps(&rt, &model);
     let space = SearchSpace {
         lrs: vec![5e-4, 2e-3, 5e-3],
-        batches: vec![1, 2],
-        ranks: vec![8, 16],
+        batches: vec![1, 2].into_iter().filter(|&b| b <= max_bs).collect(),
+        ranks: vec![8, 16].into_iter().filter(|&r| r <= max_r).collect(),
         alpha_ratios: vec![0.5, 1.0],
     };
     let mut rng = plora::util::rng::Rng::new(7);
@@ -306,11 +320,13 @@ fn cmd_quality(args: &Args) -> Result<()> {
         eval_batches: 4,
         seed: 23,
     };
-    // Small grid per task around live-scale learning rates.
+    // Small grid per task around live-scale learning rates, restricted to
+    // the shapes the model's bucket grid can execute.
+    let (max_r, max_bs) = bucket_caps(&rt, &model);
     let space = SearchSpace {
         lrs: vec![5e-4, 2e-3, 8e-3],
-        batches: vec![1, 2],
-        ranks: vec![8, 16],
+        batches: vec![1, 2].into_iter().filter(|&b| b <= max_bs).collect(),
+        ranks: vec![8, 16].into_iter().filter(|&r| r <= max_r).collect(),
         alpha_ratios: vec![0.5, 1.0],
     };
     let tasks = rt.manifest.tasks.clone();
@@ -326,6 +342,8 @@ fn cmd_quality(args: &Args) -> Result<()> {
         all.extend(search::sweep(&rt, &model, &g, &opts)?);
         let mut d = search::default_config(task);
         d.lr = 2e-3; // live-scale default
+        d.rank = d.rank.min(max_r);
+        d.batch = d.batch.min(max_bs);
         d.id = 9999;
         let rep = run_pack(
             &rt,

@@ -1,0 +1,36 @@
+//! The pluggable execution-backend interface.
+//!
+//! A backend turns manifest artifacts into runnable executables. The
+//! engine, driver, benches and CLI only ever see [`crate::runtime::Runtime`]
+//! / [`crate::runtime::Executable`]; which backend does the work is decided
+//! once at `Runtime::load` time:
+//!
+//! - [`crate::runtime::reference::RefBackend`] — pure-Rust interpreter of
+//!   the packed-LoRA computations (default; no native deps).
+//! - `pjrt::PjrtBackend` (`pjrt` feature) — compiles the AOT HLO artifacts
+//!   via the PJRT CPU client and replays them.
+
+use anyhow::Result;
+
+use crate::runtime::manifest::{ArtifactInfo, Manifest};
+use crate::runtime::tensor::HostTensor;
+
+/// A backend that can prepare manifest artifacts for execution.
+///
+/// Implementations must be thread-safe: the engine prepares and runs
+/// executables from concurrent worker threads.
+pub trait ExecutionBackend: Send + Sync {
+    /// Identifier shown in logs/CLI (`ref-cpu`, `cpu` for PJRT, ...).
+    fn platform(&self) -> String;
+
+    /// Prepare one artifact. Called once per artifact (the runtime caches
+    /// the result); may be expensive (e.g. XLA compilation).
+    fn load(&self, manifest: &Manifest, info: &ArtifactInfo) -> Result<Box<dyn BackendExecutable>>;
+}
+
+/// A prepared artifact. Inputs are pre-validated against the manifest by
+/// [`crate::runtime::Executable::run`], so implementations may rely on
+/// arity, dtypes and shapes being exactly the manifest's.
+pub trait BackendExecutable: Send + Sync {
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}

@@ -1,17 +1,36 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
-//! Rust hot path. Python is build-time only — after `make artifacts` the
-//! coordinator talks exclusively to this module.
+//! Execution runtime: the manifest of packed-LoRA artifacts plus a
+//! pluggable [`ExecutionBackend`] that runs them.
 //!
-//! Wiring (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
-//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
-//! HLO **text** is the interchange format; jax ≥ 0.5 serialized protos are
-//! rejected by xla_extension 0.5.1 (64-bit instruction ids).
+//! Two backends exist:
+//!
+//! - **Reference** ([`reference::RefBackend`], the default): a pure-Rust
+//!   interpreter of the manifest's packed-LoRA computations — the fused
+//!   TinyLM train/eval steps and the standalone packed kernels (batched
+//!   `y += α·(x·A)·B` forward/backward) — over [`HostTensor`]s. It needs no
+//!   native libraries and no build-time artifacts: when `artifacts/` is
+//!   absent it synthesizes the manifest (bucket grid, token layout, model
+//!   geometry — the same tables `python/compile/aot.py` emits) and
+//!   deterministic base weights, so the engine, the train driver, the
+//!   benches and the examples all run end-to-end offline.
+//! - **PJRT** (`pjrt` feature): loads the AOT artifacts (`make artifacts`,
+//!   HLO text) via the PJRT CPU client (`xla` crate) and replays them from
+//!   the Rust hot path. HLO **text** is the interchange format; jax ≥ 0.5
+//!   serialized protos are rejected by xla_extension 0.5.1 (64-bit
+//!   instruction ids).
+//!
+//! The artifact *contract* (argument order, shapes, bucket grid) is
+//! identical for both backends — see [`manifest`] and DESIGN.md §2.
 
+pub mod backend;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod state;
 pub mod tensor;
 pub mod tensor_file;
 
+pub use backend::{BackendExecutable, ExecutionBackend};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec};
 pub use state::TrainState;
 pub use tensor::{DType, HostTensor, TensorData};
@@ -22,61 +41,35 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-/// A compiled artifact bound to its manifest entry.
-///
-/// # Thread safety
-/// `xla::PjRtLoadedExecutable` holds raw pointers and is `!Send` by
-/// default, but the underlying PJRT C API object is thread-safe (XLA
-/// guarantees concurrent `Execute` calls); the engine executes jobs from
-/// worker threads, so we assert Send+Sync here.
+/// A prepared artifact bound to its manifest entry: validates inputs
+/// against the manifest contract, then dispatches to the backend.
 pub struct Executable {
     pub info: ArtifactInfo,
-    exe: PjRtLoadedExecutable,
-    /// Wall time spent compiling (profiling/§Perf bookkeeping).
+    exe: Box<dyn BackendExecutable>,
+    /// Wall time spent preparing/compiling (profiling/§Perf bookkeeping).
     pub compile_secs: f64,
 }
 
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
 impl Executable {
     /// Execute with host tensors; validates dtypes/shapes against the
-    /// manifest before crossing the FFI boundary (shape bugs surface as
-    /// Rust errors, not XLA aborts).
+    /// manifest before dispatch (shape bugs surface as Rust errors here,
+    /// not deep inside a backend).
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.check_inputs(inputs)?;
-        let lits: Vec<Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()
-            .with_context(|| format!("{}: building literals", self.info.name))?;
-        let outs = self.run_literals(&lits)?;
-        outs.iter().map(HostTensor::from_literal).collect()
-    }
-
-    /// Execute with prebuilt literals, returning untupled output literals.
-    pub fn run_literals(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        let result = self
+        let outs = self
             .exe
-            .execute::<Literal>(inputs)
+            .run(inputs)
             .with_context(|| format!("{}: execute", self.info.name))?;
-        // Single replica; jax lowers with return_tuple=True so the one
-        // output buffer is a tuple literal — decompose it.
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("{}: fetch result", self.info.name))?;
-        let parts = lit.to_tuple().with_context(|| format!("{}: untuple", self.info.name))?;
-        if parts.len() != self.info.outputs.len() {
+        if outs.len() != self.info.outputs.len() {
             bail!(
-                "{}: manifest promises {} outputs, executable returned {}",
+                "{}: manifest promises {} outputs, backend returned {}",
                 self.info.name,
                 self.info.outputs.len(),
-                parts.len()
+                outs.len()
             );
         }
-        Ok(parts)
+        Ok(outs)
     }
 
     fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
@@ -105,25 +98,45 @@ impl Executable {
     }
 }
 
-/// The runtime: one PJRT CPU client + the manifest + a compile cache.
-/// Compilation happens lazily on first use and is shared across threads.
+/// The runtime: one execution backend + the manifest + an executable cache
+/// (shared across engine worker threads) + a base-weight cache.
 pub struct Runtime {
-    client: PjRtClient,
+    backend: Arc<dyn ExecutionBackend>,
     pub manifest: Manifest,
     cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+    weights: Mutex<BTreeMap<String, Arc<Vec<HostTensor>>>>,
 }
 
-// PjRtClient is a thread-safe C++ object behind raw pointers (see
-// `Executable` note).
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
 impl Runtime {
-    /// Load the manifest and start the PJRT CPU client.
+    /// Load a runtime rooted at `artifacts_dir`.
+    ///
+    /// If `manifest.json` exists there, it is loaded (and, with the `pjrt`
+    /// feature, executed via PJRT); otherwise the built-in manifest is
+    /// synthesized and the pure-Rust reference backend is used, so the
+    /// runtime always comes up on an offline machine.
     pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu().context("PjRtClient::cpu()")?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+        let has_files = artifacts_dir.join("manifest.json").exists();
+        let manifest = if has_files {
+            Manifest::load(artifacts_dir)?
+        } else {
+            reference::builtin_manifest(artifacts_dir)
+        };
+        #[cfg(feature = "pjrt")]
+        if has_files {
+            let backend = pjrt::PjrtBackend::new().context("starting PJRT CPU client")?;
+            return Ok(Runtime::with_backend(Arc::new(backend), manifest));
+        }
+        Ok(Runtime::with_backend(Arc::new(reference::RefBackend), manifest))
+    }
+
+    /// Build a runtime over an explicit backend (tests, embedding).
+    pub fn with_backend(backend: Arc<dyn ExecutionBackend>, manifest: Manifest) -> Runtime {
+        Runtime {
+            backend,
+            manifest,
+            cache: Mutex::new(BTreeMap::new()),
+            weights: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// Default artifacts directory (crate-root `artifacts/`).
@@ -131,48 +144,67 @@ impl Runtime {
         Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Backend identifier (`ref-cpu` for the reference interpreter, the
+    /// PJRT platform name otherwise).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
-    /// Compile (or fetch from cache) an artifact by manifest name.
+    /// Prepare (or fetch from cache) an artifact by manifest name.
     pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let info = self.manifest.artifact(name)?.clone();
-        let path = self.manifest.dir.join(&info.path);
         let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parse HLO {}", path.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
-        let compiled =
+        let exe = self
+            .backend
+            .load(&self.manifest, &info)
+            .with_context(|| format!("prepare {name}"))?;
+        let prepared =
             Arc::new(Executable { info, exe, compile_secs: t0.elapsed().as_secs_f64() });
         let mut cache = self.cache.lock().unwrap();
-        // Benign race: if another thread compiled meanwhile, keep the first.
-        Ok(cache.entry(name.to_string()).or_insert(compiled).clone())
+        // Benign race: if another thread prepared meanwhile, keep the first.
+        Ok(cache.entry(name.to_string()).or_insert(prepared).clone())
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of prepared executables currently cached.
     pub fn cached(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
 
-    /// Read a model's pretrained base weights in `BASE_ORDER`
-    /// (the train/eval artifact argument order).
-    pub fn base_weights(&self, model: &str) -> Result<Vec<HostTensor>> {
-        let mi = self.manifest.model(model)?;
+    /// A model's frozen base weights in `BASE_ORDER` (the train/eval
+    /// artifact argument order), shared read-only across jobs. Reads the
+    /// pretrained weight container when present; otherwise synthesizes
+    /// deterministic weights with the same init distributions as
+    /// `python/compile/model.py::init_base`.
+    pub fn base_weights(&self, model: &str) -> Result<Arc<Vec<HostTensor>>> {
+        if let Some(w) = self.weights.lock().unwrap().get(model) {
+            return Ok(w.clone());
+        }
+        let mi = self.manifest.model(model)?.clone();
         let path = self.manifest.dir.join(&mi.weights);
-        let mut by_name = tensor_file::read_tensors(&path)?;
-        BASE_ORDER
-            .iter()
-            .map(|k| {
-                by_name
-                    .remove(*k)
-                    .ok_or_else(|| anyhow::anyhow!("{}: missing base tensor '{k}'", mi.weights))
-            })
-            .collect()
+        // Synthesize only when the whole manifest is synthetic (no
+        // artifacts on disk). A real manifest promising a weights file
+        // that is gone must fail loudly, not silently hand back a random
+        // base with plausible-looking quality numbers.
+        let real_manifest = self.manifest.dir.join("manifest.json").exists();
+        let loaded: Vec<HostTensor> = if path.exists() || real_manifest {
+            let mut by_name = tensor_file::read_tensors(&path)?;
+            BASE_ORDER
+                .iter()
+                .map(|k| {
+                    by_name.remove(*k).ok_or_else(|| {
+                        anyhow::anyhow!("{}: missing base tensor '{k}'", mi.weights)
+                    })
+                })
+                .collect::<Result<_>>()?
+        } else {
+            reference::synth_base_weights(&mi)
+        };
+        let arc = Arc::new(loaded);
+        let mut cache = self.weights.lock().unwrap();
+        Ok(cache.entry(model.to_string()).or_insert(arc).clone())
     }
 }
 
@@ -195,9 +227,10 @@ pub const PROJS: [&str; 7] = ["q", "k", "v", "o", "up", "gate", "down"];
 mod tests {
     use super::*;
 
-    fn runtime() -> Option<Runtime> {
-        let dir = Runtime::default_dir();
-        dir.join("manifest.json").exists().then(|| Runtime::load(&dir).unwrap())
+    fn runtime() -> Runtime {
+        // Default dir has no committed artifacts: exercises the built-in
+        // manifest + reference backend path.
+        Runtime::load(&Runtime::default_dir()).unwrap()
     }
 
     #[test]
@@ -211,8 +244,8 @@ mod tests {
     }
 
     #[test]
-    fn compiles_and_runs_kernel_artifact() {
-        let Some(rt) = runtime() else { return };
+    fn prepares_and_runs_kernel_artifact() {
+        let rt = runtime();
         let exe = rt.executable("kfwd_attn_n1").unwrap();
         let info = rt.manifest.artifact("kfwd_attn_n1").unwrap();
         let (n, m, d, r, k) = (
@@ -237,7 +270,7 @@ mod tests {
 
     #[test]
     fn input_validation_rejects_bad_shapes() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let exe = rt.executable("kfwd_attn_n1").unwrap();
         let bad = vec![HostTensor::scalar_f32(0.0); 4];
         assert!(exe.run(&bad).is_err());
@@ -245,8 +278,8 @@ mod tests {
     }
 
     #[test]
-    fn compile_cache_hits() {
-        let Some(rt) = runtime() else { return };
+    fn prepare_cache_hits() {
+        let rt = runtime();
         let a = rt.executable("kfwd_attn_n1").unwrap();
         let b = rt.executable("kfwd_attn_n1").unwrap();
         assert!(Arc::ptr_eq(&a, &b));
@@ -255,11 +288,15 @@ mod tests {
 
     #[test]
     fn base_weights_match_model_shapes() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let w = rt.base_weights("nano").unwrap();
         let mi = rt.manifest.model("nano").unwrap();
         assert_eq!(w.len(), 12);
         assert_eq!(w[0].shape, vec![mi.vocab, mi.d_model]); // embed
         assert_eq!(w[1].shape, vec![mi.seq, mi.d_model]); // pos
+
+        // Deterministic and cached: a second call returns identical data.
+        let w2 = rt.base_weights("nano").unwrap();
+        assert_eq!(w[0].as_f32().unwrap(), w2[0].as_f32().unwrap());
     }
 }

@@ -1,0 +1,78 @@
+//! PJRT execution backend (`pjrt` feature): compiles the AOT HLO-text
+//! artifacts (`make artifacts`) via the PJRT CPU client and replays them.
+//!
+//! Wiring (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! HLO **text** is the interchange format; jax ≥ 0.5 serialized protos are
+//! rejected by xla_extension 0.5.1 (64-bit instruction ids).
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::backend::{BackendExecutable, ExecutionBackend};
+use crate::runtime::manifest::{ArtifactInfo, Manifest};
+use crate::runtime::tensor::HostTensor;
+
+/// One PJRT CPU client shared by every executable it loads.
+pub struct PjrtBackend {
+    client: PjRtClient,
+}
+
+// PjRtClient is a thread-safe C++ object behind raw pointers; XLA
+// guarantees concurrent compile/execute calls.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { client: PjRtClient::cpu().context("PjRtClient::cpu()")? })
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load(&self, manifest: &Manifest, info: &ArtifactInfo) -> Result<Box<dyn BackendExecutable>> {
+        let path = manifest.dir.join(&info.path);
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).with_context(|| format!("compile {}", info.name))?;
+        Ok(Box::new(PjrtExec { name: info.name.clone(), exe }))
+    }
+}
+
+/// A compiled HLO module. Output arity against the manifest is enforced by
+/// `Executable::run`, which wraps every backend call.
+struct PjrtExec {
+    name: String,
+    exe: PjRtLoadedExecutable,
+}
+
+// See `PjrtBackend` note: the underlying PJRT object is thread-safe.
+unsafe impl Send for PjrtExec {}
+unsafe impl Sync for PjrtExec {}
+
+impl BackendExecutable for PjrtExec {
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()
+            .with_context(|| format!("{}: building literals", self.name))?;
+        let result = self
+            .exe
+            .execute::<Literal>(&lits)
+            .with_context(|| format!("{}: execute", self.name))?;
+        // Single replica; jax lowers with return_tuple=True so the one
+        // output buffer is a tuple literal — decompose it.
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("{}: fetch result", self.name))?;
+        let parts = lit.to_tuple().with_context(|| format!("{}: untuple", self.name))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}

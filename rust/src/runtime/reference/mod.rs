@@ -1,0 +1,645 @@
+//! The **reference execution backend**: a pure-Rust interpreter of the
+//! manifest's packed-LoRA computations.
+//!
+//! It implements the exact artifact contract the AOT/PJRT path compiles —
+//! fused TinyLM train/eval steps ([`tinylm`]) and the standalone packed
+//! kernels (`y = α·(x·A)·B` forward + the four backward cases of
+//! `python/compile/kernels/ref.py`) — with no native dependencies, so the
+//! whole system runs end-to-end on an offline machine.
+//!
+//! When no `artifacts/` directory exists it also *synthesizes* the
+//! manifest ([`builtin_manifest`]: the `aot.py` bucket grid, token layout
+//! and model table) and deterministic base weights
+//! ([`synth_base_weights`]: the `model.py::init_base` distributions under
+//! `util::rng`). With `make artifacts` the same backend reads the
+//! pretrained weight containers instead — only execution is interpreted.
+
+pub mod tinylm;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::backend::{BackendExecutable, ExecutionBackend};
+use crate::runtime::manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec, TokenLayout};
+use crate::runtime::state::lora_shape;
+use crate::runtime::tensor::{DType, HostTensor};
+use crate::runtime::LORA_ORDER;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use self::tinylm::Spec;
+
+const NB: usize = 12; // BASE_ORDER tensors
+const NL: usize = 14; // LORA_ORDER tensors
+
+/// The reference backend (stateless; all state lives in the executables).
+pub struct RefBackend;
+
+impl ExecutionBackend for RefBackend {
+    fn platform(&self) -> String {
+        "ref-cpu".to_string()
+    }
+
+    fn load(&self, manifest: &Manifest, info: &ArtifactInfo) -> Result<Box<dyn BackendExecutable>> {
+        match info.kind {
+            ArtifactKind::Train | ArtifactKind::Eval => {
+                let model = info
+                    .meta_str("model")
+                    .ok_or_else(|| anyhow!("{}: missing 'model' meta", info.name))?;
+                let mi = manifest.model(model)?;
+                let spec = Spec {
+                    vocab: mi.vocab,
+                    d_model: mi.d_model,
+                    n_layers: mi.n_layers,
+                    n_heads: mi.n_heads,
+                    d_ff: mi.d_ff,
+                    seq: mi.seq,
+                };
+                spec.check()?;
+                let get = |k: &str| {
+                    info.meta_usize(k).ok_or_else(|| anyhow!("{}: missing '{k}' meta", info.name))
+                };
+                Ok(Box::new(TrainEvalExec {
+                    spec,
+                    n: get("n")?,
+                    r: get("r")?,
+                    bs: get("bs")?,
+                    train: info.kind == ArtifactKind::Train,
+                }))
+            }
+            ArtifactKind::KernelFwd | ArtifactKind::KernelBwd => {
+                let get = |k: &str| {
+                    info.meta_usize(k).ok_or_else(|| anyhow!("{}: missing '{k}' meta", info.name))
+                };
+                Ok(Box::new(KernelExec {
+                    n: get("n")?,
+                    d: get("d")?,
+                    k: get("k")?,
+                    r: get("r")?,
+                    m: get("m")?,
+                    bwd: info.kind == ArtifactKind::KernelBwd,
+                }))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Train / eval executable
+// ---------------------------------------------------------------------------
+
+/// Interprets one `(model, n, r, bs)` train or eval bucket. Input layout is
+/// `aot.py::train_signature` / `eval_signature` — validated upstream by
+/// `Executable::check_inputs` against the manifest.
+struct TrainEvalExec {
+    spec: Spec,
+    n: usize,
+    r: usize,
+    bs: usize,
+    train: bool,
+}
+
+fn lora_slices<'a>(tensors: &'a [HostTensor]) -> Result<[&'a [f32]; NL]> {
+    let v: Vec<&[f32]> = tensors.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+    v.try_into().map_err(|_| anyhow!("expected {NL} lora tensors"))
+}
+
+impl BackendExecutable for TrainEvalExec {
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (n, r, bs) = (self.n, self.r, self.bs);
+        let base = &inputs[..NB];
+        let lora_t = &inputs[NB..NB + NL];
+        let lora = lora_slices(lora_t)?;
+
+        if !self.train {
+            // base, lora, tokens, targets, loss_mask, scale
+            let tokens = inputs[NB + NL].as_i32()?;
+            let targets = inputs[NB + NL + 1].as_i32()?;
+            let mask = inputs[NB + NL + 2].as_f32()?;
+            let scale = inputs[NB + NL + 3].as_f32()?;
+            let fwd = tinylm::forward(&self.spec, base, &lora, scale, tokens, n, bs, r)?;
+            let (loss, acc) = tinylm::loss_and_acc(&self.spec, &fwd.logits, targets, mask, n, bs);
+            return Ok(vec![
+                HostTensor::f32(vec![n], loss)?,
+                HostTensor::f32(vec![n], acc)?,
+            ]);
+        }
+
+        // base, lora, m, v, t, tokens, targets, loss_mask, scale, lr, rmask
+        let m_t = &inputs[NB + NL..NB + 2 * NL];
+        let v_t = &inputs[NB + 2 * NL..NB + 3 * NL];
+        let off = NB + 3 * NL;
+        let t_in = inputs[off].as_f32()?[0];
+        let tokens = inputs[off + 1].as_i32()?;
+        let targets = inputs[off + 2].as_i32()?;
+        let mask = inputs[off + 3].as_f32()?;
+        let scale = inputs[off + 4].as_f32()?;
+        let lr = inputs[off + 5].as_f32()?;
+        let rmask = inputs[off + 6].as_f32()?;
+
+        let fwd = tinylm::forward(&self.spec, base, &lora, scale, tokens, n, bs, r)?;
+        let (per, grads) =
+            tinylm::backward(&self.spec, &fwd, base, &lora, scale, targets, mask, n, bs, r)?;
+
+        let t_new = t_in + 1.0;
+        let mut out_lora = Vec::with_capacity(NL);
+        let mut out_m = Vec::with_capacity(NL);
+        let mut out_v = Vec::with_capacity(NL);
+        for k in 0..NL {
+            let shape = lora_t[k].shape.clone();
+            let (d2, d3) = (shape[2], shape[3]);
+            let (nl, nm, nv) = tinylm::adamw_update(
+                lora[k],
+                m_t[k].as_f32()?,
+                v_t[k].as_f32()?,
+                &grads[k],
+                lr,
+                rmask,
+                n,
+                d2,
+                d3,
+                r,
+                LORA_ORDER[k].starts_with("a_"),
+                t_new,
+            );
+            out_lora.push(HostTensor::f32(shape.clone(), nl)?);
+            out_m.push(HostTensor::f32(shape.clone(), nm)?);
+            out_v.push(HostTensor::f32(shape, nv)?);
+        }
+        let mut outs = out_lora;
+        outs.extend(out_m);
+        outs.extend(out_v);
+        outs.push(HostTensor::scalar_f32(t_new));
+        outs.push(HostTensor::f32(vec![n], per)?);
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Standalone packed-kernel executable (Table 7/8 microbenchmarks)
+// ---------------------------------------------------------------------------
+
+/// Packed-LoRA kernel: forward `y_i = α_i (x_i A_i) B_i`, backward the four
+/// grad cases of `ref.py::ref_grads` fused into `(dx, da, db)`.
+struct KernelExec {
+    n: usize,
+    d: usize,
+    k: usize,
+    r: usize,
+    m: usize,
+    bwd: bool,
+}
+
+impl BackendExecutable for KernelExec {
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (n, d, k, r, m) = (self.n, self.d, self.k, self.r, self.m);
+        let x = inputs[0].as_f32()?;
+        let a = inputs[1].as_f32()?;
+        let b = inputs[2].as_f32()?;
+        let alpha = inputs[3].as_f32()?;
+
+        // mid_i = x_i @ a_i, shared by forward and backward.
+        let mut mid = vec![0.0f32; n * m * r];
+        for i in 0..n {
+            tinylm::mm_acc(
+                &mut mid[i * m * r..(i + 1) * m * r],
+                &x[i * m * d..(i + 1) * m * d],
+                &a[i * d * r..(i + 1) * d * r],
+                m,
+                d,
+                r,
+                1.0,
+            );
+        }
+
+        if !self.bwd {
+            let mut y = vec![0.0f32; n * m * k];
+            for i in 0..n {
+                tinylm::mm_acc(
+                    &mut y[i * m * k..(i + 1) * m * k],
+                    &mid[i * m * r..(i + 1) * m * r],
+                    &b[i * r * k..(i + 1) * r * k],
+                    m,
+                    r,
+                    k,
+                    alpha[i],
+                );
+            }
+            return Ok(vec![HostTensor::f32(vec![n, m, k], y)?]);
+        }
+
+        let g = inputs[4].as_f32()?;
+        let mut dx = vec![0.0f32; n * m * d];
+        let mut da = vec![0.0f32; n * d * r];
+        let mut db = vec![0.0f32; n * r * k];
+        let mut dh = vec![0.0f32; m * r];
+        for i in 0..n {
+            let gi = &g[i * m * k..(i + 1) * m * k];
+            let xi = &x[i * m * d..(i + 1) * m * d];
+            let ai = &a[i * d * r..(i + 1) * d * r];
+            let bi = &b[i * r * k..(i + 1) * r * k];
+            let midi = &mid[i * m * r..(i + 1) * m * r];
+            // case 1: db = α h^T g
+            tinylm::mm_tn_acc(&mut db[i * r * k..(i + 1) * r * k], midi, gi, m, r, k, alpha[i]);
+            // case 2: dh = α g b^T
+            dh.fill(0.0);
+            tinylm::mm_nt_acc(&mut dh, gi, bi, m, k, r, alpha[i]);
+            // case 3: da = x^T dh
+            tinylm::mm_tn_acc(&mut da[i * d * r..(i + 1) * d * r], xi, &dh, m, d, r, 1.0);
+            // case 4: dx = dh a^T
+            tinylm::mm_nt_acc(&mut dx[i * m * d..(i + 1) * m * d], &dh, ai, m, r, d, 1.0);
+        }
+        Ok(vec![
+            HostTensor::f32(vec![n, m, d], dx)?,
+            HostTensor::f32(vec![n, d, r], da)?,
+            HostTensor::f32(vec![n, r, k], db)?,
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in manifest (mirror of aot.py's grids/tables)
+// ---------------------------------------------------------------------------
+
+struct BuiltinModel {
+    name: &'static str,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    seq: usize,
+}
+
+/// `model.py::MODELS`.
+const BUILTIN_MODELS: [BuiltinModel; 4] = [
+    BuiltinModel { name: "nano", vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 256, seq: 32 },
+    BuiltinModel { name: "tiny", vocab: 512, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 512, seq: 64 },
+    BuiltinModel { name: "small", vocab: 1024, d_model: 256, n_layers: 6, n_heads: 8, d_ff: 1024, seq: 64 },
+    BuiltinModel { name: "base", vocab: 4096, d_model: 512, n_layers: 8, n_heads: 8, d_ff: 2048, seq: 128 },
+];
+
+/// `aot.py::TRAIN_GRID` — the `(n, r_pad, bs)` bucket grid per model.
+fn train_grid(model: &str) -> Vec<(usize, usize, usize)> {
+    match model {
+        "nano" => vec![(1, 8, 1), (2, 8, 1), (4, 8, 1), (2, 8, 2)],
+        "tiny" => {
+            let mut g = vec![];
+            for n in [1usize, 2, 4, 8] {
+                for r in [8usize, 32] {
+                    for b in [1usize, 4] {
+                        g.push((n, r, b));
+                    }
+                }
+            }
+            g
+        }
+        "small" => vec![(1, 32, 1), (4, 32, 1), (8, 32, 1)],
+        "base" => vec![(1, 32, 1), (2, 32, 1)],
+        _ => vec![],
+    }
+}
+
+/// `aot.py` kernel microbenchmark grid: (geom, d, k), pack sizes, rank, m.
+const KERNEL_GEOMS: [(&str, usize, usize); 2] = [("attn", 256, 256), ("mlp", 256, 1024)];
+const KERNEL_NS: [usize; 4] = [1, 2, 8, 32];
+const KERNEL_R: usize = 16;
+const KERNEL_M: usize = 16;
+
+fn ts(name: &str, dtype: DType, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name: name.to_string(), dtype, shape }
+}
+
+fn lora_specs(mi: &ModelInfo, n: usize, r: usize, prefix: &str) -> Vec<TensorSpec> {
+    LORA_ORDER
+        .iter()
+        .copied()
+        .map(|name| ts(&format!("{prefix}{name}"), DType::F32, lora_shape(mi, name, n, r)))
+        .collect()
+}
+
+fn base_specs(mi: &ModelInfo) -> Vec<TensorSpec> {
+    let (v, d, l, f, s) = (mi.vocab, mi.d_model, mi.n_layers, mi.d_ff, mi.seq);
+    vec![
+        ts("embed", DType::F32, vec![v, d]),
+        ts("pos", DType::F32, vec![s, d]),
+        ts("ln1", DType::F32, vec![l, d]),
+        ts("ln2", DType::F32, vec![l, d]),
+        ts("wq", DType::F32, vec![l, d, d]),
+        ts("wk", DType::F32, vec![l, d, d]),
+        ts("wv", DType::F32, vec![l, d, d]),
+        ts("wo", DType::F32, vec![l, d, d]),
+        ts("wup", DType::F32, vec![l, d, f]),
+        ts("wgate", DType::F32, vec![l, d, f]),
+        ts("wdown", DType::F32, vec![l, f, d]),
+        ts("lnf", DType::F32, vec![d]),
+    ]
+}
+
+fn train_meta(model: &str, n: usize, r: usize, bs: usize, seq: usize) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("model".to_string(), Json::str(model));
+    m.insert("n".to_string(), Json::num(n as f64));
+    m.insert("r".to_string(), Json::num(r as f64));
+    m.insert("bs".to_string(), Json::num(bs as f64));
+    m.insert("seq".to_string(), Json::num(seq as f64));
+    m
+}
+
+fn train_artifact(mi: &ModelInfo, n: usize, r: usize, bs: usize) -> ArtifactInfo {
+    let mut inputs = base_specs(mi);
+    inputs.extend(lora_specs(mi, n, r, ""));
+    inputs.extend(lora_specs(mi, n, r, "m_"));
+    inputs.extend(lora_specs(mi, n, r, "v_"));
+    inputs.push(ts("t", DType::F32, vec![]));
+    inputs.push(ts("tokens", DType::I32, vec![n, bs, mi.seq]));
+    inputs.push(ts("targets", DType::I32, vec![n, bs, mi.seq]));
+    inputs.push(ts("loss_mask", DType::F32, vec![n, bs, mi.seq]));
+    inputs.push(ts("scale", DType::F32, vec![n]));
+    inputs.push(ts("lr", DType::F32, vec![n]));
+    inputs.push(ts("rmask", DType::F32, vec![n, r]));
+    let mut outputs = lora_specs(mi, n, r, "");
+    outputs.extend(lora_specs(mi, n, r, "m_"));
+    outputs.extend(lora_specs(mi, n, r, "v_"));
+    outputs.push(ts("t", DType::F32, vec![]));
+    outputs.push(ts("per_loss", DType::F32, vec![n]));
+    let name = format!("train_{}_n{n}_r{r}_b{bs}", mi.name);
+    ArtifactInfo {
+        path: format!("{name}.hlo.txt"),
+        name,
+        kind: ArtifactKind::Train,
+        inputs,
+        outputs,
+        meta: train_meta(&mi.name, n, r, bs, mi.seq),
+    }
+}
+
+fn eval_artifact(mi: &ModelInfo, n: usize, r: usize, bs: usize) -> ArtifactInfo {
+    let mut inputs = base_specs(mi);
+    inputs.extend(lora_specs(mi, n, r, ""));
+    inputs.push(ts("tokens", DType::I32, vec![n, bs, mi.seq]));
+    inputs.push(ts("targets", DType::I32, vec![n, bs, mi.seq]));
+    inputs.push(ts("loss_mask", DType::F32, vec![n, bs, mi.seq]));
+    inputs.push(ts("scale", DType::F32, vec![n]));
+    let outputs = vec![ts("loss", DType::F32, vec![n]), ts("acc", DType::F32, vec![n])];
+    let name = format!("eval_{}_n{n}_r{r}_b{bs}", mi.name);
+    ArtifactInfo {
+        path: format!("{name}.hlo.txt"),
+        name,
+        kind: ArtifactKind::Eval,
+        inputs,
+        outputs,
+        meta: train_meta(&mi.name, n, r, bs, mi.seq),
+    }
+}
+
+fn kernel_artifacts(geom: &str, d: usize, k: usize, n: usize) -> [ArtifactInfo; 2] {
+    let (r, m) = (KERNEL_R, KERNEL_M);
+    let mut meta = BTreeMap::new();
+    meta.insert("geom".to_string(), Json::str(geom));
+    meta.insert("n".to_string(), Json::num(n as f64));
+    meta.insert("d".to_string(), Json::num(d as f64));
+    meta.insert("k".to_string(), Json::num(k as f64));
+    meta.insert("r".to_string(), Json::num(r as f64));
+    meta.insert("m".to_string(), Json::num(m as f64));
+    let fwd_inputs = vec![
+        ts("x", DType::F32, vec![n, m, d]),
+        ts("a", DType::F32, vec![n, d, r]),
+        ts("b", DType::F32, vec![n, r, k]),
+        ts("alpha", DType::F32, vec![n]),
+    ];
+    let mut bwd_inputs = fwd_inputs.clone();
+    bwd_inputs.push(ts("g", DType::F32, vec![n, m, k]));
+    let fwd = ArtifactInfo {
+        name: format!("kfwd_{geom}_n{n}"),
+        kind: ArtifactKind::KernelFwd,
+        path: format!("kfwd_{geom}_n{n}.hlo.txt"),
+        inputs: fwd_inputs,
+        outputs: vec![ts("y", DType::F32, vec![n, m, k])],
+        meta: meta.clone(),
+    };
+    let bwd = ArtifactInfo {
+        name: format!("kbwd_{geom}_n{n}"),
+        kind: ArtifactKind::KernelBwd,
+        path: format!("kbwd_{geom}_n{n}.hlo.txt"),
+        inputs: bwd_inputs,
+        outputs: vec![
+            ts("dx", DType::F32, vec![n, m, d]),
+            ts("da", DType::F32, vec![n, d, r]),
+            ts("db", DType::F32, vec![n, r, k]),
+        ],
+        meta,
+    };
+    [fwd, bwd]
+}
+
+/// Synthesize the manifest `aot.py` would emit — same token layout, task
+/// list, model table, train/eval bucket grid and kernel artifacts — so the
+/// runtime comes up with zero build-time artifacts on disk.
+pub fn builtin_manifest(dir: &Path) -> Manifest {
+    let tokens = TokenLayout { pad: 0, bos: 1, sep: 2, eos: 3, alpha0: 8 };
+    let tasks: Vec<String> =
+        crate::train::tasks::TASKS.iter().map(|s| s.to_string()).collect();
+
+    let mut models = BTreeMap::new();
+    let mut artifacts = vec![];
+    for b in &BUILTIN_MODELS {
+        let (v, d, l, f, s) = (b.vocab, b.d_model, b.n_layers, b.d_ff, b.seq);
+        let params = v * d + s * d + l * (4 * d * d + 3 * d * f + 2 * d) + d;
+        let mi = ModelInfo {
+            name: b.name.to_string(),
+            vocab: v,
+            d_model: d,
+            n_layers: l,
+            n_heads: b.n_heads,
+            d_ff: f,
+            seq: s,
+            params,
+            weights: format!("weights_{}.bin", b.name),
+        };
+        for (n, r, bs) in train_grid(b.name) {
+            artifacts.push(train_artifact(&mi, n, r, bs));
+            artifacts.push(eval_artifact(&mi, n, r, bs));
+        }
+        models.insert(b.name.to_string(), mi);
+    }
+    for (geom, d, k) in KERNEL_GEOMS {
+        for n in KERNEL_NS {
+            artifacts.extend(kernel_artifacts(geom, d, k, n));
+        }
+    }
+    Manifest { dir: dir.to_path_buf(), tokens, tasks, models, artifacts }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic base-weight synthesis
+// ---------------------------------------------------------------------------
+
+fn fnv1a(s: &str) -> u64 {
+    s.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
+/// Deterministic frozen base weights with the `model.py::init_base`
+/// distributions (embed/pos ~ N(0, 0.02²), projections ~ N(0, 1/d_in),
+/// LayerNorm gains = 1). Used when no pretrained `weights_<model>.bin`
+/// exists; seeded by the model name so every run agrees.
+pub fn synth_base_weights(mi: &ModelInfo) -> Vec<HostTensor> {
+    let (v, d, l, f, s) = (mi.vocab, mi.d_model, mi.n_layers, mi.d_ff, mi.seq);
+    let mut rng = Rng::new(fnv1a(&mi.name) ^ 0x706c_6f72_6100_0000);
+    let mut norm = |shape: Vec<usize>, std: f64| {
+        let count: usize = shape.iter().product();
+        let data = (0..count).map(|_| (rng.normal() * std) as f32).collect();
+        HostTensor::f32(shape, data).unwrap()
+    };
+    let ones = |shape: Vec<usize>| {
+        let count: usize = shape.iter().product();
+        HostTensor::f32(shape, vec![1.0; count]).unwrap()
+    };
+    let dstd = (d as f64).powf(-0.5);
+    let fstd = (f as f64).powf(-0.5);
+    vec![
+        norm(vec![v, d], 0.02),
+        norm(vec![s, d], 0.02),
+        ones(vec![l, d]),
+        ones(vec![l, d]),
+        norm(vec![l, d, d], dstd),
+        norm(vec![l, d, d], dstd),
+        norm(vec![l, d, d], dstd),
+        norm(vec![l, d, d], dstd),
+        norm(vec![l, d, f], dstd),
+        norm(vec![l, d, f], dstd),
+        norm(vec![l, f, d], fstd),
+        ones(vec![d]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        builtin_manifest(&PathBuf::from("/nonexistent/plora-builtin"))
+    }
+
+    #[test]
+    fn builtin_manifest_mirrors_aot_grid() {
+        let m = manifest();
+        assert_eq!(m.tokens.pad, 0);
+        assert_eq!(m.tokens.bos, 1);
+        assert_eq!(m.tokens.alpha0, 8);
+        assert_eq!(m.tasks, vec!["modadd", "copy", "parity", "needle"]);
+        assert_eq!(m.models.len(), 4);
+        let nano = m.model("nano").unwrap();
+        assert_eq!((nano.d_model, nano.n_layers, nano.seq), (64, 2, 32));
+
+        // Bucket selection behaves exactly like the real manifest's.
+        let b = m.train_bucket("tiny", 3, 8, 1).unwrap();
+        assert_eq!(
+            (b.meta_usize("n"), b.meta_usize("r"), b.meta_usize("bs")),
+            (Some(4), Some(8), Some(1))
+        );
+        assert!(m.train_bucket("tiny", 9, 8, 1).is_none());
+        assert_eq!(m.max_bucket_n("nano"), 4);
+
+        // Every train bucket has its paired eval artifact.
+        for a in m.by_kind(ArtifactKind::Train) {
+            let e = m.eval_for(a).unwrap();
+            assert_eq!(e.kind, ArtifactKind::Eval);
+        }
+
+        // Kernel artifacts for both geometries at all pack sizes.
+        for (geom, _, _) in KERNEL_GEOMS {
+            for n in KERNEL_NS {
+                assert!(m.artifact(&format!("kfwd_{geom}_n{n}")).is_ok());
+                assert!(m.artifact(&format!("kbwd_{geom}_n{n}")).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn train_signature_shape_sanity() {
+        let m = manifest();
+        let t = m.train_bucket("tiny", 2, 8, 1).unwrap();
+        let tok = t.input("tokens").unwrap();
+        assert_eq!(tok.dtype, DType::I32);
+        let mi = m.model("tiny").unwrap();
+        assert_eq!(tok.shape, vec![2, 1, mi.seq]);
+        // outputs: 14 lora + 14 m + 14 v + t + per_loss
+        assert_eq!(t.outputs.len(), 44);
+        // inputs: 12 base + 42 lora/m/v + 7 step args
+        assert_eq!(t.inputs.len(), 61);
+    }
+
+    #[test]
+    fn kernel_bwd_matches_ref_py_closed_form() {
+        let m = manifest();
+        let info = m.artifact("kbwd_attn_n2").unwrap().clone();
+        let exe = RefBackend.load(&m, &info).unwrap();
+        let (n, d, k, r, mm) = (2usize, 256usize, 256usize, 16usize, 16usize);
+        let alpha = [2.0f32, 0.5];
+        let inputs = vec![
+            HostTensor::f32(vec![n, mm, d], vec![0.01; n * mm * d]).unwrap(),
+            HostTensor::f32(vec![n, d, r], vec![0.02; n * d * r]).unwrap(),
+            HostTensor::f32(vec![n, r, k], vec![0.03; n * r * k]).unwrap(),
+            HostTensor::f32(vec![n], alpha.to_vec()).unwrap(),
+            HostTensor::f32(vec![n, mm, k], vec![0.05; n * mm * k]).unwrap(),
+        ];
+        let outs = exe.run(&inputs).unwrap();
+        assert_eq!(outs.len(), 3);
+        // Closed forms for constant tensors (see ref.py::ref_grads):
+        // h = d*x*a; dh = α*k*g*b; db = α*m*h*g; da = m*x*dh; dx = r*dh*a.
+        for (i, &al) in alpha.iter().enumerate() {
+            let h = d as f32 * 0.01 * 0.02;
+            let dh = al * k as f32 * 0.05 * 0.03;
+            let want_db = al * mm as f32 * h * 0.05;
+            let want_da = mm as f32 * 0.01 * dh;
+            let want_dx = r as f32 * dh * 0.02;
+            let got_dx = outs[0].as_f32().unwrap()[i * mm * d];
+            let got_da = outs[1].as_f32().unwrap()[i * d * r];
+            let got_db = outs[2].as_f32().unwrap()[i * r * k];
+            let close = |a: f32, b: f32| (a - b).abs() <= 1e-3 * b.abs().max(1e-3);
+            assert!(close(got_dx, want_dx), "dx[{i}]: {got_dx} vs {want_dx}");
+            assert!(close(got_da, want_da), "da[{i}]: {got_da} vs {want_da}");
+            assert!(close(got_db, want_db), "db[{i}]: {got_db} vs {want_db}");
+        }
+    }
+
+    /// The TinyLM dimension table exists in two Rust copies (BUILTIN_MODELS
+    /// here, the GEOMS rows in config::geometry) — pin them together.
+    #[test]
+    fn builtin_models_agree_with_geometry_table() {
+        let m = manifest();
+        for (name, mi) in &m.models {
+            let g = crate::config::geometry::geom(name)
+                .unwrap_or_else(|| panic!("no ModelGeom for TinyLM '{name}'"));
+            assert_eq!(g.n_layers, mi.n_layers, "{name}: n_layers");
+            assert_eq!(g.d_model, mi.d_model, "{name}: d_model");
+            assert_eq!(g.d_ff, mi.d_ff, "{name}: d_ff");
+            assert_eq!(g.n_heads, mi.n_heads, "{name}: n_heads");
+            assert_eq!(g.vocab, mi.vocab, "{name}: vocab");
+            assert_eq!(g.seq, mi.seq, "{name}: seq");
+        }
+    }
+
+    #[test]
+    fn synth_weights_are_deterministic_and_shaped() {
+        let m = manifest();
+        let mi = m.model("nano").unwrap();
+        let w1 = synth_base_weights(mi);
+        let w2 = synth_base_weights(mi);
+        assert_eq!(w1.len(), 12);
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+        // LayerNorm gains are exactly ones; projections are not.
+        assert!(w1[2].as_f32().unwrap().iter().all(|&x| x == 1.0));
+        assert!(w1[4].as_f32().unwrap().iter().any(|&x| x != 0.0 && x != 1.0));
+        // Different models draw different weights.
+        let tiny = synth_base_weights(m.model("tiny").unwrap());
+        assert_ne!(&w1[0].as_f32().unwrap()[..8], &tiny[0].as_f32().unwrap()[..8]);
+    }
+}

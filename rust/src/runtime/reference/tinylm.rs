@@ -1,0 +1,1140 @@
+//! Pure-Rust TinyLM: the packed multi-adapter LoRA forward/backward and
+//! the fused train/eval steps the reference backend interprets.
+//!
+//! This is the Rust twin of `python/compile/model.py` — same architecture
+//! (pre-LN attention + gated-SiLU MLP, tied embedding head), same packed
+//! layout (`n` adapters, ranks zero-padded to the bucket rank, batches
+//! padded with a zero loss mask), same AdamW semantics, same argument
+//! order (`aot.py::train_signature`). The backward pass was derived by
+//! hand and cross-checked against `jax.value_and_grad` of the Python
+//! model; the in-file finite-difference test re-verifies it on every
+//! `cargo test`.
+//!
+//! Everything is f32 over flat row-major `Vec<f32>` buffers; shapes are
+//! small (TinyLM scale), so plain loops are fast enough and keep the
+//! interpreter dependency-free.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::LORA_ORDER;
+
+/// Indices of the `LORA_ORDER` tensors (sorted `{a,b}_{proj}` names).
+const A_DOWN: usize = 0;
+const A_GATE: usize = 1;
+const A_K: usize = 2;
+const A_O: usize = 3;
+const A_Q: usize = 4;
+const A_UP: usize = 5;
+const A_V: usize = 6;
+const B_DOWN: usize = 7;
+const B_GATE: usize = 8;
+const B_K: usize = 9;
+const B_O: usize = 10;
+const B_Q: usize = 11;
+const B_UP: usize = 12;
+const B_V: usize = 13;
+
+/// Indices of the `BASE_ORDER` tensors.
+const EMBED: usize = 0;
+const POS: usize = 1;
+const LN1: usize = 2;
+const LN2: usize = 3;
+const WQ: usize = 4;
+const WK: usize = 5;
+const WV: usize = 6;
+const WO: usize = 7;
+const WUP: usize = 8;
+const WGATE: usize = 9;
+const WDOWN: usize = 10;
+const LNF: usize = 11;
+
+pub(crate) const ADAM_B1: f32 = 0.9;
+pub(crate) const ADAM_B2: f32 = 0.999;
+pub(crate) const ADAM_EPS: f32 = 1e-8;
+const LN_EPS: f32 = 1e-5;
+
+/// TinyLM geometry (mirrors `model.py::ModelSpec`).
+#[derive(Debug, Clone, Copy)]
+pub struct Spec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+}
+
+impl Spec {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn check(&self) -> Result<()> {
+        if self.n_heads == 0 || self.d_model % self.n_heads != 0 {
+            bail!("spec: d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flat-buffer linear algebra
+// ---------------------------------------------------------------------------
+
+/// `out (m,n) += alpha * a (m,k) @ b (k,n)`.
+pub(crate) fn mm_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, alpha: f32) {
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in ar.iter().enumerate() {
+            let f = alpha * av;
+            if f == 0.0 {
+                continue;
+            }
+            let br = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += f * bv;
+            }
+        }
+    }
+}
+
+/// `out (m,n) += alpha * a (m,k) @ b^T` with `b` stored `(n,k)`.
+pub(crate) fn mm_nt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, alpha: f32) {
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (j, o) in or.iter_mut().enumerate() {
+            let br = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (av, bv) in ar.iter().zip(br) {
+                s += av * bv;
+            }
+            *o += alpha * s;
+        }
+    }
+}
+
+/// `out (m,n) += alpha * a^T @ b` with `a` stored `(k,m)`, `b` `(k,n)`.
+pub(crate) fn mm_tn_acc(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize, alpha: f32) {
+    for kk in 0..k {
+        let ar = &a[kk * m..(kk + 1) * m];
+        let br = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in ar.iter().enumerate() {
+            let f = alpha * av;
+            if f == 0.0 {
+                continue;
+            }
+            let or = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += f * bv;
+            }
+        }
+    }
+}
+
+/// LayerNorm forward over `rows` rows of width `d`: `h = xhat * g`,
+/// saving `xhat` and `inv = 1/sqrt(var + eps)` for the backward pass.
+fn ln_fwd(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    d: usize,
+    h: &mut [f32],
+    xhat: &mut [f32],
+    inv: &mut [f32],
+) {
+    let df = d as f32;
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu /= df;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= df;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        inv[r] = iv;
+        let xh = &mut xhat[r * d..(r + 1) * d];
+        let hr = &mut h[r * d..(r + 1) * d];
+        for c in 0..d {
+            let v = (xr[c] - mu) * iv;
+            xh[c] = v;
+            hr[c] = v * g[c];
+        }
+    }
+}
+
+/// LayerNorm backward: `dx += inv * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))`
+/// with `dxhat = dy * g` (the gain `g` is frozen — no `dg`).
+fn ln_bwd_acc(
+    dx: &mut [f32],
+    dy: &[f32],
+    g: &[f32],
+    xhat: &[f32],
+    inv: &[f32],
+    rows: usize,
+    d: usize,
+) {
+    let df = d as f32;
+    let mut dxh = vec![0.0f32; d];
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xh = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for c in 0..d {
+            let v = dyr[c] * g[c];
+            dxh[c] = v;
+            m1 += v;
+            m2 += v * xh[c];
+        }
+        m1 /= df;
+        m2 /= df;
+        let iv = inv[r];
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for c in 0..d {
+            dxr[c] += iv * (dxh[c] - m1 - xh[c] * m2);
+        }
+    }
+}
+
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+fn silu(z: f32) -> f32 {
+    z * sigmoid(z)
+}
+
+fn dsilu(z: f32) -> f32 {
+    let s = sigmoid(z);
+    s * (1.0 + z * (1.0 - s))
+}
+
+// ---------------------------------------------------------------------------
+// Packed-LoRA projection
+// ---------------------------------------------------------------------------
+
+/// Packed projection forward: per adapter `i`,
+/// `out_i = input_i @ w + scale_i * (input_i @ a_i) @ b_i`, with the rank-r
+/// intermediate saved in `mid` for the backward pass. `a`/`b` are the
+/// layer-`l` slices `(n, din, r)` / `(n, r, dout)`.
+#[allow(clippy::too_many_arguments)]
+fn proj_fwd(
+    out: &mut [f32],
+    mid: &mut [f32],
+    input: &[f32],
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    scale: &[f32],
+    n: usize,
+    m: usize,
+    din: usize,
+    dout: usize,
+    r: usize,
+) {
+    for i in 0..n {
+        let xi = &input[i * m * din..(i + 1) * m * din];
+        let oi = &mut out[i * m * dout..(i + 1) * m * dout];
+        oi.fill(0.0);
+        mm_acc(oi, xi, w, m, din, dout, 1.0);
+        let mi = &mut mid[i * m * r..(i + 1) * m * r];
+        mi.fill(0.0);
+        mm_acc(mi, xi, &a[i * din * r..(i + 1) * din * r], m, din, r, 1.0);
+        mm_acc(oi, mi, &b[i * r * dout..(i + 1) * r * dout], m, r, dout, scale[i]);
+    }
+}
+
+/// Packed projection backward: accumulates `dinput`, `da` and `db` (the
+/// layer-`l` gradient slices) from the upstream `dy`. Matches
+/// `python/compile/kernels/ref.py::ref_grads` composed with the base GEMM.
+#[allow(clippy::too_many_arguments)]
+fn proj_bwd(
+    dinput: &mut [f32],
+    da: &mut [f32],
+    db: &mut [f32],
+    dy: &[f32],
+    input: &[f32],
+    mid: &[f32],
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    scale: &[f32],
+    n: usize,
+    m: usize,
+    din: usize,
+    dout: usize,
+    r: usize,
+    dmid: &mut Vec<f32>,
+) {
+    dmid.clear();
+    dmid.resize(m * r, 0.0);
+    for i in 0..n {
+        let dyi = &dy[i * m * dout..(i + 1) * m * dout];
+        let xi = &input[i * m * din..(i + 1) * m * din];
+        let midi = &mid[i * m * r..(i + 1) * m * r];
+        let ai = &a[i * din * r..(i + 1) * din * r];
+        let bi = &b[i * r * dout..(i + 1) * r * dout];
+        // dh_mid = scale * dy @ b^T  (case 2 of ref.py)
+        dmid.fill(0.0);
+        mm_nt_acc(dmid, dyi, bi, m, dout, r, scale[i]);
+        // da += input^T @ dh_mid  (case 3)
+        mm_tn_acc(&mut da[i * din * r..(i + 1) * din * r], xi, dmid, m, din, r, 1.0);
+        // db += scale * mid^T @ dy  (case 1)
+        mm_tn_acc(&mut db[i * r * dout..(i + 1) * r * dout], midi, dyi, m, r, dout, scale[i]);
+        let di = &mut dinput[i * m * din..(i + 1) * m * din];
+        // dinput += dy @ w^T + dh_mid @ a^T  (base GEMM + case 4)
+        mm_nt_acc(di, dyi, w, m, dout, din, 1.0);
+        mm_nt_acc(di, dmid, ai, m, r, din, 1.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward pass
+// ---------------------------------------------------------------------------
+
+/// Saved per-layer activations for the backward pass. (The residual-stream
+/// values themselves are not needed: residual adds backprop as identity.)
+struct LayerSave {
+    xhat1: Vec<f32>,
+    inv1: Vec<f32>,
+    h: Vec<f32>,
+    mid_q: Vec<f32>,
+    mid_k: Vec<f32>,
+    mid_v: Vec<f32>,
+    mid_o: Vec<f32>,
+    mid_up: Vec<f32>,
+    mid_gate: Vec<f32>,
+    mid_down: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    p: Vec<f32>,
+    o: Vec<f32>,
+    xhat2: Vec<f32>,
+    inv2: Vec<f32>,
+    h2: Vec<f32>,
+    up: Vec<f32>,
+    gate: Vec<f32>,
+    act: Vec<f32>,
+}
+
+/// Full forward-pass state (activations + logits).
+pub(crate) struct Forward {
+    layers: Vec<LayerSave>,
+    xhatf: Vec<f32>,
+    invf: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+/// Packed forward. `base` in `BASE_ORDER`, `lora` 14 flat slices in
+/// `LORA_ORDER` (shapes `(L, n, din, r)` / `(L, n, r, dout)`), `tokens`
+/// `(n, bs, s)`. Produces logits `(n, bs, s, vocab)` plus everything the
+/// backward pass needs.
+pub(crate) fn forward(
+    spec: &Spec,
+    base: &[HostTensor],
+    lora: &[&[f32]; 14],
+    scale: &[f32],
+    tokens: &[i32],
+    n: usize,
+    bs: usize,
+    r: usize,
+) -> Result<Forward> {
+    spec.check()?;
+    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+    let (nh, dh) = (spec.n_heads, spec.d_head());
+    let m = bs * s; // rows per adapter
+    let nm = n * m;
+    let sqrt_dh = (dh as f32).sqrt();
+
+    let embed = base[EMBED].as_f32()?;
+    let pos = base[POS].as_f32()?;
+
+    // Embedding + positional encoding.
+    let mut x = vec![0.0f32; nm * d];
+    for i in 0..n {
+        for b in 0..bs {
+            for t in 0..s {
+                let tok = tokens[(i * bs + b) * s + t];
+                if tok < 0 || tok as usize >= v {
+                    bail!("token {tok} out of vocab {v}");
+                }
+                let erow = &embed[tok as usize * d..(tok as usize + 1) * d];
+                let prow = &pos[t * d..(t + 1) * d];
+                let xrow = &mut x[((i * bs + b) * s + t) * d..((i * bs + b) * s + t + 1) * d];
+                for c in 0..d {
+                    xrow[c] = erow[c] + prow[c];
+                }
+            }
+        }
+    }
+
+    let mut layers = Vec::with_capacity(spec.n_layers);
+    for l in 0..spec.n_layers {
+        let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
+        let ln2 = &base[LN2].as_f32()?[l * d..(l + 1) * d];
+        let wq = &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wk = &base[WK].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wv = &base[WV].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wo = &base[WO].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wup = &base[WUP].as_f32()?[l * d * f..(l + 1) * d * f];
+        let wgate = &base[WGATE].as_f32()?[l * d * f..(l + 1) * d * f];
+        let wdown = &base[WDOWN].as_f32()?[l * f * d..(l + 1) * f * d];
+        // Layer-l LoRA slices: (n, din, r) / (n, r, dout).
+        let la = |idx: usize, din: usize| &lora[idx][l * n * din * r..(l + 1) * n * din * r];
+        let lb = |idx: usize, dout: usize| &lora[idx][l * n * r * dout..(l + 1) * n * r * dout];
+
+        let x0 = x.clone();
+        let mut h = vec![0.0f32; nm * d];
+        let mut xhat1 = vec![0.0f32; nm * d];
+        let mut inv1 = vec![0.0f32; nm];
+        ln_fwd(&x0, ln1, nm, d, &mut h, &mut xhat1, &mut inv1);
+
+        let mut q = vec![0.0f32; nm * d];
+        let mut k = vec![0.0f32; nm * d];
+        let mut vv = vec![0.0f32; nm * d];
+        let mut mid_q = vec![0.0f32; nm * r];
+        let mut mid_k = vec![0.0f32; nm * r];
+        let mut mid_v = vec![0.0f32; nm * r];
+        proj_fwd(&mut q, &mut mid_q, &h, wq, la(A_Q, d), lb(B_Q, d), scale, n, m, d, d, r);
+        proj_fwd(&mut k, &mut mid_k, &h, wk, la(A_K, d), lb(B_K, d), scale, n, m, d, d, r);
+        proj_fwd(&mut vv, &mut mid_v, &h, wv, la(A_V, d), lb(B_V, d), scale, n, m, d, d, r);
+
+        // Causal attention per (adapter, batch, head).
+        let mut p = vec![0.0f32; n * bs * nh * s * s];
+        let mut o = vec![0.0f32; nm * d];
+        let mut logit_buf = vec![0.0f32; s];
+        for i in 0..n {
+            for b in 0..bs {
+                for hh in 0..nh {
+                    for t in 0..s {
+                        let qrow =
+                            &q[((i * bs + b) * s + t) * d + hh * dh..((i * bs + b) * s + t) * d + hh * dh + dh];
+                        let mut mx = f32::NEG_INFINITY;
+                        for (u, lv) in logit_buf.iter_mut().enumerate().take(t + 1) {
+                            let krow = &k[((i * bs + b) * s + u) * d + hh * dh
+                                ..((i * bs + b) * s + u) * d + hh * dh + dh];
+                            let mut dot = 0.0f32;
+                            for c in 0..dh {
+                                dot += qrow[c] * krow[c];
+                            }
+                            let val = dot / sqrt_dh;
+                            *lv = val;
+                            if val > mx {
+                                mx = val;
+                            }
+                        }
+                        let mut sum = 0.0f32;
+                        for lv in logit_buf.iter_mut().take(t + 1) {
+                            *lv = (*lv - mx).exp();
+                            sum += *lv;
+                        }
+                        let prow = &mut p[(((i * bs + b) * nh + hh) * s + t) * s
+                            ..(((i * bs + b) * nh + hh) * s + t) * s + s];
+                        for (u, &e) in logit_buf.iter().enumerate().take(t + 1) {
+                            prow[u] = e / sum;
+                        }
+                        let orow = &mut o[((i * bs + b) * s + t) * d + hh * dh
+                            ..((i * bs + b) * s + t) * d + hh * dh + dh];
+                        for (u, &w) in prow.iter().enumerate().take(t + 1) {
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let vrow = &vv[((i * bs + b) * s + u) * d + hh * dh
+                                ..((i * bs + b) * s + u) * d + hh * dh + dh];
+                            for c in 0..dh {
+                                orow[c] += w * vrow[c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Attention output projection + residual.
+        let mut ao = vec![0.0f32; nm * d];
+        let mut mid_o = vec![0.0f32; nm * r];
+        proj_fwd(&mut ao, &mut mid_o, &o, wo, la(A_O, d), lb(B_O, d), scale, n, m, d, d, r);
+        let mut x1 = x0.clone();
+        for (xv, av) in x1.iter_mut().zip(&ao) {
+            *xv += av;
+        }
+
+        // MLP: pre-LN, gated SiLU, down projection + residual.
+        let mut h2 = vec![0.0f32; nm * d];
+        let mut xhat2 = vec![0.0f32; nm * d];
+        let mut inv2 = vec![0.0f32; nm];
+        ln_fwd(&x1, ln2, nm, d, &mut h2, &mut xhat2, &mut inv2);
+
+        let mut up = vec![0.0f32; nm * f];
+        let mut gate = vec![0.0f32; nm * f];
+        let mut mid_up = vec![0.0f32; nm * r];
+        let mut mid_gate = vec![0.0f32; nm * r];
+        proj_fwd(&mut up, &mut mid_up, &h2, wup, la(A_UP, d), lb(B_UP, f), scale, n, m, d, f, r);
+        proj_fwd(&mut gate, &mut mid_gate, &h2, wgate, la(A_GATE, d), lb(B_GATE, f), scale, n, m, d, f, r);
+        let mut act = vec![0.0f32; nm * f];
+        for j in 0..nm * f {
+            act[j] = silu(gate[j]) * up[j];
+        }
+
+        let mut dn = vec![0.0f32; nm * d];
+        let mut mid_down = vec![0.0f32; nm * r];
+        proj_fwd(&mut dn, &mut mid_down, &act, wdown, la(A_DOWN, f), lb(B_DOWN, d), scale, n, m, f, d, r);
+        let mut x2 = x1.clone();
+        for (xv, dv) in x2.iter_mut().zip(&dn) {
+            *xv += dv;
+        }
+
+        x = x2;
+        layers.push(LayerSave {
+            xhat1,
+            inv1,
+            h,
+            mid_q,
+            mid_k,
+            mid_v,
+            mid_o,
+            mid_up,
+            mid_gate,
+            mid_down,
+            q,
+            k,
+            v: vv,
+            p,
+            o,
+            xhat2,
+            inv2,
+            h2,
+            up,
+            gate,
+            act,
+        });
+    }
+
+    // Final LN + tied-embedding head.
+    let lnf = base[LNF].as_f32()?;
+    let mut xf = vec![0.0f32; nm * d];
+    let mut xhatf = vec![0.0f32; nm * d];
+    let mut invf = vec![0.0f32; nm];
+    ln_fwd(&x, lnf, nm, d, &mut xf, &mut xhatf, &mut invf);
+    let mut logits = vec![0.0f32; nm * v];
+    // logits = xf @ embed^T, embed stored (v, d).
+    mm_nt_acc(&mut logits, &xf, embed, nm, d, v, 1.0);
+
+    Ok(Forward { layers, xhatf, invf, logits })
+}
+
+// ---------------------------------------------------------------------------
+// Loss, metrics, backward
+// ---------------------------------------------------------------------------
+
+/// Per-adapter masked mean CE loss and (token accuracy on masked positions).
+pub(crate) fn loss_and_acc(
+    spec: &Spec,
+    logits: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    bs: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let v = spec.vocab;
+    let m = bs * spec.seq;
+    let mut loss = vec![0.0f32; n];
+    let mut acc = vec![0.0f32; n];
+    for i in 0..n {
+        let mut denom = 0.0f32;
+        for row in 0..m {
+            denom += mask[i * m + row];
+        }
+        let denom = denom.max(1.0);
+        for row in 0..m {
+            let mk = mask[i * m + row];
+            if mk == 0.0 {
+                continue;
+            }
+            let lrow = &logits[(i * m + row) * v..(i * m + row + 1) * v];
+            let tg = targets[i * m + row].clamp(0, v as i32 - 1) as usize;
+            let mut mx = f32::NEG_INFINITY;
+            let mut arg = 0usize;
+            for (j, &lv) in lrow.iter().enumerate() {
+                if lv > mx {
+                    mx = lv;
+                    arg = j;
+                }
+            }
+            let mut se = 0.0f32;
+            for &lv in lrow {
+                se += (lv - mx).exp();
+            }
+            let lse = se.ln();
+            loss[i] += -(lrow[tg] - mx - lse) * mk;
+            if arg == tg {
+                acc[i] += mk;
+            }
+        }
+        loss[i] /= denom;
+        acc[i] /= denom;
+    }
+    (loss, acc)
+}
+
+/// Backward pass: per-adapter losses plus gradients of every LoRA tensor
+/// (14 flat buffers in `LORA_ORDER`, shapes matching the inputs). The loss
+/// is the *sum* of per-adapter masked mean CE — adapter `i`'s gradient is
+/// independent of its pack neighbours (paper §3.2).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward(
+    spec: &Spec,
+    fwd: &Forward,
+    base: &[HostTensor],
+    lora: &[&[f32]; 14],
+    scale: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    bs: usize,
+    r: usize,
+) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+    let (nh, dh) = (spec.n_heads, spec.d_head());
+    let m = bs * s;
+    let nm = n * m;
+    let sqrt_dh = (dh as f32).sqrt();
+    let embed = base[EMBED].as_f32()?;
+
+    // Per-adapter losses + dlogits.
+    let mut per = vec![0.0f32; n];
+    let mut dlogits = vec![0.0f32; nm * v];
+    for i in 0..n {
+        let mut denom = 0.0f32;
+        for row in 0..m {
+            denom += mask[i * m + row];
+        }
+        let denom = denom.max(1.0);
+        for row in 0..m {
+            let mk = mask[i * m + row];
+            let lrow = &fwd.logits[(i * m + row) * v..(i * m + row + 1) * v];
+            let tg = targets[i * m + row].clamp(0, v as i32 - 1) as usize;
+            if mk == 0.0 {
+                continue;
+            }
+            let mut mx = f32::NEG_INFINITY;
+            for &lv in lrow {
+                if lv > mx {
+                    mx = lv;
+                }
+            }
+            let mut se = 0.0f32;
+            for &lv in lrow {
+                se += (lv - mx).exp();
+            }
+            let lse = se.ln();
+            per[i] += -(lrow[tg] - mx - lse) * mk;
+            let w = mk / denom;
+            let drow = &mut dlogits[(i * m + row) * v..(i * m + row + 1) * v];
+            for j in 0..v {
+                drow[j] = (lrow[j] - mx - lse).exp() * w;
+            }
+            drow[tg] -= w;
+        }
+        per[i] /= denom;
+    }
+
+    // Head + final LN.
+    let mut dxf = vec![0.0f32; nm * d];
+    mm_acc(&mut dxf, &dlogits, embed, nm, v, d, 1.0);
+    let lnf = base[LNF].as_f32()?;
+    let mut dx = vec![0.0f32; nm * d];
+    ln_bwd_acc(&mut dx, &dxf, lnf, &fwd.xhatf, &fwd.invf, nm, d);
+
+    // LoRA gradient buffers, shapes matching the inputs. Split at the
+    // a_*/b_* boundary so one projection's backward can borrow its `da`
+    // and `db` slices simultaneously.
+    let mut grads: Vec<Vec<f32>> =
+        (0..LORA_ORDER.len()).map(|i| vec![0.0f32; lora[i].len()]).collect();
+    let (grads_a, grads_b) = grads.split_at_mut(B_DOWN);
+    let mut dmid = Vec::new();
+
+    for l in (0..spec.n_layers).rev() {
+        let save = &fwd.layers[l];
+        let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
+        let ln2 = &base[LN2].as_f32()?[l * d..(l + 1) * d];
+        let wq = &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wk = &base[WK].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wv = &base[WV].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wo = &base[WO].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wup = &base[WUP].as_f32()?[l * d * f..(l + 1) * d * f];
+        let wgate = &base[WGATE].as_f32()?[l * d * f..(l + 1) * d * f];
+        let wdown = &base[WDOWN].as_f32()?[l * f * d..(l + 1) * f * d];
+        let la = |idx: usize, din: usize| &lora[idx][l * n * din * r..(l + 1) * n * din * r];
+        let lb = |idx: usize, dout: usize| &lora[idx][l * n * r * dout..(l + 1) * n * r * dout];
+        macro_rules! ga {
+            ($idx:expr, $din:expr) => {
+                &mut grads_a[$idx][l * n * $din * r..(l + 1) * n * $din * r]
+            };
+        }
+        macro_rules! gb {
+            ($idx:expr, $dout:expr) => {
+                &mut grads_b[$idx - B_DOWN][l * n * r * $dout..(l + 1) * n * r * $dout]
+            };
+        }
+
+        // MLP branch: x2 = x1 + down(act).
+        let mut dact = vec![0.0f32; nm * f];
+        proj_bwd(
+            &mut dact,
+            ga!(A_DOWN, f),
+            gb!(B_DOWN, d),
+            &dx,
+            &save.act,
+            &save.mid_down,
+            wdown,
+            la(A_DOWN, f),
+            lb(B_DOWN, d),
+            scale,
+            n,
+            m,
+            f,
+            d,
+            r,
+            &mut dmid,
+        );
+        let mut dup = vec![0.0f32; nm * f];
+        let mut dgate = vec![0.0f32; nm * f];
+        for j in 0..nm * f {
+            dup[j] = dact[j] * silu(save.gate[j]);
+            dgate[j] = dact[j] * save.up[j] * dsilu(save.gate[j]);
+        }
+        let mut dh2 = vec![0.0f32; nm * d];
+        proj_bwd(
+            &mut dh2,
+            ga!(A_UP, d),
+            gb!(B_UP, f),
+            &dup,
+            &save.h2,
+            &save.mid_up,
+            wup,
+            la(A_UP, d),
+            lb(B_UP, f),
+            scale,
+            n,
+            m,
+            d,
+            f,
+            r,
+            &mut dmid,
+        );
+        proj_bwd(
+            &mut dh2,
+            ga!(A_GATE, d),
+            gb!(B_GATE, f),
+            &dgate,
+            &save.h2,
+            &save.mid_gate,
+            wgate,
+            la(A_GATE, d),
+            lb(B_GATE, f),
+            scale,
+            n,
+            m,
+            d,
+            f,
+            r,
+            &mut dmid,
+        );
+        // dx1 = dx (residual) + LN2 backward of dh2.
+        let mut dx1 = dx.clone();
+        ln_bwd_acc(&mut dx1, &dh2, ln2, &save.xhat2, &save.inv2, nm, d);
+
+        // Attention branch: x1 = x0 + o_proj(o).
+        let mut do_ = vec![0.0f32; nm * d];
+        proj_bwd(
+            &mut do_,
+            ga!(A_O, d),
+            gb!(B_O, d),
+            &dx1,
+            &save.o,
+            &save.mid_o,
+            wo,
+            la(A_O, d),
+            lb(B_O, d),
+            scale,
+            n,
+            m,
+            d,
+            d,
+            r,
+            &mut dmid,
+        );
+
+        let mut dq = vec![0.0f32; nm * d];
+        let mut dk = vec![0.0f32; nm * d];
+        let mut dv = vec![0.0f32; nm * d];
+        let mut dp = vec![0.0f32; s];
+        for i in 0..n {
+            for b in 0..bs {
+                for hh in 0..nh {
+                    for t in 0..s {
+                        let base_t = ((i * bs + b) * s + t) * d + hh * dh;
+                        let dorow = &do_[base_t..base_t + dh];
+                        let prow = &save.p[(((i * bs + b) * nh + hh) * s + t) * s
+                            ..(((i * bs + b) * nh + hh) * s + t) * s + s];
+                        // dP and softmax backward.
+                        let mut ds = 0.0f32;
+                        for u in 0..=t {
+                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                            let vrow = &save.v[base_u..base_u + dh];
+                            let mut dot = 0.0f32;
+                            for c in 0..dh {
+                                dot += dorow[c] * vrow[c];
+                            }
+                            dp[u] = dot;
+                            ds += dot * prow[u];
+                            // dv += P[t,u] * do
+                            let dvrow = &mut dv[base_u..base_u + dh];
+                            for c in 0..dh {
+                                dvrow[c] += prow[u] * dorow[c];
+                            }
+                        }
+                        for u in 0..=t {
+                            let datt = prow[u] * (dp[u] - ds) / sqrt_dh;
+                            if datt == 0.0 {
+                                continue;
+                            }
+                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                            // dq[t] += datt * k[u]; dk[u] += datt * q[t]
+                            let krow = &save.k[base_u..base_u + dh];
+                            let qrow = &save.q[base_t..base_t + dh];
+                            let dqrow = &mut dq[base_t..base_t + dh];
+                            for c in 0..dh {
+                                dqrow[c] += datt * krow[c];
+                            }
+                            let dkrow = &mut dk[base_u..base_u + dh];
+                            for c in 0..dh {
+                                dkrow[c] += datt * qrow[c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut dh = vec![0.0f32; nm * d];
+        proj_bwd(
+            &mut dh,
+            ga!(A_Q, d),
+            gb!(B_Q, d),
+            &dq,
+            &save.h,
+            &save.mid_q,
+            wq,
+            la(A_Q, d),
+            lb(B_Q, d),
+            scale,
+            n,
+            m,
+            d,
+            d,
+            r,
+            &mut dmid,
+        );
+        proj_bwd(
+            &mut dh,
+            ga!(A_K, d),
+            gb!(B_K, d),
+            &dk,
+            &save.h,
+            &save.mid_k,
+            wk,
+            la(A_K, d),
+            lb(B_K, d),
+            scale,
+            n,
+            m,
+            d,
+            d,
+            r,
+            &mut dmid,
+        );
+        proj_bwd(
+            &mut dh,
+            ga!(A_V, d),
+            gb!(B_V, d),
+            &dv,
+            &save.h,
+            &save.mid_v,
+            wv,
+            la(A_V, d),
+            lb(B_V, d),
+            scale,
+            n,
+            m,
+            d,
+            d,
+            r,
+            &mut dmid,
+        );
+        // dx0 = dx1 (residual) + LN1 backward of dh.
+        let mut dx0 = dx1.clone();
+        ln_bwd_acc(&mut dx0, &dh, ln1, &save.xhat1, &save.inv1, nm, d);
+        dx = dx0;
+    }
+
+    Ok((per, grads))
+}
+
+// ---------------------------------------------------------------------------
+// AdamW (per-adapter learning rate, padded-rank masking)
+// ---------------------------------------------------------------------------
+
+/// One AdamW update over a flat LoRA tensor of shape `(L, n, d2, d3)`.
+/// `rank_axis_last` is true for `a_*` tensors (rank on the last axis).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn adamw_update(
+    lora: &[f32],
+    m: &[f32],
+    v: &[f32],
+    grad: &[f32],
+    lr: &[f32],
+    rmask: &[f32],
+    n: usize,
+    d2: usize,
+    d3: usize,
+    r: usize,
+    rank_axis_last: bool,
+    t_new: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let bc1 = 1.0 - ADAM_B1.powf(t_new);
+    let bc2 = 1.0 - ADAM_B2.powf(t_new);
+    let layers = lora.len() / (n * d2 * d3);
+    let mut out_l = vec![0.0f32; lora.len()];
+    let mut out_m = vec![0.0f32; lora.len()];
+    let mut out_v = vec![0.0f32; lora.len()];
+    for l in 0..layers {
+        for i in 0..n {
+            let lri = lr[i];
+            for x2 in 0..d2 {
+                for x3 in 0..d3 {
+                    let idx = ((l * n + i) * d2 + x2) * d3 + x3;
+                    let rank_idx = if rank_axis_last { x3 } else { x2 };
+                    let km = rmask[i * r + rank_idx];
+                    let g = grad[idx] * km;
+                    let m1 = ADAM_B1 * m[idx] + (1.0 - ADAM_B1) * g;
+                    let v1 = ADAM_B2 * v[idx] + (1.0 - ADAM_B2) * g * g;
+                    let mh = m1 / bc1;
+                    let vh = v1 / bc2;
+                    let upd = lri * mh / (vh.sqrt() + ADAM_EPS);
+                    out_l[idx] = (lora[idx] - upd) * km;
+                    out_m[idx] = m1;
+                    out_v[idx] = v1;
+                }
+            }
+        }
+    }
+    (out_l, out_m, out_v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::state::{lora_shape, proj_dims};
+    use crate::runtime::ModelInfo;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mm_variants_match_hand_computation() {
+        // a = [[1,2,3],[4,5,6]] (2x3), b = [[7,8],[9,10],[11,12]] (3x2)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let mut out = [0.0f32; 4];
+        mm_acc(&mut out, &a, &b, 2, 3, 2, 1.0);
+        assert_eq!(out, [58.0, 64.0, 139.0, 154.0]);
+
+        // a (2x3) @ b^T with b stored (2x3): out[i][j] = row_i . row_j
+        let bt = [1.0, 0.0, 1.0, 0.0, 2.0, 0.0];
+        let mut out = [0.0f32; 4];
+        mm_nt_acc(&mut out, &a, &bt, 2, 3, 2, 1.0);
+        assert_eq!(out, [4.0, 4.0, 10.0, 10.0]);
+
+        // a^T (3x2 from a stored 2x3) @ b2 (2x2)
+        let b2 = [1.0, 2.0, 3.0, 4.0];
+        let mut out = [0.0f32; 6];
+        mm_tn_acc(&mut out, &a, &b2, 2, 3, 2, 1.0);
+        // a^T = [[1,4],[2,5],[3,6]]; a^T@b2 = [[13,18],[17,24],[21,30]]
+        assert_eq!(out, [13.0, 18.0, 17.0, 24.0, 21.0, 30.0]);
+    }
+
+    #[test]
+    fn layernorm_forward_is_normalized() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let g = [1.0f32; 4];
+        let mut h = [0.0f32; 4];
+        let mut xhat = [0.0f32; 4];
+        let mut inv = [0.0f32; 1];
+        ln_fwd(&x, &g, 1, 4, &mut h, &mut xhat, &mut inv);
+        let mean: f32 = h.iter().sum::<f32>() / 4.0;
+        let var: f32 = h.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    fn tiny_mi() -> ModelInfo {
+        ModelInfo {
+            name: "fd".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 12,
+            seq: 6,
+            params: 0,
+            weights: String::new(),
+        }
+    }
+
+    fn tiny_spec(mi: &ModelInfo) -> Spec {
+        Spec {
+            vocab: mi.vocab,
+            d_model: mi.d_model,
+            n_layers: mi.n_layers,
+            n_heads: mi.n_heads,
+            d_ff: mi.d_ff,
+            seq: mi.seq,
+        }
+    }
+
+    fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, std: f64) -> HostTensor {
+        let count: usize = shape.iter().product();
+        let data = (0..count).map(|_| (rng.normal() * std) as f32).collect();
+        HostTensor::f32(shape, data).unwrap()
+    }
+
+    fn rand_base(mi: &ModelInfo, rng: &mut Rng) -> Vec<HostTensor> {
+        let (v, d, l, f, s) = (mi.vocab, mi.d_model, mi.n_layers, mi.d_ff, mi.seq);
+        let ones_ish = |rng: &mut Rng, shape: Vec<usize>| {
+            let count: usize = shape.iter().product();
+            let data = (0..count).map(|_| 1.0 + (rng.normal() * 0.1) as f32).collect();
+            HostTensor::f32(shape, data).unwrap()
+        };
+        vec![
+            rand_tensor(rng, vec![v, d], 0.3),
+            rand_tensor(rng, vec![s, d], 0.3),
+            ones_ish(rng, vec![l, d]),
+            ones_ish(rng, vec![l, d]),
+            rand_tensor(rng, vec![l, d, d], (d as f64).powf(-0.5)),
+            rand_tensor(rng, vec![l, d, d], (d as f64).powf(-0.5)),
+            rand_tensor(rng, vec![l, d, d], (d as f64).powf(-0.5)),
+            rand_tensor(rng, vec![l, d, d], (d as f64).powf(-0.5)),
+            rand_tensor(rng, vec![l, d, f], (d as f64).powf(-0.5)),
+            rand_tensor(rng, vec![l, d, f], (d as f64).powf(-0.5)),
+            rand_tensor(rng, vec![l, f, d], (f as f64).powf(-0.5)),
+            ones_ish(rng, vec![d]),
+        ]
+    }
+
+    /// Finite-difference check of the hand-derived backward pass: perturb
+    /// sampled LoRA coordinates and compare (L(θ+ε) − L(θ−ε)) / 2ε against
+    /// the analytic gradient. This is the in-tree guarantee that the
+    /// reference backend's gradients match `ref.py`/autodiff semantics.
+    #[test]
+    fn finite_difference_gradient_check() {
+        let mi = tiny_mi();
+        let spec = tiny_spec(&mi);
+        let (n, r, bs) = (2usize, 3usize, 1usize);
+        let mut rng = Rng::new(42);
+
+        let base = rand_base(&mi, &mut rng);
+        let mut lora_t: Vec<HostTensor> = Vec::new();
+        for name in LORA_ORDER {
+            let shape = lora_shape(&mi, name, n, r);
+            // Both A and B nonzero so every backward path is exercised.
+            let (_, p) = name.split_once('_').unwrap();
+            let din = proj_dims(&mi, p).0 as f64;
+            lora_t.push(rand_tensor(&mut rng, shape, 0.5 / din.sqrt()));
+        }
+        let scale = vec![1.0f32, 0.7];
+        let m = bs * spec.seq;
+        let tokens: Vec<i32> =
+            (0..n * m).map(|_| rng.below(spec.vocab as u64) as i32).collect();
+        let targets: Vec<i32> =
+            (0..n * m).map(|_| rng.below(spec.vocab as u64) as i32).collect();
+        let mask: Vec<f32> = (0..n * m).map(|_| if rng.f64() < 0.6 { 1.0 } else { 0.0 }).collect();
+
+        let total_loss = |lora_t: &[HostTensor]| -> f32 {
+            let lora: [&[f32]; 14] = std::array::from_fn(|i| lora_t[i].as_f32().unwrap());
+            let fwd = forward(&spec, &base, &lora, &scale, &tokens, n, bs, r).unwrap();
+            let (loss, _) = loss_and_acc(&spec, &fwd.logits, &targets, &mask, n, bs);
+            loss.iter().sum()
+        };
+
+        let lora: [&[f32]; 14] = std::array::from_fn(|i| lora_t[i].as_f32().unwrap());
+        let fwd = forward(&spec, &base, &lora, &scale, &tokens, n, bs, r).unwrap();
+        let (_, grads) =
+            backward(&spec, &fwd, &base, &lora, &scale, &targets, &mask, n, bs, r).unwrap();
+
+        let gmax = grads
+            .iter()
+            .flat_map(|g| g.iter())
+            .fold(0.0f32, |acc, &g| acc.max(g.abs()));
+        assert!(gmax > 1e-4, "gradients unexpectedly all ~zero (gmax {gmax})");
+
+        let eps = 1e-2f32;
+        let mut checked = 0usize;
+        let mut check_rng = Rng::new(7);
+        for _ in 0..400 {
+            let k = check_rng.usize_below(14);
+            let idx = check_rng.usize_below(lora_t[k].len());
+            let g = grads[k][idx];
+            if g.abs() < 0.03 * gmax {
+                continue; // too small for f32 finite differences
+            }
+            let orig = lora_t[k].as_f32().unwrap()[idx];
+            lora_t[k].as_f32_mut().unwrap()[idx] = orig + eps;
+            let lp = total_loss(&lora_t);
+            lora_t[k].as_f32_mut().unwrap()[idx] = orig - eps;
+            let lm = total_loss(&lora_t);
+            lora_t[k].as_f32_mut().unwrap()[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let rel = (fd - g).abs() / g.abs().max(fd.abs()).max(1e-6);
+            assert!(
+                rel < 0.25,
+                "grad mismatch at {}[{idx}]: analytic {g:.5}, fd {fd:.5} (rel {rel:.3})",
+                LORA_ORDER[k]
+            );
+            checked += 1;
+            if checked >= 24 {
+                break;
+            }
+        }
+        assert!(checked >= 6, "only {checked} coordinates were large enough to check");
+    }
+
+    #[test]
+    fn adamw_first_step_is_signed_descent_and_masks_padding() {
+        // With zero moments and t=0 -> t_new=1, AdamW's first update is
+        // lr * g/(|g| + eps') ≈ lr * sign(g).
+        let lora = vec![1.0f32; 8]; // (L=1, n=1, d2=2, d3=4), rank axis last
+        let m = vec![0.0f32; 8];
+        let v = vec![0.0f32; 8];
+        let grad = vec![0.5f32, -0.5, 0.5, -0.5, 0.5, -0.5, 0.5, -0.5];
+        let rmask = vec![1.0f32, 1.0, 0.0, 0.0]; // true rank 2 of padded 4
+        let (nl, nm, nv) = adamw_update(&lora, &m, &v, &grad, &[0.1], &rmask, 1, 2, 4, 4, true, 1.0);
+        // Unmasked columns move by ~lr against the gradient sign.
+        assert!((nl[0] - 0.9).abs() < 1e-3, "{}", nl[0]);
+        assert!((nl[1] - 1.1).abs() < 1e-3, "{}", nl[1]);
+        // Padded rank columns are zeroed outright.
+        assert_eq!(nl[2], 0.0);
+        assert_eq!(nl[3], 0.0);
+        assert_eq!(nm[2], 0.0);
+        assert_eq!(nv[3], 0.0);
+    }
+}

@@ -1,9 +1,14 @@
-//! Host-side tensors and conversion to/from PJRT [`xla::Literal`]s.
+//! Host-side tensors — the currency every execution backend trades in.
+//! With the `pjrt` feature, conversions to/from `xla::Literal` are
+//! compiled in for the PJRT backend.
 //!
 //! Only the two dtypes the artifacts use exist (f32, i32) — keeping the
 //! enum closed lets every call site match exhaustively.
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
 use xla::{ElementType, Literal};
 
 /// Element type of a host tensor (mirrors `python/compile/io_bin.py`).
@@ -113,7 +118,8 @@ impl HostTensor {
         }
     }
 
-    /// Convert to an [`xla::Literal`] (rank-0 scalars included).
+    /// Convert to an `xla::Literal` (rank-0 scalars included).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -123,7 +129,8 @@ impl HostTensor {
         lit.reshape(&dims).with_context(|| format!("reshape to {:?}", self.shape))
     }
 
-    /// Read back from an [`xla::Literal`].
+    /// Read back from an `xla::Literal`.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -146,6 +153,7 @@ mod tests {
         assert!(HostTensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_round_trip_f32() {
         let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
@@ -155,6 +163,7 @@ mod tests {
         assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_round_trip_i32_and_scalar() {
         let t = HostTensor::i32(vec![3], vec![7, -1, 5]).unwrap();

@@ -48,14 +48,20 @@ pub fn sweep(rt: &Arc<Runtime>, model: &str, configs: &[LoraConfig], opts: &Swee
     let max_n = rt.manifest.max_bucket_n(model).max(1);
     let mut out = vec![];
     // Group by (rank bucket, batch bucket) so padding waste stays low, then
-    // chunk each group to the bucket's adapter capacity.
+    // chunk each group to the largest bucket that actually admits its
+    // (rank, batch) shape — grids are not full cross products (e.g. nano
+    // has n=4 only at bs=1).
     let mut groups: std::collections::BTreeMap<(usize, usize), Vec<LoraConfig>> =
         std::collections::BTreeMap::new();
     for c in configs {
         groups.entry((c.rank, c.batch)).or_default().push(c.clone());
     }
-    for ((_, _), group) in groups {
-        for chunk in group.chunks(max_n) {
+    for ((rank, batch), group) in groups {
+        let cap = (1..=max_n)
+            .rev()
+            .find(|&k| rt.manifest.train_bucket(model, k, rank, batch).is_some())
+            .unwrap_or(1);
+        for chunk in group.chunks(cap) {
             let rep = run_pack(rt, model, chunk, &topts)?;
             out.extend(rep.adapters);
         }
