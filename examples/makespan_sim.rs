@@ -35,8 +35,14 @@ fn main() -> Result<()> {
     let grid = SearchSpace::default().grid("gsm8k");
 
     let mut fig4 = Table::new(
-        &format!("Figure 4 — makespan of the 120-config sweep on {gpus} x A100-40G (normalized to Min GPU)"),
-        &["model", "Min GPU", "Max GPU", "Seq PLoRA", "PLoRA", "PLoRA speedup", "AR bound", "emp ratio"],
+        &format!(
+            "Figure 4 — makespan of the 120-config sweep on {gpus} x A100-40G \
+             (normalized to Min GPU)"
+        ),
+        &[
+            "model", "Min GPU", "Max GPU", "Seq PLoRA", "PLoRA", "PLoRA speedup", "AR bound",
+            "emp ratio",
+        ],
     );
 
     for model in models {

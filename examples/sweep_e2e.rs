@@ -45,6 +45,7 @@ fn main() -> Result<()> {
         budget: TrainBudget { dataset: steps, epochs: 1 },
         eval_batches: 4,
         seed: 23,
+        gpus: 2,
     };
 
     let mut all = vec![];

@@ -39,7 +39,8 @@ fn main() -> Result<()> {
     let rt = Arc::new(Runtime::load(&Runtime::default_dir())?);
     let mi = rt.manifest.model(&model)?.clone();
     println!(
-        "== PLoRA end-to-end == model `{model}` ({:.2}M params, {} layers, seq {}) on {} pool slots",
+        "== PLoRA end-to-end == model `{model}` ({:.2}M params, {} layers, \
+         seq {}) on {} pool slots",
         mi.params as f64 / 1e6,
         mi.n_layers,
         mi.seq,
@@ -160,7 +161,8 @@ fn main() -> Result<()> {
     let ckpts = engine.checkpoints.as_ref().unwrap().list(&model);
     let (a, b, c) = report.calib_fit;
     println!(
-        "\nlive makespan {}  adapters {}  checkpoints saved {}  calib fit t = {:.4} + {:.2e}·tok + {:.2e}·n",
+        "\nlive makespan {}  adapters {}  checkpoints saved {}  calib fit \
+         t = {:.4} + {:.2e}·tok + {:.2e}·n",
         fmt_dur(report.makespan),
         report.total_adapters(),
         ckpts.len(),

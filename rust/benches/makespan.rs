@@ -19,10 +19,17 @@ fn main() {
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
     let models: Vec<String> = match args.get("model") {
         Some(m) => vec![m.to_string()],
-        None => ["qwen2.5-3b", "qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b", "llama3.2-3b", "llama3.1-8b"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect(),
+        None => [
+            "qwen2.5-3b",
+            "qwen2.5-7b",
+            "qwen2.5-14b",
+            "qwen2.5-32b",
+            "llama3.2-3b",
+            "llama3.1-8b",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
     };
     let gpus = 8;
     let budget = TrainBudget::default();

@@ -83,7 +83,10 @@ fn main() {
         assert!(secs < 600.0, "paper: planning stays within 10 minutes");
     }
     quality.print();
-    println!("paper: AR in [1.05, 1.14]; our certified empirical ratio is the comparable tight metric.");
+    println!(
+        "paper: AR in [1.05, 1.14]; our certified empirical ratio is the \
+         comparable tight metric."
+    );
 
     bench.finish().unwrap();
 }

@@ -1,0 +1,121 @@
+//! Session orchestration benchmark: a fixed 8-job queue on the reference
+//! backend, measured end-to-end through `Session::submit`/`drain` — FIFO
+//! admission, concurrent packed jobs, adapter-completion re-bucketing.
+//!
+//! Emits `target/BENCH_session.json` (makespan + throughput + event
+//! counts) so the repo's perf trajectory is recorded run over run, and
+//! appends to the shared `target/plora-bench.jsonl` like every bench.
+//!
+//! Run: `cargo bench --bench session`
+
+use std::sync::Arc;
+
+use plora::bench::Bench;
+use plora::cluster::ResourceMonitor;
+use plora::config::{pool, LoraConfig};
+use plora::costmodel::{ExecMode, Pack, TrainBudget};
+use plora::planner::PlannedJob;
+use plora::runtime::Runtime;
+use plora::session::{Session, SessionReport};
+use plora::train::TrainOptions;
+use plora::util::json::Json;
+
+fn cfg(id: usize, task: &str, rank: usize, bs: usize) -> LoraConfig {
+    LoraConfig { id, lr: 2e-3, batch: bs, rank, alpha_ratio: 1.0, task: task.into() }
+}
+
+/// The fixed queue: 8 jobs / 12 adapters on `nano`, mixed batch sizes so
+/// several jobs hit an adapter-completion boundary and re-bucket.
+fn queue() -> Vec<PlannedJob> {
+    let tasks = ["modadd", "copy", "parity", "needle"];
+    let mut jobs = vec![];
+    let mut id = 0usize;
+    for j in 0..8usize {
+        let n = if j % 2 == 0 { 2 } else { 1 };
+        let mut configs = vec![];
+        for s in 0..n {
+            let bs = if s == 0 { 1 } else { 2 };
+            configs.push(cfg(id, tasks[(j + s) % tasks.len()], 8, bs));
+            id += 1;
+        }
+        jobs.push(PlannedJob { id: j, pack: Pack::new(configs), d: 1, mode: ExecMode::Packed });
+    }
+    jobs
+}
+
+fn run_once(rt: &Arc<Runtime>, gpus: usize, rebucket: bool) -> SessionReport {
+    let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, gpus), "nano");
+    session.options = TrainOptions {
+        budget: TrainBudget { dataset: 24, epochs: 1 },
+        eval_batches: 2,
+        seed: 11,
+        log_every: 0,
+    };
+    session.rebucket = rebucket;
+    for job in queue() {
+        session.submit_planned(job).expect("submit");
+    }
+    session.drain().expect("drain")
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::load(&Runtime::default_dir())?);
+    let gpus = 2usize;
+    let mut b = Bench::new("session");
+    b.min_iters = 3;
+    b.max_iters = 5;
+
+    let mut last: Option<SessionReport> = None;
+    let s = b.measure("queue8_rebucket", || {
+        last = Some(run_once(&rt, gpus, true));
+    });
+    let report = last.take().expect("at least one measured run");
+    let s_off = b.measure("queue8_norebucket", || {
+        last = Some(run_once(&rt, gpus, false));
+    });
+    let report_off = last.take().expect("at least one measured run");
+    b.finish()?;
+
+    let rank_units: usize = report
+        .outcomes
+        .iter()
+        .flat_map(|o| &o.report.adapters)
+        .map(|a| a.config.rank)
+        .sum();
+    let padded_rows: usize = report.outcomes.iter().map(|o| o.report.padded_rows).sum();
+    let padded_rows_off: usize =
+        report_off.outcomes.iter().map(|o| o.report.padded_rows).sum();
+    let rec = Json::obj(vec![
+        ("bench", Json::str("session")),
+        ("jobs", Json::num(report.outcomes.len() as f64)),
+        ("adapters", Json::num(report.total_adapters() as f64)),
+        ("gpus", Json::num(gpus as f64)),
+        ("makespan_s", Json::num(report.makespan)),
+        ("makespan_norebucket_s", Json::num(report_off.makespan)),
+        ("mean_wall_s", Json::num(s.mean)),
+        ("mean_wall_norebucket_s", Json::num(s_off.mean)),
+        ("rank_units_per_s", Json::num(rank_units as f64 / report.makespan.max(1e-9))),
+        ("rebucket_events", Json::num(report.rebuckets() as f64)),
+        ("padded_rows", Json::num(padded_rows as f64)),
+        ("padded_rows_norebucket", Json::num(padded_rows_off as f64)),
+        ("events", Json::num(report.events.len() as f64)),
+    ]);
+    let mut out = String::new();
+    rec.write(&mut out);
+    // Anchor on the crate root: cargo runs benches with CWD = package root,
+    // but the workspace target dir lives one level up.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("BENCH_session.json"), &out)?;
+    println!(
+        "\nsession queue8: makespan {:.2}s (no-rebucket {:.2}s), {} rebuckets, \
+         padded rows {} -> {}",
+        report.makespan,
+        report_off.makespan,
+        report.rebuckets(),
+        padded_rows_off,
+        padded_rows,
+    );
+    println!("wrote rust/target/BENCH_session.json");
+    Ok(())
+}

@@ -75,17 +75,117 @@ impl ModelGeom {
 /// Paper-scale geometries (public model-card shapes) plus the TinyLM sizes
 /// this repo trains live — so `plan`/`sim` accept both families.
 pub const GEOMS: &[ModelGeom] = &[
-    ModelGeom { name: "qwen2.5-3b", n_layers: 36, d_model: 2048, d_ff: 11008, n_heads: 16, vocab: 151_936, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
-    ModelGeom { name: "qwen2.5-7b", n_layers: 28, d_model: 3584, d_ff: 18944, n_heads: 28, vocab: 152_064, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
-    ModelGeom { name: "qwen2.5-14b", n_layers: 48, d_model: 5120, d_ff: 13824, n_heads: 40, vocab: 152_064, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
-    ModelGeom { name: "qwen2.5-32b", n_layers: 64, d_model: 5120, d_ff: 27648, n_heads: 40, vocab: 152_064, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
-    ModelGeom { name: "llama3.2-3b", n_layers: 28, d_model: 3072, d_ff: 8192, n_heads: 24, vocab: 128_256, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
-    ModelGeom { name: "llama3.1-8b", n_layers: 32, d_model: 4096, d_ff: 14336, n_heads: 32, vocab: 128_256, seq: 1024, base_bytes: 2.0, lora_bytes: 4.0 },
+    ModelGeom {
+        name: "qwen2.5-3b",
+        n_layers: 36,
+        d_model: 2048,
+        d_ff: 11008,
+        n_heads: 16,
+        vocab: 151_936,
+        seq: 1024,
+        base_bytes: 2.0,
+        lora_bytes: 4.0,
+    },
+    ModelGeom {
+        name: "qwen2.5-7b",
+        n_layers: 28,
+        d_model: 3584,
+        d_ff: 18944,
+        n_heads: 28,
+        vocab: 152_064,
+        seq: 1024,
+        base_bytes: 2.0,
+        lora_bytes: 4.0,
+    },
+    ModelGeom {
+        name: "qwen2.5-14b",
+        n_layers: 48,
+        d_model: 5120,
+        d_ff: 13824,
+        n_heads: 40,
+        vocab: 152_064,
+        seq: 1024,
+        base_bytes: 2.0,
+        lora_bytes: 4.0,
+    },
+    ModelGeom {
+        name: "qwen2.5-32b",
+        n_layers: 64,
+        d_model: 5120,
+        d_ff: 27648,
+        n_heads: 40,
+        vocab: 152_064,
+        seq: 1024,
+        base_bytes: 2.0,
+        lora_bytes: 4.0,
+    },
+    ModelGeom {
+        name: "llama3.2-3b",
+        n_layers: 28,
+        d_model: 3072,
+        d_ff: 8192,
+        n_heads: 24,
+        vocab: 128_256,
+        seq: 1024,
+        base_bytes: 2.0,
+        lora_bytes: 4.0,
+    },
+    ModelGeom {
+        name: "llama3.1-8b",
+        n_layers: 32,
+        d_model: 4096,
+        d_ff: 14336,
+        n_heads: 32,
+        vocab: 128_256,
+        seq: 1024,
+        base_bytes: 2.0,
+        lora_bytes: 4.0,
+    },
     // TinyLM sizes (model.py::MODELS; f32 base — the live runtime's models).
-    ModelGeom { name: "nano", n_layers: 2, d_model: 64, d_ff: 256, n_heads: 2, vocab: 256, seq: 32, base_bytes: 4.0, lora_bytes: 4.0 },
-    ModelGeom { name: "tiny", n_layers: 4, d_model: 128, d_ff: 512, n_heads: 4, vocab: 512, seq: 64, base_bytes: 4.0, lora_bytes: 4.0 },
-    ModelGeom { name: "small", n_layers: 6, d_model: 256, d_ff: 1024, n_heads: 8, vocab: 1024, seq: 64, base_bytes: 4.0, lora_bytes: 4.0 },
-    ModelGeom { name: "base", n_layers: 8, d_model: 512, d_ff: 2048, n_heads: 8, vocab: 4096, seq: 128, base_bytes: 4.0, lora_bytes: 4.0 },
+    ModelGeom {
+        name: "nano",
+        n_layers: 2,
+        d_model: 64,
+        d_ff: 256,
+        n_heads: 2,
+        vocab: 256,
+        seq: 32,
+        base_bytes: 4.0,
+        lora_bytes: 4.0,
+    },
+    ModelGeom {
+        name: "tiny",
+        n_layers: 4,
+        d_model: 128,
+        d_ff: 512,
+        n_heads: 4,
+        vocab: 512,
+        seq: 64,
+        base_bytes: 4.0,
+        lora_bytes: 4.0,
+    },
+    ModelGeom {
+        name: "small",
+        n_layers: 6,
+        d_model: 256,
+        d_ff: 1024,
+        n_heads: 8,
+        vocab: 1024,
+        seq: 64,
+        base_bytes: 4.0,
+        lora_bytes: 4.0,
+    },
+    ModelGeom {
+        name: "base",
+        n_layers: 8,
+        d_model: 512,
+        d_ff: 2048,
+        n_heads: 8,
+        vocab: 4096,
+        seq: 128,
+        base_bytes: 4.0,
+        lora_bytes: 4.0,
+    },
 ];
 
 pub fn geom(name: &str) -> Option<&'static ModelGeom> {
@@ -102,7 +202,17 @@ pub fn tiny_geom(
     vocab: usize,
     seq: usize,
 ) -> ModelGeom {
-    ModelGeom { name, n_layers, d_model, d_ff, n_heads, vocab, seq, base_bytes: 4.0, lora_bytes: 4.0 }
+    ModelGeom {
+        name,
+        n_layers,
+        d_model,
+        d_ff,
+        n_heads,
+        vocab,
+        seq,
+        base_bytes: 4.0,
+        lora_bytes: 4.0,
+    }
 }
 
 #[cfg(test)]

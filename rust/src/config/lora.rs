@@ -22,6 +22,49 @@ impl LoraConfig {
     pub fn scale(&self) -> f64 {
         self.alpha_ratio
     }
+
+    /// The id-less spec of this configuration.
+    pub fn spec(&self) -> AdapterSpec {
+        AdapterSpec {
+            lr: self.lr,
+            batch: self.batch,
+            rank: self.rank,
+            alpha_ratio: self.alpha_ratio,
+            task: self.task.clone(),
+        }
+    }
+}
+
+/// A LoRA configuration *before* an adapter id exists — what callers hand
+/// to `Session::submit` (and what `search::default_config` returns). Ids
+/// are allocated by the session at submit time, or explicitly via
+/// [`AdapterSpec::with_id`]; there is no sentinel value to leak into the
+/// checkpoint pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterSpec {
+    pub lr: f64,
+    pub batch: usize,
+    pub rank: usize,
+    pub alpha_ratio: f64,
+    pub task: String,
+}
+
+impl AdapterSpec {
+    pub fn new(task: &str) -> AdapterSpec {
+        AdapterSpec { lr: 2e-4, batch: 2, rank: 16, alpha_ratio: 1.0, task: task.to_string() }
+    }
+
+    /// Bind an adapter id, producing a full [`LoraConfig`].
+    pub fn with_id(self, id: usize) -> LoraConfig {
+        LoraConfig {
+            id,
+            lr: self.lr,
+            batch: self.batch,
+            rank: self.rank,
+            alpha_ratio: self.alpha_ratio,
+            task: self.task,
+        }
+    }
 }
 
 /// The hyperparameter search space. `grid()` builds the paper's 120-point

@@ -7,5 +7,5 @@ pub mod lora;
 pub mod pool;
 
 pub use geometry::{ModelGeom, GEOMS};
-pub use lora::{LoraConfig, SearchSpace};
+pub use lora::{AdapterSpec, LoraConfig, SearchSpace};
 pub use pool::{GpuProfile, HardwarePool, PROFILES};

@@ -168,13 +168,26 @@ impl MemoryModel {
     }
 
     /// Eq. (14)/(19): does the pack fit on `d` TP devices at load factor `c`?
-    pub fn fits(&self, pack: &Pack, d: usize, prof: &GpuProfile, c_load: f64, charge_padding: bool) -> bool {
+    pub fn fits(
+        &self,
+        pack: &Pack,
+        d: usize,
+        prof: &GpuProfile,
+        c_load: f64,
+        charge_padding: bool,
+    ) -> bool {
         self.job_bytes(pack, Sharding::tp(d), charge_padding) <= c_load * prof.mem_bytes
     }
 
     /// Minimum TP degree (power of two, ≤ `gmax`) whose per-device memory
     /// admits even a single adapter of config `c`; `None` if none does.
-    pub fn min_tp(&self, c: &LoraConfig, prof: &GpuProfile, c_load: f64, gmax: usize) -> Option<usize> {
+    pub fn min_tp(
+        &self,
+        c: &LoraConfig,
+        prof: &GpuProfile,
+        c_load: f64,
+        gmax: usize,
+    ) -> Option<usize> {
         let pack = Pack::new(vec![c.clone()]);
         let mut d = 1;
         while d <= gmax {
@@ -188,7 +201,14 @@ impl MemoryModel {
 
     /// Largest number of homogeneous `(r, bs)` adapters that fit on `d`
     /// devices (the §3.2 "up to 10 concurrent adapters" computation).
-    pub fn max_adapters(&self, r: usize, bs: usize, d: usize, prof: &GpuProfile, c_load: f64) -> usize {
+    pub fn max_adapters(
+        &self,
+        r: usize,
+        bs: usize,
+        d: usize,
+        prof: &GpuProfile,
+        c_load: f64,
+    ) -> usize {
         let proto = LoraConfig {
             id: 0,
             lr: 1e-4,

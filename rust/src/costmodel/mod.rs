@@ -16,7 +16,7 @@ pub mod memory;
 pub mod throughput;
 
 pub use memory::MemoryModel;
-pub use throughput::{CostModel, ExecMode};
+pub use throughput::{CostModel, ExecMode, JobPhase};
 
 use crate::config::LoraConfig;
 

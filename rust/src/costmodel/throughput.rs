@@ -160,6 +160,19 @@ fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> (f64, f64, f64) {
     (x[0], x[1], x[2])
 }
 
+/// One phase of a packed job between adapter-completion boundaries
+/// (see [`CostModel::job_phases`]).
+#[derive(Debug, Clone)]
+pub struct JobPhase {
+    /// Noise-free seconds this phase runs.
+    pub dur: f64,
+    /// Config ids finishing at the phase's end.
+    pub finished: Vec<usize>,
+    /// Surviving pack shape `(n, r_pad, bs_pad)` after the boundary
+    /// (all zeros once the job is done).
+    pub survivors: (usize, usize, usize),
+}
+
 /// The cost model: step time, job duration, throughput, and memory
 /// feasibility for one (geometry, profile) pair.
 #[derive(Debug, Clone)]
@@ -271,35 +284,61 @@ impl CostModel {
         pack.configs.iter().map(|c| budget.steps(c.batch)).max().unwrap_or(0)
     }
 
-    /// `T(H_j, d_j)`: wall time of the whole job (Eq. 13/18 denominator).
-    ///
-    /// Phase-wise: adapters that complete their budget *leave* the pack
-    /// (the engine re-buckets onto a smaller-n artifact at completion
-    /// boundaries), so a large-batch config riding in a small-batch pack
-    /// only costs its own steps. Phases are the distinct per-adapter step
-    /// counts in descending order.
-    pub fn job_time(&self, pack: &Pack, d: usize, mode: ExecMode, budget: &TrainBudget) -> f64 {
+    /// Phase decomposition behind [`CostModel::job_time`]: adapters that
+    /// complete their budget *leave* the pack at each boundary (the live
+    /// session re-buckets onto a smaller artifact there). Phases are the
+    /// distinct per-adapter step counts in ascending boundary order; the
+    /// simulator turns them into `AdapterFinished`/`Rebucketed` events.
+    pub fn job_phases(
+        &self,
+        pack: &Pack,
+        d: usize,
+        mode: ExecMode,
+        budget: &TrainBudget,
+    ) -> Vec<JobPhase> {
         if pack.n() == 0 {
-            return 0.0;
+            return vec![];
         }
         let mut order: Vec<(usize, &crate::config::LoraConfig)> =
             pack.configs.iter().map(|c| (budget.steps(c.batch), c)).collect();
         // Descending by steps: the alive set at step t is a prefix.
         order.sort_by(|a, b| b.0.cmp(&a.0));
-        let mut total = 0.0;
+        let mut phases = vec![];
         let mut prev_boundary = 0usize; // steps already accounted for
         // Walk boundaries from the *shortest-lived* adapter upwards.
         let mut i = order.len();
         while i > 0 {
             let steps_here = order[i - 1].0;
-            if steps_here > prev_boundary {
-                let alive = Pack::new(order[..i].iter().map(|(_, c)| (*c).clone()).collect());
-                total += (steps_here - prev_boundary) as f64 * self.step_time(&alive, d, mode);
-                prev_boundary = steps_here;
+            if steps_here == prev_boundary {
+                i -= 1;
+                continue;
             }
-            i -= 1;
+            let alive = Pack::new(order[..i].iter().map(|(_, c)| (*c).clone()).collect());
+            let dur = (steps_here - prev_boundary) as f64 * self.step_time(&alive, d, mode);
+            // Everything sitting exactly at this boundary finishes now.
+            let mut j = i;
+            while j > 0 && order[j - 1].0 == steps_here {
+                j -= 1;
+            }
+            let finished: Vec<usize> = order[j..i].iter().map(|(_, c)| c.id).collect();
+            let survivors = if j == 0 {
+                (0, 0, 0)
+            } else {
+                let surv = Pack::new(order[..j].iter().map(|(_, c)| (*c).clone()).collect());
+                (surv.n(), surv.r_pad(), surv.bs_pad())
+            };
+            phases.push(JobPhase { dur, finished, survivors });
+            prev_boundary = steps_here;
+            i = j;
         }
-        total
+        phases
+    }
+
+    /// `T(H_j, d_j)`: wall time of the whole job (Eq. 13/18 denominator) —
+    /// the sum over its [`CostModel::job_phases`], so a large-batch config
+    /// riding in a small-batch pack only costs its own steps.
+    pub fn job_time(&self, pack: &Pack, d: usize, mode: ExecMode, budget: &TrainBudget) -> f64 {
+        self.job_phases(pack, d, mode, budget).iter().map(|p| p.dur).sum()
     }
 
     /// DTM objective (Eq. 18): LoRA rank-units per second of the job.
@@ -477,6 +516,33 @@ mod tests {
         let want = 192.0 * m.step_time(&mixed, 1, ExecMode::Packed)
             + 576.0 * m.step_time(&solo, 1, ExecMode::Packed);
         assert!((t_mixed - want).abs() < 1e-9);
+    }
+
+    /// `job_phases` decomposes exactly what `job_time` sums, with the
+    /// right finishers and survivor shapes at each boundary.
+    #[test]
+    fn job_phases_decompose_job_time() {
+        let m = cm();
+        let b = TrainBudget::default(); // bs1 -> 768 steps, bs4 -> 192
+        let mut c1 = cfg(32, 1);
+        c1.id = 10;
+        let mut c4 = cfg(16, 4);
+        c4.id = 20;
+        let mixed = Pack::new(vec![c1, c4]);
+        let phases = m.job_phases(&mixed, 1, ExecMode::Packed, &b);
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].finished, vec![20], "bs4 config leaves first");
+        assert_eq!(phases[0].survivors, (1, 32, 1));
+        assert_eq!(phases[1].finished, vec![10]);
+        assert_eq!(phases[1].survivors, (0, 0, 0));
+        let total: f64 = phases.iter().map(|p| p.dur).sum();
+        assert!((total - m.job_time(&mixed, 1, ExecMode::Packed, &b)).abs() < 1e-12);
+        // Homogeneous pack: a single phase, everyone finishes together.
+        let flat = Pack::new(vec![cfg(32, 1); 3]);
+        let phases = m.job_phases(&flat, 1, ExecMode::Packed, &b);
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].finished.len(), 3);
+        assert!(m.job_phases(&Pack::new(vec![]), 1, ExecMode::Packed, &b).is_empty());
     }
 
     /// Fig. 6 shape: base-model amortization alone (Sequential mode packs)

@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 use crate::planner::PlannedJob;
 use crate::runtime::tensor_file;
 use crate::runtime::{HostTensor, Runtime, TrainState};
-use crate::train::JobReport;
+use crate::train::{AdapterReport, JobReport};
 use crate::util::json::Json;
 
 /// Directory of finished-adapter checkpoints.
@@ -31,36 +31,39 @@ impl CheckpointPool {
         (stem.with_extension("bin"), stem.with_extension("json"))
     }
 
-    /// Save every adapter of a finished job.
-    ///
-    /// The live driver consumed its `TrainState` internally, so adapters
-    /// are re-extracted by replaying the *report*: we reconstruct a state
-    /// holder from the saved packed tensors only when available; otherwise
-    /// we persist metrics + config alone. For full tensor checkpoints use
-    /// [`CheckpointPool::save_state`] from call sites that still hold the
-    /// `TrainState`.
+    /// Save one finished adapter's metadata sidecar (the session calls
+    /// this at the adapter's completion boundary — possibly mid-job, right
+    /// before a re-bucket drops its slot). Pair with
+    /// [`CheckpointPool::save_state`] for the tensor checkpoint.
+    pub fn save_adapter(&self, model: &str, job_id: usize, adapter: &AdapterReport) -> Result<()> {
+        let (_bin, meta) = self.paths(model, adapter.config.id);
+        let c = &adapter.config;
+        let j = Json::obj(vec![
+            ("model", Json::str(model)),
+            ("job_id", Json::num(job_id as f64)),
+            ("config_id", Json::num(c.id as f64)),
+            ("task", Json::str(c.task.clone())),
+            ("lr", Json::num(c.lr)),
+            ("batch", Json::num(c.batch as f64)),
+            ("rank", Json::num(c.rank as f64)),
+            ("alpha_ratio", Json::num(c.alpha_ratio)),
+            ("steps", Json::num(adapter.steps as f64)),
+            ("final_loss", Json::num(adapter.final_loss as f64)),
+            ("eval_loss", Json::num(adapter.eval_loss as f64)),
+            ("eval_acc", Json::num(adapter.eval_acc as f64)),
+            ("base_acc", Json::num(adapter.base_acc as f64)),
+        ]);
+        let mut s = String::new();
+        j.write(&mut s);
+        std::fs::write(&meta, s).with_context(|| format!("write {}", meta.display()))
+    }
+
+    /// Save every adapter of a finished job (metadata sidecars). For full
+    /// tensor checkpoints use [`CheckpointPool::save_state`] from call
+    /// sites that still hold the `TrainState`.
     pub fn save_job(&self, model: &str, job: &PlannedJob, report: &JobReport) -> Result<()> {
         for adapter in &report.adapters {
-            let (_bin, meta) = self.paths(model, adapter.config.id);
-            let c = &adapter.config;
-            let j = Json::obj(vec![
-                ("model", Json::str(model)),
-                ("job_id", Json::num(job.id as f64)),
-                ("config_id", Json::num(c.id as f64)),
-                ("task", Json::str(c.task.clone())),
-                ("lr", Json::num(c.lr)),
-                ("batch", Json::num(c.batch as f64)),
-                ("rank", Json::num(c.rank as f64)),
-                ("alpha_ratio", Json::num(c.alpha_ratio)),
-                ("steps", Json::num(adapter.steps as f64)),
-                ("final_loss", Json::num(adapter.final_loss as f64)),
-                ("eval_loss", Json::num(adapter.eval_loss as f64)),
-                ("eval_acc", Json::num(adapter.eval_acc as f64)),
-                ("base_acc", Json::num(adapter.base_acc as f64)),
-            ]);
-            let mut s = String::new();
-            j.write(&mut s);
-            std::fs::write(&meta, s).with_context(|| format!("write {}", meta.display()))?;
+            self.save_adapter(model, job.id, adapter)?;
         }
         Ok(())
     }

@@ -1,40 +1,25 @@
-//! The **LoRA Execution Engine** (§4, Figure 3): dequeues planned jobs
-//! from the LoRA Job Queue, acquires devices from the Resource Monitor,
-//! launches packed fine-tuning jobs concurrently on worker threads, and
-//! saves every finished adapter into the Checkpoint Pool.
-//!
-//! Live mode runs real PJRT training (the AOT artifacts); the degree of
-//! parallelism `d_j` is honored as a capacity allocation on the simulated
-//! pool — on this machine all jobs share one CPU backend, so wall time
-//! measures end-to-end composition, not hardware scaling (DESIGN.md §7).
+//! The **LoRA Execution Engine** (§4, Figure 3) — now a thin compatibility
+//! shim over [`crate::session::Session`]: `Engine::run` submits the whole
+//! planned queue and drains it. The session supplies everything the old
+//! batch engine had (FIFO admission with device backpressure, concurrent
+//! packed jobs, checkpointing, live calibration) plus dynamic admission
+//! and preemptive re-bucketing at adapter-completion boundaries; prefer it
+//! directly for anything interactive.
 
 pub mod checkpoint;
 
 pub use checkpoint::CheckpointPool;
+pub use crate::session::JobOutcome;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::cluster::ResourceMonitor;
-use crate::costmodel::throughput::Calib;
 use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
-use crate::train::{run_pack_full, JobReport, TrainOptions};
-use crate::util::threadpool::ThreadPool;
-
-/// One finished job with its engine-side timeline.
-#[derive(Debug, Clone)]
-pub struct JobOutcome {
-    pub job_id: usize,
-    pub devices: Vec<usize>,
-    /// Seconds after engine start when the job launched / finished.
-    pub start: f64,
-    pub end: f64,
-    pub report: JobReport,
-}
+use crate::session::Session;
+use crate::train::TrainOptions;
 
 /// Engine run summary.
 #[derive(Debug)]
@@ -52,14 +37,15 @@ impl EngineReport {
     }
 }
 
-/// The execution engine.
+/// The execution engine (batch shim over the session).
 pub struct Engine {
     pub runtime: Arc<Runtime>,
     pub monitor: ResourceMonitor,
     pub checkpoints: Option<CheckpointPool>,
     pub options: TrainOptions,
-    /// Worker threads (≥ the max number of concurrent jobs).
-    pub workers: usize,
+    /// Preemptive re-bucketing at adapter-completion boundaries (on by
+    /// default — the §4 behavior the cost model's `job_time` assumes).
+    pub rebucket: bool,
 }
 
 impl Engine {
@@ -69,85 +55,29 @@ impl Engine {
             monitor,
             checkpoints: None,
             options: TrainOptions::default(),
-            workers: 4,
+            rebucket: true,
         }
     }
 
-    /// Run a queue of planned jobs to completion, FIFO with blocking device
-    /// acquisition (jobs launch concurrently whenever capacity allows —
-    /// "PLoRA will deploy multiple fine-tuning jobs concurrently, as long
-    /// as the hardware pool has sufficient resources", §4).
+    /// Run a queue of planned jobs to completion: submit everything to a
+    /// fresh session, drain, and repackage the report. FIFO with blocking
+    /// device acquisition — "PLoRA will deploy multiple fine-tuning jobs
+    /// concurrently, as long as the hardware pool has sufficient
+    /// resources" (§4).
     pub fn run(&self, model: &str, queue: &[PlannedJob]) -> Result<EngineReport> {
-        let t0 = Instant::now();
-        let pool = ThreadPool::new(self.workers.max(1));
-        let (tx, rx) = mpsc::channel::<Result<JobOutcome>>();
-        let errors = Arc::new(AtomicUsize::new(0));
-        let outcomes = Arc::new(Mutex::new(Vec::<JobOutcome>::new()));
-
-        for job in queue.iter().cloned() {
-            // Acquire devices *before* spawning: preserves the queue order
-            // (FIFO semantics of the LoRA Job Queue) and applies
-            // backpressure when the pool is exhausted.
-            let alloc = self.monitor.acquire(job.d)?;
-            let start = t0.elapsed().as_secs_f64();
-            let rt = self.runtime.clone();
-            let monitor = self.monitor.clone();
-            let ckpt = self.checkpoints.clone();
-            let opts = self.options.clone();
-            let model = model.to_string();
-            let tx = tx.clone();
-            let errors = errors.clone();
-            let outcomes_ref = outcomes.clone();
-            pool.spawn(move || {
-                let result =
-                    run_pack_full(&rt, &model, &job.pack.configs, &opts).and_then(|(report, state)| {
-                        if let Some(ckpt) = &ckpt {
-                            ckpt.save_job(&model, &job, &report)?;
-                            let slots: Vec<(usize, usize, usize)> = job
-                                .pack
-                                .configs
-                                .iter()
-                                .enumerate()
-                                .map(|(slot, c)| (slot, c.id, c.rank))
-                                .collect();
-                            ckpt.save_state(&model, &state, &slots)?;
-                        }
-                        Ok(JobOutcome {
-                            job_id: job.id,
-                            devices: alloc.devices.clone(),
-                            start,
-                            end: t0.elapsed().as_secs_f64(),
-                            report,
-                        })
-                    });
-                monitor.release(alloc);
-                match result {
-                    Ok(out) => outcomes_ref.lock().unwrap().push(out),
-                    Err(e) => {
-                        errors.fetch_add(1, Ordering::SeqCst);
-                        let _ = tx.send(Err(e));
-                    }
-                }
-            });
+        let mut session = Session::new(self.runtime.clone(), self.monitor.clone(), model);
+        session.options = self.options.clone();
+        session.checkpoints = self.checkpoints.clone();
+        session.rebucket = self.rebucket;
+        for job in queue {
+            session.submit_planned(job.clone())?;
         }
-        drop(tx);
-        pool.join();
-
-        if errors.load(Ordering::SeqCst) > 0 {
-            let first = rx.into_iter().find_map(|r| r.err());
-            return Err(first.unwrap_or_else(|| anyhow!("job failed")));
-        }
-        let mut outcomes = Arc::try_unwrap(outcomes)
-            .map_err(|_| anyhow!("outcome collection still shared"))?
-            .into_inner()
-            .unwrap();
-        outcomes.sort_by_key(|o| o.job_id);
-
-        let makespan = outcomes.iter().map(|o| o.end).fold(0.0, f64::max);
-        let samples: Vec<(f64, f64, f64)> =
-            outcomes.iter().flat_map(|o| o.report.profile.iter().copied()).collect();
-        let calib_fit = Calib::fit_live(&samples);
-        Ok(EngineReport { outcomes, makespan, calib_fit })
+        let report = session.drain()?;
+        Ok(EngineReport {
+            outcomes: report.outcomes,
+            makespan: report.makespan,
+            calib_fit: report.calib_fit,
+        })
     }
 }
 
@@ -205,8 +135,15 @@ mod tests {
     fn engine_propagates_job_errors_and_releases_devices() {
         let Some(rt) = runtime() else { return };
         let engine = Engine::new(rt, ResourceMonitor::new(&CPU_SIM, 2));
-        // rank 99 has no artifact bucket -> run_pack fails.
-        let bad = LoraConfig { id: 0, lr: 1e-3, batch: 1, rank: 99, alpha_ratio: 1.0, task: "copy".into() };
+        // rank 99 has no artifact bucket -> the job fails.
+        let bad = LoraConfig {
+            id: 0,
+            lr: 1e-3,
+            batch: 1,
+            rank: 99,
+            alpha_ratio: 1.0,
+            task: "copy".into(),
+        };
         let queue = vec![job(0, 1, vec![bad])];
         assert!(engine.run("nano", &queue).is_err());
         assert_eq!(engine.monitor.available(), 2);

@@ -19,10 +19,12 @@
 //!   the `xla` crate available) the AOT `artifacts/*.hlo.txt` are replayed
 //!   via the PJRT CPU client instead.
 //!
-//! Entry points: [`planner::JobPlanner`] (Alg. 2), [`engine::Engine`]
-//! (live packed fine-tuning), [`sim::Simulator`] (paper-scale makespan),
-//! and the `plora` binary (`rust/src/main.rs`). Architecture and design
-//! rationale live in `DESIGN.md`; user-facing docs in `README.md`.
+//! Entry points: [`planner::JobPlanner`] (Alg. 2), [`session::Session`]
+//! (the event-driven orchestrator: dynamic admission, adapter-completion
+//! re-bucketing, streaming events), [`engine::Engine`] (compatibility shim
+//! over the session), [`sim::Simulator`] (paper-scale makespan), and the
+//! `plora` binary (`rust/src/main.rs`). Architecture and design rationale
+//! live in `DESIGN.md`; user-facing docs in `README.md`.
 
 pub mod bench;
 pub mod cluster;
@@ -34,5 +36,6 @@ pub mod costmodel;
 pub mod metrics;
 pub mod planner;
 pub mod search;
+pub mod session;
 pub mod sim;
 pub mod util;

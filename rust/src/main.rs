@@ -6,7 +6,8 @@
 //! plora plan     offline planning (Alg. 1+2): schedule a search space
 //! plora sim      paper-scale makespan simulation (Figs. 4/6) per method
 //! plora train    one live packed fine-tuning job on the PJRT runtime
-//! plora sweep    live end-to-end sweep through planner + engine
+//! plora sweep    live end-to-end sweep through planner + session
+//! plora serve    session with a live event-stream progress renderer
 //! plora quality  quality tables (Tables 2/3/4/6 analogues)
 //! plora kernels  packed-kernel micro-benchmarks, live (Tables 7/8)
 //! plora calib    print the live cost-model fit for this machine
@@ -25,6 +26,7 @@ use plora::metrics::{fmt_dur, fmt_x, Table};
 use plora::planner::{max_gpu_plan, min_gpu_plan, sequential_plora_plan, JobPlanner};
 use plora::runtime::{HostTensor, Runtime};
 use plora::search;
+use plora::session::{Event, Session};
 use plora::sim::{SimOptions, Simulator};
 use plora::train::{run_pack, TrainOptions};
 use plora::util::cli::Args;
@@ -38,15 +40,17 @@ USAGE: plora <subcommand> [flags]
   sim      --model <geom> --gpus N [--a10] [--qlora] [--noise S]
   train    --model <tinylm> --task T [--rank R] [--lr X] [--batch B] [--steps N]
   sweep    --model <tinylm> --configs N [--gpus N] [--steps N] [--ckpt DIR]
+  serve    --model <tinylm> [--configs N] [--gpus N] [--steps N] [--no-rebucket]
   quality  --model <tinylm> [--steps N] [--per-task N]
   kernels  [--ns 1,2,8,32] [--geoms attn,mlp] [--iters N]
   calib    --model <tinylm> [--steps N]
 
 Geometries (plan/sim): qwen2.5-{3b,7b,14b,32b}, llama3.2-3b, llama3.1-8b,
 or the TinyLM sizes nano/tiny/small/base. Live subcommands (train/sweep/
-quality/kernels/calib) take a TinyLM model and run on the default pure-Rust
-reference backend. The PJRT/XLA runtime is opt-in: vendor the xla crate,
-run `make artifacts`, build with --features pjrt (README 'Feature matrix').";
+serve/quality/kernels/calib) take a TinyLM model and run on the default
+pure-Rust reference backend. The PJRT/XLA runtime is opt-in: vendor the xla
+crate, run `make artifacts`, build with --features pjrt (README 'Feature
+matrix').";
 
 fn main() {
     let args = Args::parse();
@@ -55,6 +59,7 @@ fn main() {
         Some("sim") => cmd_sim(&args),
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
         Some("quality") => cmd_quality(&args),
         Some("kernels") => cmd_kernels(&args),
         Some("calib") => cmd_calib(&args),
@@ -115,8 +120,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let mut planner = JobPlanner::new(cm, gpus);
     planner.budget = budget(args)?;
     let plan = planner.plan(&configs)?;
+    let profile = planner.cm.profile.name;
     let mut t = Table::new(
-        &format!("PLoRA plan — {} configs on {} x {}", configs.len(), gpus, planner.cm.profile.name),
+        &format!("PLoRA plan — {} configs on {gpus} x {profile}", configs.len()),
         &["job", "n", "r_pad", "d", "start", "end"],
     );
     for j in &plan.jobs {
@@ -222,29 +228,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> Result<()> {
-    let rt = runtime()?;
-    let model = args.get_or("model", "nano").to_string();
-    let gpus = args.usize("gpus", 4)?;
-    let n = args.usize("configs", 8)?;
-    let steps = args.usize("steps", 48)?;
-
-    // Plan against the live profile, then execute on the live engine.
-    let mi = rt.manifest.model(&model)?;
-    let geom = geometry::tiny_geom(
-        Box::leak(model.clone().into_boxed_str()),
-        mi.n_layers,
-        mi.d_model,
-        mi.d_ff,
-        mi.n_heads,
-        mi.vocab,
-        mi.seq,
-    );
-    let mut cm = CostModel::new(&geom, &pool::CPU_SIM);
-    cm.charge_padding = true;
-    cm.buckets = Some(rt.manifest.train_buckets(&model));
+/// Sampled live-scale configurations for sweep/serve, clamped to the
+/// model's bucket grid.
+fn sampled_configs(rt: &Runtime, model: &str, n: usize) -> Vec<LoraConfig> {
     let tasks = rt.manifest.tasks.clone();
-    let (max_r, max_bs) = bucket_caps(&rt, &model);
+    let (max_r, max_bs) = bucket_caps(rt, model);
     let space = SearchSpace {
         lrs: vec![5e-4, 2e-3, 5e-3],
         batches: vec![1, 2].into_iter().filter(|&b| b <= max_bs).collect(),
@@ -259,8 +247,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         c.task = tasks[i % tasks.len()].clone();
         configs.push(c);
     }
+    configs
+}
 
-    let mut planner = JobPlanner::new(cm, gpus);
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let model = args.get_or("model", "nano").to_string();
+    let gpus = args.usize("gpus", 4)?;
+    let n = args.usize("configs", 8)?;
+    let steps = args.usize("steps", 48)?;
+
+    // Plan against the live profile, then execute through the session
+    // (Engine::run is the submit-all + drain shim over it).
+    let configs = sampled_configs(&rt, &model, n);
+    let mut planner = JobPlanner::new(search::live_cost_model(&rt, &model)?, gpus);
     planner.budget = TrainBudget { dataset: steps, epochs: 1 };
     let plan = planner.plan(&configs)?;
     println!(
@@ -309,6 +309,93 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `plora serve`: drive a session interactively — submit a planned queue
+/// and render the live event stream (job starts, adapter completions,
+/// re-buckets, calibration refreshes) as it happens, then the summary.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let model = args.get_or("model", "nano").to_string();
+    let gpus = args.usize("gpus", 2)?;
+    let n = args.usize("configs", 6)?;
+    let steps = args.usize("steps", 32)?;
+
+    let configs = sampled_configs(&rt, &model, n);
+    let mut planner = JobPlanner::new(search::live_cost_model(&rt, &model)?, gpus);
+    planner.budget = TrainBudget { dataset: steps, epochs: 1 };
+    let plan = planner.plan(&configs)?;
+
+    let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, gpus), &model);
+    session.options =
+        TrainOptions { budget: planner.budget, eval_batches: 2, seed: 17, log_every: 0 };
+    session.rebucket = !args.flag("no-rebucket");
+    if let Some(dir) = args.get("ckpt") {
+        session.checkpoints = Some(CheckpointPool::new(&PathBuf::from(dir), rt.clone())?);
+    }
+    let rx = session.subscribe();
+    println!(
+        "serve: {} configs in {} jobs on {gpus} slots of {model} (rebucket {})",
+        configs.len(),
+        plan.jobs.len(),
+        if session.rebucket { "on" } else { "off" }
+    );
+    let mut pending = 0usize;
+    for j in &plan.jobs {
+        session.submit_planned(j.job.clone())?;
+        pending += 1;
+    }
+    while pending > 0 {
+        let Ok(ev) = rx.recv() else { break };
+        render_event(&ev);
+        if matches!(ev, Event::JobFinished { .. } | Event::JobFailed { .. }) {
+            pending -= 1;
+        }
+    }
+    let report = session.drain()?;
+    let (a, b, c) = report.calib_fit;
+    println!(
+        "\ndone: makespan {}  jobs {}  adapters {}  rebuckets {}  calib t = \
+         {a:.4} + {b:.2e}*tokens + {c:.2e}*n",
+        fmt_dur(report.makespan),
+        report.outcomes.len(),
+        report.total_adapters(),
+        report.rebuckets(),
+    );
+    Ok(())
+}
+
+/// One line per session event, prefixed with the session timestamp.
+fn render_event(ev: &Event) {
+    let at = ev.at();
+    match ev {
+        Event::JobStarted { job, n_adapters, devices, .. } => {
+            println!("[{at:7.2}s] job {job} started: {n_adapters} adapters on {devices:?}");
+        }
+        Event::AdapterFinished { job, adapter, task, steps, eval_loss, eval_acc, .. } => {
+            println!(
+                "[{at:7.2}s] job {job} adapter {adapter} ({task}) finished after {steps} \
+                 steps: eval loss {eval_loss:.3}, acc {eval_acc:.3}"
+            );
+        }
+        Event::Rebucketed { job, from, to, survivors, .. } => {
+            println!(
+                "[{at:7.2}s] job {job} re-bucketed {from:?} -> {to:?}, survivors {survivors:?}"
+            );
+        }
+        Event::JobFinished { job, adapters, wall, .. } => {
+            println!("[{at:7.2}s] job {job} finished: {adapters} adapters in {wall:.2}s");
+        }
+        Event::JobFailed { job, error, .. } => {
+            println!("[{at:7.2}s] job {job} FAILED: {error}");
+        }
+        Event::CalibUpdated { fit: (a, b, c), samples, .. } => {
+            println!(
+                "[{at:7.2}s] calib updated over {samples} steps: \
+                 t = {a:.4} + {b:.2e}*tok + {c:.2e}*n"
+            );
+        }
+    }
+}
+
 fn cmd_quality(args: &Args) -> Result<()> {
     let rt = runtime()?;
     let model = args.get_or("model", "nano").to_string();
@@ -319,6 +406,7 @@ fn cmd_quality(args: &Args) -> Result<()> {
         budget: TrainBudget { dataset: steps, epochs: 1 },
         eval_batches: 4,
         seed: 23,
+        gpus: args.usize("gpus", 2)?,
     };
     // Small grid per task around live-scale learning rates, restricted to
     // the shapes the model's bucket grid can execute.
@@ -344,11 +432,10 @@ fn cmd_quality(args: &Args) -> Result<()> {
         d.lr = 2e-3; // live-scale default
         d.rank = d.rank.min(max_r);
         d.batch = d.batch.min(max_bs);
-        d.id = 9999;
         let rep = run_pack(
             &rt,
             &model,
-            &[d],
+            &[d.with_id(9999)],
             &TrainOptions {
                 budget: opts.budget,
                 eval_batches: opts.eval_batches,
@@ -376,7 +463,8 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     let iters = args.usize("iters", 10)?;
 
     let mut t = Table::new(
-        "Packed-LoRA kernels — live speedup over sequential per-adapter launches (Table 7 analogue)",
+        "Packed-LoRA kernels — live speedup over sequential per-adapter launches \
+         (Table 7 analogue)",
         &["geom", "n", "fwd", "bwd"],
     );
     for geom in &geoms {

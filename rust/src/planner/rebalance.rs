@@ -87,6 +87,31 @@ pub fn drop_empty(jobs: Vec<PlannedJob>) -> Vec<PlannedJob> {
     jobs.into_iter().filter(|j| j.pack.n() > 0).collect()
 }
 
+/// Engine-side shrink at an adapter-completion boundary (§4): the smallest
+/// `(n, r, bs)` bucket in `buckets` that admits the surviving pack, when it
+/// is strictly smaller (by padded element count) than `current`. `None`
+/// means "keep riding the current bucket" — either no bucket admits the
+/// survivors or none is smaller. This is the planning decision the live
+/// session consults when an adapter converges, so the cost model's
+/// phase-wise `job_time` is realized instead of padding to job end.
+pub fn shrink_bucket(
+    buckets: &[(usize, usize, usize)],
+    survivors: &Pack,
+    current: (usize, usize, usize),
+) -> Option<(usize, usize, usize)> {
+    if survivors.n() == 0 {
+        return None;
+    }
+    let (n, r, bs) = (survivors.n(), survivors.r_pad(), survivors.bs_pad());
+    let best = buckets
+        .iter()
+        .copied()
+        .filter(|&(bn, br, bb)| bn >= n && br >= r && bb >= bs)
+        .min_by_key(|&(bn, br, bb)| bn * br * bb)?;
+    let vol = |(a, b, c): (usize, usize, usize)| a * b * c;
+    (vol(best) < vol(current)).then_some(best)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +179,25 @@ mod tests {
         let b = TrainBudget::default();
         let mut jobs = vec![job(0, vec![cfg(0, 8, 1)])];
         assert_eq!(rebalance_round(&cm, &b, &mut jobs, 100), 0);
+    }
+
+    /// Boundary shrink: survivors move to the smallest admitting bucket,
+    /// and only when that is strictly smaller than the current one.
+    #[test]
+    fn shrink_bucket_picks_smallest_strictly_smaller() {
+        // The nano-style grid plus a rank-32 tier.
+        let grid = [(1, 8, 1), (2, 8, 1), (4, 8, 1), (2, 8, 2), (2, 32, 2)];
+        let one = Pack::new(vec![cfg(0, 8, 1)]);
+        assert_eq!(shrink_bucket(&grid, &one, (2, 8, 2)), Some((1, 8, 1)));
+        // Already on the smallest admitting bucket: no move.
+        assert_eq!(shrink_bucket(&grid, &one, (1, 8, 1)), None);
+        // Rank shrink: a rank-8 survivor leaves the rank-32 bucket.
+        let two = Pack::new(vec![cfg(0, 8, 1), cfg(1, 8, 2)]);
+        assert_eq!(shrink_bucket(&grid, &two, (2, 32, 2)), Some((2, 8, 2)));
+        // Nothing admits an oversized pack.
+        let big = Pack::new(vec![cfg(0, 64, 1)]);
+        assert_eq!(shrink_bucket(&grid, &big, (2, 32, 2)), None);
+        // Empty survivor set never re-buckets.
+        assert_eq!(shrink_bucket(&grid, &Pack::new(vec![]), (2, 8, 2)), None);
     }
 }

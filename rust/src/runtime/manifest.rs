@@ -230,7 +230,7 @@ impl Manifest {
     }
 
     /// Artifacts of one kind for one model.
-    pub fn by_kind<'a>(&'a self, kind: ArtifactKind) -> impl Iterator<Item = &'a ArtifactInfo> {
+    pub fn by_kind(&self, kind: ArtifactKind) -> impl Iterator<Item = &ArtifactInfo> + '_ {
         self.artifacts.iter().filter(move |a| a.kind == kind)
     }
 
@@ -238,7 +238,13 @@ impl Manifest {
     /// `(n, r, bs)` train artifact that dominates the requested pack shape
     /// (n' ≥ n, r' ≥ r, bs' ≥ bs), minimizing padding waste by total padded
     /// element count `n'·r'·bs'`. Returns `None` if no bucket fits.
-    pub fn train_bucket(&self, model: &str, n: usize, r: usize, bs: usize) -> Option<&ArtifactInfo> {
+    pub fn train_bucket(
+        &self,
+        model: &str,
+        n: usize,
+        r: usize,
+        bs: usize,
+    ) -> Option<&ArtifactInfo> {
         self.by_kind(ArtifactKind::Train)
             .filter(|a| a.meta_str("model") == Some(model))
             .filter(|a| {
@@ -258,7 +264,8 @@ impl Manifest {
         self.by_kind(ArtifactKind::Eval)
             .find(|a| {
                 ["model", "n", "r", "bs"].iter().all(|k| {
-                    a.meta.get(*k).map(|v| format!("{v:?}")) == train.meta.get(*k).map(|v| format!("{v:?}"))
+                    let fmt = |m: &ArtifactInfo| m.meta.get(*k).map(|v| format!("{v:?}"));
+                    fmt(a) == fmt(train)
                 })
             })
             .ok_or_else(|| anyhow!("no eval artifact for {}", train.name))

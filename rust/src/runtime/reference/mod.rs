@@ -22,7 +22,9 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::runtime::backend::{BackendExecutable, ExecutionBackend};
-use crate::runtime::manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec, TokenLayout};
+use crate::runtime::manifest::{
+    ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec, TokenLayout,
+};
 use crate::runtime::state::lora_shape;
 use crate::runtime::tensor::{DType, HostTensor};
 use crate::runtime::LORA_ORDER;
@@ -101,7 +103,7 @@ struct TrainEvalExec {
     train: bool,
 }
 
-fn lora_slices<'a>(tensors: &'a [HostTensor]) -> Result<[&'a [f32]; NL]> {
+fn lora_slices(tensors: &[HostTensor]) -> Result<[&[f32]; NL]> {
     let v: Vec<&[f32]> = tensors.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
     v.try_into().map_err(|_| anyhow!("expected {NL} lora tensors"))
 }
@@ -114,13 +116,16 @@ impl BackendExecutable for TrainEvalExec {
         let lora = lora_slices(lora_t)?;
 
         if !self.train {
-            // base, lora, tokens, targets, loss_mask, scale
+            // base, lora, tokens, targets, loss_mask, scale. Eval never
+            // backprops, so it takes the logits-only forward: no LayerSave
+            // allocation, activations reused across layers.
             let tokens = inputs[NB + NL].as_i32()?;
             let targets = inputs[NB + NL + 1].as_i32()?;
             let mask = inputs[NB + NL + 2].as_f32()?;
             let scale = inputs[NB + NL + 3].as_f32()?;
-            let fwd = tinylm::forward(&self.spec, base, &lora, scale, tokens, n, bs, r)?;
-            let (loss, acc) = tinylm::loss_and_acc(&self.spec, &fwd.logits, targets, mask, n, bs);
+            let logits =
+                tinylm::forward_logits(&self.spec, base, &lora, scale, tokens, n, bs, r)?;
+            let (loss, acc) = tinylm::loss_and_acc(&self.spec, &logits, targets, mask, n, bs);
             return Ok(vec![
                 HostTensor::f32(vec![n], loss)?,
                 HostTensor::f32(vec![n], acc)?,
@@ -275,10 +280,42 @@ struct BuiltinModel {
 
 /// `model.py::MODELS`.
 const BUILTIN_MODELS: [BuiltinModel; 4] = [
-    BuiltinModel { name: "nano", vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 256, seq: 32 },
-    BuiltinModel { name: "tiny", vocab: 512, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 512, seq: 64 },
-    BuiltinModel { name: "small", vocab: 1024, d_model: 256, n_layers: 6, n_heads: 8, d_ff: 1024, seq: 64 },
-    BuiltinModel { name: "base", vocab: 4096, d_model: 512, n_layers: 8, n_heads: 8, d_ff: 2048, seq: 128 },
+    BuiltinModel {
+        name: "nano",
+        vocab: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 256,
+        seq: 32,
+    },
+    BuiltinModel {
+        name: "tiny",
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 512,
+        seq: 64,
+    },
+    BuiltinModel {
+        name: "small",
+        vocab: 1024,
+        d_model: 256,
+        n_layers: 6,
+        n_heads: 8,
+        d_ff: 1024,
+        seq: 64,
+    },
+    BuiltinModel {
+        name: "base",
+        vocab: 4096,
+        d_model: 512,
+        n_layers: 8,
+        n_heads: 8,
+        d_ff: 2048,
+        seq: 128,
+    },
 ];
 
 /// `aot.py::TRAIN_GRID` — the `(n, r_pad, bs)` bucket grid per model.

@@ -83,7 +83,15 @@ impl Spec {
 // ---------------------------------------------------------------------------
 
 /// `out (m,n) += alpha * a (m,k) @ b (k,n)`.
-pub(crate) fn mm_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, alpha: f32) {
+pub(crate) fn mm_acc(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+) {
     for i in 0..m {
         let ar = &a[i * k..(i + 1) * k];
         let or = &mut out[i * n..(i + 1) * n];
@@ -101,7 +109,15 @@ pub(crate) fn mm_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, 
 }
 
 /// `out (m,n) += alpha * a (m,k) @ b^T` with `b` stored `(n,k)`.
-pub(crate) fn mm_nt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, alpha: f32) {
+pub(crate) fn mm_nt_acc(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+) {
     for i in 0..m {
         let ar = &a[i * k..(i + 1) * k];
         let or = &mut out[i * n..(i + 1) * n];
@@ -117,7 +133,15 @@ pub(crate) fn mm_nt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usiz
 }
 
 /// `out (m,n) += alpha * a^T @ b` with `a` stored `(k,m)`, `b` `(k,n)`.
-pub(crate) fn mm_tn_acc(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize, alpha: f32) {
+pub(crate) fn mm_tn_acc(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    alpha: f32,
+) {
     for kk in 0..k {
         let ar = &a[kk * m..(kk + 1) * m];
         let br = &b[kk * n..(kk + 1) * n];
@@ -339,6 +363,7 @@ pub(crate) struct Forward {
 /// `LORA_ORDER` (shapes `(L, n, din, r)` / `(L, n, r, dout)`), `tokens`
 /// `(n, bs, s)`. Produces logits `(n, bs, s, vocab)` plus everything the
 /// backward pass needs.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn forward(
     spec: &Spec,
     base: &[HostTensor],
@@ -417,8 +442,8 @@ pub(crate) fn forward(
             for b in 0..bs {
                 for hh in 0..nh {
                     for t in 0..s {
-                        let qrow =
-                            &q[((i * bs + b) * s + t) * d + hh * dh..((i * bs + b) * s + t) * d + hh * dh + dh];
+                        let qoff = ((i * bs + b) * s + t) * d + hh * dh;
+                        let qrow = &q[qoff..qoff + dh];
                         let mut mx = f32::NEG_INFINITY;
                         for (u, lv) in logit_buf.iter_mut().enumerate().take(t + 1) {
                             let krow = &k[((i * bs + b) * s + u) * d + hh * dh
@@ -480,7 +505,8 @@ pub(crate) fn forward(
         let mut mid_up = vec![0.0f32; nm * r];
         let mut mid_gate = vec![0.0f32; nm * r];
         proj_fwd(&mut up, &mut mid_up, &h2, wup, la(A_UP, d), lb(B_UP, f), scale, n, m, d, f, r);
-        proj_fwd(&mut gate, &mut mid_gate, &h2, wgate, la(A_GATE, d), lb(B_GATE, f), scale, n, m, d, f, r);
+        let (ga, gb) = (la(A_GATE, d), lb(B_GATE, f));
+        proj_fwd(&mut gate, &mut mid_gate, &h2, wgate, ga, gb, scale, n, m, d, f, r);
         let mut act = vec![0.0f32; nm * f];
         for j in 0..nm * f {
             act[j] = silu(gate[j]) * up[j];
@@ -488,7 +514,8 @@ pub(crate) fn forward(
 
         let mut dn = vec![0.0f32; nm * d];
         let mut mid_down = vec![0.0f32; nm * r];
-        proj_fwd(&mut dn, &mut mid_down, &act, wdown, la(A_DOWN, f), lb(B_DOWN, d), scale, n, m, f, d, r);
+        let (da_, db_) = (la(A_DOWN, f), lb(B_DOWN, d));
+        proj_fwd(&mut dn, &mut mid_down, &act, wdown, da_, db_, scale, n, m, f, d, r);
         let mut x2 = x1.clone();
         for (xv, dv) in x2.iter_mut().zip(&dn) {
             *xv += dv;
@@ -531,6 +558,162 @@ pub(crate) fn forward(
     mm_nt_acc(&mut logits, &xf, embed, nm, d, v, 1.0);
 
     Ok(Forward { layers, xhatf, invf, logits })
+}
+
+/// Logits-only packed forward for the eval path: the same math as
+/// [`forward`], with no backward state saved — activations live in a small
+/// set of buffers reused across layers instead of one `LayerSave` per layer
+/// (the full forward keeps ~O(L·n·bs·seq·(d+f)) floats it never reads on
+/// eval). Accumulation order matches [`forward`] exactly, so eval loss is
+/// bit-identical to a zero-lr train step's loss.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_logits(
+    spec: &Spec,
+    base: &[HostTensor],
+    lora: &[&[f32]; 14],
+    scale: &[f32],
+    tokens: &[i32],
+    n: usize,
+    bs: usize,
+    r: usize,
+) -> Result<Vec<f32>> {
+    spec.check()?;
+    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+    let (nh, dh) = (spec.n_heads, spec.d_head());
+    let m = bs * s;
+    let nm = n * m;
+    let sqrt_dh = (dh as f32).sqrt();
+
+    let embed = base[EMBED].as_f32()?;
+    let pos = base[POS].as_f32()?;
+
+    // Embedding + positional encoding.
+    let mut x = vec![0.0f32; nm * d];
+    for i in 0..n {
+        for b in 0..bs {
+            for t in 0..s {
+                let tok = tokens[(i * bs + b) * s + t];
+                if tok < 0 || tok as usize >= v {
+                    bail!("token {tok} out of vocab {v}");
+                }
+                let erow = &embed[tok as usize * d..(tok as usize + 1) * d];
+                let prow = &pos[t * d..(t + 1) * d];
+                let off = ((i * bs + b) * s + t) * d;
+                let xrow = &mut x[off..off + d];
+                for c in 0..d {
+                    xrow[c] = erow[c] + prow[c];
+                }
+            }
+        }
+    }
+
+    // Reused scratch (no per-layer saves).
+    let mut h = vec![0.0f32; nm * d];
+    let mut xhat = vec![0.0f32; nm * d];
+    let mut inv = vec![0.0f32; nm];
+    let mut mid = vec![0.0f32; nm * r];
+    let mut q = vec![0.0f32; nm * d];
+    let mut k = vec![0.0f32; nm * d];
+    let mut vv = vec![0.0f32; nm * d];
+    let mut o = vec![0.0f32; nm * d];
+    let mut ao = vec![0.0f32; nm * d];
+    let mut up = vec![0.0f32; nm * f];
+    let mut gate = vec![0.0f32; nm * f];
+    let mut act = vec![0.0f32; nm * f];
+    let mut logit_buf = vec![0.0f32; s];
+    let mut prow = vec![0.0f32; s];
+
+    for l in 0..spec.n_layers {
+        let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
+        let ln2 = &base[LN2].as_f32()?[l * d..(l + 1) * d];
+        let wq = &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wk = &base[WK].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wv = &base[WV].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wo = &base[WO].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wup = &base[WUP].as_f32()?[l * d * f..(l + 1) * d * f];
+        let wgate = &base[WGATE].as_f32()?[l * d * f..(l + 1) * d * f];
+        let wdown = &base[WDOWN].as_f32()?[l * f * d..(l + 1) * f * d];
+        let la = |idx: usize, din: usize| &lora[idx][l * n * din * r..(l + 1) * n * din * r];
+        let lb = |idx: usize, dout: usize| &lora[idx][l * n * r * dout..(l + 1) * n * r * dout];
+
+        ln_fwd(&x, ln1, nm, d, &mut h, &mut xhat, &mut inv);
+        proj_fwd(&mut q, &mut mid, &h, wq, la(A_Q, d), lb(B_Q, d), scale, n, m, d, d, r);
+        proj_fwd(&mut k, &mut mid, &h, wk, la(A_K, d), lb(B_K, d), scale, n, m, d, d, r);
+        proj_fwd(&mut vv, &mut mid, &h, wv, la(A_V, d), lb(B_V, d), scale, n, m, d, d, r);
+
+        // Causal attention per (adapter, batch, head).
+        o.fill(0.0);
+        for i in 0..n {
+            for b in 0..bs {
+                for hh in 0..nh {
+                    for t in 0..s {
+                        let base_t = ((i * bs + b) * s + t) * d + hh * dh;
+                        let qrow = &q[base_t..base_t + dh];
+                        let mut mx = f32::NEG_INFINITY;
+                        for (u, lv) in logit_buf.iter_mut().enumerate().take(t + 1) {
+                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                            let krow = &k[base_u..base_u + dh];
+                            let mut dot = 0.0f32;
+                            for c in 0..dh {
+                                dot += qrow[c] * krow[c];
+                            }
+                            let val = dot / sqrt_dh;
+                            *lv = val;
+                            if val > mx {
+                                mx = val;
+                            }
+                        }
+                        let mut sum = 0.0f32;
+                        for lv in logit_buf.iter_mut().take(t + 1) {
+                            *lv = (*lv - mx).exp();
+                            sum += *lv;
+                        }
+                        for (u, &e) in logit_buf.iter().enumerate().take(t + 1) {
+                            prow[u] = e / sum;
+                        }
+                        let orow = &mut o[base_t..base_t + dh];
+                        for (u, &w) in prow.iter().enumerate().take(t + 1) {
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                            let vrow = &vv[base_u..base_u + dh];
+                            for c in 0..dh {
+                                orow[c] += w * vrow[c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Attention output projection + residual.
+        proj_fwd(&mut ao, &mut mid, &o, wo, la(A_O, d), lb(B_O, d), scale, n, m, d, d, r);
+        for (xv, av) in x.iter_mut().zip(&ao) {
+            *xv += av;
+        }
+
+        // MLP: pre-LN, gated SiLU, down projection + residual.
+        ln_fwd(&x, ln2, nm, d, &mut h, &mut xhat, &mut inv);
+        proj_fwd(&mut up, &mut mid, &h, wup, la(A_UP, d), lb(B_UP, f), scale, n, m, d, f, r);
+        let (ga, gb) = (la(A_GATE, d), lb(B_GATE, f));
+        proj_fwd(&mut gate, &mut mid, &h, wgate, ga, gb, scale, n, m, d, f, r);
+        for j in 0..nm * f {
+            act[j] = silu(gate[j]) * up[j];
+        }
+        let (dna, dnb) = (la(A_DOWN, f), lb(B_DOWN, d));
+        proj_fwd(&mut ao, &mut mid, &act, wdown, dna, dnb, scale, n, m, f, d, r);
+        for (xv, dv) in x.iter_mut().zip(&ao) {
+            *xv += dv;
+        }
+    }
+
+    // Final LN + tied-embedding head.
+    let lnf = base[LNF].as_f32()?;
+    ln_fwd(&x, lnf, nm, d, &mut h, &mut xhat, &mut inv);
+    let mut logits = vec![0.0f32; nm * v];
+    mm_nt_acc(&mut logits, &h, embed, nm, d, v, 1.0);
+    Ok(logits)
 }
 
 // ---------------------------------------------------------------------------
@@ -1118,6 +1301,35 @@ mod tests {
         assert!(checked >= 6, "only {checked} coordinates were large enough to check");
     }
 
+    /// The logits-only eval forward reproduces the full forward's logits
+    /// bit-for-bit (same op order, no saved state).
+    #[test]
+    fn forward_logits_matches_full_forward() {
+        let mi = tiny_mi();
+        let spec = tiny_spec(&mi);
+        let (n, r, bs) = (2usize, 3usize, 2usize);
+        let mut rng = Rng::new(77);
+        let base = rand_base(&mi, &mut rng);
+        let mut lora_t: Vec<HostTensor> = Vec::new();
+        for name in LORA_ORDER {
+            let shape = lora_shape(&mi, name, n, r);
+            let (_, p) = name.split_once('_').unwrap();
+            let din = proj_dims(&mi, p).0 as f64;
+            lora_t.push(rand_tensor(&mut rng, shape, 0.5 / din.sqrt()));
+        }
+        let lora: [&[f32]; 14] = std::array::from_fn(|i| lora_t[i].as_f32().unwrap());
+        let scale = vec![0.9f32, 1.3];
+        let m = bs * spec.seq;
+        let tokens: Vec<i32> =
+            (0..n * m).map(|_| rng.below(spec.vocab as u64) as i32).collect();
+        let full = forward(&spec, &base, &lora, &scale, &tokens, n, bs, r).unwrap();
+        let lean = forward_logits(&spec, &base, &lora, &scale, &tokens, n, bs, r).unwrap();
+        assert_eq!(full.logits.len(), lean.len());
+        for (i, (a, b)) in full.logits.iter().zip(&lean).enumerate() {
+            assert_eq!(a, b, "logit {i} diverged: {a} vs {b}");
+        }
+    }
+
     #[test]
     fn adamw_first_step_is_signed_descent_and_masks_padding() {
         // With zero moments and t=0 -> t_new=1, AdamW's first update is
@@ -1127,7 +1339,8 @@ mod tests {
         let v = vec![0.0f32; 8];
         let grad = vec![0.5f32, -0.5, 0.5, -0.5, 0.5, -0.5, 0.5, -0.5];
         let rmask = vec![1.0f32, 1.0, 0.0, 0.0]; // true rank 2 of padded 4
-        let (nl, nm, nv) = adamw_update(&lora, &m, &v, &grad, &[0.1], &rmask, 1, 2, 4, 4, true, 1.0);
+        let (nl, nm, nv) =
+            adamw_update(&lora, &m, &v, &grad, &[0.1], &rmask, 1, 2, 4, 4, true, 1.0);
         // Unmasked columns move by ~lr against the gradient sign.
         assert!((nl[0] - 0.9).abs() < 1e-3, "{}", nl[0]);
         assert!((nl[1] - 1.1).abs() < 1e-3, "{}", nl[1]);

@@ -84,6 +84,131 @@ impl TrainState {
         TrainState { model: mi.clone(), n, r, lora, m, v, t: 0.0 }
     }
 
+    /// Like [`TrainState::init`], but adapter slot `i` draws its `A` values
+    /// from its *own* stream `seeds[i]`, restricted to its true rank
+    /// `ranks[i]` (padded columns and unused slots start at exactly zero).
+    ///
+    /// This makes an adapter's initial parameters — and therefore, together
+    /// with per-adapter data streams, its whole trajectory — independent of
+    /// the bucket shape and of its pack neighbours (§3.2: "computation of
+    /// each adapter is identical to single-adapter fine-tuning"), which is
+    /// what lets the session re-bucket packs mid-job without perturbing any
+    /// surviving adapter.
+    pub fn init_per_adapter(
+        mi: &ModelInfo,
+        n: usize,
+        r: usize,
+        seeds: &[u64],
+        ranks: &[usize],
+    ) -> Result<TrainState> {
+        if seeds.len() != ranks.len() {
+            bail!("init_per_adapter: {} seeds for {} ranks", seeds.len(), ranks.len());
+        }
+        if seeds.len() > n {
+            bail!("init_per_adapter: {} adapters exceed bucket n={n}", seeds.len());
+        }
+        if let Some(&bad) = ranks.iter().find(|&&rk| rk > r) {
+            bail!("init_per_adapter: adapter rank {bad} exceeds padded rank {r}");
+        }
+        let mut lora = Vec::with_capacity(LORA_ORDER.len());
+        for name in LORA_ORDER {
+            let shape = lora_shape(mi, name, n, r);
+            let count: usize = shape.iter().product();
+            lora.push(HostTensor::f32(shape, vec![0.0; count]).unwrap());
+        }
+        let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+        for (k, name) in LORA_ORDER.iter().enumerate() {
+            if !name.starts_with("a_") {
+                continue;
+            }
+            let p = name.split_once('_').unwrap().1;
+            let din = proj_dims(mi, p).0;
+            let std = 1.0 / (din as f64).sqrt();
+            let buf = lora[k].as_f32_mut()?;
+            for l in 0..mi.n_layers {
+                for (i, rng) in rngs.iter_mut().enumerate() {
+                    let base = (l * n + i) * din * r;
+                    for row in 0..din {
+                        for c in 0..ranks[i] {
+                            buf[base + row * r + c] = (rng.normal() * std) as f32;
+                        }
+                    }
+                }
+            }
+        }
+        let m = lora
+            .iter()
+            .map(|t| HostTensor::f32(t.shape.clone(), vec![0.0; t.len()]).unwrap())
+            .collect();
+        let v = lora
+            .iter()
+            .map(|t| HostTensor::f32(t.shape.clone(), vec![0.0; t.len()]).unwrap())
+            .collect();
+        Ok(TrainState { model: mi.clone(), n, r, lora, m, v, t: 0.0 })
+    }
+
+    /// Re-pack surviving adapters into a fresh `(n_new, r_new)` bucket
+    /// state: LoRA parameters and AdamW moments are copied at each
+    /// survivor's true rank (zero-padded to `r_new`); the shared step
+    /// counter carries over. `keep[i] = (old_slot, true_rank)` places the
+    /// survivor into new slot `i`. This is the state side of the engine's
+    /// preemptive re-bucketing at adapter-completion boundaries (§4).
+    pub fn repack(
+        &self,
+        keep: &[(usize, usize)],
+        n_new: usize,
+        r_new: usize,
+    ) -> Result<TrainState> {
+        if keep.len() > n_new {
+            bail!("repack: {} survivors exceed bucket n={n_new}", keep.len());
+        }
+        for &(slot, rank) in keep {
+            if slot >= self.n {
+                bail!("repack: slot {slot} out of pack of {}", self.n);
+            }
+            if rank > r_new || rank > self.r {
+                bail!("repack: rank {rank} exceeds padded rank {} -> {r_new}", self.r);
+            }
+        }
+        let model = self.model.clone();
+        let remap = |tensors: &[HostTensor]| -> Result<Vec<HostTensor>> {
+            LORA_ORDER
+                .iter()
+                .zip(tensors)
+                .map(|(name, t)| {
+                    let (l, d2, d3) = (t.shape[0], t.shape[2], t.shape[3]);
+                    let is_a = name.starts_with("a_");
+                    let new_shape = lora_shape(&model, name, n_new, r_new);
+                    let (nd2, nd3) = (new_shape[2], new_shape[3]);
+                    let src = t.as_f32()?;
+                    let mut data = vec![0.0f32; l * n_new * nd2 * nd3];
+                    for li in 0..l {
+                        for (ni, &(slot, rank)) in keep.iter().enumerate() {
+                            let so = (li * self.n + slot) * d2 * d3;
+                            let do_ = (li * n_new + ni) * nd2 * nd3;
+                            let (rows, cols) = if is_a { (d2, rank) } else { (rank, d3) };
+                            for row in 0..rows {
+                                for col in 0..cols {
+                                    data[do_ + row * nd3 + col] = src[so + row * d3 + col];
+                                }
+                            }
+                        }
+                    }
+                    HostTensor::f32(new_shape, data)
+                })
+                .collect()
+        };
+        Ok(TrainState {
+            model: self.model.clone(),
+            n: n_new,
+            r: r_new,
+            lora: remap(&self.lora)?,
+            m: remap(&self.m)?,
+            v: remap(&self.v)?,
+            t: self.t,
+        })
+    }
+
     /// Rank mask `(n, r_pad)`: adapter `i` keeps columns `< ranks[i]`.
     pub fn rank_mask(&self, ranks: &[usize]) -> Result<HostTensor> {
         if ranks.len() != self.n {
@@ -242,6 +367,61 @@ mod tests {
         assert_eq!(m.as_f32().unwrap(), &[1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0]);
         assert!(st.rank_mask(&[5, 1]).is_err());
         assert!(st.rank_mask(&[1]).is_err());
+    }
+
+    /// Per-adapter init: a given (seed, rank) draws the same A values no
+    /// matter the bucket shape or slot population around it.
+    #[test]
+    fn per_adapter_init_is_shape_independent() {
+        let m = mi();
+        let solo = TrainState::init_per_adapter(&m, 1, 4, &[7], &[3]).unwrap();
+        let packed = TrainState::init_per_adapter(&m, 3, 8, &[9, 7], &[4, 3]).unwrap();
+        let idx = LORA_ORDER.iter().position(|x| *x == "a_q").unwrap();
+        let (sa, pa) = (solo.lora[idx].as_f32().unwrap(), packed.lora[idx].as_f32().unwrap());
+        // Solo: (L=2, n=1, d=8, r=4); packed: (L=2, n=3, d=8, r=8), slot 1.
+        for l in 0..2 {
+            for row in 0..8 {
+                for c in 0..3 {
+                    let s = sa[(l * 8 + row) * 4 + c];
+                    let p = pa[((l * 3 + 1) * 8 + row) * 8 + c];
+                    assert_eq!(s, p, "a_q[{l},{row},{c}] diverged across shapes");
+                }
+                // Padded columns start at exactly zero.
+                assert_eq!(sa[(l * 8 + row) * 4 + 3], 0.0);
+            }
+        }
+        // B tensors and unused slots are zero.
+        let bidx = LORA_ORDER.iter().position(|x| *x == "b_q").unwrap();
+        assert!(packed.lora[bidx].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(TrainState::init_per_adapter(&m, 1, 4, &[1, 2], &[4, 4]).is_err());
+        assert!(TrainState::init_per_adapter(&m, 2, 4, &[1], &[5]).is_err());
+    }
+
+    /// Repack moves a survivor to a smaller bucket with params + moments
+    /// intact at its true rank.
+    #[test]
+    fn repack_carries_params_and_moments() {
+        let m = mi();
+        let mut st = TrainState::init_per_adapter(&m, 2, 8, &[3, 4], &[4, 8]).unwrap();
+        st.t = 5.0;
+        // Plant a recognizable moment value for slot 0.
+        let idx = LORA_ORDER.iter().position(|x| *x == "a_q").unwrap();
+        st.m[idx].as_f32_mut().unwrap()[0] = 0.25; // layer 0, slot 0, row 0, col 0
+        let small = st.repack(&[(0, 4)], 1, 4).unwrap();
+        assert_eq!((small.n, small.r), (1, 4));
+        assert_eq!(small.t, 5.0);
+        let (big, sm) = (st.lora[idx].as_f32().unwrap(), small.lora[idx].as_f32().unwrap());
+        // a_q old (2, 2, 8, 8) -> new (2, 1, 8, 4): slot 0, cols < 4.
+        for l in 0..2 {
+            for row in 0..8 {
+                for c in 0..4 {
+                    assert_eq!(sm[(l * 8 + row) * 4 + c], big[((l * 2) * 8 + row) * 8 + c]);
+                }
+            }
+        }
+        assert_eq!(small.m[idx].as_f32().unwrap()[0], 0.25);
+        assert!(st.repack(&[(2, 4)], 1, 4).is_err());
+        assert!(st.repack(&[(0, 8)], 1, 4).is_err());
     }
 
     #[test]

@@ -135,8 +135,12 @@ impl HostTensor {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         match shape.ty() {
-            ElementType::F32 => Ok(HostTensor { shape: dims, data: TensorData::F32(lit.to_vec()?) }),
-            ElementType::S32 => Ok(HostTensor { shape: dims, data: TensorData::I32(lit.to_vec()?) }),
+            ElementType::F32 => {
+                Ok(HostTensor { shape: dims, data: TensorData::F32(lit.to_vec()?) })
+            }
+            ElementType::S32 => {
+                Ok(HostTensor { shape: dims, data: TensorData::I32(lit.to_vec()?) })
+            }
             other => bail!("unsupported literal element type {other:?}"),
         }
     }

@@ -3,23 +3,31 @@
 //! (TinyLM models + synthetic tasks standing in for Qwen/LLaMa + GLUE,
 //! DESIGN.md §3).
 //!
-//! The sweep itself runs through the packed engine — the system being
-//! evaluated is also the system producing its own quality study, exactly
-//! as PLoRA is used in the paper.
+//! The sweep runs the paper's own workflow end-to-end: the configurations
+//! are planned by [`crate::planner::JobPlanner`] against the live bucket
+//! grid, then executed through a [`crate::session::Session`] — so every
+//! sweep exercises the planner, the packed engine, and adapter-completion
+//! re-bucketing. The system being evaluated is also the system producing
+//! its own quality study, exactly as PLoRA is used in the paper.
 
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::config::LoraConfig;
-use crate::costmodel::TrainBudget;
+use crate::cluster::ResourceMonitor;
+use crate::config::{geometry, pool, AdapterSpec, LoraConfig};
+use crate::costmodel::{CostModel, TrainBudget};
 use crate::metrics::Table;
+use crate::planner::JobPlanner;
 use crate::runtime::Runtime;
-use crate::train::{run_pack, AdapterReport, TrainOptions};
+use crate::session::Session;
+use crate::train::{AdapterReport, TrainOptions};
 
 /// The default LoRA configuration a practitioner would start from
-/// (Unsloth-style defaults — Table 6's middle column).
-pub fn default_config(task: &str) -> LoraConfig {
-    LoraConfig { id: usize::MAX, lr: 2e-4, batch: 2, rank: 16, alpha_ratio: 1.0, task: task.into() }
+/// (Unsloth-style defaults — Table 6's middle column). Id-less: bind one
+/// with [`AdapterSpec::with_id`] or let a session assign it at submit.
+pub fn default_config(task: &str) -> AdapterSpec {
+    AdapterSpec::new(task)
 }
 
 /// Options for a quality sweep.
@@ -28,50 +36,80 @@ pub struct SweepOptions {
     pub budget: TrainBudget,
     pub eval_batches: usize,
     pub seed: u64,
+    /// Capacity slots of the live pool the sweep schedules onto.
+    pub gpus: usize,
 }
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        SweepOptions { budget: TrainBudget { dataset: 128, epochs: 1 }, eval_batches: 4, seed: 23 }
+        SweepOptions {
+            budget: TrainBudget { dataset: 128, epochs: 1 },
+            eval_batches: 4,
+            seed: 23,
+            gpus: 2,
+        }
     }
 }
 
-/// Run every config through packed jobs (greedy chunking onto the largest
-/// available artifact bucket) and return per-config reports.
-pub fn sweep(rt: &Arc<Runtime>, model: &str, configs: &[LoraConfig], opts: &SweepOptions) -> Result<Vec<AdapterReport>> {
-    let topts = TrainOptions {
+/// The live cost model for a runtime model: TinyLM geometry on the cpu-sim
+/// profile, charged at padded static shapes and constrained to the
+/// manifest's bucket grid.
+pub fn live_cost_model(rt: &Runtime, model: &str) -> Result<CostModel> {
+    let geom = match geometry::geom(model) {
+        Some(g) => g.clone(),
+        None => {
+            let mi = rt.manifest.model(model)?;
+            geometry::tiny_geom(
+                Box::leak(model.to_string().into_boxed_str()),
+                mi.n_layers,
+                mi.d_model,
+                mi.d_ff,
+                mi.n_heads,
+                mi.vocab,
+                mi.seq,
+            )
+        }
+    };
+    let mut cm = CostModel::new(&geom, &pool::CPU_SIM);
+    cm.charge_padding = true;
+    cm.buckets = Some(rt.manifest.train_buckets(model));
+    Ok(cm)
+}
+
+/// Run every config through the planner + session (packs, re-bucketing and
+/// all) and return per-config reports in input-id order. Config ids must
+/// be unique within one sweep call.
+pub fn sweep(
+    rt: &Arc<Runtime>,
+    model: &str,
+    configs: &[LoraConfig],
+    opts: &SweepOptions,
+) -> Result<Vec<AdapterReport>> {
+    let mut planner = JobPlanner::new(live_cost_model(rt, model)?, opts.gpus);
+    planner.budget = opts.budget;
+    let plan = planner.plan(configs)?;
+
+    let monitor = ResourceMonitor::new(&pool::CPU_SIM, opts.gpus);
+    let mut session = Session::new(rt.clone(), monitor, model);
+    session.options = TrainOptions {
         budget: opts.budget,
         eval_batches: opts.eval_batches,
         seed: opts.seed,
         log_every: 0,
     };
-    let max_n = rt.manifest.max_bucket_n(model).max(1);
-    let mut out = vec![];
-    // Group by (rank bucket, batch bucket) so padding waste stays low, then
-    // chunk each group to the largest bucket that actually admits its
-    // (rank, batch) shape — grids are not full cross products (e.g. nano
-    // has n=4 only at bs=1).
-    let mut groups: std::collections::BTreeMap<(usize, usize), Vec<LoraConfig>> =
-        std::collections::BTreeMap::new();
-    for c in configs {
-        groups.entry((c.rank, c.batch)).or_default().push(c.clone());
+    for j in &plan.jobs {
+        session.submit_planned(j.job.clone())?;
     }
-    for ((rank, batch), group) in groups {
-        let cap = (1..=max_n)
-            .rev()
-            .find(|&k| rt.manifest.train_bucket(model, k, rank, batch).is_some())
-            .unwrap_or(1);
-        for chunk in group.chunks(cap) {
-            let rep = run_pack(rt, model, chunk, &topts)?;
-            out.extend(rep.adapters);
-        }
-    }
+    let report = session.drain()?;
+    let mut out: Vec<AdapterReport> =
+        report.outcomes.into_iter().flat_map(|o| o.report.adapters).collect();
+    out.sort_by_key(|a| a.config.id);
     Ok(out)
 }
 
 /// Best (highest eval accuracy) report per task.
-pub fn best_per_task<'a>(reports: &'a [AdapterReport]) -> std::collections::BTreeMap<&'a str, &'a AdapterReport> {
-    let mut best: std::collections::BTreeMap<&str, &AdapterReport> = Default::default();
+pub fn best_per_task(reports: &[AdapterReport]) -> BTreeMap<&str, &AdapterReport> {
+    let mut best: BTreeMap<&str, &AdapterReport> = Default::default();
     for r in reports {
         let e = best.entry(r.config.task.as_str()).or_insert(r);
         if r.eval_acc > e.eval_acc {
@@ -104,13 +142,17 @@ pub fn table2(reports: &[AdapterReport]) -> Table {
         };
         let c = &b.config;
         let lr = knob_delta(&|r: &AdapterReport| {
-            r.config.batch == c.batch && r.config.rank == c.rank && r.config.alpha_ratio == c.alpha_ratio
+            r.config.batch == c.batch
+                && r.config.rank == c.rank
+                && r.config.alpha_ratio == c.alpha_ratio
         });
         let bs = knob_delta(&|r: &AdapterReport| {
             r.config.lr == c.lr && r.config.rank == c.rank && r.config.alpha_ratio == c.alpha_ratio
         });
         let rank = knob_delta(&|r: &AdapterReport| {
-            r.config.lr == c.lr && r.config.batch == c.batch && r.config.alpha_ratio == c.alpha_ratio
+            r.config.lr == c.lr
+                && r.config.batch == c.batch
+                && r.config.alpha_ratio == c.alpha_ratio
         });
         let alpha = knob_delta(&|r: &AdapterReport| {
             r.config.lr == c.lr && r.config.batch == c.batch && r.config.rank == c.rank
@@ -164,7 +206,7 @@ pub fn table4(model: &str, reports: &[AdapterReport]) -> Table {
             c.rank.to_string(),
             format!("{:.0e}", c.lr),
             c.batch.to_string(),
-            format!("{}", c.alpha_ratio),
+            c.alpha_ratio.to_string(),
             format!("{:.1}%", b.eval_acc * 100.0),
         ]);
     }
@@ -197,7 +239,14 @@ mod tests {
 
     fn rep(task: &str, lr: f64, bs: usize, rank: usize, alpha: f64, acc: f32) -> AdapterReport {
         AdapterReport {
-            config: LoraConfig { id: 0, lr, batch: bs, rank, alpha_ratio: alpha, task: task.into() },
+            config: LoraConfig {
+                id: 0,
+                lr,
+                batch: bs,
+                rank,
+                alpha_ratio: alpha,
+                task: task.into(),
+            },
             steps: 1,
             first_loss: 1.0,
             final_loss: 0.5,

@@ -1,0 +1,459 @@
+//! The **Session** orchestration layer (§4, Figure 3) — the event-driven
+//! front door that `Engine::run`, `search::sweep` and `plora serve` are all
+//! built on.
+//!
+//! A [`Session`] owns the runtime, the Resource Monitor and (optionally)
+//! the Checkpoint Pool, and exposes:
+//!
+//! - [`Session::submit`] / [`Session::submit_planned`] — dynamic admission:
+//!   jobs may be submitted while others run. A dedicated dispatcher thread
+//!   admits jobs FIFO, acquiring devices *before* launch (the LoRA Job
+//!   Queue semantics, with backpressure).
+//! - a streaming [`Event`] channel ([`Session::subscribe`]): `JobStarted`,
+//!   `AdapterFinished`, `Rebucketed`, `JobFinished`, `CalibUpdated`.
+//! - [`Session::drain`] — wait for everything submitted so far and return
+//!   a [`SessionReport`] (outcomes + makespan + live calib fit + the full
+//!   event log).
+//!
+//! **Preemptive re-bucketing**: when an adapter converges (exhausts its
+//! budget) mid-job, the session checkpoints it from the event stream and —
+//! via `planner::rebalance::shrink_bucket` — re-packs the survivors onto a
+//! smaller `(n, rank, batch)` bucket instead of padding to job end, so the
+//! cost model's phase-wise `job_time` is what actually executes. The
+//! discrete-event simulator emits the same [`Event`] type, so live and
+//! simulated timelines are directly comparable.
+
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::{Allocation, ResourceMonitor};
+use crate::config::{AdapterSpec, LoraConfig};
+use crate::costmodel::throughput::Calib;
+use crate::costmodel::{ExecMode, Pack};
+use crate::engine::CheckpointPool;
+use crate::planner::PlannedJob;
+use crate::runtime::Runtime;
+use crate::train::{run_pack_phased, JobReport, PackPhaseEvent, TrainOptions};
+
+/// What a user submits: id-less adapter specs plus execution knobs. The
+/// session owns adapter-id allocation (ids are assigned at submit time, so
+/// sentinel ids can never reach the checkpoint pool). Pre-planned queues
+/// with explicit ids go through [`Session::submit_planned`] instead.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub adapters: Vec<AdapterSpec>,
+    /// Parallelism degree `d_j` (devices held for the job's duration).
+    pub d: usize,
+    pub mode: ExecMode,
+}
+
+impl JobSpec {
+    pub fn new(adapters: Vec<AdapterSpec>) -> JobSpec {
+        JobSpec { adapters, d: 1, mode: ExecMode::Packed }
+    }
+}
+
+/// Receipt for a submitted job.
+#[derive(Debug, Clone)]
+pub struct JobHandle {
+    pub job: usize,
+    /// Adapter ids in slot order (session-assigned for [`Session::submit`]).
+    pub adapters: Vec<usize>,
+}
+
+/// One entry of the session's event stream. Timestamps are seconds since
+/// the session started.
+#[derive(Debug, Clone)]
+pub enum Event {
+    JobStarted { job: usize, n_adapters: usize, devices: Vec<usize>, at: f64 },
+    /// An adapter completed its budget (and was checkpointed, if a pool is
+    /// attached) — possibly well before its job ends.
+    AdapterFinished {
+        job: usize,
+        adapter: usize,
+        task: String,
+        steps: usize,
+        eval_loss: f32,
+        eval_acc: f32,
+        at: f64,
+    },
+    /// Survivors of an adapter-completion boundary moved to a smaller
+    /// `(n, rank, batch)` bucket.
+    Rebucketed {
+        job: usize,
+        from: (usize, usize, usize),
+        to: (usize, usize, usize),
+        survivors: Vec<usize>,
+        at: f64,
+    },
+    JobFinished { job: usize, adapters: usize, wall: f64, at: f64 },
+    /// The job errored; its devices were returned to the pool and the
+    /// error is re-raised by the next `drain`.
+    JobFailed { job: usize, error: String, at: f64 },
+    /// The live cost-model fit `t = a + b·tokens + c·n` was refreshed from
+    /// accumulated step profiles (§4 calibration).
+    CalibUpdated { fit: (f64, f64, f64), samples: usize, at: f64 },
+}
+
+impl Event {
+    /// Seconds since session start.
+    pub fn at(&self) -> f64 {
+        match self {
+            Event::JobStarted { at, .. }
+            | Event::AdapterFinished { at, .. }
+            | Event::Rebucketed { at, .. }
+            | Event::JobFinished { at, .. }
+            | Event::JobFailed { at, .. }
+            | Event::CalibUpdated { at, .. } => *at,
+        }
+    }
+}
+
+/// One finished job with its session-side timeline.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job_id: usize,
+    pub devices: Vec<usize>,
+    /// Seconds after session start when the job launched / finished.
+    pub start: f64,
+    pub end: f64,
+    pub report: JobReport,
+}
+
+/// Everything a `drain` returns.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    /// Finished jobs, sorted by job id.
+    pub outcomes: Vec<JobOutcome>,
+    pub makespan: f64,
+    /// Live cost-model fit `(a, b, c)` of `t = a + b·tokens + c·n` over all
+    /// profiled steps.
+    pub calib_fit: (f64, f64, f64),
+    /// The full event log up to this drain.
+    pub events: Vec<Event>,
+}
+
+impl SessionReport {
+    pub fn total_adapters(&self) -> usize {
+        self.outcomes.iter().map(|o| o.report.adapters.len()).sum()
+    }
+
+    /// Number of `Rebucketed` events in the log.
+    pub fn rebuckets(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, Event::Rebucketed { .. })).count()
+    }
+}
+
+/// A submitted job with the options snapshot it will run under.
+struct QueuedJob {
+    job: PlannedJob,
+    opts: TrainOptions,
+    rebucket: bool,
+    checkpoints: Option<CheckpointPool>,
+}
+
+struct Shared {
+    runtime: Arc<Runtime>,
+    monitor: ResourceMonitor,
+    model: String,
+    t0: Instant,
+    events: Mutex<Vec<Event>>,
+    subscribers: Mutex<Vec<mpsc::Sender<Event>>>,
+    outcomes: Mutex<Vec<JobOutcome>>,
+    errors: Mutex<Vec<String>>,
+    profile: Mutex<Vec<(f64, f64, f64)>>,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl Shared {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn emit(&self, ev: Event) {
+        self.subscribers.lock().unwrap().retain(|s| s.send(ev.clone()).is_ok());
+        self.events.lock().unwrap().push(ev);
+    }
+
+    fn fail(&self, job: usize, e: anyhow::Error) {
+        let error = format!("job {job}: {e:#}");
+        self.errors.lock().unwrap().push(error.clone());
+        self.emit(Event::JobFailed { job, error, at: self.now() });
+    }
+
+    fn complete(&self) {
+        *self.done.lock().unwrap() += 1;
+        self.done_cv.notify_all();
+    }
+}
+
+/// The session (see module docs).
+pub struct Session {
+    shared: Arc<Shared>,
+    tx: Option<mpsc::Sender<QueuedJob>>,
+    /// Training options snapshot applied to jobs at submit time.
+    pub options: TrainOptions,
+    /// Finished adapters are saved here as they complete, when set.
+    pub checkpoints: Option<CheckpointPool>,
+    /// Preemptive re-bucketing at adapter-completion boundaries (default
+    /// on; off reproduces the pre-session pad-to-job-end engine).
+    pub rebucket: bool,
+    submitted: usize,
+    next_job_id: usize,
+    next_adapter_id: usize,
+    used_adapter_ids: std::collections::BTreeSet<usize>,
+}
+
+impl Session {
+    pub fn new(runtime: Arc<Runtime>, monitor: ResourceMonitor, model: &str) -> Session {
+        let shared = Arc::new(Shared {
+            runtime,
+            monitor,
+            model: model.to_string(),
+            t0: Instant::now(),
+            events: Mutex::new(vec![]),
+            subscribers: Mutex::new(vec![]),
+            outcomes: Mutex::new(vec![]),
+            errors: Mutex::new(vec![]),
+            profile: Mutex::new(vec![]),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+        });
+        let (tx, rx) = mpsc::channel::<QueuedJob>();
+        let disp = shared.clone();
+        thread::Builder::new()
+            .name("plora-session-dispatch".into())
+            .spawn(move || {
+                // FIFO admission: acquire devices *before* spawning the
+                // worker — queue order is preserved and a full pool applies
+                // backpressure, exactly like the pre-session engine loop.
+                while let Ok(q) = rx.recv() {
+                    match disp.monitor.acquire(q.job.d) {
+                        Ok(alloc) => {
+                            let start = disp.now();
+                            let shared = disp.clone();
+                            thread::Builder::new()
+                                .name(format!("plora-job-{}", q.job.id))
+                                .spawn(move || run_job(&shared, q, alloc, start))
+                                .expect("spawn job worker");
+                        }
+                        Err(e) => {
+                            disp.fail(q.job.id, e);
+                            disp.complete();
+                        }
+                    }
+                }
+            })
+            .expect("spawn session dispatcher");
+        Session {
+            shared,
+            tx: Some(tx),
+            options: TrainOptions::default(),
+            checkpoints: None,
+            rebucket: true,
+            submitted: 0,
+            next_job_id: 0,
+            next_adapter_id: 0,
+            used_adapter_ids: std::collections::BTreeSet::new(),
+        }
+    }
+
+    /// The model every job of this session fine-tunes.
+    pub fn model(&self) -> &str {
+        &self.shared.model
+    }
+
+    /// Devices currently free in the session's pool.
+    pub fn available(&self) -> usize {
+        self.shared.monitor.available()
+    }
+
+    /// Subscribe to the live event stream. Events emitted after this call
+    /// are delivered to the returned receiver (in addition to the log).
+    pub fn subscribe(&mut self) -> mpsc::Receiver<Event> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.subscribers.lock().unwrap().push(tx);
+        rx
+    }
+
+    /// Submit a job; adapter ids are allocated by the session. Returns
+    /// immediately — the job runs as soon as devices free up.
+    pub fn submit(&mut self, spec: JobSpec) -> Result<JobHandle> {
+        if spec.adapters.is_empty() {
+            bail!("submit: empty job spec");
+        }
+        let configs: Vec<LoraConfig> = spec
+            .adapters
+            .into_iter()
+            .map(|a| {
+                let id = self.next_adapter_id;
+                self.next_adapter_id += 1;
+                a.with_id(id)
+            })
+            .collect();
+        let job = PlannedJob {
+            id: self.next_job_id,
+            pack: Pack::new(configs),
+            d: spec.d,
+            mode: spec.mode,
+        };
+        self.next_job_id += 1;
+        self.enqueue(job)
+    }
+
+    /// Submit a pre-planned job (planner output) with explicit job and
+    /// adapter ids. Sentinel and already-used adapter ids are rejected, so
+    /// neither can ever reach (or silently overwrite) the checkpoint pool;
+    /// the session's own id counters are advanced past accepted ids.
+    pub fn submit_planned(&mut self, job: PlannedJob) -> Result<JobHandle> {
+        if job.pack.n() == 0 {
+            bail!("submit: empty pack in job {}", job.id);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &job.pack.configs {
+            if c.id == usize::MAX {
+                bail!("submit: sentinel adapter id in job {} (task '{}')", job.id, c.task);
+            }
+            if self.used_adapter_ids.contains(&c.id) || !seen.insert(c.id) {
+                bail!("submit: adapter id {} already used in this session", c.id);
+            }
+        }
+        let max_id = job.pack.configs.iter().map(|c| c.id).max().unwrap_or(0);
+        self.next_adapter_id = self.next_adapter_id.max(max_id + 1);
+        self.next_job_id = self.next_job_id.max(job.id + 1);
+        self.enqueue(job)
+    }
+
+    fn enqueue(&mut self, job: PlannedJob) -> Result<JobHandle> {
+        let total = self.shared.monitor.total();
+        if job.d == 0 || job.d > total {
+            bail!("submit: job {} wants {} devices, pool has {total}", job.id, job.d);
+        }
+        let adapters: Vec<usize> = job.pack.configs.iter().map(|c| c.id).collect();
+        self.used_adapter_ids.extend(adapters.iter().copied());
+        let handle = JobHandle { job: job.id, adapters };
+        let q = QueuedJob {
+            job,
+            opts: self.options.clone(),
+            rebucket: self.rebucket,
+            checkpoints: self.checkpoints.clone(),
+        };
+        self.tx
+            .as_ref()
+            .expect("session dispatcher alive")
+            .send(q)
+            .map_err(|_| anyhow!("session dispatcher terminated"))?;
+        self.submitted += 1;
+        Ok(handle)
+    }
+
+    /// Wait for every job submitted so far, then report. Errors if any job
+    /// failed (devices are always returned to the pool first; the failures
+    /// are *taken*, so they are reported exactly once). The session stays
+    /// usable: submit more and drain again.
+    pub fn drain(&mut self) -> Result<SessionReport> {
+        {
+            let mut done = self.shared.done.lock().unwrap();
+            while *done < self.submitted {
+                done = self.shared.done_cv.wait(done).unwrap();
+            }
+        }
+        {
+            let errors = std::mem::take(&mut *self.shared.errors.lock().unwrap());
+            if let Some(first) = errors.first() {
+                bail!("session: {} job(s) failed; first: {first}", errors.len());
+            }
+        }
+        let mut outcomes = self.shared.outcomes.lock().unwrap().clone();
+        outcomes.sort_by_key(|o| o.job_id);
+        let makespan = outcomes.iter().map(|o| o.end).fold(0.0, f64::max);
+        let samples = self.shared.profile.lock().unwrap().clone();
+        let calib_fit = Calib::fit_live(&samples);
+        let events = self.shared.events.lock().unwrap().clone();
+        Ok(SessionReport { outcomes, makespan, calib_fit, events })
+    }
+}
+
+/// One job's worker: runs the phased driver, checkpoints adapters as they
+/// finish, maps driver callbacks onto session events, releases devices.
+fn run_job(shared: &Shared, q: QueuedJob, alloc: Allocation, start: f64) {
+    let devices = alloc.devices.clone();
+    shared.emit(Event::JobStarted {
+        job: q.job.id,
+        n_adapters: q.job.pack.n(),
+        devices: devices.clone(),
+        at: start,
+    });
+    let mut ckpt_err: Option<anyhow::Error> = None;
+    let result = {
+        let mut on_ev = |ev: PackPhaseEvent<'_>| match ev {
+            PackPhaseEvent::AdapterFinished { slot, report, state } => {
+                if let Some(ckpt) = &q.checkpoints {
+                    let c = &report.config;
+                    let saved = ckpt
+                        .save_state(&shared.model, state, &[(slot, c.id, c.rank)])
+                        .and_then(|_| ckpt.save_adapter(&shared.model, q.job.id, report));
+                    if let Err(e) = saved {
+                        ckpt_err.get_or_insert(e);
+                    }
+                }
+                shared.emit(Event::AdapterFinished {
+                    job: q.job.id,
+                    adapter: report.config.id,
+                    task: report.config.task.clone(),
+                    steps: report.steps,
+                    eval_loss: report.eval_loss,
+                    eval_acc: report.eval_acc,
+                    at: shared.now(),
+                });
+            }
+            PackPhaseEvent::Rebucketed { from, to, survivors } => {
+                let at = shared.now();
+                shared.emit(Event::Rebucketed { job: q.job.id, from, to, survivors, at });
+            }
+        };
+        run_pack_phased(
+            &shared.runtime,
+            &shared.model,
+            &q.job.pack.configs,
+            &q.opts,
+            q.rebucket,
+            &mut on_ev,
+        )
+    };
+    shared.monitor.release(alloc);
+    match result {
+        Ok((report, _state)) => {
+            if let Some(e) = ckpt_err {
+                shared.fail(q.job.id, e);
+            } else {
+                let end = shared.now();
+                let (fit, samples) = {
+                    let mut prof = shared.profile.lock().unwrap();
+                    prof.extend(report.profile.iter().copied());
+                    (Calib::fit_live(prof.as_slice()), prof.len())
+                };
+                shared.emit(Event::CalibUpdated { fit, samples, at: shared.now() });
+                shared.emit(Event::JobFinished {
+                    job: q.job.id,
+                    adapters: report.adapters.len(),
+                    wall: end - start,
+                    at: end,
+                });
+                shared.outcomes.lock().unwrap().push(JobOutcome {
+                    job_id: q.job.id,
+                    devices,
+                    start,
+                    end,
+                    report,
+                });
+            }
+        }
+        Err(e) => shared.fail(q.job.id, e),
+    }
+    shared.complete();
+}

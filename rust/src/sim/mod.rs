@@ -5,14 +5,22 @@
 //!
 //! The simulator re-derives the timeline independently of the planner's
 //! predictions: jobs launch FIFO when enough devices are free (the same
-//! semantics as the live [`crate::engine::Engine`]), durations come from
+//! semantics as the live [`crate::session::Session`]), durations come from
 //! the cost model optionally perturbed by lognormal noise (robustness
 //! ablation — the planner plans on clean estimates, reality jitters).
+//!
+//! It speaks the session's language: every run emits the same
+//! [`Event`] stream a live session does (`JobStarted`, `AdapterFinished`
+//! at cost-model phase boundaries, `Rebucketed`, `JobFinished`), and the
+//! per-job timeline in [`SimResult::jobs`] is reconstructed *from that
+//! log* — so simulated and live traces can be compared or rendered by the
+//! same consumers.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::costmodel::{CostModel, TrainBudget};
 use crate::planner::PlannedJob;
+use crate::session::Event;
 use crate::util::rng::Rng;
 
 /// Simulation options.
@@ -44,11 +52,15 @@ pub struct SimJob {
 /// Simulation outcome.
 #[derive(Debug, Clone)]
 pub struct SimResult {
+    /// Per-job timeline, reconstructed from the event log.
     pub jobs: Vec<SimJob>,
     pub makespan: f64,
     /// Busy seconds per device.
     pub device_busy: Vec<f64>,
+    /// Scheduler decision points (completion events advanced past).
     pub events: usize,
+    /// The session-compatible event stream of the whole run.
+    pub log: Vec<Event>,
 }
 
 impl SimResult {
@@ -87,7 +99,7 @@ impl Simulator {
         let mut running: Vec<(f64, Vec<usize>)> = vec![];
         let mut pending: VecDeque<&PlannedJob> = queue.iter().collect();
         let mut now = 0.0f64;
-        let mut out = vec![];
+        let mut log: Vec<Event> = vec![];
         let mut busy = vec![0.0f64; self.gpus];
         let mut events = 0usize;
 
@@ -97,23 +109,55 @@ impl Simulator {
                 if job.d <= free.len() {
                     let job = pending.pop_front().unwrap();
                     let devices: Vec<usize> = free.drain(..job.d).collect();
-                    let mut dur = self.cm.job_time(&job.pack, job.d, job.mode, &self.budget);
-                    if opts.noise > 0.0 {
-                        dur *= (opts.noise * rng.normal()).exp();
+                    let phases = self.cm.job_phases(&job.pack, job.d, job.mode, &self.budget);
+                    // Noise perturbs the whole job's duration once; phases
+                    // stretch uniformly so boundary order is preserved.
+                    let factor =
+                        if opts.noise > 0.0 { (opts.noise * rng.normal()).exp() } else { 1.0 };
+                    log.push(Event::JobStarted {
+                        job: job.id,
+                        n_adapters: job.pack.n(),
+                        devices: devices.clone(),
+                        at: now,
+                    });
+                    let mut shape =
+                        (job.pack.n(), job.pack.r_pad(), job.pack.bs_pad());
+                    let mut t = now;
+                    for p in &phases {
+                        t += p.dur * factor;
+                        for &id in &p.finished {
+                            log.push(Event::AdapterFinished {
+                                job: job.id,
+                                adapter: id,
+                                task: String::new(),
+                                steps: 0,
+                                eval_loss: f32::NAN,
+                                eval_acc: f32::NAN,
+                                at: t,
+                            });
+                        }
+                        if p.survivors.0 > 0 && p.survivors != shape {
+                            log.push(Event::Rebucketed {
+                                job: job.id,
+                                from: shape,
+                                to: p.survivors,
+                                survivors: vec![],
+                                at: t,
+                            });
+                            shape = p.survivors;
+                        }
                     }
+                    let dur = t - now;
                     for &dev in &devices {
                         busy[dev] += dur;
                     }
-                    out.push(SimJob {
-                        id: job.id,
-                        d: job.d,
-                        n_configs: job.pack.n(),
-                        rank_sum: job.pack.rank_sum(),
-                        start: now,
-                        end: now + dur,
-                        devices: devices.clone(),
+                    log.push(Event::JobFinished {
+                        job: job.id,
+                        adapters: job.pack.n(),
+                        wall: dur,
+                        at: t,
                     });
-                    running.push((now + dur, devices));
+                    running.push((t, devices));
                 } else {
                     break;
                 }
@@ -141,8 +185,43 @@ impl Simulator {
             free.sort_unstable();
         }
 
-        let makespan = out.iter().map(|j| j.end).fold(0.0, f64::max);
-        SimResult { jobs: out, makespan, device_busy: busy, events }
+        // Order the log by timestamp so it reads like a live session's
+        // stream (job event chains are generated at admission time, so
+        // concurrent jobs would otherwise interleave out of order); the
+        // stable sort keeps same-instant events in emission order.
+        log.sort_by(|a, b| a.at().total_cmp(&b.at()));
+
+        // The timeline is read back off the event log (same stream a live
+        // session emits), joined with the queue's static job facts.
+        let by_id: BTreeMap<usize, &PlannedJob> = queue.iter().map(|j| (j.id, j)).collect();
+        let mut jobs: Vec<SimJob> = vec![];
+        let mut open: BTreeMap<usize, usize> = BTreeMap::new(); // job id -> index
+        for ev in &log {
+            match ev {
+                Event::JobStarted { job, devices, at, .. } => {
+                    let pj = by_id[job];
+                    open.insert(*job, jobs.len());
+                    jobs.push(SimJob {
+                        id: *job,
+                        d: pj.d,
+                        n_configs: pj.pack.n(),
+                        rank_sum: pj.pack.rank_sum(),
+                        start: *at,
+                        end: *at,
+                        devices: devices.clone(),
+                    });
+                }
+                Event::JobFinished { job, at, .. } => {
+                    if let Some(&i) = open.get(job) {
+                        jobs[i].end = *at;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        let makespan = jobs.iter().map(|j| j.end).fold(0.0, f64::max);
+        SimResult { jobs, makespan, device_busy: busy, events, log }
     }
 }
 
@@ -151,7 +230,8 @@ mod tests {
     use super::*;
     use crate::config::geometry::geom;
     use crate::config::pool::A100_40G;
-    use crate::config::SearchSpace;
+    use crate::config::{LoraConfig, SearchSpace};
+    use crate::costmodel::{ExecMode, Pack};
     use crate::planner::{min_gpu_plan, JobPlanner};
 
     fn sim(model: &str) -> Simulator {
@@ -217,5 +297,57 @@ mod tests {
         let res = s.run_queue(&queue, &SimOptions::default());
         assert!(res.utilization() > 0.5 && res.utilization() <= 1.0);
         assert!(res.rank_throughput() > 0.0);
+    }
+
+    /// A mixed-batch pack produces the session event vocabulary: started,
+    /// adapter-finished at phase boundaries, re-bucketed, finished — and
+    /// the job timeline in `jobs` is exactly what the log says.
+    #[test]
+    fn event_log_carries_phases_and_rebuckets() {
+        let s = sim("qwen2.5-7b");
+        let cfg = |id: usize, bs: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: bs,
+            rank: 16,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        let queue = vec![PlannedJob {
+            id: 0,
+            pack: Pack::new(vec![cfg(0, 1), cfg(1, 4)]),
+            d: 1,
+            mode: ExecMode::Packed,
+        }];
+        let res = s.run_queue(&queue, &SimOptions::default());
+        let kinds: Vec<&str> = res
+            .log
+            .iter()
+            .map(|e| match e {
+                Event::JobStarted { .. } => "started",
+                Event::AdapterFinished { .. } => "adapter",
+                Event::Rebucketed { .. } => "rebucket",
+                Event::JobFinished { .. } => "finished",
+                Event::JobFailed { .. } => "failed",
+                Event::CalibUpdated { .. } => "calib",
+            })
+            .collect();
+        assert_eq!(kinds, vec!["started", "adapter", "rebucket", "adapter", "finished"]);
+        // bs4 (fewer steps) leaves first; survivors shrink to (1, 16, 1).
+        let Some(Event::Rebucketed { from, to, .. }) =
+            res.log.iter().find(|e| matches!(e, Event::Rebucketed { .. }))
+        else {
+            panic!("no rebucket event");
+        };
+        assert_eq!(*from, (2, 16, 4));
+        assert_eq!(*to, (1, 16, 1));
+        // Timeline rebuilt from the log matches the cost model exactly.
+        assert_eq!(res.jobs.len(), 1);
+        let want = s.cm.job_time(&queue[0].pack, 1, ExecMode::Packed, &s.budget);
+        assert!((res.jobs[0].end - res.jobs[0].start - want).abs() < 1e-9);
+        // Event timestamps are monotone.
+        for w in res.log.windows(2) {
+            assert!(w[0].at() <= w[1].at() + 1e-12);
+        }
     }
 }

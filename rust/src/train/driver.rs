@@ -4,14 +4,29 @@
 //! This is the L3 side of the paper's Figure 2 workflow — each adapter
 //! receives its own task batch; the base weights are shared; per-adapter
 //! alpha, learning rate, rank mask and loss mask carry the heterogeneity.
+//!
+//! Two properties make the driver orchestration-friendly (the `session`
+//! subsystem builds on both):
+//!
+//! - **Per-adapter streams**: an adapter's A-init, train batches and eval
+//!   batches come from its own `(seed, id)`-keyed generator, so its whole
+//!   trajectory is bit-identical whether it runs solo or packed, and across
+//!   bucket shapes (§3.2 "identical to single-adapter fine-tuning").
+//! - **Phased execution with re-bucketing**: training advances between
+//!   adapter-completion boundaries; when adapters exhaust their budget they
+//!   are evaluated, reported through [`PackPhaseEvent`], and — with
+//!   `rebucket` on — the survivors are re-packed onto a smaller
+//!   `(n, rank, batch)` bucket instead of padding to job end (the
+//!   cost-model's phase-wise `job_time`, realized live).
 
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::LoraConfig;
-use crate::costmodel::TrainBudget;
-use crate::runtime::{HostTensor, Runtime, TrainState};
+use crate::costmodel::{Pack, TrainBudget};
+use crate::planner::rebalance::shrink_bucket;
+use crate::runtime::{Executable, HostTensor, ModelInfo, Runtime, TrainState};
 use crate::train::tasks;
 use crate::util::rng::Rng;
 
@@ -53,7 +68,8 @@ pub struct AdapterReport {
 #[derive(Debug, Clone)]
 pub struct JobReport {
     pub artifact: String,
-    /// Bucket shape actually executed (≥ requested pack shape).
+    /// Initial bucket shape executed (≥ requested pack shape; re-bucketing
+    /// only ever shrinks it mid-job).
     pub bucket_n: usize,
     pub bucket_r: usize,
     pub bucket_bs: usize,
@@ -63,9 +79,14 @@ pub struct JobReport {
     pub step_secs: f64,
     pub compile_secs: f64,
     pub adapters: Vec<AdapterReport>,
-    /// `(real_tokens, n_adapters, secs)` per sampled step — feeds
+    /// `(real_tokens, alive_adapters, secs)` per step — feeds
     /// `Calib::fit_live` (§4 "profiling data from the first iterations").
     pub profile: Vec<(f64, f64, f64)>,
+    /// Padded rows (bucket `n × bs`) summed over executed steps — the
+    /// deterministic work proxy that re-bucketing shrinks.
+    pub padded_rows: usize,
+    /// Bucket shrinks performed at adapter-completion boundaries.
+    pub rebuckets: usize,
 }
 
 impl JobReport {
@@ -76,7 +97,32 @@ impl JobReport {
     }
 }
 
-/// Run one packed job live on the PJRT runtime.
+/// Progress callbacks from a phased packed job (the session maps these
+/// onto its public `Event` stream).
+pub enum PackPhaseEvent<'a> {
+    /// An adapter completed its budget. `state` still holds its slot, so
+    /// the caller can extract a true-rank checkpoint before any re-bucket.
+    AdapterFinished { slot: usize, report: &'a AdapterReport, state: &'a TrainState },
+    /// Surviving adapters were re-packed onto a smaller bucket.
+    Rebucketed {
+        from: (usize, usize, usize),
+        to: (usize, usize, usize),
+        /// Config ids still training, in their new slot order.
+        survivors: Vec<usize>,
+    },
+}
+
+const INIT_SALT: u64 = 0x706c_6f72_6149_4e49;
+const DATA_SALT: u64 = 0x706c_6f72_6144_4154;
+const EVAL_SALT: u64 = 0x706c_6f72_6145_5641;
+
+/// Per-adapter stream key: every adapter draws init/train/eval data from
+/// its own `(seed, id)`-keyed generator (see module docs).
+fn stream_seed(seed: u64, id: usize, salt: u64) -> u64 {
+    seed ^ salt ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Run one packed job live on the runtime.
 pub fn run_pack(
     rt: &Runtime,
     model: &str,
@@ -87,182 +133,366 @@ pub fn run_pack(
 }
 
 /// Like [`run_pack`] but also returns the final [`TrainState`], so callers
-/// (the execution engine) can slice true-rank adapter checkpoints out of
-/// the padded pack tensors.
+/// can slice true-rank adapter checkpoints out of the padded pack tensors.
+/// Runs without re-bucketing so the returned state holds *every* adapter's
+/// slot; the session uses [`run_pack_phased`] directly for the re-bucketing
+/// path (finished adapters are checkpointed from the event stream there).
 pub fn run_pack_full(
     rt: &Runtime,
     model: &str,
     configs: &[LoraConfig],
     opts: &TrainOptions,
 ) -> Result<(JobReport, TrainState)> {
+    run_pack_phased(rt, model, configs, opts, false, &mut |_| {})
+}
+
+/// Phased packed training (see module docs). With `rebucket` off, finished
+/// adapters ride the initial bucket as inert slots (zero lr, zero batch) —
+/// the pre-session engine behavior.
+pub fn run_pack_phased(
+    rt: &Runtime,
+    model: &str,
+    configs: &[LoraConfig],
+    opts: &TrainOptions,
+    rebucket: bool,
+    on_event: &mut dyn FnMut(PackPhaseEvent<'_>),
+) -> Result<(JobReport, TrainState)> {
     if configs.is_empty() {
         return Err(anyhow!("run_pack: empty pack"));
     }
     let mi = rt.manifest.model(model)?.clone();
-    let want_n = configs.len();
+    let n_real = configs.len();
+    let steps_of: Vec<usize> = configs.iter().map(|c| opts.budget.steps(c.batch)).collect();
+    let job_steps = steps_of.iter().copied().max().unwrap_or(0);
+
+    // Initial bucket: the smallest artifact dominating the full pack shape.
     let want_r = configs.iter().map(|c| c.rank).max().unwrap();
     let want_bs = configs.iter().map(|c| c.batch).max().unwrap();
     let info = rt
         .manifest
-        .train_bucket(model, want_n, want_r, want_bs)
+        .train_bucket(model, n_real, want_r, want_bs)
         .ok_or_else(|| {
-            anyhow!("no train bucket for {model} n={want_n} r={want_r} bs={want_bs} (max n: {})",
-                rt.manifest.max_bucket_n(model))
+            anyhow!(
+                "no train bucket for {model} n={n_real} r={want_r} bs={want_bs} (max n: {})",
+                rt.manifest.max_bucket_n(model)
+            )
         })?
         .clone();
-    let (n, r, bs) = (
+    let (mut bn, mut br, mut bbs) = (
         info.meta_usize("n").unwrap(),
         info.meta_usize("r").unwrap(),
         info.meta_usize("bs").unwrap(),
     );
-    let train_exe = rt.executable(&info.name)?;
-    let eval_exe = rt.executable(&rt.manifest.eval_for(&info)?.name.clone())?;
+    let mut train_exe = rt.executable(&info.name)?;
+    let mut eval_exe = rt.executable(&rt.manifest.eval_for(&info)?.name.clone())?;
     let compile_secs = train_exe.compile_secs + eval_exe.compile_secs;
+    let first_bucket = (info.name.clone(), bn, br, bbs);
 
     let base = rt.base_weights(model)?;
-    let mut state = TrainState::init(&mi, n, r, opts.seed);
-    let mut rng = Rng::new(opts.seed ^ 0x9e37_79b9_7f4a_7c15);
+    let buckets = rt.manifest.train_buckets(model);
+    let (seq, vocab) = (mi.seq, mi.vocab);
 
-    // Per-slot runtime vectors; padding slots (beyond the real pack) train
-    // nothing: lr 0, scale 0, batch 0.
-    let mut scale = vec![0.0f32; n];
-    let mut lr = vec![0.0f32; n];
-    let mut ranks = vec![r; n];
-    let mut real_bs = vec![0usize; n];
-    let mut task_names: Vec<&str> = vec!["modadd"; n];
-    let mut adapter_steps = vec![0usize; n];
-    for (i, c) in configs.iter().enumerate() {
-        scale[i] = c.alpha_ratio as f32;
-        lr[i] = c.lr as f32;
-        ranks[i] = c.rank;
-        real_bs[i] = c.batch;
-        task_names[i] = &c.task;
-        adapter_steps[i] = opts.budget.steps(c.batch);
-    }
-    let rmask = state.rank_mask(&ranks)?;
-    let job_steps = adapter_steps.iter().copied().max().unwrap_or(0);
+    // Bucket-slot occupancy: slots[s] = original adapter index; active[s]
+    // marks adapters still inside their budget. Inactive slots are inert
+    // (zero lr, zero batch) until a re-bucket drops them entirely.
+    let mut slots: Vec<usize> = (0..n_real).collect();
+    let mut active: Vec<bool> = vec![true; n_real];
+
+    let init_seeds: Vec<u64> =
+        configs.iter().map(|c| stream_seed(opts.seed, c.id, INIT_SALT)).collect();
+    let ranks: Vec<usize> = configs.iter().map(|c| c.rank).collect();
+    let mut state = TrainState::init_per_adapter(&mi, bn, br, &init_seeds, &ranks)?;
+    let mut data_rngs: Vec<Rng> = configs
+        .iter()
+        .map(|c| Rng::new(stream_seed(opts.seed, c.id, DATA_SALT)))
+        .collect();
+
+    // Per-bucket-slot runtime vectors, rebuilt whenever membership changes.
+    let build_vectors = |slots: &[usize], active: &[bool], bn: usize| {
+        let mut scale = vec![0.0f32; bn];
+        let mut lrs = vec![0.0f32; bn];
+        let mut rks = vec![0usize; bn];
+        for (s, &k) in slots.iter().enumerate() {
+            let c = &configs[k];
+            scale[s] = c.alpha_ratio as f32;
+            rks[s] = c.rank;
+            if active[s] {
+                lrs[s] = c.lr as f32;
+            }
+        }
+        (scale, lrs, rks)
+    };
+    let (mut scale, mut lrs, mut rks) = build_vectors(&slots, &active, bn);
+    let mut rmask = state.rank_mask(&rks)?;
 
     // Base-model quality (B = 0 ⇒ the adapters are identity).
-    let (base_loss, base_acc) =
-        eval_avg(rt, &state, &eval_exe, &base, &task_names, &scale, bs, &mi, opts)?;
+    let (bl, ba) = eval_members(
+        rt,
+        &mi,
+        &eval_exe,
+        &base,
+        &state,
+        configs,
+        &slots,
+        None,
+        &scale,
+        bbs,
+        opts,
+    )?;
+    let mut base_loss = vec![0.0f32; n_real];
+    let mut base_acc = vec![0.0f32; n_real];
+    for (s, &k) in slots.iter().enumerate() {
+        base_loss[k] = bl[s];
+        base_acc[k] = ba[s];
+    }
 
     let t0 = Instant::now();
     let mut profile = vec![];
-    let mut first = vec![f32::NAN; n];
-    let mut last = vec![f32::NAN; n];
-    let mut curves: Vec<Vec<(usize, f32)>> = vec![vec![]; n];
-    for step in 0..job_steps {
-        // Adapters past their budget stop: zero lr and batch.
-        let mut lr_now = lr.clone();
-        let mut bs_now = real_bs.clone();
-        for i in 0..n {
-            if step >= adapter_steps[i] {
-                lr_now[i] = 0.0;
-                bs_now[i] = 0;
+    let mut first = vec![f32::NAN; n_real];
+    let mut last = vec![f32::NAN; n_real];
+    let mut curves: Vec<Vec<(usize, f32)>> = vec![vec![]; n_real];
+    let mut reports: Vec<Option<AdapterReport>> = (0..n_real).map(|_| None).collect();
+    let mut global_step = 0usize;
+    let mut padded_rows = 0usize;
+    let mut rebuckets = 0usize;
+
+    while active.iter().any(|&a| a) {
+        // Steps until the next adapter-completion boundary.
+        let phase = slots
+            .iter()
+            .zip(&active)
+            .filter(|&(_, &a)| a)
+            .map(|(&k, _)| steps_of[k] - global_step)
+            .min()
+            .unwrap();
+        for _ in 0..phase {
+            let mut tokens = vec![0i32; bn * bbs * seq];
+            let mut targets = vec![0i32; bn * bbs * seq];
+            let mut mask = vec![0.0f32; bn * bbs * seq];
+            let mut real_tokens = 0usize;
+            let mut alive = 0usize;
+            for s in 0..slots.len() {
+                if !active[s] {
+                    continue;
+                }
+                let k = slots[s];
+                let c = &configs[k];
+                let tl = &rt.manifest.tokens;
+                for b in 0..c.batch {
+                    let smp = tasks::gen(&c.task, tl, &mut data_rngs[k], seq, vocab)?;
+                    let off = (s * bbs + b) * seq;
+                    tokens[off..off + seq].copy_from_slice(&smp.tokens);
+                    targets[off..off + seq].copy_from_slice(&smp.targets);
+                    mask[off..off + seq].copy_from_slice(&smp.mask);
+                }
+                real_tokens += c.batch * seq;
+                alive += 1;
             }
+            padded_rows += bn * bbs;
+            let s0 = Instant::now();
+            let per = state.step(
+                &train_exe,
+                &base,
+                HostTensor::i32(vec![bn, bbs, seq], tokens)?,
+                HostTensor::i32(vec![bn, bbs, seq], targets)?,
+                HostTensor::f32(vec![bn, bbs, seq], mask)?,
+                &scale,
+                &lrs,
+                &rmask,
+            )?;
+            profile.push((real_tokens as f64, alive as f64, s0.elapsed().as_secs_f64()));
+            for (s, &k) in slots.iter().enumerate() {
+                if !active[s] {
+                    continue;
+                }
+                if first[k].is_nan() {
+                    first[k] = per[s];
+                }
+                last[k] = per[s];
+                if opts.log_every > 0 && global_step % opts.log_every == 0 {
+                    curves[k].push((global_step, per[s]));
+                }
+            }
+            global_step += 1;
         }
-        let pb = tasks::packed_batch(
-            &task_names,
-            &rt.manifest.tokens,
-            &mut rng,
-            bs,
-            mi.seq,
-            mi.vocab,
-            Some(&bs_now),
-        )?;
-        let real_tokens: usize = bs_now.iter().map(|&b| b * mi.seq).sum();
-        let s0 = Instant::now();
-        let per = state.step(
-            &train_exe,
+
+        // Boundary: evaluate and report the adapters that just finished
+        // (survivors keep training — their eval comes at their own exit).
+        let finishing: Vec<bool> = (0..slots.len())
+            .map(|s| active[s] && steps_of[slots[s]] == global_step)
+            .collect();
+        let (eloss, eacc) = eval_members(
+            rt,
+            &mi,
+            &eval_exe,
             &base,
-            pb.tokens,
-            pb.targets,
-            pb.mask,
+            &state,
+            configs,
+            &slots,
+            Some(&finishing),
             &scale,
-            &lr_now,
-            &rmask,
+            bbs,
+            opts,
         )?;
-        profile.push((real_tokens as f64, want_n as f64, s0.elapsed().as_secs_f64()));
-        for i in 0..want_n {
-            if step < adapter_steps[i] {
-                if first[i].is_nan() {
-                    first[i] = per[i];
+        let mut survivors: Vec<usize> = vec![];
+        for s in 0..slots.len() {
+            if !active[s] {
+                continue;
+            }
+            let k = slots[s];
+            if !finishing[s] {
+                survivors.push(k);
+                continue;
+            }
+            let rep = AdapterReport {
+                config: configs[k].clone(),
+                steps: steps_of[k],
+                first_loss: first[k],
+                final_loss: last[k],
+                base_loss: base_loss[k],
+                base_acc: base_acc[k],
+                eval_loss: eloss[s],
+                eval_acc: eacc[s],
+                curve: std::mem::take(&mut curves[k]),
+            };
+            on_event(PackPhaseEvent::AdapterFinished { slot: s, report: &rep, state: &state });
+            reports[k] = Some(rep);
+            active[s] = false;
+        }
+        if survivors.is_empty() {
+            break;
+        }
+
+        // Preemptive re-bucketing (§4): consult the planner's balancing
+        // side for a strictly smaller bucket admitting the survivors.
+        if rebucket {
+            let surv = Pack::new(survivors.iter().map(|&k| configs[k].clone()).collect());
+            if let Some((nn, nr, nbs)) = shrink_bucket(&buckets, &surv, (bn, br, bbs)) {
+                let new_info = rt
+                    .manifest
+                    .train_bucket(model, nn, nr, nbs)
+                    .ok_or_else(|| anyhow!("re-bucket target ({nn},{nr},{nbs}) vanished"))?
+                    .clone();
+                let mut keep: Vec<(usize, usize)> = vec![];
+                let mut new_slots: Vec<usize> = vec![];
+                for (s, &k) in slots.iter().enumerate() {
+                    if active[s] {
+                        keep.push((s, configs[k].rank));
+                        new_slots.push(k);
+                    }
                 }
-                last[i] = per[i];
-                if opts.log_every > 0 && step % opts.log_every == 0 {
-                    curves[i].push((step, per[i]));
-                }
+                state = state.repack(&keep, nn, nr)?;
+                let from = (bn, br, bbs);
+                slots = new_slots;
+                active = vec![true; slots.len()];
+                (bn, br, bbs) = (nn, nr, nbs);
+                train_exe = rt.executable(&new_info.name)?;
+                eval_exe = rt.executable(&rt.manifest.eval_for(&new_info)?.name.clone())?;
+                rebuckets += 1;
+                on_event(PackPhaseEvent::Rebucketed {
+                    from,
+                    to: (bn, br, bbs),
+                    survivors: slots.iter().map(|&k| configs[k].id).collect(),
+                });
             }
         }
+        let rebuilt = build_vectors(&slots, &active, bn);
+        scale = rebuilt.0;
+        lrs = rebuilt.1;
+        rks = rebuilt.2;
+        rmask = state.rank_mask(&rks)?;
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let (eval_loss, eval_acc) =
-        eval_avg(rt, &state, &eval_exe, &base, &task_names, &scale, bs, &mi, opts)?;
-
-    let adapters = configs
-        .iter()
-        .enumerate()
-        .map(|(i, c)| AdapterReport {
-            config: c.clone(),
-            steps: adapter_steps[i],
-            first_loss: first[i],
-            final_loss: last[i],
-            base_loss: base_loss[i],
-            base_acc: base_acc[i],
-            eval_loss: eval_loss[i],
-            eval_acc: eval_acc[i],
-            curve: std::mem::take(&mut curves[i]),
-        })
+    let adapters: Vec<AdapterReport> = reports
+        .into_iter()
+        .map(|r| r.expect("every adapter reports at its completion boundary"))
         .collect();
-
     Ok((
         JobReport {
-            artifact: info.name.clone(),
-            bucket_n: n,
-            bucket_r: r,
-            bucket_bs: bs,
+            artifact: first_bucket.0,
+            bucket_n: first_bucket.1,
+            bucket_r: first_bucket.2,
+            bucket_bs: first_bucket.3,
             steps: job_steps,
             wall_secs: wall,
             step_secs: wall / job_steps.max(1) as f64,
             compile_secs,
             adapters,
             profile,
+            padded_rows,
+            rebuckets,
         },
         state,
     ))
 }
 
-/// Average per-adapter eval (loss, acc) over `opts.eval_batches` held-out
-/// batches (deterministic eval seed, disjoint from the train stream).
+/// Per-bucket-slot eval `(loss, acc)` averaged over `opts.eval_batches`
+/// held-out batches. Each adapter draws exactly `config.batch` rows per
+/// batch from its own fresh eval stream (rows beyond stay zero-masked), so
+/// its metrics are identical across bucket shapes and runs. With
+/// `only = Some(mask)`, slots outside the mask stay fully zero-masked
+/// (their results are garbage and must not be read) — boundary evals only
+/// pay for the adapters actually finishing there.
 #[allow(clippy::too_many_arguments)]
-fn eval_avg(
+fn eval_members(
     rt: &Runtime,
-    state: &TrainState,
-    eval_exe: &crate::runtime::Executable,
+    mi: &ModelInfo,
+    eval_exe: &Executable,
     base: &[HostTensor],
-    task_names: &[&str],
+    state: &TrainState,
+    configs: &[LoraConfig],
+    slots: &[usize],
+    only: Option<&[bool]>,
     scale: &[f32],
-    bs: usize,
-    mi: &crate::runtime::ModelInfo,
+    bbs: usize,
     opts: &TrainOptions,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    let n = task_names.len();
-    let mut rng = Rng::new(opts.seed ^ 0x5851_f42d_4c95_7f2d);
-    let mut loss = vec![0.0f32; n];
-    let mut acc = vec![0.0f32; n];
-    for _ in 0..opts.eval_batches.max(1) {
-        let pb = tasks::packed_batch(task_names, &rt.manifest.tokens, &mut rng, bs, mi.seq, mi.vocab, None)?;
-        let (l, a) = state.eval(eval_exe, base, pb.tokens, pb.targets, pb.mask, scale)?;
-        for i in 0..n {
-            loss[i] += l[i];
-            acc[i] += a[i];
+    let bn = state.n;
+    let (seq, vocab) = (mi.seq, mi.vocab);
+    let mut ergs: Vec<Rng> = slots
+        .iter()
+        .map(|&k| Rng::new(stream_seed(opts.seed, configs[k].id, EVAL_SALT)))
+        .collect();
+    let mut loss = vec![0.0f32; bn];
+    let mut acc = vec![0.0f32; bn];
+    let batches = opts.eval_batches.max(1);
+    for _ in 0..batches {
+        let mut tokens = vec![0i32; bn * bbs * seq];
+        let mut targets = vec![0i32; bn * bbs * seq];
+        let mut mask = vec![0.0f32; bn * bbs * seq];
+        for (s, &k) in slots.iter().enumerate() {
+            if let Some(m) = only {
+                if !m[s] {
+                    continue;
+                }
+            }
+            let c = &configs[k];
+            for b in 0..c.batch {
+                let smp = tasks::gen(&c.task, &rt.manifest.tokens, &mut ergs[s], seq, vocab)?;
+                let off = (s * bbs + b) * seq;
+                tokens[off..off + seq].copy_from_slice(&smp.tokens);
+                targets[off..off + seq].copy_from_slice(&smp.targets);
+                mask[off..off + seq].copy_from_slice(&smp.mask);
+            }
+        }
+        let (l, a) = state.eval(
+            eval_exe,
+            base,
+            HostTensor::i32(vec![bn, bbs, seq], tokens)?,
+            HostTensor::i32(vec![bn, bbs, seq], targets)?,
+            HostTensor::f32(vec![bn, bbs, seq], mask)?,
+            scale,
+        )?;
+        for s in 0..bn {
+            loss[s] += l[s];
+            acc[s] += a[s];
         }
     }
-    let k = opts.eval_batches.max(1) as f32;
-    for i in 0..n {
-        loss[i] /= k;
-        acc[i] /= k;
+    let kf = batches as f32;
+    for s in 0..bn {
+        loss[s] /= kf;
+        acc[s] /= kf;
     }
     Ok((loss, acc))
 }
@@ -283,7 +513,7 @@ mod tests {
 
     /// End-to-end: a short packed job on the nano model must reduce the
     /// training loss of every adapter (all layers compose: tasks → state →
-    /// PJRT train artifact → AdamW update → eval artifact).
+    /// train artifact → AdamW update → eval artifact).
     #[test]
     fn packed_job_learns_on_nano() {
         let Some(rt) = runtime() else { return };

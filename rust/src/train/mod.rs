@@ -5,5 +5,8 @@
 pub mod driver;
 pub mod tasks;
 
-pub use driver::{run_pack, run_pack_full, AdapterReport, JobReport, TrainOptions};
+pub use driver::{
+    run_pack, run_pack_full, run_pack_phased, AdapterReport, JobReport, PackPhaseEvent,
+    TrainOptions,
+};
 pub use tasks::{packed_batch, PackedBatch, Sample, TASKS};

@@ -97,7 +97,13 @@ pub fn gen_needle(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> 
 }
 
 /// Generate one sample of `task`.
-pub fn gen(task: &str, tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Result<Sample> {
+pub fn gen(
+    task: &str,
+    tl: &TokenLayout,
+    rng: &mut Rng,
+    seq: usize,
+    vocab: usize,
+) -> Result<Sample> {
     Ok(match task {
         "modadd" => gen_modadd(tl, rng, seq, vocab),
         "copy" => gen_copy(tl, rng, seq, vocab),

@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 /// `--key=value` always works regardless of this list.
 const KNOWN_BOOLS: &[&str] = &[
     "help", "verbose", "quiet", "json", "force", "a10", "qlora", "live",
-    "sim", "packed", "sequential", "markdown", "list", "fast",
+    "sim", "packed", "sequential", "markdown", "list", "fast", "no-rebucket",
 ];
 
 #[derive(Debug, Clone)]
@@ -76,14 +76,18 @@ impl Args {
     pub fn usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{v}'")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{v}'")),
         }
     }
 
     pub fn f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected number, got '{v}'")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected number, got '{v}'")),
         }
     }
 

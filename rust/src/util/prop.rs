@@ -96,7 +96,8 @@ where
         if let Err(msg) = prop(&input) {
             let (min_input, min_msg) = shrink_loop(input, msg, &prop);
             panic!(
-                "property failed (case {case}/{cases}, seed {seed}):\n  input: {min_input:?}\n  error: {min_msg}"
+                "property failed (case {case}/{cases}, seed {seed}):\n  \
+                 input: {min_input:?}\n  error: {min_msg}"
             );
         }
     }

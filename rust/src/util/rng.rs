@@ -20,7 +20,8 @@ fn splitmix64(state: &mut u64) -> u64 {
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+        let mut word = || splitmix64(&mut sm);
+        Rng { s: [word(), word(), word(), word()] }
     }
 
     /// Derive an independent stream (for per-job / per-adapter generators).

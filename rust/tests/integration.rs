@@ -29,7 +29,9 @@ fn cfg(id: usize, task: &str, rank: usize, bs: usize) -> LoraConfig {
 fn plan_execute_checkpoint_roundtrip() {
     let Some(rt) = runtime() else { return };
     let mi = rt.manifest.model("nano").unwrap().clone();
-    let geom = geometry::tiny_geom("nano", mi.n_layers, mi.d_model, mi.d_ff, mi.n_heads, mi.vocab, mi.seq);
+    let geom = geometry::tiny_geom(
+        "nano", mi.n_layers, mi.d_model, mi.d_ff, mi.n_heads, mi.vocab, mi.seq,
+    );
     let mut cm = CostModel::new(&geom, &pool::CPU_SIM);
     cm.charge_padding = true;
     cm.buckets = Some(rt.manifest.train_buckets("nano"));
@@ -139,15 +141,21 @@ fn packed_adapter_matches_solo_training() {
     let solo = plora::train::run_pack(&rt, "nano", &[x.clone()], &opts).unwrap();
     let packed = plora::train::run_pack(&rt, "nano", &[x, noisy_neighbor], &opts).unwrap();
     let (s, p) = (&solo.adapters[0], &packed.adapters[0]);
-    // Data streams differ across bucket shapes (shared generator), so exact
-    // equality is not expected — but quality must be statistically
-    // indistinguishable: same base metrics, close eval loss.
+    // Per-adapter init/data/eval streams are keyed by (seed, adapter id),
+    // so the trajectory is identical across bucket shapes — not merely
+    // statistically indistinguishable.
     assert_eq!(s.base_acc, p.base_acc, "frozen-base eval must be identical");
     assert!(
-        (s.eval_loss - p.eval_loss).abs() < 0.35 * s.eval_loss.max(0.1),
+        (s.eval_loss - p.eval_loss).abs() <= 1e-5 * s.eval_loss.abs().max(1.0),
         "solo {} vs packed {} eval loss diverged",
         s.eval_loss,
         p.eval_loss
+    );
+    assert!(
+        (s.final_loss - p.final_loss).abs() <= 1e-5 * s.final_loss.abs().max(1.0),
+        "solo {} vs packed {} train loss diverged",
+        s.final_loss,
+        p.final_loss
     );
 }
 
