@@ -1,0 +1,152 @@
+//! Reference-backend train-step throughput: per-step wall time and
+//! tokens/sec on the `nano` and `small` TinyLM geometries, comparing
+//!
+//! - **naive** — the pre-tiling triple-loop GEMMs with a fresh scratch
+//!   every step (the allocate-~30-buffers-per-layer-per-step behavior the
+//!   workspace arena replaced),
+//! - **tiled** — register-blocked/cache-tiled kernels + the persistent
+//!   workspace arena, single worker, and
+//! - **threads4** — tiled + arena with `PLORA_THREADS`-style row
+//!   parallelism at 4 workers.
+//!
+//! All three produce bit-identical trajectories (pinned by
+//! `tests/properties.rs` and the reference-backend invariance test); only
+//! the wall clock moves. Emits `target/BENCH_train_step.json` (speedups +
+//! tokens/sec) so CI records the kernel-path perf trajectory, and appends
+//! to the shared `target/plora-bench.jsonl` like every bench.
+//!
+//! Run: `cargo bench --bench train_step`
+
+use plora::bench::Bench;
+use plora::runtime::reference::gemm;
+use plora::runtime::{HostTensor, Runtime, TrainState};
+use plora::util::json::Json;
+use plora::util::rng::Rng;
+
+/// One measured configuration of the step kernel path.
+#[derive(Clone, Copy)]
+struct Variant {
+    label: &'static str,
+    mode: gemm::Mode,
+    threads: usize,
+    /// Drop the scratch before every step (pre-arena behavior).
+    fresh_scratch: bool,
+}
+
+const VARIANTS: [Variant; 3] = [
+    Variant { label: "naive", mode: gemm::Mode::Naive, threads: 1, fresh_scratch: true },
+    Variant { label: "tiled", mode: gemm::Mode::Tiled, threads: 1, fresh_scratch: false },
+    Variant { label: "threads4", mode: gemm::Mode::Tiled, threads: 4, fresh_scratch: false },
+];
+
+/// Median per-step seconds for one `(model, n, r, bs)` bucket under a
+/// variant. The same seeded batch stream is replayed for every variant, so
+/// the compared work is identical.
+fn measure(
+    bench: &mut Bench,
+    rt: &Runtime,
+    model: &str,
+    n: usize,
+    r: usize,
+    bs: usize,
+    var: Variant,
+) -> anyhow::Result<f64> {
+    let mi = rt.manifest.model(model)?.clone();
+    let info = rt
+        .manifest
+        .train_bucket(model, n, r, bs)
+        .ok_or_else(|| anyhow::anyhow!("no bucket {model} n={n} r={r} bs={bs}"))?
+        .clone();
+    let exe = rt.executable(&info.name)?;
+    let base = rt.base_weights(model)?;
+    let seq = mi.seq;
+
+    gemm::set_mode(var.mode);
+    gemm::set_threads(var.threads);
+    let mut state = TrainState::init(&mi, n, r, 17);
+    let rmask = state.rank_mask(&vec![r; n])?;
+    let scale = vec![1.0f32; n];
+    let lr = vec![1e-3f32; n];
+    // One fixed seeded batch, replayed every step and for every variant,
+    // so all variants time identical work.
+    let mut rng = Rng::new(11);
+    let tokens: Vec<i32> =
+        (0..n * bs * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+    let mut targets = tokens.clone();
+    targets.rotate_left(1);
+    let tok = HostTensor::i32(vec![n, bs, seq], tokens)?;
+    let tgt = HostTensor::i32(vec![n, bs, seq], targets)?;
+    let msk = HostTensor::f32(vec![n, bs, seq], vec![1.0; n * bs * seq])?;
+
+    let meta = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("n", Json::num(n as f64)),
+        ("r", Json::num(r as f64)),
+        ("bs", Json::num(bs as f64)),
+        ("variant", Json::str(var.label)),
+    ]);
+    let s = bench.measure_meta(&format!("{model}_n{n}/{}", var.label), meta, &mut || {
+        if var.fresh_scratch {
+            state.reset_scratch();
+        }
+        state.step(&exe, &base, &tok, &tgt, &msk, &scale, &lr, &rmask).unwrap();
+    });
+    gemm::set_mode(gemm::Mode::Tiled);
+    gemm::set_threads(1);
+    Ok(s.p50)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let mut bench = Bench::new("train_step");
+    bench.warmup_iters = 1;
+    bench.min_iters = 3;
+    bench.max_iters = 8;
+    bench.target_secs = 2.0;
+
+    // (model, n, r, bs) buckets from the built-in grid. `small` n=1 is the
+    // acceptance geometry; nano covers the many-small-steps regime.
+    let geoms = [("nano", 2usize, 8usize, 1usize), ("small", 1, 32, 1)];
+    let mut rows = vec![];
+    for (model, n, r, bs) in geoms {
+        let mi = rt.manifest.model(model)?.clone();
+        let tokens_per_step = (n * bs * mi.seq) as f64;
+        let mut secs = [0.0f64; VARIANTS.len()];
+        for (vi, var) in VARIANTS.iter().enumerate() {
+            secs[vi] = measure(&mut bench, &rt, model, n, r, bs, *var)?;
+        }
+        let (naive, tiled, thr) = (secs[0], secs[1], secs[2]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("n", Json::num(n as f64)),
+            ("r", Json::num(r as f64)),
+            ("bs", Json::num(bs as f64)),
+            ("step_naive_s", Json::num(naive)),
+            ("step_tiled_s", Json::num(tiled)),
+            ("step_threads4_s", Json::num(thr)),
+            ("speedup_tiled_x", Json::num(naive / tiled.max(1e-12))),
+            ("speedup_threads4_x", Json::num(naive / thr.max(1e-12))),
+            ("tokens_per_s_naive", Json::num(tokens_per_step / naive.max(1e-12))),
+            ("tokens_per_s_tiled", Json::num(tokens_per_step / tiled.max(1e-12))),
+            ("tokens_per_s_threads4", Json::num(tokens_per_step / thr.max(1e-12))),
+        ]));
+        println!(
+            "{model} n={n} r={r} bs={bs}: naive {naive:.4}s -> tiled {tiled:.4}s \
+             ({:.2}x) -> threads4 {thr:.4}s ({:.2}x)",
+            naive / tiled.max(1e-12),
+            naive / thr.max(1e-12),
+        );
+    }
+    bench.finish()?;
+
+    let rec = Json::obj(vec![("bench", Json::str("train_step")), ("geoms", Json::arr(rows))]);
+    let mut out = String::new();
+    rec.write(&mut out);
+    // Anchor on the crate root: cargo runs benches with CWD = package root,
+    // but the workspace target dir lives one level up.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("BENCH_train_step.json"), &out)?;
+    println!("wrote rust/target/BENCH_train_step.json");
+    Ok(())
+}

@@ -10,6 +10,8 @@
 //! - `pjrt::PjrtBackend` (`pjrt` feature) — compiles the AOT HLO artifacts
 //!   via the PJRT CPU client and replays them.
 
+use std::any::Any;
+
 use anyhow::Result;
 
 use crate::runtime::manifest::{ArtifactInfo, Manifest};
@@ -31,6 +33,131 @@ pub trait ExecutionBackend: Send + Sync {
 /// A prepared artifact. Inputs are pre-validated against the manifest by
 /// [`crate::runtime::Executable::run`], so implementations may rely on
 /// arity, dtypes and shapes being exactly the manifest's.
+///
+/// Inputs are *borrowed* so callers with long-lived state (the train
+/// driver) never deep-copy tensors into the call; `scratch` is the
+/// caller's step-persistent scratch (see [`Scratch`]) — backends that need
+/// none simply ignore it.
 pub trait BackendExecutable: Send + Sync {
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+    fn run(&self, inputs: &[&HostTensor], scratch: &mut Scratch) -> Result<Vec<HostTensor>>;
+}
+
+/// Opaque per-job scratch carried across executable runs.
+///
+/// Owned by whoever owns the job state (`TrainState` holds one behind a
+/// mutex); the backend decides what lives inside. Two compartments:
+///
+/// - an untyped **slot** the backend populates with its arena on first use
+///   (the reference backend keeps its
+///   [`crate::runtime::reference::workspace::Workspace`] here). Dropping
+///   the `Scratch` — e.g. when `TrainState::repack` builds the
+///   re-bucketed state — drops the arena, and the next run re-derives it
+///   at the new shape.
+/// - a **pool** of recycled f32 buffers any backend may take output
+///   tensors from; callers return spent state buffers via
+///   [`Scratch::recycle`], closing the allocation cycle so steady-state
+///   steps allocate nothing.
+#[derive(Default)]
+pub struct Scratch {
+    slot: Option<Box<dyn Any + Send>>,
+    pool: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Borrow the backend arena and the buffer pool simultaneously,
+    /// initializing the arena with `init` on first use (or after a
+    /// [`Scratch::reset`]). If the slot holds a different type, it is
+    /// replaced.
+    pub fn parts<T, F>(&mut self, init: F) -> (&mut T, &mut Vec<Vec<f32>>)
+    where
+        T: Any + Send,
+        F: FnOnce() -> T,
+    {
+        let fresh = match &mut self.slot {
+            Some(b) => b.downcast_mut::<T>().is_none(),
+            None => true,
+        };
+        if fresh {
+            self.slot = Some(Box::new(init()));
+        }
+        let arena = self
+            .slot
+            .as_mut()
+            .expect("slot populated above")
+            .downcast_mut::<T>()
+            .expect("slot type checked above");
+        (arena, &mut self.pool)
+    }
+
+    /// Take a buffer of exactly `len` elements from the pool, or allocate
+    /// one. Contents are **unspecified** (stale) — callers must write
+    /// every element before reading any.
+    pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
+        take_buf(&mut self.pool, len)
+    }
+
+    /// Return a spent f32 buffer to the pool for reuse by later runs.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        self.pool.push(buf);
+    }
+
+    /// Drop the arena and the pool (benches use this to model the
+    /// pre-arena allocate-every-step behavior).
+    pub fn reset(&mut self) {
+        self.slot = None;
+        self.pool.clear();
+    }
+}
+
+/// Pool-take usable while the arena is borrowed via [`Scratch::parts`].
+/// Same contract as [`Scratch::take_buf`]: contents are unspecified.
+pub fn take_buf(pool: &mut Vec<Vec<f32>>, len: usize) -> Vec<f32> {
+    match pool.iter().rposition(|v| v.len() == len) {
+        Some(pos) => pool.swap_remove(pos),
+        None => vec![0.0; len],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parts_initializes_once_and_persists() {
+        let mut s = Scratch::new();
+        let (v, _) = s.parts(|| vec![1u8, 2, 3]);
+        v.push(4);
+        let (v, _) = s.parts(Vec::<u8>::new);
+        assert_eq!(v, &vec![1u8, 2, 3, 4], "arena persists across parts()");
+        s.reset();
+        let (v, _) = s.parts(Vec::<u8>::new);
+        assert!(v.is_empty(), "reset drops the arena");
+    }
+
+    #[test]
+    fn parts_replaces_on_type_change() {
+        let mut s = Scratch::new();
+        let (v, _) = s.parts(|| vec![7u8]);
+        assert_eq!(v.len(), 1);
+        let (x, _) = s.parts(|| 42u32);
+        assert_eq!(*x, 42);
+    }
+
+    #[test]
+    fn pool_recycles_exact_lengths() {
+        let mut s = Scratch::new();
+        s.recycle(vec![1.0; 8]);
+        s.recycle(vec![2.0; 4]);
+        let b = s.take_buf(8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(b[0], 1.0, "recycled buffer (stale contents) preferred");
+        let b = s.take_buf(8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(b[0], 0.0, "pool miss allocates fresh");
+        assert_eq!(s.take_buf(4)[0], 2.0);
+    }
 }

@@ -30,7 +30,7 @@ pub mod state;
 pub mod tensor;
 pub mod tensor_file;
 
-pub use backend::{BackendExecutable, ExecutionBackend};
+pub use backend::{BackendExecutable, ExecutionBackend, Scratch};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec};
 pub use state::TrainState;
 pub use tensor::{DType, HostTensor, TensorData};
@@ -54,12 +54,27 @@ pub struct Executable {
 impl Executable {
     /// Execute with host tensors; validates dtypes/shapes against the
     /// manifest before dispatch (shape bugs surface as Rust errors here,
-    /// not deep inside a backend).
+    /// not deep inside a backend). Convenience wrapper over
+    /// [`Executable::run_scratch`] with a throwaway scratch — long-lived
+    /// callers (the train driver via `TrainState`) hold a persistent
+    /// [`Scratch`] instead so the backend's arena survives across steps.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_scratch(&refs, &mut Scratch::new())
+    }
+
+    /// Execute with borrowed inputs and a caller-owned step-persistent
+    /// scratch (zero-copy, zero steady-state allocation on the reference
+    /// backend's train path).
+    pub fn run_scratch(
+        &self,
+        inputs: &[&HostTensor],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<HostTensor>> {
         self.check_inputs(inputs)?;
         let outs = self
             .exe
-            .run(inputs)
+            .run(inputs, scratch)
             .with_context(|| format!("{}: execute", self.info.name))?;
         if outs.len() != self.info.outputs.len() {
             bail!(
@@ -72,7 +87,7 @@ impl Executable {
         Ok(outs)
     }
 
-    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+    fn check_inputs(&self, inputs: &[&HostTensor]) -> Result<()> {
         if inputs.len() != self.info.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",

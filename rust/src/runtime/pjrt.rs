@@ -9,7 +9,7 @@
 use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-use crate::runtime::backend::{BackendExecutable, ExecutionBackend};
+use crate::runtime::backend::{BackendExecutable, ExecutionBackend, Scratch};
 use crate::runtime::manifest::{ArtifactInfo, Manifest};
 use crate::runtime::tensor::HostTensor;
 
@@ -57,7 +57,8 @@ unsafe impl Send for PjrtExec {}
 unsafe impl Sync for PjrtExec {}
 
 impl BackendExecutable for PjrtExec {
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    // PJRT owns its device buffers; the host-side scratch is unused.
+    fn run(&self, inputs: &[&HostTensor], _scratch: &mut Scratch) -> Result<Vec<HostTensor>> {
         let lits: Vec<Literal> = inputs
             .iter()
             .map(|t| t.to_literal())

@@ -14,14 +14,16 @@
 //! `util::rng`). With `make artifacts` the same backend reads the
 //! pretrained weight containers instead — only execution is interpreted.
 
+pub mod gemm;
 pub mod tinylm;
+pub mod workspace;
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::backend::{BackendExecutable, ExecutionBackend};
+use crate::runtime::backend::{take_buf, BackendExecutable, ExecutionBackend, Scratch};
 use crate::runtime::manifest::{
     ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec, TokenLayout,
 };
@@ -32,6 +34,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use self::tinylm::Spec;
+use self::workspace::Workspace;
 
 const NB: usize = 12; // BASE_ORDER tensors
 const NL: usize = 14; // LORA_ORDER tensors
@@ -103,13 +106,13 @@ struct TrainEvalExec {
     train: bool,
 }
 
-fn lora_slices(tensors: &[HostTensor]) -> Result<[&[f32]; NL]> {
+fn lora_slices<'a>(tensors: &'a [&HostTensor]) -> Result<[&'a [f32]; NL]> {
     let v: Vec<&[f32]> = tensors.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
     v.try_into().map_err(|_| anyhow!("expected {NL} lora tensors"))
 }
 
 impl BackendExecutable for TrainEvalExec {
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    fn run(&self, inputs: &[&HostTensor], scratch: &mut Scratch) -> Result<Vec<HostTensor>> {
         let (n, r, bs) = (self.n, self.r, self.bs);
         let base = &inputs[..NB];
         let lora_t = &inputs[NB..NB + NL];
@@ -118,14 +121,15 @@ impl BackendExecutable for TrainEvalExec {
         if !self.train {
             // base, lora, tokens, targets, loss_mask, scale. Eval never
             // backprops, so it takes the logits-only forward: no LayerSave
-            // allocation, activations reused across layers.
+            // buffers, activations reused across layers from the arena.
             let tokens = inputs[NB + NL].as_i32()?;
             let targets = inputs[NB + NL + 1].as_i32()?;
             let mask = inputs[NB + NL + 2].as_f32()?;
             let scale = inputs[NB + NL + 3].as_f32()?;
-            let logits =
-                tinylm::forward_logits(&self.spec, base, &lora, scale, tokens, n, bs, r)?;
-            let (loss, acc) = tinylm::loss_and_acc(&self.spec, &logits, targets, mask, n, bs);
+            let (ws, _) = scratch.parts(Workspace::new);
+            tinylm::forward_logits(&self.spec, base, &lora, scale, tokens, n, bs, r, ws)?;
+            let (loss, acc) =
+                tinylm::loss_and_acc(&self.spec, &ws.logits, targets, mask, n, bs);
             return Ok(vec![
                 HostTensor::f32(vec![n], loss)?,
                 HostTensor::f32(vec![n], acc)?,
@@ -144,9 +148,14 @@ impl BackendExecutable for TrainEvalExec {
         let lr = inputs[off + 5].as_f32()?;
         let rmask = inputs[off + 6].as_f32()?;
 
-        let fwd = tinylm::forward(&self.spec, base, &lora, scale, tokens, n, bs, r)?;
-        let (per, grads) =
-            tinylm::backward(&self.spec, &fwd, base, &lora, scale, targets, mask, n, bs, r)?;
+        // Activations + gradients live in the step-persistent arena; the
+        // AdamW outputs cycle through the scratch pool (`TrainState::step`
+        // recycles the previous state's buffers), so the steady state of a
+        // job phase performs no allocation at all.
+        let (ws, pool) = scratch.parts(Workspace::new);
+        tinylm::forward(&self.spec, base, &lora, scale, tokens, n, bs, r, ws)?;
+        let per =
+            tinylm::backward(&self.spec, base, &lora, scale, targets, mask, n, bs, r, ws)?;
 
         let t_new = t_in + 1.0;
         let mut out_lora = Vec::with_capacity(NL);
@@ -155,11 +164,15 @@ impl BackendExecutable for TrainEvalExec {
         for k in 0..NL {
             let shape = lora_t[k].shape.clone();
             let (d2, d3) = (shape[2], shape[3]);
-            let (nl, nm, nv) = tinylm::adamw_update(
+            let len = lora_t[k].len();
+            let mut nl = take_buf(pool, len);
+            let mut nm = take_buf(pool, len);
+            let mut nv = take_buf(pool, len);
+            tinylm::adamw_update(
                 lora[k],
                 m_t[k].as_f32()?,
                 v_t[k].as_f32()?,
-                &grads[k],
+                &ws.grads[k],
                 lr,
                 rmask,
                 n,
@@ -168,6 +181,9 @@ impl BackendExecutable for TrainEvalExec {
                 r,
                 LORA_ORDER[k].starts_with("a_"),
                 t_new,
+                &mut nl,
+                &mut nm,
+                &mut nv,
             );
             out_lora.push(HostTensor::f32(shape.clone(), nl)?);
             out_m.push(HostTensor::f32(shape.clone(), nm)?);
@@ -198,7 +214,7 @@ struct KernelExec {
 }
 
 impl BackendExecutable for KernelExec {
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    fn run(&self, inputs: &[&HostTensor], _scratch: &mut Scratch) -> Result<Vec<HostTensor>> {
         let (n, d, k, r, m) = (self.n, self.d, self.k, self.r, self.m);
         let x = inputs[0].as_f32()?;
         let a = inputs[1].as_f32()?;
@@ -208,7 +224,7 @@ impl BackendExecutable for KernelExec {
         // mid_i = x_i @ a_i, shared by forward and backward.
         let mut mid = vec![0.0f32; n * m * r];
         for i in 0..n {
-            tinylm::mm_acc(
+            gemm::mm_acc(
                 &mut mid[i * m * r..(i + 1) * m * r],
                 &x[i * m * d..(i + 1) * m * d],
                 &a[i * d * r..(i + 1) * d * r],
@@ -222,7 +238,7 @@ impl BackendExecutable for KernelExec {
         if !self.bwd {
             let mut y = vec![0.0f32; n * m * k];
             for i in 0..n {
-                tinylm::mm_acc(
+                gemm::mm_acc(
                     &mut y[i * m * k..(i + 1) * m * k],
                     &mid[i * m * r..(i + 1) * m * r],
                     &b[i * r * k..(i + 1) * r * k],
@@ -247,14 +263,14 @@ impl BackendExecutable for KernelExec {
             let bi = &b[i * r * k..(i + 1) * r * k];
             let midi = &mid[i * m * r..(i + 1) * m * r];
             // case 1: db = α h^T g
-            tinylm::mm_tn_acc(&mut db[i * r * k..(i + 1) * r * k], midi, gi, m, r, k, alpha[i]);
+            gemm::mm_tn_acc(&mut db[i * r * k..(i + 1) * r * k], midi, gi, m, r, k, alpha[i]);
             // case 2: dh = α g b^T
             dh.fill(0.0);
-            tinylm::mm_nt_acc(&mut dh, gi, bi, m, k, r, alpha[i]);
+            gemm::mm_nt_acc(&mut dh, gi, bi, m, k, r, alpha[i]);
             // case 3: da = x^T dh
-            tinylm::mm_tn_acc(&mut da[i * d * r..(i + 1) * d * r], xi, &dh, m, d, r, 1.0);
+            gemm::mm_tn_acc(&mut da[i * d * r..(i + 1) * d * r], xi, &dh, m, d, r, 1.0);
             // case 4: dx = dh a^T
-            tinylm::mm_nt_acc(&mut dx[i * m * d..(i + 1) * m * d], &dh, ai, m, r, d, 1.0);
+            gemm::mm_nt_acc(&mut dx[i * m * d..(i + 1) * m * d], &dh, ai, m, r, d, 1.0);
         }
         Ok(vec![
             HostTensor::f32(vec![n, m, d], dx)?,
@@ -624,7 +640,8 @@ mod tests {
             HostTensor::f32(vec![n], alpha.to_vec()).unwrap(),
             HostTensor::f32(vec![n, mm, k], vec![0.05; n * mm * k]).unwrap(),
         ];
-        let outs = exe.run(&inputs).unwrap();
+        let input_refs: Vec<&HostTensor> = inputs.iter().collect();
+        let outs = exe.run(&input_refs, &mut Scratch::new()).unwrap();
         assert_eq!(outs.len(), 3);
         // Closed forms for constant tensors (see ref.py::ref_grads):
         // h = d*x*a; dh = α*k*g*b; db = α*m*h*g; da = m*x*dh; dx = r*dh*a.
@@ -659,6 +676,56 @@ mod tests {
             assert_eq!(g.vocab, mi.vocab, "{name}: vocab");
             assert_eq!(g.seq, mi.seq, "{name}: seq");
         }
+    }
+
+    /// A full train step is bitwise invariant to the GEMM implementation
+    /// and the worker count — the load-bearing guarantee behind the
+    /// `PLORA_GEMM`/`PLORA_THREADS` knobs (tiling/threading never reorders
+    /// any output element's reduction).
+    #[test]
+    fn train_step_is_bitwise_invariant_to_gemm_mode_and_threads() {
+        use crate::runtime::state::TrainState;
+        use crate::runtime::Runtime;
+
+        let dir = std::env::temp_dir().join("plora-no-artifacts-gemm");
+        let rt = Runtime::load(&dir).unwrap();
+        let mi = rt.manifest.model("nano").unwrap().clone();
+        let info = rt.manifest.train_bucket("nano", 2, 8, 1).unwrap().clone();
+        let exe = rt.executable(&info.name).unwrap();
+        let base = rt.base_weights("nano").unwrap();
+        let seq = mi.seq;
+
+        let run_steps = |mode: gemm::Mode, threads: usize| -> Vec<Vec<f32>> {
+            gemm::set_mode(mode);
+            gemm::set_threads(threads);
+            let mut st = TrainState::init_per_adapter(&mi, 2, 8, &[5, 9], &[8, 4]).unwrap();
+            let rmask = st.rank_mask(&[8, 4]).unwrap();
+            let mut rng = crate::util::rng::Rng::new(3);
+            for _ in 0..2 {
+                let tokens: Vec<i32> =
+                    (0..2 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+                let mut targets = tokens.clone();
+                targets.rotate_left(1);
+                let tok = HostTensor::i32(vec![2, 1, seq], tokens).unwrap();
+                let tgt = HostTensor::i32(vec![2, 1, seq], targets).unwrap();
+                let msk = HostTensor::f32(vec![2, 1, seq], vec![1.0; 2 * seq]).unwrap();
+                st.step(&exe, &base, &tok, &tgt, &msk, &[1.0, 0.5], &[2e-3, 1e-3], &rmask)
+                    .unwrap();
+            }
+            st.lora.iter().map(|t| t.as_f32().unwrap().to_vec()).collect()
+        };
+
+        let want = run_steps(gemm::Mode::Tiled, 1);
+        for (mode, threads) in
+            [(gemm::Mode::Naive, 1), (gemm::Mode::Tiled, 4), (gemm::Mode::Naive, 4)]
+        {
+            let got = run_steps(mode, threads);
+            for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a, b, "lora[{k}] diverged under {mode:?}/{threads} threads");
+            }
+        }
+        gemm::set_mode(gemm::Mode::Tiled);
+        gemm::set_threads(1);
     }
 
     #[test]

@@ -10,14 +10,21 @@
 //! model; the in-file finite-difference test re-verifies it on every
 //! `cargo test`.
 //!
-//! Everything is f32 over flat row-major `Vec<f32>` buffers; shapes are
-//! small (TinyLM scale), so plain loops are fast enough and keep the
-//! interpreter dependency-free.
+//! Everything is f32 over flat row-major buffers. All activations,
+//! gradients and scratch live in a step-persistent
+//! [`super::workspace::Workspace`] arena (zero steady-state allocation),
+//! and the matmuls go through the register-blocked kernels in
+//! [`super::gemm`]. Projection forward/backward passes optionally split
+//! their `n·bs·seq` row dimension across scoped threads
+//! (`gemm::threads()`, the `PLORA_THREADS` knob); every output element's
+//! reduction order is independent of tiling and threading, so results are
+//! bitwise identical at any setting — see the `gemm` module docs.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
+use super::gemm;
+use super::workspace::Workspace;
 use crate::runtime::tensor::HostTensor;
-use crate::runtime::LORA_ORDER;
 
 /// Indices of the `LORA_ORDER` tensors (sorted `{a,b}_{proj}` names).
 const A_DOWN: usize = 0;
@@ -79,84 +86,8 @@ impl Spec {
 }
 
 // ---------------------------------------------------------------------------
-// Flat-buffer linear algebra
+// LayerNorm + activations
 // ---------------------------------------------------------------------------
-
-/// `out (m,n) += alpha * a (m,k) @ b (k,n)`.
-pub(crate) fn mm_acc(
-    out: &mut [f32],
-    a: &[f32],
-    b: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    alpha: f32,
-) {
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in ar.iter().enumerate() {
-            let f = alpha * av;
-            if f == 0.0 {
-                continue;
-            }
-            let br = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in or.iter_mut().zip(br) {
-                *o += f * bv;
-            }
-        }
-    }
-}
-
-/// `out (m,n) += alpha * a (m,k) @ b^T` with `b` stored `(n,k)`.
-pub(crate) fn mm_nt_acc(
-    out: &mut [f32],
-    a: &[f32],
-    b: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    alpha: f32,
-) {
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * n..(i + 1) * n];
-        for (j, o) in or.iter_mut().enumerate() {
-            let br = &b[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for (av, bv) in ar.iter().zip(br) {
-                s += av * bv;
-            }
-            *o += alpha * s;
-        }
-    }
-}
-
-/// `out (m,n) += alpha * a^T @ b` with `a` stored `(k,m)`, `b` `(k,n)`.
-pub(crate) fn mm_tn_acc(
-    out: &mut [f32],
-    a: &[f32],
-    b: &[f32],
-    k: usize,
-    m: usize,
-    n: usize,
-    alpha: f32,
-) {
-    for kk in 0..k {
-        let ar = &a[kk * m..(kk + 1) * m];
-        let br = &b[kk * n..(kk + 1) * n];
-        for (i, &av) in ar.iter().enumerate() {
-            let f = alpha * av;
-            if f == 0.0 {
-                continue;
-            }
-            let or = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in or.iter_mut().zip(br) {
-                *o += f * bv;
-            }
-        }
-    }
-}
 
 /// LayerNorm forward over `rows` rows of width `d`: `h = xhat * g`,
 /// saving `xhat` and `inv = 1/sqrt(var + eps)` for the backward pass.
@@ -196,7 +127,9 @@ fn ln_fwd(
 }
 
 /// LayerNorm backward: `dx += inv * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))`
-/// with `dxhat = dy * g` (the gain `g` is frozen — no `dg`).
+/// with `dxhat = dy * g` (the gain `g` is frozen — no `dg`). `dxh` is a
+/// `d`-float row scratch (`Workspace::dln`).
+#[allow(clippy::too_many_arguments)]
 fn ln_bwd_acc(
     dx: &mut [f32],
     dy: &[f32],
@@ -205,9 +138,9 @@ fn ln_bwd_acc(
     inv: &[f32],
     rows: usize,
     d: usize,
+    dxh: &mut [f32],
 ) {
     let df = d as f32;
-    let mut dxh = vec![0.0f32; d];
     for r in 0..rows {
         let dyr = &dy[r * d..(r + 1) * d];
         let xh = &xhat[r * d..(r + 1) * d];
@@ -250,6 +183,10 @@ fn dsilu(z: f32) -> f32 {
 /// `out_i = input_i @ w + scale_i * (input_i @ a_i) @ b_i`, with the rank-r
 /// intermediate saved in `mid` for the backward pass. `a`/`b` are the
 /// layer-`l` slices `(n, din, r)` / `(n, r, dout)`.
+///
+/// The `n·m` output rows are split across `gemm::threads()` scoped
+/// workers; each row is produced by exactly one worker with an unchanged
+/// reduction order, so the result is bitwise thread-count-invariant.
 #[allow(clippy::too_many_arguments)]
 fn proj_fwd(
     out: &mut [f32],
@@ -265,26 +202,68 @@ fn proj_fwd(
     dout: usize,
     r: usize,
 ) {
-    for i in 0..n {
-        let xi = &input[i * m * din..(i + 1) * m * din];
-        let oi = &mut out[i * m * dout..(i + 1) * m * dout];
-        oi.fill(0.0);
-        mm_acc(oi, xi, w, m, din, dout, 1.0);
-        let mi = &mut mid[i * m * r..(i + 1) * m * r];
-        mi.fill(0.0);
-        mm_acc(mi, xi, &a[i * din * r..(i + 1) * din * r], m, din, r, 1.0);
-        mm_acc(oi, mi, &b[i * r * dout..(i + 1) * r * dout], m, r, dout, scale[i]);
+    let rows = n * m;
+    gemm::par_row_chunks(
+        rows,
+        gemm::threads(),
+        din * dout,
+        out,
+        dout,
+        mid,
+        r,
+        |oc, mc, lo, hi| proj_fwd_rows(oc, mc, input, w, a, b, scale, m, din, dout, r, lo, hi),
+    );
+}
+
+/// Rows `[lo, hi)` of the packed projection forward. `out`/`mid` are the
+/// row-aligned chunks for exactly that range.
+#[allow(clippy::too_many_arguments)]
+fn proj_fwd_rows(
+    out: &mut [f32],
+    mid: &mut [f32],
+    input: &[f32],
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    scale: &[f32],
+    m: usize,
+    din: usize,
+    dout: usize,
+    r: usize,
+    lo: usize,
+    hi: usize,
+) {
+    out.fill(0.0);
+    mid.fill(0.0);
+    let mut row = lo;
+    while row < hi {
+        let i = row / m; // adapter owning this row group
+        let end = ((i + 1) * m).min(hi);
+        let h = end - row;
+        let xi = &input[row * din..end * din];
+        let oi = &mut out[(row - lo) * dout..(end - lo) * dout];
+        let mi = &mut mid[(row - lo) * r..(end - lo) * r];
+        gemm::mm_acc(oi, xi, w, h, din, dout, 1.0);
+        gemm::mm_acc(mi, xi, &a[i * din * r..(i + 1) * din * r], h, din, r, 1.0);
+        gemm::mm_acc(oi, mi, &b[i * r * dout..(i + 1) * r * dout], h, r, dout, scale[i]);
+        row = end;
     }
 }
 
 /// Packed projection backward: accumulates `dinput`, `da` and `db` (the
 /// layer-`l` gradient slices) from the upstream `dy`. Matches
 /// `python/compile/kernels/ref.py::ref_grads` composed with the base GEMM.
+///
+/// Two phases: the row-local part (`dmid`, `dinput`) splits the `n·m` rows
+/// across scoped workers like [`proj_fwd`]; the `da`/`db` reductions run
+/// serially per adapter because their accumulation order is over rows —
+/// splitting rows would change the f32 rounding.
 #[allow(clippy::too_many_arguments)]
 fn proj_bwd(
     dinput: &mut [f32],
     da: &mut [f32],
     db: &mut [f32],
+    dmid: &mut [f32],
     dy: &[f32],
     input: &[f32],
     mid: &[f32],
@@ -297,27 +276,64 @@ fn proj_bwd(
     din: usize,
     dout: usize,
     r: usize,
-    dmid: &mut Vec<f32>,
 ) {
-    dmid.clear();
-    dmid.resize(m * r, 0.0);
+    let rows = n * m;
+    gemm::par_row_chunks(
+        rows,
+        gemm::threads(),
+        din * dout,
+        dinput,
+        din,
+        &mut dmid[..],
+        r,
+        |dic, dmc, lo, hi| proj_bwd_rows(dic, dmc, dy, w, a, b, scale, m, din, dout, r, lo, hi),
+    );
+    // da += input^T @ dmid (case 3); db += scale * mid^T @ dy (case 1).
     for i in 0..n {
         let dyi = &dy[i * m * dout..(i + 1) * m * dout];
         let xi = &input[i * m * din..(i + 1) * m * din];
         let midi = &mid[i * m * r..(i + 1) * m * r];
-        let ai = &a[i * din * r..(i + 1) * din * r];
-        let bi = &b[i * r * dout..(i + 1) * r * dout];
-        // dh_mid = scale * dy @ b^T  (case 2 of ref.py)
-        dmid.fill(0.0);
-        mm_nt_acc(dmid, dyi, bi, m, dout, r, scale[i]);
-        // da += input^T @ dh_mid  (case 3)
-        mm_tn_acc(&mut da[i * din * r..(i + 1) * din * r], xi, dmid, m, din, r, 1.0);
-        // db += scale * mid^T @ dy  (case 1)
-        mm_tn_acc(&mut db[i * r * dout..(i + 1) * r * dout], midi, dyi, m, r, dout, scale[i]);
-        let di = &mut dinput[i * m * din..(i + 1) * m * din];
-        // dinput += dy @ w^T + dh_mid @ a^T  (base GEMM + case 4)
-        mm_nt_acc(di, dyi, w, m, dout, din, 1.0);
-        mm_nt_acc(di, dmid, ai, m, r, din, 1.0);
+        let dmidi = &dmid[i * m * r..(i + 1) * m * r];
+        gemm::mm_tn_acc(&mut da[i * din * r..(i + 1) * din * r], xi, dmidi, m, din, r, 1.0);
+        gemm::mm_tn_acc(&mut db[i * r * dout..(i + 1) * r * dout], midi, dyi, m, r, dout, scale[i]);
+    }
+}
+
+/// Rows `[lo, hi)` of the row-local projection backward: `dmid` (case 2)
+/// and the `dinput` accumulation (base GEMM + case 4). `dinput`/`dmid` are
+/// the row-aligned chunks; `dinput` arrives with prior accumulated
+/// contributions and is NOT zeroed here.
+#[allow(clippy::too_many_arguments)]
+fn proj_bwd_rows(
+    dinput: &mut [f32],
+    dmid: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    scale: &[f32],
+    m: usize,
+    din: usize,
+    dout: usize,
+    r: usize,
+    lo: usize,
+    hi: usize,
+) {
+    let mut row = lo;
+    while row < hi {
+        let i = row / m;
+        let end = ((i + 1) * m).min(hi);
+        let h = end - row;
+        let dyi = &dy[row * dout..end * dout];
+        let dmi = &mut dmid[(row - lo) * r..(end - lo) * r];
+        // dh_mid = scale * dy @ b^T (case 2 of ref.py)
+        dmi.fill(0.0);
+        gemm::mm_nt_acc(dmi, dyi, &b[i * r * dout..(i + 1) * r * dout], h, dout, r, scale[i]);
+        let di = &mut dinput[(row - lo) * din..(end - lo) * din];
+        // dinput += dy @ w^T + dh_mid @ a^T (base GEMM + case 4)
+        gemm::mm_nt_acc(di, dyi, w, h, dout, din, 1.0);
+        gemm::mm_nt_acc(di, dmi, &a[i * din * r..(i + 1) * din * r], h, r, din, 1.0);
+        row = end;
     }
 }
 
@@ -325,270 +341,19 @@ fn proj_bwd(
 // Forward pass
 // ---------------------------------------------------------------------------
 
-/// Saved per-layer activations for the backward pass. (The residual-stream
-/// values themselves are not needed: residual adds backprop as identity.)
-struct LayerSave {
-    xhat1: Vec<f32>,
-    inv1: Vec<f32>,
-    h: Vec<f32>,
-    mid_q: Vec<f32>,
-    mid_k: Vec<f32>,
-    mid_v: Vec<f32>,
-    mid_o: Vec<f32>,
-    mid_up: Vec<f32>,
-    mid_gate: Vec<f32>,
-    mid_down: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    p: Vec<f32>,
-    o: Vec<f32>,
-    xhat2: Vec<f32>,
-    inv2: Vec<f32>,
-    h2: Vec<f32>,
-    up: Vec<f32>,
-    gate: Vec<f32>,
-    act: Vec<f32>,
-}
-
-/// Full forward-pass state (activations + logits).
-pub(crate) struct Forward {
-    layers: Vec<LayerSave>,
-    xhatf: Vec<f32>,
-    invf: Vec<f32>,
-    pub logits: Vec<f32>,
-}
-
-/// Packed forward. `base` in `BASE_ORDER`, `lora` 14 flat slices in
-/// `LORA_ORDER` (shapes `(L, n, din, r)` / `(L, n, r, dout)`), `tokens`
-/// `(n, bs, s)`. Produces logits `(n, bs, s, vocab)` plus everything the
-/// backward pass needs.
+/// Embedding + positional encoding into the residual stream `x`.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn forward(
-    spec: &Spec,
-    base: &[HostTensor],
-    lora: &[&[f32]; 14],
-    scale: &[f32],
+fn embed_fwd(
+    embed: &[f32],
+    pos: &[f32],
     tokens: &[i32],
+    x: &mut [f32],
     n: usize,
     bs: usize,
-    r: usize,
-) -> Result<Forward> {
-    spec.check()?;
-    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
-    let (nh, dh) = (spec.n_heads, spec.d_head());
-    let m = bs * s; // rows per adapter
-    let nm = n * m;
-    let sqrt_dh = (dh as f32).sqrt();
-
-    let embed = base[EMBED].as_f32()?;
-    let pos = base[POS].as_f32()?;
-
-    // Embedding + positional encoding.
-    let mut x = vec![0.0f32; nm * d];
-    for i in 0..n {
-        for b in 0..bs {
-            for t in 0..s {
-                let tok = tokens[(i * bs + b) * s + t];
-                if tok < 0 || tok as usize >= v {
-                    bail!("token {tok} out of vocab {v}");
-                }
-                let erow = &embed[tok as usize * d..(tok as usize + 1) * d];
-                let prow = &pos[t * d..(t + 1) * d];
-                let xrow = &mut x[((i * bs + b) * s + t) * d..((i * bs + b) * s + t + 1) * d];
-                for c in 0..d {
-                    xrow[c] = erow[c] + prow[c];
-                }
-            }
-        }
-    }
-
-    let mut layers = Vec::with_capacity(spec.n_layers);
-    for l in 0..spec.n_layers {
-        let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
-        let ln2 = &base[LN2].as_f32()?[l * d..(l + 1) * d];
-        let wq = &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wk = &base[WK].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wv = &base[WV].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wo = &base[WO].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wup = &base[WUP].as_f32()?[l * d * f..(l + 1) * d * f];
-        let wgate = &base[WGATE].as_f32()?[l * d * f..(l + 1) * d * f];
-        let wdown = &base[WDOWN].as_f32()?[l * f * d..(l + 1) * f * d];
-        // Layer-l LoRA slices: (n, din, r) / (n, r, dout).
-        let la = |idx: usize, din: usize| &lora[idx][l * n * din * r..(l + 1) * n * din * r];
-        let lb = |idx: usize, dout: usize| &lora[idx][l * n * r * dout..(l + 1) * n * r * dout];
-
-        let x0 = x.clone();
-        let mut h = vec![0.0f32; nm * d];
-        let mut xhat1 = vec![0.0f32; nm * d];
-        let mut inv1 = vec![0.0f32; nm];
-        ln_fwd(&x0, ln1, nm, d, &mut h, &mut xhat1, &mut inv1);
-
-        let mut q = vec![0.0f32; nm * d];
-        let mut k = vec![0.0f32; nm * d];
-        let mut vv = vec![0.0f32; nm * d];
-        let mut mid_q = vec![0.0f32; nm * r];
-        let mut mid_k = vec![0.0f32; nm * r];
-        let mut mid_v = vec![0.0f32; nm * r];
-        proj_fwd(&mut q, &mut mid_q, &h, wq, la(A_Q, d), lb(B_Q, d), scale, n, m, d, d, r);
-        proj_fwd(&mut k, &mut mid_k, &h, wk, la(A_K, d), lb(B_K, d), scale, n, m, d, d, r);
-        proj_fwd(&mut vv, &mut mid_v, &h, wv, la(A_V, d), lb(B_V, d), scale, n, m, d, d, r);
-
-        // Causal attention per (adapter, batch, head).
-        let mut p = vec![0.0f32; n * bs * nh * s * s];
-        let mut o = vec![0.0f32; nm * d];
-        let mut logit_buf = vec![0.0f32; s];
-        for i in 0..n {
-            for b in 0..bs {
-                for hh in 0..nh {
-                    for t in 0..s {
-                        let qoff = ((i * bs + b) * s + t) * d + hh * dh;
-                        let qrow = &q[qoff..qoff + dh];
-                        let mut mx = f32::NEG_INFINITY;
-                        for (u, lv) in logit_buf.iter_mut().enumerate().take(t + 1) {
-                            let krow = &k[((i * bs + b) * s + u) * d + hh * dh
-                                ..((i * bs + b) * s + u) * d + hh * dh + dh];
-                            let mut dot = 0.0f32;
-                            for c in 0..dh {
-                                dot += qrow[c] * krow[c];
-                            }
-                            let val = dot / sqrt_dh;
-                            *lv = val;
-                            if val > mx {
-                                mx = val;
-                            }
-                        }
-                        let mut sum = 0.0f32;
-                        for lv in logit_buf.iter_mut().take(t + 1) {
-                            *lv = (*lv - mx).exp();
-                            sum += *lv;
-                        }
-                        let prow = &mut p[(((i * bs + b) * nh + hh) * s + t) * s
-                            ..(((i * bs + b) * nh + hh) * s + t) * s + s];
-                        for (u, &e) in logit_buf.iter().enumerate().take(t + 1) {
-                            prow[u] = e / sum;
-                        }
-                        let orow = &mut o[((i * bs + b) * s + t) * d + hh * dh
-                            ..((i * bs + b) * s + t) * d + hh * dh + dh];
-                        for (u, &w) in prow.iter().enumerate().take(t + 1) {
-                            if w == 0.0 {
-                                continue;
-                            }
-                            let vrow = &vv[((i * bs + b) * s + u) * d + hh * dh
-                                ..((i * bs + b) * s + u) * d + hh * dh + dh];
-                            for c in 0..dh {
-                                orow[c] += w * vrow[c];
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        // Attention output projection + residual.
-        let mut ao = vec![0.0f32; nm * d];
-        let mut mid_o = vec![0.0f32; nm * r];
-        proj_fwd(&mut ao, &mut mid_o, &o, wo, la(A_O, d), lb(B_O, d), scale, n, m, d, d, r);
-        let mut x1 = x0.clone();
-        for (xv, av) in x1.iter_mut().zip(&ao) {
-            *xv += av;
-        }
-
-        // MLP: pre-LN, gated SiLU, down projection + residual.
-        let mut h2 = vec![0.0f32; nm * d];
-        let mut xhat2 = vec![0.0f32; nm * d];
-        let mut inv2 = vec![0.0f32; nm];
-        ln_fwd(&x1, ln2, nm, d, &mut h2, &mut xhat2, &mut inv2);
-
-        let mut up = vec![0.0f32; nm * f];
-        let mut gate = vec![0.0f32; nm * f];
-        let mut mid_up = vec![0.0f32; nm * r];
-        let mut mid_gate = vec![0.0f32; nm * r];
-        proj_fwd(&mut up, &mut mid_up, &h2, wup, la(A_UP, d), lb(B_UP, f), scale, n, m, d, f, r);
-        let (ga, gb) = (la(A_GATE, d), lb(B_GATE, f));
-        proj_fwd(&mut gate, &mut mid_gate, &h2, wgate, ga, gb, scale, n, m, d, f, r);
-        let mut act = vec![0.0f32; nm * f];
-        for j in 0..nm * f {
-            act[j] = silu(gate[j]) * up[j];
-        }
-
-        let mut dn = vec![0.0f32; nm * d];
-        let mut mid_down = vec![0.0f32; nm * r];
-        let (da_, db_) = (la(A_DOWN, f), lb(B_DOWN, d));
-        proj_fwd(&mut dn, &mut mid_down, &act, wdown, da_, db_, scale, n, m, f, d, r);
-        let mut x2 = x1.clone();
-        for (xv, dv) in x2.iter_mut().zip(&dn) {
-            *xv += dv;
-        }
-
-        x = x2;
-        layers.push(LayerSave {
-            xhat1,
-            inv1,
-            h,
-            mid_q,
-            mid_k,
-            mid_v,
-            mid_o,
-            mid_up,
-            mid_gate,
-            mid_down,
-            q,
-            k,
-            v: vv,
-            p,
-            o,
-            xhat2,
-            inv2,
-            h2,
-            up,
-            gate,
-            act,
-        });
-    }
-
-    // Final LN + tied-embedding head.
-    let lnf = base[LNF].as_f32()?;
-    let mut xf = vec![0.0f32; nm * d];
-    let mut xhatf = vec![0.0f32; nm * d];
-    let mut invf = vec![0.0f32; nm];
-    ln_fwd(&x, lnf, nm, d, &mut xf, &mut xhatf, &mut invf);
-    let mut logits = vec![0.0f32; nm * v];
-    // logits = xf @ embed^T, embed stored (v, d).
-    mm_nt_acc(&mut logits, &xf, embed, nm, d, v, 1.0);
-
-    Ok(Forward { layers, xhatf, invf, logits })
-}
-
-/// Logits-only packed forward for the eval path: the same math as
-/// [`forward`], with no backward state saved — activations live in a small
-/// set of buffers reused across layers instead of one `LayerSave` per layer
-/// (the full forward keeps ~O(L·n·bs·seq·(d+f)) floats it never reads on
-/// eval). Accumulation order matches [`forward`] exactly, so eval loss is
-/// bit-identical to a zero-lr train step's loss.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn forward_logits(
-    spec: &Spec,
-    base: &[HostTensor],
-    lora: &[&[f32]; 14],
-    scale: &[f32],
-    tokens: &[i32],
-    n: usize,
-    bs: usize,
-    r: usize,
-) -> Result<Vec<f32>> {
-    spec.check()?;
-    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
-    let (nh, dh) = (spec.n_heads, spec.d_head());
-    let m = bs * s;
-    let nm = n * m;
-    let sqrt_dh = (dh as f32).sqrt();
-
-    let embed = base[EMBED].as_f32()?;
-    let pos = base[POS].as_f32()?;
-
-    // Embedding + positional encoding.
-    let mut x = vec![0.0f32; nm * d];
+    s: usize,
+    d: usize,
+    v: usize,
+) -> Result<()> {
     for i in 0..n {
         for b in 0..bs {
             for t in 0..s {
@@ -606,22 +371,173 @@ pub(crate) fn forward_logits(
             }
         }
     }
+    Ok(())
+}
 
-    // Reused scratch (no per-layer saves).
-    let mut h = vec![0.0f32; nm * d];
-    let mut xhat = vec![0.0f32; nm * d];
-    let mut inv = vec![0.0f32; nm];
-    let mut mid = vec![0.0f32; nm * r];
-    let mut q = vec![0.0f32; nm * d];
-    let mut k = vec![0.0f32; nm * d];
-    let mut vv = vec![0.0f32; nm * d];
-    let mut o = vec![0.0f32; nm * d];
-    let mut ao = vec![0.0f32; nm * d];
-    let mut up = vec![0.0f32; nm * f];
-    let mut gate = vec![0.0f32; nm * f];
-    let mut act = vec![0.0f32; nm * f];
-    let mut logit_buf = vec![0.0f32; s];
-    let mut prow = vec![0.0f32; s];
+/// Packed forward. `base` in `BASE_ORDER`, `lora` 14 flat slices in
+/// `LORA_ORDER` (shapes `(L, n, din, r)` / `(L, n, r, dout)`), `tokens`
+/// `(n, bs, s)`. Leaves logits `(n, bs, s, vocab)` in `ws.logits` and
+/// everything the backward pass needs in `ws.layers`/`ws.xhatf`/`ws.invf`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward(
+    spec: &Spec,
+    base: &[&HostTensor],
+    lora: &[&[f32]; 14],
+    scale: &[f32],
+    tokens: &[i32],
+    n: usize,
+    bs: usize,
+    r: usize,
+    ws: &mut Workspace,
+) -> Result<()> {
+    spec.check()?;
+    ws.ensure(spec, n, bs, r, true);
+    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+    let (nh, dh) = (spec.n_heads, spec.d_head());
+    let m = bs * s; // rows per adapter
+    let nm = n * m;
+    let sqrt_dh = (dh as f32).sqrt();
+
+    let embed = base[EMBED].as_f32()?;
+    let pos = base[POS].as_f32()?;
+    let Workspace { x, h, xhatf, invf, logits, att, tmp, layers, .. } = ws;
+    embed_fwd(embed, pos, tokens, x, n, bs, s, d, v)?;
+
+    for l in 0..spec.n_layers {
+        let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
+        let ln2 = &base[LN2].as_f32()?[l * d..(l + 1) * d];
+        let wq = &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wk = &base[WK].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wv = &base[WV].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wo = &base[WO].as_f32()?[l * d * d..(l + 1) * d * d];
+        let wup = &base[WUP].as_f32()?[l * d * f..(l + 1) * d * f];
+        let wgate = &base[WGATE].as_f32()?[l * d * f..(l + 1) * d * f];
+        let wdown = &base[WDOWN].as_f32()?[l * f * d..(l + 1) * f * d];
+        // Layer-l LoRA slices: (n, din, r) / (n, r, dout).
+        let la = |idx: usize, din: usize| &lora[idx][l * n * din * r..(l + 1) * n * din * r];
+        let lb = |idx: usize, dout: usize| &lora[idx][l * n * r * dout..(l + 1) * n * r * dout];
+        let save = &mut layers[l];
+
+        ln_fwd(x, ln1, nm, d, &mut save.h, &mut save.xhat1, &mut save.inv1);
+
+        let (qa, qb) = (la(A_Q, d), lb(B_Q, d));
+        proj_fwd(&mut save.q, &mut save.mid_q, &save.h, wq, qa, qb, scale, n, m, d, d, r);
+        let (ka, kb) = (la(A_K, d), lb(B_K, d));
+        proj_fwd(&mut save.k, &mut save.mid_k, &save.h, wk, ka, kb, scale, n, m, d, d, r);
+        let (va, vb) = (la(A_V, d), lb(B_V, d));
+        proj_fwd(&mut save.v, &mut save.mid_v, &save.h, wv, va, vb, scale, n, m, d, d, r);
+
+        // Causal attention per (adapter, batch, head), probabilities saved.
+        save.o.fill(0.0);
+        let logit_buf = &mut att[..s];
+        for i in 0..n {
+            for b in 0..bs {
+                for hh in 0..nh {
+                    for t in 0..s {
+                        let base_t = ((i * bs + b) * s + t) * d + hh * dh;
+                        let qrow = &save.q[base_t..base_t + dh];
+                        let mut mx = f32::NEG_INFINITY;
+                        for (u, lv) in logit_buf.iter_mut().enumerate().take(t + 1) {
+                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                            let krow = &save.k[base_u..base_u + dh];
+                            let mut dot = 0.0f32;
+                            for c in 0..dh {
+                                dot += qrow[c] * krow[c];
+                            }
+                            let val = dot / sqrt_dh;
+                            *lv = val;
+                            if val > mx {
+                                mx = val;
+                            }
+                        }
+                        let mut sum = 0.0f32;
+                        for lv in logit_buf.iter_mut().take(t + 1) {
+                            *lv = (*lv - mx).exp();
+                            sum += *lv;
+                        }
+                        let poff = (((i * bs + b) * nh + hh) * s + t) * s;
+                        let prow = &mut save.p[poff..poff + s];
+                        for (u, &e) in logit_buf.iter().enumerate().take(t + 1) {
+                            prow[u] = e / sum;
+                        }
+                        let orow = &mut save.o[base_t..base_t + dh];
+                        for (u, &w) in prow.iter().enumerate().take(t + 1) {
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                            let vrow = &save.v[base_u..base_u + dh];
+                            for c in 0..dh {
+                                orow[c] += w * vrow[c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Attention output projection + residual.
+        proj_fwd(tmp, &mut save.mid_o, &save.o, wo, la(A_O, d), lb(B_O, d), scale, n, m, d, d, r);
+        for (xv, av) in x.iter_mut().zip(tmp.iter()) {
+            *xv += *av;
+        }
+
+        // MLP: pre-LN, gated SiLU, down projection + residual.
+        ln_fwd(x, ln2, nm, d, &mut save.h2, &mut save.xhat2, &mut save.inv2);
+        let (ua, ub) = (la(A_UP, d), lb(B_UP, f));
+        proj_fwd(&mut save.up, &mut save.mid_up, &save.h2, wup, ua, ub, scale, n, m, d, f, r);
+        let (ga, gb) = (la(A_GATE, d), lb(B_GATE, f));
+        proj_fwd(&mut save.gate, &mut save.mid_gate, &save.h2, wgate, ga, gb, scale, n, m, d, f, r);
+        for j in 0..nm * f {
+            save.act[j] = silu(save.gate[j]) * save.up[j];
+        }
+        let (da_, db_) = (la(A_DOWN, f), lb(B_DOWN, d));
+        proj_fwd(tmp, &mut save.mid_down, &save.act, wdown, da_, db_, scale, n, m, f, d, r);
+        for (xv, dv) in x.iter_mut().zip(tmp.iter()) {
+            *xv += *dv;
+        }
+    }
+
+    // Final LN + tied-embedding head.
+    let lnf = base[LNF].as_f32()?;
+    ln_fwd(x, lnf, nm, d, h, xhatf, invf);
+    logits.fill(0.0);
+    // logits = xf @ embed^T, embed stored (v, d).
+    gemm::mm_nt_acc_par(logits, h, embed, nm, d, v, 1.0, gemm::threads());
+    Ok(())
+}
+
+/// Logits-only packed forward for the eval path: the same math as
+/// [`forward`], with no backward state saved — activations live in the
+/// workspace's small flat buffer set reused across layers instead of one
+/// `LayerSave` per layer (the full forward keeps ~O(L·n·bs·seq·(d+f))
+/// floats it never reads on eval). Accumulation order matches [`forward`]
+/// exactly, so eval loss is bit-identical to a zero-lr train step's loss.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_logits(
+    spec: &Spec,
+    base: &[&HostTensor],
+    lora: &[&[f32]; 14],
+    scale: &[f32],
+    tokens: &[i32],
+    n: usize,
+    bs: usize,
+    r: usize,
+    ws: &mut Workspace,
+) -> Result<()> {
+    spec.check()?;
+    ws.ensure(spec, n, bs, r, false);
+    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+    let (nh, dh) = (spec.n_heads, spec.d_head());
+    let m = bs * s;
+    let nm = n * m;
+    let sqrt_dh = (dh as f32).sqrt();
+
+    let embed = base[EMBED].as_f32()?;
+    let pos = base[POS].as_f32()?;
+    let Workspace { x, h, xhat, inv, mid, q, k, v: vv, o, tmp, up, gate, act, att, logits, .. } =
+        ws;
+    embed_fwd(embed, pos, tokens, x, n, bs, s, d, v)?;
 
     for l in 0..spec.n_layers {
         let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
@@ -636,13 +552,14 @@ pub(crate) fn forward_logits(
         let la = |idx: usize, din: usize| &lora[idx][l * n * din * r..(l + 1) * n * din * r];
         let lb = |idx: usize, dout: usize| &lora[idx][l * n * r * dout..(l + 1) * n * r * dout];
 
-        ln_fwd(&x, ln1, nm, d, &mut h, &mut xhat, &mut inv);
-        proj_fwd(&mut q, &mut mid, &h, wq, la(A_Q, d), lb(B_Q, d), scale, n, m, d, d, r);
-        proj_fwd(&mut k, &mut mid, &h, wk, la(A_K, d), lb(B_K, d), scale, n, m, d, d, r);
-        proj_fwd(&mut vv, &mut mid, &h, wv, la(A_V, d), lb(B_V, d), scale, n, m, d, d, r);
+        ln_fwd(x, ln1, nm, d, h, xhat, inv);
+        proj_fwd(q, mid, h, wq, la(A_Q, d), lb(B_Q, d), scale, n, m, d, d, r);
+        proj_fwd(k, mid, h, wk, la(A_K, d), lb(B_K, d), scale, n, m, d, d, r);
+        proj_fwd(vv, mid, h, wv, la(A_V, d), lb(B_V, d), scale, n, m, d, d, r);
 
         // Causal attention per (adapter, batch, head).
         o.fill(0.0);
+        let (logit_buf, prow) = att.split_at_mut(s);
         for i in 0..n {
             for b in 0..bs {
                 for hh in 0..nh {
@@ -688,32 +605,32 @@ pub(crate) fn forward_logits(
         }
 
         // Attention output projection + residual.
-        proj_fwd(&mut ao, &mut mid, &o, wo, la(A_O, d), lb(B_O, d), scale, n, m, d, d, r);
-        for (xv, av) in x.iter_mut().zip(&ao) {
-            *xv += av;
+        proj_fwd(tmp, mid, o, wo, la(A_O, d), lb(B_O, d), scale, n, m, d, d, r);
+        for (xv, av) in x.iter_mut().zip(tmp.iter()) {
+            *xv += *av;
         }
 
         // MLP: pre-LN, gated SiLU, down projection + residual.
-        ln_fwd(&x, ln2, nm, d, &mut h, &mut xhat, &mut inv);
-        proj_fwd(&mut up, &mut mid, &h, wup, la(A_UP, d), lb(B_UP, f), scale, n, m, d, f, r);
+        ln_fwd(x, ln2, nm, d, h, xhat, inv);
+        proj_fwd(up, mid, h, wup, la(A_UP, d), lb(B_UP, f), scale, n, m, d, f, r);
         let (ga, gb) = (la(A_GATE, d), lb(B_GATE, f));
-        proj_fwd(&mut gate, &mut mid, &h, wgate, ga, gb, scale, n, m, d, f, r);
+        proj_fwd(gate, mid, h, wgate, ga, gb, scale, n, m, d, f, r);
         for j in 0..nm * f {
             act[j] = silu(gate[j]) * up[j];
         }
         let (dna, dnb) = (la(A_DOWN, f), lb(B_DOWN, d));
-        proj_fwd(&mut ao, &mut mid, &act, wdown, dna, dnb, scale, n, m, f, d, r);
-        for (xv, dv) in x.iter_mut().zip(&ao) {
-            *xv += dv;
+        proj_fwd(tmp, mid, act, wdown, dna, dnb, scale, n, m, f, d, r);
+        for (xv, dv) in x.iter_mut().zip(tmp.iter()) {
+            *xv += *dv;
         }
     }
 
     // Final LN + tied-embedding head.
     let lnf = base[LNF].as_f32()?;
-    ln_fwd(&x, lnf, nm, d, &mut h, &mut xhat, &mut inv);
-    let mut logits = vec![0.0f32; nm * v];
-    mm_nt_acc(&mut logits, &h, embed, nm, d, v, 1.0);
-    Ok(logits)
+    ln_fwd(x, lnf, nm, d, h, xhat, inv);
+    logits.fill(0.0);
+    gemm::mm_nt_acc_par(logits, h, embed, nm, d, v, 1.0, gemm::threads());
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -770,15 +687,15 @@ pub(crate) fn loss_and_acc(
     (loss, acc)
 }
 
-/// Backward pass: per-adapter losses plus gradients of every LoRA tensor
-/// (14 flat buffers in `LORA_ORDER`, shapes matching the inputs). The loss
-/// is the *sum* of per-adapter masked mean CE — adapter `i`'s gradient is
-/// independent of its pack neighbours (paper §3.2).
+/// Backward pass over the state [`forward`] left in the workspace:
+/// returns per-adapter losses and leaves the gradients of every LoRA
+/// tensor in `ws.grads` (14 flat buffers in `LORA_ORDER`, shapes matching
+/// the inputs). The loss is the *sum* of per-adapter masked mean CE —
+/// adapter `i`'s gradient is independent of its pack neighbours (§3.2).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn backward(
     spec: &Spec,
-    fwd: &Forward,
-    base: &[HostTensor],
+    base: &[&HostTensor],
     lora: &[&[f32]; 14],
     scale: &[f32],
     targets: &[i32],
@@ -786,17 +703,41 @@ pub(crate) fn backward(
     n: usize,
     bs: usize,
     r: usize,
-) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
     let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
     let (nh, dh) = (spec.n_heads, spec.d_head());
     let m = bs * s;
     let nm = n * m;
     let sqrt_dh = (dh as f32).sqrt();
     let embed = base[EMBED].as_f32()?;
+    let Workspace {
+        layers,
+        xhatf,
+        invf,
+        logits,
+        tmp,
+        dlogits,
+        dxa,
+        dxb,
+        dact,
+        dup,
+        dgate,
+        dh2,
+        dmid,
+        dq,
+        dk,
+        dv,
+        dh: dhbuf,
+        dp,
+        dln,
+        grads,
+        ..
+    } = ws;
 
     // Per-adapter losses + dlogits.
     let mut per = vec![0.0f32; n];
-    let mut dlogits = vec![0.0f32; nm * v];
+    dlogits.fill(0.0);
     for i in 0..n {
         let mut denom = 0.0f32;
         for row in 0..m {
@@ -805,7 +746,7 @@ pub(crate) fn backward(
         let denom = denom.max(1.0);
         for row in 0..m {
             let mk = mask[i * m + row];
-            let lrow = &fwd.logits[(i * m + row) * v..(i * m + row + 1) * v];
+            let lrow = &logits[(i * m + row) * v..(i * m + row + 1) * v];
             let tg = targets[i * m + row].clamp(0, v as i32 - 1) as usize;
             if mk == 0.0 {
                 continue;
@@ -832,23 +773,23 @@ pub(crate) fn backward(
         per[i] /= denom;
     }
 
-    // Head + final LN.
-    let mut dxf = vec![0.0f32; nm * d];
-    mm_acc(&mut dxf, &dlogits, embed, nm, v, d, 1.0);
+    // Head + final LN: dxf staged in dxb, running dx in dxa.
+    dxb.fill(0.0);
+    gemm::mm_acc_par(dxb, dlogits, embed, nm, v, d, 1.0, gemm::threads());
     let lnf = base[LNF].as_f32()?;
-    let mut dx = vec![0.0f32; nm * d];
-    ln_bwd_acc(&mut dx, &dxf, lnf, &fwd.xhatf, &fwd.invf, nm, d);
+    dxa.fill(0.0);
+    ln_bwd_acc(dxa, dxb, lnf, xhatf, invf, nm, d, dln);
 
-    // LoRA gradient buffers, shapes matching the inputs. Split at the
-    // a_*/b_* boundary so one projection's backward can borrow its `da`
-    // and `db` slices simultaneously.
-    let mut grads: Vec<Vec<f32>> =
-        (0..LORA_ORDER.len()).map(|i| vec![0.0f32; lora[i].len()]).collect();
+    // LoRA gradient buffers, zeroed for this step. Split at the a_*/b_*
+    // boundary so one projection's backward can borrow its `da` and `db`
+    // slices simultaneously.
+    for g in grads.iter_mut() {
+        g.fill(0.0);
+    }
     let (grads_a, grads_b) = grads.split_at_mut(B_DOWN);
-    let mut dmid = Vec::new();
 
     for l in (0..spec.n_layers).rev() {
-        let save = &fwd.layers[l];
+        let save = &layers[l];
         let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
         let ln2 = &base[LN2].as_f32()?[l * d..(l + 1) * d];
         let wq = &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d];
@@ -872,12 +813,13 @@ pub(crate) fn backward(
         }
 
         // MLP branch: x2 = x1 + down(act).
-        let mut dact = vec![0.0f32; nm * f];
+        dact.fill(0.0);
         proj_bwd(
-            &mut dact,
+            dact,
             ga!(A_DOWN, f),
             gb!(B_DOWN, d),
-            &dx,
+            dmid,
+            dxa,
             &save.act,
             &save.mid_down,
             wdown,
@@ -889,20 +831,18 @@ pub(crate) fn backward(
             f,
             d,
             r,
-            &mut dmid,
         );
-        let mut dup = vec![0.0f32; nm * f];
-        let mut dgate = vec![0.0f32; nm * f];
         for j in 0..nm * f {
             dup[j] = dact[j] * silu(save.gate[j]);
             dgate[j] = dact[j] * save.up[j] * dsilu(save.gate[j]);
         }
-        let mut dh2 = vec![0.0f32; nm * d];
+        dh2.fill(0.0);
         proj_bwd(
-            &mut dh2,
+            dh2,
             ga!(A_UP, d),
             gb!(B_UP, f),
-            &dup,
+            dmid,
+            dup,
             &save.h2,
             &save.mid_up,
             wup,
@@ -914,13 +854,13 @@ pub(crate) fn backward(
             d,
             f,
             r,
-            &mut dmid,
         );
         proj_bwd(
-            &mut dh2,
+            dh2,
             ga!(A_GATE, d),
             gb!(B_GATE, f),
-            &dgate,
+            dmid,
+            dgate,
             &save.h2,
             &save.mid_gate,
             wgate,
@@ -932,19 +872,19 @@ pub(crate) fn backward(
             d,
             f,
             r,
-            &mut dmid,
         );
-        // dx1 = dx (residual) + LN2 backward of dh2.
-        let mut dx1 = dx.clone();
-        ln_bwd_acc(&mut dx1, &dh2, ln2, &save.xhat2, &save.inv2, nm, d);
+        // dx1 = dx (residual) + LN2 backward of dh2 — staged in dxb.
+        dxb.copy_from_slice(dxa);
+        ln_bwd_acc(dxb, dh2, ln2, &save.xhat2, &save.inv2, nm, d, dln);
 
-        // Attention branch: x1 = x0 + o_proj(o).
-        let mut do_ = vec![0.0f32; nm * d];
+        // Attention branch: x1 = x0 + o_proj(o). `tmp` plays do_.
+        tmp.fill(0.0);
         proj_bwd(
-            &mut do_,
+            tmp,
             ga!(A_O, d),
             gb!(B_O, d),
-            &dx1,
+            dmid,
+            dxb,
             &save.o,
             &save.mid_o,
             wo,
@@ -956,19 +896,17 @@ pub(crate) fn backward(
             d,
             d,
             r,
-            &mut dmid,
         );
 
-        let mut dq = vec![0.0f32; nm * d];
-        let mut dk = vec![0.0f32; nm * d];
-        let mut dv = vec![0.0f32; nm * d];
-        let mut dp = vec![0.0f32; s];
+        dq.fill(0.0);
+        dk.fill(0.0);
+        dv.fill(0.0);
         for i in 0..n {
             for b in 0..bs {
                 for hh in 0..nh {
                     for t in 0..s {
                         let base_t = ((i * bs + b) * s + t) * d + hh * dh;
-                        let dorow = &do_[base_t..base_t + dh];
+                        let dorow = &tmp[base_t..base_t + dh];
                         let prow = &save.p[(((i * bs + b) * nh + hh) * s + t) * s
                             ..(((i * bs + b) * nh + hh) * s + t) * s + s];
                         // dP and softmax backward.
@@ -1011,12 +949,13 @@ pub(crate) fn backward(
             }
         }
 
-        let mut dh = vec![0.0f32; nm * d];
+        dhbuf.fill(0.0);
         proj_bwd(
-            &mut dh,
+            dhbuf,
             ga!(A_Q, d),
             gb!(B_Q, d),
-            &dq,
+            dmid,
+            dq,
             &save.h,
             &save.mid_q,
             wq,
@@ -1028,13 +967,13 @@ pub(crate) fn backward(
             d,
             d,
             r,
-            &mut dmid,
         );
         proj_bwd(
-            &mut dh,
+            dhbuf,
             ga!(A_K, d),
             gb!(B_K, d),
-            &dk,
+            dmid,
+            dk,
             &save.h,
             &save.mid_k,
             wk,
@@ -1046,13 +985,13 @@ pub(crate) fn backward(
             d,
             d,
             r,
-            &mut dmid,
         );
         proj_bwd(
-            &mut dh,
+            dhbuf,
             ga!(A_V, d),
             gb!(B_V, d),
-            &dv,
+            dmid,
+            dv,
             &save.h,
             &save.mid_v,
             wv,
@@ -1064,23 +1003,23 @@ pub(crate) fn backward(
             d,
             d,
             r,
-            &mut dmid,
         );
-        // dx0 = dx1 (residual) + LN1 backward of dh.
-        let mut dx0 = dx1.clone();
-        ln_bwd_acc(&mut dx0, &dh, ln1, &save.xhat1, &save.inv1, nm, d);
-        dx = dx0;
+        // dx0 = dx1 (residual) + LN1 backward of dh — back into dxa.
+        dxa.copy_from_slice(dxb);
+        ln_bwd_acc(dxa, dhbuf, ln1, &save.xhat1, &save.inv1, nm, d, dln);
     }
 
-    Ok((per, grads))
+    Ok(per)
 }
 
 // ---------------------------------------------------------------------------
 // AdamW (per-adapter learning rate, padded-rank masking)
 // ---------------------------------------------------------------------------
 
-/// One AdamW update over a flat LoRA tensor of shape `(L, n, d2, d3)`.
-/// `rank_axis_last` is true for `a_*` tensors (rank on the last axis).
+/// One AdamW update over a flat LoRA tensor of shape `(L, n, d2, d3)`,
+/// written into the caller-provided `out_*` buffers (recycled through the
+/// `Scratch` pool — every element is overwritten). `rank_axis_last` is
+/// true for `a_*` tensors (rank on the last axis).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn adamw_update(
     lora: &[f32],
@@ -1095,13 +1034,13 @@ pub(crate) fn adamw_update(
     r: usize,
     rank_axis_last: bool,
     t_new: f32,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    out_l: &mut [f32],
+    out_m: &mut [f32],
+    out_v: &mut [f32],
+) {
     let bc1 = 1.0 - ADAM_B1.powf(t_new);
     let bc2 = 1.0 - ADAM_B2.powf(t_new);
     let layers = lora.len() / (n * d2 * d3);
-    let mut out_l = vec![0.0f32; lora.len()];
-    let mut out_m = vec![0.0f32; lora.len()];
-    let mut out_v = vec![0.0f32; lora.len()];
     for l in 0..layers {
         for i in 0..n {
             let lri = lr[i];
@@ -1123,38 +1062,14 @@ pub(crate) fn adamw_update(
             }
         }
     }
-    (out_l, out_m, out_v)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::state::{lora_shape, proj_dims};
-    use crate::runtime::ModelInfo;
+    use crate::runtime::{ModelInfo, LORA_ORDER};
     use crate::util::rng::Rng;
-
-    #[test]
-    fn mm_variants_match_hand_computation() {
-        // a = [[1,2,3],[4,5,6]] (2x3), b = [[7,8],[9,10],[11,12]] (3x2)
-        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
-        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
-        let mut out = [0.0f32; 4];
-        mm_acc(&mut out, &a, &b, 2, 3, 2, 1.0);
-        assert_eq!(out, [58.0, 64.0, 139.0, 154.0]);
-
-        // a (2x3) @ b^T with b stored (2x3): out[i][j] = row_i . row_j
-        let bt = [1.0, 0.0, 1.0, 0.0, 2.0, 0.0];
-        let mut out = [0.0f32; 4];
-        mm_nt_acc(&mut out, &a, &bt, 2, 3, 2, 1.0);
-        assert_eq!(out, [4.0, 4.0, 10.0, 10.0]);
-
-        // a^T (3x2 from a stored 2x3) @ b2 (2x2)
-        let b2 = [1.0, 2.0, 3.0, 4.0];
-        let mut out = [0.0f32; 6];
-        mm_tn_acc(&mut out, &a, &b2, 2, 3, 2, 1.0);
-        // a^T = [[1,4],[2,5],[3,6]]; a^T@b2 = [[13,18],[17,24],[21,30]]
-        assert_eq!(out, [13.0, 18.0, 17.0, 24.0, 21.0, 30.0]);
-    }
 
     #[test]
     fn layernorm_forward_is_normalized() {
@@ -1224,6 +1139,18 @@ mod tests {
         ]
     }
 
+    fn rand_lora(mi: &ModelInfo, rng: &mut Rng, n: usize, r: usize) -> Vec<HostTensor> {
+        let mut lora_t: Vec<HostTensor> = Vec::new();
+        for name in LORA_ORDER {
+            let shape = lora_shape(mi, name, n, r);
+            // Both A and B nonzero so every backward path is exercised.
+            let (_, p) = name.split_once('_').unwrap();
+            let din = proj_dims(mi, p).0 as f64;
+            lora_t.push(rand_tensor(rng, shape, 0.5 / din.sqrt()));
+        }
+        lora_t
+    }
+
     /// Finite-difference check of the hand-derived backward pass: perturb
     /// sampled LoRA coordinates and compare (L(θ+ε) − L(θ−ε)) / 2ε against
     /// the analytic gradient. This is the in-tree guarantee that the
@@ -1236,14 +1163,8 @@ mod tests {
         let mut rng = Rng::new(42);
 
         let base = rand_base(&mi, &mut rng);
-        let mut lora_t: Vec<HostTensor> = Vec::new();
-        for name in LORA_ORDER {
-            let shape = lora_shape(&mi, name, n, r);
-            // Both A and B nonzero so every backward path is exercised.
-            let (_, p) = name.split_once('_').unwrap();
-            let din = proj_dims(&mi, p).0 as f64;
-            lora_t.push(rand_tensor(&mut rng, shape, 0.5 / din.sqrt()));
-        }
+        let base_refs: Vec<&HostTensor> = base.iter().collect();
+        let mut lora_t = rand_lora(&mi, &mut rng, n, r);
         let scale = vec![1.0f32, 0.7];
         let m = bs * spec.seq;
         let tokens: Vec<i32> =
@@ -1252,17 +1173,22 @@ mod tests {
             (0..n * m).map(|_| rng.below(spec.vocab as u64) as i32).collect();
         let mask: Vec<f32> = (0..n * m).map(|_| if rng.f64() < 0.6 { 1.0 } else { 0.0 }).collect();
 
-        let total_loss = |lora_t: &[HostTensor]| -> f32 {
+        let total_loss = |lora_t: &[HostTensor], base_refs: &[&HostTensor]| -> f32 {
             let lora: [&[f32]; 14] = std::array::from_fn(|i| lora_t[i].as_f32().unwrap());
-            let fwd = forward(&spec, &base, &lora, &scale, &tokens, n, bs, r).unwrap();
-            let (loss, _) = loss_and_acc(&spec, &fwd.logits, &targets, &mask, n, bs);
+            let mut ws = Workspace::new();
+            forward(&spec, base_refs, &lora, &scale, &tokens, n, bs, r, &mut ws).unwrap();
+            let (loss, _) = loss_and_acc(&spec, &ws.logits, &targets, &mask, n, bs);
             loss.iter().sum()
         };
 
-        let lora: [&[f32]; 14] = std::array::from_fn(|i| lora_t[i].as_f32().unwrap());
-        let fwd = forward(&spec, &base, &lora, &scale, &tokens, n, bs, r).unwrap();
-        let (_, grads) =
-            backward(&spec, &fwd, &base, &lora, &scale, &targets, &mask, n, bs, r).unwrap();
+        let mut ws = Workspace::new();
+        {
+            let lora: [&[f32]; 14] = std::array::from_fn(|i| lora_t[i].as_f32().unwrap());
+            forward(&spec, &base_refs, &lora, &scale, &tokens, n, bs, r, &mut ws).unwrap();
+            backward(&spec, &base_refs, &lora, &scale, &targets, &mask, n, bs, r, &mut ws)
+                .unwrap();
+        }
+        let grads = std::mem::take(&mut ws.grads);
 
         let gmax = grads
             .iter()
@@ -1282,9 +1208,9 @@ mod tests {
             }
             let orig = lora_t[k].as_f32().unwrap()[idx];
             lora_t[k].as_f32_mut().unwrap()[idx] = orig + eps;
-            let lp = total_loss(&lora_t);
+            let lp = total_loss(&lora_t, &base_refs);
             lora_t[k].as_f32_mut().unwrap()[idx] = orig - eps;
-            let lm = total_loss(&lora_t);
+            let lm = total_loss(&lora_t, &base_refs);
             lora_t[k].as_f32_mut().unwrap()[idx] = orig;
             let fd = (lp - lm) / (2.0 * eps);
             let rel = (fd - g).abs() / g.abs().max(fd.abs()).max(1e-6);
@@ -1302,32 +1228,41 @@ mod tests {
     }
 
     /// The logits-only eval forward reproduces the full forward's logits
-    /// bit-for-bit (same op order, no saved state).
+    /// bit-for-bit (same op order, shared workspace arena, no saved
+    /// state), and both are bitwise invariant to the worker count.
     #[test]
-    fn forward_logits_matches_full_forward() {
+    fn forward_logits_matches_full_forward_at_any_thread_count() {
         let mi = tiny_mi();
         let spec = tiny_spec(&mi);
         let (n, r, bs) = (2usize, 3usize, 2usize);
         let mut rng = Rng::new(77);
         let base = rand_base(&mi, &mut rng);
-        let mut lora_t: Vec<HostTensor> = Vec::new();
-        for name in LORA_ORDER {
-            let shape = lora_shape(&mi, name, n, r);
-            let (_, p) = name.split_once('_').unwrap();
-            let din = proj_dims(&mi, p).0 as f64;
-            lora_t.push(rand_tensor(&mut rng, shape, 0.5 / din.sqrt()));
-        }
+        let base_refs: Vec<&HostTensor> = base.iter().collect();
+        let lora_t = rand_lora(&mi, &mut rng, n, r);
         let lora: [&[f32]; 14] = std::array::from_fn(|i| lora_t[i].as_f32().unwrap());
         let scale = vec![0.9f32, 1.3];
         let m = bs * spec.seq;
         let tokens: Vec<i32> =
             (0..n * m).map(|_| rng.below(spec.vocab as u64) as i32).collect();
-        let full = forward(&spec, &base, &lora, &scale, &tokens, n, bs, r).unwrap();
-        let lean = forward_logits(&spec, &base, &lora, &scale, &tokens, n, bs, r).unwrap();
-        assert_eq!(full.logits.len(), lean.len());
-        for (i, (a, b)) in full.logits.iter().zip(&lean).enumerate() {
-            assert_eq!(a, b, "logit {i} diverged: {a} vs {b}");
+
+        let mut ws = Workspace::new();
+        forward(&spec, &base_refs, &lora, &scale, &tokens, n, bs, r, &mut ws).unwrap();
+        let full = ws.logits.clone();
+
+        let mut fresh = Workspace::new();
+        for threads in [1usize, 4] {
+            gemm::set_threads(threads);
+            // A fresh arena and a reused train-sized arena must agree.
+            for ws in [&mut fresh, &mut ws] {
+                forward_logits(&spec, &base_refs, &lora, &scale, &tokens, n, bs, r, ws)
+                    .unwrap();
+                assert_eq!(full.len(), ws.logits.len());
+                for (i, (a, b)) in full.iter().zip(&ws.logits).enumerate() {
+                    assert_eq!(a, b, "logit {i} diverged (threads {threads}): {a} vs {b}");
+                }
+            }
         }
+        gemm::set_threads(1);
     }
 
     #[test]
@@ -1339,8 +1274,13 @@ mod tests {
         let v = vec![0.0f32; 8];
         let grad = vec![0.5f32, -0.5, 0.5, -0.5, 0.5, -0.5, 0.5, -0.5];
         let rmask = vec![1.0f32, 1.0, 0.0, 0.0]; // true rank 2 of padded 4
-        let (nl, nm, nv) =
-            adamw_update(&lora, &m, &v, &grad, &[0.1], &rmask, 1, 2, 4, 4, true, 1.0);
+        let mut nl = vec![9.0f32; 8]; // stale contents must be overwritten
+        let mut nm = vec![9.0f32; 8];
+        let mut nv = vec![9.0f32; 8];
+        adamw_update(
+            &lora, &m, &v, &grad, &[0.1], &rmask, 1, 2, 4, 4, true, 1.0, &mut nl, &mut nm,
+            &mut nv,
+        );
         // Unmasked columns move by ~lr against the gradient sign.
         assert!((nl[0] - 0.9).abs() < 1e-3, "{}", nl[0]);
         assert!((nl[1] - 1.1).abs() < 1e-3, "{}", nl[1]);

@@ -1,0 +1,342 @@
+//! Step-persistent workspace arena for the reference backend.
+//!
+//! One [`Workspace`] holds every activation, gradient and scratch buffer a
+//! `(Spec, n, bs, r)` train/eval bucket needs, sized once and reused for
+//! the life of the job: after the first step of a phase, the interpreter
+//! runs with zero steady-state allocation (the pre-arena code allocated
+//! ~30 `Vec<f32>`s per layer per step). The arena rides inside the opaque
+//! [`crate::runtime::backend::Scratch`] owned by
+//! [`crate::runtime::TrainState`], so a re-bucket (`TrainState::repack`)
+//! drops it with the old state and the next step re-derives it at the new
+//! bucket shape.
+//!
+//! Buffer groups:
+//!
+//! - **stream/head** (`x`, `h`, `xhatf`, `invf`, `logits`, `att`) — shared
+//!   by the train forward and the logits-only eval forward.
+//! - **flat activations** (`xhat`..`act`) — the eval forward's per-layer
+//!   reuse set (no backward state).
+//! - **`layers`** ([`LayerSave`]) — the train forward's saved activations,
+//!   one per layer, read by the backward pass. Only sized when a train
+//!   bucket asks for them.
+//! - **backward scratch + `grads`** — gradient propagation buffers and the
+//!   14 `LORA_ORDER` gradient accumulators.
+
+use super::tinylm::Spec;
+use crate::runtime::LORA_ORDER;
+
+/// Saved per-layer activations for the backward pass. (The residual-stream
+/// values themselves are not needed: residual adds backprop as identity.)
+#[derive(Default)]
+pub(crate) struct LayerSave {
+    pub xhat1: Vec<f32>,
+    pub inv1: Vec<f32>,
+    pub h: Vec<f32>,
+    pub mid_q: Vec<f32>,
+    pub mid_k: Vec<f32>,
+    pub mid_v: Vec<f32>,
+    pub mid_o: Vec<f32>,
+    pub mid_up: Vec<f32>,
+    pub mid_gate: Vec<f32>,
+    pub mid_down: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub p: Vec<f32>,
+    pub o: Vec<f32>,
+    pub xhat2: Vec<f32>,
+    pub inv2: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub up: Vec<f32>,
+    pub gate: Vec<f32>,
+    pub act: Vec<f32>,
+}
+
+impl LayerSave {
+    fn ensure(&mut self, nm: usize, d: usize, f: usize, r: usize, p_len: usize) {
+        self.xhat1.resize(nm * d, 0.0);
+        self.inv1.resize(nm, 0.0);
+        self.h.resize(nm * d, 0.0);
+        for mid in [
+            &mut self.mid_q,
+            &mut self.mid_k,
+            &mut self.mid_v,
+            &mut self.mid_o,
+            &mut self.mid_up,
+            &mut self.mid_gate,
+            &mut self.mid_down,
+        ] {
+            mid.resize(nm * r, 0.0);
+        }
+        self.q.resize(nm * d, 0.0);
+        self.k.resize(nm * d, 0.0);
+        self.v.resize(nm * d, 0.0);
+        self.p.resize(p_len, 0.0);
+        self.o.resize(nm * d, 0.0);
+        self.xhat2.resize(nm * d, 0.0);
+        self.inv2.resize(nm, 0.0);
+        self.h2.resize(nm * d, 0.0);
+        self.up.resize(nm * f, 0.0);
+        self.gate.resize(nm * f, 0.0);
+        self.act.resize(nm * f, 0.0);
+    }
+}
+
+/// Shape key a workspace was last sized for.
+type Key = (usize, usize, usize, usize, usize, usize, usize, usize, usize);
+
+fn key_of(spec: &Spec, n: usize, bs: usize, r: usize) -> Key {
+    (spec.vocab, spec.d_model, spec.n_layers, spec.n_heads, spec.d_ff, spec.seq, n, bs, r)
+}
+
+/// The arena (see module docs). All fields are plain `Vec<f32>` buffers;
+/// `ensure` is idempotent and only touches memory when the bucket shape
+/// changes (i.e. never in the steady state of a job phase).
+#[derive(Default)]
+pub struct Workspace {
+    key: Option<Key>,
+    has_layers: bool,
+
+    // Residual stream + head (both forwards).
+    pub(crate) x: Vec<f32>,
+    pub(crate) h: Vec<f32>,
+    pub(crate) xhatf: Vec<f32>,
+    pub(crate) invf: Vec<f32>,
+    pub(crate) logits: Vec<f32>,
+    /// Attention probe scratch: `[logit_buf(s) | prow(s)]`.
+    pub(crate) att: Vec<f32>,
+
+    // Flat per-layer activation reuse (logits-only eval forward).
+    pub(crate) xhat: Vec<f32>,
+    pub(crate) inv: Vec<f32>,
+    pub(crate) mid: Vec<f32>,
+    pub(crate) q: Vec<f32>,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) o: Vec<f32>,
+    /// Projection output staging (attention out / MLP down) before the
+    /// residual add; also the backward's `do_` buffer.
+    pub(crate) tmp: Vec<f32>,
+    pub(crate) up: Vec<f32>,
+    pub(crate) gate: Vec<f32>,
+    pub(crate) act: Vec<f32>,
+
+    // Train forward saves.
+    pub(crate) layers: Vec<LayerSave>,
+
+    // Backward scratch.
+    pub(crate) dlogits: Vec<f32>,
+    pub(crate) dxa: Vec<f32>,
+    pub(crate) dxb: Vec<f32>,
+    pub(crate) dact: Vec<f32>,
+    pub(crate) dup: Vec<f32>,
+    pub(crate) dgate: Vec<f32>,
+    pub(crate) dh2: Vec<f32>,
+    pub(crate) dmid: Vec<f32>,
+    pub(crate) dq: Vec<f32>,
+    pub(crate) dk: Vec<f32>,
+    pub(crate) dv: Vec<f32>,
+    pub(crate) dh: Vec<f32>,
+    pub(crate) dp: Vec<f32>,
+    /// LayerNorm-backward row scratch (`d_model` floats).
+    pub(crate) dln: Vec<f32>,
+    /// LoRA gradient accumulators in `LORA_ORDER` (packed shapes).
+    pub(crate) grads: Vec<Vec<f32>>,
+}
+
+/// Flat element count of LoRA tensor `name` for `(spec, n, r)` — the
+/// `runtime::state::lora_shape` product, derived from the `Spec` alone.
+pub(crate) fn lora_len(spec: &Spec, name: &str, n: usize, r: usize) -> usize {
+    let (kind, p) = name.split_once('_').expect("lora tensor name");
+    let (d, f) = (spec.d_model, spec.d_ff);
+    let (din, dout) = match p {
+        "q" | "k" | "v" | "o" => (d, d),
+        "up" | "gate" => (d, f),
+        "down" => (f, d),
+        other => panic!("unknown projection '{other}'"),
+    };
+    match kind {
+        "a" => spec.n_layers * n * din * r,
+        "b" => spec.n_layers * n * r * dout,
+        other => panic!("unknown lora tensor kind '{other}'"),
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Size every buffer for a `(spec, n, bs, r)` bucket. `train` also
+    /// sizes the per-layer saves, the backward scratch and the gradient
+    /// accumulators. No-op when already sized for the same key.
+    pub(crate) fn ensure(&mut self, spec: &Spec, n: usize, bs: usize, r: usize, train: bool) {
+        let key = key_of(spec, n, bs, r);
+        if self.key != Some(key) {
+            self.key = Some(key);
+            self.has_layers = false;
+            let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+            let nm = n * bs * s;
+            self.x.resize(nm * d, 0.0);
+            self.h.resize(nm * d, 0.0);
+            self.xhatf.resize(nm * d, 0.0);
+            self.invf.resize(nm, 0.0);
+            self.logits.resize(nm * v, 0.0);
+            self.att.resize(2 * s, 0.0);
+            self.xhat.resize(nm * d, 0.0);
+            self.inv.resize(nm, 0.0);
+            self.mid.resize(nm * r, 0.0);
+            self.q.resize(nm * d, 0.0);
+            self.k.resize(nm * d, 0.0);
+            self.v.resize(nm * d, 0.0);
+            self.o.resize(nm * d, 0.0);
+            self.tmp.resize(nm * d, 0.0);
+            self.up.resize(nm * f, 0.0);
+            self.gate.resize(nm * f, 0.0);
+            self.act.resize(nm * f, 0.0);
+        }
+        if train && !self.has_layers {
+            self.has_layers = true;
+            let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+            let nm = n * bs * s;
+            let p_len = n * bs * spec.n_heads * s * s;
+            self.layers.resize_with(spec.n_layers, LayerSave::default);
+            for l in &mut self.layers {
+                l.ensure(nm, d, f, r, p_len);
+            }
+            self.dlogits.resize(nm * v, 0.0);
+            self.dxa.resize(nm * d, 0.0);
+            self.dxb.resize(nm * d, 0.0);
+            self.dact.resize(nm * f, 0.0);
+            self.dup.resize(nm * f, 0.0);
+            self.dgate.resize(nm * f, 0.0);
+            self.dh2.resize(nm * d, 0.0);
+            self.dmid.resize(nm * r, 0.0);
+            self.dq.resize(nm * d, 0.0);
+            self.dk.resize(nm * d, 0.0);
+            self.dv.resize(nm * d, 0.0);
+            self.dh.resize(nm * d, 0.0);
+            self.dp.resize(s, 0.0);
+            self.dln.resize(d, 0.0);
+            self.grads.resize_with(LORA_ORDER.len(), Vec::new);
+            for (g, name) in self.grads.iter_mut().zip(LORA_ORDER.iter()) {
+                g.resize(lora_len(spec, name, n, r), 0.0);
+            }
+        }
+    }
+
+    /// Total f32 elements currently held — memory accounting / tests.
+    pub fn elements(&self) -> usize {
+        let flat = [
+            &self.x,
+            &self.h,
+            &self.xhatf,
+            &self.invf,
+            &self.logits,
+            &self.att,
+            &self.xhat,
+            &self.inv,
+            &self.mid,
+            &self.q,
+            &self.k,
+            &self.v,
+            &self.o,
+            &self.tmp,
+            &self.up,
+            &self.gate,
+            &self.act,
+            &self.dlogits,
+            &self.dxa,
+            &self.dxb,
+            &self.dact,
+            &self.dup,
+            &self.dgate,
+            &self.dh2,
+            &self.dmid,
+            &self.dq,
+            &self.dk,
+            &self.dv,
+            &self.dh,
+            &self.dp,
+            &self.dln,
+        ];
+        let mut total: usize = flat.iter().map(|b| b.len()).sum();
+        total += self.grads.iter().map(|g| g.len()).sum::<usize>();
+        for l in &self.layers {
+            total += l.xhat1.len()
+                + l.inv1.len()
+                + l.h.len()
+                + l.mid_q.len()
+                + l.mid_k.len()
+                + l.mid_v.len()
+                + l.mid_o.len()
+                + l.mid_up.len()
+                + l.mid_gate.len()
+                + l.mid_down.len()
+                + l.q.len()
+                + l.k.len()
+                + l.v.len()
+                + l.p.len()
+                + l.o.len()
+                + l.xhat2.len()
+                + l.inv2.len()
+                + l.h2.len()
+                + l.up.len()
+                + l.gate.len()
+                + l.act.len();
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec { vocab: 16, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 12, seq: 6 }
+    }
+
+    #[test]
+    fn ensure_sizes_once_and_is_idempotent() {
+        let mut ws = Workspace::new();
+        ws.ensure(&spec(), 2, 1, 3, false);
+        let eval_elems = ws.elements();
+        assert!(eval_elems > 0);
+        assert!(ws.layers.is_empty(), "eval buckets do not pay for layer saves");
+
+        ws.ensure(&spec(), 2, 1, 3, true);
+        let train_elems = ws.elements();
+        assert!(train_elems > eval_elems);
+        assert_eq!(ws.layers.len(), 2);
+        assert_eq!(ws.grads.len(), LORA_ORDER.len());
+
+        // Same key again: nothing changes (steady state).
+        ws.ensure(&spec(), 2, 1, 3, true);
+        assert_eq!(ws.elements(), train_elems);
+    }
+
+    #[test]
+    fn rekey_resizes_for_new_bucket() {
+        let mut ws = Workspace::new();
+        ws.ensure(&spec(), 2, 1, 3, true);
+        let s = spec();
+        let nm = 2 * 1 * s.seq;
+        assert_eq!(ws.x.len(), nm * s.d_model);
+        ws.ensure(&spec(), 1, 1, 2, true);
+        let nm = s.seq;
+        assert_eq!(ws.x.len(), nm * s.d_model);
+        assert_eq!(ws.mid.len(), nm * 2);
+        assert_eq!(ws.grads[4].len(), lora_len(&s, "a_q", 1, 2)); // a_q
+    }
+
+    #[test]
+    fn lora_len_matches_state_shapes() {
+        let s = spec();
+        // a_q: (L, n, d, r); b_down: (L, n, r, d).
+        assert_eq!(lora_len(&s, "a_q", 3, 4), 2 * 3 * 8 * 4);
+        assert_eq!(lora_len(&s, "b_down", 3, 4), 2 * 3 * 4 * 8);
+        assert_eq!(lora_len(&s, "a_up", 1, 2), 2 * 1 * 8 * 2);
+        assert_eq!(lora_len(&s, "b_up", 1, 2), 2 * 1 * 2 * 12);
+    }
+}

@@ -6,8 +6,11 @@
 //! `scale` (α/r), `lr`, the rank mask (true rank ≤ padded bucket rank) and
 //! the loss mask (true batch ≤ padded bucket batch) — DESIGN.md §2.
 
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
+use crate::runtime::backend::Scratch;
 use crate::runtime::manifest::ModelInfo;
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{Executable, LORA_ORDER};
@@ -51,6 +54,12 @@ pub struct TrainState {
     pub v: Vec<HostTensor>,
     /// Step counter (f32 scalar, as the artifact expects).
     pub t: f32,
+    /// Step-persistent backend scratch: the reference backend's workspace
+    /// arena plus the recycled-output pool (zero steady-state allocation
+    /// on the train path). Derived state — `init`/`repack` start fresh, so
+    /// a re-bucketed job re-derives the arena at its new shape on the
+    /// first step.
+    scratch: Mutex<Scratch>,
 }
 
 impl TrainState {
@@ -81,7 +90,16 @@ impl TrainState {
             .iter()
             .map(|t| HostTensor::f32(t.shape.clone(), vec![0.0; t.len()]).unwrap())
             .collect();
-        TrainState { model: mi.clone(), n, r, lora, m, v, t: 0.0 }
+        TrainState {
+            model: mi.clone(),
+            n,
+            r,
+            lora,
+            m,
+            v,
+            t: 0.0,
+            scratch: Mutex::new(Scratch::new()),
+        }
     }
 
     /// Like [`TrainState::init`], but adapter slot `i` draws its `A` values
@@ -144,7 +162,16 @@ impl TrainState {
             .iter()
             .map(|t| HostTensor::f32(t.shape.clone(), vec![0.0; t.len()]).unwrap())
             .collect();
-        Ok(TrainState { model: mi.clone(), n, r, lora, m, v, t: 0.0 })
+        Ok(TrainState {
+            model: mi.clone(),
+            n,
+            r,
+            lora,
+            m,
+            v,
+            t: 0.0,
+            scratch: Mutex::new(Scratch::new()),
+        })
     }
 
     /// Re-pack surviving adapters into a fresh `(n_new, r_new)` bucket
@@ -206,7 +233,15 @@ impl TrainState {
             m: remap(&self.m)?,
             v: remap(&self.v)?,
             t: self.t,
+            scratch: Mutex::new(Scratch::new()),
         })
+    }
+
+    /// Drop the step-persistent scratch (arena + recycled buffers); the
+    /// next step re-derives it. Benches use this to reproduce the
+    /// pre-arena allocate-every-step behavior as a baseline.
+    pub fn reset_scratch(&self) {
+        self.scratch.lock().unwrap().reset();
     }
 
     /// Rank mask `(n, r_pad)`: adapter `i` keeps columns `< ranks[i]`.
@@ -229,32 +264,43 @@ impl TrainState {
     /// One training step. `base` is the frozen weight list (`BASE_ORDER`);
     /// `tokens`/`targets` are `(n, bs, seq)` i32; `loss_mask` `(n, bs, seq)`
     /// f32; `scale`/`lr` per-adapter `(n,)`. Returns per-adapter losses.
+    ///
+    /// Inputs are borrowed (no state deep-copies) and the run carries this
+    /// state's persistent [`Scratch`]; the previous step's parameter and
+    /// moment buffers are recycled into the scratch pool, where the
+    /// backend's AdamW takes its output buffers from — so steady-state
+    /// steps perform no allocation.
     #[allow(clippy::too_many_arguments)]
     pub fn step(
         &mut self,
         exe: &Executable,
         base: &[HostTensor],
-        tokens: HostTensor,
-        targets: HostTensor,
-        loss_mask: HostTensor,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        loss_mask: &HostTensor,
         scale: &[f32],
         lr: &[f32],
         rmask: &HostTensor,
     ) -> Result<Vec<f32>> {
-        let mut inputs: Vec<HostTensor> = Vec::with_capacity(12 + 3 * 14 + 7);
-        inputs.extend_from_slice(base);
-        inputs.extend(self.lora.iter().cloned());
-        inputs.extend(self.m.iter().cloned());
-        inputs.extend(self.v.iter().cloned());
-        inputs.push(HostTensor::scalar_f32(self.t));
-        inputs.push(tokens);
-        inputs.push(targets);
-        inputs.push(loss_mask);
-        inputs.push(HostTensor::f32(vec![self.n], scale.to_vec())?);
-        inputs.push(HostTensor::f32(vec![self.n], lr.to_vec())?);
-        inputs.push(rmask.clone());
-
-        let mut outs = exe.run(&inputs)?;
+        let t_t = HostTensor::scalar_f32(self.t);
+        let scale_t = HostTensor::f32(vec![self.n], scale.to_vec())?;
+        let lr_t = HostTensor::f32(vec![self.n], lr.to_vec())?;
+        let mut outs = {
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(12 + 3 * 14 + 7);
+            inputs.extend(base.iter());
+            inputs.extend(self.lora.iter());
+            inputs.extend(self.m.iter());
+            inputs.extend(self.v.iter());
+            inputs.push(&t_t);
+            inputs.push(tokens);
+            inputs.push(targets);
+            inputs.push(loss_mask);
+            inputs.push(&scale_t);
+            inputs.push(&lr_t);
+            inputs.push(rmask);
+            let mut scratch = self.scratch.lock().unwrap();
+            exe.run_scratch(&inputs, &mut scratch)?
+        };
         // Outputs: 14 lora, 14 m, 14 v, t, per_loss (train_output_names()).
         if outs.len() != 3 * LORA_ORDER.len() + 2 {
             bail!("train step returned {} outputs", outs.len());
@@ -263,30 +309,44 @@ impl TrainState {
         let t = outs.pop().unwrap();
         self.t = t.as_f32()?[0];
         let nl = LORA_ORDER.len();
-        self.v = outs.split_off(2 * nl);
-        self.m = outs.split_off(nl);
-        self.lora = outs;
+        let old_v = std::mem::replace(&mut self.v, outs.split_off(2 * nl));
+        let old_m = std::mem::replace(&mut self.m, outs.split_off(nl));
+        let old_l = std::mem::replace(&mut self.lora, outs);
+        // Close the allocation cycle: the spent state buffers become the
+        // next step's output buffers.
+        let mut scratch = self.scratch.lock().unwrap();
+        for spent in old_l.into_iter().chain(old_m).chain(old_v) {
+            if let Some(buf) = spent.into_f32_vec() {
+                scratch.recycle(buf);
+            }
+        }
         Ok(per.as_f32()?.to_vec())
     }
 
-    /// Per-adapter eval: returns `(loss, accuracy)` vectors.
+    /// Per-adapter eval: returns `(loss, accuracy)` vectors. Shares this
+    /// state's persistent [`Scratch`] (the eval forward reuses the same
+    /// workspace arena the train steps run in).
     pub fn eval(
         &self,
         exe: &Executable,
         base: &[HostTensor],
-        tokens: HostTensor,
-        targets: HostTensor,
-        loss_mask: HostTensor,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        loss_mask: &HostTensor,
         scale: &[f32],
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let mut inputs: Vec<HostTensor> = Vec::with_capacity(12 + 14 + 4);
-        inputs.extend_from_slice(base);
-        inputs.extend(self.lora.iter().cloned());
+        let scale_t = HostTensor::f32(vec![self.n], scale.to_vec())?;
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(12 + 14 + 4);
+        inputs.extend(base.iter());
+        inputs.extend(self.lora.iter());
         inputs.push(tokens);
         inputs.push(targets);
         inputs.push(loss_mask);
-        inputs.push(HostTensor::f32(vec![self.n], scale.to_vec())?);
-        let outs = exe.run(&inputs)?;
+        inputs.push(&scale_t);
+        let outs = {
+            let mut scratch = self.scratch.lock().unwrap();
+            exe.run_scratch(&inputs, &mut scratch)?
+        };
         if outs.len() != 2 {
             bail!("eval step returned {} outputs", outs.len());
         }

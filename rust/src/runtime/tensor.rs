@@ -118,6 +118,22 @@ impl HostTensor {
         }
     }
 
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match &mut self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+
+    /// Consume the tensor, handing back its f32 buffer (buffer recycling —
+    /// see `runtime::backend::Scratch`). `None` for i32 tensors.
+    pub fn into_f32_vec(self) -> Option<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Some(v),
+            TensorData::I32(_) => None,
+        }
+    }
+
     /// Convert to an `xla::Literal` (rank-0 scalars included).
     #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<Literal> {

@@ -225,6 +225,22 @@ pub fn run_pack_phased(
     let (mut scale, mut lrs, mut rks) = build_vectors(&slots, &active, bn);
     let mut rmask = state.rank_mask(&rks)?;
 
+    // Step-persistent batch tensors, refilled in place every step and
+    // re-derived (with the state's workspace arena) when a re-bucket
+    // changes the bucket shape. When an adapter finishes, its loss-mask
+    // rows are zeroed at the boundary (making its gradients exactly zero
+    // thereafter — same trajectory as a per-step-rebuilt mask); its stale
+    // token rows are then inert, and every other adapter's computation is
+    // independent of its pack neighbours (§3.2).
+    let batch_tensors = |bn: usize, bbs: usize| -> Result<(HostTensor, HostTensor, HostTensor)> {
+        Ok((
+            HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?,
+            HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?,
+            HostTensor::f32(vec![bn, bbs, seq], vec![0.0; bn * bbs * seq])?,
+        ))
+    };
+    let (mut tok_t, mut tgt_t, mut msk_t) = batch_tensors(bn, bbs)?;
+
     // Base-model quality (B = 0 ⇒ the adapters are identity).
     let (bl, ba) = eval_members(
         rt,
@@ -266,40 +282,34 @@ pub fn run_pack_phased(
             .min()
             .unwrap();
         for _ in 0..phase {
-            let mut tokens = vec![0i32; bn * bbs * seq];
-            let mut targets = vec![0i32; bn * bbs * seq];
-            let mut mask = vec![0.0f32; bn * bbs * seq];
             let mut real_tokens = 0usize;
             let mut alive = 0usize;
-            for s in 0..slots.len() {
-                if !active[s] {
-                    continue;
+            {
+                let tokens = tok_t.as_i32_mut()?;
+                let targets = tgt_t.as_i32_mut()?;
+                let mask = msk_t.as_f32_mut()?;
+                for s in 0..slots.len() {
+                    if !active[s] {
+                        continue;
+                    }
+                    let k = slots[s];
+                    let c = &configs[k];
+                    let tl = &rt.manifest.tokens;
+                    for b in 0..c.batch {
+                        let smp = tasks::gen(&c.task, tl, &mut data_rngs[k], seq, vocab)?;
+                        let off = (s * bbs + b) * seq;
+                        tokens[off..off + seq].copy_from_slice(&smp.tokens);
+                        targets[off..off + seq].copy_from_slice(&smp.targets);
+                        mask[off..off + seq].copy_from_slice(&smp.mask);
+                    }
+                    real_tokens += c.batch * seq;
+                    alive += 1;
                 }
-                let k = slots[s];
-                let c = &configs[k];
-                let tl = &rt.manifest.tokens;
-                for b in 0..c.batch {
-                    let smp = tasks::gen(&c.task, tl, &mut data_rngs[k], seq, vocab)?;
-                    let off = (s * bbs + b) * seq;
-                    tokens[off..off + seq].copy_from_slice(&smp.tokens);
-                    targets[off..off + seq].copy_from_slice(&smp.targets);
-                    mask[off..off + seq].copy_from_slice(&smp.mask);
-                }
-                real_tokens += c.batch * seq;
-                alive += 1;
             }
             padded_rows += bn * bbs;
             let s0 = Instant::now();
-            let per = state.step(
-                &train_exe,
-                &base,
-                HostTensor::i32(vec![bn, bbs, seq], tokens)?,
-                HostTensor::i32(vec![bn, bbs, seq], targets)?,
-                HostTensor::f32(vec![bn, bbs, seq], mask)?,
-                &scale,
-                &lrs,
-                &rmask,
-            )?;
+            let per =
+                state.step(&train_exe, &base, &tok_t, &tgt_t, &msk_t, &scale, &lrs, &rmask)?;
             profile.push((real_tokens as f64, alive as f64, s0.elapsed().as_secs_f64()));
             for (s, &k) in slots.iter().enumerate() {
                 if !active[s] {
@@ -358,6 +368,12 @@ pub fn run_pack_phased(
             on_event(PackPhaseEvent::AdapterFinished { slot: s, report: &rep, state: &state });
             reports[k] = Some(rep);
             active[s] = false;
+            // Freeze the slot in the reused batch tensors: zeroing its
+            // loss-mask rows makes its gradients exactly zero from here
+            // on, so its AdamW moments follow the same pure-decay
+            // trajectory as a per-step-rebuilt mask would give (its
+            // stale token rows are then irrelevant).
+            msk_t.as_f32_mut()?[s * bbs * seq..(s + 1) * bbs * seq].fill(0.0);
         }
         if survivors.is_empty() {
             break;
@@ -388,6 +404,9 @@ pub fn run_pack_phased(
                 (bn, br, bbs) = (nn, nr, nbs);
                 train_exe = rt.executable(&new_info.name)?;
                 eval_exe = rt.executable(&rt.manifest.eval_for(&new_info)?.name.clone())?;
+                // New bucket shape: fresh batch tensors (the repacked
+                // state's scratch re-derives its arena the same way).
+                (tok_t, tgt_t, msk_t) = batch_tensors(bn, bbs)?;
                 rebuckets += 1;
                 on_event(PackPhaseEvent::Rebucketed {
                     from,
@@ -457,33 +476,34 @@ fn eval_members(
     let mut loss = vec![0.0f32; bn];
     let mut acc = vec![0.0f32; bn];
     let batches = opts.eval_batches.max(1);
+    // One set of batch tensors for the whole eval, refilled per batch.
+    // Rows outside the written set (padding / masked-out slots) stay zero.
+    let mut tok_t = HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?;
+    let mut tgt_t = HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?;
+    let mut msk_t = HostTensor::f32(vec![bn, bbs, seq], vec![0.0; bn * bbs * seq])?;
     for _ in 0..batches {
-        let mut tokens = vec![0i32; bn * bbs * seq];
-        let mut targets = vec![0i32; bn * bbs * seq];
-        let mut mask = vec![0.0f32; bn * bbs * seq];
-        for (s, &k) in slots.iter().enumerate() {
-            if let Some(m) = only {
-                if !m[s] {
-                    continue;
+        {
+            let tokens = tok_t.as_i32_mut()?;
+            let targets = tgt_t.as_i32_mut()?;
+            let mask = msk_t.as_f32_mut()?;
+            for (s, &k) in slots.iter().enumerate() {
+                if let Some(m) = only {
+                    if !m[s] {
+                        continue;
+                    }
+                }
+                let c = &configs[k];
+                for b in 0..c.batch {
+                    let smp =
+                        tasks::gen(&c.task, &rt.manifest.tokens, &mut ergs[s], seq, vocab)?;
+                    let off = (s * bbs + b) * seq;
+                    tokens[off..off + seq].copy_from_slice(&smp.tokens);
+                    targets[off..off + seq].copy_from_slice(&smp.targets);
+                    mask[off..off + seq].copy_from_slice(&smp.mask);
                 }
             }
-            let c = &configs[k];
-            for b in 0..c.batch {
-                let smp = tasks::gen(&c.task, &rt.manifest.tokens, &mut ergs[s], seq, vocab)?;
-                let off = (s * bbs + b) * seq;
-                tokens[off..off + seq].copy_from_slice(&smp.tokens);
-                targets[off..off + seq].copy_from_slice(&smp.targets);
-                mask[off..off + seq].copy_from_slice(&smp.mask);
-            }
         }
-        let (l, a) = state.eval(
-            eval_exe,
-            base,
-            HostTensor::i32(vec![bn, bbs, seq], tokens)?,
-            HostTensor::i32(vec![bn, bbs, seq], targets)?,
-            HostTensor::f32(vec![bn, bbs, seq], mask)?,
-            scale,
-        )?;
+        let (l, a) = state.eval(eval_exe, base, &tok_t, &tgt_t, &msk_t, scale)?;
         for s in 0..bn {
             loss[s] += l[s];
             acc[s] += a[s];

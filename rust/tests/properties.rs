@@ -198,6 +198,84 @@ fn cost_model_monotone_in_pack() {
     );
 }
 
+/// The tiled GEMM kernels are bit-identical to the naive reference on
+/// randomized shapes — including non-tile-multiple m/k/n, zeroed rows/
+/// columns of A and the alpha = 0 fast path — and the row-parallel
+/// drivers are bit-identical at any worker count. This is the invariant
+/// that lets the reference backend switch kernel implementations and
+/// thread counts without perturbing any training trajectory.
+#[test]
+fn tiled_gemm_matches_naive_bitwise() {
+    use plora::runtime::reference::gemm;
+    check(
+        40,
+        59,
+        |rng| {
+            vec![
+                1 + rng.usize_below(24),  // m
+                1 + rng.usize_below(140), // k: crosses the 64-wide reduction panel
+                1 + rng.usize_below(300), // n: crosses the 16/256-wide column tiles
+                rng.usize_below(4),       // alpha selector (includes 0.0)
+                rng.usize_below(1 << 16), // data seed
+            ]
+        },
+        |v| {
+            if v.len() != 5 {
+                return Ok(()); // shrunk into an inconsistent shape; skip
+            }
+            let (m, k, n) = (v[0].max(1), v[1].max(1), v[2].max(1));
+            let alpha = [1.0f32, -0.6, 0.0, 2.5][v[3] % 4];
+            let mut rng = Rng::new(v[4] as u64 + 1);
+            let mut buf = |len: usize, zero_frac: f64| -> Vec<f32> {
+                (0..len)
+                    .map(|_| if rng.f64() < zero_frac { 0.0 } else { rng.normal() as f32 })
+                    .collect()
+            };
+            let a = buf(m * k, 0.3);
+            let b = buf(k * n, 0.0);
+            let bt = buf(n * k, 0.0);
+            let at = buf(k * m, 0.3);
+            let init = buf(m * n, 0.0);
+            let bits = |x: &[f32]| -> Vec<u32> { x.iter().map(|f| f.to_bits()).collect() };
+
+            let mut want = init.clone();
+            gemm::naive::mm_acc(&mut want, &a, &b, m, k, n, alpha);
+            let mut got = init.clone();
+            gemm::tiled::mm_acc(&mut got, &a, &b, m, k, n, alpha);
+            if bits(&want) != bits(&got) {
+                return Err(format!("mm_acc tiled != naive at {m}x{k}x{n} alpha {alpha}"));
+            }
+            let mut par = init.clone();
+            gemm::mm_acc_par(&mut par, &a, &b, m, k, n, alpha, 4);
+            if bits(&got) != bits(&par) {
+                return Err(format!("mm_acc_par(4) != serial at {m}x{k}x{n}"));
+            }
+
+            let mut want = init.clone();
+            gemm::naive::mm_nt_acc(&mut want, &a, &bt, m, k, n, alpha);
+            let mut got = init.clone();
+            gemm::tiled::mm_nt_acc(&mut got, &a, &bt, m, k, n, alpha);
+            if bits(&want) != bits(&got) {
+                return Err(format!("mm_nt_acc tiled != naive at {m}x{k}x{n} alpha {alpha}"));
+            }
+            let mut par = init.clone();
+            gemm::mm_nt_acc_par(&mut par, &a, &bt, m, k, n, alpha, 3);
+            if bits(&got) != bits(&par) {
+                return Err(format!("mm_nt_acc_par(3) != serial at {m}x{k}x{n}"));
+            }
+
+            let mut want = init.clone();
+            gemm::naive::mm_tn_acc(&mut want, &at, &b, k, m, n, alpha);
+            let mut got = init.clone();
+            gemm::tiled::mm_tn_acc(&mut got, &at, &b, k, m, n, alpha);
+            if bits(&want) != bits(&got) {
+                return Err(format!("mm_tn_acc tiled != naive at {m}x{k}x{n} alpha {alpha}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Rank masking in the padded state is exactly the identity on true ranks:
 /// random (n, r_pad, ranks) always produce a 0/1 mask with row sums = ranks.
 #[test]

@@ -107,23 +107,14 @@ fn zero_lr_train_step_is_pure_loss_evaluation() {
     let (tokens, targets, mask) = (pb.tokens, pb.targets, pb.mask);
     let rmask = state.rank_mask(&[8]).unwrap();
     let per = state
-        .step(
-            &train_exe,
-            &base,
-            tokens.clone(),
-            targets.clone(),
-            mask.clone(),
-            &[1.0],
-            &[0.0],
-            &rmask,
-        )
+        .step(&train_exe, &base, &tokens, &targets, &mask, &[1.0], &[0.0], &rmask)
         .unwrap();
     for (t, b) in state.lora.iter().zip(&before) {
         assert_eq!(t.as_f32().unwrap(), &b[..], "lr=0 must not move parameters");
     }
     assert_eq!(state.t, 1.0, "step counter advances");
 
-    let (loss, acc) = state.eval(&eval_exe, &base, tokens, targets, mask, &[1.0]).unwrap();
+    let (loss, acc) = state.eval(&eval_exe, &base, &tokens, &targets, &mask, &[1.0]).unwrap();
     assert!((per[0] - loss[0]).abs() < 1e-6, "train per-loss {} vs eval loss {}", per[0], loss[0]);
     assert!((0.0..=1.0).contains(&acc[0]));
     assert!(per[0].is_finite() && per[0] > 0.0);
