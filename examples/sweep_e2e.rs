@@ -46,6 +46,7 @@ fn main() -> Result<()> {
         eval_batches: 4,
         seed: 23,
         gpus: 2,
+        ..Default::default()
     };
 
     let mut all = vec![];

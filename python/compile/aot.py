@@ -104,7 +104,7 @@ def train_signature(spec: M.ModelSpec, n: int, r: int, bs: int):
     for k in M.LORA_ORDER:
         sig.append((f"v_{k}", _sds(lora_shapes[k])))
     sig += [
-        ("t", _sds(())),
+        ("t", _sds((n,))),
         ("tokens", _sds((n, bs, spec.seq), jnp.int32)),
         ("targets", _sds((n, bs, spec.seq), jnp.int32)),
         ("loss_mask", _sds((n, bs, spec.seq))),

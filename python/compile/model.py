@@ -227,7 +227,10 @@ def train_step(spec, base, lora, m, v, t, tokens, targets, loss_mask, scale, lr,
 
     ``lr`` (n,) per-adapter learning rate; ``rmask`` (n, r_pad) keeps padded
     rank columns exactly zero (belt-and-braces on top of the zero-grad
-    property). Returns (lora', m', v', t+1, per_adapter_loss).
+    property). ``t`` (n,) is the per-adapter step counter: each adapter's
+    bias correction runs on its own clock, so one admitted into a running
+    pack mid-job starts at its own step 1 (identical to a solo run).
+    Returns (lora', m', v', t+1, per_adapter_loss).
     """
     (_, per), grads = jax.value_and_grad(
         lambda lp: packed_loss(spec, base, lp, scale, tokens, targets, loss_mask),
@@ -235,8 +238,8 @@ def train_step(spec, base, lora, m, v, t, tokens, targets, loss_mask, scale, lr,
     )(lora)
 
     t = t + 1.0
-    bc1 = 1.0 - ADAM_B1 ** t
-    bc2 = 1.0 - ADAM_B2 ** t
+    bc1 = (1.0 - ADAM_B1 ** t)[None, :, None, None]
+    bc2 = (1.0 - ADAM_B2 ** t)[None, :, None, None]
 
     new_lora, new_m, new_v = {}, {}, {}
     for key in sorted(lora):

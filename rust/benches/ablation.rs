@@ -65,7 +65,7 @@ fn main() {
     let sim = Simulator { cm: cm.clone(), budget, gpus };
     let run_queue = |plan: &plora::planner::Plan, noise: f64, seed: u64| {
         let q: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
-        sim.run_queue(&q, &SimOptions { noise, seed }).makespan
+        sim.run_queue(&q, &SimOptions { noise, seed, ..Default::default() }).makespan
     };
     let mut planner = JobPlanner::new(cm.clone(), gpus);
     planner.budget = budget;

@@ -1,10 +1,13 @@
-//! Session orchestration benchmark: a fixed 8-job queue on the reference
-//! backend, measured end-to-end through `Session::submit`/`drain` — FIFO
-//! admission, concurrent packed jobs, adapter-completion re-bucketing.
+//! Session orchestration benchmark: a fixed 8-job queue plus a
+//! skewed-arrival scenario on the reference backend, measured end-to-end
+//! through `Session::submit`/`drain` — policy dispatch, concurrent packed
+//! jobs, adapter-completion re-bucketing, elastic mid-job admission.
 //!
-//! Emits `target/BENCH_session.json` (makespan + throughput + event
-//! counts) so the repo's perf trajectory is recorded run over run, and
-//! appends to the shared `target/plora-bench.jsonl` like every bench.
+//! Emits `target/BENCH_session.json` (makespans + throughput + event
+//! counts: rebuckets, admissions, preemptions, and the elastic-vs-FIFO
+//! makespan ratio CI enforces) so the repo's perf trajectory is recorded
+//! run over run, and appends to the shared `target/plora-bench.jsonl`
+//! like every bench.
 //!
 //! Run: `cargo bench --bench session`
 
@@ -16,7 +19,7 @@ use plora::config::{pool, LoraConfig};
 use plora::costmodel::{ExecMode, Pack, TrainBudget};
 use plora::planner::PlannedJob;
 use plora::runtime::Runtime;
-use plora::session::{Session, SessionReport};
+use plora::session::{Policy, Session, SessionReport};
 use plora::train::TrainOptions;
 use plora::util::json::Json;
 
@@ -43,17 +46,58 @@ fn queue() -> Vec<PlannedJob> {
     jobs
 }
 
-fn run_once(rt: &Arc<Runtime>, gpus: usize, rebucket: bool) -> SessionReport {
-    let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, gpus), "nano");
-    session.options = TrainOptions {
-        budget: TrainBudget { dataset: 24, epochs: 1 },
+/// The skewed-arrival scenario (the acceptance gate): one mixed-batch
+/// pack holds the device while three short bs2 singles queue behind it.
+/// FIFO/no-rebucket runs each single on a padded `(2, 8, 2)` bucket;
+/// the elastic session admits one into the pack's freed slot at each
+/// completion boundary instead.
+fn skewed_queue() -> Vec<PlannedJob> {
+    let mut jobs = vec![PlannedJob {
+        id: 0,
+        pack: Pack::new(vec![cfg(0, "modadd", 8, 1), cfg(1, "parity", 8, 2)]),
+        d: 1,
+        mode: ExecMode::Packed,
+    }];
+    for (i, task) in ["copy", "needle", "parity"].iter().enumerate() {
+        jobs.push(PlannedJob {
+            id: 1 + i,
+            pack: Pack::new(vec![cfg(2 + i, task, 8, 2)]),
+            d: 1,
+            mode: ExecMode::Packed,
+        });
+    }
+    jobs
+}
+
+fn options(dataset: usize) -> TrainOptions {
+    TrainOptions {
+        budget: TrainBudget { dataset, epochs: 1 },
         eval_batches: 2,
         seed: 11,
         log_every: 0,
-    };
+    }
+}
+
+fn run_session(
+    rt: &Arc<Runtime>,
+    jobs: Vec<PlannedJob>,
+    gpus: usize,
+    dataset: usize,
+    policy: Policy,
+    elastic: bool,
+    rebucket: bool,
+) -> SessionReport {
+    let mut session =
+        Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, gpus), "nano");
+    session.options = options(dataset);
     session.rebucket = rebucket;
-    for job in queue() {
-        session.submit_planned(job).expect("submit");
+    session.set_policy(policy);
+    session.set_elastic(elastic);
+    // Priorities descend in submit order so priority policies preserve
+    // the scenario's queue shape (the big pack outranks the singles).
+    let njobs = jobs.len() as i32;
+    for (i, job) in jobs.into_iter().enumerate() {
+        session.submit_planned_at(job, njobs - i as i32).expect("submit");
     }
     session.drain().expect("drain")
 }
@@ -67,13 +111,24 @@ fn main() -> anyhow::Result<()> {
 
     let mut last: Option<SessionReport> = None;
     let s = b.measure("queue8_rebucket", || {
-        last = Some(run_once(&rt, gpus, true));
+        last = Some(run_session(&rt, queue(), gpus, 24, Policy::Fifo, false, true));
     });
     let report = last.take().expect("at least one measured run");
     let s_off = b.measure("queue8_norebucket", || {
-        last = Some(run_once(&rt, gpus, false));
+        last = Some(run_session(&rt, queue(), gpus, 24, Policy::Fifo, false, false));
     });
     let report_off = last.take().expect("at least one measured run");
+
+    // The skewed-arrival acceptance scenario: FIFO/no-rebucket baseline
+    // vs the elastic session (priority policy + admission + retarget).
+    let s_fifo = b.measure("skew_fifo_norebucket", || {
+        last = Some(run_session(&rt, skewed_queue(), 1, 32, Policy::Fifo, false, false));
+    });
+    let skew_fifo = last.take().expect("at least one measured run");
+    let s_el = b.measure("skew_priority_elastic", || {
+        last = Some(run_session(&rt, skewed_queue(), 1, 32, Policy::Priority, true, true));
+    });
+    let skew_elastic = last.take().expect("at least one measured run");
     b.finish()?;
 
     let rank_units: usize = report
@@ -82,9 +137,6 @@ fn main() -> anyhow::Result<()> {
         .flat_map(|o| &o.report.adapters)
         .map(|a| a.config.rank)
         .sum();
-    let padded_rows: usize = report.outcomes.iter().map(|o| o.report.padded_rows).sum();
-    let padded_rows_off: usize =
-        report_off.outcomes.iter().map(|o| o.report.padded_rows).sum();
     let rec = Json::obj(vec![
         ("bench", Json::str("session")),
         ("jobs", Json::num(report.outcomes.len() as f64)),
@@ -96,9 +148,24 @@ fn main() -> anyhow::Result<()> {
         ("mean_wall_norebucket_s", Json::num(s_off.mean)),
         ("rank_units_per_s", Json::num(rank_units as f64 / report.makespan.max(1e-9))),
         ("rebucket_events", Json::num(report.rebuckets() as f64)),
-        ("padded_rows", Json::num(padded_rows as f64)),
-        ("padded_rows_norebucket", Json::num(padded_rows_off as f64)),
+        ("padded_rows", Json::num(report.padded_rows() as f64)),
+        ("padded_rows_norebucket", Json::num(report_off.padded_rows() as f64)),
         ("events", Json::num(report.events.len() as f64)),
+        ("switch_cost_s", Json::num(report.switch_cost)),
+        // Skewed-arrival acceptance numbers (CI gates on these).
+        ("skew_makespan_fifo_s", Json::num(skew_fifo.makespan)),
+        ("skew_makespan_elastic_s", Json::num(skew_elastic.makespan)),
+        ("skew_mean_wall_fifo_s", Json::num(s_fifo.mean)),
+        ("skew_mean_wall_elastic_s", Json::num(s_el.mean)),
+        (
+            "skew_elastic_vs_fifo",
+            Json::num(skew_elastic.makespan / skew_fifo.makespan.max(1e-9)),
+        ),
+        ("skew_padded_rows_fifo", Json::num(skew_fifo.padded_rows() as f64)),
+        ("skew_padded_rows_elastic", Json::num(skew_elastic.padded_rows() as f64)),
+        ("skew_admissions", Json::num(skew_elastic.admissions() as f64)),
+        ("skew_rebuckets", Json::num(skew_elastic.rebuckets() as f64)),
+        ("skew_preemptions", Json::num(skew_elastic.preemptions() as f64)),
     ]);
     let mut out = String::new();
     rec.write(&mut out);
@@ -113,8 +180,19 @@ fn main() -> anyhow::Result<()> {
         report.makespan,
         report_off.makespan,
         report.rebuckets(),
-        padded_rows_off,
-        padded_rows,
+        report_off.padded_rows(),
+        report.padded_rows(),
+    );
+    println!(
+        "skewed arrival: elastic {:.2}s vs fifo {:.2}s ({:.0}% work: {} -> {} rows, \
+         {} admissions, {} rebuckets)",
+        skew_elastic.makespan,
+        skew_fifo.makespan,
+        100.0 * skew_elastic.padded_rows() as f64 / skew_fifo.padded_rows().max(1) as f64,
+        skew_fifo.padded_rows(),
+        skew_elastic.padded_rows(),
+        skew_elastic.admissions(),
+        skew_elastic.rebuckets(),
     );
     println!("wrote rust/target/BENCH_session.json");
     Ok(())

@@ -16,7 +16,7 @@ pub mod memory;
 pub mod throughput;
 
 pub use memory::MemoryModel;
-pub use throughput::{CostModel, ExecMode, JobPhase};
+pub use throughput::{CostModel, ExecMode, JobPhase, SwitchCost};
 
 use crate::config::LoraConfig;
 
@@ -55,7 +55,7 @@ impl Pack {
 /// Fine-tuning length of one configuration: epochs over a fixed-size task
 /// dataset; small batches take proportionally more steps (paper §7:
 /// each configuration fine-tunes the same data budget).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TrainBudget {
     pub dataset: usize,
     pub epochs: usize,

@@ -77,6 +77,15 @@ pub struct Calib {
     /// LoRA kernels per adapter per step: layers × 7 projections ×
     /// (fwd + 4 bwd cases) + optimizer updates.
     pub kernels_per_adapter_per_layer: f64,
+    /// Wall cost of one bucket switch (checkpoint the pack state, repack
+    /// params + moments onto the new bucket, re-derive the workspace arena
+    /// and batch tensors, swap executables). The elastic planner
+    /// (`planner::rebalance::retarget_bucket`) only moves a running pack
+    /// when the modeled phase-time saving beats this term. Defaults to 0
+    /// (switches modeled free — the pre-elastic behavior); live sessions
+    /// calibrate it from measured switch times ([`SwitchCost`],
+    /// `Event::CalibUpdated`).
+    pub bucket_switch_cost: f64,
 }
 
 impl Default for Calib {
@@ -94,7 +103,50 @@ impl Default for Calib {
             ref_rank: 32.0,
             lora_tp_penalty: 0.8,
             kernels_per_adapter_per_layer: 7.0 * 5.0 + 4.0,
+            bucket_switch_cost: 0.0,
         }
+    }
+}
+
+/// Shared live estimator of the bucket-switch overhead: the phased driver
+/// records the measured wall time of every switch it performs (checkpoint
+/// + repack + arena re-derive), and every retarget decision reads the
+/// running mean. Clonable handle — one estimator is shared by all jobs of
+/// a session, so early jobs calibrate the term for later ones (§4
+/// "profiling data from the first iterations", applied to orchestration).
+#[derive(Clone, Default)]
+pub struct SwitchCost {
+    inner: std::sync::Arc<std::sync::Mutex<(f64, usize)>>,
+    /// Estimate returned before any switch has been measured.
+    pub default: f64,
+}
+
+impl SwitchCost {
+    pub fn new(default: f64) -> SwitchCost {
+        SwitchCost { inner: Default::default(), default }
+    }
+
+    /// Record one measured switch wall time.
+    pub fn record(&self, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.0 += secs;
+        g.1 += 1;
+    }
+
+    /// Running mean of the measured switch times (the `default` until the
+    /// first sample arrives).
+    pub fn estimate(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        if g.1 == 0 {
+            self.default
+        } else {
+            g.0 / g.1 as f64
+        }
+    }
+
+    /// Number of switches measured so far.
+    pub fn samples(&self) -> usize {
+        self.inner.lock().unwrap().1
     }
 }
 
@@ -238,7 +290,18 @@ impl CostModel {
     /// Adapter-side time of one step under `mode` on `d` TP devices
     /// (launch-bound; §5.1/§5.2 — see [`Calib::lora_tp_penalty`]).
     pub fn lora_step_time(&self, pack: &Pack, d: usize, mode: ExecMode) -> f64 {
-        if pack.n() == 0 {
+        let r_unit = if self.charge_padding {
+            (pack.n() * pack.r_pad()) as f64
+        } else {
+            pack.rank_sum() as f64
+        };
+        self.lora_time_units(pack.n(), r_unit, d, mode)
+    }
+
+    /// Core of [`CostModel::lora_step_time`]: `n` adapters carrying
+    /// `r_unit` rank-units of LoRA work.
+    fn lora_time_units(&self, n: usize, r_unit: f64, d: usize, mode: ExecMode) -> f64 {
+        if n == 0 {
             return 0.0;
         }
         let hops = (d.max(1) as f64).log2();
@@ -250,19 +313,33 @@ impl CostModel {
             * (1.0 + self.calib.lora_tp_penalty).powf(hops);
         match mode {
             // Every adapter pays its own full set of launches.
-            ExecMode::Sequential => pack.n() as f64 * k,
+            ExecMode::Sequential => n as f64 * k,
             // One fused launch set; extra adapters cost only marginal FLOPs,
             // scaled by the rank they add (FLOP linear in rank, §2.1).
             ExecMode::Packed => {
-                let r_unit = if self.charge_padding {
-                    (pack.n() * pack.r_pad()) as f64
-                } else {
-                    pack.rank_sum() as f64
-                };
                 let extra = (r_unit / self.calib.ref_rank - 1.0).max(0.0);
                 k * (1.0 + self.calib.packed_marginal * extra)
             }
         }
+    }
+
+    /// One fine-tuning step of `pack` *as executed on a concrete
+    /// `(n, r, bs)` bucket*: the full padded bucket shape is charged
+    /// regardless of [`CostModel::charge_padding`] — a static-shape
+    /// artifact computes every padded row and rank column it was compiled
+    /// for. This is the score `planner::rebalance::retarget_bucket`
+    /// compares candidate buckets with.
+    pub fn bucket_step_time(
+        &self,
+        bucket: (usize, usize, usize),
+        d: usize,
+        mode: ExecMode,
+    ) -> f64 {
+        let (bn, br, bbs) = bucket;
+        let samples = (bn * bbs) as f64;
+        self.base_step_time(samples, d)
+            + self.lora_time_units(bn, (bn * br) as f64, d, mode)
+            + self.calib.step_overhead
     }
 
     /// One fine-tuning step of `pack` on `d` devices under `mode`.
@@ -585,6 +662,32 @@ mod tests {
         m.charge_padding = true;
         let t_pad = m.step_time(&pack, 1, ExecMode::Packed);
         assert!(t_pad >= t_true);
+    }
+
+    /// Bucket-shape-charged step time grows monotonically with every
+    /// bucket dimension (a bigger artifact always computes more), and the
+    /// live switch-cost estimator averages its samples. Uses the
+    /// flop-bound cpu-sim profile — on the weight-IO-bound A100 profile
+    /// small-batch base time is sample-independent by design (§3.1).
+    #[test]
+    fn bucket_step_time_monotone_and_switch_cost_averages() {
+        use crate::config::pool::CPU_SIM;
+        let m = CostModel::new(geom("qwen2.5-7b").unwrap(), &CPU_SIM);
+        let t = |b| m.bucket_step_time(b, 1, ExecMode::Packed);
+        assert!(t((1, 8, 1)) < t((2, 8, 1)));
+        assert!(t((2, 8, 1)) < t((2, 8, 2)));
+        assert!(t((2, 8, 2)) <= t((2, 32, 2)));
+        let sc = SwitchCost::new(0.5);
+        assert_eq!(sc.estimate(), 0.5, "default before any sample");
+        assert_eq!(sc.samples(), 0);
+        sc.record(1.0);
+        sc.record(3.0);
+        assert_eq!(sc.samples(), 2);
+        assert!((sc.estimate() - 2.0).abs() < 1e-12);
+        // Clones share the underlying estimator.
+        let other = sc.clone();
+        other.record(2.0);
+        assert_eq!(sc.samples(), 3);
     }
 
     /// `fit_live` recovers planted coefficients from noiseless samples.

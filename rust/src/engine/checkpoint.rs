@@ -9,8 +9,8 @@ use anyhow::{Context, Result};
 
 use crate::planner::PlannedJob;
 use crate::runtime::tensor_file;
-use crate::runtime::{HostTensor, Runtime, TrainState};
-use crate::train::{AdapterReport, JobReport};
+use crate::runtime::{HostTensor, MemberState, Runtime, TrainState, LORA_ORDER};
+use crate::train::{AdapterReport, JobReport, MemberResume};
 use crate::util::json::Json;
 
 /// Directory of finished-adapter checkpoints.
@@ -81,6 +81,108 @@ impl CheckpointPool {
             tensor_file::write_tensors(&bin, &tensors)?;
         }
         Ok(())
+    }
+
+    fn resume_paths(&self, model: &str, config_id: usize) -> (PathBuf, PathBuf) {
+        let stem = self.dir.join(format!("{model}_cfg{config_id}_resume"));
+        (stem.with_extension("bin"), stem.with_extension("json"))
+    }
+
+    /// Save a **preemption checkpoint**: the adapter's full training state
+    /// (params + AdamW moments at true rank, per-adapter step counter) and
+    /// the driver-side resume bookkeeping (steps done, base metrics, loss
+    /// curve so far), so a preempted adapter can re-enter a pack — any
+    /// pack — bit-identically (§4, DESIGN.md §10). Metrics not yet
+    /// measured (a job preempted before its first step has no
+    /// `first_loss`) are stored as JSON `null`, never `NaN`.
+    pub fn save_resume(&self, model: &str, config_id: usize, r: &MemberResume) -> Result<()> {
+        let (bin, meta) = self.resume_paths(model, config_id);
+        let mut tensors: Vec<(String, HostTensor)> = vec![];
+        for (name, t) in LORA_ORDER.iter().zip(&r.state.lora) {
+            tensors.push((name.to_string(), t.clone()));
+        }
+        for (name, t) in LORA_ORDER.iter().zip(&r.state.m) {
+            tensors.push((format!("m_{name}"), t.clone()));
+        }
+        for (name, t) in LORA_ORDER.iter().zip(&r.state.v) {
+            tensors.push((format!("v_{name}"), t.clone()));
+        }
+        // The loss-curve samples ride as a (len, 2) tensor: (step, loss).
+        let mut curve = Vec::with_capacity(r.curve.len() * 2);
+        for &(step, loss) in &r.curve {
+            curve.push(step as f32);
+            curve.push(loss);
+        }
+        tensors.push(("curve".to_string(), HostTensor::f32(vec![r.curve.len(), 2], curve)?));
+        tensor_file::write_tensors(&bin, &tensors)?;
+        let opt = |x: f32| if x.is_finite() { Json::num(x as f64) } else { Json::Null };
+        let j = Json::obj(vec![
+            ("model", Json::str(model)),
+            ("config_id", Json::num(config_id as f64)),
+            ("rank", Json::num(r.state.rank as f64)),
+            ("t", Json::num(r.state.t as f64)),
+            ("steps_done", Json::num(r.steps_done as f64)),
+            ("first_loss", opt(r.first_loss)),
+            ("base_loss", opt(r.base_loss)),
+            ("base_acc", opt(r.base_acc)),
+        ]);
+        let mut s = String::new();
+        j.write(&mut s);
+        std::fs::write(&meta, s).with_context(|| format!("write {}", meta.display()))
+    }
+
+    /// Load a preemption checkpoint written by
+    /// [`CheckpointPool::save_resume`].
+    pub fn load_resume(&self, model: &str, config_id: usize) -> Result<MemberResume> {
+        let (bin, meta) = self.resume_paths(model, config_id);
+        let mut map = tensor_file::read_tensors(&bin)?;
+        let curve_t = map.remove("curve");
+        let mut take = |prefix: &str| -> Result<Vec<HostTensor>> {
+            LORA_ORDER
+                .iter()
+                .map(|name| {
+                    map.remove(&format!("{prefix}{name}")).ok_or_else(|| {
+                        anyhow::anyhow!("{}: missing tensor {prefix}{name}", bin.display())
+                    })
+                })
+                .collect()
+        };
+        let lora = take("")?;
+        let m = take("m_")?;
+        let v = take("v_")?;
+        let mut curve = vec![];
+        if let Some(t) = curve_t {
+            let flat = t.as_f32()?;
+            for pair in flat.chunks(2) {
+                curve.push((pair[0] as usize, pair[1]));
+            }
+        }
+        let s = std::fs::read_to_string(&meta)?;
+        let j = Json::parse(&s).map_err(|e| anyhow::anyhow!("{}: {e:?}", meta.display()))?;
+        let num = |k: &str| -> Result<f64> {
+            j.field(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{}: '{k}' is not a number", meta.display()))
+        };
+        // Metrics stored as null (not yet measured) come back as NaN — the
+        // driver's "unset" sentinel.
+        let opt = |k: &str| -> f32 {
+            j.field(k).ok().and_then(|f| f.as_f64()).map(|x| x as f32).unwrap_or(f32::NAN)
+        };
+        Ok(MemberResume {
+            state: MemberState {
+                rank: num("rank")? as usize,
+                lora,
+                m,
+                v,
+                t: num("t")? as f32,
+            },
+            steps_done: num("steps_done")? as usize,
+            first_loss: opt("first_loss"),
+            base_loss: opt("base_loss"),
+            base_acc: opt("base_acc"),
+            curve,
+        })
     }
 
     /// Load a saved adapter's tensors.

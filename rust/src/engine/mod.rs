@@ -18,7 +18,7 @@ use anyhow::Result;
 use crate::cluster::ResourceMonitor;
 use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
-use crate::session::Session;
+use crate::session::{Policy, Session};
 use crate::train::TrainOptions;
 
 /// Engine run summary.
@@ -46,6 +46,11 @@ pub struct Engine {
     /// Preemptive re-bucketing at adapter-completion boundaries (on by
     /// default — the §4 behavior the cost model's `job_time` assumes).
     pub rebucket: bool,
+    /// Queue policy the backing session dispatches under (default FIFO —
+    /// the historical engine semantics).
+    pub policy: Policy,
+    /// Elastic mid-job admission of queued adapters (default off).
+    pub elastic: bool,
 }
 
 impl Engine {
@@ -56,19 +61,23 @@ impl Engine {
             checkpoints: None,
             options: TrainOptions::default(),
             rebucket: true,
+            policy: Policy::Fifo,
+            elastic: false,
         }
     }
 
     /// Run a queue of planned jobs to completion: submit everything to a
-    /// fresh session, drain, and repackage the report. FIFO with blocking
-    /// device acquisition — "PLoRA will deploy multiple fine-tuning jobs
-    /// concurrently, as long as the hardware pool has sufficient
-    /// resources" (§4).
+    /// fresh session, drain, and repackage the report. Dispatch follows
+    /// [`Engine::policy`] with device backpressure — "PLoRA will deploy
+    /// multiple fine-tuning jobs concurrently, as long as the hardware
+    /// pool has sufficient resources" (§4).
     pub fn run(&self, model: &str, queue: &[PlannedJob]) -> Result<EngineReport> {
         let mut session = Session::new(self.runtime.clone(), self.monitor.clone(), model);
         session.options = self.options.clone();
         session.checkpoints = self.checkpoints.clone();
         session.rebucket = self.rebucket;
+        session.set_policy(self.policy);
+        session.set_elastic(self.elastic);
         for job in queue {
             session.submit_planned(job.clone())?;
         }

@@ -26,7 +26,7 @@ use plora::metrics::{fmt_dur, fmt_x, Table};
 use plora::planner::{max_gpu_plan, min_gpu_plan, sequential_plora_plan, JobPlanner};
 use plora::runtime::{HostTensor, Runtime};
 use plora::search;
-use plora::session::{Event, Session};
+use plora::session::{Event, Policy, Session};
 use plora::sim::{SimOptions, Simulator};
 use plora::train::{run_pack, TrainOptions};
 use plora::util::cli::Args;
@@ -37,10 +37,11 @@ plora — efficient LoRA hyperparameter tuning (PLoRA reproduction)
 USAGE: plora <subcommand> [flags]
 
   plan     --model <geom> --gpus N [--configs N] [--budget N]
-  sim      --model <geom> --gpus N [--a10] [--qlora] [--noise S]
+  sim      --model <geom> --gpus N [--a10] [--qlora] [--noise S] [--policy P]
   train    --model <tinylm> --task T [--rank R] [--lr X] [--batch B] [--steps N]
   sweep    --model <tinylm> --configs N [--gpus N] [--steps N] [--ckpt DIR]
   serve    --model <tinylm> [--configs N] [--gpus N] [--steps N] [--no-rebucket]
+           [--policy fifo|priority|preempt] [--elastic]
   quality  --model <tinylm> [--steps N] [--per-task N]
   kernels  [--ns 1,2,8,32] [--geoms attn,mlp] [--iters N]
   calib    --model <tinylm> [--steps N]
@@ -154,7 +155,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let b = budget(args)?;
     let noise = args.f64("noise", 0.0)?;
     let sim = Simulator { cm: cm.clone(), budget: b, gpus };
-    let opts = SimOptions { noise, seed: args.usize("seed", 42)? as u64 };
+    let opts = SimOptions {
+        noise,
+        seed: args.usize("seed", 42)? as u64,
+        policy: args
+            .get("policy")
+            .and_then(Policy::parse)
+            .unwrap_or(Policy::Fifo),
+    };
 
     let run = |plan: &plora::planner::Plan| {
         let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
@@ -328,19 +336,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     session.options =
         TrainOptions { budget: planner.budget, eval_batches: 2, seed: 17, log_every: 0 };
     session.rebucket = !args.flag("no-rebucket");
+    let policy = args.get("policy").and_then(Policy::parse).unwrap_or(Policy::Fifo);
+    session.set_policy(policy);
+    session.set_elastic(args.flag("elastic"));
     if let Some(dir) = args.get("ckpt") {
         session.checkpoints = Some(CheckpointPool::new(&PathBuf::from(dir), rt.clone())?);
     }
     let rx = session.subscribe();
     println!(
-        "serve: {} configs in {} jobs on {gpus} slots of {model} (rebucket {})",
+        "serve: {} configs in {} jobs on {gpus} slots of {model} (rebucket {}, {policy:?}{})",
         configs.len(),
         plan.jobs.len(),
-        if session.rebucket { "on" } else { "off" }
+        if session.rebucket { "on" } else { "off" },
+        if session.elastic() { ", elastic" } else { "" }
     );
+    // Priority policies: stagger priorities by submit order so the serve
+    // renderer demonstrates reordering (later jobs outrank earlier ones).
     let mut pending = 0usize;
-    for j in &plan.jobs {
-        session.submit_planned(j.job.clone())?;
+    for (i, j) in plan.jobs.iter().enumerate() {
+        let prio = if policy == Policy::Fifo { 0 } else { i as i32 };
+        session.submit_planned_at(j.job.clone(), prio)?;
         pending += 1;
     }
     while pending > 0 {
@@ -353,12 +368,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let report = session.drain()?;
     let (a, b, c) = report.calib_fit;
     println!(
-        "\ndone: makespan {}  jobs {}  adapters {}  rebuckets {}  calib t = \
-         {a:.4} + {b:.2e}*tokens + {c:.2e}*n",
+        "\ndone: makespan {}  jobs {}  adapters {}  rebuckets {}  admissions {}  \
+         preemptions {}  switch-cost {:.4}s  calib t = {a:.4} + {b:.2e}*tokens + {c:.2e}*n",
         fmt_dur(report.makespan),
         report.outcomes.len(),
         report.total_adapters(),
         report.rebuckets(),
+        report.admissions(),
+        report.preemptions(),
+        report.switch_cost,
     );
     Ok(())
 }
@@ -376,21 +394,34 @@ fn render_event(ev: &Event) {
                  steps: eval loss {eval_loss:.3}, acc {eval_acc:.3}"
             );
         }
+        Event::AdapterAdmitted { job, adapter, task, from_job, .. } => {
+            println!(
+                "[{at:7.2}s] job {job} admitted adapter {adapter} ({task}) from queued \
+                 job {from_job}"
+            );
+        }
         Event::Rebucketed { job, from, to, survivors, .. } => {
             println!(
                 "[{at:7.2}s] job {job} re-bucketed {from:?} -> {to:?}, survivors {survivors:?}"
             );
         }
+        Event::Preempted { job, adapters, .. } => {
+            println!("[{at:7.2}s] job {job} PREEMPTED: adapters {adapters:?} back to queue");
+        }
         Event::JobFinished { job, adapters, wall, .. } => {
-            println!("[{at:7.2}s] job {job} finished: {adapters} adapters in {wall:.2}s");
+            if *adapters == 0 {
+                println!("[{at:7.2}s] job {job} fully absorbed by running packs");
+            } else {
+                println!("[{at:7.2}s] job {job} finished: {adapters} adapters in {wall:.2}s");
+            }
         }
         Event::JobFailed { job, error, .. } => {
             println!("[{at:7.2}s] job {job} FAILED: {error}");
         }
-        Event::CalibUpdated { fit: (a, b, c), samples, .. } => {
+        Event::CalibUpdated { fit: (a, b, c), samples, switch_cost, .. } => {
             println!(
                 "[{at:7.2}s] calib updated over {samples} steps: \
-                 t = {a:.4} + {b:.2e}*tok + {c:.2e}*n"
+                 t = {a:.4} + {b:.2e}*tok + {c:.2e}*n, switch {switch_cost:.4}s"
             );
         }
     }
@@ -407,6 +438,7 @@ fn cmd_quality(args: &Args) -> Result<()> {
         eval_batches: 4,
         seed: 23,
         gpus: args.usize("gpus", 2)?,
+        ..Default::default()
     };
     // Small grid per task around live-scale learning rates, restricted to
     // the shapes the model's bucket grid can execute.

@@ -8,7 +8,7 @@
 //! the scheduling-side "load balancing for heterogeneous adapters" the
 //! paper applies inside its kernels (§5.2), applied at job granularity.
 
-use crate::costmodel::{CostModel, Pack, TrainBudget};
+use crate::costmodel::{CostModel, ExecMode, Pack, TrainBudget};
 use crate::planner::PlannedJob;
 
 /// Balance a round of concurrent jobs in place. Returns the number of
@@ -87,29 +87,67 @@ pub fn drop_empty(jobs: Vec<PlannedJob>) -> Vec<PlannedJob> {
     jobs.into_iter().filter(|j| j.pack.n() > 0).collect()
 }
 
-/// Engine-side shrink at an adapter-completion boundary (§4): the smallest
-/// `(n, r, bs)` bucket in `buckets` that admits the surviving pack, when it
-/// is strictly smaller (by padded element count) than `current`. `None`
-/// means "keep riding the current bucket" — either no bucket admits the
-/// survivors or none is smaller. This is the planning decision the live
-/// session consults when an adapter converges, so the cost model's
-/// phase-wise `job_time` is realized instead of padding to job end.
-pub fn shrink_bucket(
+/// Does a static-shape `(n, r, bs)` bucket admit `pack`? (Every dimension
+/// must dominate the pack's padded shape; the empty pack is admitted by
+/// nothing — there is no job to run.)
+pub fn admits(bucket: (usize, usize, usize), pack: &Pack) -> bool {
+    let (bn, br, bb) = bucket;
+    pack.n() > 0 && bn >= pack.n() && br >= pack.r_pad() && bb >= pack.bs_pad()
+}
+
+/// Elastic bucket retargeting at an adapter-completion boundary (§4): the
+/// bucket the combined pack (`survivors` still training ∪ `joiners` being
+/// admitted mid-job) should run its next phase on. Generalizes the old
+/// one-way shrink — the move can *grow* the bucket when joiners need more
+/// slots/rank/batch than the current artifact has.
+///
+/// Returns `Some(target)` only when switching is worth it:
+///
+/// - the target must admit the combined pack;
+/// - if `current` cannot hold the combined pack (joiners force growth) the
+///   cheapest admitting bucket is returned unconditionally — admission was
+///   already decided by the caller, the only question is *which* bucket;
+/// - otherwise the move must pay for itself: the modeled saving over the
+///   next phase, `phase_steps × (t_step(current) − t_step(target))`, has
+///   to exceed `switch_cost` (checkpoint + repack + re-derive — the
+///   [`CostModel::bucket_switch_cost`][c] term, live-calibrated via
+///   `CalibUpdated`). `None` means "keep riding the current bucket".
+///
+/// Step times charge the full padded bucket shape
+/// ([`CostModel::bucket_step_time`]); ties break toward the smaller
+/// padded volume.
+///
+/// [c]: crate::costmodel::throughput::Calib::bucket_switch_cost
+pub fn retarget_bucket(
     buckets: &[(usize, usize, usize)],
     survivors: &Pack,
+    joiners: &Pack,
     current: (usize, usize, usize),
+    cm: &CostModel,
+    switch_cost: f64,
+    phase_steps: usize,
 ) -> Option<(usize, usize, usize)> {
-    if survivors.n() == 0 {
+    let mut combined = survivors.clone();
+    combined.configs.extend(joiners.configs.iter().cloned());
+    if combined.n() == 0 {
         return None;
     }
-    let (n, r, bs) = (survivors.n(), survivors.r_pad(), survivors.bs_pad());
+    let vol = |(a, b, c): (usize, usize, usize)| a * b * c;
+    let score = |b: (usize, usize, usize)| cm.bucket_step_time(b, 1, ExecMode::Packed);
     let best = buckets
         .iter()
         .copied()
-        .filter(|&(bn, br, bb)| bn >= n && br >= r && bb >= bs)
-        .min_by_key(|&(bn, br, bb)| bn * br * bb)?;
-    let vol = |(a, b, c): (usize, usize, usize)| a * b * c;
-    (vol(best) < vol(current)).then_some(best)
+        .filter(|&b| admits(b, &combined))
+        .min_by(|&x, &y| score(x).total_cmp(&score(y)).then(vol(x).cmp(&vol(y))))?;
+    if best == current {
+        return None;
+    }
+    if !admits(current, &combined) {
+        // Forced move: the current artifact cannot hold the joiners.
+        return Some(best);
+    }
+    let saving = phase_steps as f64 * (score(current) - score(best));
+    (saving > switch_cost).then_some(best)
 }
 
 #[cfg(test)]
@@ -181,23 +219,60 @@ mod tests {
         assert_eq!(rebalance_round(&cm, &b, &mut jobs, 100), 0);
     }
 
-    /// Boundary shrink: survivors move to the smallest admitting bucket,
-    /// and only when that is strictly smaller than the current one.
+    /// Boundary retarget, shrink direction (no joiners): survivors move to
+    /// the cheapest admitting bucket, and only when the modeled phase-time
+    /// saving beats the switch cost.
     #[test]
-    fn shrink_bucket_picks_smallest_strictly_smaller() {
+    fn retarget_shrinks_to_cheapest_admitting_bucket() {
+        // cpu-sim is FLOP-bound, so fewer padded samples = less modeled
+        // time (on the IO-bound A100 profile small-batch step time is
+        // sample-independent and only the rank term separates buckets).
+        let cm = CostModel::new(geom("qwen2.5-7b").unwrap(), &crate::config::pool::CPU_SIM);
+        let none = Pack::new(vec![]);
         // The nano-style grid plus a rank-32 tier.
         let grid = [(1, 8, 1), (2, 8, 1), (4, 8, 1), (2, 8, 2), (2, 32, 2)];
         let one = Pack::new(vec![cfg(0, 8, 1)]);
-        assert_eq!(shrink_bucket(&grid, &one, (2, 8, 2)), Some((1, 8, 1)));
-        // Already on the smallest admitting bucket: no move.
-        assert_eq!(shrink_bucket(&grid, &one, (1, 8, 1)), None);
-        // Rank shrink: a rank-8 survivor leaves the rank-32 bucket.
+        let rt = |surv: &Pack, cur, sw| retarget_bucket(&grid, surv, &none, cur, &cm, sw, 100);
+        assert_eq!(rt(&one, (2, 8, 2), 0.0), Some((1, 8, 1)));
+        // Already on the cheapest admitting bucket: no move.
+        assert_eq!(rt(&one, (1, 8, 1), 0.0), None);
+        // Rank shrink: a rank-8 survivor pack leaves the rank-32 bucket.
         let two = Pack::new(vec![cfg(0, 8, 1), cfg(1, 8, 2)]);
-        assert_eq!(shrink_bucket(&grid, &two, (2, 32, 2)), Some((2, 8, 2)));
+        assert_eq!(rt(&two, (2, 32, 2), 0.0), Some((2, 8, 2)));
         // Nothing admits an oversized pack.
         let big = Pack::new(vec![cfg(0, 64, 1)]);
-        assert_eq!(shrink_bucket(&grid, &big, (2, 32, 2)), None);
+        assert_eq!(rt(&big, (2, 32, 2), 0.0), None);
         // Empty survivor set never re-buckets.
-        assert_eq!(shrink_bucket(&grid, &Pack::new(vec![]), (2, 8, 2)), None);
+        assert_eq!(rt(&none, (2, 8, 2), 0.0), None);
+        // A prohibitive switch cost pins the pack to its current bucket.
+        assert_eq!(rt(&one, (2, 8, 2), f64::MAX), None);
+    }
+
+    /// Joiners can force growth: when the current bucket cannot hold the
+    /// combined pack, the cheapest admitting bucket is returned regardless
+    /// of switch cost; when it can, admission stays in place unless the
+    /// move pays for itself.
+    #[test]
+    fn retarget_grows_for_joiners() {
+        let cm = CostModel::new(geom("qwen2.5-7b").unwrap(), &crate::config::pool::CPU_SIM);
+        let grid = [(1, 8, 1), (2, 8, 1), (4, 8, 1), (2, 8, 2)];
+        let surv = Pack::new(vec![cfg(0, 8, 1)]);
+        let join = Pack::new(vec![cfg(1, 8, 1), cfg(2, 8, 1)]);
+        // 3 combined adapters don't fit (1, 8, 1): forced move, even at
+        // infinite switch cost.
+        assert_eq!(
+            retarget_bucket(&grid, &surv, &join, (1, 8, 1), &cm, f64::MAX, 10),
+            Some((4, 8, 1))
+        );
+        // Combined pack fits the current (4, 8, 1): no cheaper admitting
+        // bucket exists, so stay.
+        assert_eq!(retarget_bucket(&grid, &surv, &join, (4, 8, 1), &cm, 0.0, 10), None);
+        // One joiner into a bs-2 bucket: (2, 8, 1) admits and is cheaper;
+        // taken only when the saving clears the switch cost.
+        let one_join = Pack::new(vec![cfg(1, 8, 1)]);
+        let got = retarget_bucket(&grid, &surv, &one_join, (2, 8, 2), &cm, 0.0, 100);
+        assert_eq!(got, Some((2, 8, 1)));
+        let pinned = retarget_bucket(&grid, &surv, &one_join, (2, 8, 2), &cm, f64::MAX, 100);
+        assert_eq!(pinned, None);
     }
 }

@@ -32,7 +32,7 @@ pub mod tensor_file;
 
 pub use backend::{BackendExecutable, ExecutionBackend, Scratch};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec};
-pub use state::TrainState;
+pub use state::{JoinSource, MemberState, TrainState};
 pub use tensor::{DType, HostTensor, TensorData};
 
 use std::collections::BTreeMap;

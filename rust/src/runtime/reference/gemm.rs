@@ -134,7 +134,7 @@ pub fn mm_tn_acc(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: u
 /// the cutoff the work runs serially — bitwise identical either way, only
 /// the wall clock differs (nano-scale steps stay spawn-free even at
 /// `PLORA_THREADS=4`).
-const PAR_MIN_WORK: usize = 1 << 20;
+pub(crate) const PAR_MIN_WORK: usize = 1 << 20;
 
 /// Split `rows` into at most `nt` contiguous chunks — carving the two
 /// row-aligned output buffers (`out1` with `s1` floats per row, `out2`

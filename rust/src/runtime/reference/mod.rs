@@ -140,7 +140,9 @@ impl BackendExecutable for TrainEvalExec {
         let m_t = &inputs[NB + NL..NB + 2 * NL];
         let v_t = &inputs[NB + 2 * NL..NB + 3 * NL];
         let off = NB + 3 * NL;
-        let t_in = inputs[off].as_f32()?[0];
+        // Per-adapter step counters (n,): each slot's AdamW bias
+        // correction runs on its own clock (mid-job admission, §10).
+        let t_in = inputs[off].as_f32()?;
         let tokens = inputs[off + 1].as_i32()?;
         let targets = inputs[off + 2].as_i32()?;
         let mask = inputs[off + 3].as_f32()?;
@@ -157,7 +159,7 @@ impl BackendExecutable for TrainEvalExec {
         let per =
             tinylm::backward(&self.spec, base, &lora, scale, targets, mask, n, bs, r, ws)?;
 
-        let t_new = t_in + 1.0;
+        let t_new: Vec<f32> = t_in.iter().map(|&x| x + 1.0).collect();
         let mut out_lora = Vec::with_capacity(NL);
         let mut out_m = Vec::with_capacity(NL);
         let mut out_v = Vec::with_capacity(NL);
@@ -180,7 +182,7 @@ impl BackendExecutable for TrainEvalExec {
                 d3,
                 r,
                 LORA_ORDER[k].starts_with("a_"),
-                t_new,
+                &t_new,
                 &mut nl,
                 &mut nm,
                 &mut nv,
@@ -192,7 +194,7 @@ impl BackendExecutable for TrainEvalExec {
         let mut outs = out_lora;
         outs.extend(out_m);
         outs.extend(out_v);
-        outs.push(HostTensor::scalar_f32(t_new));
+        outs.push(HostTensor::f32(vec![n], t_new)?);
         outs.push(HostTensor::f32(vec![n], per)?);
         Ok(outs)
     }
@@ -406,7 +408,7 @@ fn train_artifact(mi: &ModelInfo, n: usize, r: usize, bs: usize) -> ArtifactInfo
     inputs.extend(lora_specs(mi, n, r, ""));
     inputs.extend(lora_specs(mi, n, r, "m_"));
     inputs.extend(lora_specs(mi, n, r, "v_"));
-    inputs.push(ts("t", DType::F32, vec![]));
+    inputs.push(ts("t", DType::F32, vec![n]));
     inputs.push(ts("tokens", DType::I32, vec![n, bs, mi.seq]));
     inputs.push(ts("targets", DType::I32, vec![n, bs, mi.seq]));
     inputs.push(ts("loss_mask", DType::F32, vec![n, bs, mi.seq]));
@@ -416,7 +418,7 @@ fn train_artifact(mi: &ModelInfo, n: usize, r: usize, bs: usize) -> ArtifactInfo
     let mut outputs = lora_specs(mi, n, r, "");
     outputs.extend(lora_specs(mi, n, r, "m_"));
     outputs.extend(lora_specs(mi, n, r, "v_"));
-    outputs.push(ts("t", DType::F32, vec![]));
+    outputs.push(ts("t", DType::F32, vec![n]));
     outputs.push(ts("per_loss", DType::F32, vec![n]));
     let name = format!("train_{}_n{n}_r{r}_b{bs}", mi.name);
     ArtifactInfo {

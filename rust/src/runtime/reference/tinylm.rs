@@ -255,9 +255,13 @@ fn proj_fwd_rows(
 /// `python/compile/kernels/ref.py::ref_grads` composed with the base GEMM.
 ///
 /// Two phases: the row-local part (`dmid`, `dinput`) splits the `n·m` rows
-/// across scoped workers like [`proj_fwd`]; the `da`/`db` reductions run
-/// serially per adapter because their accumulation order is over rows —
-/// splitting rows would change the f32 rounding.
+/// across scoped workers like [`proj_fwd`]; the `da`/`db` reductions keep
+/// each adapter's accumulation order over rows sequential — but distinct
+/// **adapters** write disjoint `da`/`db` slices, so they fan out across
+/// the persistent [`crate::util::threadpool::global`] workers
+/// ([`proj_bwd_wgrads`]). One adapter = one worker = one unchanged
+/// reduction order, so results stay bitwise invariant at any
+/// `PLORA_THREADS` setting.
 #[allow(clippy::too_many_arguments)]
 fn proj_bwd(
     dinput: &mut [f32],
@@ -288,15 +292,70 @@ fn proj_bwd(
         r,
         |dic, dmc, lo, hi| proj_bwd_rows(dic, dmc, dy, w, a, b, scale, m, din, dout, r, lo, hi),
     );
-    // da += input^T @ dmid (case 3); db += scale * mid^T @ dy (case 1).
-    for i in 0..n {
+    proj_bwd_wgrads(da, db, dy, input, mid, dmid, scale, n, m, din, dout, r);
+}
+
+/// The weight-gradient phase of [`proj_bwd`]:
+/// `da_i += input_i^T @ dmid_i` (case 3), `db_i += scale_i * mid_i^T @
+/// dy_i` (case 1), per adapter. Adapters are split across the global
+/// worker pool when the region is large enough (the [`gemm::PAR_MIN_WORK`]
+/// guard keeps nano-scale steps dispatch-free); each adapter's two
+/// reductions run back-to-back on exactly one worker.
+#[allow(clippy::too_many_arguments)]
+fn proj_bwd_wgrads(
+    da: &mut [f32],
+    db: &mut [f32],
+    dy: &[f32],
+    input: &[f32],
+    mid: &[f32],
+    dmid: &[f32],
+    scale: &[f32],
+    n: usize,
+    m: usize,
+    din: usize,
+    dout: usize,
+    r: usize,
+) {
+    let ka = din * r; // per-adapter da length
+    let kb = r * dout; // per-adapter db length
+    let per_adapter = |da_i: &mut [f32], db_i: &mut [f32], i: usize| {
         let dyi = &dy[i * m * dout..(i + 1) * m * dout];
         let xi = &input[i * m * din..(i + 1) * m * din];
         let midi = &mid[i * m * r..(i + 1) * m * r];
         let dmidi = &dmid[i * m * r..(i + 1) * m * r];
-        gemm::mm_tn_acc(&mut da[i * din * r..(i + 1) * din * r], xi, dmidi, m, din, r, 1.0);
-        gemm::mm_tn_acc(&mut db[i * r * dout..(i + 1) * r * dout], midi, dyi, m, r, dout, scale[i]);
+        gemm::mm_tn_acc(da_i, xi, dmidi, m, din, r, 1.0);
+        gemm::mm_tn_acc(db_i, midi, dyi, m, r, dout, scale[i]);
+    };
+    let nt = gemm::threads().min(n);
+    let work = n * m * (din + dout) * r;
+    if nt <= 1 || work < gemm::PAR_MIN_WORK {
+        for (i, (da_i, db_i)) in da.chunks_mut(ka).zip(db.chunks_mut(kb)).enumerate() {
+            per_adapter(da_i, db_i, i);
+        }
+        return;
     }
+    // One task per contiguous adapter chunk on the persistent pool.
+    let chunk = n.div_ceil(nt);
+    let per_adapter = &per_adapter;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nt);
+    let (mut da_rest, mut db_rest) = (da, db);
+    let mut i0 = 0usize;
+    while i0 < n {
+        let take = chunk.min(n - i0);
+        let (da_c, da_r) = da_rest.split_at_mut(take * ka);
+        let (db_c, db_r) = db_rest.split_at_mut(take * kb);
+        da_rest = da_r;
+        db_rest = db_r;
+        let lo = i0;
+        tasks.push(Box::new(move || {
+            let pairs = da_c.chunks_mut(ka).zip(db_c.chunks_mut(kb));
+            for (j, (da_i, db_i)) in pairs.enumerate() {
+                per_adapter(da_i, db_i, lo + j);
+            }
+        }));
+        i0 += take;
+    }
+    crate::util::threadpool::global().scoped(tasks);
 }
 
 /// Rows `[lo, hi)` of the row-local projection backward: `dmid` (case 2)
@@ -1020,6 +1079,11 @@ pub(crate) fn backward(
 /// written into the caller-provided `out_*` buffers (recycled through the
 /// `Scratch` pool — every element is overwritten). `rank_axis_last` is
 /// true for `a_*` tensors (rank on the last axis).
+///
+/// `t_new` is the **per-adapter** step counter `(n,)` — each adapter's
+/// bias correction runs on its own clock, so an adapter admitted into a
+/// running pack mid-job starts at its own step 1 and its trajectory is
+/// bit-identical to a solo run (DESIGN.md §10).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn adamw_update(
     lora: &[f32],
@@ -1033,17 +1097,17 @@ pub(crate) fn adamw_update(
     d3: usize,
     r: usize,
     rank_axis_last: bool,
-    t_new: f32,
+    t_new: &[f32],
     out_l: &mut [f32],
     out_m: &mut [f32],
     out_v: &mut [f32],
 ) {
-    let bc1 = 1.0 - ADAM_B1.powf(t_new);
-    let bc2 = 1.0 - ADAM_B2.powf(t_new);
     let layers = lora.len() / (n * d2 * d3);
     for l in 0..layers {
         for i in 0..n {
             let lri = lr[i];
+            let bc1 = 1.0 - ADAM_B1.powf(t_new[i]);
+            let bc2 = 1.0 - ADAM_B2.powf(t_new[i]);
             for x2 in 0..d2 {
                 for x3 in 0..d3 {
                     let idx = ((l * n + i) * d2 + x2) * d3 + x3;
@@ -1278,7 +1342,7 @@ mod tests {
         let mut nm = vec![9.0f32; 8];
         let mut nv = vec![9.0f32; 8];
         adamw_update(
-            &lora, &m, &v, &grad, &[0.1], &rmask, 1, 2, 4, 4, true, 1.0, &mut nl, &mut nm,
+            &lora, &m, &v, &grad, &[0.1], &rmask, 1, 2, 4, 4, true, &[1.0], &mut nl, &mut nm,
             &mut nv,
         );
         // Unmasked columns move by ~lr against the gradient sign.

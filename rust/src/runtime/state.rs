@@ -39,6 +39,107 @@ pub fn lora_shape(mi: &ModelInfo, name: &str, n: usize, r: usize) -> Vec<usize> 
     }
 }
 
+/// One adapter's full training state at its true rank — what a preemption
+/// checkpoint carries and what `repack_merge` restores into a (possibly
+/// different) bucket. Tensors are `LORA_ORDER`-ordered true-rank slices
+/// (`a_*`: `(L, d_in, rank)`, `b_*`: `(L, rank, d_out)`).
+#[derive(Debug, Clone)]
+pub struct MemberState {
+    pub rank: usize,
+    pub lora: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    /// The adapter's own AdamW step counter.
+    pub t: f32,
+}
+
+/// One joiner entering a bucket via [`TrainState::repack_merge`].
+pub enum JoinSource<'a> {
+    /// A brand-new adapter: `A` drawn from its own `(seed)` stream at
+    /// `rank` (exactly [`TrainState::init_per_adapter`]'s draw order),
+    /// `B = 0`, moments zero, `t = 0`.
+    Fresh { seed: u64, rank: usize },
+    /// A previously checkpointed adapter (preempted or migrated): params,
+    /// moments and step counter restored verbatim.
+    Restore { member: &'a MemberState },
+}
+
+/// Draw slot `slot`'s `A` tensors from its own `seed` stream at true rank
+/// `rank` into zero-initialized packed `lora` tensors of a `(n, r)`
+/// bucket. The per-adapter draw order (each `a_*` tensor in `LORA_ORDER`
+/// order; layers, rows, then rank columns inside it) is the contract that
+/// makes an adapter's init independent of when and where it enters a pack:
+/// `init_per_adapter` and `repack_merge`'s fresh joiners both call this,
+/// so an adapter admitted mid-job starts from the exact state a solo run
+/// starts from.
+fn fill_fresh_adapter(
+    mi: &ModelInfo,
+    lora: &mut [HostTensor],
+    slot: usize,
+    n: usize,
+    r: usize,
+    seed: u64,
+    rank: usize,
+) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    for (k, name) in LORA_ORDER.iter().enumerate() {
+        if !name.starts_with("a_") {
+            continue;
+        }
+        let p = name.split_once('_').unwrap().1;
+        let din = proj_dims(mi, p).0;
+        let std = 1.0 / (din as f64).sqrt();
+        let buf = lora[k].as_f32_mut()?;
+        for l in 0..mi.n_layers {
+            let base = (l * n + slot) * din * r;
+            for row in 0..din {
+                for c in 0..rank {
+                    buf[base + row * r + c] = (rng.normal() * std) as f32;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Copy one adapter's true-rank tensor set (`LORA_ORDER`-ordered, shapes
+/// `(L, rows, cols)`) into slot `slot` of packed `(n, r)` bucket tensors.
+fn install_member(
+    mi: &ModelInfo,
+    dst: &mut [HostTensor],
+    src: &[HostTensor],
+    slot: usize,
+    n: usize,
+    r: usize,
+) -> Result<()> {
+    for ((name, d), s) in LORA_ORDER.iter().zip(dst).zip(src) {
+        let shape = lora_shape(mi, name, n, r);
+        let (d2, d3) = (shape[2], shape[3]);
+        let (l, rows, cols) = (s.shape[0], s.shape[1], s.shape[2]);
+        if l != shape[0] || rows > d2 || cols > d3 {
+            bail!(
+                "install_member: {name} checkpoint {:?} does not fit bucket slice ({},{},{})",
+                s.shape,
+                shape[0],
+                d2,
+                d3
+            );
+        }
+        let sb = s.as_f32()?;
+        let db = d.as_f32_mut()?;
+        for li in 0..l {
+            let so = li * rows * cols;
+            let do_ = (li * n + slot) * d2 * d3;
+            for row in 0..rows {
+                for col in 0..cols {
+                    db[do_ + row * d3 + col] = sb[so + row * cols + col];
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// The mutable state of one packed job between steps.
 pub struct TrainState {
     pub model: ModelInfo,
@@ -52,8 +153,10 @@ pub struct TrainState {
     pub m: Vec<HostTensor>,
     /// AdamW second moments, same order.
     pub v: Vec<HostTensor>,
-    /// Step counter (f32 scalar, as the artifact expects).
-    pub t: f32,
+    /// Per-adapter step counters `(n,)`, as the artifact expects: each
+    /// slot's AdamW bias correction runs on its own clock, so a joiner
+    /// admitted mid-job starts at its own step 0.
+    pub t: Vec<f32>,
     /// Step-persistent backend scratch: the reference backend's workspace
     /// arena plus the recycled-output pool (zero steady-state allocation
     /// on the train path). Derived state — `init`/`repack` start fresh, so
@@ -97,7 +200,7 @@ impl TrainState {
             lora,
             m,
             v,
-            t: 0.0,
+            t: vec![0.0; n],
             scratch: Mutex::new(Scratch::new()),
         }
     }
@@ -134,25 +237,8 @@ impl TrainState {
             let count: usize = shape.iter().product();
             lora.push(HostTensor::f32(shape, vec![0.0; count]).unwrap());
         }
-        let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
-        for (k, name) in LORA_ORDER.iter().enumerate() {
-            if !name.starts_with("a_") {
-                continue;
-            }
-            let p = name.split_once('_').unwrap().1;
-            let din = proj_dims(mi, p).0;
-            let std = 1.0 / (din as f64).sqrt();
-            let buf = lora[k].as_f32_mut()?;
-            for l in 0..mi.n_layers {
-                for (i, rng) in rngs.iter_mut().enumerate() {
-                    let base = (l * n + i) * din * r;
-                    for row in 0..din {
-                        for c in 0..ranks[i] {
-                            buf[base + row * r + c] = (rng.normal() * std) as f32;
-                        }
-                    }
-                }
-            }
+        for (i, (&seed, &rank)) in seeds.iter().zip(ranks).enumerate() {
+            fill_fresh_adapter(mi, &mut lora, i, n, r, seed, rank)?;
         }
         let m = lora
             .iter()
@@ -169,32 +255,93 @@ impl TrainState {
             lora,
             m,
             v,
-            t: 0.0,
+            t: vec![0.0; n],
             scratch: Mutex::new(Scratch::new()),
         })
     }
 
+    /// A zero-member shell (bucket `n = 0`): the cheap starting point for
+    /// building a populated state through [`TrainState::repack_merge`] —
+    /// all tensors are zero-length, so no full-bucket allocation is paid
+    /// twice on the job-start path.
+    pub fn empty(mi: &ModelInfo, r: usize) -> TrainState {
+        let lora: Vec<HostTensor> = LORA_ORDER
+            .iter()
+            .map(|name| HostTensor::f32(lora_shape(mi, name, 0, r), vec![]).unwrap())
+            .collect();
+        TrainState {
+            model: mi.clone(),
+            n: 0,
+            r,
+            m: lora.clone(),
+            v: lora.clone(),
+            lora,
+            t: vec![],
+            scratch: Mutex::new(Scratch::new()),
+        }
+    }
+
     /// Re-pack surviving adapters into a fresh `(n_new, r_new)` bucket
-    /// state: LoRA parameters and AdamW moments are copied at each
-    /// survivor's true rank (zero-padded to `r_new`); the shared step
-    /// counter carries over. `keep[i] = (old_slot, true_rank)` places the
-    /// survivor into new slot `i`. This is the state side of the engine's
-    /// preemptive re-bucketing at adapter-completion boundaries (§4).
+    /// state (shrink-only compatibility wrapper over
+    /// [`TrainState::repack_merge`] with no joiners).
     pub fn repack(
         &self,
         keep: &[(usize, usize)],
         n_new: usize,
         r_new: usize,
     ) -> Result<TrainState> {
-        if keep.len() > n_new {
-            bail!("repack: {} survivors exceed bucket n={n_new}", keep.len());
+        self.repack_merge(keep, &[], n_new, r_new)
+    }
+
+    /// The elastic generalization of `repack` (§4, DESIGN.md §10): carry
+    /// surviving adapters **and merge newly admitted ones** onto a
+    /// possibly larger `(n_new, r_new)` bucket.
+    ///
+    /// - `keep[i] = (old_slot, true_rank)` places survivor `i` into new
+    ///   slot `i`, copying LoRA params, AdamW moments and its per-adapter
+    ///   step counter at its true rank (zero-padded to `r_new`);
+    /// - `joiners[j]` fills slot `keep.len() + j`: either a fresh adapter
+    ///   (its own `A` init stream, `B = 0`, zero moments, `t = 0` — the
+    ///   exact state a solo run starts from) or a restored checkpoint
+    ///   ([`MemberState`], e.g. a preemption victim re-entering).
+    pub fn repack_merge(
+        &self,
+        keep: &[(usize, usize)],
+        joiners: &[JoinSource<'_>],
+        n_new: usize,
+        r_new: usize,
+    ) -> Result<TrainState> {
+        if keep.len() + joiners.len() > n_new {
+            bail!(
+                "repack_merge: {} survivors + {} joiners exceed bucket n={n_new}",
+                keep.len(),
+                joiners.len()
+            );
         }
         for &(slot, rank) in keep {
             if slot >= self.n {
-                bail!("repack: slot {slot} out of pack of {}", self.n);
+                bail!("repack_merge: slot {slot} out of pack of {}", self.n);
             }
             if rank > r_new || rank > self.r {
-                bail!("repack: rank {rank} exceeds padded rank {} -> {r_new}", self.r);
+                bail!("repack_merge: rank {rank} exceeds padded rank {} -> {r_new}", self.r);
+            }
+        }
+        for j in joiners {
+            let rank = match j {
+                JoinSource::Fresh { rank, .. } => *rank,
+                JoinSource::Restore { member } => {
+                    if member.lora.len() != LORA_ORDER.len() {
+                        bail!(
+                            "repack_merge: restored member has {} lora tensors, want {}",
+                            member.lora.len(),
+                            LORA_ORDER.len()
+                        );
+                    }
+                    member.rank
+                }
+            };
+            if rank > r_new {
+                bail!("repack_merge: joiner rank {rank} exceeds padded rank {r_new}");
             }
         }
         let model = self.model.clone();
@@ -225,14 +372,35 @@ impl TrainState {
                 })
                 .collect()
         };
+        let mut lora = remap(&self.lora)?;
+        let mut m = remap(&self.m)?;
+        let mut v = remap(&self.v)?;
+        let mut t = vec![0.0f32; n_new];
+        for (ni, &(slot, _)) in keep.iter().enumerate() {
+            t[ni] = self.t[slot];
+        }
+        for (j, join) in joiners.iter().enumerate() {
+            let slot = keep.len() + j;
+            match join {
+                JoinSource::Fresh { seed, rank } => {
+                    fill_fresh_adapter(&model, &mut lora, slot, n_new, r_new, *seed, *rank)?;
+                }
+                JoinSource::Restore { member } => {
+                    install_member(&model, &mut lora, &member.lora, slot, n_new, r_new)?;
+                    install_member(&model, &mut m, &member.m, slot, n_new, r_new)?;
+                    install_member(&model, &mut v, &member.v, slot, n_new, r_new)?;
+                    t[slot] = member.t;
+                }
+            }
+        }
         Ok(TrainState {
             model: self.model.clone(),
             n: n_new,
             r: r_new,
-            lora: remap(&self.lora)?,
-            m: remap(&self.m)?,
-            v: remap(&self.v)?,
-            t: self.t,
+            lora,
+            m,
+            v,
+            t,
             scratch: Mutex::new(Scratch::new()),
         })
     }
@@ -282,7 +450,7 @@ impl TrainState {
         lr: &[f32],
         rmask: &HostTensor,
     ) -> Result<Vec<f32>> {
-        let t_t = HostTensor::scalar_f32(self.t);
+        let t_t = HostTensor::f32(vec![self.n], self.t.clone())?;
         let scale_t = HostTensor::f32(vec![self.n], scale.to_vec())?;
         let lr_t = HostTensor::f32(vec![self.n], lr.to_vec())?;
         let mut outs = {
@@ -307,7 +475,7 @@ impl TrainState {
         }
         let per = outs.pop().unwrap();
         let t = outs.pop().unwrap();
-        self.t = t.as_f32()?[0];
+        self.t = t.as_f32()?.to_vec();
         let nl = LORA_ORDER.len();
         let old_v = std::mem::replace(&mut self.v, outs.split_off(2 * nl));
         let old_m = std::mem::replace(&mut self.m, outs.split_off(nl));
@@ -359,31 +527,60 @@ impl TrainState {
         if slot >= self.n || rank > self.r {
             bail!("extract_adapter: slot {slot}/{} rank {rank}/{}", self.n, self.r);
         }
-        let mut out = vec![];
-        for (name, tensor) in LORA_ORDER.iter().zip(&self.lora) {
-            let (kind, _) = name.split_once('_').unwrap();
-            // Packed shape: a = (L, n, din, r_pad), b = (L, n, r_pad, dout).
-            let (l, n, d2, d3) =
-                (tensor.shape[0], tensor.shape[1], tensor.shape[2], tensor.shape[3]);
-            assert_eq!(n, self.n);
-            let src = tensor.as_f32()?;
-            let (rows, cols) = if kind == "a" { (d2, rank) } else { (rank, d3) };
-            let mut data = Vec::with_capacity(l * rows * cols);
-            for layer in 0..l {
-                let base_off = (layer * n + slot) * d2 * d3;
-                for i in 0..rows {
-                    let row = &src[base_off + i * d3..base_off + i * d3 + d3];
-                    data.extend_from_slice(&row[..cols]);
-                }
-            }
-            out.push((name.to_string(), HostTensor::f32(vec![l, rows, cols], data)?));
+        let slices = self.slice_slot(&self.lora, slot, rank)?;
+        Ok(LORA_ORDER.iter().map(|n| n.to_string()).zip(slices).collect())
+    }
+
+    /// Extract adapter `slot`'s **full training state** at its true rank —
+    /// params, AdamW moments and its per-adapter step counter. This is the
+    /// preemption checkpoint: [`TrainState::repack_merge`] with
+    /// [`JoinSource::Restore`] resumes the adapter bit-identically, in any
+    /// bucket.
+    pub fn extract_member(&self, slot: usize, rank: usize) -> Result<MemberState> {
+        if slot >= self.n || rank > self.r {
+            bail!("extract_member: slot {slot}/{} rank {rank}/{}", self.n, self.r);
         }
-        Ok(out)
+        Ok(MemberState {
+            rank,
+            lora: self.slice_slot(&self.lora, slot, rank)?,
+            m: self.slice_slot(&self.m, slot, rank)?,
+            v: self.slice_slot(&self.v, slot, rank)?,
+            t: self.t[slot],
+        })
+    }
+
+    /// True-rank slices of one slot across an `LORA_ORDER` tensor set.
+    fn slice_slot(
+        &self,
+        tensors: &[HostTensor],
+        slot: usize,
+        rank: usize,
+    ) -> Result<Vec<HostTensor>> {
+        LORA_ORDER
+            .iter()
+            .zip(tensors)
+            .map(|(name, tensor)| {
+                let (kind, _) = name.split_once('_').unwrap();
+                let (l, n, d2, d3) =
+                    (tensor.shape[0], tensor.shape[1], tensor.shape[2], tensor.shape[3]);
+                let src = tensor.as_f32()?;
+                let (rows, cols) = if kind == "a" { (d2, rank) } else { (rank, d3) };
+                let mut data = Vec::with_capacity(l * rows * cols);
+                for layer in 0..l {
+                    let base_off = (layer * n + slot) * d2 * d3;
+                    for i in 0..rows {
+                        let row = &src[base_off + i * d3..base_off + i * d3 + d3];
+                        data.extend_from_slice(&row[..cols]);
+                    }
+                }
+                HostTensor::f32(vec![l, rows, cols], data)
+            })
+            .collect()
     }
 
     /// Total f32 elements held (params + moments) — memory accounting.
     pub fn elements(&self) -> usize {
-        3 * self.lora.iter().map(|t| t.len()).sum::<usize>() + 1
+        3 * self.lora.iter().map(|t| t.len()).sum::<usize>() + self.n
     }
 }
 
@@ -457,19 +654,19 @@ mod tests {
         assert!(TrainState::init_per_adapter(&m, 2, 4, &[1], &[5]).is_err());
     }
 
-    /// Repack moves a survivor to a smaller bucket with params + moments
-    /// intact at its true rank.
+    /// Repack moves a survivor to a smaller bucket with params, moments
+    /// and its own step counter intact at its true rank.
     #[test]
     fn repack_carries_params_and_moments() {
         let m = mi();
         let mut st = TrainState::init_per_adapter(&m, 2, 8, &[3, 4], &[4, 8]).unwrap();
-        st.t = 5.0;
+        st.t = vec![5.0, 9.0];
         // Plant a recognizable moment value for slot 0.
         let idx = LORA_ORDER.iter().position(|x| *x == "a_q").unwrap();
         st.m[idx].as_f32_mut().unwrap()[0] = 0.25; // layer 0, slot 0, row 0, col 0
         let small = st.repack(&[(0, 4)], 1, 4).unwrap();
         assert_eq!((small.n, small.r), (1, 4));
-        assert_eq!(small.t, 5.0);
+        assert_eq!(small.t, vec![5.0], "per-adapter t travels with its slot");
         let (big, sm) = (st.lora[idx].as_f32().unwrap(), small.lora[idx].as_f32().unwrap());
         // a_q old (2, 2, 8, 8) -> new (2, 1, 8, 4): slot 0, cols < 4.
         for l in 0..2 {
@@ -482,6 +679,82 @@ mod tests {
         assert_eq!(small.m[idx].as_f32().unwrap()[0], 0.25);
         assert!(st.repack(&[(2, 4)], 1, 4).is_err());
         assert!(st.repack(&[(0, 8)], 1, 4).is_err());
+    }
+
+    /// `repack_merge` with a fresh joiner reproduces the exact state a
+    /// solo `init_per_adapter` run starts from (same seed stream, B = 0,
+    /// zero moments, t = 0) — and can *grow* the bucket to make room.
+    #[test]
+    fn repack_merge_fresh_joiner_matches_solo_init() {
+        let m = mi();
+        let mut st = TrainState::init_per_adapter(&m, 1, 4, &[3], &[4]).unwrap();
+        st.t = vec![7.0];
+        // Grow (1, 4) -> (3, 8): survivor in slot 0, fresh joiner slot 1.
+        let joiners = [JoinSource::Fresh { seed: 11, rank: 3 }];
+        let grown = st.repack_merge(&[(0, 4)], &joiners, 3, 8).unwrap();
+        assert_eq!((grown.n, grown.r), (3, 8));
+        assert_eq!(grown.t, vec![7.0, 0.0, 0.0]);
+        // The joiner's A equals a solo init from the same seed.
+        let solo = TrainState::init_per_adapter(&m, 1, 4, &[11], &[3]).unwrap();
+        let idx = LORA_ORDER.iter().position(|x| *x == "a_q").unwrap();
+        let (sa, ga) = (solo.lora[idx].as_f32().unwrap(), grown.lora[idx].as_f32().unwrap());
+        for l in 0..2 {
+            for row in 0..8 {
+                for c in 0..3 {
+                    let s = sa[(l * 8 + row) * 4 + c];
+                    let g = ga[((l * 3 + 1) * 8 + row) * 8 + c];
+                    assert_eq!(s, g, "fresh joiner a_q[{l},{row},{c}] diverged from solo init");
+                }
+            }
+        }
+        // Joiner moments are zero; overflow and oversized ranks rejected.
+        assert!(grown.m[idx].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(st
+            .repack_merge(&[(0, 4)], &[JoinSource::Fresh { seed: 1, rank: 4 }], 1, 4)
+            .is_err());
+        assert!(st
+            .repack_merge(&[], &[JoinSource::Fresh { seed: 1, rank: 9 }], 2, 8)
+            .is_err());
+    }
+
+    /// `extract_member` + `repack_merge(Restore)` round-trip an adapter's
+    /// full training state bit-exactly through a different bucket shape.
+    #[test]
+    fn extract_member_restore_roundtrip() {
+        let m = mi();
+        let mut st = TrainState::init_per_adapter(&m, 2, 8, &[5, 6], &[4, 8]).unwrap();
+        st.t = vec![3.0, 12.0];
+        let idx = LORA_ORDER.iter().position(|x| *x == "b_q").unwrap();
+        // b_q slot 1: packed (L=2, n=2, r=8, d=8); plant values in rank
+        // rows < true rank.
+        st.v[idx].as_f32_mut().unwrap()[(2 + 1) * 8 * 8] = 0.5; // l=1, slot 1
+        let member = st.extract_member(1, 8).unwrap();
+        assert_eq!(member.t, 12.0);
+        assert_eq!(member.lora.len(), 14);
+        // Restore into a fresh (1, 8) bucket as the only member.
+        let empty = TrainState::init_per_adapter(&m, 1, 8, &[], &[]).unwrap();
+        let back = empty
+            .repack_merge(&[], &[JoinSource::Restore { member: &member }], 1, 8)
+            .unwrap();
+        assert_eq!(back.t, vec![12.0]);
+        // `back` slot 0 must hold exactly what `st` slot 1 held.
+        let rb = back.extract_member(0, 8).unwrap();
+        let pairs = member
+            .lora
+            .iter()
+            .zip(&rb.lora)
+            .chain(member.m.iter().zip(&rb.m))
+            .chain(member.v.iter().zip(&rb.v));
+        for (a, b) in pairs {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+        assert_eq!(
+            back.v[idx].as_f32().unwrap()[8 * 8],
+            0.5,
+            "second moment survived the round trip (l=1, slot 0)"
+        );
+        assert!(st.extract_member(2, 8).is_err());
     }
 
     #[test]

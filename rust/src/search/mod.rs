@@ -20,7 +20,7 @@ use crate::costmodel::{CostModel, TrainBudget};
 use crate::metrics::Table;
 use crate::planner::JobPlanner;
 use crate::runtime::Runtime;
-use crate::session::Session;
+use crate::session::{Policy, Session};
 use crate::train::{AdapterReport, TrainOptions};
 
 /// The default LoRA configuration a practitioner would start from
@@ -38,6 +38,12 @@ pub struct SweepOptions {
     pub seed: u64,
     /// Capacity slots of the live pool the sweep schedules onto.
     pub gpus: usize,
+    /// Dispatch policy of the backing session (per-adapter results are
+    /// policy-invariant — the bit-identity guarantee — only the timeline
+    /// changes).
+    pub policy: Policy,
+    /// Elastic mid-job admission of queued sweep jobs.
+    pub elastic: bool,
 }
 
 impl Default for SweepOptions {
@@ -47,6 +53,8 @@ impl Default for SweepOptions {
             eval_batches: 4,
             seed: 23,
             gpus: 2,
+            policy: Policy::Fifo,
+            elastic: false,
         }
     }
 }
@@ -97,6 +105,8 @@ pub fn sweep(
         seed: opts.seed,
         log_every: 0,
     };
+    session.set_policy(opts.policy);
+    session.set_elastic(opts.elastic);
     for j in &plan.jobs {
         session.submit_planned(j.job.clone())?;
     }

@@ -7,36 +7,78 @@
 //!
 //! - [`Session::submit`] / [`Session::submit_planned`] — dynamic admission:
 //!   jobs may be submitted while others run. A dedicated dispatcher thread
-//!   admits jobs FIFO, acquiring devices *before* launch (the LoRA Job
-//!   Queue semantics, with backpressure).
+//!   launches queued jobs under a [`Policy`] (FIFO, strict priority, or
+//!   priority with preemption), acquiring devices *before* launch (the
+//!   LoRA Job Queue semantics, with backpressure).
 //! - a streaming [`Event`] channel ([`Session::subscribe`]): `JobStarted`,
-//!   `AdapterFinished`, `Rebucketed`, `JobFinished`, `CalibUpdated`.
+//!   `AdapterFinished`, `AdapterAdmitted`, `Rebucketed`, `Preempted`,
+//!   `JobFinished`, `CalibUpdated`.
 //! - [`Session::drain`] — wait for everything submitted so far and return
 //!   a [`SessionReport`] (outcomes + makespan + live calib fit + the full
 //!   event log).
 //!
-//! **Preemptive re-bucketing**: when an adapter converges (exhausts its
-//! budget) mid-job, the session checkpoints it from the event stream and —
-//! via `planner::rebalance::shrink_bucket` — re-packs the survivors onto a
-//! smaller `(n, rank, batch)` bucket instead of padding to job end, so the
-//! cost model's phase-wise `job_time` is what actually executes. The
-//! discrete-event simulator emits the same [`Event`] type, so live and
-//! simulated timelines are directly comparable.
+//! **Elastic buckets** (DESIGN.md §10): jobs reshape *while running*.
+//! When an adapter converges mid-job the session checkpoints it from the
+//! event stream and consults `planner::rebalance::retarget_bucket`, which
+//! grows or shrinks the `(n, rank, batch)` bucket only when the modeled
+//! phase-time saving beats the live-calibrated bucket-switch cost. With
+//! [`Session::set_elastic`] on, queued adapters are **offered to
+//! compatible running packs** at their completion boundaries
+//! (`AdapterAdmitted`) instead of waiting for devices; under
+//! [`Policy::PreemptLowest`] a starved high-priority job preempts the
+//! lowest-priority running one, whose unfinished adapters are
+//! checkpointed back to the queue (`Preempted`) and later resumed
+//! bit-identically. The discrete-event simulator emits the same [`Event`]
+//! type under the same [`Policy`], so live and simulated timelines are
+//! directly comparable.
 
+use std::cmp::Reverse;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::cluster::{Allocation, ResourceMonitor};
 use crate::config::{AdapterSpec, LoraConfig};
 use crate::costmodel::throughput::Calib;
-use crate::costmodel::{ExecMode, Pack};
+use crate::costmodel::{ExecMode, Pack, SwitchCost};
 use crate::engine::CheckpointPool;
+use crate::planner::rebalance::admits;
 use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
-use crate::train::{run_pack_phased, JobReport, PackPhaseEvent, TrainOptions};
+use crate::train::{
+    run_pack_phased, BoundaryOffer, ElasticCtl, JobReport, Joiner, MemberResume,
+    PackPhaseEvent, TrainOptions,
+};
+
+/// How the dispatcher orders the job queue (and when it preempts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Strict submission order with head-of-line blocking (the
+    /// pre-elastic behavior; the default).
+    Fifo,
+    /// Highest priority first (ties by submission order); a job that
+    /// doesn't fit the free devices is skipped in favor of one that does.
+    Priority,
+    /// [`Policy::Priority`] plus preemption: when the best pending job
+    /// cannot get devices, running jobs of *strictly lower* priority are
+    /// preempted (checkpointed back to the queue) until it fits.
+    PreemptLowest,
+}
+
+impl Policy {
+    /// Parse a CLI/env spelling (`fifo`, `priority`, `preempt`).
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(Policy::Fifo),
+            "priority" => Some(Policy::Priority),
+            "preempt" | "preempt-lowest" | "preemptlowest" => Some(Policy::PreemptLowest),
+            _ => None,
+        }
+    }
+}
 
 /// What a user submits: id-less adapter specs plus execution knobs. The
 /// session owns adapter-id allocation (ids are assigned at submit time, so
@@ -48,11 +90,18 @@ pub struct JobSpec {
     /// Parallelism degree `d_j` (devices held for the job's duration).
     pub d: usize,
     pub mode: ExecMode,
+    /// Queue priority (higher runs first under non-FIFO policies).
+    pub priority: i32,
 }
 
 impl JobSpec {
     pub fn new(adapters: Vec<AdapterSpec>) -> JobSpec {
-        JobSpec { adapters, d: 1, mode: ExecMode::Packed }
+        JobSpec { adapters, d: 1, mode: ExecMode::Packed, priority: 0 }
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> JobSpec {
+        self.priority = priority;
+        self
     }
 }
 
@@ -80,8 +129,11 @@ pub enum Event {
         eval_acc: f32,
         at: f64,
     },
-    /// Survivors of an adapter-completion boundary moved to a smaller
-    /// `(n, rank, batch)` bucket.
+    /// A queued adapter joined a *running* pack at one of its
+    /// adapter-completion boundaries (elastic admission).
+    AdapterAdmitted { job: usize, adapter: usize, task: String, from_job: usize, at: f64 },
+    /// The pack moved to a different `(n, rank, batch)` bucket (grow or
+    /// shrink) at a completion boundary.
     Rebucketed {
         job: usize,
         from: (usize, usize, usize),
@@ -89,13 +141,17 @@ pub enum Event {
         survivors: Vec<usize>,
         at: f64,
     },
+    /// The job was preempted: the listed adapters were checkpointed back
+    /// to the queue and will resume later (same job id).
+    Preempted { job: usize, adapters: Vec<usize>, at: f64 },
     JobFinished { job: usize, adapters: usize, wall: f64, at: f64 },
     /// The job errored; its devices were returned to the pool and the
     /// error is re-raised by the next `drain`.
     JobFailed { job: usize, error: String, at: f64 },
     /// The live cost-model fit `t = a + b·tokens + c·n` was refreshed from
-    /// accumulated step profiles (§4 calibration).
-    CalibUpdated { fit: (f64, f64, f64), samples: usize, at: f64 },
+    /// accumulated step profiles, together with the running mean of the
+    /// measured bucket-switch wall times (§4 calibration).
+    CalibUpdated { fit: (f64, f64, f64), samples: usize, switch_cost: f64, at: f64 },
 }
 
 impl Event {
@@ -104,7 +160,9 @@ impl Event {
         match self {
             Event::JobStarted { at, .. }
             | Event::AdapterFinished { at, .. }
+            | Event::AdapterAdmitted { at, .. }
             | Event::Rebucketed { at, .. }
+            | Event::Preempted { at, .. }
             | Event::JobFinished { at, .. }
             | Event::JobFailed { at, .. }
             | Event::CalibUpdated { at, .. } => *at,
@@ -112,7 +170,8 @@ impl Event {
     }
 }
 
-/// One finished job with its session-side timeline.
+/// One finished job (or finished segment of a preempted job) with its
+/// session-side timeline.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
     pub job_id: usize,
@@ -126,12 +185,17 @@ pub struct JobOutcome {
 /// Everything a `drain` returns.
 #[derive(Debug, Clone)]
 pub struct SessionReport {
-    /// Finished jobs, sorted by job id.
+    /// Finished jobs, sorted by job id. A preempted-then-resumed job
+    /// contributes one outcome per executed segment (same job id); a job
+    /// fully absorbed by elastic admission contributes none (its adapters
+    /// report under their host job).
     pub outcomes: Vec<JobOutcome>,
     pub makespan: f64,
     /// Live cost-model fit `(a, b, c)` of `t = a + b·tokens + c·n` over all
     /// profiled steps.
     pub calib_fit: (f64, f64, f64),
+    /// Running mean of measured bucket-switch wall times (seconds).
+    pub switch_cost: f64,
     /// The full event log up to this drain.
     pub events: Vec<Event>,
 }
@@ -145,14 +209,54 @@ impl SessionReport {
     pub fn rebuckets(&self) -> usize {
         self.events.iter().filter(|e| matches!(e, Event::Rebucketed { .. })).count()
     }
+
+    /// Number of `AdapterAdmitted` events in the log.
+    pub fn admissions(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, Event::AdapterAdmitted { .. })).count()
+    }
+
+    /// Number of `Preempted` events in the log.
+    pub fn preemptions(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, Event::Preempted { .. })).count()
+    }
+
+    /// Padded rows summed over all executed segments — the deterministic
+    /// work proxy elastic re-bucketing/admission shrinks.
+    pub fn padded_rows(&self) -> usize {
+        self.outcomes.iter().map(|o| o.report.padded_rows).sum()
+    }
 }
 
-/// A submitted job with the options snapshot it will run under.
-struct QueuedJob {
+/// A queued job with the options snapshot it will run under (and, for a
+/// preempted continuation, the resume payloads of its members).
+struct PendingJob {
+    /// Submission order ticket (continuations keep the original's).
+    seq: usize,
     job: PlannedJob,
+    priority: i32,
     opts: TrainOptions,
     rebucket: bool,
     checkpoints: Option<CheckpointPool>,
+    resume: Vec<(usize, MemberResume)>,
+}
+
+/// Dispatcher-visible record of a running job.
+struct RunningJob {
+    job: usize,
+    priority: i32,
+    d: usize,
+    /// Preemption flag shared with the job's driver.
+    flag: Arc<AtomicBool>,
+}
+
+/// Scheduler state behind one mutex: the queue, the running set and the
+/// policy knobs.
+struct Sched {
+    pending: Vec<PendingJob>,
+    running: Vec<RunningJob>,
+    policy: Policy,
+    elastic: bool,
+    shutdown: bool,
 }
 
 struct Shared {
@@ -167,6 +271,14 @@ struct Shared {
     profile: Mutex<Vec<(f64, f64, f64)>>,
     done: Mutex<usize>,
     done_cv: Condvar,
+    submitted: AtomicUsize,
+    seq: AtomicUsize,
+    sched: Mutex<Sched>,
+    sched_cv: Condvar,
+    /// Live bucket-switch cost estimator shared by every job's driver.
+    switch_cost: SwitchCost,
+    /// The model's `(n, r, bs)` bucket grid (admission feasibility).
+    buckets: Vec<(usize, usize, usize)>,
 }
 
 impl Shared {
@@ -189,20 +301,204 @@ impl Shared {
         *self.done.lock().unwrap() += 1;
         self.done_cv.notify_all();
     }
+
+    fn remove_running(&self, job: usize) {
+        self.sched.lock().unwrap().running.retain(|r| r.job != job);
+    }
+
+    /// Elastic admission: hand queued adapters to a running pack at one of
+    /// its completion boundaries. Walks the queue in policy order and
+    /// takes adapters greedily while the combined pack still fits a
+    /// bucket (the current one when the host runs without re-bucketing).
+    /// Only queue entries with the host's exact options/rebucket/pool
+    /// settings **and the host's device count + exec mode** are
+    /// compatible — admission must not change any adapter's seed, budget
+    /// or checkpoint destination, nor silently drop a job's requested
+    /// parallelism (cross-`d` admission is a ROADMAP follow-on). A queued
+    /// job of *strictly higher* priority is never absorbed (it would be
+    /// demoted to the host's priority if the host is later preempted),
+    /// and a host already flagged for preemption gets nothing — it is
+    /// about to hand its own members back. Queue jobs emptied by
+    /// admission are completed in place (their adapters will report under
+    /// the host job).
+    #[allow(clippy::too_many_arguments)]
+    fn offer_joiners(
+        &self,
+        host_job: usize,
+        host_opts: &TrainOptions,
+        host_rebucket: bool,
+        host_ckpt: &Option<CheckpointPool>,
+        host_d: usize,
+        host_mode: ExecMode,
+        bo: &BoundaryOffer<'_>,
+    ) -> Vec<Joiner> {
+        let (out, absorbed) = {
+            let mut st = self.sched.lock().unwrap();
+            if !st.elastic || st.pending.is_empty() {
+                return vec![];
+            }
+            let host = st.running.iter().find(|r| r.job == host_job);
+            let host_priority = match host {
+                Some(r) if !r.flag.load(Ordering::SeqCst) => r.priority,
+                // Flagged (or unknown) host: it is vacating, offer nothing.
+                _ => return vec![],
+            };
+            let mut out: Vec<Joiner> = vec![];
+            let mut order: Vec<usize> = (0..st.pending.len()).collect();
+            match st.policy {
+                Policy::Fifo => order.sort_by_key(|&i| st.pending[i].seq),
+                _ => order.sort_by_key(|&i| (Reverse(st.pending[i].priority), st.pending[i].seq)),
+            }
+            let mut combined: Vec<LoraConfig> = bo.survivors.configs.clone();
+            for i in order {
+                let compat = {
+                    let p = &st.pending[i];
+                    p.priority <= host_priority
+                        && p.opts == *host_opts
+                        && p.rebucket == host_rebucket
+                        && p.job.d == host_d
+                        && p.job.mode == host_mode
+                        && ckpt_compat(&p.checkpoints, host_ckpt)
+                };
+                if !compat {
+                    continue;
+                }
+                let mut j = 0usize;
+                while j < st.pending[i].job.pack.configs.len() {
+                    let cand = st.pending[i].job.pack.configs[j].clone();
+                    let mut trial = combined.clone();
+                    trial.push(cand.clone());
+                    let trial = Pack::new(trial);
+                    let fits = if host_rebucket {
+                        self.buckets.iter().any(|&b| admits(b, &trial))
+                    } else {
+                        admits(bo.bucket, &trial)
+                    };
+                    if !fits {
+                        j += 1;
+                        continue;
+                    }
+                    combined.push(cand);
+                    let config = st.pending[i].job.pack.configs.remove(j);
+                    let from_job = st.pending[i].job.id;
+                    let pos =
+                        st.pending[i].resume.iter().position(|(id, _)| *id == config.id);
+                    let resume = pos.map(|p| st.pending[i].resume.remove(p).1);
+                    out.push(Joiner { config, resume, from_job });
+                }
+            }
+            // Queue entries fully absorbed never launch: retire them (a
+            // zero-adapter JobFinished keeps the stream invariant "every
+            // submitted job ends in JobFinished or JobFailed" for
+            // consumers; the adapters report under their host job).
+            let absorbed: Vec<usize> = st
+                .pending
+                .iter()
+                .filter(|p| p.job.pack.configs.is_empty())
+                .map(|p| p.job.id)
+                .collect();
+            st.pending.retain(|p| !p.job.pack.configs.is_empty());
+            (out, absorbed)
+        };
+        for job in absorbed {
+            self.emit(Event::JobFinished { job, adapters: 0, wall: 0.0, at: self.now() });
+            self.complete();
+        }
+        out
+    }
+}
+
+/// Two checkpoint-pool settings are admission-compatible when both are
+/// absent or both point at the same directory.
+fn ckpt_compat(a: &Option<CheckpointPool>, b: &Option<CheckpointPool>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => x.dir == y.dir,
+        _ => false,
+    }
+}
+
+/// Next launchable queue index under `policy` with `avail` free devices.
+/// FIFO blocks on its submission-order head; `Priority` backfills past a
+/// too-big head; `PreemptLowest` blocks on its *priority-order* head —
+/// backfilling there would re-occupy devices being vacated for it and
+/// livelock the preemption loop.
+fn pick_next(pending: &[PendingJob], policy: Policy, avail: usize) -> Option<usize> {
+    match policy {
+        Policy::Fifo => {
+            let (idx, head) = pending.iter().enumerate().min_by_key(|(_, p)| p.seq)?;
+            (head.job.d <= avail).then_some(idx)
+        }
+        Policy::Priority => {
+            let mut order: Vec<usize> = (0..pending.len()).collect();
+            order.sort_by_key(|&i| (Reverse(pending[i].priority), pending[i].seq));
+            order.into_iter().find(|&i| pending[i].job.d <= avail)
+        }
+        Policy::PreemptLowest => {
+            let (idx, head) = pending
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| (Reverse(p.priority), p.seq))?;
+            (head.job.d <= avail).then_some(idx)
+        }
+    }
+}
+
+/// Flag running jobs of strictly lower priority for preemption until the
+/// best pending job fits (counting devices already being vacated) — but
+/// only when enough preemptible capacity actually exists; otherwise
+/// flagging would evict jobs without unblocking anyone.
+fn preempt_victims(monitor: &ResourceMonitor, st: &mut Sched) {
+    let Some(top) = st.pending.iter().min_by_key(|p| (Reverse(p.priority), p.seq)) else {
+        return;
+    };
+    let (need, top_prio) = (top.job.d, top.priority);
+    let vacating: usize = st
+        .running
+        .iter()
+        .filter(|r| r.flag.load(Ordering::SeqCst))
+        .map(|r| r.d)
+        .sum();
+    let mut avail = monitor.available() + vacating;
+    if avail >= need {
+        return; // vacating already; wait for the releases
+    }
+    let takeable: usize = st
+        .running
+        .iter()
+        .filter(|r| r.priority < top_prio && !r.flag.load(Ordering::SeqCst))
+        .map(|r| r.d)
+        .sum();
+    if avail + takeable < need {
+        return; // preemption cannot unblock the starved job
+    }
+    let mut order: Vec<usize> = (0..st.running.len()).collect();
+    order.sort_by_key(|&i| st.running[i].priority);
+    for i in order {
+        if avail >= need {
+            break;
+        }
+        let r = &st.running[i];
+        if r.priority >= top_prio {
+            break; // only strictly lower priority is preemptible
+        }
+        if !r.flag.swap(true, Ordering::SeqCst) {
+            avail += r.d;
+        }
+    }
 }
 
 /// The session (see module docs).
 pub struct Session {
     shared: Arc<Shared>,
-    tx: Option<mpsc::Sender<QueuedJob>>,
     /// Training options snapshot applied to jobs at submit time.
     pub options: TrainOptions,
     /// Finished adapters are saved here as they complete, when set.
     pub checkpoints: Option<CheckpointPool>,
-    /// Preemptive re-bucketing at adapter-completion boundaries (default
-    /// on; off reproduces the pre-session pad-to-job-end engine).
+    /// Consult the switch-cost-aware retarget planner at
+    /// adapter-completion boundaries (default on; off reproduces the
+    /// pre-session pad-to-job-end engine).
     pub rebucket: bool,
-    submitted: usize,
     next_job_id: usize,
     next_adapter_id: usize,
     used_adapter_ids: std::collections::BTreeSet<usize>,
@@ -210,6 +506,7 @@ pub struct Session {
 
 impl Session {
     pub fn new(runtime: Arc<Runtime>, monitor: ResourceMonitor, model: &str) -> Session {
+        let buckets = runtime.manifest.train_buckets(model);
         let shared = Arc::new(Shared {
             runtime,
             monitor,
@@ -222,40 +519,29 @@ impl Session {
             profile: Mutex::new(vec![]),
             done: Mutex::new(0),
             done_cv: Condvar::new(),
+            submitted: AtomicUsize::new(0),
+            seq: AtomicUsize::new(0),
+            sched: Mutex::new(Sched {
+                pending: vec![],
+                running: vec![],
+                policy: Policy::Fifo,
+                elastic: false,
+                shutdown: false,
+            }),
+            sched_cv: Condvar::new(),
+            switch_cost: SwitchCost::new(0.0),
+            buckets,
         });
-        let (tx, rx) = mpsc::channel::<QueuedJob>();
         let disp = shared.clone();
         thread::Builder::new()
             .name("plora-session-dispatch".into())
-            .spawn(move || {
-                // FIFO admission: acquire devices *before* spawning the
-                // worker — queue order is preserved and a full pool applies
-                // backpressure, exactly like the pre-session engine loop.
-                while let Ok(q) = rx.recv() {
-                    match disp.monitor.acquire(q.job.d) {
-                        Ok(alloc) => {
-                            let start = disp.now();
-                            let shared = disp.clone();
-                            thread::Builder::new()
-                                .name(format!("plora-job-{}", q.job.id))
-                                .spawn(move || run_job(&shared, q, alloc, start))
-                                .expect("spawn job worker");
-                        }
-                        Err(e) => {
-                            disp.fail(q.job.id, e);
-                            disp.complete();
-                        }
-                    }
-                }
-            })
+            .spawn(move || dispatcher(disp))
             .expect("spawn session dispatcher");
         Session {
             shared,
-            tx: Some(tx),
             options: TrainOptions::default(),
             checkpoints: None,
             rebucket: true,
-            submitted: 0,
             next_job_id: 0,
             next_adapter_id: 0,
             used_adapter_ids: std::collections::BTreeSet::new(),
@@ -272,6 +558,31 @@ impl Session {
         self.shared.monitor.available()
     }
 
+    /// The queue/preemption policy (default [`Policy::Fifo`]).
+    pub fn policy(&self) -> Policy {
+        self.shared.sched.lock().unwrap().policy
+    }
+
+    pub fn set_policy(&mut self, policy: Policy) {
+        self.shared.sched.lock().unwrap().policy = policy;
+        self.shared.sched_cv.notify_all();
+    }
+
+    /// Elastic admission: offer queued adapters to compatible running
+    /// packs at their completion boundaries (default off).
+    pub fn elastic(&self) -> bool {
+        self.shared.sched.lock().unwrap().elastic
+    }
+
+    pub fn set_elastic(&mut self, on: bool) {
+        self.shared.sched.lock().unwrap().elastic = on;
+    }
+
+    /// Running mean of measured bucket-switch wall times so far.
+    pub fn switch_cost(&self) -> f64 {
+        self.shared.switch_cost.estimate()
+    }
+
     /// Subscribe to the live event stream. Events emitted after this call
     /// are delivered to the returned receiver (in addition to the log).
     pub fn subscribe(&mut self) -> mpsc::Receiver<Event> {
@@ -281,7 +592,7 @@ impl Session {
     }
 
     /// Submit a job; adapter ids are allocated by the session. Returns
-    /// immediately — the job runs as soon as devices free up.
+    /// immediately — the job runs as soon as the policy grants it devices.
     pub fn submit(&mut self, spec: JobSpec) -> Result<JobHandle> {
         if spec.adapters.is_empty() {
             bail!("submit: empty job spec");
@@ -302,14 +613,20 @@ impl Session {
             mode: spec.mode,
         };
         self.next_job_id += 1;
-        self.enqueue(job)
+        self.enqueue(job, spec.priority)
     }
 
     /// Submit a pre-planned job (planner output) with explicit job and
-    /// adapter ids. Sentinel and already-used adapter ids are rejected, so
-    /// neither can ever reach (or silently overwrite) the checkpoint pool;
-    /// the session's own id counters are advanced past accepted ids.
+    /// adapter ids at priority 0. Sentinel and already-used adapter ids
+    /// are rejected, so neither can ever reach (or silently overwrite)
+    /// the checkpoint pool; the session's own id counters are advanced
+    /// past accepted ids.
     pub fn submit_planned(&mut self, job: PlannedJob) -> Result<JobHandle> {
+        self.submit_planned_at(job, 0)
+    }
+
+    /// [`Session::submit_planned`] with an explicit queue priority.
+    pub fn submit_planned_at(&mut self, job: PlannedJob, priority: i32) -> Result<JobHandle> {
         if job.pack.n() == 0 {
             bail!("submit: empty pack in job {}", job.id);
         }
@@ -325,10 +642,10 @@ impl Session {
         let max_id = job.pack.configs.iter().map(|c| c.id).max().unwrap_or(0);
         self.next_adapter_id = self.next_adapter_id.max(max_id + 1);
         self.next_job_id = self.next_job_id.max(job.id + 1);
-        self.enqueue(job)
+        self.enqueue(job, priority)
     }
 
-    fn enqueue(&mut self, job: PlannedJob) -> Result<JobHandle> {
+    fn enqueue(&mut self, job: PlannedJob, priority: i32) -> Result<JobHandle> {
         let total = self.shared.monitor.total();
         if job.d == 0 || job.d > total {
             bail!("submit: job {} wants {} devices, pool has {total}", job.id, job.d);
@@ -336,29 +653,30 @@ impl Session {
         let adapters: Vec<usize> = job.pack.configs.iter().map(|c| c.id).collect();
         self.used_adapter_ids.extend(adapters.iter().copied());
         let handle = JobHandle { job: job.id, adapters };
-        let q = QueuedJob {
+        let p = PendingJob {
+            seq: self.shared.seq.fetch_add(1, Ordering::SeqCst),
             job,
+            priority,
             opts: self.options.clone(),
             rebucket: self.rebucket,
             checkpoints: self.checkpoints.clone(),
+            resume: vec![],
         };
-        self.tx
-            .as_ref()
-            .expect("session dispatcher alive")
-            .send(q)
-            .map_err(|_| anyhow!("session dispatcher terminated"))?;
-        self.submitted += 1;
+        self.shared.submitted.fetch_add(1, Ordering::SeqCst);
+        self.shared.sched.lock().unwrap().pending.push(p);
+        self.shared.sched_cv.notify_all();
         Ok(handle)
     }
 
-    /// Wait for every job submitted so far, then report. Errors if any job
-    /// failed (devices are always returned to the pool first; the failures
-    /// are *taken*, so they are reported exactly once). The session stays
-    /// usable: submit more and drain again.
+    /// Wait for every job submitted so far (including preempted
+    /// continuations), then report. Errors if any job failed (devices are
+    /// always returned to the pool first; the failures are *taken*, so
+    /// they are reported exactly once). The session stays usable: submit
+    /// more and drain again.
     pub fn drain(&mut self) -> Result<SessionReport> {
         {
             let mut done = self.shared.done.lock().unwrap();
-            while *done < self.submitted {
+            while *done < self.shared.submitted.load(Ordering::SeqCst) {
                 done = self.shared.done_cv.wait(done).unwrap();
             }
         }
@@ -369,40 +687,111 @@ impl Session {
             }
         }
         let mut outcomes = self.shared.outcomes.lock().unwrap().clone();
-        outcomes.sort_by_key(|o| o.job_id);
+        outcomes.sort_by(|a, b| a.job_id.cmp(&b.job_id).then(a.start.total_cmp(&b.start)));
         let makespan = outcomes.iter().map(|o| o.end).fold(0.0, f64::max);
         let samples = self.shared.profile.lock().unwrap().clone();
         let calib_fit = Calib::fit_live(&samples);
         let events = self.shared.events.lock().unwrap().clone();
-        Ok(SessionReport { outcomes, makespan, calib_fit, events })
+        Ok(SessionReport {
+            outcomes,
+            makespan,
+            calib_fit,
+            switch_cost: self.shared.switch_cost.estimate(),
+            events,
+        })
     }
 }
 
-/// One job's worker: runs the phased driver, checkpoints adapters as they
-/// finish, maps driver callbacks onto session events, releases devices.
-fn run_job(shared: &Shared, q: QueuedJob, alloc: Allocation, start: f64) {
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.shared.sched.lock().unwrap().shutdown = true;
+        self.shared.sched_cv.notify_all();
+    }
+}
+
+/// The dispatcher loop: launch queued jobs per policy when devices are
+/// free; under [`Policy::PreemptLowest`] flag victims for starved
+/// higher-priority work; park until submits/releases wake it.
+fn dispatcher(shared: Arc<Shared>) {
+    let mut st = shared.sched.lock().unwrap();
+    loop {
+        if st.shutdown {
+            break;
+        }
+        let avail = shared.monitor.available();
+        if let Some(idx) = pick_next(&st.pending, st.policy, avail) {
+            if let Some(alloc) = shared.monitor.try_acquire(st.pending[idx].job.d) {
+                let p = st.pending.remove(idx);
+                let flag = Arc::new(AtomicBool::new(false));
+                st.running.push(RunningJob {
+                    job: p.job.id,
+                    priority: p.priority,
+                    d: p.job.d,
+                    flag: flag.clone(),
+                });
+                let sh = shared.clone();
+                let start = shared.now();
+                thread::Builder::new()
+                    .name(format!("plora-job-{}", p.job.id))
+                    .spawn(move || run_job(&sh, p, alloc, flag, start))
+                    .expect("spawn job worker");
+                continue; // more queue entries may fit
+            }
+        } else if st.policy == Policy::PreemptLowest && !st.pending.is_empty() {
+            preempt_victims(&shared.monitor, &mut st);
+        }
+        st = shared.sched_cv.wait(st).unwrap();
+    }
+}
+
+/// One job's worker: runs the phased driver with the session's elastic
+/// control surface, checkpoints adapters as they finish, maps driver
+/// callbacks onto session events, re-queues preempted members, releases
+/// devices.
+fn run_job(
+    shared: &Shared,
+    mut p: PendingJob,
+    alloc: Allocation,
+    flag: Arc<AtomicBool>,
+    start: f64,
+) {
     let devices = alloc.devices.clone();
     shared.emit(Event::JobStarted {
-        job: q.job.id,
-        n_adapters: q.job.pack.n(),
+        job: p.job.id,
+        n_adapters: p.job.pack.n(),
         devices: devices.clone(),
         at: start,
     });
+    let job_id = p.job.id;
     let mut ckpt_err: Option<anyhow::Error> = None;
     let result = {
+        let checkpoints = p.checkpoints.clone();
+        let opts = p.opts.clone();
+        let rebucket = p.rebucket;
+        let (host_d, host_mode) = (p.job.d, p.job.mode);
+        let mut offer = |bo: &BoundaryOffer<'_>| -> Vec<Joiner> {
+            shared.offer_joiners(job_id, &opts, rebucket, &checkpoints, host_d, host_mode, bo)
+        };
+        let mut ctl = ElasticCtl {
+            rebucket: p.rebucket,
+            switch_cost: Some(shared.switch_cost.clone()),
+            preempt: Some(flag),
+            offer: Some(&mut offer),
+            resume: std::mem::take(&mut p.resume),
+        };
         let mut on_ev = |ev: PackPhaseEvent<'_>| match ev {
             PackPhaseEvent::AdapterFinished { slot, report, state } => {
-                if let Some(ckpt) = &q.checkpoints {
+                if let Some(ckpt) = &p.checkpoints {
                     let c = &report.config;
                     let saved = ckpt
                         .save_state(&shared.model, state, &[(slot, c.id, c.rank)])
-                        .and_then(|_| ckpt.save_adapter(&shared.model, q.job.id, report));
+                        .and_then(|_| ckpt.save_adapter(&shared.model, job_id, report));
                     if let Err(e) = saved {
                         ckpt_err.get_or_insert(e);
                     }
                 }
                 shared.emit(Event::AdapterFinished {
-                    job: q.job.id,
+                    job: job_id,
                     adapter: report.config.id,
                     task: report.config.task.clone(),
                     steps: report.steps,
@@ -411,49 +800,132 @@ fn run_job(shared: &Shared, q: QueuedJob, alloc: Allocation, start: f64) {
                     at: shared.now(),
                 });
             }
-            PackPhaseEvent::Rebucketed { from, to, survivors } => {
+            PackPhaseEvent::AdapterAdmitted { config, from_job } => {
+                shared.emit(Event::AdapterAdmitted {
+                    job: job_id,
+                    adapter: config.id,
+                    task: config.task.clone(),
+                    from_job,
+                    at: shared.now(),
+                });
+            }
+            PackPhaseEvent::Rebucketed { from, to, survivors, .. } => {
                 let at = shared.now();
-                shared.emit(Event::Rebucketed { job: q.job.id, from, to, survivors, at });
+                shared.emit(Event::Rebucketed { job: job_id, from, to, survivors, at });
+            }
+            PackPhaseEvent::Preempted { remaining } => {
+                shared.emit(Event::Preempted {
+                    job: job_id,
+                    adapters: remaining,
+                    at: shared.now(),
+                });
             }
         };
         run_pack_phased(
             &shared.runtime,
             &shared.model,
-            &q.job.pack.configs,
-            &q.opts,
-            q.rebucket,
+            &p.job.pack.configs,
+            &p.opts,
+            &mut ctl,
             &mut on_ev,
         )
     };
+    shared.remove_running(job_id);
     shared.monitor.release(alloc);
+    shared.sched_cv.notify_all();
     match result {
-        Ok((report, _state)) => {
+        Ok(out) => {
             if let Some(e) = ckpt_err {
-                shared.fail(q.job.id, e);
-            } else {
-                let end = shared.now();
+                shared.fail(job_id, e);
+                shared.complete();
+                return;
+            }
+            let end = shared.now();
+            shared.profile.lock().unwrap().extend(out.report.profile.iter().copied());
+            if out.preempted.is_empty() {
                 let (fit, samples) = {
-                    let mut prof = shared.profile.lock().unwrap();
-                    prof.extend(report.profile.iter().copied());
+                    let prof = shared.profile.lock().unwrap();
                     (Calib::fit_live(prof.as_slice()), prof.len())
                 };
-                shared.emit(Event::CalibUpdated { fit, samples, at: shared.now() });
+                shared.emit(Event::CalibUpdated {
+                    fit,
+                    samples,
+                    switch_cost: shared.switch_cost.estimate(),
+                    at: shared.now(),
+                });
                 shared.emit(Event::JobFinished {
-                    job: q.job.id,
-                    adapters: report.adapters.len(),
+                    job: job_id,
+                    adapters: out.report.adapters.len(),
                     wall: end - start,
                     at: end,
                 });
                 shared.outcomes.lock().unwrap().push(JobOutcome {
-                    job_id: q.job.id,
+                    job_id,
                     devices,
                     start,
                     end,
-                    report,
+                    report: out.report,
                 });
+                shared.complete();
+                return;
             }
+            // Preempted: round-trip the members through the checkpoint
+            // pool when one is attached, then re-queue the continuation
+            // under the same job id/seq/priority.
+            let mut resume: Vec<(usize, MemberResume)> = vec![];
+            let mut remaining: Vec<LoraConfig> = vec![];
+            for (c, r) in out.preempted {
+                let payload = match &p.checkpoints {
+                    Some(ckpt) => {
+                        match ckpt
+                            .save_resume(&shared.model, c.id, &r)
+                            .and_then(|_| ckpt.load_resume(&shared.model, c.id))
+                        {
+                            Ok(loaded) => loaded,
+                            Err(e) => {
+                                shared.fail(job_id, e);
+                                shared.complete();
+                                return;
+                            }
+                        }
+                    }
+                    None => r,
+                };
+                resume.push((c.id, payload));
+                remaining.push(c);
+            }
+            // Record the executed segment even when no adapter finished in
+            // it — its steps/wall/padded rows are real work the report's
+            // aggregates (e.g. `padded_rows`) must account for.
+            shared.outcomes.lock().unwrap().push(JobOutcome {
+                job_id,
+                devices,
+                start,
+                end,
+                report: out.report,
+            });
+            let cont = PendingJob {
+                seq: p.seq,
+                job: PlannedJob {
+                    id: job_id,
+                    pack: Pack::new(remaining),
+                    d: p.job.d,
+                    mode: p.job.mode,
+                },
+                priority: p.priority,
+                opts: p.opts,
+                rebucket: p.rebucket,
+                checkpoints: p.checkpoints,
+                resume,
+            };
+            shared.submitted.fetch_add(1, Ordering::SeqCst);
+            shared.sched.lock().unwrap().pending.push(cont);
+            shared.sched_cv.notify_all();
+            shared.complete();
         }
-        Err(e) => shared.fail(q.job.id, e),
+        Err(e) => {
+            shared.fail(job_id, e);
+            shared.complete();
+        }
     }
-    shared.complete();
 }

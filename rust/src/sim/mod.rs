@@ -4,23 +4,28 @@
 //! and §6 reproductions.
 //!
 //! The simulator re-derives the timeline independently of the planner's
-//! predictions: jobs launch FIFO when enough devices are free (the same
-//! semantics as the live [`crate::session::Session`]), durations come from
-//! the cost model optionally perturbed by lognormal noise (robustness
-//! ablation — the planner plans on clean estimates, reality jitters).
+//! predictions: jobs launch under the same [`Policy`] vocabulary as the
+//! live [`crate::session::Session`] (FIFO head-of-line, priority
+//! backfill, or strict priority with preemption), may carry **arrival
+//! times** (skewed-arrival scenarios), durations come from the cost model
+//! optionally perturbed by lognormal noise (robustness ablation — the
+//! planner plans on clean estimates, reality jitters), and every
+//! preemption-resume charges the cost model's `bucket_switch_cost` term —
+//! the same penalty the live retarget planner weighs (as does every
+//! mid-job bucket switch).
 //!
 //! It speaks the session's language: every run emits the same
 //! [`Event`] stream a live session does (`JobStarted`, `AdapterFinished`
-//! at cost-model phase boundaries, `Rebucketed`, `JobFinished`), and the
-//! per-job timeline in [`SimResult::jobs`] is reconstructed *from that
-//! log* — so simulated and live traces can be compared or rendered by the
-//! same consumers.
+//! at cost-model phase boundaries, `Rebucketed`, `Preempted`,
+//! `JobFinished`), and the per-job timeline in [`SimResult::jobs`] is
+//! reconstructed *from that log* — so simulated and live traces can be
+//! compared or rendered by the same consumers.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 
-use crate::costmodel::{CostModel, TrainBudget};
+use crate::costmodel::{CostModel, JobPhase, TrainBudget};
 use crate::planner::PlannedJob;
-use crate::session::Event;
+use crate::session::{Event, Policy};
 use crate::util::rng::Rng;
 
 /// Simulation options.
@@ -29,11 +34,13 @@ pub struct SimOptions {
     /// Lognormal sigma applied to each job duration (0 = deterministic).
     pub noise: f64,
     pub seed: u64,
+    /// Queue dispatch policy (the session's vocabulary).
+    pub policy: Policy,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { noise: 0.0, seed: 42 }
+        SimOptions { noise: 0.0, seed: 42, policy: Policy::Fifo }
     }
 }
 
@@ -52,12 +59,14 @@ pub struct SimJob {
 /// Simulation outcome.
 #[derive(Debug, Clone)]
 pub struct SimResult {
-    /// Per-job timeline, reconstructed from the event log.
+    /// Per-job timeline, reconstructed from the event log (first launch
+    /// to final finish for preempted-and-resumed jobs).
     pub jobs: Vec<SimJob>,
     pub makespan: f64,
     /// Busy seconds per device.
     pub device_busy: Vec<f64>,
-    /// Scheduler decision points (completion events advanced past).
+    /// Scheduler decision points (phase / arrival / preemption events
+    /// advanced past).
     pub events: usize,
     /// The session-compatible event stream of the whole run.
     pub log: Vec<Event>,
@@ -77,6 +86,44 @@ impl SimResult {
         let work: usize = self.jobs.iter().map(|j| j.rank_sum).sum();
         work as f64 / self.makespan.max(1e-9)
     }
+
+    /// Number of `Preempted` events in the log.
+    pub fn preemptions(&self) -> usize {
+        self.log.iter().filter(|e| matches!(e, Event::Preempted { .. })).count()
+    }
+}
+
+/// One queued (or preempted-and-requeued) job awaiting devices.
+struct Pend {
+    qi: usize,
+    seq: usize,
+    prio: i32,
+    arrive: f64,
+    /// Remaining phases + partial progress of a preempted job.
+    resume: Option<ResumeSim>,
+}
+
+struct ResumeSim {
+    phases: Vec<JobPhase>,
+    next: usize,
+    /// Seconds left of phase `next` when the job was preempted.
+    partial_left: f64,
+    shape: (usize, usize, usize),
+    factor: f64,
+}
+
+/// One job currently holding devices.
+struct Run {
+    qi: usize,
+    seq: usize,
+    prio: i32,
+    devices: Vec<usize>,
+    phases: Vec<JobPhase>,
+    next: usize,
+    phase_end: f64,
+    shape: (usize, usize, usize),
+    factor: f64,
+    seg_start: f64,
 }
 
 /// The simulator.
@@ -91,114 +138,314 @@ impl Simulator {
         Simulator { cm, budget: TrainBudget::default(), gpus }
     }
 
-    /// Execute a job queue FIFO on the modelled pool.
+    /// Execute a job queue on the modelled pool under `opts.policy` with
+    /// all priorities 0 and simultaneous arrival.
     pub fn run_queue(&self, queue: &[PlannedJob], opts: &SimOptions) -> SimResult {
+        self.run_queue_prio(queue, &[], opts)
+    }
+
+    /// Execute with explicit per-job priorities (`prios[i]` belongs to
+    /// `queue[i]`; missing entries are 0), simultaneous arrival.
+    pub fn run_queue_prio(
+        &self,
+        queue: &[PlannedJob],
+        prios: &[i32],
+        opts: &SimOptions,
+    ) -> SimResult {
+        self.run_queue_arrivals(queue, prios, &[], opts)
+    }
+
+    /// The full policy path: per-job priorities and arrival times
+    /// (`arrivals[i]` seconds; missing entries arrive at 0). A job is
+    /// invisible to the dispatcher before its arrival — the skewed-arrival
+    /// scenarios where priority and preemption earn their keep.
+    pub fn run_queue_arrivals(
+        &self,
+        queue: &[PlannedJob],
+        prios: &[i32],
+        arrivals: &[f64],
+        opts: &SimOptions,
+    ) -> SimResult {
         let mut rng = Rng::new(opts.seed);
+        let switch_cost = self.cm.calib.bucket_switch_cost;
         let mut free: Vec<usize> = (0..self.gpus).collect();
-        // (end_time, devices)
-        let mut running: Vec<(f64, Vec<usize>)> = vec![];
-        let mut pending: VecDeque<&PlannedJob> = queue.iter().collect();
+        let mut pending: Vec<Pend> = queue
+            .iter()
+            .enumerate()
+            .map(|(i, _)| Pend {
+                qi: i,
+                seq: i,
+                prio: prios.get(i).copied().unwrap_or(0),
+                arrive: arrivals.get(i).copied().unwrap_or(0.0),
+                resume: None,
+            })
+            .collect();
+        let mut running: Vec<Run> = vec![];
         let mut now = 0.0f64;
         let mut log: Vec<Event> = vec![];
         let mut busy = vec![0.0f64; self.gpus];
         let mut events = 0usize;
 
-        while !pending.is_empty() || !running.is_empty() {
-            // FIFO launch while the head fits.
-            while let Some(job) = pending.front() {
-                if job.d <= free.len() {
-                    let job = pending.pop_front().unwrap();
-                    let devices: Vec<usize> = free.drain(..job.d).collect();
-                    let phases = self.cm.job_phases(&job.pack, job.d, job.mode, &self.budget);
-                    // Noise perturbs the whole job's duration once; phases
-                    // stretch uniformly so boundary order is preserved.
-                    let factor =
-                        if opts.noise > 0.0 { (opts.noise * rng.normal()).exp() } else { 1.0 };
-                    log.push(Event::JobStarted {
-                        job: job.id,
-                        n_adapters: job.pack.n(),
-                        devices: devices.clone(),
-                        at: now,
-                    });
-                    let mut shape =
-                        (job.pack.n(), job.pack.r_pad(), job.pack.bs_pad());
-                    let mut t = now;
-                    for p in &phases {
-                        t += p.dur * factor;
-                        for &id in &p.finished {
-                            log.push(Event::AdapterFinished {
-                                job: job.id,
-                                adapter: id,
-                                task: String::new(),
-                                steps: 0,
-                                eval_loss: f32::NAN,
-                                eval_acc: f32::NAN,
-                                at: t,
-                            });
-                        }
-                        if p.survivors.0 > 0 && p.survivors != shape {
-                            log.push(Event::Rebucketed {
-                                job: job.id,
-                                from: shape,
-                                to: p.survivors,
-                                survivors: vec![],
-                                at: t,
-                            });
-                            shape = p.survivors;
-                        }
-                    }
-                    let dur = t - now;
-                    for &dev in &devices {
-                        busy[dev] += dur;
-                    }
-                    log.push(Event::JobFinished {
-                        job: job.id,
-                        adapters: job.pack.n(),
-                        wall: dur,
-                        at: t,
-                    });
-                    running.push((t, devices));
-                } else {
-                    break;
+        // Next launchable pending index under the policy, among arrived
+        // jobs. FIFO and PreemptLowest block on their head (submission /
+        // priority order); Priority backfills past a too-big head.
+        let pick = |pending: &[Pend], now: f64, avail: usize| -> Option<usize> {
+            let arrived = |p: &Pend| p.arrive <= now + 1e-12;
+            match opts.policy {
+                Policy::Fifo => {
+                    let (idx, head) = pending
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, p)| arrived(p))
+                        .min_by_key(|(_, p)| p.seq)?;
+                    (queue[head.qi].d <= avail).then_some(idx)
+                }
+                Policy::Priority => {
+                    let mut order: Vec<usize> = (0..pending.len())
+                        .filter(|&i| arrived(&pending[i]))
+                        .collect();
+                    order.sort_by_key(|&i| (std::cmp::Reverse(pending[i].prio), pending[i].seq));
+                    order.into_iter().find(|&i| queue[pending[i].qi].d <= avail)
+                }
+                Policy::PreemptLowest => {
+                    // Strict priority: never backfill past a starved
+                    // higher-priority job (its devices are being vacated —
+                    // backfilling would re-occupy them and livelock).
+                    let (idx, head) = pending
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, p)| arrived(p))
+                        .min_by_key(|(_, p)| (std::cmp::Reverse(p.prio), p.seq))?;
+                    (queue[head.qi].d <= avail).then_some(idx)
                 }
             }
+        };
+
+        while !pending.is_empty() || !running.is_empty() {
+            // Launch while the policy grants devices.
+            while let Some(idx) = pick(&pending, now, free.len()) {
+                let p = pending.remove(idx);
+                let job = &queue[p.qi];
+                let devices: Vec<usize> = free.drain(..job.d).collect();
+                let (phases, next, first_dur, shape, factor) = match p.resume {
+                    Some(r) => {
+                        // Resuming pays the restore side of the switch.
+                        (r.phases, r.next, r.partial_left + switch_cost, r.shape, r.factor)
+                    }
+                    None => {
+                        let phases = self.cm.job_phases(&job.pack, job.d, job.mode, &self.budget);
+                        // Noise perturbs the whole job's duration once;
+                        // phases stretch uniformly so boundary order is
+                        // preserved.
+                        let factor = if opts.noise > 0.0 {
+                            (opts.noise * rng.normal()).exp()
+                        } else {
+                            1.0
+                        };
+                        let shape = (job.pack.n(), job.pack.r_pad(), job.pack.bs_pad());
+                        let d0 = phases.first().map(|p| p.dur * factor).unwrap_or(0.0);
+                        (phases, 0usize, d0, shape, factor)
+                    }
+                };
+                log.push(Event::JobStarted {
+                    job: job.id,
+                    n_adapters: job.pack.n(),
+                    devices: devices.clone(),
+                    at: now,
+                });
+                let first_dur = if next >= phases.len() { 0.0 } else { first_dur };
+                running.push(Run {
+                    qi: p.qi,
+                    seq: p.seq,
+                    prio: p.prio,
+                    devices,
+                    phases,
+                    next,
+                    phase_end: now + first_dur,
+                    shape,
+                    factor,
+                    seg_start: now,
+                });
+            }
+
+            // Preemption: a starved higher-priority job evicts strictly
+            // lower-priority running jobs — but only when evicting enough
+            // of them actually frees what it needs.
+            if opts.policy == Policy::PreemptLowest {
+                let starved = pending
+                    .iter()
+                    .filter(|p| p.arrive <= now + 1e-12)
+                    .min_by_key(|p| (std::cmp::Reverse(p.prio), p.seq))
+                    .map(|p| (p.prio, queue[p.qi].d));
+                if let Some((top_prio, need)) = starved {
+                    let takeable: usize = running
+                        .iter()
+                        .filter(|r| r.prio < top_prio)
+                        .map(|r| r.devices.len())
+                        .sum();
+                    if need > free.len() && free.len() + takeable >= need {
+                        // Evict lowest-priority victims until it fits.
+                        while free.len() < need {
+                            let (vi, _) = running
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, r)| r.prio < top_prio)
+                                .min_by_key(|(_, r)| (r.prio, std::cmp::Reverse(r.seq)))
+                                .expect("takeable victims verified above");
+                            events += 1;
+                            let r = running.swap_remove(vi);
+                            let job = &queue[r.qi];
+                            for &dev in &r.devices {
+                                busy[dev] += now - r.seg_start;
+                            }
+                            free.extend(r.devices);
+                            free.sort_unstable();
+                            let prior = &r.phases[..r.next];
+                            let done_ids: std::collections::BTreeSet<usize> =
+                                prior.iter().flat_map(|p| p.finished.iter().copied()).collect();
+                            let remaining: Vec<usize> = job
+                                .pack
+                                .configs
+                                .iter()
+                                .map(|c| c.id)
+                                .filter(|id| !done_ids.contains(id))
+                                .collect();
+                            log.push(Event::Preempted {
+                                job: job.id,
+                                adapters: remaining,
+                                at: now,
+                            });
+                            pending.push(Pend {
+                                qi: r.qi,
+                                seq: r.seq,
+                                prio: r.prio,
+                                arrive: now,
+                                resume: Some(ResumeSim {
+                                    partial_left: (r.phase_end - now).max(0.0),
+                                    phases: r.phases,
+                                    next: r.next,
+                                    shape: r.shape,
+                                    factor: r.factor,
+                                }),
+                            });
+                        }
+                        continue; // re-run launches at the same instant
+                    }
+                }
+            }
+
+            // Next event: the earliest phase boundary or job arrival.
+            let next_phase = running.iter().map(|r| r.phase_end).fold(f64::INFINITY, f64::min);
+            let next_arrival = pending
+                .iter()
+                .map(|p| p.arrive)
+                .filter(|&a| a > now + 1e-12)
+                .fold(f64::INFINITY, f64::min);
             if running.is_empty() {
                 if pending.is_empty() {
                     break;
                 }
-                // Head job larger than the pool: impossible queue.
-                panic!(
-                    "sim: job {} wants {} devices, pool has {}",
-                    pending[0].id, pending[0].d, self.gpus
-                );
+                if next_arrival.is_finite() {
+                    events += 1;
+                    now = next_arrival;
+                    continue;
+                }
+                // Arrived head larger than the whole pool: impossible.
+                let hd = pending
+                    .iter()
+                    .min_by_key(|p| (std::cmp::Reverse(p.prio), p.seq))
+                    .unwrap();
+                let j = &queue[hd.qi];
+                panic!("sim: job {} wants {} devices, pool has {}", j.id, j.d, self.gpus);
             }
-            // Advance to the earliest completion.
+            if next_arrival < next_phase {
+                events += 1;
+                now = next_arrival;
+                continue;
+            }
+
+            // Advance to the earliest phase boundary.
             events += 1;
             let (idx, _) = running
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                .min_by(|a, b| a.1.phase_end.total_cmp(&b.1.phase_end))
                 .unwrap();
-            let (end, devices) = running.swap_remove(idx);
-            now = end.max(now);
-            free.extend(devices);
-            free.sort_unstable();
+            now = running[idx].phase_end.max(now);
+            let finished_job = {
+                let r = &mut running[idx];
+                let job = &queue[r.qi];
+                if r.next < r.phases.len() {
+                    let p = r.phases[r.next].clone();
+                    for &id in &p.finished {
+                        log.push(Event::AdapterFinished {
+                            job: job.id,
+                            adapter: id,
+                            task: String::new(),
+                            steps: 0,
+                            eval_loss: f32::NAN,
+                            eval_acc: f32::NAN,
+                            at: now,
+                        });
+                    }
+                    let mut switch_pay = 0.0;
+                    if p.survivors.0 > 0 && p.survivors != r.shape {
+                        log.push(Event::Rebucketed {
+                            job: job.id,
+                            from: r.shape,
+                            to: p.survivors,
+                            survivors: vec![],
+                            at: now,
+                        });
+                        r.shape = p.survivors;
+                        switch_pay = switch_cost;
+                    }
+                    r.next += 1;
+                    if r.next < r.phases.len() {
+                        r.phase_end = now + switch_pay + r.phases[r.next].dur * r.factor;
+                        false
+                    } else {
+                        true
+                    }
+                } else {
+                    true
+                }
+            };
+            if finished_job {
+                let r = running.swap_remove(idx);
+                let job = &queue[r.qi];
+                for &dev in &r.devices {
+                    busy[dev] += now - r.seg_start;
+                }
+                log.push(Event::JobFinished {
+                    job: job.id,
+                    adapters: job.pack.n(),
+                    wall: now - r.seg_start,
+                    at: now,
+                });
+                free.extend(r.devices);
+                free.sort_unstable();
+            }
         }
 
         // Order the log by timestamp so it reads like a live session's
-        // stream (job event chains are generated at admission time, so
-        // concurrent jobs would otherwise interleave out of order); the
-        // stable sort keeps same-instant events in emission order.
+        // stream; the stable sort keeps same-instant events in emission
+        // order.
         log.sort_by(|a, b| a.at().total_cmp(&b.at()));
 
         // The timeline is read back off the event log (same stream a live
-        // session emits), joined with the queue's static job facts.
+        // session emits), joined with the queue's static job facts. A
+        // preempted job's SimJob spans first launch to final finish.
         let by_id: BTreeMap<usize, &PlannedJob> = queue.iter().map(|j| (j.id, j)).collect();
         let mut jobs: Vec<SimJob> = vec![];
         let mut open: BTreeMap<usize, usize> = BTreeMap::new(); // job id -> index
         for ev in &log {
             match ev {
                 Event::JobStarted { job, devices, at, .. } => {
+                    if let Some(&i) = open.get(job) {
+                        jobs[i].devices = devices.clone();
+                        continue;
+                    }
                     let pj = by_id[job];
                     open.insert(*job, jobs.len());
                     jobs.push(SimJob {
@@ -282,7 +529,7 @@ mod tests {
         let plan = min_gpu_plan(&s.cm, &s.budget, 8, &grid).unwrap();
         let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
         let clean = s.run_queue(&queue, &SimOptions::default());
-        let noisy = s.run_queue(&queue, &SimOptions { noise: 0.2, seed: 7 });
+        let noisy = s.run_queue(&queue, &SimOptions { noise: 0.2, seed: 7, ..Default::default() });
         assert!(noisy.makespan != clean.makespan);
         assert!((noisy.makespan / clean.makespan - 1.0).abs() < 0.5);
         assert_eq!(noisy.jobs.len(), clean.jobs.len());
@@ -326,7 +573,9 @@ mod tests {
             .map(|e| match e {
                 Event::JobStarted { .. } => "started",
                 Event::AdapterFinished { .. } => "adapter",
+                Event::AdapterAdmitted { .. } => "admitted",
                 Event::Rebucketed { .. } => "rebucket",
+                Event::Preempted { .. } => "preempted",
                 Event::JobFinished { .. } => "finished",
                 Event::JobFailed { .. } => "failed",
                 Event::CalibUpdated { .. } => "calib",
@@ -349,5 +598,70 @@ mod tests {
         for w in res.log.windows(2) {
             assert!(w[0].at() <= w[1].at() + 1e-12);
         }
+    }
+
+    /// The policy path on a skewed arrival: a high-priority job arriving
+    /// mid-run evicts both lower-priority running jobs under
+    /// `PreemptLowest` (two `Preempted` events, resumes charged one
+    /// `bucket_switch_cost` each); under FIFO it simply waits. Work is
+    /// conserved either way.
+    #[test]
+    fn preempt_lowest_evicts_on_late_high_priority_arrival() {
+        let mut s = sim("qwen2.5-7b");
+        s.gpus = 2;
+        s.cm.calib.bucket_switch_cost = 5.0;
+        let cfg = |id: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: 1,
+            rank: 16,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        let job = |id: usize, c0: usize, d: usize| PlannedJob {
+            id,
+            pack: Pack::new(vec![cfg(c0)]),
+            d,
+            mode: ExecMode::Packed,
+        };
+        // A and B run on one device each; C (d=2, high priority) arrives
+        // mid-run and needs the whole pool.
+        let queue = vec![job(0, 0, 1), job(1, 1, 1), job(2, 2, 2)];
+        let t_solo = s.cm.job_time(&queue[0].pack, 1, ExecMode::Packed, &s.budget);
+        let t_c = s.cm.job_time(&queue[2].pack, 2, ExecMode::Packed, &s.budget);
+        let arrive = t_solo * 0.5;
+        let opts = |policy| SimOptions { policy, ..Default::default() };
+
+        let fifo = s.run_queue_arrivals(
+            &queue,
+            &[1, 0, 3],
+            &[0.0, 0.0, arrive],
+            &opts(Policy::Fifo),
+        );
+        assert_eq!(fifo.preemptions(), 0);
+        let cf = fifo.jobs.iter().find(|j| j.id == 2).unwrap();
+        assert!((cf.start - t_solo).abs() < 1e-9, "FIFO: C waits for both to finish");
+        assert!((fifo.makespan - (t_solo + t_c)).abs() < 1e-6);
+
+        let pre = s.run_queue_arrivals(
+            &queue,
+            &[1, 0, 3],
+            &[0.0, 0.0, arrive],
+            &opts(Policy::PreemptLowest),
+        );
+        assert_eq!(pre.preemptions(), 2, "both low-priority jobs evicted");
+        let cp = pre.jobs.iter().find(|j| j.id == 2).unwrap();
+        assert!((cp.start - arrive).abs() < 1e-9, "C starts the moment it arrives");
+        // A and B resume after C: remaining half plus one switch cost
+        // each, in parallel on the two devices.
+        let want = arrive + t_c + (t_solo - arrive) + 5.0;
+        assert!(
+            (pre.makespan - want).abs() < 1e-6,
+            "makespan {} vs modeled {}",
+            pre.makespan,
+            want
+        );
+        // Priority was served: C finished far earlier than under FIFO.
+        assert!(cp.end < cf.end);
     }
 }

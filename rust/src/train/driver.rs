@@ -5,33 +5,44 @@
 //! receives its own task batch; the base weights are shared; per-adapter
 //! alpha, learning rate, rank mask and loss mask carry the heterogeneity.
 //!
-//! Two properties make the driver orchestration-friendly (the `session`
-//! subsystem builds on both):
+//! Three properties make the driver orchestration-friendly (the `session`
+//! subsystem builds on all of them — DESIGN.md §10 "Elastic sessions"):
 //!
-//! - **Per-adapter streams**: an adapter's A-init, train batches and eval
-//!   batches come from its own `(seed, id)`-keyed generator, so its whole
-//!   trajectory is bit-identical whether it runs solo or packed, and across
-//!   bucket shapes (§3.2 "identical to single-adapter fine-tuning").
-//! - **Phased execution with re-bucketing**: training advances between
-//!   adapter-completion boundaries; when adapters exhaust their budget they
-//!   are evaluated, reported through [`PackPhaseEvent`], and — with
-//!   `rebucket` on — the survivors are re-packed onto a smaller
-//!   `(n, rank, batch)` bucket instead of padding to job end (the
-//!   cost-model's phase-wise `job_time`, realized live).
+//! - **Per-adapter streams and clocks**: an adapter's A-init, train
+//!   batches, eval batches *and AdamW step counter* come from its own
+//!   `(seed, id)`-keyed state, so its whole trajectory is bit-identical
+//!   whether it runs solo, packed from the start, admitted mid-job, or
+//!   preempted and resumed (§3.2 "identical to single-adapter
+//!   fine-tuning").
+//! - **Elastic boundaries**: training advances between adapter-completion
+//!   boundaries; at each boundary finished adapters are evaluated and
+//!   reported, the session may **inject queued joiners**
+//!   ([`ElasticCtl::offer`]), and the pack is re-targeted onto the
+//!   cheapest admitting bucket — growing *or* shrinking — only when the
+//!   modeled phase-time saving beats the calibrated switch cost
+//!   ([`crate::planner::rebalance::retarget_bucket`]).
+//! - **Preemption**: a dispatcher-set flag ([`ElasticCtl::preempt`])
+//!   stops the job at the next step; every unfinished member is
+//!   checkpointed at true rank (params + moments + its own `t`) into
+//!   [`MemberResume`]s the session re-queues, and a later run restores
+//!   them bit-identically via [`ElasticCtl::resume`].
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::LoraConfig;
-use crate::costmodel::{Pack, TrainBudget};
-use crate::planner::rebalance::shrink_bucket;
+use crate::costmodel::{Pack, SwitchCost, TrainBudget};
+use crate::planner::rebalance::retarget_bucket;
+use crate::runtime::state::{JoinSource, MemberState};
 use crate::runtime::{Executable, HostTensor, ModelInfo, Runtime, TrainState};
-use crate::train::tasks;
+use crate::train::tasks::{self, SampleBuf};
 use crate::util::rng::Rng;
 
 /// Options for one live job.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TrainOptions {
     pub budget: TrainBudget,
     /// Held-out batches for eval (before and after fine-tuning).
@@ -68,25 +79,32 @@ pub struct AdapterReport {
 #[derive(Debug, Clone)]
 pub struct JobReport {
     pub artifact: String,
-    /// Initial bucket shape executed (≥ requested pack shape; re-bucketing
-    /// only ever shrinks it mid-job).
+    /// Initial bucket shape executed (≥ requested pack shape; elastic
+    /// re-bucketing may grow or shrink it mid-job).
     pub bucket_n: usize,
     pub bucket_r: usize,
     pub bucket_bs: usize,
+    /// Steps executed by this run (a preempted segment executes fewer
+    /// than the pack's budget; the continuation runs the rest).
     pub steps: usize,
     pub wall_secs: f64,
     /// Mean step wall time (excludes compile).
     pub step_secs: f64,
     pub compile_secs: f64,
+    /// Adapters that *finished* in this run (admitted joiners included;
+    /// preempted members are not here — they return as [`MemberResume`]).
     pub adapters: Vec<AdapterReport>,
     /// `(real_tokens, alive_adapters, secs)` per step — feeds
     /// `Calib::fit_live` (§4 "profiling data from the first iterations").
     pub profile: Vec<(f64, f64, f64)>,
     /// Padded rows (bucket `n × bs`) summed over executed steps — the
-    /// deterministic work proxy that re-bucketing shrinks.
+    /// deterministic work proxy that re-bucketing shrinks and admission
+    /// fills with real work.
     pub padded_rows: usize,
-    /// Bucket shrinks performed at adapter-completion boundaries.
+    /// Bucket switches performed at adapter-completion boundaries.
     pub rebuckets: usize,
+    /// Queued adapters admitted into this pack at boundaries.
+    pub admitted: usize,
 }
 
 impl JobReport {
@@ -97,19 +115,116 @@ impl JobReport {
     }
 }
 
+/// One adapter's resumable training state: what a preemption checkpoint
+/// carries out of a job and what [`ElasticCtl::resume`] /
+/// [`Joiner::resume`] carry back in. `state` restores the math
+/// bit-exactly; the rest restores the driver's bookkeeping.
+#[derive(Debug, Clone)]
+pub struct MemberResume {
+    pub state: MemberState,
+    /// Steps already trained (the data stream is fast-forwarded past
+    /// exactly this many batches on resume).
+    pub steps_done: usize,
+    pub first_loss: f32,
+    pub base_loss: f32,
+    pub base_acc: f32,
+    /// Loss-curve samples recorded before the preemption, so the final
+    /// report's curve spans the full trajectory.
+    pub curve: Vec<(usize, f32)>,
+}
+
+/// A queued adapter the session hands a running pack at a completion
+/// boundary.
+pub struct Joiner {
+    pub config: LoraConfig,
+    /// `Some` when the joiner is a preemption victim re-entering.
+    pub resume: Option<MemberResume>,
+    /// The session job the adapter was originally submitted under.
+    pub from_job: usize,
+}
+
+/// What the session's admission closure sees at a boundary.
+pub struct BoundaryOffer<'a> {
+    /// Configs still training after this boundary.
+    pub survivors: Pack,
+    /// The bucket currently executing.
+    pub bucket: (usize, usize, usize),
+    /// The model's full `(n, r, bs)` bucket grid.
+    pub buckets: &'a [(usize, usize, usize)],
+}
+
+/// The elastic-session control surface of [`run_pack_phased`]. A plain
+/// phased run uses [`ElasticCtl::none`]; the session wires all of it.
+pub struct ElasticCtl<'a> {
+    /// Consult the retarget planner at boundaries (off reproduces the
+    /// pre-session pad-to-job-end engine).
+    pub rebucket: bool,
+    /// Live switch-cost calibration shared across the session's jobs:
+    /// the retarget decision reads `estimate()`, every performed switch
+    /// `record()`s its measured wall time.
+    pub switch_cost: Option<SwitchCost>,
+    /// Dispatcher-set preemption flag, checked before every step.
+    pub preempt: Option<Arc<AtomicBool>>,
+    /// Admission hook: called at every boundary with surviving members;
+    /// returns queued adapters to inject. Everything returned **must**
+    /// fit some bucket together with the survivors (the session checks
+    /// with the same `retarget` machinery; the driver re-validates).
+    #[allow(clippy::type_complexity)]
+    pub offer: Option<&'a mut dyn FnMut(&BoundaryOffer<'_>) -> Vec<Joiner>>,
+    /// Resume payloads for the *initial* members (continuation of a
+    /// preempted job), keyed by adapter id.
+    pub resume: Vec<(usize, MemberResume)>,
+}
+
+impl ElasticCtl<'_> {
+    /// No elasticity: single fixed bucket, no admission, no preemption.
+    pub fn none() -> ElasticCtl<'static> {
+        ElasticCtl {
+            rebucket: false,
+            switch_cost: None,
+            preempt: None,
+            offer: None,
+            resume: vec![],
+        }
+    }
+
+    /// Re-bucketing only (the PR-2 session behavior, now cost-aware).
+    pub fn rebucket_only() -> ElasticCtl<'static> {
+        ElasticCtl { rebucket: true, ..ElasticCtl::none() }
+    }
+}
+
+/// Everything a phased run returns.
+pub struct PhasedOutcome {
+    pub report: JobReport,
+    /// Final bucket state (holds every slot of the last phase).
+    pub state: TrainState,
+    /// Unfinished members checkpointed out by a preemption (empty on a
+    /// normal completion).
+    pub preempted: Vec<(LoraConfig, MemberResume)>,
+}
+
 /// Progress callbacks from a phased packed job (the session maps these
 /// onto its public `Event` stream).
 pub enum PackPhaseEvent<'a> {
     /// An adapter completed its budget. `state` still holds its slot, so
     /// the caller can extract a true-rank checkpoint before any re-bucket.
     AdapterFinished { slot: usize, report: &'a AdapterReport, state: &'a TrainState },
-    /// Surviving adapters were re-packed onto a smaller bucket.
+    /// A queued adapter was admitted into this pack at a boundary.
+    AdapterAdmitted { config: &'a LoraConfig, from_job: usize },
+    /// The pack moved to a different bucket (grow or shrink).
     Rebucketed {
         from: (usize, usize, usize),
         to: (usize, usize, usize),
-        /// Config ids still training, in their new slot order.
+        /// Config ids training on the new bucket, in slot order.
         survivors: Vec<usize>,
+        /// Measured wall cost of the switch (checkpoint + repack +
+        /// executable swap) — feeds the live switch-cost calibration.
+        switch_secs: f64,
     },
+    /// The job was preempted: the listed config ids were checkpointed
+    /// back to the caller (see [`PhasedOutcome::preempted`]).
+    Preempted { remaining: Vec<usize> },
 }
 
 const INIT_SALT: u64 = 0x706c_6f72_6149_4e49;
@@ -135,7 +250,7 @@ pub fn run_pack(
 /// Like [`run_pack`] but also returns the final [`TrainState`], so callers
 /// can slice true-rank adapter checkpoints out of the padded pack tensors.
 /// Runs without re-bucketing so the returned state holds *every* adapter's
-/// slot; the session uses [`run_pack_phased`] directly for the re-bucketing
+/// slot; the session uses [`run_pack_phased`] directly for the elastic
 /// path (finished adapters are checkpointed from the event stream there).
 pub fn run_pack_full(
     rt: &Runtime,
@@ -143,31 +258,126 @@ pub fn run_pack_full(
     configs: &[LoraConfig],
     opts: &TrainOptions,
 ) -> Result<(JobReport, TrainState)> {
-    run_pack_phased(rt, model, configs, opts, false, &mut |_| {})
+    let out = run_pack_phased(rt, model, configs, opts, &mut ElasticCtl::none(), &mut |_| {})?;
+    Ok((out.report, out.state))
 }
 
-/// Phased packed training (see module docs). With `rebucket` off, finished
-/// adapters ride the initial bucket as inert slots (zero lr, zero batch) —
-/// the pre-session engine behavior.
+/// Runtime vectors for the current slot layout: `scale`/`lr` per bucket
+/// slot (inert slots keep lr = 0) and true ranks for the rank mask.
+fn build_vectors(
+    configs: &[LoraConfig],
+    slots: &[usize],
+    active: &[bool],
+    bn: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+    let mut scale = vec![0.0f32; bn];
+    let mut lrs = vec![0.0f32; bn];
+    let mut rks = vec![0usize; bn];
+    for (s, &k) in slots.iter().enumerate() {
+        let c = &configs[k];
+        scale[s] = c.alpha_ratio as f32;
+        rks[s] = c.rank;
+        if active[s] {
+            lrs[s] = c.lr as f32;
+        }
+    }
+    (scale, lrs, rks)
+}
+
+/// Base-model quality (B = 0 ⇒ identity adapters) for every slot whose
+/// member has none yet (fresh members at job start, freshly admitted
+/// joiners; resumed members carry theirs — NaN is the "unset" sentinel).
+/// No-op when nothing is fresh.
+#[allow(clippy::too_many_arguments)]
+fn fill_base_metrics(
+    rt: &Runtime,
+    mi: &ModelInfo,
+    eval_exe: &Executable,
+    base: &[HostTensor],
+    state: &TrainState,
+    cfgs: &[LoraConfig],
+    slots: &[usize],
+    scale: &[f32],
+    bbs: usize,
+    opts: &TrainOptions,
+    base_l: &mut [f32],
+    base_a: &mut [f32],
+) -> Result<()> {
+    let fresh: Vec<bool> = slots.iter().map(|&k| base_l[k].is_nan()).collect();
+    if !fresh.iter().any(|&f| f) {
+        return Ok(());
+    }
+    let (bl, ba) = eval_members(
+        rt,
+        mi,
+        eval_exe,
+        base,
+        state,
+        cfgs,
+        slots,
+        Some(&fresh),
+        scale,
+        bbs,
+        opts,
+    )?;
+    for (s, &k) in slots.iter().enumerate() {
+        if fresh[s] {
+            base_l[k] = bl[s];
+            base_a[k] = ba[s];
+        }
+    }
+    Ok(())
+}
+
+/// Phased packed training (see module docs). `ctl` carries the elastic
+/// control surface; with [`ElasticCtl::none`], finished adapters ride the
+/// initial bucket as inert slots (zero lr, zero batch) — the pre-session
+/// engine behavior.
 pub fn run_pack_phased(
     rt: &Runtime,
     model: &str,
     configs: &[LoraConfig],
     opts: &TrainOptions,
-    rebucket: bool,
+    ctl: &mut ElasticCtl<'_>,
     on_event: &mut dyn FnMut(PackPhaseEvent<'_>),
-) -> Result<(JobReport, TrainState)> {
+) -> Result<PhasedOutcome> {
     if configs.is_empty() {
         return Err(anyhow!("run_pack: empty pack"));
     }
     let mi = rt.manifest.model(model)?.clone();
-    let n_real = configs.len();
-    let steps_of: Vec<usize> = configs.iter().map(|c| opts.budget.steps(c.batch)).collect();
-    let job_steps = steps_of.iter().copied().max().unwrap_or(0);
+
+    // Growable member set: parallel vecs indexed by member id `k`.
+    // Members 0..n0 are the submitted pack; admission pushes more.
+    let mut cfgs: Vec<LoraConfig> = configs.to_vec();
+    let mut total: Vec<usize> = cfgs.iter().map(|c| opts.budget.steps(c.batch)).collect();
+    let mut done: Vec<usize> = vec![0; cfgs.len()];
+    let mut first: Vec<f32> = vec![f32::NAN; cfgs.len()];
+    let mut last: Vec<f32> = vec![f32::NAN; cfgs.len()];
+    let mut base_l: Vec<f32> = vec![f32::NAN; cfgs.len()];
+    let mut base_a: Vec<f32> = vec![f32::NAN; cfgs.len()];
+    let mut curves: Vec<Vec<(usize, f32)>> = vec![vec![]; cfgs.len()];
+    let mut reports: Vec<Option<AdapterReport>> = (0..cfgs.len()).map(|_| None).collect();
+
+    // Initial resume payloads (continuation of a preempted job).
+    let mut resume0: std::collections::BTreeMap<usize, MemberResume> =
+        std::mem::take(&mut ctl.resume).into_iter().collect();
+    for (k, c) in cfgs.iter().enumerate() {
+        if let Some(r) = resume0.get_mut(&c.id) {
+            if r.steps_done > total[k] {
+                bail!("resume: adapter {} did {} of {} steps", c.id, r.steps_done, total[k]);
+            }
+            done[k] = r.steps_done;
+            first[k] = r.first_loss;
+            base_l[k] = r.base_loss;
+            base_a[k] = r.base_acc;
+            curves[k] = std::mem::take(&mut r.curve);
+        }
+    }
 
     // Initial bucket: the smallest artifact dominating the full pack shape.
-    let want_r = configs.iter().map(|c| c.rank).max().unwrap();
-    let want_bs = configs.iter().map(|c| c.batch).max().unwrap();
+    let n_real = cfgs.len();
+    let want_r = cfgs.iter().map(|c| c.rank).max().unwrap();
+    let want_bs = cfgs.iter().map(|c| c.batch).max().unwrap();
     let info = rt
         .manifest
         .train_bucket(model, n_real, want_r, want_bs)
@@ -191,47 +401,55 @@ pub fn run_pack_phased(
     let base = rt.base_weights(model)?;
     let buckets = rt.manifest.train_buckets(model);
     let (seq, vocab) = (mi.seq, mi.vocab);
+    // Live cost model for the retarget decisions (bucket-shape charged).
+    let cm = if ctl.rebucket { Some(crate::search::live_cost_model(rt, model)?) } else { None };
 
-    // Bucket-slot occupancy: slots[s] = original adapter index; active[s]
-    // marks adapters still inside their budget. Inactive slots are inert
-    // (zero lr, zero batch) until a re-bucket drops them entirely.
+    // Bucket-slot occupancy: slots[s] = member index; active[s] marks
+    // members still inside their budget. Inactive slots are inert (zero
+    // lr, zero batch) until a re-bucket drops them entirely.
     let mut slots: Vec<usize> = (0..n_real).collect();
     let mut active: Vec<bool> = vec![true; n_real];
 
-    let init_seeds: Vec<u64> =
-        configs.iter().map(|c| stream_seed(opts.seed, c.id, INIT_SALT)).collect();
-    let ranks: Vec<usize> = configs.iter().map(|c| c.rank).collect();
-    let mut state = TrainState::init_per_adapter(&mi, bn, br, &init_seeds, &ranks)?;
-    let mut data_rngs: Vec<Rng> = configs
-        .iter()
-        .map(|c| Rng::new(stream_seed(opts.seed, c.id, DATA_SALT)))
-        .collect();
-
-    // Per-bucket-slot runtime vectors, rebuilt whenever membership changes.
-    let build_vectors = |slots: &[usize], active: &[bool], bn: usize| {
-        let mut scale = vec![0.0f32; bn];
-        let mut lrs = vec![0.0f32; bn];
-        let mut rks = vec![0usize; bn];
-        for (s, &k) in slots.iter().enumerate() {
-            let c = &configs[k];
-            scale[s] = c.alpha_ratio as f32;
-            rks[s] = c.rank;
-            if active[s] {
-                lrs[s] = c.lr as f32;
-            }
-        }
-        (scale, lrs, rks)
+    // Build the initial state through the same merge path admission uses:
+    // fresh members draw their own (seed, id) init stream, resumed members
+    // restore params + moments + their own step counter.
+    let mut state = {
+        let shell = TrainState::empty(&mi, br);
+        let joins: Vec<JoinSource<'_>> = cfgs
+            .iter()
+            .map(|c| match resume0.get(&c.id) {
+                Some(r) => JoinSource::Restore { member: &r.state },
+                None => JoinSource::Fresh {
+                    seed: stream_seed(opts.seed, c.id, INIT_SALT),
+                    rank: c.rank,
+                },
+            })
+            .collect();
+        shell.repack_merge(&[], &joins, bn, br)?
     };
-    let (mut scale, mut lrs, mut rks) = build_vectors(&slots, &active, bn);
+    resume0.clear();
+
+    // Per-member data streams, fast-forwarded past already-trained steps.
+    let mut sbuf = SampleBuf::new();
+    let mut data_rngs: Vec<Rng> = Vec::with_capacity(cfgs.len());
+    for (k, c) in cfgs.iter().enumerate() {
+        let mut rng = Rng::new(stream_seed(opts.seed, c.id, DATA_SALT));
+        for _ in 0..done[k] * c.batch {
+            tasks::gen_into(&c.task, &rt.manifest.tokens, &mut rng, seq, vocab, &mut sbuf)?;
+        }
+        data_rngs.push(rng);
+    }
+
+    let (mut scale, mut lrs, mut rks) = build_vectors(&cfgs, &slots, &active, bn);
     let mut rmask = state.rank_mask(&rks)?;
 
     // Step-persistent batch tensors, refilled in place every step and
-    // re-derived (with the state's workspace arena) when a re-bucket
-    // changes the bucket shape. When an adapter finishes, its loss-mask
-    // rows are zeroed at the boundary (making its gradients exactly zero
-    // thereafter — same trajectory as a per-step-rebuilt mask); its stale
-    // token rows are then inert, and every other adapter's computation is
-    // independent of its pack neighbours (§3.2).
+    // re-derived (with the state's workspace arena) whenever a boundary
+    // merge changes the slot layout. When an adapter finishes, its
+    // loss-mask rows are zeroed at the boundary (making its gradients
+    // exactly zero thereafter — same trajectory as a per-step-rebuilt
+    // mask); its stale token rows are then inert, and every other
+    // adapter's computation is independent of its pack neighbours (§3.2).
     let batch_tensors = |bn: usize, bbs: usize| -> Result<(HostTensor, HostTensor, HostTensor)> {
         Ok((
             HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?,
@@ -241,47 +459,68 @@ pub fn run_pack_phased(
     };
     let (mut tok_t, mut tgt_t, mut msk_t) = batch_tensors(bn, bbs)?;
 
-    // Base-model quality (B = 0 ⇒ the adapters are identity).
-    let (bl, ba) = eval_members(
+    // Base-model quality (B = 0 ⇒ the adapters are identity). Resumed
+    // members carry their base metrics from the original run.
+    fill_base_metrics(
         rt,
         &mi,
         &eval_exe,
         &base,
         &state,
-        configs,
+        &cfgs,
         &slots,
-        None,
         &scale,
         bbs,
         opts,
+        &mut base_l,
+        &mut base_a,
     )?;
-    let mut base_loss = vec![0.0f32; n_real];
-    let mut base_acc = vec![0.0f32; n_real];
-    for (s, &k) in slots.iter().enumerate() {
-        base_loss[k] = bl[s];
-        base_acc[k] = ba[s];
-    }
 
     let t0 = Instant::now();
     let mut profile = vec![];
-    let mut first = vec![f32::NAN; n_real];
-    let mut last = vec![f32::NAN; n_real];
-    let mut curves: Vec<Vec<(usize, f32)>> = vec![vec![]; n_real];
-    let mut reports: Vec<Option<AdapterReport>> = (0..n_real).map(|_| None).collect();
-    let mut global_step = 0usize;
+    let mut executed = 0usize;
     let mut padded_rows = 0usize;
     let mut rebuckets = 0usize;
+    let mut admitted = 0usize;
+    let mut preempted: Vec<(LoraConfig, MemberResume)> = vec![];
+    let preempt_flag: Option<&AtomicBool> = ctl.preempt.as_deref();
 
-    while active.iter().any(|&a| a) {
+    'job: while active.iter().any(|&a| a) {
         // Steps until the next adapter-completion boundary.
         let phase = slots
             .iter()
             .zip(&active)
             .filter(|&(_, &a)| a)
-            .map(|(&k, _)| steps_of[k] - global_step)
+            .map(|(&k, _)| total[k] - done[k])
             .min()
             .unwrap();
         for _ in 0..phase {
+            if preempt_flag.is_some_and(|f| f.load(Ordering::SeqCst)) {
+                // Preempted: checkpoint every unfinished member at true
+                // rank (params + moments + its own t) and hand them back.
+                let mut remaining = vec![];
+                for (s, &k) in slots.iter().enumerate() {
+                    if !active[s] {
+                        continue;
+                    }
+                    let c = &cfgs[k];
+                    let member = state.extract_member(s, c.rank)?;
+                    preempted.push((
+                        c.clone(),
+                        MemberResume {
+                            state: member,
+                            steps_done: done[k],
+                            first_loss: first[k],
+                            base_loss: base_l[k],
+                            base_acc: base_a[k],
+                            curve: std::mem::take(&mut curves[k]),
+                        },
+                    ));
+                    remaining.push(c.id);
+                }
+                on_event(PackPhaseEvent::Preempted { remaining });
+                break 'job;
+            }
             let mut real_tokens = 0usize;
             let mut alive = 0usize;
             {
@@ -293,10 +532,11 @@ pub fn run_pack_phased(
                         continue;
                     }
                     let k = slots[s];
-                    let c = &configs[k];
+                    let c = &cfgs[k];
                     let tl = &rt.manifest.tokens;
                     for b in 0..c.batch {
-                        let smp = tasks::gen(&c.task, tl, &mut data_rngs[k], seq, vocab)?;
+                        tasks::gen_into(&c.task, tl, &mut data_rngs[k], seq, vocab, &mut sbuf)?;
+                        let smp = &sbuf.sample;
                         let off = (s * bbs + b) * seq;
                         tokens[off..off + seq].copy_from_slice(&smp.tokens);
                         targets[off..off + seq].copy_from_slice(&smp.targets);
@@ -319,131 +559,272 @@ pub fn run_pack_phased(
                     first[k] = per[s];
                 }
                 last[k] = per[s];
-                if opts.log_every > 0 && global_step % opts.log_every == 0 {
-                    curves[k].push((global_step, per[s]));
+                if opts.log_every > 0 && done[k] % opts.log_every == 0 {
+                    curves[k].push((done[k], per[s]));
                 }
+                done[k] += 1;
             }
-            global_step += 1;
+            executed += 1;
         }
 
         // Boundary: evaluate and report the adapters that just finished
         // (survivors keep training — their eval comes at their own exit).
         let finishing: Vec<bool> = (0..slots.len())
-            .map(|s| active[s] && steps_of[slots[s]] == global_step)
+            .map(|s| active[s] && done[slots[s]] == total[slots[s]])
             .collect();
-        let (eloss, eacc) = eval_members(
+        if finishing.iter().any(|&f| f) {
+            let (eloss, eacc) = eval_members(
+                rt,
+                &mi,
+                &eval_exe,
+                &base,
+                &state,
+                &cfgs,
+                &slots,
+                Some(&finishing),
+                &scale,
+                bbs,
+                opts,
+            )?;
+            for s in 0..slots.len() {
+                if !finishing[s] {
+                    continue;
+                }
+                let k = slots[s];
+                let rep = AdapterReport {
+                    config: cfgs[k].clone(),
+                    steps: total[k],
+                    first_loss: first[k],
+                    final_loss: last[k],
+                    base_loss: base_l[k],
+                    base_acc: base_a[k],
+                    eval_loss: eloss[s],
+                    eval_acc: eacc[s],
+                    curve: std::mem::take(&mut curves[k]),
+                };
+                on_event(PackPhaseEvent::AdapterFinished { slot: s, report: &rep, state: &state });
+                reports[k] = Some(rep);
+                active[s] = false;
+                // Freeze the slot in the reused batch tensors: zeroing its
+                // loss-mask rows makes its gradients exactly zero from
+                // here on, so its AdamW moments follow the same pure-decay
+                // trajectory as a per-step-rebuilt mask would give (its
+                // stale token rows are then irrelevant).
+                msk_t.as_f32_mut()?[s * bbs * seq..(s + 1) * bbs * seq].fill(0.0);
+            }
+        }
+        let survivors: Vec<usize> = slots
+            .iter()
+            .zip(&active)
+            .filter(|&(_, &a)| a)
+            .map(|(&k, _)| k)
+            .collect();
+        if survivors.is_empty() {
+            break;
+        }
+
+        // Offer the boundary to the session: queued adapters may join.
+        let mut joiners: Vec<Joiner> = vec![];
+        if let Some(off) = ctl.offer.as_mut() {
+            let bo = BoundaryOffer {
+                survivors: Pack::new(survivors.iter().map(|&k| cfgs[k].clone()).collect()),
+                bucket: (bn, br, bbs),
+                buckets: &buckets,
+            };
+            joiners = (**off)(&bo);
+        }
+
+        // Elastic retarget (§4): grow or shrink, switch-cost-aware.
+        let surv_pack = Pack::new(survivors.iter().map(|&k| cfgs[k].clone()).collect());
+        let join_pack = Pack::new(joiners.iter().map(|j| j.config.clone()).collect());
+        let next_phase_steps = survivors
+            .iter()
+            .map(|&k| total[k] - done[k])
+            .chain(joiners.iter().map(|j| {
+                let tj = opts.budget.steps(j.config.batch);
+                tj - j.resume.as_ref().map_or(0, |r| r.steps_done.min(tj))
+            }))
+            .min()
+            .unwrap_or(0);
+        let target = match (&cm, ctl.rebucket) {
+            (Some(cm), true) => {
+                let sw = ctl
+                    .switch_cost
+                    .as_ref()
+                    .map(|s| s.estimate())
+                    .unwrap_or(cm.calib.bucket_switch_cost);
+                retarget_bucket(
+                    &buckets,
+                    &surv_pack,
+                    &join_pack,
+                    (bn, br, bbs),
+                    cm,
+                    sw,
+                    next_phase_steps,
+                )
+            }
+            _ => None,
+        };
+
+        if target.is_some() || !joiners.is_empty() {
+            let (nn, nr, nbs) = target.unwrap_or((bn, br, bbs));
+            if target.is_none() {
+                // Staying on the current bucket: joiners must fit the
+                // freed slots (the session offers with the same check).
+                let need = survivors.len() + joiners.len();
+                let jr = joiners.iter().map(|j| j.config.rank).max().unwrap_or(0);
+                let jb = joiners.iter().map(|j| j.config.batch).max().unwrap_or(0);
+                if need > bn || jr > br || jb > bbs {
+                    bail!(
+                        "admission: {} joiners (r≤{jr}, bs≤{jb}) do not fit bucket \
+                         ({bn},{br},{bbs}) and no retarget was chosen",
+                        joiners.len()
+                    );
+                }
+            }
+            // Survivors keep their slot order; joiners fill the next ones.
+            let keep: Vec<(usize, usize)> = slots
+                .iter()
+                .enumerate()
+                .filter(|&(s, _)| active[s])
+                .map(|(s, &k)| (s, cfgs[k].rank))
+                .collect();
+            // The measured switch window covers exactly the costs the
+            // cost model's `bucket_switch_cost` term stands for: the
+            // state repack plus (when the bucket changed) the executable
+            // swap. Joiner registration below (notably a resumed member's
+            // data-stream fast-forward) is admission cost paid regardless
+            // of bucket choice and stays outside the window.
+            let sw0 = Instant::now();
+            {
+                let joins: Vec<JoinSource<'_>> = joiners
+                    .iter()
+                    .map(|j| match &j.resume {
+                        Some(r) => JoinSource::Restore { member: &r.state },
+                        None => JoinSource::Fresh {
+                            seed: stream_seed(opts.seed, j.config.id, INIT_SALT),
+                            rank: j.config.rank,
+                        },
+                    })
+                    .collect();
+                state = state.repack_merge(&keep, &joins, nn, nr)?;
+            }
+            let mut switch_secs = sw0.elapsed().as_secs_f64();
+            let from = (bn, br, bbs);
+            let moved = (nn, nr, nbs) != from;
+            let mut new_slots = survivors.clone();
+            // Register joiner members and fast-forward their streams.
+            for j in joiners {
+                let k = cfgs.len();
+                let tj = opts.budget.steps(j.config.batch);
+                let (d0, f0, bl0, ba0) = match &j.resume {
+                    Some(r) => (r.steps_done.min(tj), r.first_loss, r.base_loss, r.base_acc),
+                    None => (0, f32::NAN, f32::NAN, f32::NAN),
+                };
+                let mut rng = Rng::new(stream_seed(opts.seed, j.config.id, DATA_SALT));
+                for _ in 0..d0 * j.config.batch {
+                    tasks::gen_into(
+                        &j.config.task,
+                        &rt.manifest.tokens,
+                        &mut rng,
+                        seq,
+                        vocab,
+                        &mut sbuf,
+                    )?;
+                }
+                let curve0 = j.resume.map(|r| r.curve).unwrap_or_default();
+                cfgs.push(j.config);
+                total.push(tj);
+                done.push(d0);
+                first.push(f0);
+                last.push(f32::NAN);
+                base_l.push(bl0);
+                base_a.push(ba0);
+                curves.push(curve0);
+                reports.push(None);
+                data_rngs.push(rng);
+                new_slots.push(k);
+                admitted += 1;
+                on_event(PackPhaseEvent::AdapterAdmitted {
+                    config: &cfgs[k],
+                    from_job: j.from_job,
+                });
+            }
+            slots = new_slots;
+            active = vec![true; slots.len()];
+            if moved {
+                let sw1 = Instant::now();
+                (bn, br, bbs) = (nn, nr, nbs);
+                let new_info = rt
+                    .manifest
+                    .train_bucket(model, bn, br, bbs)
+                    .ok_or_else(|| anyhow!("re-bucket target ({bn},{br},{bbs}) vanished"))?
+                    .clone();
+                train_exe = rt.executable(&new_info.name)?;
+                eval_exe = rt.executable(&rt.manifest.eval_for(&new_info)?.name.clone())?;
+                switch_secs += sw1.elapsed().as_secs_f64();
+                rebuckets += 1;
+                if let Some(sc) = &ctl.switch_cost {
+                    sc.record(switch_secs);
+                }
+                on_event(PackPhaseEvent::Rebucketed {
+                    from,
+                    to: (bn, br, bbs),
+                    survivors: slots.iter().map(|&k| cfgs[k].id).collect(),
+                    switch_secs,
+                });
+            }
+            // New slot layout (and possibly shape): fresh batch tensors
+            // (the merged state's scratch re-derives its arena the same
+            // way on the first step).
+            (tok_t, tgt_t, msk_t) = batch_tensors(bn, bbs)?;
+        }
+        // Rebuild the per-slot runtime vectors for the next phase, then
+        // base-eval any member that has no base metrics yet (freshly
+        // admitted joiners; resumed ones carried theirs). No-op at a
+        // plain boundary.
+        let (s2, l2, r2) = build_vectors(&cfgs, &slots, &active, bn);
+        scale = s2;
+        lrs = l2;
+        rks = r2;
+        rmask = state.rank_mask(&rks)?;
+        fill_base_metrics(
             rt,
             &mi,
             &eval_exe,
             &base,
             &state,
-            configs,
+            &cfgs,
             &slots,
-            Some(&finishing),
             &scale,
             bbs,
             opts,
+            &mut base_l,
+            &mut base_a,
         )?;
-        let mut survivors: Vec<usize> = vec![];
-        for s in 0..slots.len() {
-            if !active[s] {
-                continue;
-            }
-            let k = slots[s];
-            if !finishing[s] {
-                survivors.push(k);
-                continue;
-            }
-            let rep = AdapterReport {
-                config: configs[k].clone(),
-                steps: steps_of[k],
-                first_loss: first[k],
-                final_loss: last[k],
-                base_loss: base_loss[k],
-                base_acc: base_acc[k],
-                eval_loss: eloss[s],
-                eval_acc: eacc[s],
-                curve: std::mem::take(&mut curves[k]),
-            };
-            on_event(PackPhaseEvent::AdapterFinished { slot: s, report: &rep, state: &state });
-            reports[k] = Some(rep);
-            active[s] = false;
-            // Freeze the slot in the reused batch tensors: zeroing its
-            // loss-mask rows makes its gradients exactly zero from here
-            // on, so its AdamW moments follow the same pure-decay
-            // trajectory as a per-step-rebuilt mask would give (its
-            // stale token rows are then irrelevant).
-            msk_t.as_f32_mut()?[s * bbs * seq..(s + 1) * bbs * seq].fill(0.0);
-        }
-        if survivors.is_empty() {
-            break;
-        }
-
-        // Preemptive re-bucketing (§4): consult the planner's balancing
-        // side for a strictly smaller bucket admitting the survivors.
-        if rebucket {
-            let surv = Pack::new(survivors.iter().map(|&k| configs[k].clone()).collect());
-            if let Some((nn, nr, nbs)) = shrink_bucket(&buckets, &surv, (bn, br, bbs)) {
-                let new_info = rt
-                    .manifest
-                    .train_bucket(model, nn, nr, nbs)
-                    .ok_or_else(|| anyhow!("re-bucket target ({nn},{nr},{nbs}) vanished"))?
-                    .clone();
-                let mut keep: Vec<(usize, usize)> = vec![];
-                let mut new_slots: Vec<usize> = vec![];
-                for (s, &k) in slots.iter().enumerate() {
-                    if active[s] {
-                        keep.push((s, configs[k].rank));
-                        new_slots.push(k);
-                    }
-                }
-                state = state.repack(&keep, nn, nr)?;
-                let from = (bn, br, bbs);
-                slots = new_slots;
-                active = vec![true; slots.len()];
-                (bn, br, bbs) = (nn, nr, nbs);
-                train_exe = rt.executable(&new_info.name)?;
-                eval_exe = rt.executable(&rt.manifest.eval_for(&new_info)?.name.clone())?;
-                // New bucket shape: fresh batch tensors (the repacked
-                // state's scratch re-derives its arena the same way).
-                (tok_t, tgt_t, msk_t) = batch_tensors(bn, bbs)?;
-                rebuckets += 1;
-                on_event(PackPhaseEvent::Rebucketed {
-                    from,
-                    to: (bn, br, bbs),
-                    survivors: slots.iter().map(|&k| configs[k].id).collect(),
-                });
-            }
-        }
-        let rebuilt = build_vectors(&slots, &active, bn);
-        scale = rebuilt.0;
-        lrs = rebuilt.1;
-        rks = rebuilt.2;
-        rmask = state.rank_mask(&rks)?;
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let adapters: Vec<AdapterReport> = reports
-        .into_iter()
-        .map(|r| r.expect("every adapter reports at its completion boundary"))
-        .collect();
-    Ok((
-        JobReport {
+    let adapters: Vec<AdapterReport> = reports.into_iter().flatten().collect();
+    Ok(PhasedOutcome {
+        report: JobReport {
             artifact: first_bucket.0,
             bucket_n: first_bucket.1,
             bucket_r: first_bucket.2,
             bucket_bs: first_bucket.3,
-            steps: job_steps,
+            steps: executed,
             wall_secs: wall,
-            step_secs: wall / job_steps.max(1) as f64,
+            step_secs: wall / executed.max(1) as f64,
             compile_secs,
             adapters,
             profile,
             padded_rows,
             rebuckets,
+            admitted,
         },
         state,
-    ))
+        preempted,
+    })
 }
 
 /// Per-bucket-slot eval `(loss, acc)` averaged over `opts.eval_batches`
@@ -481,6 +862,7 @@ fn eval_members(
     let mut tok_t = HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?;
     let mut tgt_t = HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?;
     let mut msk_t = HostTensor::f32(vec![bn, bbs, seq], vec![0.0; bn * bbs * seq])?;
+    let mut sbuf = SampleBuf::new();
     for _ in 0..batches {
         {
             let tokens = tok_t.as_i32_mut()?;
@@ -494,8 +876,15 @@ fn eval_members(
                 }
                 let c = &configs[k];
                 for b in 0..c.batch {
-                    let smp =
-                        tasks::gen(&c.task, &rt.manifest.tokens, &mut ergs[s], seq, vocab)?;
+                    tasks::gen_into(
+                        &c.task,
+                        &rt.manifest.tokens,
+                        &mut ergs[s],
+                        seq,
+                        vocab,
+                        &mut sbuf,
+                    )?;
+                    let smp = &sbuf.sample;
                     let off = (s * bbs + b) * seq;
                     tokens[off..off + seq].copy_from_slice(&smp.tokens);
                     targets[off..off + seq].copy_from_slice(&smp.targets);
@@ -562,6 +951,7 @@ mod tests {
         }
         assert!(!rep.profile.is_empty());
         assert!(rep.rank_throughput() > 0.0);
+        assert_eq!((rep.rebuckets, rep.admitted), (0, 0));
     }
 
     /// The bucket mechanism pads a 3-adapter pack onto the n=4 artifact and
@@ -592,5 +982,67 @@ mod tests {
         let configs: Vec<_> = (0..64).map(|i| cfg(i, "modadd", 8, 1, 1e-3)).collect();
         let err = run_pack(&rt, "nano", &configs, &TrainOptions::default()).unwrap_err();
         assert!(err.to_string().contains("no train bucket"));
+    }
+
+    /// Preempt a mixed-batch pack mid-job (the flag raised at its first
+    /// completion boundary), then resume the survivor from its checkpoint
+    /// in a *smaller* bucket: every metric of both adapters must be
+    /// bit-identical to the uninterrupted run.
+    #[test]
+    fn preempt_and_resume_is_bit_identical() {
+        let Some(rt) = runtime() else { return };
+        // bs1 -> 12 steps, bs2 -> 6: parity finishes at the boundary.
+        let configs = vec![cfg(0, "modadd", 8, 1, 2e-3), cfg(1, "parity", 8, 2, 2e-3)];
+        let opts = TrainOptions {
+            budget: TrainBudget { dataset: 12, epochs: 1 },
+            eval_batches: 1,
+            seed: 9,
+            log_every: 2, // curve samples span the preemption boundary
+        };
+        let clean = run_pack(&rt, "nano", &configs, &opts).unwrap();
+        assert_eq!(clean.adapters.len(), 2);
+
+        // The event callback raises the preempt flag when parity finishes;
+        // the driver observes it before the survivor's next step.
+        let flag = Arc::new(AtomicBool::new(false));
+        let fl = flag.clone();
+        let mut ctl = ElasticCtl { preempt: Some(flag.clone()), ..ElasticCtl::none() };
+        let out = run_pack_phased(&rt, "nano", &configs, &opts, &mut ctl, &mut |ev| {
+            if matches!(ev, PackPhaseEvent::AdapterFinished { .. }) {
+                fl.store(true, Ordering::SeqCst);
+            }
+        })
+        .unwrap();
+        assert_eq!(out.report.adapters.len(), 1, "parity finished before the preemption");
+        assert_eq!(out.preempted.len(), 1);
+        let (pc, pr) = &out.preempted[0];
+        assert_eq!(pc.id, 0);
+        assert_eq!(pr.steps_done, 6, "preempted right after the 6-step boundary");
+
+        // Resume the survivor alone (bucket (1,8,1), not the original
+        // (2,8,2)) from the checkpoint.
+        let resume = vec![(pc.id, pr.clone())];
+        let mut ctl = ElasticCtl { resume, ..ElasticCtl::none() };
+        let done =
+            run_pack_phased(&rt, "nano", &configs[..1], &opts, &mut ctl, &mut |_| {}).unwrap();
+        assert!(done.preempted.is_empty());
+        assert_eq!(done.report.adapters.len(), 1);
+        let (a, b) = (&clean.adapters[0], &done.report.adapters[0]);
+        assert_eq!(a.config.id, b.config.id);
+        assert_eq!(a.first_loss, b.first_loss, "first loss diverged");
+        assert_eq!(a.final_loss, b.final_loss, "final loss diverged");
+        assert_eq!(a.eval_loss, b.eval_loss, "eval loss diverged");
+        assert_eq!(a.eval_acc, b.eval_acc, "eval acc diverged");
+        assert_eq!(a.base_loss, b.base_loss, "base loss diverged");
+        assert_eq!(a.steps, b.steps, "reported steps are the adapter's full budget");
+        // The curve spans the full trajectory: pre-preemption samples are
+        // carried through the checkpoint and re-joined on resume.
+        assert!(!a.curve.is_empty());
+        assert_eq!(a.curve, b.curve, "loss curve lost samples across preempt/resume");
+        // The parity adapter's report from the preempted segment matches
+        // the clean run too.
+        let (pa, pb) = (&clean.adapters[1], &out.report.adapters[0]);
+        assert_eq!(pa.final_loss, pb.final_loss);
+        assert_eq!(pa.eval_loss, pb.eval_loss);
     }
 }

@@ -6,7 +6,7 @@ pub mod driver;
 pub mod tasks;
 
 pub use driver::{
-    run_pack, run_pack_full, run_pack_phased, AdapterReport, JobReport, PackPhaseEvent,
-    TrainOptions,
+    run_pack, run_pack_full, run_pack_phased, AdapterReport, BoundaryOffer, ElasticCtl,
+    JobReport, Joiner, MemberResume, PackPhaseEvent, PhasedOutcome, TrainOptions,
 };
-pub use tasks::{packed_batch, PackedBatch, Sample, TASKS};
+pub use tasks::{packed_batch, PackedBatch, Sample, SampleBuf, TASKS};

@@ -19,84 +19,180 @@ use crate::util::rng::Rng;
 pub const TASKS: [&str; 4] = ["modadd", "copy", "parity", "needle"];
 
 /// One generated sample.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Sample {
     pub tokens: Vec<i32>,
     pub targets: Vec<i32>,
     pub mask: Vec<f32>,
 }
 
-/// Build `(tokens, targets, mask)` from a full sequence + answer span
-/// `[lo, hi)` in *full-sequence* coordinates (tasks.py `_finalize`).
-fn finalize(tl: &TokenLayout, seq: usize, full_seq: &[i32], lo: usize, hi: usize) -> Sample {
-    let mut full = vec![tl.pad; seq + 1];
-    let l = full_seq.len().min(seq + 1);
-    full[..l].copy_from_slice(&full_seq[..l]);
-    let tokens = full[..seq].to_vec();
-    let targets = full[1..].to_vec();
-    let mut mask = vec![0.0f32; seq];
+/// Reusable generation scratch: the output [`Sample`] plus every staging
+/// buffer the task generators need. Hot-path callers (the train driver's
+/// per-step batch fill, the boundary evals) hold one `SampleBuf` and call
+/// [`gen_into`] — after the first sample, generation performs **no
+/// allocation at all** (the ROADMAP "pool the task-generator sample
+/// allocations" item). RNG draw order is identical to the pre-pooling
+/// generators, so every `(seed, id)` data stream is bit-unchanged.
+#[derive(Debug, Clone, Default)]
+pub struct SampleBuf {
+    pub sample: Sample,
+    /// `seq + 1` staging row `finalize` splits into tokens/targets.
+    full: Vec<i32>,
+    /// The raw task sequence being composed.
+    stage: Vec<i32>,
+    /// `needle` key/value scratch.
+    keys: Vec<i32>,
+    vals: Vec<i32>,
+}
+
+impl SampleBuf {
+    pub fn new() -> SampleBuf {
+        SampleBuf::default()
+    }
+}
+
+/// Build `(tokens, targets, mask)` in `buf.sample` from the staged full
+/// sequence + answer span `[lo, hi)` in *full-sequence* coordinates
+/// (tasks.py `_finalize`).
+fn finalize(tl: &TokenLayout, seq: usize, lo: usize, hi: usize, buf: &mut SampleBuf) {
+    let SampleBuf { sample, full, stage, .. } = buf;
+    full.clear();
+    full.resize(seq + 1, tl.pad);
+    let l = stage.len().min(seq + 1);
+    full[..l].copy_from_slice(&stage[..l]);
+    sample.tokens.clear();
+    sample.tokens.extend_from_slice(&full[..seq]);
+    sample.targets.clear();
+    sample.targets.extend_from_slice(&full[1..]);
+    sample.mask.clear();
+    sample.mask.resize(seq, 0.0);
     let lo = lo.saturating_sub(1);
     let hi = hi.saturating_sub(1).min(seq);
-    for m in mask.iter_mut().take(hi).skip(lo) {
+    for m in sample.mask.iter_mut().take(hi).skip(lo) {
         *m = 1.0;
     }
-    Sample { tokens, targets, mask }
 }
 
 /// `a + b = c (mod P)` — mathematical reasoning (gsm8k stand-in).
 pub fn gen_modadd(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Sample {
+    alloc_gen(|buf| gen_modadd_into(tl, rng, seq, vocab, buf))
+}
+
+fn gen_modadd_into(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize, buf: &mut SampleBuf) {
     let p = (vocab as i64 - tl.alpha0 as i64).min(97) as u64;
     let a = rng.below(p) as i32;
     let b = rng.below(p) as i32;
     let c = (a + b) % p as i32;
-    let s = [tl.bos, tl.alpha0 + a, tl.alpha0 + b, tl.sep, tl.alpha0 + c, tl.eos];
-    finalize(tl, seq, &s, 4, 5)
+    buf.stage.clear();
+    buf.stage
+        .extend([tl.bos, tl.alpha0 + a, tl.alpha0 + b, tl.sep, tl.alpha0 + c, tl.eos]);
+    finalize(tl, seq, 4, 5, buf)
 }
 
 /// Copy a random string after SEP — language understanding (mrpc stand-in).
 pub fn gen_copy(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Sample {
+    alloc_gen(|buf| gen_copy_into(tl, rng, seq, vocab, buf))
+}
+
+fn gen_copy_into(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize, buf: &mut SampleBuf) {
     let alpha = (vocab as i64 - tl.alpha0 as i64).min(64) as u64;
     let ln = (seq - 3) / 2;
-    let payload: Vec<i32> = (0..ln).map(|_| rng.below(alpha) as i32).collect();
-    let mut s = vec![tl.bos];
-    s.extend(payload.iter().map(|&t| tl.alpha0 + t));
+    let s = &mut buf.stage;
+    s.clear();
+    s.push(tl.bos);
+    for _ in 0..ln {
+        s.push(tl.alpha0 + rng.below(alpha) as i32);
+    }
     s.push(tl.sep);
-    s.extend(payload.iter().map(|&t| tl.alpha0 + t));
+    for i in 0..ln {
+        let t = s[1 + i];
+        s.push(t);
+    }
     s.push(tl.eos);
-    finalize(tl, seq, &s, ln + 2, 2 * ln + 2)
+    finalize(tl, seq, ln + 2, 2 * ln + 2, buf)
 }
 
 /// Parity of a bit string — logic reasoning (wnli stand-in).
 pub fn gen_parity(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Sample {
+    alloc_gen(|buf| gen_parity_into(tl, rng, seq, vocab, buf))
+}
+
+fn gen_parity_into(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize, buf: &mut SampleBuf) {
     let _ = vocab;
     let ln = seq.saturating_sub(4).max(1);
-    let bits: Vec<i32> = (0..ln).map(|_| rng.below(2) as i32).collect();
-    let ans: i32 = bits.iter().sum::<i32>() % 2;
-    let mut s = vec![tl.bos];
-    s.extend(bits.iter().map(|&b| tl.alpha0 + b));
-    s.extend([tl.sep, tl.alpha0 + ans, tl.eos]);
-    finalize(tl, seq, &s, ln + 2, ln + 3)
+    let s = &mut buf.stage;
+    s.clear();
+    s.push(tl.bos);
+    let mut sum = 0i32;
+    for _ in 0..ln {
+        let b = rng.below(2) as i32;
+        sum += b;
+        s.push(tl.alpha0 + b);
+    }
+    s.extend([tl.sep, tl.alpha0 + sum % 2, tl.eos]);
+    finalize(tl, seq, ln + 2, ln + 3, buf)
 }
 
 /// Key-value retrieval — commonsense/lookup (cola stand-in).
 pub fn gen_needle(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize) -> Sample {
+    alloc_gen(|buf| gen_needle_into(tl, rng, seq, vocab, buf))
+}
+
+fn gen_needle_into(tl: &TokenLayout, rng: &mut Rng, seq: usize, vocab: usize, buf: &mut SampleBuf) {
     let nk = ((seq - 5) / 2).min(8);
     let key_alpha = ((vocab as i64 - tl.alpha0 as i64) / 2).min(32) as usize;
     let val_base = tl.alpha0 + key_alpha as i32;
-    let mut keys: Vec<i32> = (0..key_alpha as i32).collect();
-    rng.shuffle(&mut keys);
+    let keys = &mut buf.keys;
+    keys.clear();
+    keys.extend(0..key_alpha as i32);
+    rng.shuffle(keys);
     keys.truncate(nk);
-    let vals: Vec<i32> = (0..nk).map(|_| rng.below(key_alpha as u64) as i32).collect();
+    let vals = &mut buf.vals;
+    vals.clear();
+    for _ in 0..nk {
+        vals.push(rng.below(key_alpha as u64) as i32);
+    }
     let qi = rng.usize_below(nk);
-    let mut s = vec![tl.bos];
-    for (k, v) in keys.iter().zip(&vals) {
+    let s = &mut buf.stage;
+    s.clear();
+    s.push(tl.bos);
+    for (k, v) in keys.iter().zip(vals.iter()) {
         s.extend([tl.alpha0 + k, val_base + v]);
     }
     s.extend([tl.sep, tl.alpha0 + keys[qi], tl.sep, val_base + vals[qi], tl.eos]);
-    finalize(tl, seq, &s, 2 * nk + 4, 2 * nk + 5)
+    finalize(tl, seq, 2 * nk + 4, 2 * nk + 5, buf)
 }
 
-/// Generate one sample of `task`.
+/// Allocating convenience wrapper used by the by-value `gen_*` entry
+/// points (tests, one-shot callers).
+fn alloc_gen(f: impl FnOnce(&mut SampleBuf)) -> Sample {
+    let mut buf = SampleBuf::new();
+    f(&mut buf);
+    buf.sample
+}
+
+/// Generate one sample of `task` into `buf.sample`, reusing every staging
+/// buffer (the zero-allocation hot path).
+pub fn gen_into(
+    task: &str,
+    tl: &TokenLayout,
+    rng: &mut Rng,
+    seq: usize,
+    vocab: usize,
+    buf: &mut SampleBuf,
+) -> Result<()> {
+    match task {
+        "modadd" => gen_modadd_into(tl, rng, seq, vocab, buf),
+        "copy" => gen_copy_into(tl, rng, seq, vocab, buf),
+        "parity" => gen_parity_into(tl, rng, seq, vocab, buf),
+        "needle" => gen_needle_into(tl, rng, seq, vocab, buf),
+        other => bail!("unknown task '{other}'"),
+    }
+    Ok(())
+}
+
+/// Generate one sample of `task` (allocating; prefer [`gen_into`] on hot
+/// paths).
 pub fn gen(
     task: &str,
     tl: &TokenLayout,
@@ -104,13 +200,9 @@ pub fn gen(
     seq: usize,
     vocab: usize,
 ) -> Result<Sample> {
-    Ok(match task {
-        "modadd" => gen_modadd(tl, rng, seq, vocab),
-        "copy" => gen_copy(tl, rng, seq, vocab),
-        "parity" => gen_parity(tl, rng, seq, vocab),
-        "needle" => gen_needle(tl, rng, seq, vocab),
-        other => bail!("unknown task '{other}'"),
-    })
+    let mut buf = SampleBuf::new();
+    gen_into(task, tl, rng, seq, vocab, &mut buf)?;
+    Ok(buf.sample)
 }
 
 /// A packed batch for `n` adapters: `(n, bs, seq)` tensors ready for the

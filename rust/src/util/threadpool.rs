@@ -4,13 +4,32 @@
 //! Jobs are boxed closures; `join` drains outstanding work. This is
 //! deliberately simple — the engine's concurrency unit is a whole
 //! fine-tuning job (seconds+), so per-task overhead is irrelevant.
+//!
+//! [`ThreadPool::scoped`] adds a borrowed-closure entry point on the same
+//! workers, and [`global`] exposes one process-wide pool: together they
+//! let the reference backend's per-adapter `dA`/`dB` gradient reductions
+//! fan out across **persistent** workers (no per-region thread spawns —
+//! the remaining Amdahl floor the ROADMAP names) while each adapter's
+//! reduction stays sequential on one worker, so results are bitwise
+//! invariant to the worker count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// The process-wide pool [`ThreadPool::scoped`] callers share. Sized to
+/// the machine (at least 4 workers) — `scoped` batches of any size run
+/// fine on fewer workers, tasks simply queue.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ThreadPool::new(n.max(4))
+    })
+}
 
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Task>>,
@@ -64,6 +83,67 @@ impl ThreadPool {
             thread::sleep(std::time::Duration::from_millis(1));
         }
     }
+
+    /// Run borrowed closures on the pool's persistent workers and block
+    /// until **all of them** finished — a scoped-threads equivalent
+    /// without per-call spawns. The last task runs inline on the calling
+    /// thread (it would only block otherwise). Panics in tasks are caught
+    /// on the worker and re-raised here after every task completed, so
+    /// the borrowed data the closures captured is never observed while a
+    /// sibling still runs.
+    ///
+    /// Safety of the internal lifetime erasure: the closures are only
+    /// executed between this call's entry and its return (the completion
+    /// latch is waited on before returning on every path), so the `'a`
+    /// borrows they capture outlive every execution.
+    pub fn scoped<'a>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let Some(last) = tasks.pop() else { return };
+        if tasks.is_empty() {
+            last();
+            return;
+        }
+        struct Latch {
+            left: Mutex<usize>,
+            cv: Condvar,
+            panicked: AtomicUsize,
+        }
+        let latch = Arc::new(Latch {
+            left: Mutex::new(tasks.len()),
+            cv: Condvar::new(),
+            panicked: AtomicUsize::new(0),
+        });
+        for t in tasks {
+            // Erase the borrow lifetime: execution is fenced by the latch
+            // below, see the doc comment.
+            let t = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'a>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(t)
+            };
+            let latch = Arc::clone(&latch);
+            self.spawn(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
+                if r.is_err() {
+                    latch.panicked.fetch_add(1, Ordering::SeqCst);
+                }
+                let mut left = latch.left.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    latch.cv.notify_all();
+                }
+            });
+        }
+        let inline = std::panic::catch_unwind(std::panic::AssertUnwindSafe(last));
+        let mut left = latch.left.lock().unwrap();
+        while *left > 0 {
+            left = latch.cv.wait(left).unwrap();
+        }
+        drop(left);
+        if inline.is_err() || latch.panicked.load(Ordering::SeqCst) > 0 {
+            panic!("threadpool: scoped task panicked");
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -107,6 +187,41 @@ mod tests {
         }
         pool.join();
         assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    /// `scoped` runs borrowed closures to completion before returning —
+    /// every chunk of a stack-owned buffer is written, on any pool size
+    /// (including fewer workers than tasks).
+    #[test]
+    fn scoped_completes_borrowed_tasks() {
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            let mut data = vec![0u64; 12];
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                .chunks_mut(3)
+                .enumerate()
+                .map(|(i, c)| {
+                    let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        for (j, x) in c.iter_mut().enumerate() {
+                            *x = (i * 3 + j) as u64 + 1;
+                        }
+                    });
+                    f
+                })
+                .collect();
+            pool.scoped(tasks);
+            assert_eq!(data, (1..=12).collect::<Vec<u64>>());
+        }
+        // Empty and single-task batches are fine (inline fast paths).
+        let pool = ThreadPool::new(2);
+        pool.scoped(vec![]);
+        let mut hit = false;
+        pool.scoped(vec![Box::new(|| hit = true)]);
+        assert!(hit);
+        // The global pool exists and is reusable.
+        let mut a = 0u32;
+        global().scoped(vec![Box::new(|| a += 1), Box::new(|| {})]);
+        assert_eq!(a, 1);
     }
 
     #[test]

@@ -112,7 +112,7 @@ fn zero_lr_train_step_is_pure_loss_evaluation() {
     for (t, b) in state.lora.iter().zip(&before) {
         assert_eq!(t.as_f32().unwrap(), &b[..], "lr=0 must not move parameters");
     }
-    assert_eq!(state.t, 1.0, "step counter advances");
+    assert_eq!(state.t, vec![1.0], "per-adapter step counter advances");
 
     let (loss, acc) = state.eval(&eval_exe, &base, &tokens, &targets, &mask, &[1.0]).unwrap();
     assert!((per[0] - loss[0]).abs() < 1e-6, "train per-loss {} vs eval loss {}", per[0], loss[0]);
@@ -283,7 +283,7 @@ fn simulator_and_planner_are_deterministic() {
 
     let sim = Simulator { cm, budget: TrainBudget::default(), gpus: 8 };
     let queue: Vec<_> = plan_a.jobs.iter().map(|j| j.job.clone()).collect();
-    let noisy = SimOptions { noise: 0.3, seed: 5 };
+    let noisy = SimOptions { noise: 0.3, seed: 5, ..Default::default() };
     let r1 = sim.run_queue(&queue, &noisy);
     let r2 = sim.run_queue(&queue, &noisy);
     assert_eq!(r1.makespan, r2.makespan);

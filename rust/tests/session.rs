@@ -1,8 +1,13 @@
 //! End-to-end tests of the event-driven Session orchestration API on the
-//! reference backend: dynamic admission, the event stream, preemptive
-//! re-bucketing at adapter-completion boundaries, checkpoint-on-finish,
-//! and the per-adapter equivalence between packed/re-bucketed execution
-//! and the solo `run_pack` path.
+//! reference backend: dynamic admission, the event stream, elastic
+//! re-bucketing at adapter-completion boundaries, mid-job adapter
+//! admission, preemption + checkpoint-restore resume, checkpoint-on-finish,
+//! and the per-adapter **bit-identity** between solo, packed, admitted
+//! and preempted-resumed execution.
+//!
+//! CI runs this suite once per `Policy` via `PLORA_POLICY`
+//! (`fifo`/`priority`/`preempt`) — per-adapter results must be
+//! policy-invariant; only timelines change.
 
 use std::sync::Arc;
 
@@ -12,12 +17,20 @@ use plora::costmodel::{ExecMode, Pack, TrainBudget};
 use plora::engine::CheckpointPool;
 use plora::planner::PlannedJob;
 use plora::runtime::Runtime;
-use plora::session::{Event, JobSpec, Session};
+use plora::session::{Event, JobSpec, Policy, Session};
 use plora::train::{run_pack, TrainOptions};
 
 fn runtime() -> Arc<Runtime> {
     // Point at a directory with no artifacts: synthesizes everything.
     Arc::new(Runtime::load(&std::env::temp_dir().join("plora-no-artifacts")).unwrap())
+}
+
+/// The policy CI parameterizes this suite over (default FIFO).
+fn policy_from_env() -> Policy {
+    std::env::var("PLORA_POLICY")
+        .ok()
+        .and_then(|s| Policy::parse(&s))
+        .unwrap_or(Policy::Fifo)
 }
 
 fn opts(dataset: usize) -> TrainOptions {
@@ -50,6 +63,7 @@ fn session_mixed_queue_matches_solo_path() {
     let o = opts(16); // bs1 -> 16 steps, bs2 -> 8 steps
     let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 2), "nano");
     session.options = o.clone();
+    session.set_policy(policy_from_env());
 
     // Job 0: mixed batches — the bs2 adapter converges first, the bs1
     // survivor re-buckets (2, 8, 2) -> (1, 8, 1). Job 1: a solo adapter.
@@ -246,5 +260,354 @@ fn dynamic_admission_checkpoints_and_id_hygiene() {
         let started = idx(&|e| matches!(e, Event::JobStarted { job: j, .. } if *j == job));
         let done = idx(&|e| matches!(e, Event::JobFinished { job: j, .. } if *j == job));
         assert!(started < done);
+    }
+}
+
+/// Tentpole acceptance (a): **mid-job admission bit-identity**. A queued
+/// single-adapter job joins a running pack at its first completion
+/// boundary; the admitted adapter's whole trajectory — and everyone
+/// else's — is bitwise identical to the solo `run_pack` path.
+#[test]
+fn mid_job_admission_is_bit_identical_to_solo() {
+    let rt = runtime();
+    let o = opts(32); // bs1 -> 32 steps, bs2 -> 16 steps
+    let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 1), "nano");
+    session.options = o.clone();
+    session.set_policy(policy_from_env());
+    session.set_elastic(true);
+
+    // Job 0 holds the only device; job 1's copy adapter can only start by
+    // joining job 0's pack when its parity adapter converges at step 16.
+    session
+        .submit(JobSpec::new(vec![
+            spec("modadd", 8, 1, 2e-3),
+            spec("parity", 8, 2, 2e-3),
+        ]))
+        .unwrap();
+    session.submit(JobSpec::new(vec![spec("copy", 8, 2, 2e-3)])).unwrap();
+    let report = session.drain().unwrap();
+
+    assert_eq!(report.admissions(), 1, "copy must join mid-job");
+    let admitted = report
+        .events
+        .iter()
+        .find_map(|e| match e {
+            Event::AdapterAdmitted { job, adapter, from_job, .. } => {
+                Some((*job, *adapter, *from_job))
+            }
+            _ => None,
+        })
+        .unwrap();
+    assert_eq!(admitted, (0, 2, 1), "adapter 2 moves from job 1 into job 0");
+    // Job 1 was fully absorbed: one real outcome, three adapters in it,
+    // and a zero-adapter JobFinished for the absorbed job.
+    assert_eq!(report.outcomes.len(), 1);
+    assert_eq!(report.total_adapters(), 3);
+    assert!(report
+        .events
+        .iter()
+        .any(|e| matches!(e, Event::JobFinished { job: 1, adapters: 0, .. })));
+
+    // Bitwise identity for every adapter, including the admitted one.
+    for (id, task, batch) in [(0usize, "modadd", 1usize), (1, "parity", 2), (2, "copy", 2)] {
+        let solo_cfg =
+            LoraConfig { id, lr: 2e-3, batch, rank: 8, alpha_ratio: 1.0, task: task.into() };
+        let solo = run_pack(&rt, "nano", &[solo_cfg], &o).unwrap();
+        let s = &solo.adapters[0];
+        let p = report
+            .outcomes
+            .iter()
+            .flat_map(|oc| &oc.report.adapters)
+            .find(|a| a.config.id == id)
+            .unwrap();
+        assert_eq!(s.base_loss, p.base_loss, "{task}: base_loss not bit-identical");
+        assert_eq!(s.base_acc, p.base_acc, "{task}: base_acc not bit-identical");
+        assert_eq!(s.first_loss, p.first_loss, "{task}: first_loss not bit-identical");
+        assert_eq!(s.final_loss, p.final_loss, "{task}: final_loss not bit-identical");
+        assert_eq!(s.eval_loss, p.eval_loss, "{task}: eval_loss not bit-identical");
+        assert_eq!(s.eval_acc, p.eval_acc, "{task}: eval_acc not bit-identical");
+        assert_eq!(s.steps, p.steps);
+    }
+    assert_eq!(session.available(), 1);
+}
+
+/// Tentpole acceptance (b): **preempt-then-resume bit-identity through
+/// the checkpoint pool**. A high-priority job evicts the running one
+/// under `PreemptLowest`; the victim's members round-trip through
+/// `save_resume`/`load_resume` on disk and resume bit-identically.
+#[test]
+fn preempt_and_resume_via_checkpoint_pool_is_bit_identical() {
+    let rt = runtime();
+    let o = opts(256); // long enough that the preemption lands mid-run
+    let dir = std::env::temp_dir().join("plora_session_preempt_ckpts");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 1), "nano");
+    session.options = o.clone();
+    session.set_policy(Policy::PreemptLowest);
+    session.checkpoints = Some(CheckpointPool::new(&dir, rt.clone()).unwrap());
+    let rx = session.subscribe();
+
+    let low = PlannedJob {
+        id: 0,
+        pack: Pack::new(vec![spec("modadd", 8, 1, 2e-3).with_id(0)]),
+        d: 1,
+        mode: ExecMode::Packed,
+    };
+    session.submit_planned_at(low, 0).unwrap();
+    // Wait for the low-priority job to actually hold the device, then
+    // submit the high-priority one — the dispatcher must preempt.
+    for ev in rx.iter() {
+        if matches!(ev, Event::JobStarted { job: 0, .. }) {
+            break;
+        }
+    }
+    let high = PlannedJob {
+        id: 1,
+        pack: Pack::new(vec![spec("parity", 8, 1, 2e-3).with_id(1)]),
+        d: 1,
+        mode: ExecMode::Packed,
+    };
+    session.submit_planned_at(high, 5).unwrap();
+    let report = session.drain().unwrap();
+
+    assert_eq!(report.preemptions(), 1, "job 0 must be preempted exactly once");
+    let preempted = report
+        .events
+        .iter()
+        .find_map(|e| match e {
+            Event::Preempted { job, adapters, .. } => Some((*job, adapters.clone())),
+            _ => None,
+        })
+        .unwrap();
+    assert_eq!(preempted, (0, vec![0]));
+    // The resume checkpoint reached the pool on disk.
+    assert!(dir.join("nano_cfg0_resume.bin").exists());
+    assert!(dir.join("nano_cfg0_resume.json").exists());
+    // The high-priority job finished before the victim's continuation.
+    let finish_at = |job: usize| {
+        report
+            .events
+            .iter()
+            .find_map(|e| match e {
+                Event::JobFinished { job: j, at, adapters, .. } if *j == job && *adapters > 0 => {
+                    Some(*at)
+                }
+                _ => None,
+            })
+            .unwrap()
+    };
+    assert!(finish_at(1) < finish_at(0), "priority must be served first");
+
+    // Bit-identity: the preempted-and-resumed adapter equals a solo run.
+    let solo_cfg = LoraConfig {
+        id: 0,
+        lr: 2e-3,
+        batch: 1,
+        rank: 8,
+        alpha_ratio: 1.0,
+        task: "modadd".into(),
+    };
+    let solo = run_pack(&rt, "nano", &[solo_cfg], &o).unwrap();
+    let s = &solo.adapters[0];
+    let p = report
+        .outcomes
+        .iter()
+        .flat_map(|oc| &oc.report.adapters)
+        .find(|a| a.config.id == 0)
+        .unwrap();
+    assert_eq!(s.first_loss, p.first_loss, "first_loss not bit-identical after resume");
+    assert_eq!(s.final_loss, p.final_loss, "final_loss not bit-identical after resume");
+    assert_eq!(s.eval_loss, p.eval_loss, "eval_loss not bit-identical after resume");
+    assert_eq!(s.eval_acc, p.eval_acc, "eval_acc not bit-identical after resume");
+    assert_eq!(s.base_loss, p.base_loss, "base_loss not bit-identical after resume");
+    assert_eq!(s.steps, p.steps);
+    assert_eq!(session.available(), 1);
+}
+
+/// Tentpole acceptance (c): **property test** — `retarget_bucket` never
+/// picks a move whose modeled phase-time saving is at or below the switch
+/// cost (when staying is feasible), always returns an admitting bucket,
+/// and only forces a move when the current bucket cannot hold the
+/// joiners.
+#[test]
+fn retarget_never_picks_move_below_switch_cost() {
+    use plora::config::geometry::geom;
+    use plora::costmodel::CostModel;
+    use plora::planner::rebalance::{admits, retarget_bucket};
+    use plora::util::rng::Rng;
+
+    // cpu-sim is FLOP-bound: padded samples cost modeled time, so the
+    // saving-vs-switch-cost tradeoff is exercised in both directions.
+    let cm = CostModel::new(geom("qwen2.5-7b").unwrap(), &pool::CPU_SIM);
+    let score = |b: (usize, usize, usize)| cm.bucket_step_time(b, 1, ExecMode::Packed);
+    let mut rng = Rng::new(0xE1A5);
+    let dims_n = [1usize, 2, 3, 4, 6, 8];
+    let dims_r = [8usize, 16, 32, 64];
+    let dims_bs = [1usize, 2, 4];
+    let mut moves = 0usize;
+    let mut stays = 0usize;
+    for _ in 0..400 {
+        // Random bucket grid.
+        let mut grid: Vec<(usize, usize, usize)> = (0..rng.below(6) as usize + 2)
+            .map(|_| {
+                (
+                    dims_n[rng.usize_below(dims_n.len())],
+                    dims_r[rng.usize_below(dims_r.len())],
+                    dims_bs[rng.usize_below(dims_bs.len())],
+                )
+            })
+            .collect();
+        grid.dedup();
+        // Random survivor/joiner packs.
+        let cfg = |rng: &mut Rng, id: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: dims_bs[rng.usize_below(dims_bs.len())],
+            rank: dims_r[rng.usize_below(dims_r.len())],
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        let ns = rng.usize_below(3) + 1;
+        let nj = rng.usize_below(3);
+        let survivors = Pack::new((0..ns).map(|i| cfg(&mut rng, i)).collect());
+        let joiners = Pack::new((0..nj).map(|i| cfg(&mut rng, 100 + i)).collect());
+        let current = grid[rng.usize_below(grid.len())];
+        let switch_cost = [0.0, 1.0, 10.0, 1e9][rng.usize_below(4)];
+        let phase_steps = rng.below(500) as usize;
+
+        let mut combined = survivors.clone();
+        combined.configs.extend(joiners.configs.iter().cloned());
+        let got = retarget_bucket(
+            &grid,
+            &survivors,
+            &joiners,
+            current,
+            &cm,
+            switch_cost,
+            phase_steps,
+        );
+        match got {
+            Some(target) => {
+                moves += 1;
+                assert!(admits(target, &combined), "retarget returned a non-admitting bucket");
+                assert_ne!(target, current, "a 'move' to the current bucket is a no-op");
+                if admits(current, &combined) {
+                    let saving = phase_steps as f64 * (score(current) - score(target));
+                    assert!(
+                        saving > switch_cost,
+                        "move with saving {saving} <= switch cost {switch_cost}"
+                    );
+                }
+            }
+            None => {
+                stays += 1;
+                // If some admitting bucket exists and staying is feasible,
+                // the *best* candidate must not have cleared the bar.
+                if combined.n() > 0 && admits(current, &combined) {
+                    let best = grid
+                        .iter()
+                        .copied()
+                        .filter(|&b| b != current && admits(b, &combined))
+                        .min_by(|&x, &y| score(x).total_cmp(&score(y)));
+                    if let Some(b) = best {
+                        let saving = phase_steps as f64 * (score(current) - score(b));
+                        assert!(
+                            saving <= switch_cost,
+                            "stayed although the best move saves {saving} > {switch_cost}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(moves > 10 && stays > 10, "property space degenerate: {moves} moves, {stays} stays");
+}
+
+/// The skewed-arrival acceptance scenario (mirrors `benches/session.rs`):
+/// elastic admission + retargeting strictly beats the FIFO/no-rebucket
+/// baseline — on the deterministic padded-row work proxy *and* on the
+/// realized makespan.
+#[test]
+fn elastic_session_beats_fifo_baseline_on_skewed_queue() {
+    let rt = runtime();
+    let o = opts(32); // bs1 -> 32 steps, bs2 -> 16 steps
+    // One device; a mixed pack holds it while two short bs2 singles queue
+    // behind (each would burn a padded (2,8,2) bucket alone).
+    let jobs = || {
+        vec![
+            PlannedJob {
+                id: 0,
+                pack: Pack::new(vec![
+                    spec("modadd", 8, 1, 2e-3).with_id(0),
+                    spec("parity", 8, 2, 2e-3).with_id(1),
+                ]),
+                d: 1,
+                mode: ExecMode::Packed,
+            },
+            PlannedJob {
+                id: 1,
+                pack: Pack::new(vec![spec("copy", 8, 2, 2e-3).with_id(2)]),
+                d: 1,
+                mode: ExecMode::Packed,
+            },
+            PlannedJob {
+                id: 2,
+                pack: Pack::new(vec![spec("needle", 8, 2, 2e-3).with_id(3)]),
+                d: 1,
+                mode: ExecMode::Packed,
+            },
+        ]
+    };
+    let run = |policy: Policy, elastic: bool, rebucket: bool| {
+        let mut s = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 1), "nano");
+        s.options = o.clone();
+        s.rebucket = rebucket;
+        s.set_policy(policy);
+        s.set_elastic(elastic);
+        // Priorities descend in submit order: the mixed pack outranks the
+        // singles, so they queue behind it (the admission opportunity).
+        for (i, j) in jobs().into_iter().enumerate() {
+            s.submit_planned_at(j, 10 - i as i32).unwrap();
+        }
+        s.drain().unwrap()
+    };
+    let fifo = run(Policy::Fifo, false, false);
+    let elastic = run(Policy::Priority, true, true);
+
+    // FIFO/no-rebucket burns full padded buckets: 32×4 + 16×4 + 16×4.
+    assert_eq!(fifo.padded_rows(), 32 * 4 + 16 * 4 + 16 * 4);
+    assert_eq!((fifo.admissions(), fifo.rebuckets()), (0, 0));
+    // Elastic: one single joins job 0's freed slot at step 16 (the other
+    // doesn't fit a bucket with 3 members at bs 2 and runs after).
+    assert!(elastic.admissions() >= 1, "admission must fire on the skewed queue");
+    assert!(
+        elastic.padded_rows() < fifo.padded_rows(),
+        "padded work must strictly shrink: {} vs {}",
+        elastic.padded_rows(),
+        fifo.padded_rows()
+    );
+    // The realized makespan is strictly below the baseline (the elastic
+    // run does ~25% less padded work on the same device).
+    assert!(
+        elastic.makespan < fifo.makespan,
+        "elastic makespan {:.3}s not below FIFO baseline {:.3}s",
+        elastic.makespan,
+        fifo.makespan
+    );
+    // Per-adapter results are unchanged by the orchestration (spot-check
+    // the admitted adapter against the FIFO run).
+    for id in 0..4usize {
+        let pick = |r: &plora::session::SessionReport| {
+            r.outcomes
+                .iter()
+                .flat_map(|oc| oc.report.adapters.clone())
+                .find(|a| a.config.id == id)
+                .unwrap()
+        };
+        let (a, b) = (pick(&fifo), pick(&elastic));
+        assert_eq!(a.final_loss, b.final_loss, "adapter {id} final loss diverged");
+        assert_eq!(a.eval_loss, b.eval_loss, "adapter {id} eval loss diverged");
+        assert_eq!(a.eval_acc, b.eval_acc, "adapter {id} eval acc diverged");
     }
 }
