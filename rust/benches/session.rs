@@ -1,26 +1,29 @@
 //! Session orchestration benchmark: a fixed 8-job queue plus a
 //! skewed-arrival scenario on the reference backend, measured end-to-end
 //! through `Session::submit`/`drain` — policy dispatch, concurrent packed
-//! jobs, adapter-completion re-bucketing, elastic mid-job admission.
+//! jobs, adapter-completion re-bucketing, elastic mid-job admission —
+//! plus the device axis: per-`d` sharded step times, the measured
+//! dp-efficiency figure, and the device-count-aware planner against a
+//! fixed-d baseline on the skewed scenario.
 //!
 //! Emits `target/BENCH_session.json` (makespans + throughput + event
-//! counts: rebuckets, admissions, preemptions, and the elastic-vs-FIFO
-//! makespan ratio CI enforces) so the repo's perf trajectory is recorded
-//! run over run, and appends to the shared `target/plora-bench.jsonl`
-//! like every bench.
+//! counts: rebuckets, admissions, preemptions, the elastic-vs-FIFO
+//! makespan ratio and the d-aware-vs-fixed-d ratio CI enforces) so the
+//! repo's perf trajectory is recorded run over run, and appends to the
+//! shared `target/plora-bench.jsonl` like every bench.
 //!
 //! Run: `cargo bench --bench session`
 
 use std::sync::Arc;
 
 use plora::bench::Bench;
-use plora::cluster::ResourceMonitor;
+use plora::cluster::{Allocation, ResourceMonitor};
 use plora::config::{pool, LoraConfig};
-use plora::costmodel::{ExecMode, Pack, TrainBudget};
-use plora::planner::PlannedJob;
+use plora::costmodel::{DpStat, ExecMode, Pack, TrainBudget};
+use plora::planner::{JobPlanner, PlannedJob};
 use plora::runtime::Runtime;
 use plora::session::{Policy, Session, SessionReport};
-use plora::train::TrainOptions;
+use plora::train::{run_pack_on, TrainOptions};
 use plora::util::json::Json;
 
 fn cfg(id: usize, task: &str, rank: usize, bs: usize) -> LoraConfig {
@@ -129,6 +132,64 @@ fn main() -> anyhow::Result<()> {
         last = Some(run_session(&rt, skewed_queue(), 1, 32, Policy::Priority, true, true));
     });
     let skew_elastic = last.take().expect("at least one measured run");
+
+    // Per-`d` sharded step times on a fixed 4-adapter nano pack: the
+    // dp-efficiency figure (eff_d = t_1 / (d · t_d)) plus the Amdahl fit
+    // the device-count-aware planner consumes.
+    let dp_tasks = ["modadd", "copy", "parity", "needle"];
+    let dp_cfgs: Vec<LoraConfig> =
+        (0..4).map(|i| cfg(100 + i, dp_tasks[i % 4], 8, 1)).collect();
+    let dp_stat = DpStat::new();
+    let mut dp_secs = std::collections::BTreeMap::new();
+    for d in [1usize, 2, 4] {
+        let mut step_secs = 0.0;
+        b.measure(&format!("sharded_step_d{d}"), || {
+            let rep = run_pack_on(
+                &rt,
+                "nano",
+                &dp_cfgs,
+                &options(16),
+                &Allocation::local(d),
+            )
+            .expect("sharded run");
+            step_secs = rep.step_secs;
+            for _ in 0..rep.steps {
+                dp_stat.record(d, 4.0, step_secs);
+            }
+        });
+        dp_secs.insert(d, step_secs);
+    }
+    let dp_eff = |d: usize| dp_secs[&1] / (d as f64 * dp_secs[&d]).max(1e-12);
+
+    // Device-count-aware planner vs fixed d=1 on the skewed scenario:
+    // plan the same configs with the *measured* dp fit (the planner
+    // chooses each job's d, keeping d=1 whenever the fit shows sharding
+    // doesn't pay on this machine), then run both queues on 2 devices.
+    let mut cm = plora::search::live_cost_model(&rt, "nano")?;
+    cm.calib.dp_fit = dp_stat.fit();
+    let mut planner = JobPlanner::new(cm, 2);
+    planner.budget = TrainBudget { dataset: 32, epochs: 1 };
+    let cfg_list: Vec<LoraConfig> =
+        skewed_queue().iter().flat_map(|j| j.pack.configs.clone()).collect();
+    let plan = planner.plan(&cfg_list)?;
+    let aware_jobs: Vec<PlannedJob> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+    let fixed_jobs: Vec<PlannedJob> = aware_jobs
+        .iter()
+        .cloned()
+        .map(|mut j| {
+            j.d = 1;
+            j
+        })
+        .collect();
+    let aware_ds: Vec<usize> = aware_jobs.iter().map(|j| j.d).collect();
+    b.measure("skew_d_aware_planner", || {
+        last = Some(run_session(&rt, aware_jobs.clone(), 2, 32, Policy::Fifo, false, true));
+    });
+    let d_aware = last.take().expect("at least one measured run");
+    b.measure("skew_fixed_d", || {
+        last = Some(run_session(&rt, fixed_jobs.clone(), 2, 32, Policy::Fifo, false, true));
+    });
+    let d_fixed = last.take().expect("at least one measured run");
     b.finish()?;
 
     let rank_units: usize = report
@@ -166,6 +227,31 @@ fn main() -> anyhow::Result<()> {
         ("skew_admissions", Json::num(skew_elastic.admissions() as f64)),
         ("skew_rebuckets", Json::num(skew_elastic.rebuckets() as f64)),
         ("skew_preemptions", Json::num(skew_elastic.preemptions() as f64)),
+        // Device axis: per-d sharded step times, the dp-efficiency
+        // figure, and the d-aware-planner-vs-fixed-d gate numbers.
+        ("dp_step_secs_d1", Json::num(dp_secs[&1])),
+        ("dp_step_secs_d2", Json::num(dp_secs[&2])),
+        ("dp_step_secs_d4", Json::num(dp_secs[&4])),
+        ("dp_efficiency_d2", Json::num(dp_eff(2))),
+        ("dp_efficiency_d4", Json::num(dp_eff(4))),
+        (
+            "dp_fit_serial_per_row_s",
+            Json::num(dp_stat.fit().map(|(a, _)| a).unwrap_or(f64::NAN)),
+        ),
+        (
+            "dp_fit_parallel_per_row_s",
+            Json::num(dp_stat.fit().map(|(_, b)| b).unwrap_or(f64::NAN)),
+        ),
+        (
+            "d_aware_job_ds",
+            Json::arr(aware_ds.iter().map(|&d| Json::num(d as f64))),
+        ),
+        ("skew_makespan_d_aware_s", Json::num(d_aware.makespan)),
+        ("skew_makespan_fixed_d_s", Json::num(d_fixed.makespan)),
+        (
+            "skew_d_aware_vs_fixed_d",
+            Json::num(d_aware.makespan / d_fixed.makespan.max(1e-9)),
+        ),
     ]);
     let mut out = String::new();
     rec.write(&mut out);
@@ -193,6 +279,18 @@ fn main() -> anyhow::Result<()> {
         skew_elastic.padded_rows(),
         skew_elastic.admissions(),
         skew_elastic.rebuckets(),
+    );
+    println!(
+        "sharded steps: d1 {:.4}s  d2 {:.4}s (eff {:.2})  d4 {:.4}s (eff {:.2})",
+        dp_secs[&1],
+        dp_secs[&2],
+        dp_eff(2),
+        dp_secs[&4],
+        dp_eff(4),
+    );
+    println!(
+        "d-aware planner (d = {aware_ds:?}): {:.2}s vs fixed d=1 {:.2}s",
+        d_aware.makespan, d_fixed.makespan,
     );
     println!("wrote rust/target/BENCH_session.json");
     Ok(())

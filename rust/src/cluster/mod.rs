@@ -31,6 +31,13 @@ impl Allocation {
     pub fn d(&self) -> usize {
         self.devices.len()
     }
+
+    /// A pool-less allocation of devices `0..d` — what standalone drivers
+    /// (`run_pack`, benches, tests) execute on when no [`ResourceMonitor`]
+    /// granted one. `d` is clamped to ≥ 1.
+    pub fn local(d: usize) -> Allocation {
+        Allocation { devices: (0..d.max(1)).collect() }
+    }
 }
 
 #[derive(Debug)]

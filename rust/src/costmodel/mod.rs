@@ -16,7 +16,7 @@ pub mod memory;
 pub mod throughput;
 
 pub use memory::MemoryModel;
-pub use throughput::{CostModel, ExecMode, JobPhase, SwitchCost};
+pub use throughput::{CostModel, DpStat, ExecMode, JobPhase, SwitchCost};
 
 use crate::config::LoraConfig;
 

@@ -23,7 +23,7 @@
 //! Every paper-published ratio this model is calibrated against is pinned by
 //! a unit test at the bottom of this file.
 
-use crate::config::{GpuProfile, ModelGeom};
+use crate::config::{GpuProfile, LoraConfig, ModelGeom};
 use crate::costmodel::{MemoryModel, Pack, TrainBudget};
 
 /// How the adapters of a job execute (§5.1 vs §5.2).
@@ -86,6 +86,21 @@ pub struct Calib {
     /// calibrate it from measured switch times ([`SwitchCost`],
     /// `Event::CalibUpdated`).
     pub bucket_switch_cost: f64,
+    /// Measured data-parallel efficiency: the Amdahl fit `(a, b)` of
+    /// per-sample step time `t(d) ≈ a + b/d` over the session's executed
+    /// shard counts (`a` = serial per-sample seconds — scatter, fixed-order
+    /// reduction, the single AdamW; `b` = the parallel forward/backward
+    /// share). `None` until live calibration publishes one ([`DpStat`],
+    /// `Event::CalibUpdated`); the model then falls back to the profile's
+    /// static per-hop TP curve — the modeled-only behavior every
+    /// paper-scale test pins.
+    pub dp_fit: Option<(f64, f64)>,
+    /// Wall cost of one device retarget (rebuild the shard set — scatter
+    /// buffers, per-device workers, per-shard arenas — at a new device
+    /// count). The session's boundary device offers only grow a running
+    /// pack when the modeled phase-time saving beats this term; defaults
+    /// to 0 and is calibrated live from measured rebuild times.
+    pub device_switch_cost: f64,
 }
 
 impl Default for Calib {
@@ -104,6 +119,8 @@ impl Default for Calib {
             lora_tp_penalty: 0.8,
             kernels_per_adapter_per_layer: 7.0 * 5.0 + 4.0,
             bucket_switch_cost: 0.0,
+            dp_fit: None,
+            device_switch_cost: 0.0,
         }
     }
 }
@@ -147,6 +164,74 @@ impl SwitchCost {
     /// Number of switches measured so far.
     pub fn samples(&self) -> usize {
         self.inner.lock().unwrap().1
+    }
+}
+
+/// Shared live estimator of data-parallel step efficiency: every executed
+/// step records `(shard count d, padded samples, wall seconds)`, and
+/// [`DpStat::fit`] regresses the per-sample step time on `1/d` — the
+/// Amdahl decomposition `t(d) = a + b/d` the cost model's
+/// [`Calib::dp_fit`] consumes. Clonable handle shared by all jobs of a
+/// session, so steps executed at different device counts calibrate the
+/// efficiency term for every later retarget decision (§4 "profiling data
+/// from the first iterations", applied to the device axis).
+#[derive(Clone, Default)]
+pub struct DpStat {
+    /// Per-d accumulator: d -> (sum of per-sample seconds, steps).
+    inner: std::sync::Arc<std::sync::Mutex<std::collections::BTreeMap<usize, (f64, usize)>>>,
+}
+
+impl DpStat {
+    pub fn new() -> DpStat {
+        DpStat::default()
+    }
+
+    /// Record one executed step: `d` shards over `samples` padded
+    /// sequences taking `secs` wall seconds.
+    pub fn record(&self, d: usize, samples: f64, secs: f64) {
+        if samples <= 0.0 || secs <= 0.0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let e = g.entry(d.max(1)).or_insert((0.0, 0));
+        e.0 += secs / samples;
+        e.1 += 1;
+    }
+
+    /// Total recorded steps.
+    pub fn samples(&self) -> usize {
+        self.inner.lock().unwrap().values().map(|v| v.1).sum()
+    }
+
+    /// Least-squares `(a, b)` of mean per-sample time on `1/d` over the
+    /// distinct shard counts seen so far (needs at least two), clamped to
+    /// the physically meaningful quadrant (`a, b ≥ 0`). `None` until the
+    /// session has executed at more than one device count.
+    pub fn fit(&self) -> Option<(f64, f64)> {
+        let g = self.inner.lock().unwrap();
+        if g.len() < 2 {
+            return None;
+        }
+        let pts: Vec<(f64, f64)> = g
+            .iter()
+            .map(|(&d, &(sum, cnt))| (1.0 / d as f64, sum / cnt.max(1) as f64))
+            .collect();
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let den = n * sxx - sx * sx;
+        if den.abs() < 1e-18 {
+            return None;
+        }
+        let b = (n * sxy - sx * sy) / den;
+        let a = (sy - b * sx) / n;
+        let (a, b) = (a.max(0.0), b.max(0.0));
+        if a + b <= 0.0 {
+            return None;
+        }
+        Some((a, b))
     }
 }
 
@@ -218,6 +303,9 @@ fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> (f64, f64, f64) {
 pub struct JobPhase {
     /// Noise-free seconds this phase runs.
     pub dur: f64,
+    /// Training steps this phase executes (the per-member progress unit
+    /// the simulator's elastic paths subtract at each boundary).
+    pub steps: usize,
     /// Config ids finishing at the phase's end.
     pub finished: Vec<usize>,
     /// Surviving pack shape `(n, r_pad, bs_pad)` after the boundary
@@ -265,6 +353,24 @@ impl CostModel {
         d as f64 * self.profile.tp_eff.powf(hops)
     }
 
+    /// Effective speedup of running one job's rows over `d` devices —
+    /// the term the base step time divides by. With a live dp fit
+    /// ([`Calib::dp_fit`], calibrated from step times measured at each
+    /// executed shard count)
+    /// this is the Amdahl ratio `t(1)/t(d) = (a + b) / (a + b/d)`;
+    /// before calibration it falls back to the profile's static per-hop
+    /// TP curve ([`CostModel::tp_speedup`]) — the modeled-only behavior
+    /// the paper-scale tests pin.
+    pub fn parallel_speedup(&self, d: usize) -> f64 {
+        match self.calib.dp_fit {
+            Some((a, b)) if a + b > 0.0 => {
+                let d = d.max(1) as f64;
+                (a + b) / (a + b / d).max(1e-18)
+            }
+            _ => self.tp_speedup(d),
+        }
+    }
+
     /// Real tokens processed per step by a job running `samples` sequences.
     pub fn step_tokens(&self, samples: f64) -> f64 {
         samples * self.calib.tokens_per_sample.min(self.geom.seq as f64)
@@ -274,7 +380,7 @@ impl CostModel {
     /// devices — the roofline `max(weight-IO, FLOP)`.
     pub fn base_step_time(&self, samples: f64, d: usize) -> f64 {
         let tokens = self.step_tokens(samples);
-        let speed = self.tp_speedup(d);
+        let speed = self.parallel_speedup(d);
         let io = self.calib.weight_passes * self.memory.base_weight_bytes()
             / (speed * self.profile.mem_bw * self.calib.bw_eff);
         let flops = self.geom.base_step_flops(tokens);
@@ -337,6 +443,18 @@ impl CostModel {
     ) -> f64 {
         let (bn, br, bbs) = bucket;
         let samples = (bn * bbs) as f64;
+        if self.calib.dp_fit.is_some() {
+            // Live dp calibration measures *whole* steps, so the Amdahl
+            // ratio scales the whole step (the TP-specific adapter
+            // penalty does not apply to the data-parallel axis). Sharded
+            // execution splits at slot granularity, so devices beyond the
+            // bucket's slot count sit idle — clamp the modeled width the
+            // same way `ShardedState` clamps the executed one.
+            let t1 = self.base_step_time(samples, 1)
+                + self.lora_time_units(bn, (bn * br) as f64, 1, mode)
+                + self.calib.step_overhead;
+            return t1 / self.parallel_speedup(d.min(bn.max(1)));
+        }
         self.base_step_time(samples, d)
             + self.lora_time_units(bn, (bn * br) as f64, d, mode)
             + self.calib.step_overhead
@@ -349,6 +467,14 @@ impl CostModel {
         } else {
             pack.total_bs() as f64
         };
+        if self.calib.dp_fit.is_some() {
+            // See `bucket_step_time`: the Amdahl fit covers the full step
+            // and the width clamps to the pack's slot count.
+            let t1 = self.base_step_time(samples, 1)
+                + self.lora_step_time(pack, 1, mode)
+                + self.calib.step_overhead;
+            return t1 / self.parallel_speedup(d.min(pack.n().max(1)));
+        }
         self.base_step_time(samples, d)
             + self.lora_step_time(pack, d, mode)
             + self.calib.step_overhead
@@ -373,16 +499,29 @@ impl CostModel {
         mode: ExecMode,
         budget: &TrainBudget,
     ) -> Vec<JobPhase> {
-        if pack.n() == 0 {
-            return vec![];
-        }
-        let mut order: Vec<(usize, &crate::config::LoraConfig)> =
-            pack.configs.iter().map(|c| (budget.steps(c.batch), c)).collect();
-        // Descending by steps: the alive set at step t is a prefix.
+        let members: Vec<(LoraConfig, usize)> =
+            pack.configs.iter().map(|c| (c.clone(), budget.steps(c.batch))).collect();
+        self.phases_from_remaining(&members, d, mode)
+    }
+
+    /// The general form behind [`CostModel::job_phases`]: phase
+    /// decomposition from explicit per-member `(config, remaining steps)`
+    /// state. The simulator's elastic paths (mid-job admission, device
+    /// growth, preemption of grown runs) rebuild running timelines with
+    /// it; members with zero remaining steps contribute nothing.
+    pub fn phases_from_remaining(
+        &self,
+        members: &[(LoraConfig, usize)],
+        d: usize,
+        mode: ExecMode,
+    ) -> Vec<JobPhase> {
+        let mut order: Vec<(usize, &LoraConfig)> =
+            members.iter().filter(|m| m.1 > 0).map(|m| (m.1, &m.0)).collect();
+        // Descending by remaining steps: the alive set is always a prefix.
         order.sort_by(|a, b| b.0.cmp(&a.0));
         let mut phases = vec![];
         let mut prev_boundary = 0usize; // steps already accounted for
-        // Walk boundaries from the *shortest-lived* adapter upwards.
+        // Walk boundaries from the *shortest-lived* member upwards.
         let mut i = order.len();
         while i > 0 {
             let steps_here = order[i - 1].0;
@@ -391,7 +530,8 @@ impl CostModel {
                 continue;
             }
             let alive = Pack::new(order[..i].iter().map(|(_, c)| (*c).clone()).collect());
-            let dur = (steps_here - prev_boundary) as f64 * self.step_time(&alive, d, mode);
+            let steps = steps_here - prev_boundary;
+            let dur = steps as f64 * self.step_time(&alive, d, mode);
             // Everything sitting exactly at this boundary finishes now.
             let mut j = i;
             while j > 0 && order[j - 1].0 == steps_here {
@@ -404,11 +544,37 @@ impl CostModel {
                 let surv = Pack::new(order[..j].iter().map(|(_, c)| (*c).clone()).collect());
                 (surv.n(), surv.r_pad(), surv.bs_pad())
             };
-            phases.push(JobPhase { dur, finished, survivors });
+            phases.push(JobPhase { dur, steps, finished, survivors });
             prev_boundary = steps_here;
             i = j;
         }
         phases
+    }
+
+    /// The cross-`d` admission gate shared by the live session and the
+    /// simulator: absorbing a queued job (own padded shape `own`,
+    /// requested width `own_d`, longest member `steps`) into a host
+    /// running bucket `host` at `host_d` trades the job's requested
+    /// parallelism for starting *now*. Allowed when the per-step penalty
+    /// of the host's width, summed over the job's steps, stays under the
+    /// lower bound on what waiting would cost — the host's longest
+    /// remaining member holds its devices at least `host_remaining`
+    /// steps — plus the calibrated device-retarget budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cross_d_admit(
+        &self,
+        host: (usize, usize, usize),
+        host_d: usize,
+        host_remaining: usize,
+        own: (usize, usize, usize),
+        own_d: usize,
+        steps: usize,
+        mode: ExecMode,
+        device_switch_cost: f64,
+    ) -> bool {
+        let t_host = self.bucket_step_time(host, host_d, mode);
+        let t_own = self.bucket_step_time(own, own_d, mode);
+        steps as f64 * (t_host - t_own) <= host_remaining as f64 * t_host + device_switch_cost
     }
 
     /// `T(H_j, d_j)`: wall time of the whole job (Eq. 13/18 denominator) —
@@ -688,6 +854,50 @@ mod tests {
         let other = sc.clone();
         other.record(2.0);
         assert_eq!(sc.samples(), 3);
+    }
+
+    /// The dp-efficiency term: uncalibrated it reproduces the static TP
+    /// curve exactly; a live Amdahl fit replaces it, `DpStat` recovers
+    /// planted `(a, b)` from noiseless per-step records, and a fit with
+    /// no parallel share pins the speedup at 1 (growing never pays).
+    #[test]
+    fn dp_fit_replaces_static_curve_and_dpstat_recovers() {
+        let mut m = cm();
+        for d in [1usize, 2, 4, 8] {
+            assert_eq!(m.parallel_speedup(d), m.tp_speedup(d), "uncalibrated fallback at d={d}");
+        }
+        // Perfect parallel fit: speedup(d) = d.
+        m.calib.dp_fit = Some((0.0, 1e-3));
+        assert!((m.parallel_speedup(4) - 4.0).abs() < 1e-9);
+        // Half-serial fit: speedup(2) = 1/(0.5 + 0.25) ... = 4/3.
+        m.calib.dp_fit = Some((1e-3, 1e-3));
+        assert!((m.parallel_speedup(2) - 4.0 / 3.0).abs() < 1e-9);
+        // All-serial: more devices never help.
+        m.calib.dp_fit = Some((1e-3, 0.0));
+        assert_eq!(m.parallel_speedup(8), 1.0);
+        // Calibrated speedup feeds the base step time.
+        m.calib.dp_fit = Some((0.0, 1e-3));
+        let t1 = m.base_step_time(8.0, 1);
+        let t4 = m.base_step_time(8.0, 4);
+        assert!((t1 / t4 - 4.0).abs() < 1e-6, "base time must scale by the dp fit");
+
+        let (a, b) = (2.0e-4, 8.0e-4);
+        let st = DpStat::new();
+        assert!(st.fit().is_none(), "no fit before any record");
+        st.record(1, 4.0, (a + b) * 4.0);
+        assert!(st.fit().is_none(), "one distinct d cannot separate a from b");
+        for d in [2usize, 4] {
+            // Two steps per d; per-sample time a + b/d.
+            st.record(d, 4.0, (a + b / d as f64) * 4.0);
+            st.record(d, 8.0, (a + b / d as f64) * 8.0);
+        }
+        let (fa, fb) = st.fit().unwrap();
+        assert!((fa - a).abs() < 1e-9 && (fb - b).abs() < 1e-9, "fit ({fa:.2e}, {fb:.2e})");
+        assert_eq!(st.samples(), 5);
+        // Clones share the estimator; degenerate records are ignored.
+        let other = st.clone();
+        other.record(8, 0.0, 1.0);
+        assert_eq!(st.samples(), 5);
     }
 
     /// `fit_live` recovers planted coefficients from noiseless samples.

@@ -38,6 +38,7 @@ USAGE: plora <subcommand> [flags]
 
   plan     --model <geom> --gpus N [--configs N] [--budget N]
   sim      --model <geom> --gpus N [--a10] [--qlora] [--noise S] [--policy P]
+           [--elastic] [--grow-devices]
   train    --model <tinylm> --task T [--rank R] [--lr X] [--batch B] [--steps N]
   sweep    --model <tinylm> --configs N [--gpus N] [--steps N] [--ckpt DIR]
   serve    --model <tinylm> [--configs N] [--gpus N] [--steps N] [--no-rebucket]
@@ -162,6 +163,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
             .get("policy")
             .and_then(Policy::parse)
             .unwrap_or(Policy::Fifo),
+        elastic: args.flag("elastic"),
+        grow_devices: args.flag("grow-devices"),
     };
 
     let run = |plan: &plora::planner::Plan| {
@@ -350,12 +353,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if session.rebucket { "on" } else { "off" },
         if session.elastic() { ", elastic" } else { "" }
     );
-    // Priority policies: stagger priorities by submit order so the serve
-    // renderer demonstrates reordering (later jobs outrank earlier ones).
+    // Priority policies: the caller gave no priorities, so derive
+    // shortest-job-first ranks from modeled work (planner-side priority
+    // assignment — short jobs clear the queue first).
+    let jobs: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+    let prios = plora::planner::default_priorities(
+        &planner.cm,
+        &planner.budget,
+        &jobs,
+        policy != Policy::Fifo,
+    );
     let mut pending = 0usize;
-    for (i, j) in plan.jobs.iter().enumerate() {
-        let prio = if policy == Policy::Fifo { 0 } else { i as i32 };
-        session.submit_planned_at(j.job.clone(), prio)?;
+    for (j, prio) in jobs.into_iter().zip(prios) {
+        session.submit_planned_at(j, prio)?;
         pending += 1;
     }
     while pending > 0 {
@@ -369,14 +379,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (a, b, c) = report.calib_fit;
     println!(
         "\ndone: makespan {}  jobs {}  adapters {}  rebuckets {}  admissions {}  \
-         preemptions {}  switch-cost {:.4}s  calib t = {a:.4} + {b:.2e}*tokens + {c:.2e}*n",
+         preemptions {}  device-retargets {}  switch-cost {:.4}s  \
+         device-switch {:.4}s  calib t = {a:.4} + {b:.2e}*tokens + {c:.2e}*n",
         fmt_dur(report.makespan),
         report.outcomes.len(),
         report.total_adapters(),
         report.rebuckets(),
         report.admissions(),
         report.preemptions(),
+        report.device_retargets(),
         report.switch_cost,
+        report.device_switch_cost,
     );
     Ok(())
 }
@@ -408,6 +421,9 @@ fn render_event(ev: &Event) {
         Event::Preempted { job, adapters, .. } => {
             println!("[{at:7.2}s] job {job} PREEMPTED: adapters {adapters:?} back to queue");
         }
+        Event::DeviceRetarget { job, from, to, .. } => {
+            println!("[{at:7.2}s] job {job} device-retargeted: {from} -> {to} devices");
+        }
         Event::JobFinished { job, adapters, wall, .. } => {
             if *adapters == 0 {
                 println!("[{at:7.2}s] job {job} fully absorbed by running packs");
@@ -418,10 +434,14 @@ fn render_event(ev: &Event) {
         Event::JobFailed { job, error, .. } => {
             println!("[{at:7.2}s] job {job} FAILED: {error}");
         }
-        Event::CalibUpdated { fit: (a, b, c), samples, switch_cost, .. } => {
+        Event::CalibUpdated { fit: (a, b, c), samples, switch_cost, dp_fit, .. } => {
+            let dp = match dp_fit {
+                Some((da, db)) => format!(", dp t_row = {da:.2e} + {db:.2e}/d"),
+                None => String::new(),
+            };
             println!(
                 "[{at:7.2}s] calib updated over {samples} steps: \
-                 t = {a:.4} + {b:.2e}*tok + {c:.2e}*n, switch {switch_cost:.4}s"
+                 t = {a:.4} + {b:.2e}*tok + {c:.2e}*n, switch {switch_cost:.4}s{dp}"
             );
         }
     }

@@ -131,13 +131,23 @@ impl JobPlanner {
                     &mut jobs,
                     4 * remaining.len().max(8),
                 );
-                let jobs = crate::planner::rebalance::drop_empty(jobs);
+                let mut jobs = crate::planner::rebalance::drop_empty(jobs);
+                for job in &jobs {
+                    let used: Vec<usize> = job.pack.configs.iter().map(|c| c.id).collect();
+                    remaining.retain(|c| !used.contains(&c.id));
+                }
+                // Device-count-aware `d`: once the whole space is
+                // scheduled, leftover devices would idle for the rest of
+                // the round — widen the longest jobs while the modeled
+                // parallel speedup strictly shortens them.
+                if remaining.is_empty() {
+                    let spare = g_avail - jobs.iter().map(|j| j.d).sum::<usize>();
+                    self.widen_jobs(&mut jobs, spare);
+                }
                 for mut job in jobs {
                     job.id = next_id;
                     next_id += 1;
                     let dur = self.cm.job_time(&job.pack, job.d, job.mode, &self.budget);
-                    let used: Vec<usize> = job.pack.configs.iter().map(|c| c.id).collect();
-                    remaining.retain(|c| !used.contains(&c.id));
                     g_avail -= job.d;
                     running.push((now + dur, job.d));
                     queue.push(ScheduledJob { job, start: now, end: now + dur });
@@ -177,6 +187,90 @@ impl JobPlanner {
             stats,
             plan_secs: t_wall.elapsed().as_secs_f64(),
         })
+    }
+}
+
+impl JobPlanner {
+    /// Device-count-aware widening: the planner chooses each job's `d`
+    /// instead of taking it from the caller. With the search space fully
+    /// scheduled, `spare` devices would idle until the round drains, so
+    /// the longest job's parallelism doubles while (a) the devices exist,
+    /// (b) memory stays feasible at the wider degree, and (c) the modeled
+    /// job time *strictly* shrinks under [`CostModel::parallel_speedup`]
+    /// — the live-calibrated dp-efficiency term when a session published
+    /// one, the static TP curve otherwise. A calibration showing no
+    /// data-parallel benefit (serial-dominated fit) therefore pins every
+    /// job at its minimal degree.
+    fn widen_jobs(&self, jobs: &mut [PlannedJob], mut spare: usize) -> usize {
+        let mut grew = 0usize;
+        // Jobs proven unwidenable (memory, spare, or no strict speedup)
+        // are frozen rather than ending the pass — a shorter job may
+        // still profitably take the spare devices.
+        let mut frozen = vec![false; jobs.len()];
+        loop {
+            let Some((i, dur)) = jobs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !frozen[*i])
+                .map(|(i, j)| (i, self.cm.job_time(&j.pack, j.d, j.mode, &self.budget)))
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+            else {
+                break;
+            };
+            let extra = jobs[i].d; // double the degree (power-of-two, Eq. 16)
+            if extra == 0 || extra > spare || !self.cm.fits(&jobs[i].pack, jobs[i].d * 2) {
+                frozen[i] = true;
+                continue;
+            }
+            let t2 = self.cm.job_time(&jobs[i].pack, jobs[i].d * 2, jobs[i].mode, &self.budget);
+            if t2 >= dur * (1.0 - 1e-9) {
+                frozen[i] = true; // wider is not strictly faster here
+                continue;
+            }
+            jobs[i].d *= 2;
+            spare -= extra;
+            grew += extra;
+        }
+        grew
+    }
+}
+
+/// Planner-side priority assignment: shortest-job-first ranks from
+/// modeled work ([`CostModel::job_time`]) for callers that submit without
+/// explicit priorities. Shorter modeled jobs get strictly higher ranks
+/// (SJF minimizes mean completion time on a shared pool); ties keep
+/// input order. Returns one rank per entry of `jobs`, aligned by index —
+/// feed them to `Session::submit_planned_at` under a priority policy.
+pub fn sjf_priorities(
+    cm: &crate::costmodel::CostModel,
+    budget: &TrainBudget,
+    jobs: &[PlannedJob],
+) -> Vec<i32> {
+    let times: Vec<f64> =
+        jobs.iter().map(|j| cm.job_time(&j.pack, j.d, j.mode, budget)).collect();
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| times[a].total_cmp(&times[b]).then(a.cmp(&b)));
+    let mut prios = vec![0i32; jobs.len()];
+    for (rank, &i) in order.iter().enumerate() {
+        prios[i] = jobs.len() as i32 - rank as i32;
+    }
+    prios
+}
+
+/// Priorities for a queue whose caller supplied none: zero ranks when
+/// `sjf` is off (FIFO — submission order already encodes the queue),
+/// [`sjf_priorities`] otherwise. The one entry point `search::sweep` and
+/// `plora serve` share.
+pub fn default_priorities(
+    cm: &crate::costmodel::CostModel,
+    budget: &TrainBudget,
+    jobs: &[PlannedJob],
+    sjf: bool,
+) -> Vec<i32> {
+    if sjf {
+        sjf_priorities(cm, budget, jobs)
+    } else {
+        vec![0; jobs.len()]
     }
 }
 
@@ -281,5 +375,79 @@ mod tests {
         let plan = p.plan(&grid[..40]).unwrap();
         assert_eq!(plan.total_configs(), 40);
         assert!(plan.jobs.iter().all(|j| j.job.d >= 2));
+    }
+
+    /// Device-count-aware widening: with spare devices and a modeled
+    /// speedup, the longest job's `d` doubles; a serial-dominated dp
+    /// calibration pins everything at the minimal degree instead.
+    #[test]
+    fn widen_jobs_grows_longest_only_when_speedup_is_real() {
+        use crate::costmodel::{ExecMode, Pack};
+        let mut p = planner("qwen2.5-7b");
+        let cfg = |id: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: 1,
+            rank: 32,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        let mk = || {
+            vec![
+                PlannedJob {
+                    id: 0,
+                    pack: Pack::new(vec![cfg(0), cfg(1), cfg(2)]),
+                    d: 1,
+                    mode: ExecMode::Packed,
+                },
+                PlannedJob {
+                    id: 1,
+                    pack: Pack::new(vec![cfg(3)]),
+                    d: 1,
+                    mode: ExecMode::Packed,
+                },
+            ]
+        };
+        // Perfectly parallel dp fit: widening pays and takes the spare.
+        p.cm.calib.dp_fit = Some((0.0, 1e-3));
+        let mut jobs = mk();
+        let grew = p.widen_jobs(&mut jobs, 2);
+        assert!(grew >= 1, "spare devices must be soaked when speedup is real");
+        assert!(jobs.iter().any(|j| j.d >= 2));
+        assert!(jobs.iter().map(|j| j.d).sum::<usize>() <= 4);
+        // Serial-dominated fit: speedup(2) ≈ 1, widening never fires.
+        p.cm.calib.dp_fit = Some((1e-3, 0.0));
+        let mut jobs = mk();
+        assert_eq!(p.widen_jobs(&mut jobs, 2), 0);
+        assert!(jobs.iter().all(|j| j.d == 1));
+    }
+
+    /// Shortest-job-first priorities: the shortest modeled job outranks
+    /// everything, ranks are a permutation, and ties keep input order.
+    #[test]
+    fn sjf_priorities_rank_short_jobs_highest() {
+        use crate::costmodel::{ExecMode, Pack};
+        let p = planner("qwen2.5-7b");
+        let cfg = |id: usize, bs: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: bs,
+            rank: 32,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        // bs 1 -> many steps (long); bs 4 -> few steps (short).
+        let jobs = vec![
+            PlannedJob { id: 0, pack: Pack::new(vec![cfg(0, 1)]), d: 1, mode: ExecMode::Packed },
+            PlannedJob { id: 1, pack: Pack::new(vec![cfg(1, 4)]), d: 1, mode: ExecMode::Packed },
+            PlannedJob { id: 2, pack: Pack::new(vec![cfg(2, 4)]), d: 1, mode: ExecMode::Packed },
+        ];
+        let prios = sjf_priorities(&p.cm, &p.budget, &jobs);
+        assert_eq!(prios.len(), 3);
+        assert!(prios[1] > prios[0], "short job must outrank the long one");
+        assert!(prios[1] > prios[2], "ties resolve by input order");
+        let mut sorted = prios.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![1, 2, 3], "ranks are a permutation of 1..=n");
     }
 }

@@ -13,7 +13,7 @@ pub mod rebalance;
 pub use baselines::{max_gpu_plan, min_gpu_plan, sequential_plora_plan};
 pub use dtm::{Dtm, DtmStats};
 pub use ilp::{PackProblem, PackSolution};
-pub use job_planner::{JobPlanner, Plan};
+pub use job_planner::{default_priorities, sjf_priorities, JobPlanner, Plan};
 pub use rebalance::rebalance_round;
 
 use crate::costmodel::{ExecMode, Pack};

@@ -114,16 +114,19 @@ pub fn admits(bucket: (usize, usize, usize), pack: &Pack) -> bool {
 ///   `CalibUpdated`). `None` means "keep riding the current bucket".
 ///
 /// Step times charge the full padded bucket shape
-/// ([`CostModel::bucket_step_time`]); ties break toward the smaller
-/// padded volume.
+/// ([`CostModel::bucket_step_time`]) at the pack's executed device count
+/// `d` (the dp-efficiency term scales the base share); ties break toward
+/// the smaller padded volume.
 ///
 /// [c]: crate::costmodel::throughput::Calib::bucket_switch_cost
+#[allow(clippy::too_many_arguments)]
 pub fn retarget_bucket(
     buckets: &[(usize, usize, usize)],
     survivors: &Pack,
     joiners: &Pack,
     current: (usize, usize, usize),
     cm: &CostModel,
+    d: usize,
     switch_cost: f64,
     phase_steps: usize,
 ) -> Option<(usize, usize, usize)> {
@@ -133,7 +136,7 @@ pub fn retarget_bucket(
         return None;
     }
     let vol = |(a, b, c): (usize, usize, usize)| a * b * c;
-    let score = |b: (usize, usize, usize)| cm.bucket_step_time(b, 1, ExecMode::Packed);
+    let score = |b: (usize, usize, usize)| cm.bucket_step_time(b, d.max(1), ExecMode::Packed);
     let best = buckets
         .iter()
         .copied()
@@ -232,7 +235,7 @@ mod tests {
         // The nano-style grid plus a rank-32 tier.
         let grid = [(1, 8, 1), (2, 8, 1), (4, 8, 1), (2, 8, 2), (2, 32, 2)];
         let one = Pack::new(vec![cfg(0, 8, 1)]);
-        let rt = |surv: &Pack, cur, sw| retarget_bucket(&grid, surv, &none, cur, &cm, sw, 100);
+        let rt = |surv: &Pack, cur, sw| retarget_bucket(&grid, surv, &none, cur, &cm, 1, sw, 100);
         assert_eq!(rt(&one, (2, 8, 2), 0.0), Some((1, 8, 1)));
         // Already on the cheapest admitting bucket: no move.
         assert_eq!(rt(&one, (1, 8, 1), 0.0), None);
@@ -261,18 +264,23 @@ mod tests {
         // 3 combined adapters don't fit (1, 8, 1): forced move, even at
         // infinite switch cost.
         assert_eq!(
-            retarget_bucket(&grid, &surv, &join, (1, 8, 1), &cm, f64::MAX, 10),
+            retarget_bucket(&grid, &surv, &join, (1, 8, 1), &cm, 1, f64::MAX, 10),
             Some((4, 8, 1))
         );
         // Combined pack fits the current (4, 8, 1): no cheaper admitting
         // bucket exists, so stay.
-        assert_eq!(retarget_bucket(&grid, &surv, &join, (4, 8, 1), &cm, 0.0, 10), None);
+        assert_eq!(retarget_bucket(&grid, &surv, &join, (4, 8, 1), &cm, 1, 0.0, 10), None);
         // One joiner into a bs-2 bucket: (2, 8, 1) admits and is cheaper;
         // taken only when the saving clears the switch cost.
         let one_join = Pack::new(vec![cfg(1, 8, 1)]);
-        let got = retarget_bucket(&grid, &surv, &one_join, (2, 8, 2), &cm, 0.0, 100);
+        let got = retarget_bucket(&grid, &surv, &one_join, (2, 8, 2), &cm, 1, 0.0, 100);
         assert_eq!(got, Some((2, 8, 1)));
-        let pinned = retarget_bucket(&grid, &surv, &one_join, (2, 8, 2), &cm, f64::MAX, 100);
+        let pinned = retarget_bucket(&grid, &surv, &one_join, (2, 8, 2), &cm, 1, f64::MAX, 100);
         assert_eq!(pinned, None);
+        // The decision is d-aware: scores at d=2 shrink the base share
+        // uniformly, so the *ordering* (and hence the chosen bucket) is
+        // preserved while the absolute saving scales down.
+        let got2 = retarget_bucket(&grid, &surv, &one_join, (2, 8, 2), &cm, 2, 0.0, 100);
+        assert_eq!(got2, Some((2, 8, 1)));
     }
 }

@@ -28,6 +28,84 @@ pub trait ExecutionBackend: Send + Sync {
     /// Prepare one artifact. Called once per artifact (the runtime caches
     /// the result); may be expensive (e.g. XLA compilation).
     fn load(&self, manifest: &Manifest, info: &ArtifactInfo) -> Result<Box<dyn BackendExecutable>>;
+
+    /// Data-parallel split support: build an executor for the two halves
+    /// of a train step — forward/backward gradients over an arbitrary
+    /// `(n, r, bs)` sub-bucket of `model`, and the AdamW application from
+    /// externally supplied gradients. This is the unit
+    /// [`crate::runtime::shard::ShardedState`] runs per device. `None`
+    /// (the default) means the backend only executes fused steps (e.g.
+    /// AOT-compiled PJRT artifacts); the sharding layer then falls back to
+    /// single-device execution.
+    fn shard(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+        n: usize,
+        r: usize,
+        bs: usize,
+    ) -> Result<Option<Box<dyn ShardStepExec>>> {
+        let _ = (manifest, model, n, r, bs);
+        Ok(None)
+    }
+}
+
+/// The gradient half of one train step: per-tensor LoRA gradients in
+/// `LORA_ORDER` (shapes matching the packed `lora` inputs) plus the
+/// per-adapter losses of the batch.
+pub struct GradStep {
+    pub grads: Vec<HostTensor>,
+    pub per_loss: Vec<f32>,
+}
+
+/// The optimizer half of one train step: the updated parameter/moment set
+/// and the advanced per-adapter step counters.
+pub struct AdamOut {
+    pub lora: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub t: Vec<f32>,
+}
+
+/// A train step split into its forward/backward and optimizer halves —
+/// what one shard worker of [`crate::runtime::shard::ShardedState`] runs.
+/// The fused-step contract (`BackendExecutable::run`) is exactly
+/// `run_grads` followed by `run_adamw` on the same tensors, and both
+/// halves preserve every output element's reduction order, so a sharded
+/// step whose shards partition the pack at slot granularity is bitwise
+/// identical to the fused step (DESIGN.md §11).
+pub trait ShardStepExec: Send + Sync {
+    /// Forward + backward over this shard's `(n, r, bs)` slice: `base` in
+    /// `BASE_ORDER`, `lora` the 14 packed `LORA_ORDER` tensors at the
+    /// shard shape, `tokens`/`targets` `(n, bs, seq)` i32, `mask`
+    /// `(n, bs, seq)` f32, `scale` `(n,)`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_grads(
+        &self,
+        base: &[HostTensor],
+        lora: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        mask: &HostTensor,
+        scale: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<GradStep>;
+
+    /// One AdamW update of the full `(n, r)` state from externally
+    /// reduced gradients (`grads` in `LORA_ORDER`, full-bucket shapes).
+    /// `t` is the per-adapter step-counter vector *before* the update.
+    #[allow(clippy::too_many_arguments)]
+    fn run_adamw(
+        &self,
+        lora: &[HostTensor],
+        m: &[HostTensor],
+        v: &[HostTensor],
+        t: &[f32],
+        grads: &[HostTensor],
+        lr: &[f32],
+        rmask: &HostTensor,
+        scratch: &mut Scratch,
+    ) -> Result<AdamOut>;
 }
 
 /// A prepared artifact. Inputs are pre-validated against the manifest by
@@ -98,6 +176,12 @@ impl Scratch {
     /// every element before reading any.
     pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
         take_buf(&mut self.pool, len)
+    }
+
+    /// Borrow the recycled-buffer pool alone (no arena involvement) —
+    /// for backend paths that only cycle output buffers.
+    pub fn pool(&mut self) -> &mut Vec<Vec<f32>> {
+        &mut self.pool
     }
 
     /// Return a spent f32 buffer to the pool for reuse by later runs.

@@ -26,12 +26,16 @@ pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;
+pub mod shard;
 pub mod state;
 pub mod tensor;
 pub mod tensor_file;
 
-pub use backend::{BackendExecutable, ExecutionBackend, Scratch};
+pub use backend::{
+    AdamOut, BackendExecutable, ExecutionBackend, GradStep, Scratch, ShardStepExec,
+};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec};
+pub use shard::ShardedState;
 pub use state::{JoinSource, MemberState, TrainState};
 pub use tensor::{DType, HostTensor, TensorData};
 
@@ -186,6 +190,21 @@ impl Runtime {
     /// Number of prepared executables currently cached.
     pub fn cached(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+
+    /// Data-parallel split support: the backend's forward/backward and
+    /// optimizer halves of a train step at an exact `(n, r, bs)`
+    /// sub-bucket of `model`. `None` when the backend only executes fused
+    /// steps — [`shard::ShardedState`] then falls back to single-device
+    /// execution.
+    pub fn shard_exec(
+        &self,
+        model: &str,
+        n: usize,
+        r: usize,
+        bs: usize,
+    ) -> Result<Option<Box<dyn ShardStepExec>>> {
+        self.backend.shard(&self.manifest, model, n, r, bs)
     }
 
     /// A model's frozen base weights in `BASE_ORDER` (the train/eval

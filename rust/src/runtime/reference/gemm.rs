@@ -26,11 +26,13 @@
 //! shapes every run.
 //!
 //! **Threading.** [`mm_acc_par`] / [`mm_nt_acc_par`] split the *output
-//! rows* across scoped threads. A row's reduction is entirely sequential
-//! inside one thread and no two threads share an output element, so the
-//! result is bitwise identical at any worker count. The worker count
-//! comes from the `PLORA_THREADS` env var (default 1, i.e. serial), and
-//! can be overridden programmatically with [`set_threads`] (benches).
+//! rows* across the persistent [`crate::util::threadpool::global`]
+//! workers (no per-region thread spawns). A row's reduction is entirely
+//! sequential inside one worker and no two workers share an output
+//! element, so the result is bitwise identical at any worker count. The
+//! worker count comes from the `PLORA_THREADS` env var (default 1, i.e.
+//! serial), and can be overridden programmatically with [`set_threads`]
+//! (benches).
 
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 
@@ -128,24 +130,28 @@ pub fn mm_tn_acc(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: u
 // Row-parallel drivers
 // ---------------------------------------------------------------------------
 
-/// Don't spawn workers for calls doing fewer multiply-accumulates than
-/// this: a scoped-thread spawn costs ~10–20 µs, so a region must carry
-/// roughly a millisecond of serial work before splitting it pays. Below
-/// the cutoff the work runs serially — bitwise identical either way, only
-/// the wall clock differs (nano-scale steps stay spawn-free even at
+/// Don't parallelize calls doing fewer multiply-accumulates than this:
+/// dispatching onto the pool still costs queue/latch synchronization, so a
+/// region must carry real work before splitting it pays. Below the cutoff
+/// the work runs serially — bitwise identical either way, only the wall
+/// clock differs (nano-scale steps stay dispatch-free even at
 /// `PLORA_THREADS=4`).
 pub(crate) const PAR_MIN_WORK: usize = 1 << 20;
 
 /// Split `rows` into at most `nt` contiguous chunks — carving the two
 /// row-aligned output buffers (`out1` with `s1` floats per row, `out2`
 /// with `s2`; either may be empty with stride 0) along the same
-/// boundaries — and run `body(chunk1, chunk2, lo, hi)` on scoped threads.
-/// Falls back to one serial `body(out1, out2, 0, rows)` call when `nt`
-/// is 1 or the total work (`rows · work_per_row` MACs) is under
-/// [`PAR_MIN_WORK`]. Each output row is written by exactly one worker and
-/// `body` must keep every row's reduction sequential, so the result is
-/// bitwise identical at any `nt` (every caller's `body` is a pure
-/// row-range kernel).
+/// boundaries — and run `body(chunk1, chunk2, lo, hi)` on the persistent
+/// [`crate::util::threadpool::global`] workers (no per-region thread
+/// spawns — the ~10–20 µs spawn cost the old `std::thread::scope` path
+/// paid per parallel region). Falls back to one serial
+/// `body(out1, out2, 0, rows)` call when `nt` is 1 or the total work
+/// (`rows · work_per_row` MACs) is under [`PAR_MIN_WORK`]. Each output
+/// row is written by exactly one worker and `body` must keep every row's
+/// reduction sequential, so the result is bitwise identical at any `nt`
+/// (every caller's `body` is a pure row-range kernel). The pool's last
+/// task runs inline on the calling thread, and dispatch from a pool
+/// worker degrades to inline serial execution — same results either way.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn par_row_chunks<F>(
     rows: usize,
@@ -166,26 +172,21 @@ pub(crate) fn par_row_chunks<F>(
     }
     let chunk = rows.div_ceil(nt);
     let body = &body;
-    std::thread::scope(|sc| {
-        let mut rest1 = out1;
-        let mut rest2 = out2;
-        let mut lo = 0usize;
-        loop {
-            let h = chunk.min(rows - lo);
-            if lo + h == rows {
-                // Final chunk runs on the calling thread — one fewer
-                // spawn per region, the caller would only block anyway.
-                body(rest1, rest2, lo, rows);
-                break;
-            }
-            let (c1, t1) = std::mem::take(&mut rest1).split_at_mut(h * s1);
-            let (c2, t2) = std::mem::take(&mut rest2).split_at_mut(h * s2);
-            rest1 = t1;
-            rest2 = t2;
-            sc.spawn(move || body(c1, c2, lo, lo + h));
-            lo += h;
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nt);
+    let mut rest1 = out1;
+    let mut rest2 = out2;
+    let mut lo = 0usize;
+    while lo < rows {
+        let h = chunk.min(rows - lo);
+        let (c1, t1) = std::mem::take(&mut rest1).split_at_mut(h * s1);
+        let (c2, t2) = std::mem::take(&mut rest2).split_at_mut(h * s2);
+        rest1 = t1;
+        rest2 = t2;
+        let hi = lo + h;
+        tasks.push(Box::new(move || body(c1, c2, lo, hi)));
+        lo = hi;
+    }
+    crate::util::threadpool::global().scoped(tasks);
 }
 
 /// Split `m` output rows across scoped threads and run [`mm_acc`] on each

@@ -23,7 +23,9 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::backend::{take_buf, BackendExecutable, ExecutionBackend, Scratch};
+use crate::runtime::backend::{
+    take_buf, AdamOut, BackendExecutable, ExecutionBackend, GradStep, Scratch, ShardStepExec,
+};
 use crate::runtime::manifest::{
     ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec, TokenLayout,
 };
@@ -89,6 +91,203 @@ impl ExecutionBackend for RefBackend {
             }
         }
     }
+
+    /// The reference interpreter executes any `(n, r, bs)` shape directly
+    /// (no AOT compilation), so the two halves of the train step are
+    /// available at exact shard shapes — `ShardedState` never has to pad a
+    /// shard up to a grid bucket, which is what keeps a shard's
+    /// per-adapter row set identical to the fused step's.
+    fn shard(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+        n: usize,
+        r: usize,
+        bs: usize,
+    ) -> Result<Option<Box<dyn ShardStepExec>>> {
+        let mi = manifest.model(model)?;
+        let spec = Spec {
+            vocab: mi.vocab,
+            d_model: mi.d_model,
+            n_layers: mi.n_layers,
+            n_heads: mi.n_heads,
+            d_ff: mi.d_ff,
+            seq: mi.seq,
+        };
+        spec.check()?;
+        Ok(Some(Box::new(ShardExec { spec, n, r, bs })))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded train-step halves (data-parallel execution, DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// The two halves of one train step at an exact `(n, r, bs)` shape: the
+/// forward/backward gradient computation one shard worker runs over its
+/// slot slice, and the AdamW application over externally reduced
+/// gradients. Both call the exact `tinylm` routines the fused
+/// [`TrainEvalExec`] calls, in the same order — the fused step *is*
+/// `run_grads` + `run_adamw`, so a slot-partitioned sharded step is
+/// bitwise identical to it (each adapter's gradient accumulates over only
+/// its own rows; see `proj_bwd_wgrads`).
+struct ShardExec {
+    spec: Spec,
+    n: usize,
+    r: usize,
+    bs: usize,
+}
+
+impl ShardStepExec for ShardExec {
+    fn run_grads(
+        &self,
+        base: &[HostTensor],
+        lora_t: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        mask: &HostTensor,
+        scale: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<GradStep> {
+        let (n, r, bs) = (self.n, self.r, self.bs);
+        if lora_t.len() != NL || base.len() != NB || scale.len() != n {
+            bail_shapes("run_grads", lora_t.len(), base.len(), scale.len(), n)?;
+        }
+        let base_refs: Vec<&HostTensor> = base.iter().collect();
+        let lora_refs: Vec<&HostTensor> = lora_t.iter().collect();
+        let lora = lora_slices(&lora_refs)?;
+        let tokens_i = tokens.as_i32()?;
+        let targets_i = targets.as_i32()?;
+        let mask_f = mask.as_f32()?;
+        let (ws, pool) = scratch.parts(Workspace::new);
+        let per = grads_core(
+            &self.spec, &base_refs, &lora, scale, tokens_i, targets_i, mask_f, n, bs, r, ws,
+        )?;
+        // Copy the workspace gradients out through the recycled-buffer
+        // pool (the caller returns them via `Scratch::recycle` after the
+        // reduction, so steady-state steps allocate nothing).
+        let mut grads = Vec::with_capacity(NL);
+        for k in 0..NL {
+            let mut buf = take_buf(pool, ws.grads[k].len());
+            buf.copy_from_slice(&ws.grads[k]);
+            grads.push(HostTensor::f32(lora_t[k].shape.clone(), buf)?);
+        }
+        Ok(GradStep { grads, per_loss: per })
+    }
+
+    fn run_adamw(
+        &self,
+        lora_t: &[HostTensor],
+        m_t: &[HostTensor],
+        v_t: &[HostTensor],
+        t: &[f32],
+        grads: &[HostTensor],
+        lr: &[f32],
+        rmask: &HostTensor,
+        scratch: &mut Scratch,
+    ) -> Result<AdamOut> {
+        let (n, r) = (self.n, self.r);
+        if lora_t.len() != NL || grads.len() != NL || t.len() != n || lr.len() != n {
+            bail_shapes("run_adamw", lora_t.len(), grads.len(), t.len(), n)?;
+        }
+        let lora_refs: Vec<&HostTensor> = lora_t.iter().collect();
+        let m_refs: Vec<&HostTensor> = m_t.iter().collect();
+        let v_refs: Vec<&HostTensor> = v_t.iter().collect();
+        let grad_slices: Vec<&[f32]> =
+            grads.iter().map(|g| g.as_f32()).collect::<Result<_>>()?;
+        adamw_core(
+            &lora_refs,
+            &m_refs,
+            &v_refs,
+            t,
+            &grad_slices,
+            lr,
+            rmask.as_f32()?,
+            n,
+            r,
+            scratch.pool(),
+        )
+    }
+}
+
+/// Shared arity-error path of the [`ShardExec`] entry points.
+fn bail_shapes(what: &str, a: usize, b: usize, c: usize, n: usize) -> Result<()> {
+    Err(anyhow!("{what}: bad arity (got {a}/{b}/{c} for n={n})"))
+}
+
+/// The forward/backward half shared by the fused [`TrainEvalExec`] and
+/// [`ShardExec`]: per-adapter losses, with the `LORA_ORDER` gradients
+/// left in the workspace arena. One copy of the glue, so the fused and
+/// split paths cannot drift — the bitwise device-count-invariance
+/// contract (DESIGN.md §11) holds by construction.
+#[allow(clippy::too_many_arguments)]
+fn grads_core(
+    spec: &Spec,
+    base: &[&HostTensor],
+    lora: &[&[f32]; NL],
+    scale: &[f32],
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    bs: usize,
+    r: usize,
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
+    tinylm::forward(spec, base, lora, scale, tokens, n, bs, r, ws)?;
+    tinylm::backward(spec, base, lora, scale, targets, mask, n, bs, r, ws)
+}
+
+/// The optimizer half shared by the fused [`TrainEvalExec`] and
+/// [`ShardExec`]: one AdamW update across the `LORA_ORDER` set, output
+/// buffers drawn from the recycled pool. `t_in` is the per-adapter step
+/// counter vector *before* the update.
+#[allow(clippy::too_many_arguments)]
+fn adamw_core(
+    lora_t: &[&HostTensor],
+    m_t: &[&HostTensor],
+    v_t: &[&HostTensor],
+    t_in: &[f32],
+    grads: &[&[f32]],
+    lr: &[f32],
+    rmask: &[f32],
+    n: usize,
+    r: usize,
+    pool: &mut Vec<Vec<f32>>,
+) -> Result<AdamOut> {
+    let t_new: Vec<f32> = t_in.iter().map(|&x| x + 1.0).collect();
+    let mut out_lora = Vec::with_capacity(NL);
+    let mut out_m = Vec::with_capacity(NL);
+    let mut out_v = Vec::with_capacity(NL);
+    for k in 0..NL {
+        let shape = lora_t[k].shape.clone();
+        let (d2, d3) = (shape[2], shape[3]);
+        let len = lora_t[k].len();
+        let mut nl = take_buf(pool, len);
+        let mut nm = take_buf(pool, len);
+        let mut nv = take_buf(pool, len);
+        tinylm::adamw_update(
+            lora_t[k].as_f32()?,
+            m_t[k].as_f32()?,
+            v_t[k].as_f32()?,
+            grads[k],
+            lr,
+            rmask,
+            n,
+            d2,
+            d3,
+            r,
+            LORA_ORDER[k].starts_with("a_"),
+            &t_new,
+            &mut nl,
+            &mut nm,
+            &mut nv,
+        );
+        out_lora.push(HostTensor::f32(shape.clone(), nl)?);
+        out_m.push(HostTensor::f32(shape.clone(), nm)?);
+        out_v.push(HostTensor::f32(shape, nv)?);
+    }
+    Ok(AdamOut { lora: out_lora, m: out_m, v: out_v, t: t_new })
 }
 
 // ---------------------------------------------------------------------------
@@ -153,48 +352,19 @@ impl BackendExecutable for TrainEvalExec {
         // Activations + gradients live in the step-persistent arena; the
         // AdamW outputs cycle through the scratch pool (`TrainState::step`
         // recycles the previous state's buffers), so the steady state of a
-        // job phase performs no allocation at all.
+        // job phase performs no allocation at all. The fused step *is*
+        // [`grads_core`] followed by [`adamw_core`] — the exact halves
+        // the sharded path runs — so device-count invariance holds by
+        // construction, not by parallel maintenance.
         let (ws, pool) = scratch.parts(Workspace::new);
-        tinylm::forward(&self.spec, base, &lora, scale, tokens, n, bs, r, ws)?;
-        let per =
-            tinylm::backward(&self.spec, base, &lora, scale, targets, mask, n, bs, r, ws)?;
+        let per = grads_core(&self.spec, base, &lora, scale, tokens, targets, mask, n, bs, r, ws)?;
 
-        let t_new: Vec<f32> = t_in.iter().map(|&x| x + 1.0).collect();
-        let mut out_lora = Vec::with_capacity(NL);
-        let mut out_m = Vec::with_capacity(NL);
-        let mut out_v = Vec::with_capacity(NL);
-        for k in 0..NL {
-            let shape = lora_t[k].shape.clone();
-            let (d2, d3) = (shape[2], shape[3]);
-            let len = lora_t[k].len();
-            let mut nl = take_buf(pool, len);
-            let mut nm = take_buf(pool, len);
-            let mut nv = take_buf(pool, len);
-            tinylm::adamw_update(
-                lora[k],
-                m_t[k].as_f32()?,
-                v_t[k].as_f32()?,
-                &ws.grads[k],
-                lr,
-                rmask,
-                n,
-                d2,
-                d3,
-                r,
-                LORA_ORDER[k].starts_with("a_"),
-                &t_new,
-                &mut nl,
-                &mut nm,
-                &mut nv,
-            );
-            out_lora.push(HostTensor::f32(shape.clone(), nl)?);
-            out_m.push(HostTensor::f32(shape.clone(), nm)?);
-            out_v.push(HostTensor::f32(shape, nv)?);
-        }
-        let mut outs = out_lora;
-        outs.extend(out_m);
-        outs.extend(out_v);
-        outs.push(HostTensor::f32(vec![n], t_new)?);
+        let grad_slices: Vec<&[f32]> = ws.grads.iter().map(|g| g.as_slice()).collect();
+        let out = adamw_core(lora_t, m_t, v_t, t_in, &grad_slices, lr, rmask, n, r, pool)?;
+        let mut outs = out.lora;
+        outs.extend(out.m);
+        outs.extend(out.v);
+        outs.push(HostTensor::f32(vec![n], out.t)?);
         outs.push(HostTensor::f32(vec![n], per)?);
         Ok(outs)
     }

@@ -15,7 +15,7 @@
 //! [`super::workspace::Workspace`] arena (zero steady-state allocation),
 //! and the matmuls go through the register-blocked kernels in
 //! [`super::gemm`]. Projection forward/backward passes optionally split
-//! their `n·bs·seq` row dimension across scoped threads
+//! their `n·bs·seq` row dimension across the persistent worker pool
 //! (`gemm::threads()`, the `PLORA_THREADS` knob); every output element's
 //! reduction order is independent of tiling and threading, so results are
 //! bitwise identical at any setting — see the `gemm` module docs.
@@ -184,9 +184,10 @@ fn dsilu(z: f32) -> f32 {
 /// intermediate saved in `mid` for the backward pass. `a`/`b` are the
 /// layer-`l` slices `(n, din, r)` / `(n, r, dout)`.
 ///
-/// The `n·m` output rows are split across `gemm::threads()` scoped
-/// workers; each row is produced by exactly one worker with an unchanged
-/// reduction order, so the result is bitwise thread-count-invariant.
+/// The `n·m` output rows are split across `gemm::threads()` persistent
+/// pool workers; each row is produced by exactly one worker with an
+/// unchanged reduction order, so the result is bitwise
+/// thread-count-invariant.
 #[allow(clippy::too_many_arguments)]
 fn proj_fwd(
     out: &mut [f32],

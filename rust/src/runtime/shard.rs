@@ -1,0 +1,536 @@
+//! **Data-parallel sharded execution** (DESIGN.md §11): the layer that
+//! turns an allocation's device set from a modeled quantity into an
+//! executed one.
+//!
+//! A [`ShardedState`] wraps one packed [`TrainState`] and splits the
+//! pack's `n·batch` training rows across `d` shard workers — one
+//! persistent [`crate::util::threadpool`] worker per allocated device,
+//! each with its own [`Scratch`]/workspace arena. Every step:
+//!
+//! 1. **scatter** — each shard receives its contiguous slot range
+//!    `[lo, hi)` of the packed LoRA tensors and batch rows;
+//! 2. **forward/backward per shard** — shards run concurrently through
+//!    the backend's [`ShardStepExec::run_grads`] half;
+//! 3. **deterministic reduction** — shard gradients are installed into
+//!    the full-bucket gradient tensors in fixed shard order `0..d-1`.
+//!    Shard boundaries sit at bucket-*slot* granularity, where every
+//!    gradient element receives all of its row contributions from exactly
+//!    one shard (a packed adapter's `dA`/`dB` accumulate over only its
+//!    own rows), so the reduction preserves every element's contribution
+//!    order exactly and costs no floating-point reassociation;
+//! 4. **single AdamW update** — one [`ShardStepExec::run_adamw`] over the
+//!    full state and the reduced gradients.
+//!
+//! Because step 3 never reorders any element's reduction, a sharded step
+//! is **bitwise identical** to the fused single-device step — every
+//! adapter's trajectory is the same at `d = 1, 2, 4`, across uneven slot
+//! splits, and across mid-run device retargets (`rust/tests/session.rs`
+//! pins this). Sub-slot row splits would break that: a gradient element
+//! summed across shards acquires a `d`-dependent association tree, so
+//! slot granularity is exactly the finest split at which device-count
+//! invariance is achievable at zero numeric cost.
+//!
+//! Eval and checkpoint extraction read the wrapped [`TrainState`]
+//! directly (they are single-pass and device-count invariant by
+//! construction). When the allocation has one device — or the backend
+//! cannot split its fused step ([`crate::runtime::ExecutionBackend::shard`]
+//! returns `None`, e.g. AOT-compiled PJRT artifacts) — `step` runs the
+//! fused executable unchanged.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::backend::{GradStep, Scratch, ShardStepExec};
+use crate::runtime::state::lora_shape;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{Executable, Runtime, TrainState, LORA_ORDER};
+use crate::util::threadpool::ThreadPool;
+
+/// One shard worker's persistent state: its slot range, executor, scratch
+/// arena and step-refilled input buffers.
+struct Shard {
+    /// Device id this shard stands for (observability only — on the
+    /// reference backend the "device" is a worker thread).
+    device: usize,
+    /// Slot range `[lo, hi)` of the full bucket this shard owns.
+    lo: usize,
+    hi: usize,
+    exe: Box<dyn ShardStepExec>,
+    scratch: Scratch,
+    /// Packed LoRA tensors at the shard shape `(L, hi-lo, ·, ·)`.
+    lora: Vec<HostTensor>,
+    tokens: HostTensor,
+    targets: HostTensor,
+    mask: HostTensor,
+    scale: Vec<f32>,
+    /// Last step's outcome (taken by the reduction).
+    out: Option<Result<GradStep>>,
+    /// Last step's wall time on this shard (observability: shard-balance
+    /// diagnosis via [`ShardedState::shard_secs`]).
+    secs: f64,
+}
+
+impl Shard {
+    fn nw(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// A [`TrainState`] executing data-parallel across an allocation's
+/// devices (see module docs).
+pub struct ShardedState {
+    inner: TrainState,
+    devices: Vec<usize>,
+    /// Shard workers; empty means fused single-device execution.
+    shards: Vec<Shard>,
+    /// Full-bucket optimizer half (present iff `shards` is non-empty).
+    opt: Option<Box<dyn ShardStepExec>>,
+    /// One persistent worker per shard (present iff sharded).
+    pool: Option<ThreadPool>,
+    /// Full-bucket gradient gather buffers (`LORA_ORDER`).
+    grads: Vec<HostTensor>,
+    /// Scratch pool the AdamW outputs cycle through.
+    opt_scratch: Scratch,
+    /// The batch size the shard buffers were built for.
+    bs: usize,
+}
+
+/// Copy slots `[lo, hi)` of a packed `(L, n, d2, d3)` tensor into the
+/// `(L, hi-lo, d2, d3)` shard tensor (slot panels are contiguous per
+/// layer, so this is one memcpy per layer).
+fn scatter_slots(
+    full: &HostTensor,
+    shard: &mut HostTensor,
+    n: usize,
+    lo: usize,
+    hi: usize,
+) -> Result<()> {
+    let (l, d2, d3) = (full.shape[0], full.shape[2], full.shape[3]);
+    let nw = hi - lo;
+    let src = full.as_f32()?;
+    let dst = shard.as_f32_mut()?;
+    let panel = d2 * d3;
+    for li in 0..l {
+        let s = (li * n + lo) * panel;
+        let d = li * nw * panel;
+        dst[d..d + nw * panel].copy_from_slice(&src[s..s + nw * panel]);
+    }
+    Ok(())
+}
+
+/// The reduction's placement primitive: install a shard's `(L, nw, d2,
+/// d3)` gradient tensor into slots `[lo, hi)` of the full `(L, n, d2,
+/// d3)` buffer. Each full-buffer element is written by exactly one shard.
+fn gather_slots(
+    shard: &HostTensor,
+    full: &mut HostTensor,
+    n: usize,
+    lo: usize,
+    hi: usize,
+) -> Result<()> {
+    let (l, d2, d3) = (full.shape[0], full.shape[2], full.shape[3]);
+    let nw = hi - lo;
+    let src = shard.as_f32()?;
+    let dst = full.as_f32_mut()?;
+    let panel = d2 * d3;
+    for li in 0..l {
+        let s = li * nw * panel;
+        let d = (li * n + lo) * panel;
+        dst[d..d + nw * panel].copy_from_slice(&src[s..s + nw * panel]);
+    }
+    Ok(())
+}
+
+impl ShardedState {
+    /// Wrap `inner` for execution on `devices` (the job's real
+    /// [`crate::cluster::Allocation`] device set). `bs` is the bucket
+    /// batch size the step tensors will carry. Falls back to fused
+    /// single-device execution when the allocation has one device, the
+    /// bucket has fewer slots than devices can use, or the backend
+    /// cannot split its fused step.
+    pub fn new(
+        rt: &Runtime,
+        model: &str,
+        inner: TrainState,
+        bs: usize,
+        devices: &[usize],
+    ) -> Result<ShardedState> {
+        let mut st = ShardedState {
+            inner,
+            devices: devices.to_vec(),
+            shards: vec![],
+            opt: None,
+            pool: None,
+            grads: vec![],
+            opt_scratch: Scratch::new(),
+            bs,
+        };
+        st.build(rt, model)?;
+        Ok(st)
+    }
+
+    /// Rebuild the shard set for a new device list (a boundary device
+    /// retarget: the pack grew onto freed devices, or handed some back).
+    /// The wrapped training state is untouched — only the execution
+    /// layout changes, so trajectories stay bitwise identical.
+    pub fn set_devices(&mut self, rt: &Runtime, model: &str, devices: &[usize]) -> Result<()> {
+        self.devices = devices.to_vec();
+        self.build(rt, model)
+    }
+
+    fn build(&mut self, rt: &Runtime, model: &str) -> Result<()> {
+        self.shards.clear();
+        self.opt = None;
+        self.pool = None;
+        self.grads.clear();
+        let (n, r, bs) = (self.inner.n, self.inner.r, self.bs);
+        let d_eff = self.devices.len().min(n.max(1));
+        if d_eff <= 1 {
+            return Ok(());
+        }
+        let Some(opt) = rt.shard_exec(model, n, r, bs)? else {
+            return Ok(()); // backend cannot split: fused fallback
+        };
+        let mi = self.inner.model.clone();
+        let seq = mi.seq;
+        let mut shards = Vec::with_capacity(d_eff);
+        let base_n = n / d_eff;
+        let rem = n % d_eff;
+        let mut lo = 0usize;
+        for (w, &dev) in self.devices.iter().take(d_eff).enumerate() {
+            let nw = base_n + usize::from(w < rem);
+            if nw == 0 {
+                continue;
+            }
+            let hi = lo + nw;
+            let Some(exe) = rt.shard_exec(model, nw, r, bs)? else {
+                self.shards.clear();
+                return Ok(());
+            };
+            let lora: Vec<HostTensor> = LORA_ORDER
+                .iter()
+                .map(|name| {
+                    let shape = lora_shape(&mi, name, nw, r);
+                    let count: usize = shape.iter().product();
+                    HostTensor::f32(shape, vec![0.0; count]).unwrap()
+                })
+                .collect();
+            shards.push(Shard {
+                device: dev,
+                lo,
+                hi,
+                exe,
+                scratch: Scratch::new(),
+                lora,
+                tokens: HostTensor::i32(vec![nw, bs, seq], vec![0; nw * bs * seq])?,
+                targets: HostTensor::i32(vec![nw, bs, seq], vec![0; nw * bs * seq])?,
+                mask: HostTensor::f32(vec![nw, bs, seq], vec![0.0; nw * bs * seq])?,
+                scale: vec![0.0; nw],
+                out: None,
+                secs: 0.0,
+            });
+            lo = hi;
+        }
+        self.grads = LORA_ORDER
+            .iter()
+            .map(|name| {
+                let shape = lora_shape(&mi, name, n, r);
+                let count: usize = shape.iter().product();
+                HostTensor::f32(shape, vec![0.0; count]).unwrap()
+            })
+            .collect();
+        // One persistent worker per device shard (the issue's "devices").
+        self.pool = Some(ThreadPool::new(shards.len()));
+        self.opt = Some(opt);
+        self.shards = shards;
+        Ok(())
+    }
+
+    /// The wrapped single-bucket training state (eval, checkpointing and
+    /// repack run against it directly — all device-count invariant).
+    pub fn inner(&self) -> &TrainState {
+        &self.inner
+    }
+
+    /// Unwrap (the driver returns a plain [`TrainState`] to callers).
+    pub fn into_inner(self) -> TrainState {
+        self.inner
+    }
+
+    /// Effective data-parallel width this state executes with (1 = fused).
+    pub fn parallelism(&self) -> usize {
+        self.shards.len().max(1)
+    }
+
+    /// The allocation's device ids this state was built for.
+    pub fn devices(&self) -> &[usize] {
+        &self.devices
+    }
+
+    /// Last step's `(device id, wall secs)` per shard, in shard order
+    /// (empty when running fused) — observability for shard-balance
+    /// diagnosis. The dp-efficiency calibration (`Calib::dp_fit`) is fed
+    /// *whole-step* times per shard count by the driver's `DpStat`
+    /// recording, not these.
+    pub fn shard_secs(&self) -> Vec<(usize, f64)> {
+        self.shards.iter().map(|s| (s.device, s.secs)).collect()
+    }
+
+    /// See [`TrainState::rank_mask`].
+    pub fn rank_mask(&self, ranks: &[usize]) -> Result<HostTensor> {
+        self.inner.rank_mask(ranks)
+    }
+
+    /// One training step — the same contract as [`TrainState::step`].
+    /// With shards, runs scatter → per-shard forward/backward →
+    /// fixed-order reduction → single AdamW (module docs); without, the
+    /// fused `exe` path unchanged.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        exe: &Executable,
+        base: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        loss_mask: &HostTensor,
+        scale: &[f32],
+        lr: &[f32],
+        rmask: &HostTensor,
+    ) -> Result<Vec<f32>> {
+        if self.shards.is_empty() {
+            return self.inner.step(exe, base, tokens, targets, loss_mask, scale, lr, rmask);
+        }
+        let ShardedState { inner, shards, pool, opt, grads, opt_scratch, bs, .. } = self;
+        let n = inner.n;
+        if tokens.shape != [n, *bs, inner.model.seq] {
+            bail!(
+                "sharded step: batch tensors {:?} do not match the built ({n}, {bs}, {}) layout",
+                tokens.shape,
+                inner.model.seq
+            );
+        }
+        if scale.len() != n || lr.len() != n {
+            bail!("sharded step: {} scale / {} lr entries for pack of {n}", scale.len(), lr.len());
+        }
+        let row = *bs * inner.model.seq;
+
+        // 1. Scatter: slot panels of the LoRA params, batch rows, scales.
+        let tok = tokens.as_i32()?;
+        let tgt = targets.as_i32()?;
+        let msk = loss_mask.as_f32()?;
+        for sh in shards.iter_mut() {
+            for (full, dst) in inner.lora.iter().zip(sh.lora.iter_mut()) {
+                scatter_slots(full, dst, n, sh.lo, sh.hi)?;
+            }
+            sh.tokens.as_i32_mut()?.copy_from_slice(&tok[sh.lo * row..sh.hi * row]);
+            sh.targets.as_i32_mut()?.copy_from_slice(&tgt[sh.lo * row..sh.hi * row]);
+            sh.mask.as_f32_mut()?.copy_from_slice(&msk[sh.lo * row..sh.hi * row]);
+            sh.scale.copy_from_slice(&scale[sh.lo..sh.hi]);
+            sh.out = None;
+        }
+
+        // 2. Forward/backward per shard, one persistent worker per device.
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(shards.len());
+            for sh in shards.iter_mut() {
+                tasks.push(Box::new(move || {
+                    let t0 = std::time::Instant::now();
+                    let r = sh.exe.run_grads(
+                        base,
+                        &sh.lora,
+                        &sh.tokens,
+                        &sh.targets,
+                        &sh.mask,
+                        &sh.scale,
+                        &mut sh.scratch,
+                    );
+                    sh.secs = t0.elapsed().as_secs_f64();
+                    sh.out = Some(r);
+                }));
+            }
+            pool.as_ref().expect("shard pool").scoped(tasks);
+        }
+
+        // 3. Deterministic reduction: shard 0..d-1 in fixed order. Every
+        //    gradient element has exactly one producing shard (slot
+        //    granularity), so per-element contribution order is preserved
+        //    exactly — the step is bitwise identical at any d.
+        let mut per = vec![0.0f32; n];
+        for sh in shards.iter_mut() {
+            let out = sh.out.take().expect("shard executed")?;
+            if out.per_loss.len() != sh.nw() {
+                bail!("shard returned {} losses for {} slots", out.per_loss.len(), sh.nw());
+            }
+            per[sh.lo..sh.hi].copy_from_slice(&out.per_loss);
+            for (g, full) in out.grads.into_iter().zip(grads.iter_mut()) {
+                gather_slots(&g, full, n, sh.lo, sh.hi)?;
+                if let Some(buf) = g.into_f32_vec() {
+                    sh.scratch.recycle(buf);
+                }
+            }
+        }
+
+        // 4. One AdamW update over the full state and reduced gradients.
+        let out = opt.as_ref().expect("optimizer half").run_adamw(
+            &inner.lora,
+            &inner.m,
+            &inner.v,
+            &inner.t,
+            grads,
+            lr,
+            rmask,
+            opt_scratch,
+        )?;
+        let old_l = std::mem::replace(&mut inner.lora, out.lora);
+        let old_m = std::mem::replace(&mut inner.m, out.m);
+        let old_v = std::mem::replace(&mut inner.v, out.v);
+        inner.t = out.t;
+        for spent in old_l.into_iter().chain(old_m).chain(old_v) {
+            if let Some(buf) = spent.into_f32_vec() {
+                opt_scratch.recycle(buf);
+            }
+        }
+        Ok(per)
+    }
+
+    /// See [`TrainState::eval`] — single-pass, device-count invariant.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval(
+        &self,
+        exe: &Executable,
+        base: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        loss_mask: &HostTensor,
+        scale: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.inner.eval(exe, base, tokens, targets, loss_mask, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn runtime() -> Runtime {
+        Runtime::load(&std::env::temp_dir().join("plora-shard-tests")).unwrap()
+    }
+
+    /// The tentpole invariant at the runtime layer: the same pack stepped
+    /// at d = 1 (fused), 2, 3 (uneven) and 4 produces bitwise-identical
+    /// params, moments, per-adapter step counters and losses.
+    #[test]
+    fn sharded_steps_are_bitwise_identical_across_device_counts() {
+        let rt = runtime();
+        let mi = rt.manifest.model("nano").unwrap().clone();
+        let info = rt.manifest.train_bucket("nano", 4, 8, 1).unwrap().clone();
+        let exe = rt.executable(&info.name).unwrap();
+        let base = rt.base_weights("nano").unwrap();
+        let seq = mi.seq;
+        let seeds = [3u64, 5, 7, 9];
+        let ranks = [8usize, 4, 8, 6];
+
+        #[allow(clippy::type_complexity)]
+        let run = |devs: usize| -> (Vec<Vec<f32>>, Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+            let inner = TrainState::init_per_adapter(&mi, 4, 8, &seeds, &ranks).unwrap();
+            let devices: Vec<usize> = (0..devs).collect();
+            let mut st = ShardedState::new(&rt, "nano", inner, 1, &devices).unwrap();
+            assert_eq!(st.parallelism(), devs.min(4).max(1));
+            let rmask = st.rank_mask(&ranks).unwrap();
+            let mut rng = Rng::new(41);
+            let mut losses = vec![];
+            for _ in 0..3 {
+                let tokens: Vec<i32> =
+                    (0..4 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+                let mut targets = tokens.clone();
+                targets.rotate_left(1);
+                let tok = HostTensor::i32(vec![4, 1, seq], tokens).unwrap();
+                let tgt = HostTensor::i32(vec![4, 1, seq], targets).unwrap();
+                let msk = HostTensor::f32(vec![4, 1, seq], vec![1.0; 4 * seq]).unwrap();
+                let per = st
+                    .step(
+                        &exe,
+                        &base,
+                        &tok,
+                        &tgt,
+                        &msk,
+                        &[1.0, 0.5, 1.0, 0.8],
+                        &[2e-3, 1e-3, 2e-3, 1e-3],
+                        &rmask,
+                    )
+                    .unwrap();
+                losses.push(per);
+            }
+            let inner = st.into_inner();
+            let lora = inner.lora.iter().map(|t| t.as_f32().unwrap().to_vec()).collect();
+            let moments = inner.m.iter().map(|t| t.as_f32().unwrap().to_vec()).collect();
+            (lora, inner.t.clone(), moments, losses)
+        };
+
+        let (want_l, want_t, want_m, want_per) = run(1);
+        assert_eq!(want_t, vec![3.0; 4]);
+        assert!(want_per.iter().flatten().all(|l| l.is_finite()));
+        for d in [2usize, 3, 4, 8] {
+            let (got_l, got_t, got_m, got_per) = run(d);
+            assert_eq!(want_t, got_t, "step counters diverged at d={d}");
+            assert_eq!(want_per, got_per, "per-adapter losses diverged at d={d}");
+            for (k, (a, b)) in want_l.iter().zip(&got_l).enumerate() {
+                assert_eq!(a, b, "lora[{k}] diverged at d={d}");
+            }
+            for (k, (a, b)) in want_m.iter().zip(&got_m).enumerate() {
+                assert_eq!(a, b, "m[{k}] diverged at d={d}");
+            }
+        }
+    }
+
+    /// A mid-run device retarget (1 -> 2 -> 1 devices) leaves the
+    /// trajectory bitwise unchanged, and per-shard timings surface.
+    #[test]
+    fn device_retarget_mid_run_is_bitwise_invariant() {
+        let rt = runtime();
+        let mi = rt.manifest.model("nano").unwrap().clone();
+        let info = rt.manifest.train_bucket("nano", 2, 8, 1).unwrap().clone();
+        let exe = rt.executable(&info.name).unwrap();
+        let base = rt.base_weights("nano").unwrap();
+        let seq = mi.seq;
+
+        let run = |retarget: bool| -> Vec<Vec<f32>> {
+            let inner = TrainState::init_per_adapter(&mi, 2, 8, &[5, 9], &[8, 4]).unwrap();
+            let mut st = ShardedState::new(&rt, "nano", inner, 1, &[0]).unwrap();
+            let rmask = st.rank_mask(&[8, 4]).unwrap();
+            let mut rng = Rng::new(13);
+            for step in 0..4 {
+                if retarget && step == 2 {
+                    st.set_devices(&rt, "nano", &[0, 1]).unwrap();
+                    assert_eq!(st.parallelism(), 2);
+                }
+                if retarget && step == 3 {
+                    st.set_devices(&rt, "nano", &[1]).unwrap();
+                    assert_eq!(st.parallelism(), 1);
+                }
+                let tokens: Vec<i32> =
+                    (0..2 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+                let mut targets = tokens.clone();
+                targets.rotate_left(1);
+                let tok = HostTensor::i32(vec![2, 1, seq], tokens).unwrap();
+                let tgt = HostTensor::i32(vec![2, 1, seq], targets).unwrap();
+                let msk = HostTensor::f32(vec![2, 1, seq], vec![1.0; 2 * seq]).unwrap();
+                st.step(&exe, &base, &tok, &tgt, &msk, &[1.0, 0.5], &[2e-3, 1e-3], &rmask)
+                    .unwrap();
+                if retarget && step == 2 {
+                    let secs = st.shard_secs();
+                    assert_eq!(secs.len(), 2, "per-shard timings recorded");
+                    assert_eq!(secs[0].0, 0, "shard 0 stands for device 0");
+                    assert_eq!(secs[1].0, 1, "shard 1 stands for device 1");
+                    assert!(secs.iter().all(|&(_, s)| s >= 0.0));
+                }
+            }
+            st.into_inner().lora.iter().map(|t| t.as_f32().unwrap().to_vec()).collect()
+        };
+        let plain = run(false);
+        let moved = run(true);
+        for (k, (a, b)) in plain.iter().zip(&moved).enumerate() {
+            assert_eq!(a, b, "lora[{k}] diverged across the device retarget");
+        }
+    }
+}

@@ -107,8 +107,18 @@ pub fn sweep(
     };
     session.set_policy(opts.policy);
     session.set_elastic(opts.elastic);
-    for j in &plan.jobs {
-        session.submit_planned(j.job.clone())?;
+    // Under a priority policy the sweep caller has no priorities to give:
+    // derive shortest-job-first ranks from modeled work (planner-side
+    // priority assignment).
+    let jobs: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+    let prios = crate::planner::default_priorities(
+        &planner.cm,
+        &opts.budget,
+        &jobs,
+        opts.policy != Policy::Fifo,
+    );
+    for (j, prio) in jobs.into_iter().zip(prios) {
+        session.submit_planned_at(j, prio)?;
     }
     let report = session.drain()?;
     let mut out: Vec<AdapterReport> =

@@ -31,6 +31,15 @@
 //! bit-identically. The discrete-event simulator emits the same [`Event`]
 //! type under the same [`Policy`], so live and simulated timelines are
 //! directly comparable.
+//!
+//! **Devices are executed, not just modeled** (DESIGN.md §11): every job
+//! runs data-parallel on its real allocation through the driver's
+//! `ShardedState`, bitwise identically at any device count. Boundary
+//! offers may *retarget device counts* too: a queued d=2 job can split
+//! its adapters across d=1 hosts (cross-`d` admission), and a running
+//! pack can grow its shard set onto freed devices (`DeviceRetarget`) —
+//! both gated on the live-calibrated data-parallel efficiency fit
+//! (`CalibUpdated::dp_fit`) versus the measured device-retarget cost.
 
 use std::cmp::Reverse;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -43,13 +52,13 @@ use anyhow::{bail, Result};
 use crate::cluster::{Allocation, ResourceMonitor};
 use crate::config::{AdapterSpec, LoraConfig};
 use crate::costmodel::throughput::Calib;
-use crate::costmodel::{ExecMode, Pack, SwitchCost};
+use crate::costmodel::{CostModel, DpStat, ExecMode, Pack, SwitchCost};
 use crate::engine::CheckpointPool;
 use crate::planner::rebalance::admits;
 use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
 use crate::train::{
-    run_pack_phased, BoundaryOffer, ElasticCtl, JobReport, Joiner, MemberResume,
+    run_pack_phased, BoundaryOffer, DeviceOffer, ElasticCtl, JobReport, Joiner, MemberResume,
     PackPhaseEvent, TrainOptions,
 };
 
@@ -144,14 +153,27 @@ pub enum Event {
     /// The job was preempted: the listed adapters were checkpointed back
     /// to the queue and will resume later (same job id).
     Preempted { job: usize, adapters: Vec<usize>, at: f64 },
+    /// A running pack retargeted its device count at a boundary (grew its
+    /// shard set onto freed devices); the trajectory is unchanged — only
+    /// the execution layout moved.
+    DeviceRetarget { job: usize, from: usize, to: usize, at: f64 },
     JobFinished { job: usize, adapters: usize, wall: f64, at: f64 },
     /// The job errored; its devices were returned to the pool and the
     /// error is re-raised by the next `drain`.
     JobFailed { job: usize, error: String, at: f64 },
     /// The live cost-model fit `t = a + b·tokens + c·n` was refreshed from
     /// accumulated step profiles, together with the running mean of the
-    /// measured bucket-switch wall times (§4 calibration).
-    CalibUpdated { fit: (f64, f64, f64), samples: usize, switch_cost: f64, at: f64 },
+    /// measured bucket-switch wall times, the data-parallel efficiency
+    /// fit over measured per-shard-count step times (`t_row = a + b/d`),
+    /// and the mean device-retarget cost (§4 calibration).
+    CalibUpdated {
+        fit: (f64, f64, f64),
+        samples: usize,
+        switch_cost: f64,
+        dp_fit: Option<(f64, f64)>,
+        device_switch_cost: f64,
+        at: f64,
+    },
 }
 
 impl Event {
@@ -163,6 +185,7 @@ impl Event {
             | Event::AdapterAdmitted { at, .. }
             | Event::Rebucketed { at, .. }
             | Event::Preempted { at, .. }
+            | Event::DeviceRetarget { at, .. }
             | Event::JobFinished { at, .. }
             | Event::JobFailed { at, .. }
             | Event::CalibUpdated { at, .. } => *at,
@@ -196,6 +219,12 @@ pub struct SessionReport {
     pub calib_fit: (f64, f64, f64),
     /// Running mean of measured bucket-switch wall times (seconds).
     pub switch_cost: f64,
+    /// Data-parallel efficiency fit `t_row = a + b/d` over measured step
+    /// times per executed shard count (`None` until steps ran at two or
+    /// more distinct device counts).
+    pub dp_fit: Option<(f64, f64)>,
+    /// Running mean of measured device-retarget wall times (seconds).
+    pub device_switch_cost: f64,
     /// The full event log up to this drain.
     pub events: Vec<Event>,
 }
@@ -218,6 +247,11 @@ impl SessionReport {
     /// Number of `Preempted` events in the log.
     pub fn preemptions(&self) -> usize {
         self.events.iter().filter(|e| matches!(e, Event::Preempted { .. })).count()
+    }
+
+    /// Number of `DeviceRetarget` events in the log.
+    pub fn device_retargets(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, Event::DeviceRetarget { .. })).count()
     }
 
     /// Padded rows summed over all executed segments — the deterministic
@@ -277,6 +311,14 @@ struct Shared {
     sched_cv: Condvar,
     /// Live bucket-switch cost estimator shared by every job's driver.
     switch_cost: SwitchCost,
+    /// Live device-retarget cost estimator (shard-set rebuild walls).
+    device_cost: SwitchCost,
+    /// Live data-parallel efficiency samples (step times per shard count).
+    dp_stat: DpStat,
+    /// Cost model for device-retarget and cross-`d` admission decisions
+    /// (`None` when the model has no live geometry — decisions then stay
+    /// conservative: no grows, same-`d` admission only).
+    cm: Option<CostModel>,
     /// The model's `(n, r, bs)` bucket grid (admission feasibility).
     buckets: Vec<(usize, usize, usize)>,
 }
@@ -311,16 +353,18 @@ impl Shared {
     /// takes adapters greedily while the combined pack still fits a
     /// bucket (the current one when the host runs without re-bucketing).
     /// Only queue entries with the host's exact options/rebucket/pool
-    /// settings **and the host's device count + exec mode** are
-    /// compatible — admission must not change any adapter's seed, budget
-    /// or checkpoint destination, nor silently drop a job's requested
-    /// parallelism (cross-`d` admission is a ROADMAP follow-on). A queued
-    /// job of *strictly higher* priority is never absorbed (it would be
-    /// demoted to the host's priority if the host is later preempted),
-    /// and a host already flagged for preemption gets nothing — it is
-    /// about to hand its own members back. Queue jobs emptied by
-    /// admission are completed in place (their adapters will report under
-    /// the host job).
+    /// settings and exec mode are compatible — admission must not change
+    /// any adapter's seed, budget or checkpoint destination. A queued
+    /// job whose **device count differs** may still be absorbed when the
+    /// cross-`d` gate approves ([`Shared::cross_d_ok`]): a queued d=2 job
+    /// can split its adapters across d=1 hosts rather than wait for two
+    /// free devices (trajectories are device-count invariant, so only the
+    /// timeline changes). A queued job of *strictly higher* priority is
+    /// never absorbed (it would be demoted to the host's priority if the
+    /// host is later preempted), and a host already flagged for
+    /// preemption gets nothing — it is about to hand its own members
+    /// back. Queue jobs emptied by admission are completed in place
+    /// (their adapters will report under the host job).
     #[allow(clippy::too_many_arguments)]
     fn offer_joiners(
         &self,
@@ -328,10 +372,13 @@ impl Shared {
         host_opts: &TrainOptions,
         host_rebucket: bool,
         host_ckpt: &Option<CheckpointPool>,
-        host_d: usize,
         host_mode: ExecMode,
         bo: &BoundaryOffer<'_>,
     ) -> Vec<Joiner> {
+        // The pack's *current* width — a device retarget may have grown
+        // it past the launch-time request, and the admission gate must
+        // price the width the joiners will actually run at.
+        let host_d = bo.devices.len();
         let (out, absorbed) = {
             let mut st = self.sched.lock().unwrap();
             if !st.elastic || st.pending.is_empty() {
@@ -356,7 +403,7 @@ impl Shared {
                     p.priority <= host_priority
                         && p.opts == *host_opts
                         && p.rebucket == host_rebucket
-                        && p.job.d == host_d
+                        && (p.job.d == host_d || self.cross_d_ok(p, host_d, bo))
                         && p.job.mode == host_mode
                         && ckpt_compat(&p.checkpoints, host_ckpt)
                 };
@@ -405,6 +452,106 @@ impl Shared {
             self.complete();
         }
         out
+    }
+
+    /// Cross-`d` admission gate: absorbing a queued job into a host
+    /// running at a different device count trades the job's requested
+    /// parallelism for starting *now*. Modeled with the (live-calibrated)
+    /// dp-efficiency term: the per-step penalty of running at the host's
+    /// `d` instead of the job's own, summed over the job's steps, must
+    /// not exceed the lower bound on what waiting would cost — the
+    /// host's longest remaining member holds its devices at least that
+    /// long — plus the calibrated device-retarget budget. With no cost
+    /// model the gate stays closed (same-`d` admission only).
+    fn cross_d_ok(&self, p: &PendingJob, host_d: usize, bo: &BoundaryOffer<'_>) -> bool {
+        let Some(cm0) = &self.cm else { return false };
+        if p.job.pack.n() == 0 {
+            return false;
+        }
+        let mut cm = cm0.clone();
+        if let Some(fit) = self.dp_stat.fit() {
+            cm.calib.dp_fit = Some(fit);
+        }
+        let own = (p.job.pack.n(), p.job.pack.r_pad(), p.job.pack.bs_pad());
+        let steps = p
+            .job
+            .pack
+            .configs
+            .iter()
+            .map(|c| p.opts.budget.steps(c.batch))
+            .max()
+            .unwrap_or(0);
+        cm.cross_d_admit(
+            bo.bucket,
+            host_d,
+            bo.host_remaining,
+            own,
+            p.job.d,
+            steps,
+            p.job.mode,
+            self.device_cost.estimate(),
+        )
+    }
+
+    /// Boundary device offer: grow a running pack's shard set onto freed
+    /// devices when the modeled phase saving (dp-efficiency term,
+    /// live-calibrated) beats the calibrated device-retarget cost.
+    /// Conservative by construction: only when the session is elastic,
+    /// the queue is empty (pending jobs have first claim on devices), and
+    /// the host is not being vacated. Returns the acquired device ids;
+    /// the acquisitions are recorded in `grown` for release at job end.
+    fn offer_devices(
+        &self,
+        job: usize,
+        mode: ExecMode,
+        off: &DeviceOffer,
+        grown: &Mutex<Vec<Allocation>>,
+    ) -> Option<Vec<usize>> {
+        {
+            let st = self.sched.lock().unwrap();
+            if !st.elastic || !st.pending.is_empty() {
+                return None;
+            }
+            match st.running.iter().find(|r| r.job == job) {
+                Some(r) if !r.flag.load(Ordering::SeqCst) => {}
+                _ => return None,
+            }
+        }
+        let cm0 = self.cm.as_ref()?;
+        let free = self.monitor.available();
+        if free == 0 || off.phase_steps == 0 {
+            return None;
+        }
+        let mut cm = cm0.clone();
+        if let Some(fit) = self.dp_stat.fit() {
+            cm.calib.dp_fit = Some(fit);
+        }
+        // Grow by at most the current width (doubling keeps shard sizes
+        // balanced) and never beyond the bucket's slot count — extra
+        // shards past `n` would sit idle.
+        let extra = free.min(off.d).min(off.bucket.0.saturating_sub(off.d));
+        if extra == 0 {
+            return None;
+        }
+        let to = off.d + extra;
+        let t_cur = cm.bucket_step_time(off.bucket, off.d, mode);
+        let t_new = cm.bucket_step_time(off.bucket, to, mode);
+        let saving = off.phase_steps as f64 * (t_cur - t_new);
+        let cost = self.device_cost.estimate().max(cm.calib.device_switch_cost);
+        if saving <= cost {
+            return None;
+        }
+        let alloc = self.monitor.try_acquire(extra)?;
+        let ids = alloc.devices.clone();
+        {
+            // Preemption math must see the job's real size.
+            let mut st = self.sched.lock().unwrap();
+            if let Some(r) = st.running.iter_mut().find(|r| r.job == job) {
+                r.d += extra;
+            }
+        }
+        grown.lock().unwrap().push(alloc);
+        Some(ids)
     }
 }
 
@@ -507,6 +654,7 @@ pub struct Session {
 impl Session {
     pub fn new(runtime: Arc<Runtime>, monitor: ResourceMonitor, model: &str) -> Session {
         let buckets = runtime.manifest.train_buckets(model);
+        let cm = crate::search::live_cost_model(&runtime, model).ok();
         let shared = Arc::new(Shared {
             runtime,
             monitor,
@@ -530,6 +678,9 @@ impl Session {
             }),
             sched_cv: Condvar::new(),
             switch_cost: SwitchCost::new(0.0),
+            device_cost: SwitchCost::new(0.0),
+            dp_stat: DpStat::new(),
+            cm,
             buckets,
         });
         let disp = shared.clone();
@@ -581,6 +732,11 @@ impl Session {
     /// Running mean of measured bucket-switch wall times so far.
     pub fn switch_cost(&self) -> f64 {
         self.shared.switch_cost.estimate()
+    }
+
+    /// Running mean of measured device-retarget wall times so far.
+    pub fn device_switch_cost(&self) -> f64 {
+        self.shared.device_cost.estimate()
     }
 
     /// Subscribe to the live event stream. Events emitted after this call
@@ -697,6 +853,8 @@ impl Session {
             makespan,
             calib_fit,
             switch_cost: self.shared.switch_cost.estimate(),
+            dp_fit: self.shared.dp_stat.fit(),
+            device_switch_cost: self.shared.device_cost.estimate(),
             events,
         })
     }
@@ -764,19 +922,27 @@ fn run_job(
     });
     let job_id = p.job.id;
     let mut ckpt_err: Option<anyhow::Error> = None;
+    // Devices acquired by boundary device retargets, released at job end.
+    let grown: Mutex<Vec<Allocation>> = Mutex::new(vec![]);
     let result = {
         let checkpoints = p.checkpoints.clone();
         let opts = p.opts.clone();
         let rebucket = p.rebucket;
-        let (host_d, host_mode) = (p.job.d, p.job.mode);
+        let host_mode = p.job.mode;
         let mut offer = |bo: &BoundaryOffer<'_>| -> Vec<Joiner> {
-            shared.offer_joiners(job_id, &opts, rebucket, &checkpoints, host_d, host_mode, bo)
+            shared.offer_joiners(job_id, &opts, rebucket, &checkpoints, host_mode, bo)
+        };
+        let mut device_offer = |off: &DeviceOffer| -> Option<Vec<usize>> {
+            shared.offer_devices(job_id, host_mode, off, &grown)
         };
         let mut ctl = ElasticCtl {
             rebucket: p.rebucket,
             switch_cost: Some(shared.switch_cost.clone()),
             preempt: Some(flag),
             offer: Some(&mut offer),
+            devices: Some(&mut device_offer),
+            device_cost: Some(shared.device_cost.clone()),
+            dp_stat: Some(shared.dp_stat.clone()),
             resume: std::mem::take(&mut p.resume),
         };
         let mut on_ev = |ev: PackPhaseEvent<'_>| match ev {
@@ -820,18 +986,30 @@ fn run_job(
                     at: shared.now(),
                 });
             }
+            PackPhaseEvent::DeviceRetarget { from, to, .. } => {
+                shared.emit(Event::DeviceRetarget {
+                    job: job_id,
+                    from,
+                    to,
+                    at: shared.now(),
+                });
+            }
         };
         run_pack_phased(
             &shared.runtime,
             &shared.model,
             &p.job.pack.configs,
             &p.opts,
+            &alloc,
             &mut ctl,
             &mut on_ev,
         )
     };
     shared.remove_running(job_id);
     shared.monitor.release(alloc);
+    for extra in grown.into_inner().unwrap() {
+        shared.monitor.release(extra);
+    }
     shared.sched_cv.notify_all();
     match result {
         Ok(out) => {
@@ -851,6 +1029,8 @@ fn run_job(
                     fit,
                     samples,
                     switch_cost: shared.switch_cost.estimate(),
+                    dp_fit: shared.dp_stat.fit(),
+                    device_switch_cost: shared.device_cost.estimate(),
                     at: shared.now(),
                 });
                 shared.emit(Event::JobFinished {

@@ -23,7 +23,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::costmodel::{CostModel, JobPhase, TrainBudget};
+use crate::config::LoraConfig;
+use crate::costmodel::{CostModel, JobPhase, Pack, TrainBudget};
 use crate::planner::PlannedJob;
 use crate::session::{Event, Policy};
 use crate::util::rng::Rng;
@@ -36,11 +37,26 @@ pub struct SimOptions {
     pub seed: u64,
     /// Queue dispatch policy (the session's vocabulary).
     pub policy: Policy,
+    /// Elastic adapter-level admission: queued adapters join running
+    /// packs at their completion boundaries (`AdapterAdmitted`), under
+    /// the live session's gates — same policy order, same cross-`d`
+    /// penalty-vs-wait formula. Default off (the pre-elastic timeline).
+    pub elastic: bool,
+    /// Boundary device retargeting: running packs grow onto freed devices
+    /// (`DeviceRetarget`) when the modeled remaining-time saving beats
+    /// `Calib::device_switch_cost`. Default off.
+    pub grow_devices: bool,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { noise: 0.0, seed: 42, policy: Policy::Fifo }
+        SimOptions {
+            noise: 0.0,
+            seed: 42,
+            policy: Policy::Fifo,
+            elastic: false,
+            grow_devices: false,
+        }
     }
 }
 
@@ -110,6 +126,8 @@ struct ResumeSim {
     partial_left: f64,
     shape: (usize, usize, usize),
     factor: f64,
+    /// Per-member remaining steps as of the interrupted phase's start.
+    members: Vec<(LoraConfig, usize)>,
 }
 
 /// One job currently holding devices.
@@ -124,6 +142,15 @@ struct Run {
     shape: (usize, usize, usize),
     factor: f64,
     seg_start: f64,
+    /// Start of the current busy-accounting window: equals `seg_start`
+    /// until a device growth credits the old device set and restarts the
+    /// window for the widened one (`seg_start` keeps the launch time, so
+    /// `JobFinished.wall` still spans the whole segment).
+    busy_start: f64,
+    /// Per-member `(config, remaining steps)` — updated at boundaries;
+    /// elastic admission appends joiners here and the phase plan is
+    /// rebuilt from it.
+    members: Vec<(LoraConfig, usize)>,
 }
 
 /// The simulator.
@@ -168,6 +195,14 @@ impl Simulator {
     ) -> SimResult {
         let mut rng = Rng::new(opts.seed);
         let switch_cost = self.cm.calib.bucket_switch_cost;
+        let dev_switch = self.cm.calib.device_switch_cost;
+        // Per-queue-entry remaining configs: elastic admission drains a
+        // queued job's pack before (or instead of) its launch.
+        let mut packs: Vec<Vec<LoraConfig>> =
+            queue.iter().map(|j| j.pack.configs.clone()).collect();
+        // Realized (n, rank-sum) per job id — launch-time membership plus
+        // admitted joiners; the timeline reconstruction reads it.
+        let mut stats: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
         let mut free: Vec<usize> = (0..self.gpus).collect();
         let mut pending: Vec<Pend> = queue
             .iter()
@@ -227,13 +262,23 @@ impl Simulator {
                 let p = pending.remove(idx);
                 let job = &queue[p.qi];
                 let devices: Vec<usize> = free.drain(..job.d).collect();
-                let (phases, next, first_dur, shape, factor) = match p.resume {
+                let (phases, next, first_dur, shape, factor, members) = match p.resume {
                     Some(r) => {
                         // Resuming pays the restore side of the switch.
-                        (r.phases, r.next, r.partial_left + switch_cost, r.shape, r.factor)
+                        (
+                            r.phases,
+                            r.next,
+                            r.partial_left + switch_cost,
+                            r.shape,
+                            r.factor,
+                            r.members,
+                        )
                     }
                     None => {
-                        let phases = self.cm.job_phases(&job.pack, job.d, job.mode, &self.budget);
+                        // The pack as it stands now — elastic admission
+                        // may have absorbed some (or most) of it already.
+                        let pk = Pack::new(packs[p.qi].clone());
+                        let phases = self.cm.job_phases(&pk, job.d, job.mode, &self.budget);
                         // Noise perturbs the whole job's duration once;
                         // phases stretch uniformly so boundary order is
                         // preserved.
@@ -242,14 +287,22 @@ impl Simulator {
                         } else {
                             1.0
                         };
-                        let shape = (job.pack.n(), job.pack.r_pad(), job.pack.bs_pad());
+                        let shape = (pk.n(), pk.r_pad(), pk.bs_pad());
                         let d0 = phases.first().map(|p| p.dur * factor).unwrap_or(0.0);
-                        (phases, 0usize, d0, shape, factor)
+                        let members: Vec<(LoraConfig, usize)> = pk
+                            .configs
+                            .iter()
+                            .map(|c| (c.clone(), self.budget.steps(c.batch)))
+                            .collect();
+                        (phases, 0usize, d0, shape, factor, members)
                     }
                 };
+                stats
+                    .entry(job.id)
+                    .or_insert((members.len(), members.iter().map(|m| m.0.rank).sum()));
                 log.push(Event::JobStarted {
                     job: job.id,
-                    n_adapters: job.pack.n(),
+                    n_adapters: members.len(),
                     devices: devices.clone(),
                     at: now,
                 });
@@ -265,6 +318,8 @@ impl Simulator {
                     shape,
                     factor,
                     seg_start: now,
+                    busy_start: now,
+                    members,
                 });
             }
 
@@ -295,38 +350,71 @@ impl Simulator {
                             events += 1;
                             let r = running.swap_remove(vi);
                             let job = &queue[r.qi];
+                            let width = r.devices.len();
                             for &dev in &r.devices {
-                                busy[dev] += now - r.seg_start;
+                                busy[dev] += now - r.busy_start;
                             }
                             free.extend(r.devices);
                             free.sort_unstable();
-                            let prior = &r.phases[..r.next];
-                            let done_ids: std::collections::BTreeSet<usize> =
-                                prior.iter().flat_map(|p| p.finished.iter().copied()).collect();
-                            let remaining: Vec<usize> = job
-                                .pack
-                                .configs
+                            // The member ledger (boundary-updated, with
+                            // admitted joiners) is the source of truth
+                            // for who is still training.
+                            let remaining: Vec<usize> = r
+                                .members
                                 .iter()
-                                .map(|c| c.id)
-                                .filter(|id| !done_ids.contains(id))
+                                .filter(|m| m.1 > 0)
+                                .map(|m| m.0.id)
                                 .collect();
                             log.push(Event::Preempted {
                                 job: job.id,
                                 adapters: remaining,
                                 at: now,
                             });
-                            pending.push(Pend {
-                                qi: r.qi,
-                                seq: r.seq,
-                                prio: r.prio,
-                                arrive: now,
-                                resume: Some(ResumeSim {
+                            // A grown run resumes at its *original* width
+                            // (job.d is what the relaunch will drain):
+                            // rebuild the remaining plan at that width,
+                            // carrying the interrupted phase's remaining
+                            // fraction of work.
+                            let resume = if width != job.d && r.next < r.phases.len() {
+                                let cur = r.phases[r.next].dur * r.factor;
+                                let frac = if cur > 0.0 {
+                                    ((r.phase_end - now) / cur).clamp(0.0, 1.0)
+                                } else {
+                                    0.0
+                                };
+                                let phases = self.cm.phases_from_remaining(
+                                    &r.members,
+                                    job.d,
+                                    job.mode,
+                                );
+                                let partial_left = phases
+                                    .first()
+                                    .map(|p| frac * p.dur * r.factor)
+                                    .unwrap_or(0.0);
+                                ResumeSim {
+                                    partial_left,
+                                    phases,
+                                    next: 0,
+                                    shape: r.shape,
+                                    factor: r.factor,
+                                    members: r.members,
+                                }
+                            } else {
+                                ResumeSim {
                                     partial_left: (r.phase_end - now).max(0.0),
                                     phases: r.phases,
                                     next: r.next,
                                     shape: r.shape,
                                     factor: r.factor,
-                                }),
+                                    members: r.members,
+                                }
+                            };
+                            pending.push(Pend {
+                                qi: r.qi,
+                                seq: r.seq,
+                                prio: r.prio,
+                                arrive: now,
+                                resume: Some(resume),
                             });
                         }
                         continue; // re-run launches at the same instant
@@ -372,6 +460,7 @@ impl Simulator {
                 .min_by(|a, b| a.1.phase_end.total_cmp(&b.1.phase_end))
                 .unwrap();
             now = running[idx].phase_end.max(now);
+            let mut retired: Vec<usize> = vec![];
             let finished_job = {
                 let r = &mut running[idx];
                 let job = &queue[r.qi];
@@ -388,6 +477,11 @@ impl Simulator {
                             at: now,
                         });
                     }
+                    // Per-member progress: the executed phase advanced
+                    // every then-alive member by its step count.
+                    for m in r.members.iter_mut() {
+                        m.1 -= p.steps.min(m.1);
+                    }
                     let mut switch_pay = 0.0;
                     if p.survivors.0 > 0 && p.survivors != r.shape {
                         log.push(Event::Rebucketed {
@@ -401,6 +495,173 @@ impl Simulator {
                         switch_pay = switch_cost;
                     }
                     r.next += 1;
+                    let mut rebuilt = false;
+                    if r.next < r.phases.len() {
+                        // Elastic boundary: queued adapters may join the
+                        // surviving pack — same policy order, priority
+                        // ceiling and cross-`d` penalty-vs-wait gate as
+                        // the live session's `offer_joiners`.
+                        if opts.elastic {
+                            let host_d = r.devices.len();
+                            let mut alive: Vec<LoraConfig> = r
+                                .members
+                                .iter()
+                                .filter(|m| m.1 > 0)
+                                .map(|m| m.0.clone())
+                                .collect();
+                            let host_remaining =
+                                r.members.iter().map(|m| m.1).max().unwrap_or(0);
+                            let mut order: Vec<usize> = (0..pending.len())
+                                .filter(|&i| {
+                                    pending[i].arrive <= now + 1e-12
+                                        && pending[i].resume.is_none()
+                                })
+                                .collect();
+                            match opts.policy {
+                                Policy::Fifo => order.sort_by_key(|&i| pending[i].seq),
+                                _ => order.sort_by_key(|&i| {
+                                    (std::cmp::Reverse(pending[i].prio), pending[i].seq)
+                                }),
+                            }
+                            for i in order {
+                                let pq = &pending[i];
+                                let qj = &queue[pq.qi];
+                                if pq.prio > r.prio || qj.mode != job.mode {
+                                    continue;
+                                }
+                                let d_ok = qj.d == host_d || {
+                                    // The live session's gate, verbatim
+                                    // (CostModel::cross_d_admit).
+                                    let own = {
+                                        let pk = Pack::new(packs[pq.qi].clone());
+                                        (pk.n(), pk.r_pad(), pk.bs_pad())
+                                    };
+                                    let steps = packs[pq.qi]
+                                        .iter()
+                                        .map(|c| self.budget.steps(c.batch))
+                                        .max()
+                                        .unwrap_or(0);
+                                    self.cm.cross_d_admit(
+                                        r.shape,
+                                        host_d,
+                                        host_remaining,
+                                        own,
+                                        qj.d,
+                                        steps,
+                                        qj.mode,
+                                        dev_switch,
+                                    )
+                                };
+                                if !d_ok {
+                                    continue;
+                                }
+                                let qi = pq.qi;
+                                let mut j = 0usize;
+                                while j < packs[qi].len() {
+                                    let cand = packs[qi][j].clone();
+                                    let mut trial = alive.clone();
+                                    trial.push(cand.clone());
+                                    if !self.cm.fits(&Pack::new(trial), host_d) {
+                                        j += 1;
+                                        continue;
+                                    }
+                                    packs[qi].remove(j);
+                                    log.push(Event::AdapterAdmitted {
+                                        job: job.id,
+                                        adapter: cand.id,
+                                        task: cand.task.clone(),
+                                        from_job: qj.id,
+                                        at: now,
+                                    });
+                                    let st = stats.entry(job.id).or_insert((0, 0));
+                                    st.0 += 1;
+                                    st.1 += cand.rank;
+                                    let steps_j = self.budget.steps(cand.batch);
+                                    alive.push(cand.clone());
+                                    r.members.push((cand, steps_j));
+                                    rebuilt = true;
+                                }
+                            }
+                            // Retire queue entries fully absorbed: they
+                            // never launch; their adapters report under
+                            // the host job.
+                            let mut k = 0usize;
+                            while k < pending.len() {
+                                if pending[k].resume.is_none()
+                                    && packs[pending[k].qi].is_empty()
+                                {
+                                    retired.push(queue[pending[k].qi].id);
+                                    pending.remove(k);
+                                } else {
+                                    k += 1;
+                                }
+                            }
+                        }
+                        // Device retarget: grow onto freed devices when
+                        // the modeled remaining-time saving beats the
+                        // device-switch cost — the session's gate,
+                        // including its "queue first" rule: an *arrived*
+                        // pending job has first claim on free devices.
+                        let queue_idle =
+                            pending.iter().all(|p| p.arrive > now + 1e-12);
+                        if opts.grow_devices && queue_idle && !free.is_empty() {
+                            let d = r.devices.len();
+                            // Same cap as the session's offer_devices:
+                            // at most double, never past the executing
+                            // shape's slot count.
+                            let extra =
+                                free.len().min(d).min(r.shape.0.saturating_sub(d));
+                            if extra > 0 {
+                                let to = d + extra;
+                                // The live session's gate: the *next
+                                // phase's* saving (shape-charged step
+                                // times, realized via the noise factor)
+                                // must beat the device-switch cost.
+                                let steps = r.phases[r.next].steps as f64;
+                                let t_cur =
+                                    self.cm.bucket_step_time(r.shape, d, job.mode);
+                                let t_new =
+                                    self.cm.bucket_step_time(r.shape, to, job.mode);
+                                let saving = steps * (t_cur - t_new) * r.factor;
+                                if saving > dev_switch {
+                                    for &dev in &r.devices {
+                                        busy[dev] += now - r.busy_start;
+                                    }
+                                    r.busy_start = now;
+                                    let new_devs: Vec<usize> = free.drain(..extra).collect();
+                                    r.devices.extend(new_devs);
+                                    log.push(Event::DeviceRetarget {
+                                        job: job.id,
+                                        from: d,
+                                        to,
+                                        at: now,
+                                    });
+                                    switch_pay += dev_switch;
+                                    rebuilt = true;
+                                }
+                            }
+                        }
+                    }
+                    if rebuilt {
+                        let alive: Vec<(LoraConfig, usize)> =
+                            r.members.iter().filter(|m| m.1 > 0).cloned().collect();
+                        let pk = Pack::new(alive.iter().map(|m| m.0.clone()).collect());
+                        let new_shape = (pk.n(), pk.r_pad(), pk.bs_pad());
+                        if new_shape.0 > 0 && new_shape != r.shape {
+                            log.push(Event::Rebucketed {
+                                job: job.id,
+                                from: r.shape,
+                                to: new_shape,
+                                survivors: vec![],
+                                at: now,
+                            });
+                            r.shape = new_shape;
+                            switch_pay += switch_cost;
+                        }
+                        r.phases =
+                            self.cm.phases_from_remaining(&alive, r.devices.len(), job.mode);
+                        r.next = 0;
+                    }
                     if r.next < r.phases.len() {
                         r.phase_end = now + switch_pay + r.phases[r.next].dur * r.factor;
                         false
@@ -411,15 +672,18 @@ impl Simulator {
                     true
                 }
             };
+            for job in retired {
+                log.push(Event::JobFinished { job, adapters: 0, wall: 0.0, at: now });
+            }
             if finished_job {
                 let r = running.swap_remove(idx);
                 let job = &queue[r.qi];
                 for &dev in &r.devices {
-                    busy[dev] += now - r.seg_start;
+                    busy[dev] += now - r.busy_start;
                 }
                 log.push(Event::JobFinished {
                     job: job.id,
-                    adapters: job.pack.n(),
+                    adapters: r.members.len(),
                     wall: now - r.seg_start,
                     at: now,
                 });
@@ -447,12 +711,18 @@ impl Simulator {
                         continue;
                     }
                     let pj = by_id[job];
+                    // Realized membership (launch set + admitted joiners)
+                    // when the run tracked one; queue facts otherwise.
+                    let (n_c, r_s) = stats
+                        .get(job)
+                        .copied()
+                        .unwrap_or((pj.pack.n(), pj.pack.rank_sum()));
                     open.insert(*job, jobs.len());
                     jobs.push(SimJob {
                         id: *job,
                         d: pj.d,
-                        n_configs: pj.pack.n(),
-                        rank_sum: pj.pack.rank_sum(),
+                        n_configs: n_c,
+                        rank_sum: r_s,
                         start: *at,
                         end: *at,
                         devices: devices.clone(),
@@ -576,6 +846,7 @@ mod tests {
                 Event::AdapterAdmitted { .. } => "admitted",
                 Event::Rebucketed { .. } => "rebucket",
                 Event::Preempted { .. } => "preempted",
+                Event::DeviceRetarget { .. } => "retarget",
                 Event::JobFinished { .. } => "finished",
                 Event::JobFailed { .. } => "failed",
                 Event::CalibUpdated { .. } => "calib",
@@ -598,6 +869,121 @@ mod tests {
         for w in res.log.windows(2) {
             assert!(w[0].at() <= w[1].at() + 1e-12);
         }
+    }
+
+    /// Elastic adapter-level admission: a queued single-adapter job joins
+    /// the running mixed pack at its first completion boundary
+    /// (`AdapterAdmitted`), its queue entry retires with a zero-adapter
+    /// `JobFinished`, and the makespan strictly beats the non-elastic
+    /// run of the same queue on the same single device.
+    #[test]
+    fn elastic_admission_joins_running_pack_and_shrinks_makespan() {
+        let mut s = sim("qwen2.5-7b");
+        s.gpus = 1;
+        let cfg = |id: usize, bs: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: bs,
+            rank: 16,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        // Job 0 holds the device; its bs4 member leaves at the first
+        // boundary, freeing room for queued job 1's adapter.
+        let queue = vec![
+            PlannedJob {
+                id: 0,
+                pack: Pack::new(vec![cfg(0, 1), cfg(1, 4)]),
+                d: 1,
+                mode: ExecMode::Packed,
+            },
+            PlannedJob {
+                id: 1,
+                pack: Pack::new(vec![cfg(2, 4)]),
+                d: 1,
+                mode: ExecMode::Packed,
+            },
+        ];
+        let plain = s.run_queue(&queue, &SimOptions::default());
+        let elastic = s.run_queue(
+            &queue,
+            &SimOptions { elastic: true, ..SimOptions::default() },
+        );
+        let admissions = elastic
+            .log
+            .iter()
+            .filter(|e| matches!(e, Event::AdapterAdmitted { .. }))
+            .count();
+        assert_eq!(admissions, 1, "the queued adapter must join at the boundary");
+        assert!(elastic
+            .log
+            .iter()
+            .any(|e| matches!(e, Event::JobFinished { job: 1, adapters: 0, .. })));
+        assert!(
+            elastic.makespan < plain.makespan,
+            "elastic {:.1}s !< plain {:.1}s",
+            elastic.makespan,
+            plain.makespan
+        );
+        // The host job's realized membership counts the joiner.
+        let host = elastic.jobs.iter().find(|j| j.id == 0).unwrap();
+        assert_eq!(host.n_configs, 3);
+        assert_eq!(host.rank_sum, 48);
+        // The absorbed job never launched.
+        assert!(elastic.jobs.iter().all(|j| j.id != 1));
+    }
+
+    /// Boundary device growth: with a calibrated dp fit showing real
+    /// parallel benefit and a free device, the surviving pack grows
+    /// (`DeviceRetarget`) and finishes earlier; a prohibitive
+    /// device-switch cost pins it at d=1.
+    #[test]
+    fn grow_devices_retargets_when_saving_beats_switch_cost() {
+        let mut s = sim("qwen2.5-7b");
+        s.gpus = 2;
+        // Perfectly parallel measured fit: t_row = b/d.
+        s.cm.calib.dp_fit = Some((0.0, 1e-3));
+        let cfg = |id: usize, bs: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: bs,
+            rank: 16,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        let queue = vec![PlannedJob {
+            id: 0,
+            pack: Pack::new(vec![cfg(0, 1), cfg(1, 1), cfg(2, 4)]),
+            d: 1,
+            mode: ExecMode::Packed,
+        }];
+        let plain = s.run_queue(&queue, &SimOptions::default());
+        let grown = s.run_queue(
+            &queue,
+            &SimOptions { grow_devices: true, ..SimOptions::default() },
+        );
+        let retargets = grown
+            .log
+            .iter()
+            .filter(|e| matches!(e, Event::DeviceRetarget { .. }))
+            .count();
+        assert_eq!(retargets, 1, "the pack must grow onto the free device");
+        assert!(
+            grown.makespan < plain.makespan,
+            "grown {:.1}s !< plain {:.1}s",
+            grown.makespan,
+            plain.makespan
+        );
+        // A prohibitive switch cost pins the pack at its launch width.
+        s.cm.calib.device_switch_cost = f64::MAX;
+        let pinned = s.run_queue(
+            &queue,
+            &SimOptions { grow_devices: true, ..SimOptions::default() },
+        );
+        assert!(pinned
+            .log
+            .iter()
+            .all(|e| !matches!(e, Event::DeviceRetarget { .. })));
     }
 
     /// The policy path on a skewed arrival: a high-priority job arriving

@@ -26,6 +26,14 @@
 //!   checkpointed at true rank (params + moments + its own `t`) into
 //!   [`MemberResume`]s the session re-queues, and a later run restores
 //!   them bit-identically via [`ElasticCtl::resume`].
+//! - **Executed device parallelism** (DESIGN.md §11): the job runs on
+//!   its real [`Allocation`] — [`run_pack_phased`] splits the pack's
+//!   rows across the allocated devices through [`ShardedState`] with a
+//!   fixed-order deterministic gradient reduction, so trajectories are
+//!   bitwise identical at any device count; boundary device offers
+//!   ([`ElasticCtl::devices`]) may grow the shard set onto freed devices
+//!   mid-job, calibrated by [`ElasticCtl::device_cost`] /
+//!   [`ElasticCtl::dp_stat`].
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -33,13 +41,27 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cluster::Allocation;
 use crate::config::LoraConfig;
-use crate::costmodel::{Pack, SwitchCost, TrainBudget};
+use crate::costmodel::{DpStat, Pack, SwitchCost, TrainBudget};
 use crate::planner::rebalance::retarget_bucket;
 use crate::runtime::state::{JoinSource, MemberState};
-use crate::runtime::{Executable, HostTensor, ModelInfo, Runtime, TrainState};
+use crate::runtime::{Executable, HostTensor, ModelInfo, Runtime, ShardedState, TrainState};
 use crate::train::tasks::{self, SampleBuf};
 use crate::util::rng::Rng;
+
+/// Default device count for standalone (pool-less) runs: the
+/// `PLORA_DEVICES` env knob, clamped to ≥ 1. Session jobs get their real
+/// [`Allocation`] from the Resource Monitor instead; this knob is how the
+/// CI suite runs every solo baseline sharded (`PLORA_DEVICES=2`) and
+/// still demands bitwise-identical results.
+pub fn devices_default() -> usize {
+    std::env::var("PLORA_DEVICES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&d| d >= 1)
+        .unwrap_or(1)
+}
 
 /// Options for one live job.
 #[derive(Debug, Clone, PartialEq)]
@@ -105,6 +127,11 @@ pub struct JobReport {
     pub rebuckets: usize,
     /// Queued adapters admitted into this pack at boundaries.
     pub admitted: usize,
+    /// Largest device count this run executed on (the allocation's size,
+    /// grown by boundary device retargets).
+    pub d: usize,
+    /// Device retargets performed at boundaries.
+    pub dretargets: usize,
 }
 
 impl JobReport {
@@ -151,6 +178,28 @@ pub struct BoundaryOffer<'a> {
     pub bucket: (usize, usize, usize),
     /// The model's full `(n, r, bs)` bucket grid.
     pub buckets: &'a [(usize, usize, usize)],
+    /// Devices the pack currently executes on (cross-`d` admission reads
+    /// the count; the ids identify the pack's shard workers).
+    pub devices: &'a [usize],
+    /// Longest remaining step count among the survivors — the
+    /// lower bound on how long a queued job would wait for this pack's
+    /// devices if not absorbed.
+    pub host_remaining: usize,
+}
+
+/// What the session's device-retarget closure sees at a boundary: the
+/// pack's current execution shape and the length of its next phase. The
+/// closure answers with extra device ids to grow onto (acquired from the
+/// Resource Monitor, gated on the modeled saving vs the calibrated
+/// [`crate::costmodel::throughput::Calib::device_switch_cost`]), or
+/// `None` to stay.
+pub struct DeviceOffer {
+    /// Devices currently held.
+    pub d: usize,
+    /// Bucket the next phase executes on.
+    pub bucket: (usize, usize, usize),
+    /// Steps until the next adapter-completion boundary.
+    pub phase_steps: usize,
 }
 
 /// The elastic-session control surface of [`run_pack_phased`]. A plain
@@ -171,6 +220,19 @@ pub struct ElasticCtl<'a> {
     /// with the same `retarget` machinery; the driver re-validates).
     #[allow(clippy::type_complexity)]
     pub offer: Option<&'a mut dyn FnMut(&BoundaryOffer<'_>) -> Vec<Joiner>>,
+    /// Device-retarget hook: called at every boundary with survivors;
+    /// returns extra device ids the pack should grow its shard set onto
+    /// (the session acquires them from the Resource Monitor, gated on
+    /// modeled saving vs the calibrated device-switch cost).
+    #[allow(clippy::type_complexity)]
+    pub devices: Option<&'a mut dyn FnMut(&DeviceOffer) -> Option<Vec<usize>>>,
+    /// Live device-retarget cost calibration: every shard-set rebuild a
+    /// retarget triggers `record()`s its measured wall time.
+    pub device_cost: Option<SwitchCost>,
+    /// Live data-parallel efficiency calibration: every executed step
+    /// records `(shard count, padded samples, wall seconds)` — the
+    /// samples behind `Calib::dp_fit`.
+    pub dp_stat: Option<DpStat>,
     /// Resume payloads for the *initial* members (continuation of a
     /// preempted job), keyed by adapter id.
     pub resume: Vec<(usize, MemberResume)>,
@@ -184,6 +246,9 @@ impl ElasticCtl<'_> {
             switch_cost: None,
             preempt: None,
             offer: None,
+            devices: None,
+            device_cost: None,
+            dp_stat: None,
             resume: vec![],
         }
     }
@@ -222,6 +287,15 @@ pub enum PackPhaseEvent<'a> {
         /// executable swap) — feeds the live switch-cost calibration.
         switch_secs: f64,
     },
+    /// The pack's device set changed at a boundary (grew onto freed
+    /// devices); the shard layout was rebuilt at the new count.
+    DeviceRetarget {
+        from: usize,
+        to: usize,
+        /// Measured wall cost of the shard-set rebuild — feeds the live
+        /// device-switch-cost calibration.
+        switch_secs: f64,
+    },
     /// The job was preempted: the listed config ids were checkpointed
     /// back to the caller (see [`PhasedOutcome::preempted`]).
     Preempted { remaining: Vec<usize> },
@@ -237,7 +311,8 @@ fn stream_seed(seed: u64, id: usize, salt: u64) -> u64 {
     seed ^ salt ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
 }
 
-/// Run one packed job live on the runtime.
+/// Run one packed job live on the runtime, data-parallel across
+/// `PLORA_DEVICES` local devices (default 1).
 pub fn run_pack(
     rt: &Runtime,
     model: &str,
@@ -245,6 +320,21 @@ pub fn run_pack(
     opts: &TrainOptions,
 ) -> Result<JobReport> {
     run_pack_full(rt, model, configs, opts).map(|(rep, _)| rep)
+}
+
+/// [`run_pack`] on an explicit device [`Allocation`] (benches and tests
+/// sweep the device count with it; `run_pack` itself uses
+/// [`devices_default`]).
+pub fn run_pack_on(
+    rt: &Runtime,
+    model: &str,
+    configs: &[LoraConfig],
+    opts: &TrainOptions,
+    alloc: &Allocation,
+) -> Result<JobReport> {
+    let out =
+        run_pack_phased(rt, model, configs, opts, alloc, &mut ElasticCtl::none(), &mut |_| {})?;
+    Ok(out.report)
 }
 
 /// Like [`run_pack`] but also returns the final [`TrainState`], so callers
@@ -258,7 +348,9 @@ pub fn run_pack_full(
     configs: &[LoraConfig],
     opts: &TrainOptions,
 ) -> Result<(JobReport, TrainState)> {
-    let out = run_pack_phased(rt, model, configs, opts, &mut ElasticCtl::none(), &mut |_| {})?;
+    let alloc = Allocation::local(devices_default());
+    let out =
+        run_pack_phased(rt, model, configs, opts, &alloc, &mut ElasticCtl::none(), &mut |_| {})?;
     Ok((out.report, out.state))
 }
 
@@ -329,21 +421,29 @@ fn fill_base_metrics(
     Ok(())
 }
 
-/// Phased packed training (see module docs). `ctl` carries the elastic
-/// control surface; with [`ElasticCtl::none`], finished adapters ride the
-/// initial bucket as inert slots (zero lr, zero batch) — the pre-session
-/// engine behavior.
+/// Phased packed training (see module docs). `alloc` is the job's real
+/// device allocation — its `n·batch` rows execute data-parallel across
+/// the allocated devices through [`ShardedState`], bitwise identically at
+/// any device count. `ctl` carries the elastic control surface; with
+/// [`ElasticCtl::none`], finished adapters ride the initial bucket as
+/// inert slots (zero lr, zero batch) — the pre-session engine behavior.
+#[allow(clippy::too_many_arguments)]
 pub fn run_pack_phased(
     rt: &Runtime,
     model: &str,
     configs: &[LoraConfig],
     opts: &TrainOptions,
+    alloc: &Allocation,
     ctl: &mut ElasticCtl<'_>,
     on_event: &mut dyn FnMut(PackPhaseEvent<'_>),
 ) -> Result<PhasedOutcome> {
     if configs.is_empty() {
         return Err(anyhow!("run_pack: empty pack"));
     }
+    if alloc.devices.is_empty() {
+        return Err(anyhow!("run_pack: empty device allocation"));
+    }
+    let mut devices: Vec<usize> = alloc.devices.clone();
     let mi = rt.manifest.model(model)?.clone();
 
     // Growable member set: parallel vecs indexed by member id `k`.
@@ -403,6 +503,10 @@ pub fn run_pack_phased(
     let (seq, vocab) = (mi.seq, mi.vocab);
     // Live cost model for the retarget decisions (bucket-shape charged).
     let cm = if ctl.rebucket { Some(crate::search::live_cost_model(rt, model)?) } else { None };
+    // Device offers are only meaningful when the backend can actually
+    // split its fused step — on a fused-only backend (e.g. AOT PJRT) a
+    // grant would hold devices that never widen anything.
+    let can_shard = rt.shard_exec(model, 1, br, bbs)?.is_some();
 
     // Bucket-slot occupancy: slots[s] = member index; active[s] marks
     // members still inside their budget. Inactive slots are inert (zero
@@ -412,7 +516,8 @@ pub fn run_pack_phased(
 
     // Build the initial state through the same merge path admission uses:
     // fresh members draw their own (seed, id) init stream, resumed members
-    // restore params + moments + their own step counter.
+    // restore params + moments + their own step counter — then wrap it for
+    // data-parallel execution on the allocation's devices.
     let mut state = {
         let shell = TrainState::empty(&mi, br);
         let joins: Vec<JoinSource<'_>> = cfgs
@@ -425,7 +530,7 @@ pub fn run_pack_phased(
                 },
             })
             .collect();
-        shell.repack_merge(&[], &joins, bn, br)?
+        ShardedState::new(rt, model, shell.repack_merge(&[], &joins, bn, br)?, bbs, &devices)?
     };
     resume0.clear();
 
@@ -466,7 +571,7 @@ pub fn run_pack_phased(
         &mi,
         &eval_exe,
         &base,
-        &state,
+        state.inner(),
         &cfgs,
         &slots,
         &scale,
@@ -482,6 +587,8 @@ pub fn run_pack_phased(
     let mut padded_rows = 0usize;
     let mut rebuckets = 0usize;
     let mut admitted = 0usize;
+    let mut dretargets = 0usize;
+    let mut d_max = devices.len();
     let mut preempted: Vec<(LoraConfig, MemberResume)> = vec![];
     let preempt_flag: Option<&AtomicBool> = ctl.preempt.as_deref();
 
@@ -504,7 +611,7 @@ pub fn run_pack_phased(
                         continue;
                     }
                     let c = &cfgs[k];
-                    let member = state.extract_member(s, c.rank)?;
+                    let member = state.inner().extract_member(s, c.rank)?;
                     preempted.push((
                         c.clone(),
                         MemberResume {
@@ -550,7 +657,11 @@ pub fn run_pack_phased(
             let s0 = Instant::now();
             let per =
                 state.step(&train_exe, &base, &tok_t, &tgt_t, &msk_t, &scale, &lrs, &rmask)?;
-            profile.push((real_tokens as f64, alive as f64, s0.elapsed().as_secs_f64()));
+            let step_secs = s0.elapsed().as_secs_f64();
+            profile.push((real_tokens as f64, alive as f64, step_secs));
+            if let Some(ds) = &ctl.dp_stat {
+                ds.record(state.parallelism(), (bn * bbs) as f64, step_secs);
+            }
             for (s, &k) in slots.iter().enumerate() {
                 if !active[s] {
                     continue;
@@ -578,7 +689,7 @@ pub fn run_pack_phased(
                 &mi,
                 &eval_exe,
                 &base,
-                &state,
+                state.inner(),
                 &cfgs,
                 &slots,
                 Some(&finishing),
@@ -602,7 +713,11 @@ pub fn run_pack_phased(
                     eval_acc: eacc[s],
                     curve: std::mem::take(&mut curves[k]),
                 };
-                on_event(PackPhaseEvent::AdapterFinished { slot: s, report: &rep, state: &state });
+                on_event(PackPhaseEvent::AdapterFinished {
+                    slot: s,
+                    report: &rep,
+                    state: state.inner(),
+                });
                 reports[k] = Some(rep);
                 active[s] = false;
                 // Freeze the slot in the reused batch tensors: zeroing its
@@ -623,13 +738,19 @@ pub fn run_pack_phased(
             break;
         }
 
-        // Offer the boundary to the session: queued adapters may join.
+        // Offer the boundary to the session: queued adapters may join
+        // (cross-`d` included — the offer carries the pack's device set
+        // and its longest remaining member, the wait lower bound a
+        // queued job compares against).
+        let host_remaining = survivors.iter().map(|&k| total[k] - done[k]).max().unwrap_or(0);
         let mut joiners: Vec<Joiner> = vec![];
         if let Some(off) = ctl.offer.as_mut() {
             let bo = BoundaryOffer {
                 survivors: Pack::new(survivors.iter().map(|&k| cfgs[k].clone()).collect()),
                 bucket: (bn, br, bbs),
                 buckets: &buckets,
+                devices: &devices,
+                host_remaining,
             };
             joiners = (**off)(&bo);
         }
@@ -659,6 +780,7 @@ pub fn run_pack_phased(
                     &join_pack,
                     (bn, br, bbs),
                     cm,
+                    devices.len(),
                     sw,
                     next_phase_steps,
                 )
@@ -707,7 +829,11 @@ pub fn run_pack_phased(
                         },
                     })
                     .collect();
-                state = state.repack_merge(&keep, &joins, nn, nr)?;
+                // The merge rebuilds the sharded execution layout too
+                // (the new bucket's slot count re-partitions across the
+                // held devices) — part of the measured switch window.
+                let merged = state.inner().repack_merge(&keep, &joins, nn, nr)?;
+                state = ShardedState::new(rt, model, merged, nbs, &devices)?;
             }
             let mut switch_secs = sw0.elapsed().as_secs_f64();
             let from = (bn, br, bbs);
@@ -779,6 +905,39 @@ pub fn run_pack_phased(
             // way on the first step).
             (tok_t, tgt_t, msk_t) = batch_tensors(bn, bbs)?;
         }
+        // Device retarget: offer the boundary to the session's device
+        // planner — a running pack may grow its shard set onto freed
+        // devices (gated session-side on modeled phase saving vs the
+        // calibrated device-switch cost). The rebuild only changes the
+        // execution layout, never the math, so trajectories stay bitwise
+        // identical across retargets. Skipped entirely on fused-only
+        // backends: the grant could never widen execution.
+        if let (true, Some(doff)) = (can_shard, ctl.devices.as_mut()) {
+            let off = DeviceOffer {
+                d: devices.len(),
+                bucket: (bn, br, bbs),
+                phase_steps: next_phase_steps,
+            };
+            if let Some(extra) = (**doff)(&off) {
+                if !extra.is_empty() {
+                    let from_d = devices.len();
+                    devices.extend(extra);
+                    let dv0 = Instant::now();
+                    state.set_devices(rt, model, &devices)?;
+                    let dv_secs = dv0.elapsed().as_secs_f64();
+                    if let Some(dc) = &ctl.device_cost {
+                        dc.record(dv_secs);
+                    }
+                    dretargets += 1;
+                    d_max = d_max.max(devices.len());
+                    on_event(PackPhaseEvent::DeviceRetarget {
+                        from: from_d,
+                        to: devices.len(),
+                        switch_secs: dv_secs,
+                    });
+                }
+            }
+        }
         // Rebuild the per-slot runtime vectors for the next phase, then
         // base-eval any member that has no base metrics yet (freshly
         // admitted joiners; resumed ones carried theirs). No-op at a
@@ -793,7 +952,7 @@ pub fn run_pack_phased(
             &mi,
             &eval_exe,
             &base,
-            &state,
+            state.inner(),
             &cfgs,
             &slots,
             &scale,
@@ -821,8 +980,10 @@ pub fn run_pack_phased(
             padded_rows,
             rebuckets,
             admitted,
+            d: d_max,
+            dretargets,
         },
-        state,
+        state: state.into_inner(),
         preempted,
     })
 }
@@ -1006,8 +1167,9 @@ mod tests {
         // the driver observes it before the survivor's next step.
         let flag = Arc::new(AtomicBool::new(false));
         let fl = flag.clone();
+        let alloc = Allocation::local(devices_default());
         let mut ctl = ElasticCtl { preempt: Some(flag.clone()), ..ElasticCtl::none() };
-        let out = run_pack_phased(&rt, "nano", &configs, &opts, &mut ctl, &mut |ev| {
+        let out = run_pack_phased(&rt, "nano", &configs, &opts, &alloc, &mut ctl, &mut |ev| {
             if matches!(ev, PackPhaseEvent::AdapterFinished { .. }) {
                 fl.store(true, Ordering::SeqCst);
             }
@@ -1024,7 +1186,8 @@ mod tests {
         let resume = vec![(pc.id, pr.clone())];
         let mut ctl = ElasticCtl { resume, ..ElasticCtl::none() };
         let done =
-            run_pack_phased(&rt, "nano", &configs[..1], &opts, &mut ctl, &mut |_| {}).unwrap();
+            run_pack_phased(&rt, "nano", &configs[..1], &opts, &alloc, &mut ctl, &mut |_| {})
+                .unwrap();
         assert!(done.preempted.is_empty());
         assert_eq!(done.report.adapters.len(), 1);
         let (a, b) = (&clean.adapters[0], &done.report.adapters[0]);

@@ -13,12 +13,25 @@
 //! reduction stays sequential on one worker, so results are bitwise
 //! invariant to the worker count.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pool-id generator (0 is "not a pool worker").
+static NEXT_POOL_ID: AtomicUsize = AtomicUsize::new(1);
+
+thread_local! {
+    /// Id of the [`ThreadPool`] this thread is a worker of, if any. Lets
+    /// [`ThreadPool::scoped`] detect re-entrant dispatch onto its own pool
+    /// (which would deadlock: a worker parked on the latch cannot drain
+    /// the very queue its sub-tasks sit in) and degrade to inline serial
+    /// execution — bitwise identical, only the wall clock differs.
+    static ACTIVE_POOL: Cell<usize> = const { Cell::new(0) };
+}
 
 /// The process-wide pool [`ThreadPool::scoped`] callers share. Sized to
 /// the machine (at least 4 workers) — `scoped` batches of any size run
@@ -35,11 +48,13 @@ pub struct ThreadPool {
     tx: Option<mpsc::Sender<Task>>,
     workers: Vec<thread::JoinHandle<()>>,
     inflight: Arc<AtomicUsize>,
+    id: usize,
 }
 
 impl ThreadPool {
     pub fn new(n: usize) -> ThreadPool {
         let n = n.max(1);
+        let id = NEXT_POOL_ID.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = mpsc::channel::<Task>();
         let rx = Arc::new(Mutex::new(rx));
         let inflight = Arc::new(AtomicUsize::new(0));
@@ -49,23 +64,26 @@ impl ThreadPool {
                 let inflight = Arc::clone(&inflight);
                 thread::Builder::new()
                     .name(format!("plora-worker-{i}"))
-                    .spawn(move || loop {
-                        let task = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match task {
-                            Ok(t) => {
-                                t();
-                                inflight.fetch_sub(1, Ordering::SeqCst);
+                    .spawn(move || {
+                        ACTIVE_POOL.with(|p| p.set(id));
+                        loop {
+                            let task = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match task {
+                                Ok(t) => {
+                                    t();
+                                    inflight.fetch_sub(1, Ordering::SeqCst);
+                                }
+                                Err(_) => break, // sender dropped: shut down
                             }
-                            Err(_) => break, // sender dropped: shut down
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, inflight }
+        ThreadPool { tx: Some(tx), workers, inflight, id }
     }
 
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -97,6 +115,16 @@ impl ThreadPool {
     /// latch is waited on before returning on every path), so the `'a`
     /// borrows they capture outlive every execution.
     pub fn scoped<'a>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        // Re-entrant dispatch onto our own pool would deadlock (the
+        // calling worker parks on the latch and cannot drain the queue):
+        // run inline instead — every scoped batch is bitwise
+        // order-invariant by contract, only wall time changes.
+        if ACTIVE_POOL.with(|p| p.get()) == self.id {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
         let Some(last) = tasks.pop() else { return };
         if tasks.is_empty() {
             last();
@@ -222,6 +250,39 @@ mod tests {
         let mut a = 0u32;
         global().scoped(vec![Box::new(|| a += 1), Box::new(|| {})]);
         assert_eq!(a, 1);
+    }
+
+    /// Dispatching a scoped batch from one of the pool's own workers
+    /// (nested use) must not deadlock: the guard runs it inline.
+    #[test]
+    fn nested_scoped_on_own_pool_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let mut out = vec![0u8; 4];
+        {
+            let (a, b) = out.split_at_mut(2);
+            let p = &pool;
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(move || {
+                    // This task lands on a worker; its nested dispatch
+                    // onto the same pool must fall back to inline.
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = a
+                        .iter_mut()
+                        .map(|x| {
+                            let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || *x = 1);
+                            f
+                        })
+                        .collect();
+                    p.scoped(inner);
+                }),
+                Box::new(move || {
+                    for x in b.iter_mut() {
+                        *x = 2;
+                    }
+                }),
+            ];
+            pool.scoped(tasks);
+        }
+        assert_eq!(out, vec![1, 1, 2, 2]);
     }
 
     #[test]

@@ -524,6 +524,264 @@ fn retarget_never_picks_move_below_switch_cost() {
     assert!(moves > 10 && stays > 10, "property space degenerate: {moves} moves, {stays} stays");
 }
 
+/// Tentpole acceptance (d): **sharded execution bit-identity across
+/// device counts**. The same workload — a mixed pack that re-buckets,
+/// plus a queued single that joins mid-job (cross-`d` admission when the
+/// host's width differs) — runs at d = 1, 2 and 4 on a pool of exactly d
+/// devices; every adapter's full report must be bitwise identical across
+/// all three, and identical to the solo `run_pack` path.
+#[test]
+fn sharded_execution_bit_identical_across_device_counts() {
+    let rt = runtime();
+    let o = opts(32); // bs1 -> 32 steps, bs2 -> 16
+    let run_at = |d: usize| {
+        let mut s =
+            Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, d), "nano");
+        s.options = o.clone();
+        s.set_policy(policy_from_env());
+        s.set_elastic(true);
+        // Job 0 (d devices) holds the whole pool; job 1's copy adapter
+        // can only start by joining job 0's pack at the parity boundary
+        // — same-d admission at d=1, cross-d (a queued d=1 job entering
+        // a d-wide host) otherwise.
+        let mut j0 = JobSpec::new(vec![
+            spec("modadd", 8, 1, 2e-3),
+            spec("parity", 8, 2, 2e-3),
+        ]);
+        j0.d = d;
+        s.submit(j0).unwrap();
+        s.submit(JobSpec::new(vec![spec("copy", 8, 2, 2e-3)])).unwrap();
+        s.drain().unwrap()
+    };
+    let pick = |r: &plora::session::SessionReport, id: usize| {
+        r.outcomes
+            .iter()
+            .flat_map(|oc| oc.report.adapters.clone())
+            .find(|a| a.config.id == id)
+            .unwrap()
+    };
+    let base = run_at(1);
+    assert_eq!(base.admissions(), 1);
+    assert_eq!(base.total_adapters(), 3);
+    // Solo ground truth (exact equality — the packed/sharded trajectory
+    // is the solo trajectory).
+    for (id, task, batch) in [(0usize, "modadd", 1usize), (1, "parity", 2), (2, "copy", 2)] {
+        let solo_cfg =
+            LoraConfig { id, lr: 2e-3, batch, rank: 8, alpha_ratio: 1.0, task: task.into() };
+        let solo = run_pack(&rt, "nano", &[solo_cfg], &o).unwrap();
+        let (s, p) = (&solo.adapters[0], pick(&base, id));
+        assert_eq!(s.final_loss, p.final_loss, "{task}: d=1 final_loss vs solo");
+        assert_eq!(s.eval_loss, p.eval_loss, "{task}: d=1 eval_loss vs solo");
+    }
+    for d in [2usize, 4] {
+        let got = run_at(d);
+        assert_eq!(got.admissions(), 1, "admission must fire at d={d}");
+        assert_eq!(got.total_adapters(), 3);
+        for id in 0..3usize {
+            let (a, b) = (pick(&base, id), pick(&got, id));
+            assert_eq!(a.first_loss, b.first_loss, "adapter {id} first_loss diverged at d={d}");
+            assert_eq!(a.final_loss, b.final_loss, "adapter {id} final_loss diverged at d={d}");
+            assert_eq!(a.eval_loss, b.eval_loss, "adapter {id} eval_loss diverged at d={d}");
+            assert_eq!(a.eval_acc, b.eval_acc, "adapter {id} eval_acc diverged at d={d}");
+            assert_eq!(a.base_loss, b.base_loss, "adapter {id} base_loss diverged at d={d}");
+            assert_eq!(a.base_acc, b.base_acc, "adapter {id} base_acc diverged at d={d}");
+            assert_eq!(a.curve, b.curve, "adapter {id} loss curve diverged at d={d}");
+            assert_eq!(a.steps, b.steps);
+        }
+    }
+}
+
+/// Tentpole acceptance (e): **preempt-then-resume bit-identity across
+/// device counts**. A sharded 2-adapter pack is evicted mid-run by a
+/// higher-priority job and resumed; trajectories at d = 2 and 4 equal
+/// the d = 1 run exactly (a resume is bit-exact at any boundary, so the
+/// wall-clock-dependent preemption point cannot perturb results).
+#[test]
+fn preempt_resume_bit_identical_across_device_counts() {
+    let rt = runtime();
+    let o = opts(192); // long enough that the preemption lands mid-run
+    let run_at = |d: usize| {
+        let mut s =
+            Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, d), "nano");
+        s.options = o.clone();
+        s.set_policy(Policy::PreemptLowest);
+        let rx = s.subscribe();
+        let low = PlannedJob {
+            id: 0,
+            pack: Pack::new(vec![
+                spec("modadd", 8, 1, 2e-3).with_id(0),
+                spec("copy", 8, 1, 2e-3).with_id(1),
+            ]),
+            d,
+            mode: ExecMode::Packed,
+        };
+        s.submit_planned_at(low, 0).unwrap();
+        for ev in rx.iter() {
+            if matches!(ev, Event::JobStarted { job: 0, .. }) {
+                break;
+            }
+        }
+        let high = PlannedJob {
+            id: 1,
+            pack: Pack::new(vec![spec("parity", 8, 1, 2e-3).with_id(2)]),
+            d,
+            mode: ExecMode::Packed,
+        };
+        s.submit_planned_at(high, 5).unwrap();
+        s.drain().unwrap()
+    };
+    let pick = |r: &plora::session::SessionReport, id: usize| {
+        r.outcomes
+            .iter()
+            .flat_map(|oc| oc.report.adapters.clone())
+            .find(|a| a.config.id == id)
+            .unwrap()
+    };
+    let base = run_at(1);
+    assert!(base.preemptions() >= 1, "the low-priority pack must be evicted");
+    for d in [2usize, 4] {
+        let got = run_at(d);
+        assert!(got.preemptions() >= 1, "preemption must fire at d={d}");
+        for id in 0..3usize {
+            let (a, b) = (pick(&base, id), pick(&got, id));
+            assert_eq!(a.final_loss, b.final_loss, "adapter {id} final_loss diverged at d={d}");
+            assert_eq!(a.eval_loss, b.eval_loss, "adapter {id} eval_loss diverged at d={d}");
+            assert_eq!(a.eval_acc, b.eval_acc, "adapter {id} eval_acc diverged at d={d}");
+            assert_eq!(a.steps, b.steps);
+        }
+    }
+}
+
+/// Device-retarget property (split): a queued d=2 job **splits into two
+/// d=1 hosts** — each of its adapters joins a different running d=1 pack
+/// at that pack's completion boundary (cross-`d` admission) — with
+/// results bitwise equal to the solo path, and the absorbed job retiring
+/// with a zero-adapter `JobFinished`.
+#[test]
+fn queued_d2_job_splits_across_two_d1_hosts() {
+    let rt = runtime();
+    let o = opts(32); // bs1 -> 32 steps, bs2 -> 16
+    let mut s = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 2), "nano");
+    s.options = o.clone();
+    s.set_elastic(true);
+    // Two d=1 hosts occupy both devices; each has a bs2 member leaving at
+    // step 16 but room for only ONE joiner (nano's bs2 bucket tops out at
+    // n=2) — so the queued d=2 job must split across them.
+    for (id0, t0, t1) in [(0usize, "modadd", "parity"), (2, "modadd", "parity")] {
+        let host = PlannedJob {
+            id: id0 / 2,
+            pack: Pack::new(vec![
+                spec(t0, 8, 1, 2e-3).with_id(id0),
+                spec(t1, 8, 2, 2e-3).with_id(id0 + 1),
+            ]),
+            d: 1,
+            mode: ExecMode::Packed,
+        };
+        s.submit_planned(host).unwrap();
+    }
+    let queued = PlannedJob {
+        id: 2,
+        pack: Pack::new(vec![
+            spec("copy", 8, 2, 2e-3).with_id(4),
+            spec("needle", 8, 2, 2e-3).with_id(5),
+        ]),
+        d: 2,
+        mode: ExecMode::Packed,
+    };
+    s.submit_planned(queued).unwrap();
+    let report = s.drain().unwrap();
+
+    assert_eq!(report.admissions(), 2, "both adapters of the d=2 job must be absorbed");
+    let hosts: std::collections::BTreeSet<usize> = report
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::AdapterAdmitted { job, from_job: 2, .. } => Some(*job),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(hosts.len(), 2, "the d=2 job must split across two distinct d=1 hosts");
+    assert!(report
+        .events
+        .iter()
+        .any(|e| matches!(e, Event::JobFinished { job: 2, adapters: 0, .. })));
+    assert_eq!(report.total_adapters(), 6);
+    // Splitting never perturbs the math: every adapter equals its solo run.
+    for (id, task, batch) in [(4usize, "copy", 2usize), (5, "needle", 2)] {
+        let solo_cfg =
+            LoraConfig { id, lr: 2e-3, batch, rank: 8, alpha_ratio: 1.0, task: task.into() };
+        let solo = run_pack(&rt, "nano", &[solo_cfg], &o).unwrap();
+        let sa = &solo.adapters[0];
+        let p = report
+            .outcomes
+            .iter()
+            .flat_map(|oc| &oc.report.adapters)
+            .find(|a| a.config.id == id)
+            .unwrap();
+        assert_eq!(sa.final_loss, p.final_loss, "{task}: split final_loss diverged");
+        assert_eq!(sa.eval_loss, p.eval_loss, "{task}: split eval_loss diverged");
+        assert_eq!(sa.eval_acc, p.eval_acc, "{task}: split eval_acc diverged");
+    }
+    assert_eq!(s.available(), 2);
+}
+
+/// Device-retarget property (regrow): a running d=1 pack on the `tiny`
+/// model grows onto the pool's free device at its first completion
+/// boundary (`DeviceRetarget` event, shard set rebuilt at d=2) — and the
+/// trajectory is bitwise identical to the run that never grew.
+#[test]
+fn running_pack_grows_onto_freed_devices_bit_identically() {
+    let rt = runtime();
+    let o = opts(32); // bs1 -> 32 steps, bs4 -> 8 (tiny has bs-4 buckets)
+    let run = |gpus: usize, elastic: bool| {
+        let mut s =
+            Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, gpus), "tiny");
+        s.options = o.clone();
+        s.set_elastic(elastic);
+        // Three adapters: the bs4 member leaves at step 8; the two bs1
+        // survivors re-bucket to (2, 8, 1) — with a free device and a
+        // modeled speedup, the survivors' phase grows to d=2.
+        s.submit(JobSpec::new(vec![
+            spec("modadd", 8, 1, 2e-3),
+            spec("copy", 8, 1, 2e-3),
+            spec("parity", 8, 4, 2e-3),
+        ]))
+        .unwrap();
+        s.drain().unwrap()
+    };
+    let plain = run(1, false);
+    let grown = run(2, true);
+    assert!(
+        grown.device_retargets() >= 1,
+        "the surviving pack must grow onto the free device"
+    );
+    let (from, to) = grown
+        .events
+        .iter()
+        .find_map(|e| match e {
+            Event::DeviceRetarget { from, to, .. } => Some((*from, *to)),
+            _ => None,
+        })
+        .unwrap();
+    assert_eq!((from, to), (1, 2));
+    assert!(grown.device_switch_cost >= 0.0);
+    // Growth is execution-layout only: bitwise-identical results.
+    for id in 0..3usize {
+        let pick = |r: &plora::session::SessionReport| {
+            r.outcomes
+                .iter()
+                .flat_map(|oc| oc.report.adapters.clone())
+                .find(|a| a.config.id == id)
+                .unwrap()
+        };
+        let (a, b) = (pick(&plain), pick(&grown));
+        assert_eq!(a.first_loss, b.first_loss, "adapter {id} first_loss diverged on regrow");
+        assert_eq!(a.final_loss, b.final_loss, "adapter {id} final_loss diverged on regrow");
+        assert_eq!(a.eval_loss, b.eval_loss, "adapter {id} eval_loss diverged on regrow");
+        assert_eq!(a.eval_acc, b.eval_acc, "adapter {id} eval_acc diverged on regrow");
+    }
+}
+
 /// The skewed-arrival acceptance scenario (mirrors `benches/session.rs`):
 /// elastic admission + retargeting strictly beats the FIFO/no-rebucket
 /// baseline — on the deterministic padded-row work proxy *and* on the
