@@ -9,7 +9,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test bench artifacts clean-artifacts
+.PHONY: build test bench bench-snapshot artifacts clean-artifacts
 
 build:
 	cargo build --release
@@ -19,6 +19,19 @@ test:
 
 bench:
 	cargo bench --bench planner
+
+# Refresh the committed perf-budget snapshots (bench/history/): run both
+# perf benches to a scratch dir, print the budget checks, and install the
+# new numbers as each snapshot's `record`. Review the diff before
+# committing — the next perf-budget run gates against it.
+bench-snapshot: build
+	mkdir -p target/bench-out
+	cargo bench --bench session -- --out target/bench-out/BENCH_session.json
+	cargo bench --bench train_step -- --out target/bench-out/BENCH_train_step.json
+	./target/release/plora perf-budget --current target/bench-out/BENCH_session.json \
+		--baseline bench/history/BENCH_session.json --warn-only --update-baseline
+	./target/release/plora perf-budget --current target/bench-out/BENCH_train_step.json \
+		--baseline bench/history/BENCH_train_step.json --warn-only --update-baseline
 
 # L2 AOT compile path (optional; python + jax required). Produces
 # $(ARTIFACTS)/manifest.json, weights_<model>.bin and *.hlo.txt — the

@@ -6,11 +6,12 @@
 //! dp-efficiency figure, and the device-count-aware planner against a
 //! fixed-d baseline on the skewed scenario.
 //!
-//! Emits `target/BENCH_session.json` (makespans + throughput + event
-//! counts: rebuckets, admissions, preemptions, the elastic-vs-FIFO
-//! makespan ratio and the d-aware-vs-fixed-d ratio CI enforces) so the
-//! repo's perf trajectory is recorded run over run, and appends to the
-//! shared `target/plora-bench.jsonl` like every bench.
+//! Emits `BENCH_session.json` (makespans + throughput + event counts:
+//! rebuckets, admissions, preemptions, the elastic-vs-FIFO makespan ratio
+//! and the d-aware-vs-fixed-d ratio CI enforces) to `target/` by default —
+//! `--out <path>` or `PLORA_BENCH_OUT=<dir>` redirect it for the
+//! perf-budget harness (`bench/history/`) — and appends to the shared
+//! `target/plora-bench.jsonl` like every bench.
 //!
 //! Run: `cargo bench --bench session`
 
@@ -199,6 +200,7 @@ fn main() -> anyhow::Result<()> {
         .map(|a| a.config.rank)
         .sum();
     let rec = Json::obj(vec![
+        ("schema", Json::num(plora::trace::perf::SNAPSHOT_SCHEMA as f64)),
         ("bench", Json::str("session")),
         ("jobs", Json::num(report.outcomes.len() as f64)),
         ("adapters", Json::num(report.total_adapters() as f64)),
@@ -255,11 +257,13 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut out = String::new();
     rec.write(&mut out);
-    // Anchor on the crate root: cargo runs benches with CWD = package root,
-    // but the workspace target dir lives one level up.
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
-    std::fs::create_dir_all(&dir)?;
-    std::fs::write(dir.join("BENCH_session.json"), &out)?;
+    // Default path anchors on the crate root (cargo runs benches with
+    // CWD = package root); `--out`/`PLORA_BENCH_OUT` override it.
+    let path = plora::bench::out_path(env!("CARGO_MANIFEST_DIR"), "BENCH_session.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, &out)?;
     println!(
         "\nsession queue8: makespan {:.2}s (no-rebucket {:.2}s), {} rebuckets, \
          padded rows {} -> {}",
@@ -292,6 +296,6 @@ fn main() -> anyhow::Result<()> {
         "d-aware planner (d = {aware_ds:?}): {:.2}s vs fixed d=1 {:.2}s",
         d_aware.makespan, d_fixed.makespan,
     );
-    println!("wrote rust/target/BENCH_session.json");
+    println!("wrote {}", path.display());
     Ok(())
 }

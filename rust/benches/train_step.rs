@@ -11,9 +11,11 @@
 //!
 //! All three produce bit-identical trajectories (pinned by
 //! `tests/properties.rs` and the reference-backend invariance test); only
-//! the wall clock moves. Emits `target/BENCH_train_step.json` (speedups +
-//! tokens/sec) so CI records the kernel-path perf trajectory, and appends
-//! to the shared `target/plora-bench.jsonl` like every bench.
+//! the wall clock moves. Emits `BENCH_train_step.json` (speedups +
+//! tokens/sec) to `target/` by default — `--out <path>` or
+//! `PLORA_BENCH_OUT=<dir>` redirect it for the perf-budget harness
+//! (`bench/history/`) — and appends to the shared
+//! `target/plora-bench.jsonl` like every bench.
 //!
 //! Run: `cargo bench --bench train_step`
 
@@ -108,6 +110,9 @@ fn main() -> anyhow::Result<()> {
     // acceptance geometry; nano covers the many-small-steps regime.
     let geoms = [("nano", 2usize, 8usize, 1usize), ("small", 1, 32, 1)];
     let mut rows = vec![];
+    // Flat `{model}_n{n}_*` copies of the per-geom metrics ride at the
+    // top level so the perf-budget harness can gate them by name.
+    let mut flat = std::collections::BTreeMap::new();
     for (model, n, r, bs) in geoms {
         let mi = rt.manifest.model(model)?.clone();
         let tokens_per_step = (n * bs * mi.seq) as f64;
@@ -116,6 +121,16 @@ fn main() -> anyhow::Result<()> {
             secs[vi] = measure(&mut bench, &rt, model, n, r, bs, *var)?;
         }
         let (naive, tiled, thr) = (secs[0], secs[1], secs[2]);
+        let metrics = [
+            ("step_naive_s", naive),
+            ("step_tiled_s", tiled),
+            ("step_threads4_s", thr),
+            ("speedup_tiled_x", naive / tiled.max(1e-12)),
+            ("speedup_threads4_x", naive / thr.max(1e-12)),
+        ];
+        for (k, v) in metrics {
+            flat.insert(format!("{model}_n{n}_{k}"), Json::num(v));
+        }
         rows.push(Json::obj(vec![
             ("model", Json::str(model)),
             ("n", Json::num(n as f64)),
@@ -139,14 +154,22 @@ fn main() -> anyhow::Result<()> {
     }
     bench.finish()?;
 
-    let rec = Json::obj(vec![("bench", Json::str("train_step")), ("geoms", Json::arr(rows))]);
+    flat.insert(
+        "schema".to_string(),
+        Json::num(plora::trace::perf::SNAPSHOT_SCHEMA as f64),
+    );
+    flat.insert("bench".to_string(), Json::str("train_step"));
+    flat.insert("geoms".to_string(), Json::arr(rows));
+    let rec = Json::Obj(flat);
     let mut out = String::new();
     rec.write(&mut out);
-    // Anchor on the crate root: cargo runs benches with CWD = package root,
-    // but the workspace target dir lives one level up.
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
-    std::fs::create_dir_all(&dir)?;
-    std::fs::write(dir.join("BENCH_train_step.json"), &out)?;
-    println!("wrote rust/target/BENCH_train_step.json");
+    // Default path anchors on the crate root (cargo runs benches with
+    // CWD = package root); `--out`/`PLORA_BENCH_OUT` override it.
+    let path = plora::bench::out_path(env!("CARGO_MANIFEST_DIR"), "BENCH_train_step.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, &out)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

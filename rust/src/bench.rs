@@ -107,6 +107,27 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Where a bench binary should write its `BENCH_*.json` summary.
+///
+/// Resolution order: a `--out <path>` argument (reachable via
+/// `cargo bench --bench <name> -- --out <path>`), then the
+/// `PLORA_BENCH_OUT` env var as a *directory* for `name`, then the
+/// historical default `<manifest_dir>/target/<name>`. The perf-budget
+/// harness relies on the first two: CI writes to a stable path and gates
+/// it against the committed `bench/history/` snapshot.
+pub fn out_path(manifest_dir: &str, name: &str) -> std::path::PathBuf {
+    let args = crate::util::cli::Args::parse();
+    if let Some(p) = args.get("out") {
+        return std::path::PathBuf::from(p);
+    }
+    if let Ok(dir) = std::env::var("PLORA_BENCH_OUT") {
+        if !dir.is_empty() {
+            return std::path::PathBuf::from(dir).join(name);
+        }
+    }
+    std::path::Path::new(manifest_dir).join("target").join(name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

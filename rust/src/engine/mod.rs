@@ -18,7 +18,7 @@ use anyhow::Result;
 use crate::cluster::ResourceMonitor;
 use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
-use crate::session::{Policy, Session};
+use crate::session::{Policy, Session, SessionReport};
 use crate::train::TrainOptions;
 
 /// Engine run summary.
@@ -72,6 +72,17 @@ impl Engine {
     /// multiple fine-tuning jobs concurrently, as long as the hardware
     /// pool has sufficient resources" (§4).
     pub fn run(&self, model: &str, queue: &[PlannedJob]) -> Result<EngineReport> {
+        let report = self.run_session(model, queue)?;
+        Ok(EngineReport {
+            outcomes: report.outcomes,
+            makespan: report.makespan,
+            calib_fit: report.calib_fit,
+        })
+    }
+
+    /// Like [`Engine::run`] but returns the session's full report (events,
+    /// calibration detail) — what `--record` serializes into a trace.
+    pub fn run_session(&self, model: &str, queue: &[PlannedJob]) -> Result<SessionReport> {
         let mut session = Session::new(self.runtime.clone(), self.monitor.clone(), model);
         session.options = self.options.clone();
         session.checkpoints = self.checkpoints.clone();
@@ -81,12 +92,7 @@ impl Engine {
         for job in queue {
             session.submit_planned(job.clone())?;
         }
-        let report = session.drain()?;
-        Ok(EngineReport {
-            outcomes: report.outcomes,
-            makespan: report.makespan,
-            calib_fit: report.calib_fit,
-        })
+        session.drain()
     }
 }
 

@@ -38,4 +38,5 @@ pub mod planner;
 pub mod search;
 pub mod session;
 pub mod sim;
+pub mod trace;
 pub mod util;

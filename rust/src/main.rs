@@ -8,6 +8,8 @@
 //! plora train    one live packed fine-tuning job on the PJRT runtime
 //! plora sweep    live end-to-end sweep through planner + session
 //! plora serve    session with a live event-stream progress renderer
+//! plora replay   re-execute a recorded trace, assert bit-identical results
+//! plora perf-budget  gate a BENCH_*.json against a committed snapshot
 //! plora quality  quality tables (Tables 2/3/4/6 analogues)
 //! plora kernels  packed-kernel micro-benchmarks, live (Tables 7/8)
 //! plora calib    print the live cost-model fit for this machine
@@ -28,8 +30,10 @@ use plora::runtime::{HostTensor, Runtime};
 use plora::search;
 use plora::session::{Event, Policy, Session};
 use plora::sim::{SimOptions, Simulator};
+use plora::trace::{perf, Trace, TraceRecorder};
 use plora::train::{run_pack, TrainOptions};
 use plora::util::cli::Args;
+use plora::util::json::Json;
 
 const USAGE: &str = "\
 plora — efficient LoRA hyperparameter tuning (PLoRA reproduction)
@@ -41,8 +45,12 @@ USAGE: plora <subcommand> [flags]
            [--elastic] [--grow-devices]
   train    --model <tinylm> --task T [--rank R] [--lr X] [--batch B] [--steps N]
   sweep    --model <tinylm> --configs N [--gpus N] [--steps N] [--ckpt DIR]
+           [--record PATH]
   serve    --model <tinylm> [--configs N] [--gpus N] [--steps N] [--no-rebucket]
-           [--policy fifo|priority|preempt] [--elastic]
+           [--policy fifo|priority|preempt] [--elastic] [--record PATH]
+  replay   <trace.json> [--sim]
+  perf-budget  --current BENCH.json --baseline SNAPSHOT.json [--tolerance F]
+           [--warn-only] [--update-baseline]
   quality  --model <tinylm> [--steps N] [--per-task N]
   kernels  [--ns 1,2,8,32] [--geoms attn,mlp] [--iters N]
   calib    --model <tinylm> [--steps N]
@@ -62,6 +70,8 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("perf-budget") => cmd_perf_budget(&args),
         Some("quality") => cmd_quality(&args),
         Some("kernels") => cmd_kernels(&args),
         Some("calib") => cmd_calib(&args),
@@ -288,7 +298,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         engine.checkpoints = Some(CheckpointPool::new(&PathBuf::from(dir), rt.clone())?);
     }
     let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
-    let report = engine.run(&model, &queue)?;
+    let report = engine.run_session(&model, &queue)?;
+    if let Some(path) = args.get("record") {
+        let mut rec = TraceRecorder::new(
+            &model,
+            gpus,
+            engine.policy,
+            engine.elastic,
+            engine.rebucket,
+            &engine.options,
+        );
+        for job in &queue {
+            rec.submit(job, 0);
+        }
+        rec.finish(&report).save(&PathBuf::from(path))?;
+        println!("recorded trace -> {path}");
+    }
 
     let mut t = Table::new(
         &format!("Live sweep — {} configs on {model} ({} jobs)", n, report.outcomes.len()),
@@ -363,8 +388,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &jobs,
         policy != Policy::Fifo,
     );
+    let mut recorder = args.get("record").map(|_| TraceRecorder::for_session(&session));
     let mut pending = 0usize;
     for (j, prio) in jobs.into_iter().zip(prios) {
+        if let Some(rec) = recorder.as_mut() {
+            rec.submit(&j, prio);
+        }
         session.submit_planned_at(j, prio)?;
         pending += 1;
     }
@@ -376,6 +405,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let report = session.drain()?;
+    if let (Some(rec), Some(path)) = (recorder.take(), args.get("record")) {
+        rec.finish(&report).save(&PathBuf::from(path))?;
+        println!("recorded trace -> {path}");
+    }
     let (a, b, c) = report.calib_fit;
     println!(
         "\ndone: makespan {}  jobs {}  adapters {}  rebuckets {}  admissions {}  \
@@ -392,6 +425,108 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.device_switch_cost,
     );
     Ok(())
+}
+
+/// `plora replay <trace.json>`: re-execute a recorded session and assert
+/// the result is bit-identical to the recording; `--sim` instead rebuilds
+/// the timeline through the simulator's cost model (no training).
+fn cmd_replay(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("trace"))
+        .ok_or_else(|| anyhow!("usage: plora replay <trace.json> [--sim]"))?
+        .to_string();
+    let trace = Trace::load(&PathBuf::from(&path))?;
+    println!(
+        "trace: {} jobs / {} adapters of {} on {} devices ({:?}{}{}) — recorded makespan {}",
+        trace.jobs.len(),
+        trace.total_adapters(),
+        trace.model,
+        trace.gpus,
+        trace.policy,
+        if trace.elastic { ", elastic" } else { "" },
+        if trace.rebucket { "" } else { ", no-rebucket" },
+        fmt_dur(trace.makespan),
+    );
+    let rt = runtime()?;
+    if args.flag("sim") {
+        let cm = search::live_cost_model(&rt, &trace.model)?;
+        let res = plora::trace::replay_timing(&cm, &trace);
+        for ev in &res.log {
+            render_event(ev);
+        }
+        println!(
+            "\nmodeled makespan {} vs recorded {} (events {}, utilization {:.0}%)",
+            fmt_dur(res.makespan),
+            fmt_dur(trace.makespan),
+            res.events,
+            res.utilization() * 100.0,
+        );
+        return Ok(());
+    }
+    let out = plora::trace::replay(rt, &trace)?;
+    if out.matches() {
+        println!(
+            "replay OK: {} adapters bit-identical to the recording (fingerprint {:016x}), \
+             replayed makespan {}",
+            out.digest.adapters.len(),
+            out.digest.fingerprint(),
+            fmt_dur(out.report.makespan),
+        );
+        Ok(())
+    } else {
+        eprintln!("{}", out.diff);
+        bail!("replay diverged from the recording — determinism violation (see diff above)");
+    }
+}
+
+/// `plora perf-budget`: evaluate a bench output against a committed
+/// `bench/history/` snapshot. Exits non-zero on regression unless
+/// `--warn-only` or `PLORA_PERF_OVERRIDE=1` (CI sets the latter from the
+/// 'perf-budget-override' PR label).
+fn cmd_perf_budget(args: &Args) -> Result<()> {
+    let read = |flag: &str| -> Result<(String, Json)> {
+        let p = args
+            .get(flag)
+            .ok_or_else(|| anyhow!("--{flag} <json> is required"))?
+            .to_string();
+        let text =
+            std::fs::read_to_string(&p).map_err(|e| anyhow!("read {p}: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{p}: {e}"))?;
+        Ok((p, v))
+    };
+    let (_, current) = read("current")?;
+    let (base_path, baseline) = read("baseline")?;
+    let tolerance = args.f64("tolerance", 0.25)?;
+    let checks = perf::perf_budget(&current, &baseline, tolerance)?;
+    for c in &checks {
+        println!("{}", c.render());
+    }
+    if args.flag("update-baseline") {
+        let mut out = String::new();
+        perf::update_snapshot(&baseline, &current).write(&mut out);
+        out.push('\n');
+        std::fs::write(&base_path, out).map_err(|e| anyhow!("write {base_path}: {e}"))?;
+        println!("baseline record updated -> {base_path}");
+    }
+    let failed = checks.iter().filter(|c| !c.ok).count();
+    if failed == 0 {
+        println!("perf budget OK ({} checks, tolerance {tolerance})", checks.len());
+        return Ok(());
+    }
+    let overridden = args.flag("warn-only")
+        || std::env::var("PLORA_PERF_OVERRIDE").map(|v| v == "1").unwrap_or(false);
+    if overridden {
+        println!("{failed} perf check(s) over budget — overridden, not failing");
+        return Ok(());
+    }
+    bail!(
+        "{failed} perf check(s) over budget; if the regression is intentional, apply the \
+         'perf-budget-override' PR label (or rerun with --warn-only) and refresh the \
+         snapshot with --update-baseline"
+    );
 }
 
 /// One line per session event, prefixed with the session timestamp.

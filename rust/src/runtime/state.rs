@@ -14,6 +14,7 @@ use crate::runtime::backend::Scratch;
 use crate::runtime::manifest::ModelInfo;
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{Executable, LORA_ORDER};
+use crate::util::hash::Fnv64;
 use crate::util::rng::Rng;
 
 /// `(d_in, d_out)` of one LoRA-able projection.
@@ -51,6 +52,26 @@ pub struct MemberState {
     pub v: Vec<HostTensor>,
     /// The adapter's own AdamW step counter.
     pub t: f32,
+}
+
+impl MemberState {
+    /// FNV-1a fingerprint of the final LoRA parameters: rank, then every
+    /// `LORA_ORDER` tensor's f32 bit patterns in storage order. Moments
+    /// and the step counter are excluded — two trainings are "the same"
+    /// when they produce the same weights. Bit patterns (not values) make
+    /// the hash exact, NaN included, and platform-stable.
+    pub fn param_hash(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_usize(self.rank);
+        for t in &self.lora {
+            if let Ok(xs) = t.as_f32() {
+                for &x in xs {
+                    h.write_u32(x.to_bits());
+                }
+            }
+        }
+        h.finish()
+    }
 }
 
 /// One joiner entering a bucket via [`TrainState::repack_merge`].

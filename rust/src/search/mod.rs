@@ -274,6 +274,7 @@ mod tests {
             base_acc: 0.2,
             eval_loss: 0.5,
             eval_acc: acc,
+            param_hash: 0,
             curve: vec![],
         }
     }

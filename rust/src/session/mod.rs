@@ -709,6 +709,11 @@ impl Session {
         self.shared.monitor.available()
     }
 
+    /// Total devices in the session's pool.
+    pub fn devices(&self) -> usize {
+        self.shared.monitor.total()
+    }
+
     /// The queue/preemption policy (default [`Policy::Fifo`]).
     pub fn policy(&self) -> Policy {
         self.shared.sched.lock().unwrap().policy

@@ -1,0 +1,1108 @@
+//! Deterministic session **record/replay** (DESIGN.md §12).
+//!
+//! Bit-identical adapter trajectories are the repo's superpower: every
+//! adapter trains the same whether it runs solo, packed, admitted mid-job,
+//! preempted-and-resumed, or sharded across any device count. This module
+//! makes that invariant a product feature:
+//!
+//! - [`TraceRecorder`] captures a session's full provenance — the settings
+//!   snapshot (model, pool size, policy, elastic/rebucket knobs, training
+//!   options, device-env knobs), every submitted job (ids, priorities,
+//!   `d`, exec mode, adapter configs), the ordered [`Event`] stream with
+//!   wall-clock timestamps, and a [`SessionDigest`] of the final
+//!   [`SessionReport`] — into a versioned on-disk [`Trace`]
+//!   (`plora sweep/serve --record <path>`).
+//! - [`replay`] re-executes a loaded trace through a **real** [`Session`]
+//!   and compares digests bit-for-bit (`plora replay <path>`).
+//! - [`replay_timing`] rebuilds the *timeline* only, through the
+//!   simulator's cost model — offline scheduler debugging without paying
+//!   for training (`plora replay <path> --sim`).
+//!
+//! **What must match and what may not.** Wall-clock timings, event
+//! interleavings and job-hosting structure (which running pack absorbs a
+//! queued adapter, whether a preemption actually fires) race under
+//! multi-device elastic execution and are *recorded provenance*, not
+//! replay obligations. The deterministic contract is per-adapter: steps,
+//! every loss/accuracy, the loss curve, and the final LoRA parameters.
+//! [`SessionDigest`] therefore keys by adapter id and stores f32 **bit
+//! patterns** (plus an FNV-1a hash of the final params computed by the
+//! driver at each adapter's finish boundary), so "equal" means equal to
+//! the last bit, NaNs included.
+
+pub mod perf;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::ResourceMonitor;
+use crate::config::{pool, LoraConfig};
+use crate::costmodel::{CostModel, ExecMode, Pack, TrainBudget};
+use crate::planner::PlannedJob;
+use crate::runtime::Runtime;
+use crate::session::{Event, Policy, Session, SessionReport};
+use crate::sim::{SimOptions, SimResult, Simulator};
+use crate::train::TrainOptions;
+use crate::util::hash::Fnv64;
+use crate::util::json::Json;
+
+/// On-disk trace schema version. Bump on any incompatible layout change;
+/// [`Trace::load`] refuses files from a different version with a clear
+/// error instead of misreading them.
+pub const TRACE_SCHEMA: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Digest
+// ---------------------------------------------------------------------------
+
+/// The deterministic projection of one adapter's outcome: identity fields
+/// plus every trajectory quantity as an exact bit pattern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdapterDigest {
+    pub task: String,
+    pub rank: usize,
+    pub batch: usize,
+    pub lr_bits: u64,
+    pub steps: usize,
+    pub first_loss: u32,
+    pub final_loss: u32,
+    pub base_loss: u32,
+    pub base_acc: u32,
+    pub eval_loss: u32,
+    pub eval_acc: u32,
+    /// FNV-1a over the final LoRA parameters at true rank
+    /// ([`crate::runtime::MemberState::param_hash`]).
+    pub param_hash: u64,
+    pub curve: Vec<(usize, u32)>,
+}
+
+/// Adapter-id-keyed digest of a [`SessionReport`] — the bitwise equality
+/// the replayer asserts. Identical regardless of which job hosted each
+/// adapter or in which order jobs finished.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SessionDigest {
+    pub adapters: BTreeMap<usize, AdapterDigest>,
+}
+
+impl SessionDigest {
+    pub fn of(report: &SessionReport) -> SessionDigest {
+        let mut adapters = BTreeMap::new();
+        for o in &report.outcomes {
+            for a in &o.report.adapters {
+                adapters.insert(
+                    a.config.id,
+                    AdapterDigest {
+                        task: a.config.task.clone(),
+                        rank: a.config.rank,
+                        batch: a.config.batch,
+                        lr_bits: a.config.lr.to_bits(),
+                        steps: a.steps,
+                        first_loss: a.first_loss.to_bits(),
+                        final_loss: a.final_loss.to_bits(),
+                        base_loss: a.base_loss.to_bits(),
+                        base_acc: a.base_acc.to_bits(),
+                        eval_loss: a.eval_loss.to_bits(),
+                        eval_acc: a.eval_acc.to_bits(),
+                        param_hash: a.param_hash,
+                        curve: a.curve.iter().map(|&(s, l)| (s, l.to_bits())).collect(),
+                    },
+                );
+            }
+        }
+        SessionDigest { adapters }
+    }
+
+    /// Stable 64-bit fingerprint over every field, in adapter-id order.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_usize(self.adapters.len());
+        for (id, a) in &self.adapters {
+            h.write_usize(*id);
+            h.write_str(&a.task);
+            h.write_usize(a.rank);
+            h.write_usize(a.batch);
+            h.write_u64(a.lr_bits);
+            h.write_usize(a.steps);
+            for bits in [a.first_loss, a.final_loss, a.base_loss, a.base_acc, a.eval_loss] {
+                h.write_u32(bits);
+            }
+            h.write_u32(a.eval_acc);
+            h.write_u64(a.param_hash);
+            h.write_usize(a.curve.len());
+            for &(s, l) in &a.curve {
+                h.write_usize(s);
+                h.write_u32(l);
+            }
+        }
+        h.finish()
+    }
+
+    /// Human-readable field-level difference report; empty when the two
+    /// digests are bit-identical.
+    pub fn diff(&self, other: &SessionDigest) -> String {
+        let mut lines: Vec<String> = vec![];
+        for (id, a) in &self.adapters {
+            match other.adapters.get(id) {
+                Some(b) => diff_adapter(*id, a, b, &mut lines),
+                None => lines.push(format!(
+                    "adapter {id} ({}): present in recording, missing from replay",
+                    a.task
+                )),
+            }
+        }
+        for (id, b) in &other.adapters {
+            if !self.adapters.contains_key(id) {
+                lines.push(format!(
+                    "adapter {id} ({}): present in replay, missing from recording",
+                    b.task
+                ));
+            }
+        }
+        const CAP: usize = 24;
+        if lines.len() > CAP {
+            let extra = lines.len() - CAP;
+            lines.truncate(CAP);
+            lines.push(format!("... and {extra} more difference(s)"));
+        }
+        lines.join("\n")
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut adapters = BTreeMap::new();
+        for (id, a) in &self.adapters {
+            adapters.insert(id.to_string(), adapter_to_json(a));
+        }
+        Json::obj(vec![
+            ("fingerprint", Json::str(hex64(self.fingerprint()))),
+            ("adapters", Json::Obj(adapters)),
+        ])
+    }
+
+    /// Parse and re-validate the stored fingerprint (catches hand-edited
+    /// or truncated trace files before a replay burns compute on them).
+    pub fn from_json(v: &Json) -> Result<SessionDigest> {
+        let mut adapters = BTreeMap::new();
+        let obj = v
+            .field("adapters")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("digest 'adapters': expected object"))?;
+        for (id, a) in obj {
+            let id: usize =
+                id.parse().map_err(|_| anyhow!("digest adapter key '{id}': not an id"))?;
+            adapters.insert(id, adapter_from_json(a)?);
+        }
+        let digest = SessionDigest { adapters };
+        let stored = jhex(v, "fingerprint")?;
+        if stored != digest.fingerprint() {
+            bail!(
+                "digest fingerprint mismatch: file says {:016x}, contents hash to {:016x} \
+                 (corrupted or hand-edited trace)",
+                stored,
+                digest.fingerprint()
+            );
+        }
+        Ok(digest)
+    }
+}
+
+fn diff_adapter(id: usize, a: &AdapterDigest, b: &AdapterDigest, lines: &mut Vec<String>) {
+    if a.task != b.task || a.rank != b.rank || a.batch != b.batch || a.lr_bits != b.lr_bits {
+        lines.push(format!(
+            "adapter {id}: config differs — {}/r{}/bs{}/lr{} vs {}/r{}/bs{}/lr{}",
+            a.task,
+            a.rank,
+            a.batch,
+            f64::from_bits(a.lr_bits),
+            b.task,
+            b.rank,
+            b.batch,
+            f64::from_bits(b.lr_bits),
+        ));
+    }
+    if a.steps != b.steps {
+        lines.push(format!("adapter {id}: steps {} vs {}", a.steps, b.steps));
+    }
+    let fields = [
+        ("first_loss", a.first_loss, b.first_loss),
+        ("final_loss", a.final_loss, b.final_loss),
+        ("base_loss", a.base_loss, b.base_loss),
+        ("base_acc", a.base_acc, b.base_acc),
+        ("eval_loss", a.eval_loss, b.eval_loss),
+        ("eval_acc", a.eval_acc, b.eval_acc),
+    ];
+    for (what, x, y) in fields {
+        if x != y {
+            lines.push(format!(
+                "adapter {id}: {what} {:.6} (0x{x:08x}) vs {:.6} (0x{y:08x})",
+                f32::from_bits(x),
+                f32::from_bits(y),
+            ));
+        }
+    }
+    if a.param_hash != b.param_hash {
+        lines.push(format!(
+            "adapter {id}: param_hash {:016x} vs {:016x}",
+            a.param_hash, b.param_hash
+        ));
+    }
+    if a.curve != b.curve {
+        let i = a
+            .curve
+            .iter()
+            .zip(&b.curve)
+            .position(|(x, y)| x != y)
+            .unwrap_or(a.curve.len().min(b.curve.len()));
+        lines.push(format!(
+            "adapter {id}: loss curve diverges at sample {i} (len {} vs {})",
+            a.curve.len(),
+            b.curve.len()
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace
+// ---------------------------------------------------------------------------
+
+/// One submitted job, as the user submitted it (continuations re-queued by
+/// preemption are the session's own business and are *not* recorded — a
+/// replay re-derives them).
+#[derive(Debug, Clone)]
+pub struct TraceJob {
+    pub id: usize,
+    pub d: usize,
+    pub mode: ExecMode,
+    pub priority: i32,
+    pub configs: Vec<LoraConfig>,
+}
+
+/// Device-environment knobs in effect at record time. Provenance only:
+/// trajectories are bitwise invariant to all three, so a replay under a
+/// different environment still matches — but a *timing* comparison should
+/// know what produced the recorded wall clocks.
+#[derive(Debug, Clone)]
+pub struct TraceEnv {
+    pub devices: usize,
+    pub threads: usize,
+    pub gemm: String,
+}
+
+impl TraceEnv {
+    pub fn capture() -> TraceEnv {
+        let num = |name: &str, default: usize| {
+            std::env::var(name)
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&v| v >= 1)
+                .unwrap_or(default)
+        };
+        TraceEnv {
+            devices: num("PLORA_DEVICES", 1),
+            threads: num("PLORA_THREADS", 1),
+            gemm: std::env::var("PLORA_GEMM").unwrap_or_else(|_| "tiled".into()),
+        }
+    }
+}
+
+/// A recorded session: settings snapshot, submitted jobs, the ordered
+/// event stream, and the deterministic digest of the final report.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub schema: u64,
+    pub model: String,
+    /// Device-pool size of the recording session.
+    pub gpus: usize,
+    pub policy: Policy,
+    pub elastic: bool,
+    pub rebucket: bool,
+    pub options: TrainOptions,
+    pub env: TraceEnv,
+    pub jobs: Vec<TraceJob>,
+    /// The full event log with wall-clock timestamps (seconds since
+    /// session start) — recorded provenance, not a replay obligation.
+    pub events: Vec<Event>,
+    pub makespan: f64,
+    pub digest: SessionDigest,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plora_trace", Json::num(self.schema as f64)),
+            ("model", Json::str(self.model.as_str())),
+            ("gpus", Json::num(self.gpus as f64)),
+            ("policy", Json::str(policy_name(self.policy))),
+            ("elastic", Json::Bool(self.elastic)),
+            ("rebucket", Json::Bool(self.rebucket)),
+            ("options", options_to_json(&self.options)),
+            (
+                "env",
+                Json::obj(vec![
+                    ("devices", Json::num(self.env.devices as f64)),
+                    ("threads", Json::num(self.env.threads as f64)),
+                    ("gemm", Json::str(self.env.gemm.as_str())),
+                ]),
+            ),
+            ("jobs", Json::arr(self.jobs.iter().map(job_to_json))),
+            ("events", Json::arr(self.events.iter().map(event_to_json))),
+            ("makespan", jnum(self.makespan)),
+            ("digest", self.digest.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Trace> {
+        let schema = jhexnum(v, "plora_trace")?;
+        if schema != TRACE_SCHEMA {
+            bail!("unsupported trace schema v{schema} (this build reads v{TRACE_SCHEMA})");
+        }
+        let policy = js(v, "policy")?;
+        let policy = Policy::parse(&policy)
+            .ok_or_else(|| anyhow!("trace policy '{policy}': unknown"))?;
+        let env = v.field("env")?;
+        let jobs = jarr(v, "jobs")?.iter().map(job_from_json).collect::<Result<Vec<_>>>()?;
+        let events =
+            jarr(v, "events")?.iter().map(event_from_json).collect::<Result<Vec<_>>>()?;
+        Ok(Trace {
+            schema,
+            model: js(v, "model")?,
+            gpus: ju(v, "gpus")?,
+            policy,
+            elastic: jb(v, "elastic")?,
+            rebucket: jb(v, "rebucket")?,
+            options: options_from_json(v.field("options")?)?,
+            env: TraceEnv {
+                devices: ju(env, "devices")?,
+                threads: ju(env, "threads")?,
+                gemm: js(env, "gemm")?,
+            },
+            jobs,
+            events,
+            makespan: jf(v, "makespan")?,
+            digest: SessionDigest::from_json(v.field("digest")?)?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir {}", dir.display()))?;
+            }
+        }
+        let mut out = String::new();
+        self.to_json().write(&mut out);
+        out.push('\n');
+        std::fs::write(path, out).with_context(|| format!("write {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Trace::from_json(&v).with_context(|| format!("parse trace {}", path.display()))
+    }
+
+    /// Total adapters across recorded submissions.
+    pub fn total_adapters(&self) -> usize {
+        self.jobs.iter().map(|j| j.configs.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------------
+
+/// Accumulates a [`Trace`] alongside a running session. Create it once the
+/// session's knobs are set, call [`TraceRecorder::submit`] for every job
+/// handed to the session, and [`TraceRecorder::finish`] with the drained
+/// report.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    trace: Trace,
+}
+
+impl TraceRecorder {
+    pub fn new(
+        model: &str,
+        gpus: usize,
+        policy: Policy,
+        elastic: bool,
+        rebucket: bool,
+        options: &TrainOptions,
+    ) -> TraceRecorder {
+        TraceRecorder {
+            trace: Trace {
+                schema: TRACE_SCHEMA,
+                model: model.to_string(),
+                gpus,
+                policy,
+                elastic,
+                rebucket,
+                options: options.clone(),
+                env: TraceEnv::capture(),
+                jobs: vec![],
+                events: vec![],
+                makespan: 0.0,
+                digest: SessionDigest::default(),
+            },
+        }
+    }
+
+    /// Snapshot a live session's settings (call after `set_policy` /
+    /// `set_elastic` / options assignment).
+    pub fn for_session(session: &Session) -> TraceRecorder {
+        TraceRecorder::new(
+            session.model(),
+            session.devices(),
+            session.policy(),
+            session.elastic(),
+            session.rebucket,
+            &session.options,
+        )
+    }
+
+    pub fn submit(&mut self, job: &PlannedJob, priority: i32) {
+        self.trace.jobs.push(TraceJob {
+            id: job.id,
+            d: job.d,
+            mode: job.mode,
+            priority,
+            configs: job.pack.configs.clone(),
+        });
+    }
+
+    pub fn finish(mut self, report: &SessionReport) -> Trace {
+        self.trace.events = report.events.clone();
+        self.trace.makespan = report.makespan;
+        self.trace.digest = SessionDigest::of(report);
+        self.trace
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay
+// ---------------------------------------------------------------------------
+
+/// What a live replay produced, next to what the recording promised.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    pub report: SessionReport,
+    pub digest: SessionDigest,
+    pub recorded: SessionDigest,
+    /// Field-level mismatch report; empty when bit-identical.
+    pub diff: String,
+}
+
+impl ReplayOutcome {
+    pub fn matches(&self) -> bool {
+        self.diff.is_empty()
+    }
+}
+
+/// Re-execute a trace through a real [`Session`] and compare digests.
+///
+/// The replay session runs without a checkpoint pool: preemption resume
+/// then round-trips in memory instead of through disk, which the session
+/// suite pins as bit-identical. Timings, event interleavings and
+/// admission hosting may differ from the recording; the digest may not.
+pub fn replay(rt: Arc<Runtime>, trace: &Trace) -> Result<ReplayOutcome> {
+    let monitor = ResourceMonitor::new(&pool::CPU_SIM, trace.gpus);
+    let mut session = Session::new(rt, monitor, &trace.model);
+    session.options = trace.options.clone();
+    session.rebucket = trace.rebucket;
+    session.set_policy(trace.policy);
+    session.set_elastic(trace.elastic);
+    for j in &trace.jobs {
+        let job = PlannedJob {
+            id: j.id,
+            pack: Pack::new(j.configs.clone()),
+            d: j.d,
+            mode: j.mode,
+        };
+        session.submit_planned_at(job, j.priority)?;
+    }
+    let report = session.drain()?;
+    let digest = SessionDigest::of(&report);
+    let diff = trace.digest.diff(&digest);
+    Ok(ReplayOutcome { report, digest, recorded: trace.digest.clone(), diff })
+}
+
+/// Timing-only replay: rebuild the schedule timeline through the
+/// simulator's cost model (same queue, priorities, policy and elastic
+/// setting) without training anything. The returned
+/// [`SimResult::log`] speaks the session's [`Event`] vocabulary, so a
+/// recorded timeline and its modeled reconstruction are directly
+/// comparable line by line.
+pub fn replay_timing(cm: &CostModel, trace: &Trace) -> SimResult {
+    let sim = Simulator { cm: cm.clone(), budget: trace.options.budget, gpus: trace.gpus };
+    let queue: Vec<PlannedJob> = trace
+        .jobs
+        .iter()
+        .map(|j| PlannedJob {
+            id: j.id,
+            pack: Pack::new(j.configs.clone()),
+            d: j.d,
+            mode: j.mode,
+        })
+        .collect();
+    let prios: Vec<i32> = trace.jobs.iter().map(|j| j.priority).collect();
+    let opts = SimOptions {
+        noise: 0.0,
+        seed: trace.options.seed,
+        policy: trace.policy,
+        elastic: trace.elastic,
+        grow_devices: false,
+    };
+    sim.run_queue_prio(&queue, &prios, &opts)
+}
+
+// ---------------------------------------------------------------------------
+// Serialization helpers
+// ---------------------------------------------------------------------------
+
+fn policy_name(p: Policy) -> &'static str {
+    match p {
+        Policy::Fifo => "fifo",
+        Policy::Priority => "priority",
+        Policy::PreemptLowest => "preempt",
+    }
+}
+
+fn mode_name(m: ExecMode) -> &'static str {
+    match m {
+        ExecMode::Packed => "packed",
+        ExecMode::Sequential => "sequential",
+    }
+}
+
+fn mode_parse(s: &str) -> Result<ExecMode> {
+    match s {
+        "packed" => Ok(ExecMode::Packed),
+        "sequential" => Ok(ExecMode::Sequential),
+        other => bail!("unknown exec mode '{other}'"),
+    }
+}
+
+fn hex64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+fn hex32(x: u32) -> String {
+    format!("{x:08x}")
+}
+
+/// JSON has no non-finite numbers (the writer would emit invalid text for
+/// them), so NaN/±inf round-trip as tagged strings.
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else if x.is_nan() {
+        Json::str("nan")
+    } else if x > 0.0 {
+        Json::str("inf")
+    } else {
+        Json::str("-inf")
+    }
+}
+
+fn num_of(v: &Json) -> Option<f64> {
+    match v {
+        Json::Num(x) => Some(*x),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Some(f64::NAN),
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+fn jf(v: &Json, k: &str) -> Result<f64> {
+    num_of(v.field(k)?).ok_or_else(|| anyhow!("field '{k}': expected number"))
+}
+
+fn jf32(v: &Json, k: &str) -> Result<f32> {
+    jf(v, k).map(|x| x as f32)
+}
+
+fn ju(v: &Json, k: &str) -> Result<usize> {
+    jf(v, k).map(|x| x as usize)
+}
+
+fn ji(v: &Json, k: &str) -> Result<i32> {
+    jf(v, k).map(|x| x as i32)
+}
+
+fn ju64(v: &Json, k: &str) -> Result<u64> {
+    jf(v, k).map(|x| x as u64)
+}
+
+/// Schema numbers are plain JSON integers; named for symmetry with
+/// [`jhex`] at the call site.
+fn jhexnum(v: &Json, k: &str) -> Result<u64> {
+    ju64(v, k)
+}
+
+fn js(v: &Json, k: &str) -> Result<String> {
+    Ok(v.field(k)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{k}': expected string"))?
+        .to_string())
+}
+
+fn jb(v: &Json, k: &str) -> Result<bool> {
+    v.field(k)?.as_bool().ok_or_else(|| anyhow!("field '{k}': expected bool"))
+}
+
+fn jarr<'a>(v: &'a Json, k: &str) -> Result<&'a [Json]> {
+    v.field(k)?.as_arr().ok_or_else(|| anyhow!("field '{k}': expected array"))
+}
+
+fn jvec_usize(v: &Json, k: &str) -> Result<Vec<usize>> {
+    jarr(v, k)?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("field '{k}': expected integers")))
+        .collect()
+}
+
+fn jtriple(v: &Json, k: &str) -> Result<(usize, usize, usize)> {
+    let a = jvec_usize(v, k)?;
+    if a.len() != 3 {
+        bail!("field '{k}': expected a 3-tuple, got {} entries", a.len());
+    }
+    Ok((a[0], a[1], a[2]))
+}
+
+/// 64-bit values (hashes, f64 bit patterns) don't fit f64 exactly, so they
+/// travel as 16-digit hex strings.
+fn jhex(v: &Json, k: &str) -> Result<u64> {
+    let s = js(v, k)?;
+    u64::from_str_radix(&s, 16).map_err(|_| anyhow!("field '{k}': bad hex '{s}'"))
+}
+
+fn jhex32(v: &Json, k: &str) -> Result<u32> {
+    let s = js(v, k)?;
+    u32::from_str_radix(&s, 16).map_err(|_| anyhow!("field '{k}': bad hex '{s}'"))
+}
+
+fn options_to_json(o: &TrainOptions) -> Json {
+    Json::obj(vec![
+        ("dataset", Json::num(o.budget.dataset as f64)),
+        ("epochs", Json::num(o.budget.epochs as f64)),
+        ("eval_batches", Json::num(o.eval_batches as f64)),
+        ("seed", Json::num(o.seed as f64)),
+        ("log_every", Json::num(o.log_every as f64)),
+    ])
+}
+
+fn options_from_json(v: &Json) -> Result<TrainOptions> {
+    Ok(TrainOptions {
+        budget: TrainBudget { dataset: ju(v, "dataset")?, epochs: ju(v, "epochs")? },
+        eval_batches: ju(v, "eval_batches")?,
+        seed: ju64(v, "seed")?,
+        log_every: ju(v, "log_every")?,
+    })
+}
+
+fn config_to_json(c: &LoraConfig) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(c.id as f64)),
+        ("lr", jnum(c.lr)),
+        ("batch", Json::num(c.batch as f64)),
+        ("rank", Json::num(c.rank as f64)),
+        ("alpha_ratio", jnum(c.alpha_ratio)),
+        ("task", Json::str(c.task.as_str())),
+    ])
+}
+
+fn config_from_json(v: &Json) -> Result<LoraConfig> {
+    Ok(LoraConfig {
+        id: ju(v, "id")?,
+        lr: jf(v, "lr")?,
+        batch: ju(v, "batch")?,
+        rank: ju(v, "rank")?,
+        alpha_ratio: jf(v, "alpha_ratio")?,
+        task: js(v, "task")?,
+    })
+}
+
+fn job_to_json(j: &TraceJob) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(j.id as f64)),
+        ("d", Json::num(j.d as f64)),
+        ("mode", Json::str(mode_name(j.mode))),
+        ("priority", Json::num(j.priority as f64)),
+        ("adapters", Json::arr(j.configs.iter().map(config_to_json))),
+    ])
+}
+
+fn job_from_json(v: &Json) -> Result<TraceJob> {
+    Ok(TraceJob {
+        id: ju(v, "id")?,
+        d: ju(v, "d")?,
+        mode: mode_parse(&js(v, "mode")?)?,
+        priority: ji(v, "priority")?,
+        configs: jarr(v, "adapters")?
+            .iter()
+            .map(config_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn adapter_to_json(d: &AdapterDigest) -> Json {
+    Json::obj(vec![
+        ("task", Json::str(d.task.as_str())),
+        ("rank", Json::num(d.rank as f64)),
+        ("batch", Json::num(d.batch as f64)),
+        ("lr_bits", Json::str(hex64(d.lr_bits))),
+        ("steps", Json::num(d.steps as f64)),
+        ("first_loss", Json::str(hex32(d.first_loss))),
+        ("final_loss", Json::str(hex32(d.final_loss))),
+        ("base_loss", Json::str(hex32(d.base_loss))),
+        ("base_acc", Json::str(hex32(d.base_acc))),
+        ("eval_loss", Json::str(hex32(d.eval_loss))),
+        ("eval_acc", Json::str(hex32(d.eval_acc))),
+        ("param_hash", Json::str(hex64(d.param_hash))),
+        (
+            "curve",
+            Json::arr(
+                d.curve
+                    .iter()
+                    .map(|&(s, l)| Json::arr([Json::num(s as f64), Json::str(hex32(l))])),
+            ),
+        ),
+    ])
+}
+
+fn adapter_from_json(v: &Json) -> Result<AdapterDigest> {
+    let curve = jarr(v, "curve")?
+        .iter()
+        .map(|p| -> Result<(usize, u32)> {
+            let p = p.as_arr().ok_or_else(|| anyhow!("curve entry: expected [step, hex]"))?;
+            if p.len() != 2 {
+                bail!("curve entry: expected [step, hex]");
+            }
+            let s = p[0].as_usize().ok_or_else(|| anyhow!("curve step: expected integer"))?;
+            let l = p[1].as_str().ok_or_else(|| anyhow!("curve loss: expected hex string"))?;
+            Ok((s, u32::from_str_radix(l, 16).map_err(|_| anyhow!("curve loss: bad hex"))?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(AdapterDigest {
+        task: js(v, "task")?,
+        rank: ju(v, "rank")?,
+        batch: ju(v, "batch")?,
+        lr_bits: jhex(v, "lr_bits")?,
+        steps: ju(v, "steps")?,
+        first_loss: jhex32(v, "first_loss")?,
+        final_loss: jhex32(v, "final_loss")?,
+        base_loss: jhex32(v, "base_loss")?,
+        base_acc: jhex32(v, "base_acc")?,
+        eval_loss: jhex32(v, "eval_loss")?,
+        eval_acc: jhex32(v, "eval_acc")?,
+        param_hash: jhex(v, "param_hash")?,
+        curve,
+    })
+}
+
+/// One session [`Event`] as a tagged JSON object (`"ev"` discriminant).
+pub fn event_to_json(ev: &Event) -> Json {
+    let unum = |x: usize| Json::num(x as f64);
+    let uvec = |xs: &[usize]| Json::arr(xs.iter().map(|&x| unum(x)));
+    let triple =
+        |t: (usize, usize, usize)| Json::arr([unum(t.0), unum(t.1), unum(t.2)]);
+    match ev {
+        Event::JobStarted { job, n_adapters, devices, at } => Json::obj(vec![
+            ("ev", Json::str("job_started")),
+            ("job", unum(*job)),
+            ("n_adapters", unum(*n_adapters)),
+            ("devices", uvec(devices)),
+            ("at", jnum(*at)),
+        ]),
+        Event::AdapterFinished { job, adapter, task, steps, eval_loss, eval_acc, at } => {
+            Json::obj(vec![
+                ("ev", Json::str("adapter_finished")),
+                ("job", unum(*job)),
+                ("adapter", unum(*adapter)),
+                ("task", Json::str(task.as_str())),
+                ("steps", unum(*steps)),
+                ("eval_loss", jnum(*eval_loss as f64)),
+                ("eval_acc", jnum(*eval_acc as f64)),
+                ("at", jnum(*at)),
+            ])
+        }
+        Event::AdapterAdmitted { job, adapter, task, from_job, at } => Json::obj(vec![
+            ("ev", Json::str("adapter_admitted")),
+            ("job", unum(*job)),
+            ("adapter", unum(*adapter)),
+            ("task", Json::str(task.as_str())),
+            ("from_job", unum(*from_job)),
+            ("at", jnum(*at)),
+        ]),
+        Event::Rebucketed { job, from, to, survivors, at } => Json::obj(vec![
+            ("ev", Json::str("rebucketed")),
+            ("job", unum(*job)),
+            ("from", triple(*from)),
+            ("to", triple(*to)),
+            ("survivors", uvec(survivors)),
+            ("at", jnum(*at)),
+        ]),
+        Event::Preempted { job, adapters, at } => Json::obj(vec![
+            ("ev", Json::str("preempted")),
+            ("job", unum(*job)),
+            ("adapters", uvec(adapters)),
+            ("at", jnum(*at)),
+        ]),
+        Event::DeviceRetarget { job, from, to, at } => Json::obj(vec![
+            ("ev", Json::str("device_retarget")),
+            ("job", unum(*job)),
+            ("from", unum(*from)),
+            ("to", unum(*to)),
+            ("at", jnum(*at)),
+        ]),
+        Event::JobFinished { job, adapters, wall, at } => Json::obj(vec![
+            ("ev", Json::str("job_finished")),
+            ("job", unum(*job)),
+            ("adapters", unum(*adapters)),
+            ("wall", jnum(*wall)),
+            ("at", jnum(*at)),
+        ]),
+        Event::JobFailed { job, error, at } => Json::obj(vec![
+            ("ev", Json::str("job_failed")),
+            ("job", unum(*job)),
+            ("error", Json::str(error.as_str())),
+            ("at", jnum(*at)),
+        ]),
+        Event::CalibUpdated { fit, samples, switch_cost, dp_fit, device_switch_cost, at } => {
+            let dp = match dp_fit {
+                Some((a, b)) => Json::arr([jnum(*a), jnum(*b)]),
+                None => Json::Null,
+            };
+            Json::obj(vec![
+                ("ev", Json::str("calib_updated")),
+                ("fit", Json::arr([jnum(fit.0), jnum(fit.1), jnum(fit.2)])),
+                ("samples", unum(*samples)),
+                ("switch_cost", jnum(*switch_cost)),
+                ("dp_fit", dp),
+                ("device_switch_cost", jnum(*device_switch_cost)),
+                ("at", jnum(*at)),
+            ])
+        }
+    }
+}
+
+pub fn event_from_json(v: &Json) -> Result<Event> {
+    let kind = js(v, "ev")?;
+    Ok(match kind.as_str() {
+        "job_started" => Event::JobStarted {
+            job: ju(v, "job")?,
+            n_adapters: ju(v, "n_adapters")?,
+            devices: jvec_usize(v, "devices")?,
+            at: jf(v, "at")?,
+        },
+        "adapter_finished" => Event::AdapterFinished {
+            job: ju(v, "job")?,
+            adapter: ju(v, "adapter")?,
+            task: js(v, "task")?,
+            steps: ju(v, "steps")?,
+            eval_loss: jf32(v, "eval_loss")?,
+            eval_acc: jf32(v, "eval_acc")?,
+            at: jf(v, "at")?,
+        },
+        "adapter_admitted" => Event::AdapterAdmitted {
+            job: ju(v, "job")?,
+            adapter: ju(v, "adapter")?,
+            task: js(v, "task")?,
+            from_job: ju(v, "from_job")?,
+            at: jf(v, "at")?,
+        },
+        "rebucketed" => Event::Rebucketed {
+            job: ju(v, "job")?,
+            from: jtriple(v, "from")?,
+            to: jtriple(v, "to")?,
+            survivors: jvec_usize(v, "survivors")?,
+            at: jf(v, "at")?,
+        },
+        "preempted" => Event::Preempted {
+            job: ju(v, "job")?,
+            adapters: jvec_usize(v, "adapters")?,
+            at: jf(v, "at")?,
+        },
+        "device_retarget" => Event::DeviceRetarget {
+            job: ju(v, "job")?,
+            from: ju(v, "from")?,
+            to: ju(v, "to")?,
+            at: jf(v, "at")?,
+        },
+        "job_finished" => Event::JobFinished {
+            job: ju(v, "job")?,
+            adapters: ju(v, "adapters")?,
+            wall: jf(v, "wall")?,
+            at: jf(v, "at")?,
+        },
+        "job_failed" => Event::JobFailed {
+            job: ju(v, "job")?,
+            error: js(v, "error")?,
+            at: jf(v, "at")?,
+        },
+        "calib_updated" => {
+            let fit = jarr(v, "fit")?;
+            if fit.len() != 3 {
+                bail!("calib_updated fit: expected 3 numbers");
+            }
+            let fnum = |x: &Json| {
+                num_of(x).ok_or_else(|| anyhow!("calib_updated fit: expected numbers"))
+            };
+            let dp_fit = match v.field("dp_fit")? {
+                Json::Null => None,
+                Json::Arr(a) if a.len() == 2 => Some((fnum(&a[0])?, fnum(&a[1])?)),
+                _ => bail!("calib_updated dp_fit: expected null or [a, b]"),
+            };
+            Event::CalibUpdated {
+                fit: (fnum(&fit[0])?, fnum(&fit[1])?, fnum(&fit[2])?),
+                samples: ju(v, "samples")?,
+                switch_cost: jf(v, "switch_cost")?,
+                dp_fit,
+                device_switch_cost: jf(v, "device_switch_cost")?,
+                at: jf(v, "at")?,
+            }
+        }
+        other => bail!("unknown event kind '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn every_event() -> Vec<Event> {
+        vec![
+            Event::JobStarted { job: 0, n_adapters: 2, devices: vec![0, 1], at: 0.5 },
+            Event::AdapterFinished {
+                job: 0,
+                adapter: 3,
+                task: "modadd".into(),
+                steps: 16,
+                eval_loss: 0.25,
+                eval_acc: f32::NAN,
+                at: 1.5,
+            },
+            Event::AdapterAdmitted {
+                job: 0,
+                adapter: 4,
+                task: "copy".into(),
+                from_job: 2,
+                at: 1.6,
+            },
+            Event::Rebucketed {
+                job: 0,
+                from: (2, 8, 2),
+                to: (1, 8, 1),
+                survivors: vec![3],
+                at: 1.7,
+            },
+            Event::Preempted { job: 1, adapters: vec![5, 6], at: 2.0 },
+            Event::DeviceRetarget { job: 0, from: 1, to: 2, at: 2.1 },
+            Event::JobFinished { job: 0, adapters: 2, wall: 3.25, at: 3.75 },
+            Event::JobFailed { job: 9, error: "boom \"quoted\"".into(), at: 4.0 },
+            Event::CalibUpdated {
+                fit: (0.1, 2e-6, 3e-3),
+                samples: 40,
+                switch_cost: 0.02,
+                dp_fit: Some((0.01, 0.04)),
+                device_switch_cost: 0.0,
+                at: 4.5,
+            },
+            Event::CalibUpdated {
+                fit: (0.0, 0.0, 0.0),
+                samples: 0,
+                switch_cost: 0.0,
+                dp_fit: None,
+                device_switch_cost: 0.0,
+                at: 5.0,
+            },
+        ]
+    }
+
+    /// Every event variant survives JSON round-tripping bit-exactly
+    /// (NaN included — it travels as a tagged string).
+    #[test]
+    fn event_json_roundtrip() {
+        for ev in every_event() {
+            let j = event_to_json(&ev);
+            let text = j.to_string();
+            let back = event_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(
+                event_to_json(&back).to_string(),
+                text,
+                "event did not round-trip: {ev:?}"
+            );
+        }
+    }
+
+    fn digest_fixture() -> SessionDigest {
+        let mut adapters = BTreeMap::new();
+        adapters.insert(
+            7,
+            AdapterDigest {
+                task: "parity".into(),
+                rank: 8,
+                batch: 2,
+                lr_bits: 2e-3f64.to_bits(),
+                steps: 12,
+                first_loss: 1.5f32.to_bits(),
+                final_loss: 0.25f32.to_bits(),
+                base_loss: 1.75f32.to_bits(),
+                base_acc: 0.5f32.to_bits(),
+                eval_loss: 0.3f32.to_bits(),
+                eval_acc: 0.875f32.to_bits(),
+                param_hash: 0xdead_beef_cafe_f00d,
+                curve: vec![(0, 1.5f32.to_bits()), (8, 0.5f32.to_bits())],
+            },
+        );
+        SessionDigest { adapters }
+    }
+
+    #[test]
+    fn digest_json_roundtrip_and_tamper_detection() {
+        let d = digest_fixture();
+        let j = d.to_json();
+        let back = SessionDigest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(back.fingerprint(), d.fingerprint());
+
+        // Flip one loss bit: the stored fingerprint no longer matches.
+        let text = j.to_string().replace(&hex32(0.3f32.to_bits()), &hex32(0.31f32.to_bits()));
+        let err = SessionDigest::from_json(&Json::parse(&text).unwrap());
+        assert!(err.is_err(), "tampered digest must fail fingerprint validation");
+    }
+
+    #[test]
+    fn digest_diff_is_readable_and_empty_on_match() {
+        let a = digest_fixture();
+        assert_eq!(a.diff(&a), "");
+        let mut b = a.clone();
+        let ad = b.adapters.get_mut(&7).unwrap();
+        ad.eval_loss = 0.9f32.to_bits();
+        ad.param_hash = 1;
+        let diff = a.diff(&b);
+        assert!(diff.contains("adapter 7"), "diff names the adapter: {diff}");
+        assert!(diff.contains("eval_loss"), "diff names the field: {diff}");
+        assert!(diff.contains("param_hash"), "diff covers param hashes: {diff}");
+        let mut c = a.clone();
+        c.adapters.remove(&7);
+        assert!(a.diff(&c).contains("missing from replay"));
+    }
+
+    #[test]
+    fn policy_and_mode_names_roundtrip() {
+        for p in [Policy::Fifo, Policy::Priority, Policy::PreemptLowest] {
+            assert_eq!(Policy::parse(policy_name(p)), Some(p));
+        }
+        for m in [ExecMode::Packed, ExecMode::Sequential] {
+            assert_eq!(mode_parse(mode_name(m)).unwrap(), m);
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! The **perf-trajectory regression harness** (DESIGN.md §12).
+//!
+//! Benches emit `BENCH_*.json`; a *snapshot* committed under
+//! `bench/history/` says which of those metrics are promises and how they
+//! are allowed to move. `plora perf-budget --current <bench json>
+//! --baseline <snapshot>` evaluates the promises; CI runs it on every PR.
+//!
+//! A snapshot has two kinds of gate, because two kinds of number come out
+//! of a bench:
+//!
+//! - **`budget`** — machine-independent metrics (speedup ratios, elastic
+//!   vs FIFO makespan ratios, admission counts) with a hard `min` or
+//!   `max` bound. These mean the same thing on any hardware, so they are
+//!   always enforced, tolerance-free.
+//! - **`times`** — absolute wall-clock metrics (step seconds, makespans).
+//!   These are only comparable against a recorded run *from the same kind
+//!   of machine*, so they are enforced against the snapshot's `record`
+//!   (the last accepted bench output) with a relative `tolerance`, and
+//!   reported informationally when `record` is `null` (a fresh snapshot
+//!   that has never been updated on CI hardware).
+//!
+//! Intentional regressions bypass the gate explicitly: CI exports
+//! `PLORA_PERF_OVERRIDE=1` when the PR carries the `perf-budget-override`
+//! label, which turns failures into warnings (the checks still print).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Snapshot schema version (also the version benches stamp into their
+/// `BENCH_*.json` output as `"schema"`).
+pub const SNAPSHOT_SCHEMA: u64 = 1;
+
+/// How one metric is gated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckKind {
+    /// Budget gate: `current <= bound`.
+    Max,
+    /// Budget gate: `current >= bound`.
+    Min,
+    /// Time gate: `current <= record * (1 + tolerance)`.
+    Time,
+    /// Informational only — no record to compare against.
+    Ref,
+}
+
+/// One evaluated gate.
+#[derive(Debug, Clone)]
+pub struct Check {
+    pub metric: String,
+    pub current: f64,
+    /// The reference value (budget bound or recorded time); NaN for
+    /// [`CheckKind::Ref`].
+    pub baseline: f64,
+    /// The enforced bound after tolerance; NaN for [`CheckKind::Ref`].
+    pub bound: f64,
+    pub kind: CheckKind,
+    pub ok: bool,
+}
+
+impl Check {
+    /// One aligned report line, e.g.
+    /// `FAIL skew_elastic_vs_fifo  0.9812 > max 0.97`.
+    pub fn render(&self) -> String {
+        let status = if self.ok { "  ok" } else { "FAIL" };
+        match self.kind {
+            CheckKind::Max => format!(
+                "{status} {:<28} {:.4} {} max {:.4}",
+                self.metric,
+                self.current,
+                if self.ok { "<=" } else { "> " },
+                self.bound
+            ),
+            CheckKind::Min => format!(
+                "{status} {:<28} {:.4} {} min {:.4}",
+                self.metric,
+                self.current,
+                if self.ok { ">=" } else { "< " },
+                self.bound
+            ),
+            CheckKind::Time => format!(
+                "{status} {:<28} {:.4}s vs recorded {:.4}s (bound {:.4}s)",
+                self.metric, self.current, self.baseline, self.bound
+            ),
+            CheckKind::Ref => format!(
+                " ref {:<28} {:.4}s (no recorded baseline)",
+                self.metric, self.current
+            ),
+        }
+    }
+}
+
+fn metric(v: &Json, name: &str) -> Result<f64> {
+    v.get(name)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("bench output is missing metric '{name}'"))
+}
+
+/// Evaluate a current bench output against a committed snapshot.
+///
+/// Fails (returns `Err`) on *structural* problems — schema or bench-name
+/// mismatch, a gated metric missing from the current output — because
+/// those mean the harness itself broke, not that perf moved. Perf
+/// verdicts live in the returned [`Check`]s' `ok` flags.
+pub fn perf_budget(current: &Json, baseline: &Json, tolerance: f64) -> Result<Vec<Check>> {
+    if !(0.0..10.0).contains(&tolerance) {
+        bail!("tolerance {tolerance} out of range (expected 0..10)");
+    }
+    let schema = baseline.field("schema")?.as_u64().unwrap_or(0);
+    if schema != SNAPSHOT_SCHEMA {
+        bail!("snapshot schema v{schema}, this build reads v{SNAPSHOT_SCHEMA}");
+    }
+    let cur_schema = current.field("schema")?.as_u64().unwrap_or(0);
+    if cur_schema != SNAPSHOT_SCHEMA {
+        bail!(
+            "bench output schema v{cur_schema}, this build reads v{SNAPSHOT_SCHEMA} \
+             (re-run the bench from this checkout)"
+        );
+    }
+    let want = baseline.field("bench")?.as_str().unwrap_or("").to_string();
+    let got = current.field("bench")?.as_str().unwrap_or("").to_string();
+    if want != got {
+        bail!("snapshot is for bench '{want}' but the output is from '{got}'");
+    }
+
+    let mut checks = vec![];
+
+    let budget = baseline
+        .field("budget")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("snapshot 'budget': expected object"))?;
+    for (name, gate) in budget {
+        let cur = metric(current, name)?;
+        if let Some(bound) = gate.get("max").and_then(Json::as_f64) {
+            checks.push(Check {
+                metric: name.clone(),
+                current: cur,
+                baseline: bound,
+                bound,
+                kind: CheckKind::Max,
+                ok: cur <= bound,
+            });
+        } else if let Some(bound) = gate.get("min").and_then(Json::as_f64) {
+            checks.push(Check {
+                metric: name.clone(),
+                current: cur,
+                baseline: bound,
+                bound,
+                kind: CheckKind::Min,
+                ok: cur >= bound,
+            });
+        } else {
+            bail!("snapshot budget '{name}': expected a 'max' or 'min' bound");
+        }
+    }
+
+    let times = baseline
+        .field("times")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("snapshot 'times': expected array of metric names"))?;
+    let record = baseline.field("record")?;
+    for name in times {
+        let name =
+            name.as_str().ok_or_else(|| anyhow!("snapshot 'times': expected strings"))?;
+        let cur = metric(current, name)?;
+        match record.get(name).and_then(Json::as_f64) {
+            Some(base) => {
+                let bound = base * (1.0 + tolerance);
+                checks.push(Check {
+                    metric: name.to_string(),
+                    current: cur,
+                    baseline: base,
+                    bound,
+                    kind: CheckKind::Time,
+                    ok: cur <= bound,
+                });
+            }
+            None => checks.push(Check {
+                metric: name.to_string(),
+                current: cur,
+                baseline: f64::NAN,
+                bound: f64::NAN,
+                kind: CheckKind::Ref,
+                ok: true,
+            }),
+        }
+    }
+
+    Ok(checks)
+}
+
+/// A new snapshot with the current bench output installed as `record`
+/// (budget bounds and the gated-metric list are kept verbatim). This is
+/// what `--update-baseline` writes after an accepted perf change.
+pub fn update_snapshot(baseline: &Json, current: &Json) -> Json {
+    let mut out = match baseline {
+        Json::Obj(m) => m.clone(),
+        _ => Default::default(),
+    };
+    out.insert("record".to_string(), current.clone());
+    Json::Obj(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot(record: Json) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("bench", Json::str("session")),
+            (
+                "budget",
+                Json::obj(vec![
+                    ("ratio", Json::obj(vec![("max", Json::num(0.97))])),
+                    ("admissions", Json::obj(vec![("min", Json::num(1.0))])),
+                ]),
+            ),
+            ("times", Json::arr([Json::str("makespan_s")])),
+            ("record", record),
+        ])
+    }
+
+    fn bench(ratio: f64, admissions: f64, makespan: f64) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("bench", Json::str("session")),
+            ("ratio", Json::num(ratio)),
+            ("admissions", Json::num(admissions)),
+            ("makespan_s", Json::num(makespan)),
+        ])
+    }
+
+    #[test]
+    fn budget_gates_enforce_min_and_max() {
+        let snap = snapshot(Json::Null);
+        let good = perf_budget(&bench(0.90, 3.0, 12.0), &snap, 0.25).unwrap();
+        assert!(good.iter().all(|c| c.ok), "{good:?}");
+        // Ratio over its max and admissions under its min both fail.
+        let bad = perf_budget(&bench(0.99, 0.0, 12.0), &snap, 0.25).unwrap();
+        let failed: Vec<&str> =
+            bad.iter().filter(|c| !c.ok).map(|c| c.metric.as_str()).collect();
+        assert_eq!(failed, ["admissions", "ratio"]);
+    }
+
+    #[test]
+    fn times_informational_without_record_gated_with_one() {
+        let fresh = snapshot(Json::Null);
+        let checks = perf_budget(&bench(0.9, 2.0, 99.0), &fresh, 0.25).unwrap();
+        let t = checks.iter().find(|c| c.metric == "makespan_s").unwrap();
+        assert_eq!(t.kind, CheckKind::Ref);
+        assert!(t.ok, "no record: absolute time is informational");
+
+        let recorded = snapshot(bench(0.9, 2.0, 10.0));
+        let ok = perf_budget(&bench(0.9, 2.0, 12.0), &recorded, 0.25).unwrap();
+        assert!(ok.iter().all(|c| c.ok), "12.0 <= 10.0 * 1.25");
+        let slow = perf_budget(&bench(0.9, 2.0, 13.0), &recorded, 0.25).unwrap();
+        let t = slow.iter().find(|c| c.metric == "makespan_s").unwrap();
+        assert_eq!(t.kind, CheckKind::Time);
+        assert!(!t.ok, "13.0 > 10.0 * 1.25 must fail");
+        assert!(t.render().starts_with("FAIL"), "{}", t.render());
+    }
+
+    #[test]
+    fn structural_problems_are_errors_not_failures() {
+        let snap = snapshot(Json::Null);
+        // Missing gated metric.
+        let partial = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("bench", Json::str("session")),
+            ("ratio", Json::num(0.9)),
+        ]);
+        assert!(perf_budget(&partial, &snap, 0.25).is_err());
+        // Wrong bench.
+        let other = {
+            let mut b = bench(0.9, 2.0, 10.0);
+            if let Json::Obj(m) = &mut b {
+                m.insert("bench".into(), Json::str("train_step"));
+            }
+            b
+        };
+        assert!(perf_budget(&other, &snap, 0.25).is_err());
+        // Wrong schema.
+        let old = {
+            let mut b = bench(0.9, 2.0, 10.0);
+            if let Json::Obj(m) = &mut b {
+                m.insert("schema".into(), Json::num(0.0));
+            }
+            b
+        };
+        assert!(perf_budget(&old, &snap, 0.25).is_err());
+    }
+
+    #[test]
+    fn update_baseline_installs_record_and_keeps_gates() {
+        let snap = snapshot(Json::Null);
+        let cur = bench(0.9, 2.0, 10.0);
+        let updated = update_snapshot(&snap, &cur);
+        assert_eq!(updated.get("record"), Some(&cur));
+        assert_eq!(updated.get("budget"), snap.get("budget"));
+        // The updated snapshot now gates absolute times.
+        let checks = perf_budget(&bench(0.9, 2.0, 20.0), &updated, 0.25).unwrap();
+        let t = checks.iter().find(|c| c.metric == "makespan_s").unwrap();
+        assert_eq!(t.kind, CheckKind::Time);
+        assert!(!t.ok);
+    }
+}

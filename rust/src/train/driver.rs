@@ -93,6 +93,10 @@ pub struct AdapterReport {
     pub base_acc: f32,
     pub eval_loss: f32,
     pub eval_acc: f32,
+    /// FNV-1a fingerprint of the adapter's final LoRA parameters (bit
+    /// patterns, true rank) — the trace digest's proof that replayed
+    /// weights, not just replayed metrics, are bit-identical.
+    pub param_hash: u64,
     /// `(step, train_loss)` samples.
     pub curve: Vec<(usize, f32)>,
 }
@@ -702,6 +706,7 @@ pub fn run_pack_phased(
                     continue;
                 }
                 let k = slots[s];
+                let member = state.inner().extract_member(s, cfgs[k].rank)?;
                 let rep = AdapterReport {
                     config: cfgs[k].clone(),
                     steps: total[k],
@@ -711,6 +716,7 @@ pub fn run_pack_phased(
                     base_acc: base_a[k],
                     eval_loss: eloss[s],
                     eval_acc: eacc[s],
+                    param_hash: member.param_hash(),
                     curve: std::mem::take(&mut curves[k]),
                 };
                 on_event(PackPhaseEvent::AdapterFinished {

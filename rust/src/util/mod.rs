@@ -3,6 +3,7 @@
 //! and a mini property-testing harness.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,202 @@
+//! Record → replay determinism for `plora::trace`: every recorded session
+//! must replay through a fresh real [`Session`] to a **bit-identical**
+//! [`SessionDigest`] — per-adapter losses, accuracies, loss curves and the
+//! FNV fingerprint of the final LoRA parameters all match exactly.
+//!
+//! The property is exercised across the full settings matrix
+//! (`Policy` × job device count × elastic on/off), through an on-disk
+//! save/load round trip each time, plus a preempt-then-resume recording
+//! (the replay resumes in memory, without a checkpoint pool) and a
+//! timing-only replay through the simulator's cost model.
+
+use std::sync::Arc;
+
+use plora::cluster::ResourceMonitor;
+use plora::config::{pool, AdapterSpec};
+use plora::costmodel::{ExecMode, Pack, TrainBudget};
+use plora::engine::CheckpointPool;
+use plora::planner::PlannedJob;
+use plora::runtime::Runtime;
+use plora::session::{Event, Policy, Session};
+use plora::trace::{replay, replay_timing, Trace, TraceRecorder};
+use plora::train::TrainOptions;
+
+fn runtime() -> Arc<Runtime> {
+    // Point at a directory with no artifacts: synthesizes everything.
+    Arc::new(Runtime::load(&std::env::temp_dir().join("plora-no-artifacts")).unwrap())
+}
+
+fn opts(dataset: usize) -> TrainOptions {
+    // log_every=2 so the recorded digests carry non-trivial loss curves.
+    TrainOptions {
+        budget: TrainBudget { dataset, epochs: 1 },
+        eval_batches: 1,
+        seed: 17,
+        log_every: 2,
+    }
+}
+
+fn spec(task: &str, rank: usize, batch: usize, lr: f64) -> AdapterSpec {
+    AdapterSpec { lr, batch, rank, alpha_ratio: 1.0, task: task.into() }
+}
+
+/// Run one small mixed-queue session under the given settings and record
+/// it: job 0 packs two adapters (mixed batch sizes, so elastic runs hit a
+/// re-bucket boundary) at priority 2, job 1 is a solo adapter at
+/// priority 1.
+fn record_cell(rt: &Arc<Runtime>, policy: Policy, d: usize, elastic: bool) -> Trace {
+    let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 2), "nano");
+    session.options = opts(8);
+    session.set_policy(policy);
+    session.set_elastic(elastic);
+    let mut rec = TraceRecorder::for_session(&session);
+
+    let jobs = [
+        (
+            PlannedJob {
+                id: 0,
+                pack: Pack::new(vec![
+                    spec("modadd", 8, 1, 2e-3).with_id(0),
+                    spec("parity", 8, 2, 2e-3).with_id(1),
+                ]),
+                d,
+                mode: ExecMode::Packed,
+            },
+            2,
+        ),
+        (
+            PlannedJob {
+                id: 1,
+                pack: Pack::new(vec![spec("copy", 8, 1, 2e-3).with_id(2)]),
+                d: 1,
+                mode: ExecMode::Packed,
+            },
+            1,
+        ),
+    ];
+    for (job, prio) in jobs {
+        rec.submit(&job, prio);
+        session.submit_planned_at(job, prio).unwrap();
+    }
+    let report = session.drain().unwrap();
+    rec.finish(&report)
+}
+
+/// The satellite property: **record → save → load → replay** round-trips
+/// bit-identically for every `Policy` × device count × elastic cell. The
+/// digest survives the on-disk JSON round trip exactly (bit patterns
+/// travel as hex, not decimal floats), and the live replay reproduces it.
+#[test]
+fn record_replay_round_trips_across_policy_devices_elastic() {
+    let rt = runtime();
+    for policy in [Policy::Fifo, Policy::Priority, Policy::PreemptLowest] {
+        for d in [1usize, 2] {
+            for elastic in [false, true] {
+                let cell = format!("{policy:?} d={d} elastic={elastic}");
+                let trace = record_cell(&rt, policy, d, elastic);
+                assert_eq!(trace.total_adapters(), 3, "{cell}: adapter count");
+                assert_eq!(trace.gpus, 2, "{cell}: pool size");
+                assert!(trace.makespan > 0.0, "{cell}: makespan");
+
+                let path = std::env::temp_dir()
+                    .join(format!("plora_trace_{policy:?}_d{d}_e{elastic}.json"));
+                trace.save(&path).unwrap();
+                let loaded = Trace::load(&path).unwrap();
+                assert_eq!(loaded.digest, trace.digest, "{cell}: digest changed across save/load");
+                assert_eq!(
+                    loaded.digest.fingerprint(),
+                    trace.digest.fingerprint(),
+                    "{cell}: fingerprint changed across save/load"
+                );
+                assert_eq!(loaded.events.len(), trace.events.len(), "{cell}: event stream");
+
+                let out = replay(rt.clone(), &loaded).unwrap();
+                assert!(out.matches(), "{cell}: replay diverged from recording:\n{}", out.diff);
+                // Replay proves the weights too, not just the metrics: a
+                // zero param hash would mean the fingerprint is vacuous.
+                for a in out.digest.adapters.values() {
+                    assert_ne!(a.param_hash, 0, "{cell}: param hash must cover real weights");
+                }
+            }
+        }
+    }
+}
+
+/// A recording that contains a real preemption (high-priority job evicts
+/// the running one through the checkpoint pool) still replays to the same
+/// digest — the replay session has **no** checkpoint pool, so its resume
+/// path (if its own race replays the eviction) round-trips in memory, and
+/// either way the per-adapter trajectories are bit-identical.
+#[test]
+fn preempted_session_records_and_replays_bit_identically() {
+    let rt = runtime();
+    let dir = std::env::temp_dir().join("plora_trace_preempt_ckpts");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 1), "nano");
+    session.options = opts(256); // long enough that the preemption lands mid-run
+    session.set_policy(Policy::PreemptLowest);
+    session.checkpoints = Some(CheckpointPool::new(&dir, rt.clone()).unwrap());
+    let rx = session.subscribe();
+    let mut rec = TraceRecorder::for_session(&session);
+
+    let low = PlannedJob {
+        id: 0,
+        pack: Pack::new(vec![spec("modadd", 8, 1, 2e-3).with_id(0)]),
+        d: 1,
+        mode: ExecMode::Packed,
+    };
+    rec.submit(&low, 0);
+    session.submit_planned_at(low, 0).unwrap();
+    // Wait for the low-priority job to actually hold the device, then
+    // submit the high-priority one — the dispatcher must preempt.
+    for ev in rx.iter() {
+        if matches!(ev, Event::JobStarted { job: 0, .. }) {
+            break;
+        }
+    }
+    let high = PlannedJob {
+        id: 1,
+        pack: Pack::new(vec![spec("parity", 8, 1, 2e-3).with_id(1)]),
+        d: 1,
+        mode: ExecMode::Packed,
+    };
+    rec.submit(&high, 5);
+    session.submit_planned_at(high, 5).unwrap();
+    let report = session.drain().unwrap();
+    assert_eq!(report.preemptions(), 1, "job 0 must be preempted exactly once");
+
+    let trace = rec.finish(&report);
+    assert!(
+        trace.events.iter().any(|e| matches!(e, Event::Preempted { .. })),
+        "recorded timeline must contain the preemption"
+    );
+    assert_eq!(trace.jobs.len(), 2);
+    assert_eq!(trace.jobs[1].priority, 5, "recorded priority travels with the job");
+
+    let path = std::env::temp_dir().join("plora_trace_preempt.json");
+    trace.save(&path).unwrap();
+    let loaded = Trace::load(&path).unwrap();
+    let out = replay(rt.clone(), &loaded).unwrap();
+    assert!(out.matches(), "preempt-resume replay diverged:\n{}", out.diff);
+}
+
+/// Timing-only replay (`plora replay --sim`): the trace's queue and
+/// settings rebuild a plausible timeline through the simulator's cost
+/// model — same `Event` vocabulary, non-degenerate makespan/utilization,
+/// and (non-elastic) the recorded job structure.
+#[test]
+fn timing_replay_rebuilds_a_plausible_timeline() {
+    let rt = runtime();
+    let trace = record_cell(&rt, Policy::Fifo, 1, false);
+    let cm = plora::search::live_cost_model(&rt, "nano").unwrap();
+    let res = replay_timing(&cm, &trace);
+    assert!(res.makespan > 0.0, "modeled makespan must be positive");
+    assert_eq!(res.jobs.len(), trace.jobs.len(), "non-elastic sim keeps the job structure");
+    let started = res.log.iter().filter(|e| matches!(e, Event::JobStarted { .. })).count();
+    let finished = res.log.iter().filter(|e| matches!(e, Event::JobFinished { .. })).count();
+    assert!(started >= trace.jobs.len(), "every job must start in the modeled timeline");
+    assert!(finished >= trace.jobs.len(), "every job must finish in the modeled timeline");
+    let u = res.utilization();
+    assert!(u > 0.0 && u <= 1.0 + 1e-9, "utilization {u} out of range");
+}
