@@ -1,0 +1,290 @@
+//! Minimal dependency-free **HTTP/1.1 + JSON** transport for the daemon's
+//! localhost control plane, plus the matching client used by the `submit`
+//! / `status` / `cancel` subcommands and the tests.
+//!
+//! Deliberately small: loopback only, `Connection: close` per request,
+//! `Content-Length` framing, JSON bodies. One thread per connection —
+//! handlers are allowed to block (the event long-poll does), and the
+//! accept loop polls a stop flag so shutdown never hangs on `accept`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Largest request (head + body) the server will read, and the largest
+/// response the client will buffer. Control-plane payloads are tiny; the
+/// cap exists so a misbehaving peer cannot balloon memory.
+const MAX_MESSAGE: usize = 4 << 20;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string, e.g. `/v1/jobs/3/cancel`.
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    /// Parsed JSON body, if the request carried one.
+    pub body: Option<Json>,
+}
+
+/// One response: status code + JSON body.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: Json,
+}
+
+impl Response {
+    pub fn ok(body: Json) -> Response {
+        Response { status: 200, body }
+    }
+
+    pub fn err(status: u16, msg: impl Into<String>) -> Response {
+        Response { status, body: Json::obj(vec![("error", Json::str(msg.into()))]) }
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A bound (but not yet serving) control-plane listener.
+pub struct Server {
+    pub addr: SocketAddr,
+    listener: TcpListener,
+}
+
+impl Server {
+    /// Bind to `127.0.0.1:port`; port 0 picks an ephemeral port (the
+    /// daemon publishes the resolved `addr` in its `daemon.addr` file).
+    pub fn bind(port: u16) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("bind 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        Ok(Server { addr, listener })
+    }
+
+    /// Accept-and-dispatch until `stop` is set. Each connection gets its
+    /// own thread so a blocking handler (long-poll) never stalls accepts.
+    pub fn serve(self, handler: Handler, stop: Arc<AtomicBool>) -> Result<()> {
+        self.listener.set_nonblocking(true).context("set_nonblocking")?;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let h = Arc::clone(&handler);
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(stream, &h);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => bail!("accept: {e}"),
+            }
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, handler: &Handler) -> Result<()> {
+    stream.set_nonblocking(false).ok();
+    // Generous ceilings so a stuck peer cannot pin the thread forever;
+    // long-poll handlers bound their own waits far below this.
+    stream.set_read_timeout(Some(Duration::from_secs(300))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(60))).ok();
+    let resp = match read_request(&mut stream) {
+        Ok(req) => handler(&req),
+        Err(e) => Response::err(400, format!("bad request: {e}")),
+    };
+    write_response(&mut stream, &resp)
+}
+
+/// Read one HTTP/1.1 request off the stream.
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    // Read until the blank line that ends the header block.
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_MESSAGE {
+            bail!("request head too large");
+        }
+        let n = stream.read(&mut chunk).context("read head")?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("head not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| anyhow!("no request target"))?;
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    if content_length > MAX_MESSAGE {
+        bail!("request body too large");
+    }
+    let body_start = head_end + 4; // past "\r\n\r\n"
+    let mut body = buf[body_start.min(buf.len())..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).context("read body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let (path, query) = split_target(target);
+    let body = if body.is_empty() {
+        None
+    } else {
+        let text = std::str::from_utf8(&body).context("body not UTF-8")?;
+        Some(Json::parse(text).map_err(|e| anyhow!("body not JSON: {e}"))?)
+    };
+    Ok(Request { method, path, query, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
+    let (path, qs) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = BTreeMap::new();
+    for pair in qs.split('&').filter(|p| !p.is_empty()) {
+        match pair.split_once('=') {
+            Some((k, v)) => query.insert(k.to_string(), v.to_string()),
+            None => query.insert(pair.to_string(), String::new()),
+        };
+    }
+    (path.to_string(), query)
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let mut body = String::new();
+    resp.body.write(&mut body);
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).context("write head")?;
+    stream.write_all(body.as_bytes()).context("write body")?;
+    stream.flush().context("flush")
+}
+
+/// Blocking JSON-over-HTTP client call; returns `(status, body)`. An
+/// empty response body parses as `Json::Null`. The read timeout is long
+/// enough to sit through a server-side event long-poll.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(180))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+    let payload = body
+        .map(|b| {
+            let mut s = String::new();
+            b.write(&mut s);
+            s
+        })
+        .unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes()).context("write request")?;
+    stream.write_all(payload.as_bytes()).context("write request body")?;
+    stream.flush().ok();
+    let mut raw = Vec::new();
+    stream.take(MAX_MESSAGE as u64).read_to_end(&mut raw).context("read response")?;
+    let head_end = find_head_end(&raw).ok_or_else(|| anyhow!("malformed response"))?;
+    let head = std::str::from_utf8(&raw[..head_end]).context("response head not UTF-8")?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("no status in response: {head}"))?;
+    let body_bytes = &raw[head_end + 4..];
+    let body = if body_bytes.is_empty() {
+        Json::Null
+    } else {
+        let text = std::str::from_utf8(body_bytes).context("response body not UTF-8")?;
+        Json::parse(text).map_err(|e| anyhow!("response not JSON: {e}"))?
+    };
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_routing() {
+        let server = Server::bind(0).unwrap();
+        let addr = server.addr.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handler: Handler = Arc::new(|req: &Request| match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/echo") => Response::ok(Json::obj(vec![
+                ("got", req.body.clone().unwrap_or(Json::Null)),
+                (
+                    "q",
+                    Json::str(req.query.get("tag").cloned().unwrap_or_default()),
+                ),
+            ])),
+            ("GET", "/ping") => Response::ok(Json::obj(vec![("pong", Json::Bool(true))])),
+            _ => Response::err(404, "no such route"),
+        });
+        let t = std::thread::spawn(move || server.serve(handler, stop2));
+
+        let (st, body) = request(&addr, "GET", "/ping", None).unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body.field("pong").unwrap().as_bool(), Some(true));
+
+        let payload = Json::obj(vec![("x", Json::num(42.0))]);
+        let (st, body) = request(&addr, "POST", "/echo?tag=abc", Some(&payload)).unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body.field("got").unwrap().field("x").unwrap().as_f64(), Some(42.0));
+        assert_eq!(body.field("q").unwrap().as_str(), Some("abc"));
+
+        let (st, body) = request(&addr, "GET", "/nope", None).unwrap();
+        assert_eq!(st, 404);
+        assert!(body.field("error").unwrap().as_str().unwrap().contains("route"));
+
+        stop.store(true, Ordering::SeqCst);
+        t.join().unwrap().unwrap();
+    }
+}

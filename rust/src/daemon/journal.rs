@@ -1,0 +1,575 @@
+//! The daemon's **durable job store**: an append-only journal of
+//! submissions and state transitions, fsync'd at every admission boundary.
+//!
+//! One record per line, `{fnv1a_checksum_hex}\t{json}\n`. The checksum is
+//! FNV-1a 64 over the JSON text, so a torn write at the tail (power loss,
+//! `kill -9` mid-append) is detected and dropped instead of misread.
+//! Record kinds (`"rec"` discriminant):
+//!
+//! - `meta` — the daemon's digest-load-bearing settings (model, training
+//!   options), written once on first start and validated on every restart.
+//! - `submit` — one admitted job: idempotency token, tenant + weight,
+//!   session job id, fair-share priority, `d`, exec mode, and the full
+//!   adapter configs. Written (and fsync'd) *before* the session sees the
+//!   job, so a crash in between re-submits on recovery rather than losing
+//!   the admission.
+//! - `adapter_done` — the [`AdapterDigest`] of one finished adapter. The
+//!   tensors already live in the checkpoint pool; the digest is what makes
+//!   post-crash accounting bit-exact.
+//! - `job_done` / `job_failed` / `cancelled` — job closure.
+//! - `drain` — clean shutdown marker (every running pack checkpointed).
+//!
+//! Recovery policy ([`recover`]): a corrupt or truncated **trailing**
+//! record is dropped with a warning (the crash interrupted that append —
+//! by the write protocol nothing after it can exist); corruption anywhere
+//! earlier is a hard error (the file was tampered with or the disk is
+//! bad); an unknown record kind is a hard error (the journal came from a
+//! newer schema — resuming would silently drop state); a duplicate submit
+//! token keeps the first record and warns (re-acked admission); a missing
+//! or empty journal is a fresh start.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::LoraConfig;
+use crate::costmodel::ExecMode;
+use crate::session::Policy;
+use crate::trace::{
+    config_from_json, config_to_json, mode_name, mode_parse, options_from_json,
+    options_to_json, policy_name, AdapterDigest,
+};
+use crate::train::TrainOptions;
+use crate::util::hash::fnv1a;
+use crate::util::json::Json;
+
+/// On-disk journal schema version; [`recover`] refuses other versions.
+pub const JOURNAL_SCHEMA: u64 = 1;
+
+/// The daemon settings a journal was recorded under. `model` and
+/// `options` are digest-load-bearing (they seed every trajectory);
+/// changing them under an existing journal is refused. The rest is
+/// timing-only provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Meta {
+    pub model: String,
+    pub gpus: usize,
+    pub policy: Policy,
+    pub elastic: bool,
+    pub rebucket: bool,
+    pub options: TrainOptions,
+}
+
+/// One admitted job as journaled at its admission boundary.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    /// Client idempotency token; a re-sent token re-acks instead of
+    /// double-admitting.
+    pub token: String,
+    pub tenant: String,
+    pub weight: f64,
+    /// Session job id (daemon-assigned, dense).
+    pub job: usize,
+    /// Fair-share priority the job was enqueued at.
+    pub priority: i32,
+    pub d: usize,
+    pub mode: ExecMode,
+    pub configs: Vec<LoraConfig>,
+}
+
+/// Append-side handle. Every append is checksummed and fsync'd before it
+/// returns, so anything the daemon acknowledged is on disk.
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+}
+
+impl Journal {
+    pub fn open(path: &Path) -> Result<Journal> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir {}", dir.display()))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        Ok(Journal { path: path.to_path_buf(), file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append(&mut self, rec: &Json) -> Result<()> {
+        let mut text = String::new();
+        rec.write(&mut text);
+        let line = seal(&text);
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|_| self.file.sync_all())
+            .with_context(|| format!("append journal {}", self.path.display()))
+    }
+
+    pub fn meta(&mut self, m: &Meta) -> Result<()> {
+        self.append(&Json::obj(vec![
+            ("rec", Json::str("meta")),
+            ("schema", Json::num(JOURNAL_SCHEMA as f64)),
+            ("model", Json::str(m.model.as_str())),
+            ("gpus", Json::num(m.gpus as f64)),
+            ("policy", Json::str(policy_name(m.policy))),
+            ("elastic", Json::Bool(m.elastic)),
+            ("rebucket", Json::Bool(m.rebucket)),
+            ("options", options_to_json(&m.options)),
+        ]))
+    }
+
+    pub fn submit(&mut self, s: &Submission) -> Result<()> {
+        self.append(&Json::obj(vec![
+            ("rec", Json::str("submit")),
+            ("token", Json::str(s.token.as_str())),
+            ("tenant", Json::str(s.tenant.as_str())),
+            ("weight", Json::num(s.weight)),
+            ("job", Json::num(s.job as f64)),
+            ("priority", Json::num(s.priority as f64)),
+            ("d", Json::num(s.d as f64)),
+            ("mode", Json::str(mode_name(s.mode))),
+            ("adapters", Json::arr(s.configs.iter().map(config_to_json))),
+        ]))
+    }
+
+    pub fn adapter_done(&mut self, job: usize, adapter: usize, d: &AdapterDigest) -> Result<()> {
+        self.append(&Json::obj(vec![
+            ("rec", Json::str("adapter_done")),
+            ("job", Json::num(job as f64)),
+            ("adapter", Json::num(adapter as f64)),
+            ("digest", d.to_json()),
+        ]))
+    }
+
+    pub fn job_done(&mut self, job: usize) -> Result<()> {
+        self.append(&Json::obj(vec![
+            ("rec", Json::str("job_done")),
+            ("job", Json::num(job as f64)),
+        ]))
+    }
+
+    pub fn job_failed(&mut self, job: usize, error: &str) -> Result<()> {
+        self.append(&Json::obj(vec![
+            ("rec", Json::str("job_failed")),
+            ("job", Json::num(job as f64)),
+            ("error", Json::str(error)),
+        ]))
+    }
+
+    pub fn cancelled(&mut self, job: usize) -> Result<()> {
+        self.append(&Json::obj(vec![
+            ("rec", Json::str("cancelled")),
+            ("job", Json::num(job as f64)),
+        ]))
+    }
+
+    pub fn drain(&mut self) -> Result<()> {
+        self.append(&Json::obj(vec![("rec", Json::str("drain"))]))
+    }
+}
+
+/// Checksum-prefix one serialized record into its on-disk line.
+fn seal(json_text: &str) -> String {
+    format!("{:016x}\t{json_text}\n", fnv1a(json_text.as_bytes()))
+}
+
+/// Everything [`recover`] reconstructs from a journal.
+#[derive(Debug, Default)]
+pub struct Recovered {
+    pub meta: Option<Meta>,
+    /// Admitted jobs in journal (= admission) order, deduped by token.
+    pub submissions: Vec<Submission>,
+    /// Finished adapters: id → journaled digest.
+    pub digests: BTreeMap<usize, AdapterDigest>,
+    /// Finished adapters: id → host job.
+    pub adapter_jobs: BTreeMap<usize, usize>,
+    pub done: BTreeSet<usize>,
+    pub failed: BTreeMap<usize, String>,
+    pub cancelled: BTreeSet<usize>,
+    /// A `drain` record was the journal's logical tail: the previous
+    /// process shut down cleanly with every running pack checkpointed.
+    pub drained: bool,
+    /// Non-fatal recovery notes (torn tail dropped, duplicate token).
+    pub warnings: Vec<String>,
+}
+
+impl Recovered {
+    /// Journal-derived floor for the daemon's next job id.
+    pub fn next_job_id(&self) -> usize {
+        self.submissions.iter().map(|s| s.job + 1).max().unwrap_or(0)
+    }
+
+    /// Journal-derived floor for the daemon's next adapter id.
+    pub fn next_adapter_id(&self) -> usize {
+        self.submissions
+            .iter()
+            .flat_map(|s| s.configs.iter().map(|c| c.id + 1))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Replay a journal into a [`Recovered`] state (see module docs for the
+/// corruption policy). A missing file is a fresh start, not an error.
+pub fn recover(path: &Path) -> Result<Recovered> {
+    let mut out = Recovered::default();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(anyhow!("read journal {}: {e}", path.display())),
+    };
+    let lines: Vec<&str> = text.lines().collect();
+    let mut tokens: BTreeSet<String> = BTreeSet::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let last = i + 1 == lines.len();
+        let rec = match parse_line(line) {
+            Ok(r) => r,
+            Err(e) if last => {
+                // Torn tail: the crash interrupted this append. Nothing
+                // after it can exist (appends are sequential + fsync'd),
+                // so dropping it loses at most the un-acked record.
+                out.warnings
+                    .push(format!("journal line {}: dropped torn record ({e})", i + 1));
+                break;
+            }
+            Err(e) => bail!("journal {} line {}: {e}", path.display(), i + 1),
+        };
+        let kind = rec
+            .field("rec")
+            .ok()
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow!("journal line {}: record without 'rec' kind", i + 1))?
+            .to_string();
+        match kind.as_str() {
+            "meta" => {
+                let schema = rec
+                    .field("schema")?
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("meta record: bad schema"))?;
+                if schema != JOURNAL_SCHEMA {
+                    bail!(
+                        "journal {} is schema v{schema}; this build reads v{JOURNAL_SCHEMA}",
+                        path.display()
+                    );
+                }
+                let policy = rec
+                    .field("policy")?
+                    .as_str()
+                    .and_then(Policy::parse)
+                    .ok_or_else(|| anyhow!("meta record: bad policy"))?;
+                out.meta = Some(Meta {
+                    model: jstr(&rec, "model")?,
+                    gpus: jusize(&rec, "gpus")?,
+                    policy,
+                    elastic: jbool(&rec, "elastic")?,
+                    rebucket: jbool(&rec, "rebucket")?,
+                    options: options_from_json(rec.field("options")?)?,
+                });
+            }
+            "submit" => {
+                let token = jstr(&rec, "token")?;
+                if !tokens.insert(token.clone()) {
+                    out.warnings.push(format!(
+                        "journal line {}: duplicate submit token '{token}' — \
+                         keeping the first admission",
+                        i + 1
+                    ));
+                    continue;
+                }
+                let configs = rec
+                    .field("adapters")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("submit record: 'adapters' not an array"))?
+                    .iter()
+                    .map(config_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                out.submissions.push(Submission {
+                    token,
+                    tenant: jstr(&rec, "tenant")?,
+                    weight: jf64(&rec, "weight")?,
+                    job: jusize(&rec, "job")?,
+                    priority: jf64(&rec, "priority")? as i32,
+                    d: jusize(&rec, "d")?,
+                    mode: mode_parse(&jstr(&rec, "mode")?)?,
+                    configs,
+                });
+            }
+            "adapter_done" => {
+                let adapter = jusize(&rec, "adapter")?;
+                out.adapter_jobs.insert(adapter, jusize(&rec, "job")?);
+                out.digests
+                    .insert(adapter, AdapterDigest::from_json(rec.field("digest")?)?);
+            }
+            "job_done" => {
+                out.done.insert(jusize(&rec, "job")?);
+            }
+            "job_failed" => {
+                out.failed.insert(jusize(&rec, "job")?, jstr(&rec, "error")?);
+            }
+            "cancelled" => {
+                out.cancelled.insert(jusize(&rec, "job")?);
+            }
+            "drain" => {
+                out.drained = true;
+            }
+            other => bail!(
+                "journal {} line {}: unknown record kind '{other}' — written by a \
+                 newer schema; refusing to resume from a partially understood journal",
+                path.display(),
+                i + 1
+            ),
+        }
+        // Any record after a drain marker means the daemon restarted and
+        // worked further; the drain no longer describes the tail state.
+        if kind != "drain" {
+            out.drained = false;
+        }
+    }
+    Ok(out)
+}
+
+/// Checksum-verify and parse one journal line.
+fn parse_line(line: &str) -> Result<Json> {
+    let (sum, body) = line
+        .split_once('\t')
+        .ok_or_else(|| anyhow!("no checksum separator"))?;
+    let stored =
+        u64::from_str_radix(sum, 16).map_err(|_| anyhow!("bad checksum '{sum}'"))?;
+    let actual = fnv1a(body.as_bytes());
+    if stored != actual {
+        bail!("checksum mismatch (stored {stored:016x}, computed {actual:016x})");
+    }
+    Json::parse(body).map_err(|e| anyhow!("bad JSON: {e}"))
+}
+
+fn jstr(v: &Json, k: &str) -> Result<String> {
+    Ok(v.field(k)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{k}': expected string"))?
+        .to_string())
+}
+
+fn jusize(v: &Json, k: &str) -> Result<usize> {
+    v.field(k)?.as_usize().ok_or_else(|| anyhow!("field '{k}': expected integer"))
+}
+
+fn jf64(v: &Json, k: &str) -> Result<f64> {
+    v.field(k)?.as_f64().ok_or_else(|| anyhow!("field '{k}': expected number"))
+}
+
+fn jbool(v: &Json, k: &str) -> Result<bool> {
+    v.field(k)?.as_bool().ok_or_else(|| anyhow!("field '{k}': expected bool"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::TrainBudget;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("plora-journal-{name}"));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn meta_fixture() -> Meta {
+        Meta {
+            model: "nano".into(),
+            gpus: 2,
+            policy: Policy::Priority,
+            elastic: false,
+            rebucket: true,
+            options: TrainOptions {
+                budget: TrainBudget { dataset: 32, epochs: 1 },
+                eval_batches: 2,
+                seed: 17,
+                log_every: 0,
+            },
+        }
+    }
+
+    fn sub_fixture(token: &str, job: usize) -> Submission {
+        Submission {
+            token: token.into(),
+            tenant: "alice".into(),
+            weight: 2.0,
+            job,
+            priority: -125,
+            d: 1,
+            mode: ExecMode::Packed,
+            configs: vec![LoraConfig {
+                id: job * 10,
+                lr: 2e-3,
+                batch: 1,
+                rank: 8,
+                alpha_ratio: 1.0,
+                task: "modadd".into(),
+            }],
+        }
+    }
+
+    fn digest_fixture() -> AdapterDigest {
+        AdapterDigest {
+            task: "modadd".into(),
+            rank: 8,
+            batch: 1,
+            lr_bits: 2e-3f64.to_bits(),
+            steps: 32,
+            first_loss: 1.5f32.to_bits(),
+            final_loss: 0.25f32.to_bits(),
+            base_loss: 1.75f32.to_bits(),
+            base_acc: 0.5f32.to_bits(),
+            eval_loss: 0.3f32.to_bits(),
+            eval_acc: 0.875f32.to_bits(),
+            param_hash: 0x1234_5678_9abc_def0,
+            curve: vec![(0, 1.5f32.to_bits())],
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_record_kinds() {
+        let path = tmp("roundtrip");
+        let mut j = Journal::open(&path).unwrap();
+        j.meta(&meta_fixture()).unwrap();
+        j.submit(&sub_fixture("t1", 0)).unwrap();
+        j.submit(&sub_fixture("t2", 1)).unwrap();
+        j.adapter_done(0, 0, &digest_fixture()).unwrap();
+        j.job_done(0).unwrap();
+        j.job_failed(1, "boom \"quoted\"").unwrap();
+        j.cancelled(2).unwrap();
+        j.drain().unwrap();
+        let r = recover(&path).unwrap();
+        assert!(r.warnings.is_empty(), "{:?}", r.warnings);
+        assert_eq!(r.meta, Some(meta_fixture()));
+        assert_eq!(r.submissions.len(), 2);
+        assert_eq!(r.submissions[0].token, "t1");
+        assert_eq!(r.submissions[1].job, 1);
+        assert_eq!(r.submissions[0].configs[0].task, "modadd");
+        assert_eq!(r.digests.get(&0), Some(&digest_fixture()));
+        assert_eq!(r.adapter_jobs.get(&0), Some(&0));
+        assert!(r.done.contains(&0));
+        assert_eq!(r.failed.get(&1).unwrap(), "boom \"quoted\"");
+        assert!(r.cancelled.contains(&2));
+        assert!(r.drained, "drain was the journal tail");
+        assert_eq!(r.next_job_id(), 2);
+        assert_eq!(r.next_adapter_id(), 11);
+    }
+
+    #[test]
+    fn empty_and_missing_journals_are_fresh_starts() {
+        let missing = tmp("missing");
+        let r = recover(&missing).unwrap();
+        assert!(r.meta.is_none() && r.submissions.is_empty() && r.warnings.is_empty());
+        let empty = tmp("empty");
+        std::fs::write(&empty, "").unwrap();
+        let r = recover(&empty).unwrap();
+        assert!(r.meta.is_none() && r.submissions.is_empty() && r.warnings.is_empty());
+    }
+
+    /// A torn trailing record (crash mid-append) is dropped with a
+    /// warning; everything before it survives.
+    #[test]
+    fn truncated_tail_is_dropped_with_warning() {
+        let path = tmp("torn");
+        let mut j = Journal::open(&path).unwrap();
+        j.meta(&meta_fixture()).unwrap();
+        j.submit(&sub_fixture("t1", 0)).unwrap();
+        j.job_done(0).unwrap();
+        // Simulate a torn append: half a line, no trailing newline.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("{text}0123456789abcdef\t{{\"rec\":\"sub")).unwrap();
+        let r = recover(&path).unwrap();
+        assert_eq!(r.submissions.len(), 1);
+        assert!(r.done.contains(&0));
+        assert_eq!(r.warnings.len(), 1);
+        assert!(r.warnings[0].contains("torn"), "{}", r.warnings[0]);
+    }
+
+    /// The same torn bytes anywhere but the tail are a hard error.
+    #[test]
+    fn corruption_mid_file_is_fatal() {
+        let path = tmp("midcorrupt");
+        let mut j = Journal::open(&path).unwrap();
+        j.submit(&sub_fixture("t1", 0)).unwrap();
+        j.submit(&sub_fixture("t2", 1)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        // Flip one byte inside the first record's JSON body.
+        lines[0] = lines[0].replace("alice", "malice");
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let err = recover(&path).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    /// A duplicate submit token re-acks (first admission wins) instead of
+    /// double-admitting, with a warning.
+    #[test]
+    fn duplicate_submit_token_dedupes() {
+        let path = tmp("dup");
+        let mut j = Journal::open(&path).unwrap();
+        j.submit(&sub_fixture("t1", 0)).unwrap();
+        j.submit(&sub_fixture("t1", 1)).unwrap();
+        let r = recover(&path).unwrap();
+        assert_eq!(r.submissions.len(), 1);
+        assert_eq!(r.submissions[0].job, 0, "first admission wins");
+        assert_eq!(r.warnings.len(), 1);
+        assert!(r.warnings[0].contains("duplicate"), "{}", r.warnings[0]);
+    }
+
+    /// Well-formed records of an unknown kind mean a newer schema wrote
+    /// the journal: refuse rather than silently dropping state.
+    #[test]
+    fn unknown_record_kind_is_fatal() {
+        let path = tmp("unknown");
+        let mut j = Journal::open(&path).unwrap();
+        j.submit(&sub_fixture("t1", 0)).unwrap();
+        let body = "{\"rec\":\"flux_capacitor\",\"job\":0}";
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(&seal(body));
+        // Append a valid record after it so the unknown kind is not in
+        // torn-tail position.
+        text.push_str(&seal("{\"rec\":\"job_done\",\"job\":0}"));
+        std::fs::write(&path, text).unwrap();
+        let err = recover(&path).unwrap_err().to_string();
+        assert!(err.contains("flux_capacitor"), "{err}");
+    }
+
+    /// An unknown kind in tail position is still fatal — the record is
+    /// intact (checksum passes), so this is schema skew, not a torn write.
+    #[test]
+    fn unknown_record_kind_at_tail_is_fatal() {
+        let path = tmp("unknown-tail");
+        let mut j = Journal::open(&path).unwrap();
+        j.submit(&sub_fixture("t1", 0)).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(&seal("{\"rec\":\"flux_capacitor\",\"job\":0}"));
+        std::fs::write(&path, text).unwrap();
+        assert!(recover(&path).is_err());
+    }
+
+    #[test]
+    fn restart_after_drain_clears_the_drained_flag() {
+        let path = tmp("redrain");
+        let mut j = Journal::open(&path).unwrap();
+        j.submit(&sub_fixture("t1", 0)).unwrap();
+        j.drain().unwrap();
+        j.submit(&sub_fixture("t2", 1)).unwrap();
+        let r = recover(&path).unwrap();
+        assert!(!r.drained, "work after a drain marker voids it");
+    }
+}

@@ -1,0 +1,764 @@
+//! **Tuning-as-a-service**: a durable multi-tenant daemon wrapping one
+//! [`Session`] with an HTTP control plane and crash-exact recovery
+//! (DESIGN.md §13).
+//!
+//! Three pieces compose it:
+//!
+//! - [`journal`] — the append-only durable job store. Every admission is
+//!   fsync'd *before* the session sees the job (a crash in the gap
+//!   re-submits; the reverse order would lose an acknowledged job), and
+//!   every finished adapter's [`AdapterDigest`] is journaled *after* its
+//!   checkpoint-pool write (a crash in that gap deterministically re-runs
+//!   the adapter to the same bits).
+//! - [`http`] — a dependency-free localhost HTTP/1.1 + JSON control plane:
+//!   submit / status / cancel / list / long-poll events / digest. The
+//!   event wire format is the session's own [`Event`] vocabulary,
+//!   serialized verbatim by [`crate::trace::event_to_json`].
+//! - [`tenant`] — weighted fair-share (SFQ) admission, mapped onto the
+//!   session's priority scheduler.
+//!
+//! **Shutdown vs crash.** `SIGTERM`/`SIGINT` (or `POST /v1/shutdown`)
+//! drain gracefully: the control plane stops, the session suspends —
+//! running packs checkpoint their members through the pool and requeue —
+//! and a `drain` marker seals the journal. `SIGKILL` gets no courtesy,
+//! and needs none: on restart, recovery replays the journal, closes jobs
+//! whose every adapter has a journaled digest, and re-submits the rest —
+//! resuming mid-budget from preemption checkpoints where they exist and
+//! from step 0 where they don't. Both paths land on bit-identical
+//! trajectories (the repo-wide determinism invariant), so the combined
+//! digest after a crash equals the uninterrupted run's.
+
+pub mod http;
+pub mod journal;
+pub mod tenant;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::ResourceMonitor;
+use crate::config::{pool, LoraConfig};
+use crate::costmodel::{ExecMode, Pack};
+use crate::engine::CheckpointPool;
+use crate::planner::PlannedJob;
+use crate::runtime::Runtime;
+use crate::session::{Event, Policy, Session};
+use crate::trace::{event_to_json, AdapterDigest, SessionDigest};
+use crate::train::{AdapterReport, MemberResume, TrainOptions};
+use crate::util::json::Json;
+
+use http::{Handler, Request, Response, Server};
+use journal::{Journal, Meta, Submission};
+use tenant::FairShare;
+
+/// Daemon launch configuration (`plora serve --daemon`).
+#[derive(Debug, Clone)]
+pub struct DaemonOpts {
+    pub model: String,
+    pub gpus: usize,
+    /// State directory: journal, checkpoint pool, `daemon.addr`.
+    pub dir: PathBuf,
+    /// Control-plane port on 127.0.0.1; 0 picks an ephemeral port.
+    pub port: u16,
+    pub options: TrainOptions,
+    pub policy: Policy,
+    pub elastic: bool,
+    pub rebucket: bool,
+}
+
+/// Lifecycle of one submitted job as the control plane reports it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+fn state_name(s: JobState) -> &'static str {
+    match s {
+        JobState::Queued => "queued",
+        JobState::Running => "running",
+        JobState::Done => "done",
+        JobState::Failed => "failed",
+        JobState::Cancelled => "cancelled",
+    }
+}
+
+/// Control-plane view of one job.
+#[derive(Debug, Clone)]
+struct JobView {
+    job: usize,
+    token: String,
+    tenant: String,
+    state: JobState,
+    error: Option<String>,
+    priority: i32,
+    /// Adapter (config) ids this job owns.
+    adapters: Vec<usize>,
+    /// Adapter ids with a journaled digest.
+    finished: BTreeSet<usize>,
+}
+
+/// Everything guarded by the daemon's primary lock. The [`Session`] lives
+/// under its own separate mutex; the two are never held simultaneously
+/// (admission journals under `Inner`, *then* submits under the session
+/// lock — see the durability ordering in the module docs).
+struct Inner {
+    journal: Journal,
+    fair: FairShare,
+    jobs: BTreeMap<usize, JobView>,
+    /// Idempotency token → job id.
+    tokens: BTreeMap<String, usize>,
+    /// Adapter id → owning job id (adapters can *finish* under a different
+    /// session job when elastic admission absorbs them into a running pack).
+    owner: BTreeMap<usize, usize>,
+    /// Job id → fair-share start tag (feeds [`FairShare::complete`]).
+    tags: BTreeMap<usize, f64>,
+    next_job: usize,
+    next_adapter: usize,
+}
+
+struct Daemon {
+    inner: Mutex<Inner>,
+    session: Mutex<Session>,
+    /// Serialized session events, in emission order — the long-poll log.
+    events: Mutex<Vec<Json>>,
+    events_cv: Condvar,
+    /// Journaled digests of every finished adapter (the crash-exact oracle).
+    digests: Mutex<BTreeMap<usize, AdapterDigest>>,
+    options: TrainOptions,
+    stop: Arc<AtomicBool>,
+}
+
+/// SIGTERM/SIGINT latch. Only an atomic store happens in the handler.
+static TERM: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_term(_sig: i32) {
+    TERM.store(true, Ordering::SeqCst);
+}
+
+extern "C" {
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+/// Run the daemon until SIGTERM/SIGINT or `POST /v1/shutdown`. Returns
+/// after a clean drain (journal sealed, every running pack checkpointed).
+pub fn run(rt: Arc<Runtime>, opts: DaemonOpts) -> Result<()> {
+    std::fs::create_dir_all(&opts.dir)
+        .with_context(|| format!("mkdir {}", opts.dir.display()))?;
+    let journal_path = opts.dir.join("journal.log");
+    let recovered = journal::recover(&journal_path)?;
+    for w in &recovered.warnings {
+        eprintln!("daemon: recovery: {w}");
+    }
+    let meta = Meta {
+        model: opts.model.clone(),
+        gpus: opts.gpus,
+        policy: opts.policy,
+        elastic: opts.elastic,
+        rebucket: opts.rebucket,
+        options: opts.options.clone(),
+    };
+    if let Some(m) = &recovered.meta {
+        // Model and training options seed every trajectory; silently
+        // changing them under an existing journal would make "recovered"
+        // digests incomparable to the originals.
+        if m.model != meta.model {
+            bail!(
+                "journal {} was recorded for model '{}', daemon started with '{}'",
+                journal_path.display(),
+                m.model,
+                meta.model
+            );
+        }
+        if m.options != meta.options {
+            bail!(
+                "journal {} was recorded under different training options; \
+                 refusing to mix trajectories (use a fresh --dir)",
+                journal_path.display()
+            );
+        }
+        for (name, old, new) in [
+            ("gpus", m.gpus.to_string(), meta.gpus.to_string()),
+            ("policy", format!("{:?}", m.policy), format!("{:?}", meta.policy)),
+            ("elastic", m.elastic.to_string(), meta.elastic.to_string()),
+            ("rebucket", m.rebucket.to_string(), meta.rebucket.to_string()),
+        ] {
+            if old != new {
+                eprintln!(
+                    "daemon: {name} changed ({old} -> {new}); results are \
+                     schedule-invariant, timing will differ"
+                );
+            }
+        }
+    }
+
+    let ckpt = CheckpointPool::new(&opts.dir.join("ckpt"), rt.clone())?;
+    let mut session =
+        Session::new(rt, ResourceMonitor::new(&pool::CPU_SIM, opts.gpus), &opts.model);
+    session.options = opts.options.clone();
+    session.rebucket = opts.rebucket;
+    session.set_policy(opts.policy);
+    session.set_elastic(opts.elastic);
+    session.checkpoints = Some(ckpt.clone());
+    // Subscribe before any submission so recovery-resubmitted jobs stream
+    // their events like fresh ones.
+    let ev_rx = session.subscribe();
+    let rep_rx = session.subscribe_reports();
+
+    let mut journal = Journal::open(&journal_path)?;
+    if recovered.meta.is_none() {
+        journal.meta(&meta)?;
+    }
+
+    // Rebuild fair-share state and job views from the journal.
+    let mut inner = Inner {
+        journal,
+        fair: FairShare::new(),
+        jobs: BTreeMap::new(),
+        tokens: BTreeMap::new(),
+        owner: BTreeMap::new(),
+        tags: BTreeMap::new(),
+        next_job: recovered.next_job_id(),
+        next_adapter: recovered.next_adapter_id(),
+    };
+    for sub in &recovered.submissions {
+        inner.fair.set_weight(&sub.tenant, sub.weight);
+        let tag = inner.fair.admit(&sub.tenant, job_cost(&opts.options, &sub.configs));
+        inner.tags.insert(sub.job, tag);
+        let state = if recovered.cancelled.contains(&sub.job) {
+            JobState::Cancelled
+        } else if recovered.failed.contains_key(&sub.job) {
+            JobState::Failed
+        } else if recovered.done.contains(&sub.job) {
+            JobState::Done
+        } else {
+            JobState::Queued
+        };
+        let adapters: Vec<usize> = sub.configs.iter().map(|c| c.id).collect();
+        let finished: BTreeSet<usize> = adapters
+            .iter()
+            .copied()
+            .filter(|id| recovered.digests.contains_key(id))
+            .collect();
+        for &id in &adapters {
+            inner.owner.insert(id, sub.job);
+        }
+        inner.tokens.insert(sub.token.clone(), sub.job);
+        inner.jobs.insert(
+            sub.job,
+            JobView {
+                job: sub.job,
+                token: sub.token.clone(),
+                tenant: sub.tenant.clone(),
+                state,
+                error: recovered.failed.get(&sub.job).cloned(),
+                priority: sub.priority,
+                adapters,
+                finished,
+            },
+        );
+    }
+    // Served work advances the virtual clock (order-independent: max).
+    for job in recovered.done.iter().chain(recovered.failed.keys()) {
+        if let Some(&tag) = inner.tags.get(job) {
+            inner.fair.complete(tag);
+        }
+    }
+
+    // Re-submit unfinished jobs: only the adapters without a journaled
+    // digest, resuming mid-budget where a preemption checkpoint exists.
+    let mut resubmitted = 0usize;
+    let mut resumed = 0usize;
+    for sub in &recovered.submissions {
+        let view_state = inner.jobs[&sub.job].state;
+        if view_state != JobState::Queued {
+            continue;
+        }
+        let remaining: Vec<LoraConfig> = sub
+            .configs
+            .iter()
+            .filter(|c| !recovered.digests.contains_key(&c.id))
+            .cloned()
+            .collect();
+        if remaining.is_empty() {
+            // Every adapter finished but the crash beat the job_done
+            // record; close it now.
+            inner.journal.job_done(sub.job)?;
+            inner.jobs.get_mut(&sub.job).unwrap().state = JobState::Done;
+            continue;
+        }
+        let mut resume: Vec<(usize, MemberResume)> = vec![];
+        for c in &remaining {
+            if ckpt.has_resume(&opts.model, c.id) {
+                resume.push((c.id, ckpt.load_resume(&opts.model, c.id)?));
+            }
+        }
+        resumed += resume.len();
+        let job = PlannedJob {
+            id: sub.job,
+            pack: Pack::new(remaining),
+            d: sub.d,
+            mode: sub.mode,
+        };
+        session.submit_planned_resume(job, sub.priority, resume)?;
+        resubmitted += 1;
+    }
+    if !recovered.submissions.is_empty() {
+        println!(
+            "daemon: recovered {} jobs from {} ({} finished, {} resubmitted, \
+             {} adapters resuming mid-budget)",
+            recovered.submissions.len(),
+            journal_path.display(),
+            recovered.done.len(),
+            resubmitted,
+            resumed,
+        );
+    }
+
+    let daemon = Arc::new(Daemon {
+        inner: Mutex::new(inner),
+        session: Mutex::new(session),
+        events: Mutex::new(vec![]),
+        events_cv: Condvar::new(),
+        digests: Mutex::new(recovered.digests),
+        options: opts.options.clone(),
+        stop: Arc::new(AtomicBool::new(false)),
+    });
+
+    spawn_event_pump(Arc::clone(&daemon), ev_rx);
+    spawn_report_pump(Arc::clone(&daemon), rep_rx);
+
+    unsafe {
+        signal(SIGTERM, on_term as usize);
+        signal(SIGINT, on_term as usize);
+    }
+
+    let server = Server::bind(opts.port)?;
+    let addr = server.addr;
+    let addr_file = opts.dir.join("daemon.addr");
+    std::fs::write(&addr_file, addr.to_string())
+        .with_context(|| format!("write {}", addr_file.display()))?;
+    println!("daemon: listening on http://{addr} (state in {})", opts.dir.display());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+
+    let handler_daemon = Arc::clone(&daemon);
+    let handler: Handler = Arc::new(move |req: &Request| handler_daemon.route(req));
+    let http_stop = Arc::clone(&daemon.stop);
+    let http_thread = std::thread::spawn(move || server.serve(handler, http_stop));
+
+    while !TERM.load(Ordering::SeqCst) && !daemon.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Graceful drain: stop admitting, checkpoint every running pack
+    // through the pool, seal the journal.
+    println!("daemon: draining (checkpointing running packs)");
+    daemon.stop.store(true, Ordering::SeqCst);
+    {
+        let mut session = daemon.session.lock().unwrap();
+        session.suspend();
+        session.wait_quiesced();
+    }
+    daemon.inner.lock().unwrap().journal.drain()?;
+    let _ = std::fs::remove_file(&addr_file);
+    match http_thread.join() {
+        Ok(r) => r?,
+        Err(_) => eprintln!("daemon: control-plane thread panicked"),
+    }
+    println!("daemon: drained cleanly");
+    Ok(())
+}
+
+/// One job's admission cost for fair share: its total training steps.
+fn job_cost(options: &TrainOptions, configs: &[LoraConfig]) -> f64 {
+    configs.iter().map(|c| options.budget.steps(c.batch)).sum::<usize>() as f64
+}
+
+fn spawn_event_pump(d: Arc<Daemon>, rx: mpsc::Receiver<Event>) {
+    std::thread::spawn(move || {
+        for ev in rx {
+            d.on_event(&ev);
+        }
+    });
+}
+
+fn spawn_report_pump(d: Arc<Daemon>, rx: mpsc::Receiver<(usize, AdapterReport)>) {
+    std::thread::spawn(move || {
+        for (host_job, report) in rx {
+            d.on_report(host_job, &report);
+        }
+    });
+}
+
+impl Daemon {
+    /// Append a session event to the long-poll log and fold job lifecycle
+    /// transitions into the control-plane views. Terminal states
+    /// (`Cancelled`, `Failed`, `Done`) are never overridden — a cancel
+    /// that races the final `JobFinished` stays a cancel.
+    fn on_event(&self, ev: &Event) {
+        {
+            let mut log = self.events.lock().unwrap();
+            log.push(event_to_json(ev));
+            self.events_cv.notify_all();
+        }
+        match ev {
+            Event::JobStarted { job, .. } => {
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(v) = inner.jobs.get_mut(job) {
+                    if v.state == JobState::Queued {
+                        v.state = JobState::Running;
+                    }
+                }
+            }
+            Event::JobFinished { job, .. } => {
+                // `JobFinished` alone does not close the view: an
+                // elastically absorbed job emits a zero-adapter finish
+                // while its adapters ride another pack. Closure requires
+                // every owned adapter's digest (checked in maybe_close).
+                let mut inner = self.inner.lock().unwrap();
+                maybe_close(&mut inner, *job);
+            }
+            Event::JobFailed { job, error, .. } => {
+                let mut inner = self.inner.lock().unwrap();
+                let Some(v) = inner.jobs.get_mut(job) else { return };
+                if matches!(v.state, JobState::Cancelled | JobState::Done | JobState::Failed)
+                {
+                    return;
+                }
+                v.state = JobState::Failed;
+                v.error = Some(error.clone());
+                if let Err(e) = inner.journal.job_failed(*job, error) {
+                    eprintln!("daemon: journal job_failed({job}): {e}");
+                }
+                // A failed job consumed service; advance the vclock.
+                if let Some(&tag) = inner.tags.get(job) {
+                    inner.fair.complete(tag);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// A finished adapter's report arrived (its checkpoint-pool write
+    /// already happened, session-side): journal its digest, then fold it
+    /// into its *owning* job's view — `host_job` is where it ran, which
+    /// differs from where it was submitted after elastic absorption.
+    fn on_report(&self, host_job: usize, report: &AdapterReport) {
+        let id = report.config.id;
+        let digest = AdapterDigest::of_report(report);
+        self.digests.lock().unwrap().insert(id, digest.clone());
+        let mut inner = self.inner.lock().unwrap();
+        let owner = inner.owner.get(&id).copied().unwrap_or(host_job);
+        if let Err(e) = inner.journal.adapter_done(owner, id, &digest) {
+            eprintln!("daemon: journal adapter_done({owner}, {id}): {e}");
+        }
+        if let Some(v) = inner.jobs.get_mut(&owner) {
+            v.finished.insert(id);
+        }
+        maybe_close(&mut inner, owner);
+    }
+
+    /// Control-plane router.
+    fn route(&self, req: &Request) -> Response {
+        let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+        match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["v1", "health"]) => self.health(),
+            ("POST", ["v1", "jobs"]) => self.submit(req),
+            ("GET", ["v1", "jobs"]) => self.list(),
+            ("GET", ["v1", "jobs", id]) => match id.parse::<usize>() {
+                Ok(id) => self.status(id),
+                Err(_) => Response::err(400, format!("bad job id '{id}'")),
+            },
+            ("POST", ["v1", "jobs", id, "cancel"]) => match id.parse::<usize>() {
+                Ok(id) => self.cancel(id),
+                Err(_) => Response::err(400, format!("bad job id '{id}'")),
+            },
+            ("GET", ["v1", "events"]) => self.events(req),
+            ("GET", ["v1", "digest"]) => self.digest(),
+            ("POST", ["v1", "shutdown"]) => {
+                self.stop.store(true, Ordering::SeqCst);
+                Response::ok(Json::obj(vec![("stopping", Json::Bool(true))]))
+            }
+            (m, _) if m != "GET" && m != "POST" => {
+                Response::err(405, format!("method {m} not allowed"))
+            }
+            _ => Response::err(404, format!("no route {} {}", req.method, req.path)),
+        }
+    }
+
+    fn health(&self) -> Response {
+        let inner = self.inner.lock().unwrap();
+        let queued =
+            inner.jobs.values().filter(|v| v.state == JobState::Queued).count();
+        let running =
+            inner.jobs.values().filter(|v| v.state == JobState::Running).count();
+        Response::ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("jobs", Json::num(inner.jobs.len() as f64)),
+            ("queued", Json::num(queued as f64)),
+            ("running", Json::num(running as f64)),
+        ]))
+    }
+
+    /// `POST /v1/jobs`: admit one job. Body:
+    /// `{tenant?, weight?, token?, d?, mode?, adapters: [{task, rank?,
+    /// batch?, lr?, alpha_ratio?}]}`. The journal record is fsync'd before
+    /// the session sees the job (durable admission), and a re-sent
+    /// idempotency token re-acks the original admission.
+    fn submit(&self, req: &Request) -> Response {
+        let Some(body) = &req.body else {
+            return Response::err(400, "submit: JSON body required");
+        };
+        let tenant = body
+            .field("tenant")
+            .ok()
+            .and_then(|t| t.as_str())
+            .unwrap_or("default")
+            .to_string();
+        let weight =
+            body.field("weight").ok().and_then(|w| w.as_f64()).unwrap_or(1.0);
+        let d = body.field("d").ok().and_then(|v| v.as_usize()).unwrap_or(1);
+        let mode = match body.field("mode").ok().and_then(|m| m.as_str()) {
+            None | Some("packed") => ExecMode::Packed,
+            Some("sequential") => ExecMode::Sequential,
+            Some(other) => {
+                return Response::err(400, format!("submit: unknown mode '{other}'"))
+            }
+        };
+        let Some(specs) = body.field("adapters").ok().and_then(|a| a.as_arr()) else {
+            return Response::err(400, "submit: 'adapters' array required");
+        };
+        if specs.is_empty() {
+            return Response::err(400, "submit: empty adapter list");
+        }
+
+        let (planned, priority, view_json) = {
+            let mut inner = self.inner.lock().unwrap();
+            // Idempotent re-submit: same token re-acks the original job.
+            if let Some(token) = body.field("token").ok().and_then(|t| t.as_str()) {
+                if let Some(&job) = inner.tokens.get(token) {
+                    let v = &inner.jobs[&job];
+                    let mut fields = view_fields(v);
+                    fields.push(("deduped", Json::Bool(true)));
+                    return Response::ok(Json::obj(fields));
+                }
+            }
+            let job_id = inner.next_job;
+            let mut configs = vec![];
+            for (i, s) in specs.iter().enumerate() {
+                let Some(task) = s.field("task").ok().and_then(|t| t.as_str()) else {
+                    return Response::err(400, format!("submit: adapter {i}: 'task' required"));
+                };
+                configs.push(LoraConfig {
+                    id: inner.next_adapter + i,
+                    task: task.to_string(),
+                    rank: s.field("rank").ok().and_then(|v| v.as_usize()).unwrap_or(8),
+                    batch: s.field("batch").ok().and_then(|v| v.as_usize()).unwrap_or(1),
+                    lr: s.field("lr").ok().and_then(|v| v.as_f64()).unwrap_or(2e-3),
+                    alpha_ratio: s
+                        .field("alpha_ratio")
+                        .ok()
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(1.0),
+                });
+            }
+            let token = body
+                .field("token")
+                .ok()
+                .and_then(|t| t.as_str())
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("job-{job_id}"));
+            inner.fair.set_weight(&tenant, weight);
+            let tag = inner.fair.admit(&tenant, job_cost(&self.options, &configs));
+            let priority = FairShare::priority(tag);
+            let sub = Submission {
+                token: token.clone(),
+                tenant: tenant.clone(),
+                weight,
+                job: job_id,
+                priority,
+                d,
+                mode,
+                configs: configs.clone(),
+            };
+            // Durable admission: fsync the submit record BEFORE the
+            // session sees the job. Crash in the gap => recovery
+            // re-submits. The reverse order could run (and even finish)
+            // a job that no journal remembers.
+            if let Err(e) = inner.journal.submit(&sub) {
+                return Response::err(500, format!("journal: {e}"));
+            }
+            inner.next_job = job_id + 1;
+            inner.next_adapter += configs.len();
+            inner.tags.insert(job_id, tag);
+            inner.tokens.insert(token.clone(), job_id);
+            let adapters: Vec<usize> = configs.iter().map(|c| c.id).collect();
+            for &id in &adapters {
+                inner.owner.insert(id, job_id);
+            }
+            let view = JobView {
+                job: job_id,
+                token,
+                tenant: tenant.clone(),
+                state: JobState::Queued,
+                error: None,
+                priority,
+                adapters,
+                finished: BTreeSet::new(),
+            };
+            let vj = Json::obj(view_fields(&view));
+            inner.jobs.insert(job_id, view);
+            let planned =
+                PlannedJob { id: job_id, pack: Pack::new(configs), d, mode };
+            (planned, priority, vj)
+        };
+
+        let job_id = planned.id;
+        let submitted = self.session.lock().unwrap().submit_planned_at(planned, priority);
+        if let Err(e) = submitted {
+            let mut inner = self.inner.lock().unwrap();
+            let msg = e.to_string();
+            if let Err(je) = inner.journal.job_failed(job_id, &msg) {
+                eprintln!("daemon: journal job_failed({job_id}): {je}");
+            }
+            if let Some(v) = inner.jobs.get_mut(&job_id) {
+                v.state = JobState::Failed;
+                v.error = Some(msg.clone());
+            }
+            return Response::err(400, format!("submit: {msg}"));
+        }
+        Response::ok(view_json)
+    }
+
+    fn list(&self) -> Response {
+        let inner = self.inner.lock().unwrap();
+        Response::ok(Json::obj(vec![(
+            "jobs",
+            Json::arr(inner.jobs.values().map(|v| Json::obj(view_fields(v)))),
+        )]))
+    }
+
+    fn status(&self, job: usize) -> Response {
+        let inner = self.inner.lock().unwrap();
+        match inner.jobs.get(&job) {
+            Some(v) => Response::ok(Json::obj(view_fields(v))),
+            None => Response::err(404, format!("no job {job}")),
+        }
+    }
+
+    /// `POST /v1/jobs/{id}/cancel`. The view flips to `Cancelled` (and the
+    /// journal records it) *before* the session is told — the session's
+    /// follow-up `JobFinished` event then cannot overwrite the state.
+    fn cancel(&self, job: usize) -> Response {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let Some(v) = inner.jobs.get_mut(&job) else {
+                return Response::err(404, format!("no job {job}"));
+            };
+            if !matches!(v.state, JobState::Queued | JobState::Running) {
+                return Response::err(
+                    409,
+                    format!("job {job} is already {}", state_name(v.state)),
+                );
+            }
+            v.state = JobState::Cancelled;
+            if let Err(e) = inner.journal.cancelled(job) {
+                eprintln!("daemon: journal cancelled({job}): {e}");
+            }
+        }
+        let found = self.session.lock().unwrap().cancel(job);
+        Response::ok(Json::obj(vec![
+            ("job", Json::num(job as f64)),
+            ("cancelled", Json::Bool(true)),
+            // False when the job slipped to completion in the race window;
+            // finished adapters keep their digests either way.
+            ("interrupted", Json::Bool(found)),
+        ]))
+    }
+
+    /// `GET /v1/events?since=N&wait=MS`: the session event stream as
+    /// recorded JSON (the same vocabulary traces use). Long-polls up to
+    /// `wait` ms for events past `since`, then returns what exists.
+    fn events(&self, req: &Request) -> Response {
+        let since = req
+            .query
+            .get("since")
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(0);
+        let wait_ms = req
+            .query
+            .get("wait")
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(0)
+            .min(60_000);
+        let deadline = Instant::now() + Duration::from_millis(wait_ms);
+        let mut log = self.events.lock().unwrap();
+        while log.len() <= since {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            log = self.events_cv.wait_timeout(log, left).unwrap().0;
+        }
+        let events: Vec<Json> = log[since.min(log.len())..].to_vec();
+        Response::ok(Json::obj(vec![
+            ("next", Json::num(log.len() as f64)),
+            ("events", Json::Arr(events)),
+        ]))
+    }
+
+    /// `GET /v1/digest`: the combined [`SessionDigest`] over every
+    /// finished adapter — the bit-exact oracle crash-recovery tests
+    /// compare across kill/restart boundaries.
+    fn digest(&self) -> Response {
+        let adapters = self.digests.lock().unwrap().clone();
+        Response::ok(SessionDigest { adapters }.to_json())
+    }
+}
+
+/// Close a job's view once every adapter it owns has a digest. Called on
+/// `JobFinished` *and* after each adapter report: an elastically absorbed
+/// job has no own `JobFinished` with adapters — its last report closes it.
+fn maybe_close(inner: &mut Inner, job: usize) {
+    let Some(v) = inner.jobs.get(&job) else { return };
+    if !matches!(v.state, JobState::Queued | JobState::Running) {
+        return;
+    }
+    if !v.adapters.iter().all(|a| v.finished.contains(a)) {
+        return;
+    }
+    if let Err(e) = inner.journal.job_done(job) {
+        eprintln!("daemon: journal job_done({job}): {e}");
+    }
+    inner.jobs.get_mut(&job).unwrap().state = JobState::Done;
+    if let Some(&tag) = inner.tags.get(&job) {
+        inner.fair.complete(tag);
+    }
+}
+
+fn view_fields(v: &JobView) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        ("job", Json::num(v.job as f64)),
+        ("token", Json::str(v.token.as_str())),
+        ("tenant", Json::str(v.tenant.as_str())),
+        ("state", Json::str(state_name(v.state))),
+        ("priority", Json::num(v.priority as f64)),
+        ("adapters", Json::arr(v.adapters.iter().map(|&a| Json::num(a as f64)))),
+        ("finished", Json::arr(v.finished.iter().map(|&a| Json::num(a as f64)))),
+    ];
+    if let Some(e) = &v.error {
+        fields.push(("error", Json::str(e.as_str())));
+    }
+    fields
+}

@@ -1,0 +1,197 @@
+//! Multi-tenant **weighted fair-share** admission, mapped onto the
+//! session's priority scheduler.
+//!
+//! Classic start-time fair queuing (SFQ): each tenant carries a virtual
+//! time that advances by `cost / weight` per admitted job, and a job's
+//! *start tag* is `max(global_vclock, tenant_vtime)`. Lower tag = earlier
+//! virtual start = runs first, so a weight-3 tenant's tags advance a third
+//! as fast as a weight-1 tenant's and it gets ~3× the throughput — while
+//! the weight-1 tenant's tags stay finite, so it always completes
+//! (no starvation: a heavy tenant's tags strictly increase past any fixed
+//! light-tenant tag).
+//!
+//! The global vclock advances only when a job is **served**
+//! ([`FairShare::complete`] with the job's own start tag) — never at
+//! admission. Advancing it at admission would let one tenant's far-future
+//! backlog tag drag every other tenant's next tag up to it, erasing the
+//! weighting. Serving-time advancement is what SFQ prescribes: the vclock
+//! tracks the virtual start of the work the server has actually reached,
+//! so a tenant that joins (or returns from idle) enters *there* — it
+//! neither banks credit for past idleness nor pays for other tenants'
+//! queued-but-unserved backlog.
+//!
+//! Tags are a pure function of the admit/complete call sequence (no wall
+//! clocks), so the daemon can reconstruct fair-share state from its
+//! journal on restart. Recovery replays admissions in journal order and
+//! then applies the completions; the reconstructed tags steer
+//! *scheduling* only — trajectories and digests are bitwise invariant to
+//! execution order, so fairness state never touches crash-exactness.
+
+use std::collections::BTreeMap;
+
+/// Start-time fair-queuing state across tenants.
+#[derive(Debug, Default)]
+pub struct FairShare {
+    /// Virtual time the server has reached: the largest start tag among
+    /// jobs served so far.
+    vclock: f64,
+    tenants: BTreeMap<String, Tenant>,
+}
+
+#[derive(Debug)]
+struct Tenant {
+    weight: f64,
+    /// This tenant's virtual finish time: where its next job's tag starts.
+    vtime: f64,
+}
+
+impl FairShare {
+    pub fn new() -> FairShare {
+        FairShare::default()
+    }
+
+    /// Set a tenant's weight (share of throughput relative to other
+    /// tenants). Applies to jobs admitted from now on; clamped away from
+    /// zero so `cost / weight` stays finite.
+    pub fn set_weight(&mut self, tenant: &str, weight: f64) {
+        let w = if weight.is_finite() && weight > 1e-6 { weight } else { 1e-6 };
+        self.tenants
+            .entry(tenant.to_string())
+            .and_modify(|t| t.weight = w)
+            .or_insert(Tenant { weight: w, vtime: 0.0 });
+    }
+
+    /// Admit one job of `cost` (total training steps) for `tenant` and
+    /// return its start tag. An idle tenant re-enters at the current
+    /// vclock (no banked credit), a busy one queues behind its own
+    /// backlog.
+    pub fn admit(&mut self, tenant: &str, cost: f64) -> f64 {
+        let t = self
+            .tenants
+            .entry(tenant.to_string())
+            .or_insert(Tenant { weight: 1.0, vtime: 0.0 });
+        let tag = if self.vclock > t.vtime { self.vclock } else { t.vtime };
+        t.vtime = tag + cost.max(0.0) / t.weight;
+        tag
+    }
+
+    /// A job with start tag `tag` was served (finished or failed after
+    /// running): advance the vclock to it. Cancelled-while-queued jobs are
+    /// *not* reported here — the server never reached them.
+    pub fn complete(&mut self, tag: f64) {
+        if tag > self.vclock {
+            self.vclock = tag;
+        }
+    }
+
+    /// Map a start tag onto the session's `i32` priority scale (higher
+    /// runs first): negate so earlier virtual starts win, scale by 1000 so
+    /// fractional tag gaps survive the rounding.
+    pub fn priority(tag: f64) -> i32 {
+        (-(tag * 1000.0)).round().clamp(i32::MIN as f64, i32::MAX as f64) as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Weights 3:1, equal-cost jobs admitted interleaved while none have
+    /// been served: the heavy tenant gets exactly three tags strictly
+    /// below the light tenant's second tag.
+    #[test]
+    fn weighted_interleave_is_three_to_one() {
+        let mut f = FairShare::new();
+        f.set_weight("heavy", 3.0);
+        f.set_weight("light", 1.0);
+        let mut h = vec![];
+        let mut l = vec![];
+        for _ in 0..4 {
+            h.push(f.admit("heavy", 3.0));
+            l.push(f.admit("light", 3.0));
+        }
+        assert_eq!(h, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(l, vec![0.0, 3.0, 6.0, 9.0]);
+        let heavy_before = h.iter().filter(|&&t| t < l[1]).count();
+        assert_eq!(heavy_before, 3, "3× the throughput between light's jobs");
+    }
+
+    /// A tenant spamming jobs cannot starve another: its tags strictly
+    /// increase, so only finitely many outrank any fixed tag.
+    #[test]
+    fn no_starvation() {
+        let mut f = FairShare::new();
+        f.set_weight("spammer", 100.0);
+        f.set_weight("victim", 1.0);
+        let victim_tag = f.admit("victim", 10.0);
+        let mut last = -1.0;
+        let mut outranking = 0;
+        for _ in 0..10_000 {
+            let t = f.admit("spammer", 10.0);
+            assert!(t > last, "spammer tags must strictly increase");
+            last = t;
+            if t <= victim_tag {
+                outranking += 1;
+            }
+        }
+        assert!(outranking <= 1, "only the tied first job may share the victim's tag");
+        assert!(last > victim_tag, "spammer eventually queues behind the victim");
+    }
+
+    /// Tags are a pure function of the admit/complete sequence — the
+    /// property journal-based recovery depends on.
+    #[test]
+    fn tags_replay_deterministically() {
+        let run = || {
+            let mut f = FairShare::new();
+            let mut tags = vec![];
+            for (tenant, w, cost) in
+                [("a", 2.0, 32.0), ("b", 1.0, 64.0), ("a", 2.0, 32.0), ("b", 1.0, 16.0)]
+            {
+                f.set_weight(tenant, w);
+                let t = f.admit(tenant, cost);
+                f.complete(t);
+                tags.push(t.to_bits());
+            }
+            tags
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// An idle tenant re-enters at the served vclock, not at 0 — idleness
+    /// is not banked as a priority monopoly over busy tenants.
+    #[test]
+    fn idle_tenant_reenters_at_vclock() {
+        let mut f = FairShare::new();
+        f.set_weight("busy", 1.0);
+        f.set_weight("idle", 1.0);
+        for _ in 0..5 {
+            let t = f.admit("busy", 10.0);
+            f.complete(t);
+        }
+        let tag = f.admit("idle", 10.0);
+        assert_eq!(tag, 40.0, "re-enter at the served vclock (busy's last tag)");
+    }
+
+    /// Queued-but-unserved backlog must NOT drag other tenants' tags up —
+    /// the regression the admission-time-vclock design would cause.
+    #[test]
+    fn unserved_backlog_does_not_inflate_other_tenants() {
+        let mut f = FairShare::new();
+        f.set_weight("a", 1.0);
+        f.set_weight("b", 1.0);
+        let _big = f.admit("b", 1000.0); // tag 0, b.vtime = 1000, unserved
+        let a1 = f.admit("a", 10.0);
+        assert_eq!(a1, 0.0, "b's backlog is queued, not served; a starts at 0");
+    }
+
+    #[test]
+    fn priority_orders_lower_tags_first() {
+        let hi = FairShare::priority(0.5);
+        let lo = FairShare::priority(2.0);
+        assert!(hi > lo, "earlier virtual start must map to higher priority");
+        // Extreme tags saturate instead of wrapping.
+        assert_eq!(FairShare::priority(1e300), i32::MIN);
+        assert_eq!(FairShare::priority(-1e300), i32::MAX);
+    }
+}

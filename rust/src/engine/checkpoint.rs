@@ -131,6 +131,16 @@ impl CheckpointPool {
         std::fs::write(&meta, s).with_context(|| format!("write {}", meta.display()))
     }
 
+    /// Whether a complete preemption checkpoint (tensors + sidecar) exists
+    /// for this adapter — the probe `replay --from-checkpoint` and the
+    /// daemon's crash recovery use to decide between resuming mid-budget
+    /// and restarting from step 0 (both are bit-identical; resuming just
+    /// skips the already-executed steps).
+    pub fn has_resume(&self, model: &str, config_id: usize) -> bool {
+        let (bin, meta) = self.resume_paths(model, config_id);
+        bin.is_file() && meta.is_file()
+    }
+
     /// Load a preemption checkpoint written by
     /// [`CheckpointPool::save_resume`].
     pub fn load_resume(&self, model: &str, config_id: usize) -> Result<MemberResume> {

@@ -33,6 +33,7 @@ pub mod runtime;
 pub mod train;
 pub mod config;
 pub mod costmodel;
+pub mod daemon;
 pub mod metrics;
 pub mod planner;
 pub mod search;

@@ -48,7 +48,12 @@ USAGE: plora <subcommand> [flags]
            [--record PATH]
   serve    --model <tinylm> [--configs N] [--gpus N] [--steps N] [--no-rebucket]
            [--policy fifo|priority|preempt] [--elastic] [--record PATH]
-  replay   <trace.json> [--sim]
+           [--daemon --dir DIR --port P]  durable multi-tenant daemon mode
+  submit   --task T [--task T2 ...] [--rank R] [--batch B] [--lr X] [--alpha A]
+           [--tenant NAME --weight W] [--token TOK] [--d N] [--addr HOST:PORT]
+  status   [job] [--digest] [--addr HOST:PORT]
+  cancel   <job> [--addr HOST:PORT]
+  replay   <trace.json> [--sim] [--from-checkpoint DIR]
   perf-budget  --current BENCH.json --baseline SNAPSHOT.json [--tolerance F]
            [--warn-only] [--update-baseline]
   quality  --model <tinylm> [--steps N] [--per-task N]
@@ -70,6 +75,9 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("status") => cmd_status(&args),
+        Some("cancel") => cmd_cancel(&args),
         Some("replay") => cmd_replay(&args),
         Some("perf-budget") => cmd_perf_budget(&args),
         Some("quality") => cmd_quality(&args),
@@ -349,6 +357,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// and render the live event stream (job starts, adapter completions,
 /// re-buckets, calibration refreshes) as it happens, then the summary.
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("daemon") {
+        return cmd_daemon(args);
+    }
     let rt = runtime()?;
     let model = args.get_or("model", "nano").to_string();
     let gpus = args.usize("gpus", 2)?;
@@ -427,9 +438,124 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `plora serve --daemon`: the durable multi-tenant tuning service
+/// (DESIGN.md §13) — journal + checkpoint pool in `--dir`, HTTP control
+/// plane on 127.0.0.1, crash-exact recovery on restart.
+fn cmd_daemon(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let steps = args.usize("steps", 32)?;
+    let opts = plora::daemon::DaemonOpts {
+        model: args.get_or("model", "nano").to_string(),
+        gpus: args.usize("gpus", 2)?,
+        dir: PathBuf::from(args.get_or("dir", "plora-daemon")),
+        port: args.usize("port", 7733)? as u16,
+        options: TrainOptions {
+            budget: TrainBudget { dataset: steps, epochs: 1 },
+            eval_batches: 2,
+            seed: 17,
+            log_every: 0,
+        },
+        policy: args.get("policy").and_then(Policy::parse).unwrap_or(Policy::Priority),
+        elastic: args.flag("elastic"),
+        rebucket: !args.flag("no-rebucket"),
+    };
+    plora::daemon::run(rt, opts)
+}
+
+fn daemon_addr(args: &Args) -> String {
+    args.get_or("addr", "127.0.0.1:7733").to_string()
+}
+
+fn print_json(v: &Json) {
+    let mut s = String::new();
+    v.write(&mut s);
+    println!("{s}");
+}
+
+/// `plora submit`: POST one job to a running daemon. Repeat `--task` for
+/// multi-adapter packs; `--tenant`/`--weight` drive fair share.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let mut tasks = args.get_all("task");
+    if tasks.is_empty() {
+        tasks.push("modadd");
+    }
+    let rank = args.usize("rank", 8)?;
+    let batch = args.usize("batch", 1)?;
+    let lr = args.f64("lr", 2e-3)?;
+    let alpha = args.f64("alpha", 1.0)?;
+    let adapters = Json::arr(tasks.iter().map(|t| {
+        Json::obj(vec![
+            ("task", Json::str(*t)),
+            ("rank", Json::num(rank as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("lr", Json::num(lr)),
+            ("alpha_ratio", Json::num(alpha)),
+        ])
+    }));
+    let mut fields = vec![
+        ("tenant", Json::str(args.get_or("tenant", "default"))),
+        ("weight", Json::num(args.f64("weight", 1.0)?)),
+        ("adapters", adapters),
+        ("d", Json::num(args.usize("d", 1)? as f64)),
+        ("mode", Json::str(args.get_or("mode", "packed"))),
+    ];
+    if let Some(token) = args.get("token") {
+        fields.push(("token", Json::str(token)));
+    }
+    let body = Json::obj(fields);
+    let (st, resp) =
+        plora::daemon::http::request(&daemon_addr(args), "POST", "/v1/jobs", Some(&body))?;
+    print_json(&resp);
+    if st != 200 {
+        bail!("submit failed (HTTP {st})");
+    }
+    Ok(())
+}
+
+/// `plora status [job]`: list jobs, show one job, or `--digest` for the
+/// combined crash-exact session digest.
+fn cmd_status(args: &Args) -> Result<()> {
+    let addr = daemon_addr(args);
+    let path = if args.flag("digest") {
+        "/v1/digest".to_string()
+    } else {
+        match args.positional.first() {
+            Some(id) => format!("/v1/jobs/{id}"),
+            None => "/v1/jobs".to_string(),
+        }
+    };
+    let (st, resp) = plora::daemon::http::request(&addr, "GET", &path, None)?;
+    print_json(&resp);
+    if st != 200 {
+        bail!("status failed (HTTP {st})");
+    }
+    Ok(())
+}
+
+/// `plora cancel <job>`: cancel a queued or running job.
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: plora cancel <job> [--addr HOST:PORT]"))?;
+    let (st, resp) = plora::daemon::http::request(
+        &daemon_addr(args),
+        "POST",
+        &format!("/v1/jobs/{id}/cancel"),
+        None,
+    )?;
+    print_json(&resp);
+    if st != 200 {
+        bail!("cancel failed (HTTP {st})");
+    }
+    Ok(())
+}
+
 /// `plora replay <trace.json>`: re-execute a recorded session and assert
 /// the result is bit-identical to the recording; `--sim` instead rebuilds
-/// the timeline through the simulator's cost model (no training).
+/// the timeline through the simulator's cost model (no training);
+/// `--from-checkpoint <dir>` seeds the replay from a checkpoint pool's
+/// preemption midpoints (same bits, fewer re-executed steps).
 fn cmd_replay(args: &Args) -> Result<()> {
     let path = args
         .positional
@@ -466,7 +592,13 @@ fn cmd_replay(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
-    let out = plora::trace::replay(rt, &trace)?;
+    let out = match args.get("from-checkpoint") {
+        Some(dir) => {
+            let ckpt = CheckpointPool::new(&PathBuf::from(dir), rt.clone())?;
+            plora::trace::replay_resume(rt, &trace, &ckpt)?
+        }
+        None => plora::trace::replay(rt, &trace)?,
+    };
     if out.matches() {
         println!(
             "replay OK: {} adapters bit-identical to the recording (fingerprint {:016x}), \

@@ -91,6 +91,28 @@ pub trait ShardStepExec: Send + Sync {
         scratch: &mut Scratch,
     ) -> Result<GradStep>;
 
+    /// Logits-only eval over this shard's `(n, r, bs)` slice — the same
+    /// input layout as [`ShardStepExec::run_grads`] — returning per-slot
+    /// `(loss, acc)`. Eval is per-row independent (no cross-slot
+    /// reduction at all), so a slot-partitioned sharded eval is bitwise
+    /// identical to the fused eval executable. `None` (the default) means
+    /// the backend cannot evaluate at shard granularity; the sharding
+    /// layer then falls back to the fused eval path.
+    #[allow(clippy::too_many_arguments)]
+    fn run_eval(
+        &self,
+        base: &[HostTensor],
+        lora: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        mask: &HostTensor,
+        scale: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        let _ = (base, lora, tokens, targets, mask, scale, scratch);
+        Ok(None)
+    }
+
     /// One AdamW update of the full `(n, r)` state from externally
     /// reduced gradients (`grads` in `LORA_ORDER`, full-bucket shapes).
     /// `t` is the per-adapter step-counter vector *before* the update.

@@ -175,6 +175,36 @@ impl ShardStepExec for ShardExec {
         Ok(GradStep { grads, per_loss: per })
     }
 
+    fn run_eval(
+        &self,
+        base: &[HostTensor],
+        lora_t: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        mask: &HostTensor,
+        scale: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        let (n, r, bs) = (self.n, self.r, self.bs);
+        if lora_t.len() != NL || base.len() != NB || scale.len() != n {
+            bail_shapes("run_eval", lora_t.len(), base.len(), scale.len(), n)?;
+        }
+        let base_refs: Vec<&HostTensor> = base.iter().collect();
+        let lora_refs: Vec<&HostTensor> = lora_t.iter().collect();
+        let lora = lora_slices(&lora_refs)?;
+        let tokens_i = tokens.as_i32()?;
+        let targets_i = targets.as_i32()?;
+        let mask_f = mask.as_f32()?;
+        // The exact logits-only forward the fused eval executable runs
+        // ([`TrainEvalExec::run`], eval branch), at the shard shape. Every
+        // slot's logits/loss/acc depend only on its own rows, so the
+        // shard-sliced eval is bitwise identical to the fused one.
+        let (ws, _) = scratch.parts(Workspace::new);
+        tinylm::forward_logits(&self.spec, &base_refs, &lora, scale, tokens_i, n, bs, r, ws)?;
+        let (loss, acc) = tinylm::loss_and_acc(&self.spec, &ws.logits, targets_i, mask_f, n, bs);
+        Ok(Some((loss, acc)))
+    }
+
     fn run_adamw(
         &self,
         lora_t: &[HostTensor],

@@ -30,12 +30,16 @@
 //! slot granularity is exactly the finest split at which device-count
 //! invariance is achievable at zero numeric cost.
 //!
-//! Eval and checkpoint extraction read the wrapped [`TrainState`]
-//! directly (they are single-pass and device-count invariant by
+//! Eval runs data-parallel over the same shard workers
+//! ([`ShardStepExec::run_eval`]): each shard computes its slots' `(loss,
+//! acc)` from its own rows only, gathered in fixed shard order — no
+//! reduction at all, so sharded eval is bitwise identical to the fused
+//! eval executable. Checkpoint extraction reads the wrapped
+//! [`TrainState`] directly (single-pass and device-count invariant by
 //! construction). When the allocation has one device — or the backend
 //! cannot split its fused step ([`crate::runtime::ExecutionBackend::shard`]
-//! returns `None`, e.g. AOT-compiled PJRT artifacts) — `step` runs the
-//! fused executable unchanged.
+//! returns `None`, e.g. AOT-compiled PJRT artifacts) — `step` and `eval`
+//! run the fused executables unchanged.
 
 use anyhow::{bail, Result};
 
@@ -64,6 +68,9 @@ struct Shard {
     scale: Vec<f32>,
     /// Last step's outcome (taken by the reduction).
     out: Option<Result<GradStep>>,
+    /// Last eval's outcome (taken by the gather; `Ok(None)` means the
+    /// backend cannot eval at shard granularity — fused fallback).
+    eval_out: Option<Result<Option<(Vec<f32>, Vec<f32>)>>>,
     /// Last step's wall time on this shard (observability: shard-balance
     /// diagnosis via [`ShardedState::shard_secs`]).
     secs: f64,
@@ -226,6 +233,7 @@ impl ShardedState {
                 mask: HostTensor::f32(vec![nw, bs, seq], vec![0.0; nw * bs * seq])?,
                 scale: vec![0.0; nw],
                 out: None,
+                eval_out: None,
                 secs: 0.0,
             });
             lo = hi;
@@ -392,10 +400,16 @@ impl ShardedState {
         Ok(per)
     }
 
-    /// See [`TrainState::eval`] — single-pass, device-count invariant.
+    /// See [`TrainState::eval`] — but, like [`ShardedState::step`], run
+    /// data-parallel across the shard workers when sharded. Eval has no
+    /// cross-slot reduction at all (per-slot loss/acc over the slot's own
+    /// rows), so the slot-partitioned eval is bitwise identical to the
+    /// fused path; `rust/tests/session.rs` and the tests below pin it.
+    /// Falls back to the fused eval when running fused or when the
+    /// backend cannot eval at shard granularity.
     #[allow(clippy::too_many_arguments)]
     pub fn eval(
-        &self,
+        &mut self,
         exe: &Executable,
         base: &[HostTensor],
         tokens: &HostTensor,
@@ -403,7 +417,80 @@ impl ShardedState {
         loss_mask: &HostTensor,
         scale: &[f32],
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        self.inner.eval(exe, base, tokens, targets, loss_mask, scale)
+        if self.shards.is_empty() {
+            return self.inner.eval(exe, base, tokens, targets, loss_mask, scale);
+        }
+        let ShardedState { inner, shards, pool, bs, .. } = self;
+        let n = inner.n;
+        if tokens.shape != [n, *bs, inner.model.seq] {
+            bail!(
+                "sharded eval: batch tensors {:?} do not match the built ({n}, {bs}, {}) layout",
+                tokens.shape,
+                inner.model.seq
+            );
+        }
+        if scale.len() != n {
+            bail!("sharded eval: {} scale entries for pack of {n}", scale.len());
+        }
+        let row = *bs * inner.model.seq;
+
+        // Scatter: current LoRA params (they changed since the last step's
+        // scatter), batch rows and scales — same layout as `step`.
+        let tok = tokens.as_i32()?;
+        let tgt = targets.as_i32()?;
+        let msk = loss_mask.as_f32()?;
+        for sh in shards.iter_mut() {
+            for (full, dst) in inner.lora.iter().zip(sh.lora.iter_mut()) {
+                scatter_slots(full, dst, n, sh.lo, sh.hi)?;
+            }
+            sh.tokens.as_i32_mut()?.copy_from_slice(&tok[sh.lo * row..sh.hi * row]);
+            sh.targets.as_i32_mut()?.copy_from_slice(&tgt[sh.lo * row..sh.hi * row]);
+            sh.mask.as_f32_mut()?.copy_from_slice(&msk[sh.lo * row..sh.hi * row]);
+            sh.scale.copy_from_slice(&scale[sh.lo..sh.hi]);
+            sh.eval_out = None;
+        }
+
+        // Logits-only forward per shard, one persistent worker per device.
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(shards.len());
+            for sh in shards.iter_mut() {
+                tasks.push(Box::new(move || {
+                    let r = sh.exe.run_eval(
+                        base,
+                        &sh.lora,
+                        &sh.tokens,
+                        &sh.targets,
+                        &sh.mask,
+                        &sh.scale,
+                        &mut sh.scratch,
+                    );
+                    sh.eval_out = Some(r);
+                }));
+            }
+            pool.as_ref().expect("shard pool").scoped(tasks);
+        }
+
+        // Gather per-slot (loss, acc) in fixed shard order 0..d-1. Each
+        // slot's metrics come from exactly one shard — no reduction, no
+        // reassociation, bitwise identity with the fused eval.
+        let mut loss = vec![0.0f32; n];
+        let mut acc = vec![0.0f32; n];
+        for sh in shards.iter_mut() {
+            match sh.eval_out.take().expect("shard evaluated")? {
+                Some((l, a)) => {
+                    if l.len() != sh.nw() {
+                        bail!("shard returned {} eval losses for {} slots", l.len(), sh.nw());
+                    }
+                    loss[sh.lo..sh.hi].copy_from_slice(&l);
+                    acc[sh.lo..sh.hi].copy_from_slice(&a);
+                }
+                None => {
+                    // Backend splits grads but not eval: fused fallback.
+                    return inner.eval(exe, base, tokens, targets, loss_mask, scale);
+                }
+            }
+        }
+        Ok((loss, acc))
     }
 }
 
@@ -480,6 +567,71 @@ mod tests {
             for (k, (a, b)) in want_m.iter().zip(&got_m).enumerate() {
                 assert_eq!(a, b, "m[{k}] diverged at d={d}");
             }
+        }
+    }
+
+    /// Satellite invariant: the eval pass sharded across d = 2, 3
+    /// (uneven), 4 and 8 devices returns bitwise-identical per-slot
+    /// (loss, acc) to the fused d = 1 eval — including mid-trajectory,
+    /// after params have moved.
+    #[test]
+    fn sharded_eval_is_bitwise_identical_across_device_counts() {
+        let rt = runtime();
+        let mi = rt.manifest.model("nano").unwrap().clone();
+        let info = rt.manifest.train_bucket("nano", 4, 8, 1).unwrap().clone();
+        let exe = rt.executable(&info.name).unwrap();
+        let eval_exe = rt.executable(&rt.manifest.eval_for(&info).unwrap().name.clone()).unwrap();
+        let base = rt.base_weights("nano").unwrap();
+        let seq = mi.seq;
+        let seeds = [3u64, 5, 7, 9];
+        let ranks = [8usize, 4, 8, 6];
+        let scale = [1.0f32, 0.5, 1.0, 0.8];
+
+        let run = |devs: usize| -> Vec<(Vec<u32>, Vec<u32>)> {
+            let inner = TrainState::init_per_adapter(&mi, 4, 8, &seeds, &ranks).unwrap();
+            let devices: Vec<usize> = (0..devs).collect();
+            let mut st = ShardedState::new(&rt, "nano", inner, 1, &devices).unwrap();
+            let rmask = st.rank_mask(&ranks).unwrap();
+            let mut rng = Rng::new(23);
+            let mut evals = vec![];
+            for _ in 0..2 {
+                let tokens: Vec<i32> =
+                    (0..4 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+                let mut targets = tokens.clone();
+                targets.rotate_left(1);
+                let tok = HostTensor::i32(vec![4, 1, seq], tokens).unwrap();
+                let tgt = HostTensor::i32(vec![4, 1, seq], targets).unwrap();
+                let msk = HostTensor::f32(vec![4, 1, seq], vec![1.0; 4 * seq]).unwrap();
+                // Eval both before and after a param-moving step.
+                let (l, a) = st.eval(&eval_exe, &base, &tok, &tgt, &msk, &scale).unwrap();
+                evals.push((
+                    l.iter().map(|x| x.to_bits()).collect(),
+                    a.iter().map(|x| x.to_bits()).collect(),
+                ));
+                st.step(&exe, &base, &tok, &tgt, &msk, &scale, &[2e-3, 1e-3, 2e-3, 1e-3], &rmask)
+                    .unwrap();
+            }
+            let (l, a) = {
+                let tokens: Vec<i32> =
+                    (0..4 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+                let mut targets = tokens.clone();
+                targets.rotate_left(1);
+                let tok = HostTensor::i32(vec![4, 1, seq], tokens).unwrap();
+                let tgt = HostTensor::i32(vec![4, 1, seq], targets).unwrap();
+                let msk = HostTensor::f32(vec![4, 1, seq], vec![1.0; 4 * seq]).unwrap();
+                st.eval(&eval_exe, &base, &tok, &tgt, &msk, &scale).unwrap()
+            };
+            evals.push((
+                l.iter().map(|x| x.to_bits()).collect(),
+                a.iter().map(|x| x.to_bits()).collect(),
+            ));
+            evals
+        };
+
+        let want = run(1);
+        assert!(want.iter().all(|(l, _)| l.iter().all(|&b| f32::from_bits(b).is_finite())));
+        for d in [2usize, 3, 4, 8] {
+            assert_eq!(want, run(d), "sharded eval diverged from fused at d={d}");
         }
     }
 

@@ -45,7 +45,7 @@ use std::cmp::Reverse;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -58,8 +58,8 @@ use crate::planner::rebalance::admits;
 use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
 use crate::train::{
-    run_pack_phased, BoundaryOffer, DeviceOffer, ElasticCtl, JobReport, Joiner, MemberResume,
-    PackPhaseEvent, TrainOptions,
+    run_pack_phased, AdapterReport, BoundaryOffer, DeviceOffer, ElasticCtl, JobReport, Joiner,
+    MemberResume, PackPhaseEvent, TrainOptions,
 };
 
 /// How the dispatcher orders the job queue (and when it preempts).
@@ -291,6 +291,13 @@ struct Sched {
     policy: Policy,
     elastic: bool,
     shutdown: bool,
+    /// Suspended sessions launch nothing: running jobs are being drained
+    /// to checkpoints ([`Session::suspend`], the daemon's SIGTERM path)
+    /// and queued jobs stay queued.
+    suspended: bool,
+    /// Jobs flagged for cancellation while running: their preempted
+    /// members are dropped instead of re-queued.
+    cancelled: std::collections::BTreeSet<usize>,
 }
 
 struct Shared {
@@ -300,6 +307,11 @@ struct Shared {
     t0: Instant,
     events: Mutex<Vec<Event>>,
     subscribers: Mutex<Vec<mpsc::Sender<Event>>>,
+    /// Full-report fan-out: `(host job, report)` per finished adapter.
+    /// The streaming [`Event::AdapterFinished`] is a summary; daemons
+    /// journaling crash-exact digests need `param_hash` and the loss
+    /// curve, which only the driver's [`AdapterReport`] carries.
+    report_subs: Mutex<Vec<mpsc::Sender<(usize, AdapterReport)>>>,
     outcomes: Mutex<Vec<JobOutcome>>,
     errors: Mutex<Vec<String>>,
     profile: Mutex<Vec<(f64, f64, f64)>>,
@@ -331,6 +343,13 @@ impl Shared {
     fn emit(&self, ev: Event) {
         self.subscribers.lock().unwrap().retain(|s| s.send(ev.clone()).is_ok());
         self.events.lock().unwrap().push(ev);
+    }
+
+    fn emit_report(&self, job: usize, report: &AdapterReport) {
+        self.report_subs
+            .lock()
+            .unwrap()
+            .retain(|s| s.send((job, report.clone())).is_ok());
     }
 
     fn fail(&self, job: usize, e: anyhow::Error) {
@@ -662,6 +681,7 @@ impl Session {
             t0: Instant::now(),
             events: Mutex::new(vec![]),
             subscribers: Mutex::new(vec![]),
+            report_subs: Mutex::new(vec![]),
             outcomes: Mutex::new(vec![]),
             errors: Mutex::new(vec![]),
             profile: Mutex::new(vec![]),
@@ -675,6 +695,8 @@ impl Session {
                 policy: Policy::Fifo,
                 elastic: false,
                 shutdown: false,
+                suspended: false,
+                cancelled: std::collections::BTreeSet::new(),
             }),
             sched_cv: Condvar::new(),
             switch_cost: SwitchCost::new(0.0),
@@ -752,6 +774,17 @@ impl Session {
         rx
     }
 
+    /// Subscribe to the full per-adapter reports as they finish, keyed by
+    /// the host job id. Unlike the streaming [`Event::AdapterFinished`]
+    /// summary this carries `param_hash` and the loss curve — what a
+    /// daemon needs to journal crash-exact
+    /// [`crate::trace::AdapterDigest`]s.
+    pub fn subscribe_reports(&mut self) -> mpsc::Receiver<(usize, AdapterReport)> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.report_subs.lock().unwrap().push(tx);
+        rx
+    }
+
     /// Submit a job; adapter ids are allocated by the session. Returns
     /// immediately — the job runs as soon as the policy grants it devices.
     pub fn submit(&mut self, spec: JobSpec) -> Result<JobHandle> {
@@ -788,6 +821,20 @@ impl Session {
 
     /// [`Session::submit_planned`] with an explicit queue priority.
     pub fn submit_planned_at(&mut self, job: PlannedJob, priority: i32) -> Result<JobHandle> {
+        self.submit_planned_resume(job, priority, vec![])
+    }
+
+    /// [`Session::submit_planned_at`] with resume payloads for members
+    /// that already ran part of their budget — mid-job checkpoints from
+    /// a previous process (the daemon's crash recovery, `trace`'s
+    /// replay-from-checkpoint). Payload ids must name adapters of the
+    /// job's pack; members without a payload start from step 0.
+    pub fn submit_planned_resume(
+        &mut self,
+        job: PlannedJob,
+        priority: i32,
+        resume: Vec<(usize, MemberResume)>,
+    ) -> Result<JobHandle> {
         if job.pack.n() == 0 {
             bail!("submit: empty pack in job {}", job.id);
         }
@@ -800,13 +847,27 @@ impl Session {
                 bail!("submit: adapter id {} already used in this session", c.id);
             }
         }
+        for (id, _) in &resume {
+            if !seen.contains(id) {
+                bail!("submit: resume payload for adapter {id} not in job {}", job.id);
+            }
+        }
         let max_id = job.pack.configs.iter().map(|c| c.id).max().unwrap_or(0);
         self.next_adapter_id = self.next_adapter_id.max(max_id + 1);
         self.next_job_id = self.next_job_id.max(job.id + 1);
-        self.enqueue(job, priority)
+        self.enqueue_resume(job, priority, resume)
     }
 
     fn enqueue(&mut self, job: PlannedJob, priority: i32) -> Result<JobHandle> {
+        self.enqueue_resume(job, priority, vec![])
+    }
+
+    fn enqueue_resume(
+        &mut self,
+        job: PlannedJob,
+        priority: i32,
+        resume: Vec<(usize, MemberResume)>,
+    ) -> Result<JobHandle> {
         let total = self.shared.monitor.total();
         if job.d == 0 || job.d > total {
             bail!("submit: job {} wants {} devices, pool has {total}", job.id, job.d);
@@ -821,7 +882,7 @@ impl Session {
             opts: self.options.clone(),
             rebucket: self.rebucket,
             checkpoints: self.checkpoints.clone(),
-            resume: vec![],
+            resume,
         };
         self.shared.submitted.fetch_add(1, Ordering::SeqCst);
         self.shared.sched.lock().unwrap().pending.push(p);
@@ -863,6 +924,69 @@ impl Session {
             events,
         })
     }
+
+    /// Cancel a job. A queued job is retired in place (the zero-adapter
+    /// `JobFinished` idiom elastic absorption uses); a running job is
+    /// flagged like a preemption, but its unfinished members are dropped
+    /// at the interrupt boundary instead of re-queued — adapters that
+    /// already finished stay finished (and checkpointed, if a pool is
+    /// attached). Returns whether the job was found queued or running.
+    pub fn cancel(&mut self, job: usize) -> bool {
+        {
+            let mut st = self.shared.sched.lock().unwrap();
+            if let Some(idx) = st.pending.iter().position(|p| p.job.id == job) {
+                st.pending.remove(idx);
+            } else if let Some(r) = st.running.iter().find(|r| r.job == job) {
+                st.cancelled.insert(job);
+                r.flag.store(true, Ordering::SeqCst);
+                self.shared.sched_cv.notify_all();
+                return true;
+            } else {
+                return false;
+            }
+        }
+        // Retired from the queue without running: the zero-adapter
+        // JobFinished keeps the stream invariant "every submitted job
+        // ends in JobFinished or JobFailed".
+        let at = self.shared.now();
+        self.shared.emit(Event::JobFinished { job, adapters: 0, wall: 0.0, at });
+        self.shared.complete();
+        true
+    }
+
+    /// Graceful drain (the daemon's SIGTERM path): stop launching queued
+    /// jobs and interrupt every running one as if preempted. Their
+    /// unfinished members round-trip through the checkpoint pool (when
+    /// attached) and re-queue as pending continuations — which, being
+    /// suspended, never launch. [`Session::wait_quiesced`] then blocks
+    /// until the last running pack has checkpointed and released its
+    /// devices, at which point every member is either finished or has a
+    /// durable resume payload.
+    pub fn suspend(&mut self) {
+        let mut st = self.shared.sched.lock().unwrap();
+        st.suspended = true;
+        for r in &st.running {
+            r.flag.store(true, Ordering::SeqCst);
+        }
+        self.shared.sched_cv.notify_all();
+    }
+
+    /// Block until nothing is running — every submission is either done
+    /// or parked in the queue. The drain barrier after
+    /// [`Session::suspend`].
+    pub fn wait_quiesced(&self) {
+        loop {
+            // Read the queue length *before* taking `done`: the two locks
+            // are never held together anywhere, and a stale count only
+            // delays one 50 ms re-check.
+            let pend = self.shared.sched.lock().unwrap().pending.len();
+            let done = self.shared.done.lock().unwrap();
+            if *done + pend >= self.shared.submitted.load(Ordering::SeqCst) {
+                return;
+            }
+            let _ = self.shared.done_cv.wait_timeout(done, Duration::from_millis(50)).unwrap();
+        }
+    }
 }
 
 impl Drop for Session {
@@ -882,7 +1006,10 @@ fn dispatcher(shared: Arc<Shared>) {
             break;
         }
         let avail = shared.monitor.available();
-        if let Some(idx) = pick_next(&st.pending, st.policy, avail) {
+        if st.suspended {
+            // Drain mode: launch nothing and preempt nothing until the
+            // owner lifts the suspension or the session shuts down.
+        } else if let Some(idx) = pick_next(&st.pending, st.policy, avail) {
             if let Some(alloc) = shared.monitor.try_acquire(st.pending[idx].job.d) {
                 let p = st.pending.remove(idx);
                 let flag = Arc::new(AtomicBool::new(false));
@@ -970,6 +1097,7 @@ fn run_job(
                     eval_acc: report.eval_acc,
                     at: shared.now(),
                 });
+                shared.emit_report(job_id, report);
             }
             PackPhaseEvent::AdapterAdmitted { config, from_job } => {
                 shared.emit(Event::AdapterAdmitted {
@@ -1016,6 +1144,10 @@ fn run_job(
         shared.monitor.release(extra);
     }
     shared.sched_cv.notify_all();
+    // Consume any cancellation flagged while we ran, whatever the
+    // outcome — cancelled jobs must neither leak set entries nor
+    // re-queue their members.
+    let was_cancelled = shared.sched.lock().unwrap().cancelled.remove(&job_id);
     match result {
         Ok(out) => {
             if let Some(e) = ckpt_err {
@@ -1038,6 +1170,26 @@ fn run_job(
                     device_switch_cost: shared.device_cost.estimate(),
                     at: shared.now(),
                 });
+                shared.emit(Event::JobFinished {
+                    job: job_id,
+                    adapters: out.report.adapters.len(),
+                    wall: end - start,
+                    at: end,
+                });
+                shared.outcomes.lock().unwrap().push(JobOutcome {
+                    job_id,
+                    devices,
+                    start,
+                    end,
+                    report: out.report,
+                });
+                shared.complete();
+                return;
+            }
+            // Cancelled mid-run: drop the unfinished members (the
+            // finished ones stay reported and checkpointed) and end the
+            // job here instead of re-queuing a continuation.
+            if was_cancelled {
                 shared.emit(Event::JobFinished {
                     job: job_id,
                     adapters: out.report.adapters.len(),

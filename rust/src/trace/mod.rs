@@ -40,11 +40,12 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::cluster::ResourceMonitor;
 use crate::config::{pool, LoraConfig};
 use crate::costmodel::{CostModel, ExecMode, Pack, TrainBudget};
+use crate::engine::CheckpointPool;
 use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
 use crate::session::{Event, Policy, Session, SessionReport};
 use crate::sim::{SimOptions, SimResult, Simulator};
-use crate::train::TrainOptions;
+use crate::train::{AdapterReport, TrainOptions};
 use crate::util::hash::Fnv64;
 use crate::util::json::Json;
 
@@ -78,6 +79,37 @@ pub struct AdapterDigest {
     pub curve: Vec<(usize, u32)>,
 }
 
+impl AdapterDigest {
+    /// The deterministic projection of one finished adapter's report —
+    /// what the daemon journals at each adapter's finish boundary so a
+    /// crashed process can still account for completed work bit-exactly.
+    pub fn of_report(a: &AdapterReport) -> AdapterDigest {
+        AdapterDigest {
+            task: a.config.task.clone(),
+            rank: a.config.rank,
+            batch: a.config.batch,
+            lr_bits: a.config.lr.to_bits(),
+            steps: a.steps,
+            first_loss: a.first_loss.to_bits(),
+            final_loss: a.final_loss.to_bits(),
+            base_loss: a.base_loss.to_bits(),
+            base_acc: a.base_acc.to_bits(),
+            eval_loss: a.eval_loss.to_bits(),
+            eval_acc: a.eval_acc.to_bits(),
+            param_hash: a.param_hash,
+            curve: a.curve.iter().map(|&(s, l)| (s, l.to_bits())).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        adapter_to_json(self)
+    }
+
+    pub fn from_json(v: &Json) -> Result<AdapterDigest> {
+        adapter_from_json(v)
+    }
+}
+
 /// Adapter-id-keyed digest of a [`SessionReport`] — the bitwise equality
 /// the replayer asserts. Identical regardless of which job hosted each
 /// adapter or in which order jobs finished.
@@ -91,24 +123,7 @@ impl SessionDigest {
         let mut adapters = BTreeMap::new();
         for o in &report.outcomes {
             for a in &o.report.adapters {
-                adapters.insert(
-                    a.config.id,
-                    AdapterDigest {
-                        task: a.config.task.clone(),
-                        rank: a.config.rank,
-                        batch: a.config.batch,
-                        lr_bits: a.config.lr.to_bits(),
-                        steps: a.steps,
-                        first_loss: a.first_loss.to_bits(),
-                        final_loss: a.final_loss.to_bits(),
-                        base_loss: a.base_loss.to_bits(),
-                        base_acc: a.base_acc.to_bits(),
-                        eval_loss: a.eval_loss.to_bits(),
-                        eval_acc: a.eval_acc.to_bits(),
-                        param_hash: a.param_hash,
-                        curve: a.curve.iter().map(|&(s, l)| (s, l.to_bits())).collect(),
-                    },
-                );
+                adapters.insert(a.config.id, AdapterDigest::of_report(a));
             }
         }
         SessionDigest { adapters }
@@ -529,6 +544,56 @@ pub fn replay(rt: Arc<Runtime>, trace: &Trace) -> Result<ReplayOutcome> {
     Ok(ReplayOutcome { report, digest, recorded: trace.digest.clone(), diff })
 }
 
+/// [`replay`] starting from checkpoint **midpoints** (`plora replay
+/// --from-checkpoint <dir>`): adapters with a durable resume payload in
+/// `ckpt` — left behind by a preempted or suspended session's drain —
+/// continue from their persisted optimizer state and data-stream position
+/// instead of step 0. Resumed trajectories are bit-identical to
+/// uninterrupted ones, so the digest obligation is unchanged: the
+/// recording must still match bit-for-bit. Adapters without a payload
+/// replay from step 0 as usual, and everything the replay finishes is
+/// checkpointed back into the same pool.
+pub fn replay_resume(
+    rt: Arc<Runtime>,
+    trace: &Trace,
+    ckpt: &CheckpointPool,
+) -> Result<ReplayOutcome> {
+    let monitor = ResourceMonitor::new(&pool::CPU_SIM, trace.gpus);
+    let mut session = Session::new(rt, monitor, &trace.model);
+    session.options = trace.options.clone();
+    session.rebucket = trace.rebucket;
+    session.checkpoints = Some(ckpt.clone());
+    session.set_policy(trace.policy);
+    session.set_elastic(trace.elastic);
+    let mut resumed = 0usize;
+    for j in &trace.jobs {
+        let mut resume = vec![];
+        for c in &j.configs {
+            if ckpt.has_resume(&trace.model, c.id) {
+                resume.push((c.id, ckpt.load_resume(&trace.model, c.id)?));
+            }
+        }
+        resumed += resume.len();
+        let job = PlannedJob {
+            id: j.id,
+            pack: Pack::new(j.configs.clone()),
+            d: j.d,
+            mode: j.mode,
+        };
+        session.submit_planned_resume(job, j.priority, resume)?;
+    }
+    if resumed == 0 {
+        eprintln!(
+            "plora replay: no resume payloads under {} — replaying from step 0",
+            ckpt.dir.display()
+        );
+    }
+    let report = session.drain()?;
+    let digest = SessionDigest::of(&report);
+    let diff = trace.digest.diff(&digest);
+    Ok(ReplayOutcome { report, digest, recorded: trace.digest.clone(), diff })
+}
+
 /// Timing-only replay: rebuild the schedule timeline through the
 /// simulator's cost model (same queue, priorities, policy and elastic
 /// setting) without training anything. The returned
@@ -562,7 +627,7 @@ pub fn replay_timing(cm: &CostModel, trace: &Trace) -> SimResult {
 // Serialization helpers
 // ---------------------------------------------------------------------------
 
-fn policy_name(p: Policy) -> &'static str {
+pub(crate) fn policy_name(p: Policy) -> &'static str {
     match p {
         Policy::Fifo => "fifo",
         Policy::Priority => "priority",
@@ -570,14 +635,14 @@ fn policy_name(p: Policy) -> &'static str {
     }
 }
 
-fn mode_name(m: ExecMode) -> &'static str {
+pub(crate) fn mode_name(m: ExecMode) -> &'static str {
     match m {
         ExecMode::Packed => "packed",
         ExecMode::Sequential => "sequential",
     }
 }
 
-fn mode_parse(s: &str) -> Result<ExecMode> {
+pub(crate) fn mode_parse(s: &str) -> Result<ExecMode> {
     match s {
         "packed" => Ok(ExecMode::Packed),
         "sequential" => Ok(ExecMode::Sequential),
@@ -688,7 +753,7 @@ fn jhex32(v: &Json, k: &str) -> Result<u32> {
     u32::from_str_radix(&s, 16).map_err(|_| anyhow!("field '{k}': bad hex '{s}'"))
 }
 
-fn options_to_json(o: &TrainOptions) -> Json {
+pub(crate) fn options_to_json(o: &TrainOptions) -> Json {
     Json::obj(vec![
         ("dataset", Json::num(o.budget.dataset as f64)),
         ("epochs", Json::num(o.budget.epochs as f64)),
@@ -698,7 +763,7 @@ fn options_to_json(o: &TrainOptions) -> Json {
     ])
 }
 
-fn options_from_json(v: &Json) -> Result<TrainOptions> {
+pub(crate) fn options_from_json(v: &Json) -> Result<TrainOptions> {
     Ok(TrainOptions {
         budget: TrainBudget { dataset: ju(v, "dataset")?, epochs: ju(v, "epochs")? },
         eval_batches: ju(v, "eval_batches")?,
@@ -707,7 +772,7 @@ fn options_from_json(v: &Json) -> Result<TrainOptions> {
     })
 }
 
-fn config_to_json(c: &LoraConfig) -> Json {
+pub(crate) fn config_to_json(c: &LoraConfig) -> Json {
     Json::obj(vec![
         ("id", Json::num(c.id as f64)),
         ("lr", jnum(c.lr)),
@@ -718,7 +783,7 @@ fn config_to_json(c: &LoraConfig) -> Json {
     ])
 }
 
-fn config_from_json(v: &Json) -> Result<LoraConfig> {
+pub(crate) fn config_from_json(v: &Json) -> Result<LoraConfig> {
     Ok(LoraConfig {
         id: ju(v, "id")?,
         lr: jf(v, "lr")?,

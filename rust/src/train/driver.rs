@@ -390,7 +390,7 @@ fn fill_base_metrics(
     mi: &ModelInfo,
     eval_exe: &Executable,
     base: &[HostTensor],
-    state: &TrainState,
+    state: &mut ShardedState,
     cfgs: &[LoraConfig],
     slots: &[usize],
     scale: &[f32],
@@ -575,7 +575,7 @@ pub fn run_pack_phased(
         &mi,
         &eval_exe,
         &base,
-        state.inner(),
+        &mut state,
         &cfgs,
         &slots,
         &scale,
@@ -693,7 +693,7 @@ pub fn run_pack_phased(
                 &mi,
                 &eval_exe,
                 &base,
-                state.inner(),
+                &mut state,
                 &cfgs,
                 &slots,
                 Some(&finishing),
@@ -958,7 +958,7 @@ pub fn run_pack_phased(
             &mi,
             &eval_exe,
             &base,
-            state.inner(),
+            &mut state,
             &cfgs,
             &slots,
             &scale,
@@ -1007,7 +1007,7 @@ fn eval_members(
     mi: &ModelInfo,
     eval_exe: &Executable,
     base: &[HostTensor],
-    state: &TrainState,
+    state: &mut ShardedState,
     configs: &[LoraConfig],
     slots: &[usize],
     only: Option<&[bool]>,
@@ -1015,7 +1015,7 @@ fn eval_members(
     bbs: usize,
     opts: &TrainOptions,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    let bn = state.n;
+    let bn = state.inner().n;
     let (seq, vocab) = (mi.seq, mi.vocab);
     let mut ergs: Vec<Rng> = slots
         .iter()

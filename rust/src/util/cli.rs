@@ -11,7 +11,8 @@ use std::collections::BTreeMap;
 const KNOWN_BOOLS: &[&str] = &[
     "help", "verbose", "quiet", "json", "force", "a10", "qlora", "live",
     "sim", "packed", "sequential", "markdown", "list", "fast", "no-rebucket",
-    "elastic", "grow-devices", "warn-only", "update-baseline",
+    "elastic", "grow-devices", "warn-only", "update-baseline", "daemon",
+    "digest",
 ];
 
 #[derive(Debug, Clone)]

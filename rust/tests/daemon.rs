@@ -1,0 +1,287 @@
+//! End-to-end daemon tests: spawn the real `plora` binary in
+//! `serve --daemon` mode, drive it over the HTTP control plane, and check
+//! the three service-level guarantees:
+//!
+//! 1. **Crash-exactness** — `kill -9` mid-job, restart on the same state
+//!    directory, and the combined `SessionDigest` is bit-identical to an
+//!    uninterrupted run's.
+//! 2. **Weighted fair share** — two tenants with 4:1 weights get
+//!    correspondingly ordered admission priorities, and the low-weight
+//!    tenant still completes.
+//! 3. **Cancel** — a cancelled job ends `cancelled` and never overrides
+//!    to `done`, while its neighbours finish normally.
+//!
+//! The daemon synthesizes its runtime when `artifacts/` is absent, so
+//! these tests run everywhere the unit tests do.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use plora::daemon::http::request;
+use plora::util::json::Json;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_plora")
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("plora-daemon-test-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A spawned daemon process; killed on drop so a failing assertion never
+/// leaks a child.
+struct DaemonProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for DaemonProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Start `plora serve --daemon` on `dir` (ephemeral port) and wait for it
+/// to publish its address.
+fn start_daemon(dir: &Path, steps: usize) -> DaemonProc {
+    let addr_file = dir.join("daemon.addr");
+    let _ = std::fs::remove_file(&addr_file); // stale after a SIGKILL
+    let child = Command::new(bin())
+        .args([
+            "serve",
+            "--daemon",
+            "--dir",
+            dir.to_str().unwrap(),
+            "--port",
+            "0",
+            "--model",
+            "nano",
+            "--gpus",
+            "2",
+            "--steps",
+            &steps.to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn daemon");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&addr_file) {
+            if !s.trim().is_empty() {
+                break s.trim().to_string();
+            }
+        }
+        assert!(Instant::now() < deadline, "daemon never published {}", addr_file.display());
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    DaemonProc { child, addr }
+}
+
+fn submit(addr: &str, tenant: &str, weight: f64, tasks: &[&str]) -> Json {
+    let adapters = Json::arr(tasks.iter().map(|t| {
+        Json::obj(vec![
+            ("task", Json::str(*t)),
+            ("rank", Json::num(8.0)),
+            ("batch", Json::num(1.0)),
+            ("lr", Json::num(2e-3)),
+        ])
+    }));
+    let body = Json::obj(vec![
+        ("tenant", Json::str(tenant)),
+        ("weight", Json::num(weight)),
+        ("adapters", adapters),
+    ]);
+    let (st, resp) = request(addr, "POST", "/v1/jobs", Some(&body)).expect("submit");
+    assert_eq!(st, 200, "submit failed: {resp}");
+    resp
+}
+
+fn jobs(addr: &str) -> Vec<Json> {
+    let (st, resp) = request(addr, "GET", "/v1/jobs", None).expect("list");
+    assert_eq!(st, 200);
+    resp.field("jobs").unwrap().as_arr().unwrap().to_vec()
+}
+
+fn state_of(v: &Json) -> String {
+    v.field("state").unwrap().as_str().unwrap().to_string()
+}
+
+/// Poll until every job is in a terminal state; panic on `failed`.
+fn wait_all_terminal(addr: &str, expect_jobs: usize) -> Vec<Json> {
+    let deadline = Instant::now() + Duration::from_secs(180);
+    loop {
+        let js = jobs(addr);
+        if js.len() >= expect_jobs {
+            for j in &js {
+                assert_ne!(
+                    state_of(j),
+                    "failed",
+                    "job failed: {j}",
+                );
+            }
+            if js.iter().all(|j| matches!(state_of(j).as_str(), "done" | "cancelled")) {
+                return js;
+            }
+        }
+        assert!(Instant::now() < deadline, "jobs never finished: {:?}", jobs(addr));
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn digest_text(addr: &str) -> String {
+    let (st, resp) = request(addr, "GET", "/v1/digest", None).expect("digest");
+    assert_eq!(st, 200);
+    let mut s = String::new();
+    resp.write(&mut s);
+    s
+}
+
+fn shutdown(mut d: DaemonProc) {
+    let _ = request(&d.addr, "POST", "/v1/shutdown", None);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        match d.child.try_wait().expect("try_wait") {
+            Some(status) => {
+                assert!(status.success(), "daemon exited with {status}");
+                break;
+            }
+            None => {
+                assert!(Instant::now() < deadline, "daemon never drained after shutdown");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+    // Drop still runs (kill is a no-op on a reaped child).
+}
+
+/// `kill -9` mid-flight + restart must reproduce the uninterrupted run's
+/// digest bit-for-bit (ISSUE 7 acceptance).
+#[test]
+fn sigkill_recovery_is_bit_exact() {
+    let tasks: [&[&str]; 2] = [&["modadd", "copy"], &["parity", "needle"]];
+
+    // Reference: uninterrupted run.
+    let dir_a = fresh_dir("ref");
+    let a = start_daemon(&dir_a, 32);
+    for t in tasks {
+        submit(&a.addr, "acme", 1.0, t);
+    }
+    wait_all_terminal(&a.addr, 2);
+    let want = digest_text(&a.addr);
+    assert!(want.contains("fingerprint"), "digest missing fingerprint: {want}");
+    shutdown(a);
+
+    // Crash run: same submissions, SIGKILL once training is in flight.
+    let dir_b = fresh_dir("crash");
+    let mut b = start_daemon(&dir_b, 32);
+    for t in tasks {
+        submit(&b.addr, "acme", 1.0, t);
+    }
+    // Long-poll until the session has emitted at least one event
+    // (job_started), so the kill lands mid-job, not pre-dispatch.
+    let (st, ev) =
+        request(&b.addr, "GET", "/v1/events?since=0&wait=30000", None).expect("events");
+    assert_eq!(st, 200);
+    assert!(
+        ev.field("next").unwrap().as_usize().unwrap() > 0,
+        "no events before kill: {ev}"
+    );
+    b.child.kill().expect("SIGKILL"); // Child::kill is SIGKILL on unix
+    let _ = b.child.wait();
+    drop(b);
+
+    // Restart on the same directory: journal replay + checkpoint resume.
+    let b2 = start_daemon(&dir_b, 32);
+    wait_all_terminal(&b2.addr, 2);
+    let got = digest_text(&b2.addr);
+    assert_eq!(
+        got, want,
+        "post-crash digest differs from uninterrupted run (crash-exactness violated)"
+    );
+    shutdown(b2);
+}
+
+/// Two tenants, weights 4:1: the heavy tenant's jobs are admitted at
+/// strictly better priorities than the light tenant's backlog, the
+/// priority ordering within each tenant is monotone, and — fair share,
+/// not starvation — every job of both tenants completes. Also checks
+/// idempotent re-submit by token.
+#[test]
+fn weighted_fair_share_across_tenants() {
+    let dir = fresh_dir("fairshare");
+    let d = start_daemon(&dir, 32);
+    let prio = |r: &Json| r.field("priority").unwrap().as_f64().unwrap() as i64;
+
+    let h1 = submit(&d.addr, "heavy", 4.0, &["modadd"]);
+    let h2 = submit(&d.addr, "heavy", 4.0, &["copy"]);
+    let l1 = submit(&d.addr, "light", 1.0, &["parity"]);
+    let l2 = submit(&d.addr, "light", 1.0, &["needle"]);
+    let h3 = submit(&d.addr, "heavy", 4.0, &["modadd"]);
+
+    // Weight-4 backlog advances virtual time 4x slower: heavy's second
+    // job still outranks light's second job, deterministically.
+    assert!(
+        prio(&h2) > prio(&l2),
+        "heavy backlog must outrank light backlog: h2 {} vs l2 {}",
+        prio(&h2),
+        prio(&l2)
+    );
+    // Within a tenant, tags (so priorities) are strictly monotone.
+    assert!(prio(&h1) > prio(&h2) && prio(&h2) > prio(&h3), "heavy priorities not monotone");
+    assert!(prio(&l1) > prio(&l2), "light priorities not monotone");
+
+    // Idempotency: re-sending a token re-acks the original admission.
+    let token = h1.field("token").unwrap().as_str().unwrap().to_string();
+    let body = Json::obj(vec![
+        ("tenant", Json::str("heavy")),
+        ("token", Json::str(token)),
+        ("adapters", Json::arr([Json::obj(vec![("task", Json::str("modadd"))])])),
+    ]);
+    let (st, re) = request(&d.addr, "POST", "/v1/jobs", Some(&body)).expect("re-submit");
+    assert_eq!(st, 200);
+    assert_eq!(re.field("deduped").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        re.field("job").unwrap().as_usize(),
+        h1.field("job").unwrap().as_usize(),
+        "token re-ack must return the original job"
+    );
+
+    // Fair share is not starvation: the light tenant completes too.
+    let js = wait_all_terminal(&d.addr, 5);
+    assert_eq!(js.len(), 5, "dedup must not have created a sixth job");
+    assert!(js.iter().all(|j| state_of(j) == "done"), "all jobs complete: {js:?}");
+    shutdown(d);
+}
+
+/// Cancelling a queued job sticks: it reports `cancelled` (never flipping
+/// to `done`), and the rest of the queue completes.
+#[test]
+fn cancel_sticks_and_neighbours_complete() {
+    let dir = fresh_dir("cancel");
+    let d = start_daemon(&dir, 64);
+    submit(&d.addr, "t", 1.0, &["modadd"]);
+    submit(&d.addr, "t", 1.0, &["copy"]);
+    // Two GPUs busy: the third job is queued; cancel it immediately.
+    let c = submit(&d.addr, "t", 1.0, &["parity"]);
+    let id = c.field("job").unwrap().as_usize().unwrap();
+    let (st, resp) =
+        request(&d.addr, "POST", &format!("/v1/jobs/{id}/cancel"), None).expect("cancel");
+    assert_eq!(st, 200, "cancel failed: {resp}");
+    // A second cancel of the same job is a 409, not a double-journal.
+    let (st2, _) =
+        request(&d.addr, "POST", &format!("/v1/jobs/{id}/cancel"), None).expect("re-cancel");
+    assert_eq!(st2, 409);
+
+    let js = wait_all_terminal(&d.addr, 3);
+    let cancelled: Vec<_> = js.iter().filter(|j| state_of(j) == "cancelled").collect();
+    let done: Vec<_> = js.iter().filter(|j| state_of(j) == "done").collect();
+    assert_eq!(cancelled.len(), 1, "exactly the cancelled job: {js:?}");
+    assert_eq!(cancelled[0].field("job").unwrap().as_usize(), Some(id));
+    assert_eq!(done.len(), 2, "neighbours complete: {js:?}");
+    shutdown(d);
+}
