@@ -3,19 +3,26 @@
 //!
 //! - **naive** — the pre-tiling triple-loop GEMMs with a fresh scratch
 //!   every step (the allocate-~30-buffers-per-layer-per-step behavior the
-//!   workspace arena replaced),
+//!   workspace arena replaced), per-adapter weight-gradient loop,
 //! - **tiled** — register-blocked/cache-tiled kernels + the persistent
-//!   workspace arena, single worker, and
-//! - **threads4** — tiled + arena with `PLORA_THREADS`-style row
-//!   parallelism at 4 workers.
+//!   workspace arena, single worker, per-adapter weight-gradient loop
+//!   (`PLORA_FUSED=0`),
+//! - **fused** — tiled + the batched multi-adapter dA/dB weight-gradient
+//!   GEMMs and hoisted shared-base projections (the default path),
+//! - **simd** — fused + the explicit-vector `PLORA_GEMM=simd` microkernel,
+//!   and
+//! - **threads4** — fused + `PLORA_THREADS`-style row parallelism at 4
+//!   workers.
 //!
-//! All three produce bit-identical trajectories (pinned by
+//! All variants produce bit-identical trajectories (pinned by
 //! `tests/properties.rs` and the reference-backend invariance test); only
-//! the wall clock moves. Emits `BENCH_train_step.json` (speedups +
-//! tokens/sec) to `target/` by default — `--out <path>` or
-//! `PLORA_BENCH_OUT=<dir>` redirect it for the perf-budget harness
-//! (`bench/history/`) — and appends to the shared
-//! `target/plora-bench.jsonl` like every bench.
+//! the wall clock moves. A separate microbench isolates the fused batched
+//! dA/dB reduction against the per-adapter tiled loop on the exact shapes
+//! `proj_bwd_wgrads` issues, emitting the `*_wgrads_fused_vs_tiled_x`
+//! ratios the perf budget gates. Emits `BENCH_train_step.json` to
+//! `target/` by default — `--out <path>` or `PLORA_BENCH_OUT=<dir>`
+//! redirect it for the perf-budget harness (`bench/history/`) — and
+//! appends to the shared `target/plora-bench.jsonl` like every bench.
 //!
 //! Run: `cargo bench --bench train_step`
 
@@ -31,14 +38,48 @@ struct Variant {
     label: &'static str,
     mode: gemm::Mode,
     threads: usize,
+    /// Batched multi-adapter weight-gradient GEMMs (`PLORA_FUSED`).
+    fused: bool,
     /// Drop the scratch before every step (pre-arena behavior).
     fresh_scratch: bool,
 }
 
-const VARIANTS: [Variant; 3] = [
-    Variant { label: "naive", mode: gemm::Mode::Naive, threads: 1, fresh_scratch: true },
-    Variant { label: "tiled", mode: gemm::Mode::Tiled, threads: 1, fresh_scratch: false },
-    Variant { label: "threads4", mode: gemm::Mode::Tiled, threads: 4, fresh_scratch: false },
+const VARIANTS: [Variant; 5] = [
+    Variant {
+        label: "naive",
+        mode: gemm::Mode::Naive,
+        threads: 1,
+        fused: false,
+        fresh_scratch: true,
+    },
+    Variant {
+        label: "tiled",
+        mode: gemm::Mode::Tiled,
+        threads: 1,
+        fused: false,
+        fresh_scratch: false,
+    },
+    Variant {
+        label: "fused",
+        mode: gemm::Mode::Tiled,
+        threads: 1,
+        fused: true,
+        fresh_scratch: false,
+    },
+    Variant {
+        label: "simd",
+        mode: gemm::Mode::Simd,
+        threads: 1,
+        fused: true,
+        fresh_scratch: false,
+    },
+    Variant {
+        label: "threads4",
+        mode: gemm::Mode::Tiled,
+        threads: 4,
+        fused: true,
+        fresh_scratch: false,
+    },
 ];
 
 /// Median per-step seconds for one `(model, n, r, bs)` bucket under a
@@ -65,6 +106,7 @@ fn measure(
 
     gemm::set_mode(var.mode);
     gemm::set_threads(var.threads);
+    gemm::set_fused(var.fused);
     let mut state = TrainState::init(&mi, n, r, 17);
     let rmask = state.rank_mask(&vec![r; n])?;
     let scale = vec![1.0f32; n];
@@ -86,6 +128,7 @@ fn measure(
         ("r", Json::num(r as f64)),
         ("bs", Json::num(bs as f64)),
         ("variant", Json::str(var.label)),
+        ("fused", Json::Bool(var.fused)),
     ]);
     let s = bench.measure_meta(&format!("{model}_n{n}/{}", var.label), meta, &mut || {
         if var.fresh_scratch {
@@ -95,7 +138,83 @@ fn measure(
     });
     gemm::set_mode(gemm::Mode::Tiled);
     gemm::set_threads(1);
+    gemm::set_fused(true);
     Ok(s.p50)
+}
+
+/// Isolated dA/dB weight-gradient reduction: the per-adapter tiled
+/// `mm_tn_acc` loop vs the fused `gemm::batched` driver, both
+/// single-threaded, on synthetic buffers with the exact adapter-major
+/// layouts `proj_bwd_wgrads` issues (`rows` token-rows per adapter,
+/// `d`-wide activations, rank `r`). `reps` passes per measured call keep
+/// the closure well above timer resolution. Returns per-pass
+/// `(tiled_s, fused_s)` medians.
+fn wgrads(
+    bench: &mut Bench,
+    model: &str,
+    nb: usize,
+    rows: usize,
+    d: usize,
+    r: usize,
+    reps: usize,
+) -> (f64, f64) {
+    let mut rng = Rng::new(23);
+    let mut buf = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal() as f32).collect() };
+    let input = buf(nb * rows * d);
+    let dmid = buf(nb * rows * r);
+    let mid = buf(nb * rows * r);
+    let dy = buf(nb * rows * d);
+    let scale: Vec<f32> = (0..nb).map(|i| 0.5 + 0.25 * i as f32).collect();
+    let mut da = vec![0.0f32; nb * d * r];
+    let mut db = vec![0.0f32; nb * r * d];
+
+    gemm::set_mode(gemm::Mode::Tiled);
+    gemm::set_threads(1);
+    let meta = |variant: &str| {
+        Json::obj(vec![
+            ("model", Json::str(model)),
+            ("n", Json::num(nb as f64)),
+            ("variant", Json::str(variant)),
+            ("reps", Json::num(reps as f64)),
+        ])
+    };
+    let mt = meta("wgrads_tiled");
+    let t = bench.measure_meta(&format!("{model}_n{nb}/wgrads_tiled"), mt, &mut || {
+        for _ in 0..reps {
+            da.iter_mut().for_each(|x| *x = 0.0);
+            db.iter_mut().for_each(|x| *x = 0.0);
+            for i in 0..nb {
+                gemm::mm_tn_acc(
+                    &mut da[i * d * r..(i + 1) * d * r],
+                    &input[i * rows * d..(i + 1) * rows * d],
+                    &dmid[i * rows * r..(i + 1) * rows * r],
+                    rows,
+                    d,
+                    r,
+                    1.0,
+                );
+                gemm::mm_tn_acc(
+                    &mut db[i * r * d..(i + 1) * r * d],
+                    &mid[i * rows * r..(i + 1) * rows * r],
+                    &dy[i * rows * d..(i + 1) * rows * d],
+                    rows,
+                    r,
+                    d,
+                    scale[i],
+                );
+            }
+        }
+    });
+    let mf = meta("wgrads_fused");
+    let f = bench.measure_meta(&format!("{model}_n{nb}/wgrads_fused"), mf, &mut || {
+        for _ in 0..reps {
+            da.iter_mut().for_each(|x| *x = 0.0);
+            db.iter_mut().for_each(|x| *x = 0.0);
+            gemm::batched::mm_tn_acc_par(&mut da, &input, &dmid, nb, rows, d, r, None, 1);
+            gemm::batched::mm_tn_acc_par(&mut db, &mid, &dy, nb, rows, r, d, Some(&scale), 1);
+        }
+    });
+    (t.p50 / reps as f64, f.p50 / reps as f64)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -107,8 +226,14 @@ fn main() -> anyhow::Result<()> {
     bench.target_secs = 2.0;
 
     // (model, n, r, bs) buckets from the built-in grid. `small` n=1 is the
-    // acceptance geometry; nano covers the many-small-steps regime.
-    let geoms = [("nano", 2usize, 8usize, 1usize), ("small", 1, 32, 1)];
+    // acceptance geometry for the tiled speedup; the n=4 buckets exercise
+    // the fused multi-adapter path where batching has adapters to batch.
+    let geoms = [
+        ("nano", 2usize, 8usize, 1usize),
+        ("nano", 4, 8, 1),
+        ("small", 1, 32, 1),
+        ("small", 4, 32, 1),
+    ];
     let mut rows = vec![];
     // Flat `{model}_n{n}_*` copies of the per-geom metrics ride at the
     // top level so the perf-budget harness can gate them by name.
@@ -120,36 +245,58 @@ fn main() -> anyhow::Result<()> {
         for (vi, var) in VARIANTS.iter().enumerate() {
             secs[vi] = measure(&mut bench, &rt, model, n, r, bs, *var)?;
         }
-        let (naive, tiled, thr) = (secs[0], secs[1], secs[2]);
+        let (naive, tiled, fused, simd, thr) = (secs[0], secs[1], secs[2], secs[3], secs[4]);
         let metrics = [
             ("step_naive_s", naive),
             ("step_tiled_s", tiled),
+            ("step_fused_s", fused),
+            ("step_simd_s", simd),
             ("step_threads4_s", thr),
             ("speedup_tiled_x", naive / tiled.max(1e-12)),
+            ("speedup_fused_x", naive / fused.max(1e-12)),
+            ("speedup_simd_x", naive / simd.max(1e-12)),
             ("speedup_threads4_x", naive / thr.max(1e-12)),
+            ("fused_vs_tiled_x", tiled / fused.max(1e-12)),
+            ("simd_vs_tiled_x", tiled / simd.max(1e-12)),
         ];
         for (k, v) in metrics {
             flat.insert(format!("{model}_n{n}_{k}"), Json::num(v));
         }
-        rows.push(Json::obj(vec![
+        let mut row = vec![
             ("model", Json::str(model)),
             ("n", Json::num(n as f64)),
             ("r", Json::num(r as f64)),
             ("bs", Json::num(bs as f64)),
-            ("step_naive_s", Json::num(naive)),
-            ("step_tiled_s", Json::num(tiled)),
-            ("step_threads4_s", Json::num(thr)),
-            ("speedup_tiled_x", Json::num(naive / tiled.max(1e-12))),
-            ("speedup_threads4_x", Json::num(naive / thr.max(1e-12))),
-            ("tokens_per_s_naive", Json::num(tokens_per_step / naive.max(1e-12))),
-            ("tokens_per_s_tiled", Json::num(tokens_per_step / tiled.max(1e-12))),
-            ("tokens_per_s_threads4", Json::num(tokens_per_step / thr.max(1e-12))),
-        ]));
+        ];
+        for (k, v) in metrics {
+            row.push((k, Json::num(v)));
+        }
+        row.push(("tokens_per_s_naive", Json::num(tokens_per_step / naive.max(1e-12))));
+        row.push(("tokens_per_s_fused", Json::num(tokens_per_step / fused.max(1e-12))));
+        rows.push(Json::obj(row));
         println!(
             "{model} n={n} r={r} bs={bs}: naive {naive:.4}s -> tiled {tiled:.4}s \
-             ({:.2}x) -> threads4 {thr:.4}s ({:.2}x)",
+             ({:.2}x) -> fused {fused:.4}s ({:.2}x vs tiled) -> simd {simd:.4}s \
+             -> threads4 {thr:.4}s",
             naive / tiled.max(1e-12),
-            naive / thr.max(1e-12),
+            tiled / fused.max(1e-12),
+        );
+    }
+
+    // Isolated fused-vs-tiled weight-gradient reduction at n=4 (the
+    // acceptance geometries): nano rows = bs·seq = 32, small rows = 64.
+    for (model, nb, rows_per, d, r, reps) in
+        [("nano", 4usize, 32usize, 64usize, 8usize, 256usize), ("small", 4, 64, 256, 32, 16)]
+    {
+        let (tiled, fused) = wgrads(&mut bench, model, nb, rows_per, d, r, reps);
+        let ratio = tiled / fused.max(1e-12);
+        flat.insert(format!("{model}_n{nb}_wgrads_tiled_s"), Json::num(tiled));
+        flat.insert(format!("{model}_n{nb}_wgrads_fused_s"), Json::num(fused));
+        flat.insert(format!("{model}_n{nb}_wgrads_fused_vs_tiled_x"), Json::num(ratio));
+        println!(
+            "{model} n={nb} wgrads: tiled {:.1}us -> fused {:.1}us ({ratio:.2}x)",
+            tiled * 1e6,
+            fused * 1e6,
         );
     }
     bench.finish()?;

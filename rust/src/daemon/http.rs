@@ -7,7 +7,7 @@
 //! handlers are allowed to block (the event long-poll does), and the
 //! accept loop polls a stop flag so shutdown never hangs on `accept`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -206,6 +206,56 @@ fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
     stream.flush().context("flush")
 }
 
+/// Fixed-capacity ring buffer backing the `/v1/events` long-poll log,
+/// with a **monotone cursor**: event `i` keeps index `i` forever, whether
+/// or not it is still buffered. A long-lived daemon emits events without
+/// bound, so the old unbounded `Vec` grew monotonically; the ring caps
+/// memory at `cap` events and evicts from the front. Clients that fall off
+/// the tail (cursor older than the oldest buffered event) get whatever is
+/// still buffered plus an explicit `truncated` marker instead of a silent
+/// gap — they can re-sync from `/v1/jobs` state.
+#[derive(Debug)]
+pub struct EventRing {
+    cap: usize,
+    /// Monotone index of the oldest buffered event == how many events have
+    /// been evicted so far.
+    start: usize,
+    buf: VecDeque<Json>,
+}
+
+impl EventRing {
+    /// `cap` is clamped to ≥ 1 (a zero-capacity log would make every
+    /// long-poll spin).
+    pub fn new(cap: usize) -> EventRing {
+        let cap = cap.max(1);
+        EventRing { cap, start: 0, buf: VecDeque::with_capacity(cap) }
+    }
+
+    /// Append one event, evicting the oldest if the ring is full.
+    pub fn push(&mut self, ev: Json) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.start += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    /// One past the newest event's monotone index — the `next` cursor a
+    /// caught-up client polls with.
+    pub fn end(&self) -> usize {
+        self.start + self.buf.len()
+    }
+
+    /// Every buffered event at monotone index ≥ `cursor`, plus whether the
+    /// cursor fell off the tail (events `[cursor, start)` were evicted).
+    /// A cursor at or past `end()` returns empty, not truncated.
+    pub fn since(&self, cursor: usize) -> (Vec<Json>, bool) {
+        let truncated = cursor < self.start;
+        let from = cursor.max(self.start).min(self.end());
+        (self.buf.iter().skip(from - self.start).cloned().collect(), truncated)
+    }
+}
+
 /// Blocking JSON-over-HTTP client call; returns `(status, body)`. An
 /// empty response body parses as `Json::Null`. The read timeout is long
 /// enough to sit through a server-side event long-poll.
@@ -286,5 +336,53 @@ mod tests {
 
         stop.store(true, Ordering::SeqCst);
         t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn event_ring_wraps_with_monotone_cursor() {
+        let mut ring = EventRing::new(4);
+        assert_eq!(ring.end(), 0);
+        let (evs, truncated) = ring.since(0);
+        assert!(evs.is_empty() && !truncated, "empty ring: nothing, not truncated");
+
+        // Below capacity: behaves exactly like the old Vec.
+        for i in 0..3 {
+            ring.push(Json::num(i as f64));
+        }
+        let (evs, truncated) = ring.since(0);
+        assert_eq!(evs.len(), 3);
+        assert!(!truncated);
+        assert_eq!(ring.end(), 3);
+        let (evs, truncated) = ring.since(2);
+        assert_eq!(evs, vec![Json::num(2.0)]);
+        assert!(!truncated);
+
+        // Wrap: events 0..6 pushed into cap 4 evicts 0 and 1.
+        for i in 3..6 {
+            ring.push(Json::num(i as f64));
+        }
+        assert_eq!(ring.end(), 6);
+        let (evs, truncated) = ring.since(0);
+        assert!(truncated, "cursor 0 fell off the tail");
+        let got: Vec<f64> = evs.iter().filter_map(Json::as_f64).collect();
+        assert_eq!(got, vec![2.0, 3.0, 4.0, 5.0], "oldest evicted, order kept");
+        // Cursor exactly at the oldest buffered event: not truncated.
+        let (evs, truncated) = ring.since(2);
+        assert_eq!(evs.len(), 4);
+        assert!(!truncated);
+        // Caught-up and future cursors: empty, never truncated.
+        for cursor in [6usize, 7, 100] {
+            let (evs, truncated) = ring.since(cursor);
+            assert!(evs.is_empty() && !truncated, "cursor {cursor}");
+        }
+
+        // Capacity clamps to 1 and still rotates.
+        let mut tiny = EventRing::new(0);
+        tiny.push(Json::num(0.0));
+        tiny.push(Json::num(1.0));
+        assert_eq!(tiny.end(), 2);
+        let (evs, truncated) = tiny.since(0);
+        assert_eq!(evs, vec![Json::num(1.0)]);
+        assert!(truncated);
     }
 }

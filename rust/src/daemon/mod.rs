@@ -51,7 +51,7 @@ use crate::trace::{event_to_json, AdapterDigest, SessionDigest};
 use crate::train::{AdapterReport, MemberResume, TrainOptions};
 use crate::util::json::Json;
 
-use http::{Handler, Request, Response, Server};
+use http::{EventRing, Handler, Request, Response, Server};
 use journal::{Journal, Meta, Submission};
 use tenant::FairShare;
 
@@ -128,7 +128,10 @@ struct Daemon {
     inner: Mutex<Inner>,
     session: Mutex<Session>,
     /// Serialized session events, in emission order — the long-poll log.
-    events: Mutex<Vec<Json>>,
+    /// A fixed-capacity ring with a monotone cursor ([`EVENT_LOG_CAP`]):
+    /// memory stays bounded on a long-lived daemon, and clients that fall
+    /// off the tail see an explicit `truncated` marker.
+    events: Mutex<EventRing>,
     events_cv: Condvar,
     /// Journaled digests of every finished adapter (the crash-exact oracle).
     digests: Mutex<BTreeMap<usize, AdapterDigest>>,
@@ -149,6 +152,12 @@ extern "C" {
 
 const SIGINT: i32 = 2;
 const SIGTERM: i32 = 15;
+
+/// Long-poll event-log capacity. Generous for any poll cadence a client
+/// uses (the CI suites emit a few hundred events per session), small
+/// enough that a daemon emitting events for weeks stays at constant
+/// memory; laggards past the cap see `truncated: true` and re-sync.
+const EVENT_LOG_CAP: usize = 8192;
 
 /// Run the daemon until SIGTERM/SIGINT or `POST /v1/shutdown`. Returns
 /// after a clean drain (journal sealed, every running pack checkpointed).
@@ -328,7 +337,7 @@ pub fn run(rt: Arc<Runtime>, opts: DaemonOpts) -> Result<()> {
     let daemon = Arc::new(Daemon {
         inner: Mutex::new(inner),
         session: Mutex::new(session),
-        events: Mutex::new(vec![]),
+        events: Mutex::new(EventRing::new(EVENT_LOG_CAP)),
         events_cv: Condvar::new(),
         digests: Mutex::new(recovered.digests),
         options: opts.options.clone(),
@@ -690,6 +699,9 @@ impl Daemon {
     /// `GET /v1/events?since=N&wait=MS`: the session event stream as
     /// recorded JSON (the same vocabulary traces use). Long-polls up to
     /// `wait` ms for events past `since`, then returns what exists.
+    /// Cursors are monotone across the bounded ring: `next` always equals
+    /// the total emission count, and a `since` that fell off the ring's
+    /// tail returns the surviving suffix with `truncated: true`.
     fn events(&self, req: &Request) -> Response {
         let since = req
             .query
@@ -704,17 +716,18 @@ impl Daemon {
             .min(60_000);
         let deadline = Instant::now() + Duration::from_millis(wait_ms);
         let mut log = self.events.lock().unwrap();
-        while log.len() <= since {
+        while log.end() <= since {
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 break;
             }
             log = self.events_cv.wait_timeout(log, left).unwrap().0;
         }
-        let events: Vec<Json> = log[since.min(log.len())..].to_vec();
+        let (events, truncated) = log.since(since);
         Response::ok(Json::obj(vec![
-            ("next", Json::num(log.len() as f64)),
+            ("next", Json::num(log.end() as f64)),
             ("events", Json::Arr(events)),
+            ("truncated", Json::Bool(truncated)),
         ]))
     }
 

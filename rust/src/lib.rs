@@ -1,3 +1,9 @@
+// Portable SIMD is still unstable; the `portable-simd` cargo feature
+// (nightly-only) swaps the explicit-vector GEMM microkernel's lane type
+// from the unrolled stable fallback to `std::simd::f32x8`. Results are
+// bit-identical either way (DESIGN.md §14).
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
+
 //! # PLoRA — efficient LoRA hyperparameter tuning
 //!
 //! Reproduction of *"PLoRA: Efficient LoRA Hyperparameter Tuning for Large

@@ -4,7 +4,7 @@
 //! Three accumulate-into-`out` primitives cover every matmul the TinyLM
 //! interpreter performs (see [`super::tinylm`]): `out += α·A·B`
 //! ([`mm_acc`]), `out += α·A·Bᵀ` ([`mm_nt_acc`]) and `out += α·Aᵀ·B`
-//! ([`mm_tn_acc`]). Each exists in two implementations:
+//! ([`mm_tn_acc`]). Each exists in three implementations:
 //!
 //! - [`naive`] — the straight triple loops the backend shipped with. They
 //!   stay compiled as the ground truth the property tests and the
@@ -12,27 +12,39 @@
 //! - [`tiled`] — the default. Output tiles are walked with fixed-width
 //!   register accumulator blocks and the reduction dimension is processed
 //!   in cache-sized panels.
+//! - [`simd`] — `PLORA_GEMM=simd`. The tiled panel structure with an
+//!   explicit 8-lane vector inner microkernel; lanes always span output
+//!   columns, never the reduction (DESIGN.md §14's lane-reduction-order
+//!   contract), so it is bit-identical to the other two.
 //!
-//! **Bit-exactness invariant.** For every output element, both
+//! **Bit-exactness invariant.** For every output element, all
 //! implementations perform the *identical sequence of f32 operations*: the
 //! k-accumulation runs in ascending k order, partial dot products are
 //! rounded exactly where the naive code rounds them, and the `f == 0.0`
-//! skip fires on exactly the same terms. Tiling only reorders work
-//! *across* output elements, never within one, so switching
+//! skip fires on exactly the same terms. Tiling and vectorization only
+//! reorder work *across* output elements, never within one, so switching
 //! implementations (or thread counts) can never perturb a training
 //! trajectory — the solo-vs-packed-vs-rebucketed guarantees pinned in
 //! `rust/tests/session.rs` hold under any `Mode`/`PLORA_THREADS` setting.
 //! `rust/tests/properties.rs` re-verifies the equivalence on randomized
 //! shapes every run.
 //!
-//! **Threading.** [`mm_acc_par`] / [`mm_nt_acc_par`] split the *output
-//! rows* across the persistent [`crate::util::threadpool::global`]
-//! workers (no per-region thread spawns). A row's reduction is entirely
-//! sequential inside one worker and no two workers share an output
-//! element, so the result is bitwise identical at any worker count. The
-//! worker count comes from the `PLORA_THREADS` env var (default 1, i.e.
-//! serial), and can be overridden programmatically with [`set_threads`]
-//! (benches).
+//! **Threading.** [`mm_acc_par`] / [`mm_nt_acc_par`] / [`mm_tn_acc_par`]
+//! split the *output rows* across the persistent
+//! [`crate::util::threadpool::global`] workers (no per-region thread
+//! spawns). A row's reduction is entirely sequential inside one worker and
+//! no two workers share an output element, so the result is bitwise
+//! identical at any worker count. The worker count comes from the
+//! `PLORA_THREADS` env var (default 1, i.e. serial), and can be overridden
+//! programmatically with [`set_threads`] (benches).
+//!
+//! **Batching.** [`batched`] runs `nb` independent same-shape `Aᵀ·B`
+//! problems (the packed bucket's per-adapter `dA`/`dB` reductions) through
+//! one entry point whose `_par` driver splits the combined `nb·m` output
+//! rows at *row* granularity instead of adapter granularity. Interleaving
+//! adapters never touches any single element's reduction chain, so the
+//! fused path is bit-identical to the per-adapter loop it replaces
+//! (`PLORA_FUSED=0` restores that loop for A/B benchmarking).
 
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 
@@ -41,25 +53,35 @@ use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 pub enum Mode {
     Tiled,
     Naive,
+    Simd,
 }
 
 const MODE_TILED: u8 = 0;
 const MODE_NAIVE: u8 = 1;
-const MODE_UNSET: u8 = 2;
+const MODE_SIMD: u8 = 2;
+const MODE_UNSET: u8 = 3;
 
 static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
 static THREADS: AtomicUsize = AtomicUsize::new(0); // 0 = not yet resolved
 
+const FUSED_ON: u8 = 0;
+const FUSED_OFF: u8 = 1;
+const FUSED_UNSET: u8 = 2;
+
+static FUSED: AtomicU8 = AtomicU8::new(FUSED_UNSET);
+
 /// Active kernel implementation; first call reads `PLORA_GEMM`
-/// (`naive`/`tiled`). Both produce bit-identical results — the knob exists
-/// for the bench baseline and for bisecting perf regressions.
+/// (`naive`/`tiled`/`simd`). All produce bit-identical results — the knob
+/// exists for the bench baseline and for bisecting perf regressions.
 pub fn mode() -> Mode {
     match MODE.load(Ordering::Relaxed) {
         MODE_TILED => Mode::Tiled,
         MODE_NAIVE => Mode::Naive,
+        MODE_SIMD => Mode::Simd,
         _ => {
             let m = match std::env::var("PLORA_GEMM").as_deref() {
                 Ok("naive") => Mode::Naive,
+                Ok("simd") => Mode::Simd,
                 _ => Mode::Tiled,
             };
             set_mode(m);
@@ -73,8 +95,31 @@ pub fn set_mode(m: Mode) {
     let v = match m {
         Mode::Tiled => MODE_TILED,
         Mode::Naive => MODE_NAIVE,
+        Mode::Simd => MODE_SIMD,
     };
     MODE.store(v, Ordering::Relaxed);
+}
+
+/// Whether the packed projection fuses work across adapter boundaries
+/// (the [`batched`] `dA`/`dB` path plus the hoisted shared-base GEMMs in
+/// `tinylm`); first call reads `PLORA_FUSED` (default on; `0`/`off`
+/// restores the per-adapter loops). Both settings are bit-identical — the
+/// knob exists for the bench baseline and for bisecting.
+pub fn fused() -> bool {
+    match FUSED.load(Ordering::Relaxed) {
+        FUSED_ON => true,
+        FUSED_OFF => false,
+        _ => {
+            let f = !matches!(std::env::var("PLORA_FUSED").as_deref(), Ok("0") | Ok("off"));
+            set_fused(f);
+            f
+        }
+    }
+}
+
+/// Override the adapter-fusion knob (benches/tests).
+pub fn set_fused(f: bool) {
+    FUSED.store(if f { FUSED_ON } else { FUSED_OFF }, Ordering::Relaxed);
 }
 
 /// Intra-step worker count; first call reads `PLORA_THREADS` (default 1).
@@ -107,6 +152,7 @@ pub fn mm_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usiz
     match mode() {
         Mode::Tiled => tiled::mm_acc(out, a, b, m, k, n, alpha),
         Mode::Naive => naive::mm_acc(out, a, b, m, k, n, alpha),
+        Mode::Simd => simd::mm_acc(out, a, b, m, k, n, alpha),
     }
 }
 
@@ -115,6 +161,7 @@ pub fn mm_nt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: u
     match mode() {
         Mode::Tiled => tiled::mm_nt_acc(out, a, b, m, k, n, alpha),
         Mode::Naive => naive::mm_nt_acc(out, a, b, m, k, n, alpha),
+        Mode::Simd => simd::mm_nt_acc(out, a, b, m, k, n, alpha),
     }
 }
 
@@ -123,6 +170,32 @@ pub fn mm_tn_acc(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: u
     match mode() {
         Mode::Tiled => tiled::mm_tn_acc(out, a, b, k, m, n, alpha),
         Mode::Naive => naive::mm_tn_acc(out, a, b, k, m, n, alpha),
+        Mode::Simd => simd::mm_tn_acc(out, a, b, k, m, n, alpha),
+    }
+}
+
+/// Rows `[r0, r0 + rl)` of [`mm_tn_acc`]'s `(m,n)` output: `out` is the
+/// row-aligned chunk for exactly that range while `a`/`b` stay the full
+/// `(k,m)` / `(k,n)` operands. Restricting the row loop never touches any
+/// element's own ascending-k chain, so a union of row-range calls is
+/// bit-identical to one full call — this is the building block under both
+/// [`mm_tn_acc_par`] and the [`batched`] drivers.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_tn_acc_rows(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    alpha: f32,
+    r0: usize,
+    rl: usize,
+) {
+    match mode() {
+        Mode::Tiled => tiled::mm_tn_acc_rows(out, a, b, k, m, n, alpha, r0, rl),
+        Mode::Naive => naive::mm_tn_acc_rows(out, a, b, k, m, n, alpha, r0, rl),
+        Mode::Simd => simd::mm_tn_acc_rows(out, a, b, k, m, n, alpha, r0, rl),
     }
 }
 
@@ -227,6 +300,125 @@ pub fn mm_nt_acc_par(
     });
 }
 
+/// Row-parallel [`mm_tn_acc`] (same contract as [`mm_acc_par`]). The `m`
+/// output rows split across pool workers; every worker reads the full
+/// column-strided `a` and full `b` but writes only its own row chunk via
+/// [`mm_tn_acc_rows`], so the result is bitwise identical at any `nt`.
+/// Re-entrant dispatch (calling from a pool worker) degrades to inline
+/// serial execution exactly like the sibling drivers.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_tn_acc_par(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    alpha: f32,
+    nt: usize,
+) {
+    let mut none = [0.0f32; 0];
+    par_row_chunks(m, nt, k * n, out, n, &mut none, 0, |oc, _, lo, hi| {
+        mm_tn_acc_rows(oc, a, b, k, m, n, alpha, lo, hi - lo)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Batched multi-adapter drivers
+// ---------------------------------------------------------------------------
+
+/// Batched multi-adapter `Aᵀ·B` GEMMs: `nb` independent same-shape
+/// problems — the packed bucket's per-adapter `dA`/`dB` weight-gradient
+/// reductions — walked by one entry point over densely-strided operands
+/// (`a_i` at `i·k·m`, `b_i` at `i·k·n`, `out_i` at `i·m·n`).
+///
+/// Each adapter's elements keep exactly the op sequence the per-adapter
+/// [`super::mm_tn_acc`] loop gave them (same mode-dispatched kernel, same
+/// per-adapter `alpha`, ascending-k chains, `f == 0.0` zero-rank-padding
+/// skip), so the fused path is bit-identical — only the *walk order across
+/// adapters* and the parallel split change. The `_par` driver splits the
+/// combined `nb·m` output-row space at row granularity, so one big adapter
+/// no longer serializes behind `nt.min(nb)` adapter-granular tasks.
+pub mod batched {
+    use super::*;
+
+    /// `out_i (m,n) += alphas[i] * a_i^T @ b_i` for `i in 0..nb`, with
+    /// `a` stored `(nb,k,m)` and `b` `(nb,k,n)`. `alphas: None` means 1.0
+    /// for every adapter.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mm_tn_acc(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        nb: usize,
+        k: usize,
+        m: usize,
+        n: usize,
+        alphas: Option<&[f32]>,
+    ) {
+        rows(out, a, b, k, m, n, alphas, 0, nb * m);
+    }
+
+    /// Rows `[lo, hi)` of the adapter-major `(nb·m, n)` combined output
+    /// space (row `ρ` belongs to adapter `ρ / m`); `out` is the
+    /// row-aligned chunk for exactly that range.
+    #[allow(clippy::too_many_arguments)]
+    fn rows(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        m: usize,
+        n: usize,
+        alphas: Option<&[f32]>,
+        lo: usize,
+        hi: usize,
+    ) {
+        let mut row = lo;
+        while row < hi {
+            let i = row / m; // adapter owning this row group
+            let end = ((i + 1) * m).min(hi);
+            let alpha = alphas.map_or(1.0, |s| s[i]);
+            let oc = &mut out[(row - lo) * n..(end - lo) * n];
+            super::mm_tn_acc_rows(
+                oc,
+                &a[i * k * m..(i + 1) * k * m],
+                &b[i * k * n..(i + 1) * k * n],
+                k,
+                m,
+                n,
+                alpha,
+                row - i * m,
+                end - row,
+            );
+            row = end;
+        }
+    }
+
+    /// Row-parallel batched driver: the `nb·m` combined output rows split
+    /// across pool workers through the same [`super::par_row_chunks`]
+    /// guards (work-size cutoff, re-entrancy degrading to inline) as every
+    /// `_par` driver. Bitwise identical to [`mm_tn_acc`] at any `nt`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mm_tn_acc_par(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        nb: usize,
+        k: usize,
+        m: usize,
+        n: usize,
+        alphas: Option<&[f32]>,
+        nt: usize,
+    ) {
+        let total = nb * m;
+        let mut none = [0.0f32; 0];
+        par_row_chunks(total, nt, k * n, out, n, &mut none, 0, |oc, _, lo, hi| {
+            rows(oc, a, b, k, m, n, alphas, lo, hi)
+        });
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Naive reference kernels (the pre-tiling implementations, verbatim)
 // ---------------------------------------------------------------------------
@@ -288,6 +480,37 @@ pub mod naive {
     ) {
         for kk in 0..k {
             let ar = &a[kk * m..(kk + 1) * m];
+            let br = &b[kk * n..(kk + 1) * n];
+            for (i, &av) in ar.iter().enumerate() {
+                let f = alpha * av;
+                if f == 0.0 {
+                    continue;
+                }
+                let or = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in or.iter_mut().zip(br) {
+                    *o += f * bv;
+                }
+            }
+        }
+    }
+
+    /// Rows `[r0, r0 + rl)` of [`mm_tn_acc`]; `out` is the row-aligned
+    /// chunk. Same loops restricted to the range — each element keeps its
+    /// exact op sequence.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mm_tn_acc_rows(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        m: usize,
+        n: usize,
+        alpha: f32,
+        r0: usize,
+        rl: usize,
+    ) {
+        for kk in 0..k {
+            let ar = &a[kk * m + r0..kk * m + r0 + rl];
             let br = &b[kk * n..(kk + 1) * n];
             for (i, &av) in ar.iter().enumerate() {
                 let f = alpha * av;
@@ -514,15 +737,33 @@ pub mod tiled {
         n: usize,
         alpha: f32,
     ) {
+        mm_tn_acc_rows(out, a, b, k, m, n, alpha, 0, m);
+    }
+
+    /// Rows `[r0, r0 + rl)` of [`mm_tn_acc`]; `out` is the row-aligned
+    /// chunk. The row loop is the innermost panel loop, so restricting it
+    /// leaves every element's panel/k walk unchanged.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mm_tn_acc_rows(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        m: usize,
+        n: usize,
+        alpha: f32,
+        r0: usize,
+        rl: usize,
+    ) {
         let mut kb = 0usize;
         while kb < k {
             let kh = KC.min(k - kb);
             let mut jc = 0usize;
             while jc < n {
                 let jw = NC.min(n - jc);
-                for i in 0..m {
+                for i in 0..rl {
                     let or = &mut out[i * n + jc..i * n + jc + jw];
-                    tn_panel(or, a, b, kb, kh, m, n, i, jc, jw, alpha);
+                    tn_panel(or, a, b, kb, kh, m, n, r0 + i, jc, jw, alpha);
                 }
                 jc += jw;
             }
@@ -582,6 +823,353 @@ pub mod tiled {
     }
 }
 
+// ---------------------------------------------------------------------------
+// SIMD kernels
+// ---------------------------------------------------------------------------
+
+/// Explicit-vector implementations (`PLORA_GEMM=simd`): the tiled panel
+/// structure with an 8-lane inner microkernel.
+///
+/// **Lane-reduction-order contract** (DESIGN.md §14). Vector lanes always
+/// span *output columns* `j`, never the reduction dimension `k`: lane `t`
+/// of a register is output element `j + t`'s accumulation chain and
+/// nothing else, every element keeps exactly one sequential ascending-k
+/// chain, and each multiply and add is rounded separately (`a + b * c` as
+/// two ops — never `mul_add`/FMA). Horizontal lane reductions are never
+/// used. Under that contract each lane performs the identical f32 op
+/// sequence as the scalar kernels, so `simd` is bit-identical to
+/// [`naive`]/[`tiled`] — property-tested in `rust/tests/properties.rs`
+/// and re-pinned on random shapes in this file's tests.
+///
+/// On stable toolchains [`V8`](self) is a fixed `[f32; 8]` with fully
+/// unrolled per-lane ops (the shape LLVM auto-vectorizes); with
+/// `--features portable-simd` (nightly) it is `std::simd::f32x8`. The
+/// feature flips codegen only — per-lane semantics, and therefore results,
+/// are identical.
+pub mod simd {
+    /// Vector width in f32 lanes.
+    pub const LANES: usize = 8;
+    /// Columns per register block (two `V8` accumulators).
+    const JB: usize = 2 * LANES;
+    /// Reduction (k) panel length — matches [`super::tiled`].
+    const KC: usize = 64;
+    /// Output-column panel width — matches [`super::tiled`].
+    const NC: usize = 256;
+    /// Rows of `a` per dot-product micro-tile ([`mm_nt_acc`]).
+    const IR: usize = 4;
+
+    /// Eight f32 lanes. Ops are per-lane and separately rounded; there is
+    /// deliberately no FMA and no horizontal reduction in the API.
+    #[cfg(feature = "portable-simd")]
+    #[derive(Clone, Copy)]
+    struct V8(std::simd::f32x8);
+
+    /// Stable-toolchain `V8`: a fixed array with fully unrolled per-lane
+    /// ops — identical per-lane semantics, so identical results.
+    #[cfg(not(feature = "portable-simd"))]
+    #[derive(Clone, Copy)]
+    struct V8([f32; LANES]);
+
+    #[cfg(feature = "portable-simd")]
+    impl V8 {
+        #[inline(always)]
+        fn splat(v: f32) -> V8 {
+            V8(std::simd::f32x8::splat(v))
+        }
+        #[inline(always)]
+        fn load(s: &[f32]) -> V8 {
+            V8(std::simd::f32x8::from_slice(s))
+        }
+        #[inline(always)]
+        fn store(self, s: &mut [f32]) {
+            self.0.copy_to_slice(s);
+        }
+        /// `self + a * b` — `Simd::mul` then `Simd::add`, each lane
+        /// rounded separately at both steps (no contraction).
+        #[inline(always)]
+        fn mul_acc(self, a: V8, b: V8) -> V8 {
+            V8(self.0 + a.0 * b.0)
+        }
+    }
+
+    #[cfg(not(feature = "portable-simd"))]
+    impl V8 {
+        #[inline(always)]
+        fn splat(v: f32) -> V8 {
+            V8([v; LANES])
+        }
+        #[inline(always)]
+        fn load(s: &[f32]) -> V8 {
+            let mut l = [0.0f32; LANES];
+            l.copy_from_slice(&s[..LANES]);
+            V8(l)
+        }
+        #[inline(always)]
+        fn store(self, s: &mut [f32]) {
+            s[..LANES].copy_from_slice(&self.0);
+        }
+        /// `self + a * b` — per lane one mul then one add, separately
+        /// rounded (Rust never contracts to FMA by default).
+        #[inline(always)]
+        fn mul_acc(mut self, a: V8, b: V8) -> V8 {
+            for t in 0..LANES {
+                self.0[t] += a.0[t] * b.0[t];
+            }
+            self
+        }
+    }
+
+    /// `out (m,n) += alpha * a (m,k) @ b (k,n)` — [`super::tiled::mm_acc`]'s
+    /// panel walk with the vector axpy inner loop.
+    pub fn mm_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, alpha: f32) {
+        let mut kb = 0usize;
+        while kb < k {
+            let kh = KC.min(k - kb);
+            let mut jc = 0usize;
+            while jc < n {
+                let jw = NC.min(n - jc);
+                for i in 0..m {
+                    let ar = &a[i * k + kb..i * k + kb + kh];
+                    let or = &mut out[i * n + jc..i * n + jc + jw];
+                    axpy_panel(or, ar, b, kb, n, jc, jw, alpha);
+                }
+                jc += jw;
+            }
+            kb += kh;
+        }
+    }
+
+    /// One row × column panel: `JB`-wide vector blocks, scalar tail with
+    /// the identical per-element op sequence. The `f == 0.0` skip is
+    /// scalar (one `f` per k step, shared by every lane), exactly like the
+    /// scalar kernels.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn axpy_panel(
+        or: &mut [f32],
+        ar: &[f32],
+        b: &[f32],
+        kb: usize,
+        n: usize,
+        jc: usize,
+        jw: usize,
+        alpha: f32,
+    ) {
+        let mut j = 0usize;
+        while j + JB <= jw {
+            let mut acc0 = V8::load(&or[j..]);
+            let mut acc1 = V8::load(&or[j + LANES..]);
+            for (dk, &av) in ar.iter().enumerate() {
+                let f = alpha * av;
+                if f == 0.0 {
+                    continue;
+                }
+                let fv = V8::splat(f);
+                let base = (kb + dk) * n + jc + j;
+                acc0 = acc0.mul_acc(fv, V8::load(&b[base..]));
+                acc1 = acc1.mul_acc(fv, V8::load(&b[base + LANES..]));
+            }
+            acc0.store(&mut or[j..]);
+            acc1.store(&mut or[j + LANES..]);
+            j += JB;
+        }
+        if j < jw {
+            for (dk, &av) in ar.iter().enumerate() {
+                let f = alpha * av;
+                if f == 0.0 {
+                    continue;
+                }
+                let base = (kb + dk) * n + jc;
+                for t in j..jw {
+                    or[t] += f * b[base + t];
+                }
+            }
+        }
+    }
+
+    /// `out (m,n) += alpha * a (m,k) @ b^T` with `b` stored `(n,k)`.
+    ///
+    /// `IR` row chains × 8 column lanes per micro-tile; the `b` values are
+    /// gathered lane-wise (stride `k`) — the strided loads are the price
+    /// of keeping lanes on output elements instead of on `k`. Each lane's
+    /// chain is zero-initialized, accumulated in ascending k, then folded
+    /// with one `out += alpha * s` — the naive kernel's exact sequence.
+    pub fn mm_nt_acc(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        alpha: f32,
+    ) {
+        let mut i = 0usize;
+        while i < m {
+            let ih = IR.min(m - i);
+            let mut j = 0usize;
+            while j + LANES <= n {
+                nt_micro(out, a, b, k, n, alpha, i, ih, j);
+                j += LANES;
+            }
+            if j < n {
+                nt_edge(out, a, b, k, n, alpha, i, ih, j, n - j);
+            }
+            i += ih;
+        }
+    }
+
+    /// `ih × LANES` dot micro-tile.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn nt_micro(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        alpha: f32,
+        i: usize,
+        ih: usize,
+        j: usize,
+    ) {
+        let mut acc = [V8::splat(0.0); IR];
+        for kk in 0..k {
+            let mut bl = [0.0f32; LANES];
+            for (t, x) in bl.iter_mut().enumerate() {
+                *x = b[(j + t) * k + kk];
+            }
+            let bv = V8::load(&bl);
+            for (ii, chain) in acc.iter_mut().enumerate().take(ih) {
+                let av = V8::splat(a[(i + ii) * k + kk]);
+                *chain = chain.mul_acc(av, bv);
+            }
+        }
+        let av = V8::splat(alpha);
+        for (ii, chain) in acc.iter().enumerate().take(ih) {
+            let o = &mut out[(i + ii) * n + j..(i + ii) * n + j + LANES];
+            V8::load(o).mul_acc(av, *chain).store(o);
+        }
+    }
+
+    /// Scalar edge tile (`jw < LANES` trailing columns), naive op order.
+    #[allow(clippy::too_many_arguments)]
+    fn nt_edge(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        alpha: f32,
+        i: usize,
+        ih: usize,
+        j: usize,
+        jw: usize,
+    ) {
+        for ii in 0..ih {
+            let ar = &a[(i + ii) * k..(i + ii + 1) * k];
+            for jj in j..j + jw {
+                let br = &b[jj * k..(jj + 1) * k];
+                let mut s = 0.0f32;
+                for (av, bv) in ar.iter().zip(br) {
+                    s += av * bv;
+                }
+                out[(i + ii) * n + jj] += alpha * s;
+            }
+        }
+    }
+
+    /// `out (m,n) += alpha * a^T @ b` with `a` stored `(k,m)`, `b` `(k,n)`.
+    pub fn mm_tn_acc(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        m: usize,
+        n: usize,
+        alpha: f32,
+    ) {
+        mm_tn_acc_rows(out, a, b, k, m, n, alpha, 0, m);
+    }
+
+    /// Rows `[r0, r0 + rl)` of [`mm_tn_acc`]; `out` is the row-aligned
+    /// chunk. Panel walk as in [`super::tiled`], vector inner loop.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mm_tn_acc_rows(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        m: usize,
+        n: usize,
+        alpha: f32,
+        r0: usize,
+        rl: usize,
+    ) {
+        let mut kb = 0usize;
+        while kb < k {
+            let kh = KC.min(k - kb);
+            let mut jc = 0usize;
+            while jc < n {
+                let jw = NC.min(n - jc);
+                for i in 0..rl {
+                    let or = &mut out[i * n + jc..i * n + jc + jw];
+                    tn_panel(or, a, b, kb, kh, m, n, r0 + i, jc, jw, alpha);
+                }
+                jc += jw;
+            }
+            kb += kh;
+        }
+    }
+
+    /// One row × column panel of the transposed-A vector axpy kernel.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn tn_panel(
+        or: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        kb: usize,
+        kh: usize,
+        m: usize,
+        n: usize,
+        i: usize,
+        jc: usize,
+        jw: usize,
+        alpha: f32,
+    ) {
+        let mut j = 0usize;
+        while j + JB <= jw {
+            let mut acc0 = V8::load(&or[j..]);
+            let mut acc1 = V8::load(&or[j + LANES..]);
+            for dk in 0..kh {
+                let f = alpha * a[(kb + dk) * m + i];
+                if f == 0.0 {
+                    continue;
+                }
+                let fv = V8::splat(f);
+                let base = (kb + dk) * n + jc + j;
+                acc0 = acc0.mul_acc(fv, V8::load(&b[base..]));
+                acc1 = acc1.mul_acc(fv, V8::load(&b[base + LANES..]));
+            }
+            acc0.store(&mut or[j..]);
+            acc1.store(&mut or[j + LANES..]);
+            j += JB;
+        }
+        if j < jw {
+            for dk in 0..kh {
+                let f = alpha * a[(kb + dk) * m + i];
+                if f == 0.0 {
+                    continue;
+                }
+                let base = (kb + dk) * n + jc;
+                for t in j..jw {
+                    or[t] += f * b[base + t];
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -594,7 +1182,7 @@ mod tests {
         // a = [[1,2,3],[4,5,6]] (2x3), b = [[7,8],[9,10],[11,12]] (3x2)
         let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
-        for f in [naive::mm_acc as MmFn, tiled::mm_acc as MmFn] {
+        for f in [naive::mm_acc as MmFn, tiled::mm_acc as MmFn, simd::mm_acc as MmFn] {
             let mut out = [0.0f32; 4];
             f(&mut out, &a, &b, 2, 3, 2, 1.0);
             assert_eq!(out, [58.0, 64.0, 139.0, 154.0]);
@@ -602,7 +1190,7 @@ mod tests {
 
         // a (2x3) @ b^T with b stored (2x3): out[i][j] = row_i . row_j
         let bt = [1.0, 0.0, 1.0, 0.0, 2.0, 0.0];
-        for f in [naive::mm_nt_acc as MmFn, tiled::mm_nt_acc as MmFn] {
+        for f in [naive::mm_nt_acc as MmFn, tiled::mm_nt_acc as MmFn, simd::mm_nt_acc as MmFn] {
             let mut out = [0.0f32; 4];
             f(&mut out, &a, &bt, 2, 3, 2, 1.0);
             assert_eq!(out, [4.0, 4.0, 10.0, 10.0]);
@@ -610,7 +1198,7 @@ mod tests {
 
         // a^T (3x2 from a stored 2x3) @ b2 (2x2)
         let b2 = [1.0, 2.0, 3.0, 4.0];
-        for f in [naive::mm_tn_acc as MmFn, tiled::mm_tn_acc as MmFn] {
+        for f in [naive::mm_tn_acc as MmFn, tiled::mm_tn_acc as MmFn, simd::mm_tn_acc as MmFn] {
             let mut out = [0.0f32; 6];
             f(&mut out, &a, &b2, 2, 3, 2, 1.0);
             // a^T = [[1,4],[2,5],[3,6]]; a^T@b2 = [[13,18],[17,24],[21,30]]
@@ -624,8 +1212,10 @@ mod tests {
             .collect()
     }
 
-    /// Tiled kernels are bit-identical to the naive kernels on shapes that
-    /// straddle every tile boundary, including alpha = 0 and zeroed rows.
+    /// Tiled and SIMD kernels are bit-identical to the naive kernels on
+    /// shapes that straddle every tile/lane boundary, including alpha = 0
+    /// and zeroed rows; the tn row-range splits and the batched
+    /// multi-adapter driver reproduce the same bits.
     #[test]
     fn tiled_matches_naive_bitwise_across_tile_boundaries() {
         let mut rng = Rng::new(0x9e2e);
@@ -644,25 +1234,108 @@ mod tests {
                 let init = rand_buf(&mut rng, m * n, 0.0);
 
                 let mut o1 = init.clone();
-                let mut o2 = init.clone();
                 naive::mm_acc(&mut o1, &a, &b, m, k, n, alpha);
-                tiled::mm_acc(&mut o2, &a, &b, m, k, n, alpha);
-                assert_eq!(o1, o2, "mm_acc {m}x{k}x{n} alpha={alpha}");
+                for f in [tiled::mm_acc as MmFn, simd::mm_acc as MmFn] {
+                    let mut o2 = init.clone();
+                    f(&mut o2, &a, &b, m, k, n, alpha);
+                    assert_eq!(o1, o2, "mm_acc {m}x{k}x{n} alpha={alpha}");
+                }
 
                 let bt = rand_buf(&mut rng, n * k, 0.0);
                 let mut o1 = init.clone();
-                let mut o2 = init.clone();
                 naive::mm_nt_acc(&mut o1, &a, &bt, m, k, n, alpha);
-                tiled::mm_nt_acc(&mut o2, &a, &bt, m, k, n, alpha);
-                assert_eq!(o1, o2, "mm_nt_acc {m}x{k}x{n} alpha={alpha}");
+                for f in [tiled::mm_nt_acc as MmFn, simd::mm_nt_acc as MmFn] {
+                    let mut o2 = init.clone();
+                    f(&mut o2, &a, &bt, m, k, n, alpha);
+                    assert_eq!(o1, o2, "mm_nt_acc {m}x{k}x{n} alpha={alpha}");
+                }
 
                 let at = rand_buf(&mut rng, k * m, 0.25);
                 let mut o1 = init.clone();
-                let mut o2 = init.clone();
                 naive::mm_tn_acc(&mut o1, &at, &b, k, m, n, alpha);
-                tiled::mm_tn_acc(&mut o2, &at, &b, k, m, n, alpha);
-                assert_eq!(o1, o2, "mm_tn_acc {m}x{k}x{n} alpha={alpha}");
+                for f in [tiled::mm_tn_acc as MmFn, simd::mm_tn_acc as MmFn] {
+                    let mut o2 = init.clone();
+                    f(&mut o2, &at, &b, k, m, n, alpha);
+                    assert_eq!(o1, o2, "mm_tn_acc {m}x{k}x{n} alpha={alpha}");
+                }
+
+                // Row-range union == full call, for every implementation.
+                let split = 1 + m / 2;
+                type RowsFn =
+                    fn(&mut [f32], &[f32], &[f32], usize, usize, usize, f32, usize, usize);
+                for f in [
+                    naive::mm_tn_acc_rows as RowsFn,
+                    tiled::mm_tn_acc_rows as RowsFn,
+                    simd::mm_tn_acc_rows as RowsFn,
+                ] {
+                    let mut o2 = init.clone();
+                    let (top, bot) = o2.split_at_mut(split.min(m) * n);
+                    f(top, &at, &b, k, m, n, alpha, 0, split.min(m));
+                    if split < m {
+                        f(bot, &at, &b, k, m, n, alpha, split, m - split);
+                    }
+                    assert_eq!(o1, o2, "mm_tn_acc_rows {m}x{k}x{n} alpha={alpha}");
+                }
             }
+        }
+    }
+
+    /// The batched multi-adapter driver is bit-identical to the per-adapter
+    /// `mm_tn_acc` loop it replaces — including per-adapter alphas (with
+    /// zeros), zero-padded trailing ranks (whole zero columns of `a_i`, the
+    /// `f == 0.0` skip), and the row-parallel split at any worker count.
+    #[test]
+    fn batched_matches_per_adapter_loop_bitwise() {
+        let mut rng = Rng::new(0x51bd);
+        for &(nb, k, m, n) in
+            &[(1usize, 7usize, 5usize, 9usize), (3, 32, 17, 24), (4, 65, 8, 33), (5, 16, 21, 16)]
+        {
+            let mut a = rand_buf(&mut rng, nb * k * m, 0.2);
+            let b = rand_buf(&mut rng, nb * k * n, 0.0);
+            // Zero-padded ranks: adapter i keeps only m - i of its m rows
+            // (columns of the stored (k, m) slice), like a rank mask.
+            for i in 0..nb {
+                for kk in 0..k {
+                    for c in m.saturating_sub(i)..m {
+                        a[i * k * m + kk * m + c] = 0.0;
+                    }
+                }
+            }
+            let alphas: Vec<f32> = (0..nb).map(|i| [1.0f32, -0.6, 0.0, 2.5][i % 4]).collect();
+            let init = rand_buf(&mut rng, nb * m * n, 0.0);
+
+            let mut want = init.clone();
+            for i in 0..nb {
+                naive::mm_tn_acc(
+                    &mut want[i * m * n..(i + 1) * m * n],
+                    &a[i * k * m..(i + 1) * k * m],
+                    &b[i * k * n..(i + 1) * k * n],
+                    k,
+                    m,
+                    n,
+                    alphas[i],
+                );
+            }
+            for md in [Mode::Naive, Mode::Tiled, Mode::Simd] {
+                set_mode(md);
+                let mut got = init.clone();
+                batched::mm_tn_acc(&mut got, &a, &b, nb, k, m, n, Some(&alphas));
+                assert_eq!(want, got, "batched {md:?} nb={nb} {m}x{k}x{n}");
+                for nt in [2usize, 3, 16] {
+                    let mut got = init.clone();
+                    batched::mm_tn_acc_par(&mut got, &a, &b, nb, k, m, n, Some(&alphas), nt);
+                    assert_eq!(want, got, "batched par {md:?} nb={nb} nt={nt}");
+                }
+            }
+            set_mode(Mode::Tiled);
+
+            // alphas: None == all-ones.
+            let ones = vec![1.0f32; nb];
+            let mut w1 = init.clone();
+            batched::mm_tn_acc(&mut w1, &a, &b, nb, k, m, n, Some(&ones));
+            let mut w2 = init.clone();
+            batched::mm_tn_acc(&mut w2, &a, &b, nb, k, m, n, None);
+            assert_eq!(w1, w2, "alphas None != all-ones at nb={nb}");
         }
     }
 
@@ -679,10 +1352,13 @@ mod tests {
         let bt = rand_buf(&mut rng, n * k, 0.0);
         let init = rand_buf(&mut rng, m * n, 0.0);
 
+        let at = rand_buf(&mut rng, k * m, 0.1);
         let mut want = init.clone();
         mm_acc(&mut want, &a, &b, m, k, n, 0.9);
         let mut want_nt = init.clone();
         mm_nt_acc(&mut want_nt, &a, &bt, m, k, n, 0.9);
+        let mut want_tn = init.clone();
+        mm_tn_acc(&mut want_tn, &at, &b, k, m, n, 0.9);
         for nt in [1usize, 2, 4, 32] {
             let mut got = init.clone();
             mm_acc_par(&mut got, &a, &b, m, k, n, 0.9, nt);
@@ -690,6 +1366,9 @@ mod tests {
             let mut got = init.clone();
             mm_nt_acc_par(&mut got, &a, &bt, m, k, n, 0.9, nt);
             assert_eq!(want_nt, got, "mm_nt_acc_par nt={nt}");
+            let mut got = init.clone();
+            mm_tn_acc_par(&mut got, &at, &b, k, m, n, 0.9, nt);
+            assert_eq!(want_tn, got, "mm_tn_acc_par nt={nt}");
         }
 
         // Force real spawning: work_per_row = PAR_MIN_WORK clears the
@@ -711,12 +1390,17 @@ mod tests {
     fn knobs_clamp_and_default() {
         // mode() resolves to a concrete implementation either way.
         let m = mode();
-        assert!(m == Mode::Tiled || m == Mode::Naive);
+        assert!(m == Mode::Tiled || m == Mode::Naive || m == Mode::Simd);
         // Other tests toggle the global knobs concurrently (harmless:
         // every setting is bit-identical), so only assert the invariant
         // that survives any interleaving — the clamp floor.
         set_threads(0);
         assert!(threads() >= 1, "set_threads clamps to >= 1");
         set_threads(1);
+        // The fusion knob round-trips through its setter.
+        set_fused(false);
+        assert!(!fused());
+        set_fused(true);
+        assert!(fused());
     }
 }

@@ -880,10 +880,11 @@ mod tests {
         }
     }
 
-    /// A full train step is bitwise invariant to the GEMM implementation
-    /// and the worker count — the load-bearing guarantee behind the
-    /// `PLORA_GEMM`/`PLORA_THREADS` knobs (tiling/threading never reorders
-    /// any output element's reduction).
+    /// A full train step is bitwise invariant to the GEMM implementation,
+    /// the worker count and the adapter-fusion knob — the load-bearing
+    /// guarantee behind `PLORA_GEMM`/`PLORA_THREADS`/`PLORA_FUSED`
+    /// (tiling/vector lanes/threading/batching never reorder any output
+    /// element's reduction).
     #[test]
     fn train_step_is_bitwise_invariant_to_gemm_mode_and_threads() {
         use crate::runtime::state::TrainState;
@@ -897,9 +898,10 @@ mod tests {
         let base = rt.base_weights("nano").unwrap();
         let seq = mi.seq;
 
-        let run_steps = |mode: gemm::Mode, threads: usize| -> Vec<Vec<f32>> {
+        let run_steps = |mode: gemm::Mode, threads: usize, fused: bool| -> Vec<Vec<f32>> {
             gemm::set_mode(mode);
             gemm::set_threads(threads);
+            gemm::set_fused(fused);
             let mut st = TrainState::init_per_adapter(&mi, 2, 8, &[5, 9], &[8, 4]).unwrap();
             let rmask = st.rank_mask(&[8, 4]).unwrap();
             let mut rng = crate::util::rng::Rng::new(3);
@@ -917,17 +919,28 @@ mod tests {
             st.lora.iter().map(|t| t.as_f32().unwrap().to_vec()).collect()
         };
 
-        let want = run_steps(gemm::Mode::Tiled, 1);
-        for (mode, threads) in
-            [(gemm::Mode::Naive, 1), (gemm::Mode::Tiled, 4), (gemm::Mode::Naive, 4)]
-        {
-            let got = run_steps(mode, threads);
+        let want = run_steps(gemm::Mode::Tiled, 1, true);
+        for (mode, threads, fused) in [
+            (gemm::Mode::Naive, 1, true),
+            (gemm::Mode::Tiled, 4, true),
+            (gemm::Mode::Naive, 4, true),
+            (gemm::Mode::Simd, 1, true),
+            (gemm::Mode::Simd, 4, true),
+            (gemm::Mode::Tiled, 1, false),
+            (gemm::Mode::Tiled, 4, false),
+            (gemm::Mode::Simd, 1, false),
+        ] {
+            let got = run_steps(mode, threads, fused);
             for (k, (a, b)) in want.iter().zip(&got).enumerate() {
-                assert_eq!(a, b, "lora[{k}] diverged under {mode:?}/{threads} threads");
+                assert_eq!(
+                    a, b,
+                    "lora[{k}] diverged under {mode:?}/{threads} threads/fused={fused}"
+                );
             }
         }
         gemm::set_mode(gemm::Mode::Tiled);
         gemm::set_threads(1);
+        gemm::set_fused(true);
     }
 
     #[test]

@@ -236,6 +236,15 @@ fn proj_fwd_rows(
 ) {
     out.fill(0.0);
     mid.fill(0.0);
+    let fused = gemm::fused();
+    if fused {
+        // The base weight `w` is shared by every adapter, so the base GEMM
+        // fuses across adapter boundaries into one call over the whole row
+        // range. Each output element still receives base contributions
+        // first (ascending k), then its adapter's B contributions — the
+        // same per-element sequence as the per-adapter loop below.
+        gemm::mm_acc(out, &input[lo * din..hi * din], w, hi - lo, din, dout, 1.0);
+    }
     let mut row = lo;
     while row < hi {
         let i = row / m; // adapter owning this row group
@@ -244,7 +253,9 @@ fn proj_fwd_rows(
         let xi = &input[row * din..end * din];
         let oi = &mut out[(row - lo) * dout..(end - lo) * dout];
         let mi = &mut mid[(row - lo) * r..(end - lo) * r];
-        gemm::mm_acc(oi, xi, w, h, din, dout, 1.0);
+        if !fused {
+            gemm::mm_acc(oi, xi, w, h, din, dout, 1.0);
+        }
         gemm::mm_acc(mi, xi, &a[i * din * r..(i + 1) * din * r], h, din, r, 1.0);
         gemm::mm_acc(oi, mi, &b[i * r * dout..(i + 1) * r * dout], h, r, dout, scale[i]);
         row = end;
@@ -256,13 +267,13 @@ fn proj_fwd_rows(
 /// `python/compile/kernels/ref.py::ref_grads` composed with the base GEMM.
 ///
 /// Two phases: the row-local part (`dmid`, `dinput`) splits the `n·m` rows
-/// across scoped workers like [`proj_fwd`]; the `da`/`db` reductions keep
-/// each adapter's accumulation order over rows sequential — but distinct
-/// **adapters** write disjoint `da`/`db` slices, so they fan out across
-/// the persistent [`crate::util::threadpool::global`] workers
-/// ([`proj_bwd_wgrads`]). One adapter = one worker = one unchanged
-/// reduction order, so results stay bitwise invariant at any
-/// `PLORA_THREADS` setting.
+/// across scoped workers like [`proj_fwd`]; the `da`/`db` reductions run
+/// as one batched multi-adapter GEMM per projection ([`proj_bwd_wgrads`],
+/// [`gemm::batched`]) whose combined output rows fan out across the
+/// persistent [`crate::util::threadpool::global`] workers. Every output
+/// element keeps one sequential ascending-k reduction on exactly one
+/// worker, so results stay bitwise invariant at any `PLORA_THREADS`
+/// setting and with fusion on or off (`PLORA_FUSED`).
 #[allow(clippy::too_many_arguments)]
 fn proj_bwd(
     dinput: &mut [f32],
@@ -298,10 +309,20 @@ fn proj_bwd(
 
 /// The weight-gradient phase of [`proj_bwd`]:
 /// `da_i += input_i^T @ dmid_i` (case 3), `db_i += scale_i * mid_i^T @
-/// dy_i` (case 1), per adapter. Adapters are split across the global
-/// worker pool when the region is large enough (the [`gemm::PAR_MIN_WORK`]
-/// guard keeps nano-scale steps dispatch-free); each adapter's two
-/// reductions run back-to-back on exactly one worker.
+/// dy_i` (case 1), per adapter.
+///
+/// **Fused (default):** all `n` adapters' disjoint `da`/`db` slices are
+/// walked by one [`gemm::batched`] call per projection — two batched GEMMs
+/// replace `2n` small ones, and the `_par` driver splits the combined
+/// output rows at *row* granularity, so parallelism is no longer capped at
+/// `threads().min(n)` adapter-sized tasks. Per-element k-order, per-adapter
+/// `scale` and the zero-rank-padding `f == 0.0` skip are untouched (same
+/// mode-dispatched kernels), so the result is bit-identical to the
+/// per-adapter loop. **Unfused (`PLORA_FUSED=0`):** the original loop —
+/// adapters split across the global pool when the region is large enough
+/// (the [`gemm::PAR_MIN_WORK`] guard keeps nano-scale steps dispatch-free),
+/// each adapter's two reductions back-to-back on exactly one worker. Kept
+/// as the fusion bench baseline and for bisecting.
 #[allow(clippy::too_many_arguments)]
 fn proj_bwd_wgrads(
     da: &mut [f32],
@@ -317,6 +338,12 @@ fn proj_bwd_wgrads(
     dout: usize,
     r: usize,
 ) {
+    if gemm::fused() {
+        let nt = gemm::threads();
+        gemm::batched::mm_tn_acc_par(da, input, dmid, n, m, din, r, None, nt);
+        gemm::batched::mm_tn_acc_par(db, mid, dy, n, m, r, dout, Some(scale), nt);
+        return;
+    }
     let ka = din * r; // per-adapter da length
     let kb = r * dout; // per-adapter db length
     let per_adapter = |da_i: &mut [f32], db_i: &mut [f32], i: usize| {
@@ -379,6 +406,15 @@ fn proj_bwd_rows(
     lo: usize,
     hi: usize,
 ) {
+    let fused = gemm::fused();
+    if fused {
+        // Shared-base fusion (see `proj_fwd_rows`): `w` is adapter-
+        // independent, so `dinput += dy @ w^T` runs once over the whole
+        // row range. Each element's order is unchanged — prior
+        // accumulated contributions, then the w term, then its adapter's
+        // a term.
+        gemm::mm_nt_acc(dinput, &dy[lo * dout..hi * dout], w, hi - lo, dout, din, 1.0);
+    }
     let mut row = lo;
     while row < hi {
         let i = row / m;
@@ -391,7 +427,9 @@ fn proj_bwd_rows(
         gemm::mm_nt_acc(dmi, dyi, &b[i * r * dout..(i + 1) * r * dout], h, dout, r, scale[i]);
         let di = &mut dinput[(row - lo) * din..(end - lo) * din];
         // dinput += dy @ w^T + dh_mid @ a^T (base GEMM + case 4)
-        gemm::mm_nt_acc(di, dyi, w, h, dout, din, 1.0);
+        if !fused {
+            gemm::mm_nt_acc(di, dyi, w, h, dout, din, 1.0);
+        }
         gemm::mm_nt_acc(di, dmi, &a[i * din * r..(i + 1) * din * r], h, r, din, 1.0);
         row = end;
     }

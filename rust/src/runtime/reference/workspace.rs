@@ -132,6 +132,10 @@ pub struct Workspace {
     pub(crate) dup: Vec<f32>,
     pub(crate) dgate: Vec<f32>,
     pub(crate) dh2: Vec<f32>,
+    /// Rank-space upstream gradient, `(n·m, r)` adapter-major — exactly
+    /// the densely-strided `b` operand the fused `gemm::batched` `dA`
+    /// reduction consumes, so the batched path needs no extra packing
+    /// scratch (likewise `mid`/`dy` for `dB`).
     pub(crate) dmid: Vec<f32>,
     pub(crate) dq: Vec<f32>,
     pub(crate) dk: Vec<f32>,

@@ -198,12 +198,15 @@ fn cost_model_monotone_in_pack() {
     );
 }
 
-/// The tiled GEMM kernels are bit-identical to the naive reference on
-/// randomized shapes — including non-tile-multiple m/k/n, zeroed rows/
-/// columns of A and the alpha = 0 fast path — and the row-parallel
+/// The tiled and SIMD GEMM kernels and the batched-fused multi-adapter
+/// driver are bit-identical to the naive reference on randomized shapes —
+/// a property matrix over {tiled, simd, batched-fused} × non-tile-multiple
+/// m/k/n (crossing every panel, register-block and 8-lane boundary) ×
+/// zero-padded ranks (whole zero trailing columns of Aᵀ, exercising the
+/// `f == 0.0` skip) × the alpha = 0 fast path — and the row-parallel
 /// drivers are bit-identical at any worker count. This is the invariant
-/// that lets the reference backend switch kernel implementations and
-/// thread counts without perturbing any training trajectory.
+/// that lets the reference backend switch kernel implementations, fusion
+/// and thread counts without perturbing any training trajectory.
 #[test]
 fn tiled_gemm_matches_naive_bitwise() {
     use plora::runtime::reference::gemm;
@@ -217,15 +220,18 @@ fn tiled_gemm_matches_naive_bitwise() {
                 1 + rng.usize_below(300), // n: crosses the 16/256-wide column tiles
                 rng.usize_below(4),       // alpha selector (includes 0.0)
                 rng.usize_below(1 << 16), // data seed
+                1 + rng.usize_below(4),   // nb: batched adapter count
+                rng.usize_below(8),       // zero-padded trailing rank columns
             ]
         },
         |v| {
-            if v.len() != 5 {
+            if v.len() != 7 {
                 return Ok(()); // shrunk into an inconsistent shape; skip
             }
             let (m, k, n) = (v[0].max(1), v[1].max(1), v[2].max(1));
             let alpha = [1.0f32, -0.6, 0.0, 2.5][v[3] % 4];
             let mut rng = Rng::new(v[4] as u64 + 1);
+            let (nb, pad) = (v[5].max(1), v[6].min(m.saturating_sub(1)));
             let mut buf = |len: usize, zero_frac: f64| -> Vec<f32> {
                 (0..len)
                     .map(|_| if rng.f64() < zero_frac { 0.0 } else { rng.normal() as f32 })
@@ -237,40 +243,108 @@ fn tiled_gemm_matches_naive_bitwise() {
             let at = buf(k * m, 0.3);
             let init = buf(m * n, 0.0);
             let bits = |x: &[f32]| -> Vec<u32> { x.iter().map(|f| f.to_bits()).collect() };
+            type MmFn = fn(&mut [f32], &[f32], &[f32], usize, usize, usize, f32);
 
             let mut want = init.clone();
             gemm::naive::mm_acc(&mut want, &a, &b, m, k, n, alpha);
-            let mut got = init.clone();
-            gemm::tiled::mm_acc(&mut got, &a, &b, m, k, n, alpha);
-            if bits(&want) != bits(&got) {
-                return Err(format!("mm_acc tiled != naive at {m}x{k}x{n} alpha {alpha}"));
+            for (label, f) in [
+                ("tiled", gemm::tiled::mm_acc as MmFn),
+                ("simd", gemm::simd::mm_acc as MmFn),
+            ] {
+                let mut got = init.clone();
+                f(&mut got, &a, &b, m, k, n, alpha);
+                if bits(&want) != bits(&got) {
+                    return Err(format!("mm_acc {label} != naive at {m}x{k}x{n} alpha {alpha}"));
+                }
             }
             let mut par = init.clone();
             gemm::mm_acc_par(&mut par, &a, &b, m, k, n, alpha, 4);
-            if bits(&got) != bits(&par) {
+            if bits(&want) != bits(&par) {
                 return Err(format!("mm_acc_par(4) != serial at {m}x{k}x{n}"));
             }
 
             let mut want = init.clone();
             gemm::naive::mm_nt_acc(&mut want, &a, &bt, m, k, n, alpha);
-            let mut got = init.clone();
-            gemm::tiled::mm_nt_acc(&mut got, &a, &bt, m, k, n, alpha);
-            if bits(&want) != bits(&got) {
-                return Err(format!("mm_nt_acc tiled != naive at {m}x{k}x{n} alpha {alpha}"));
+            for (label, f) in [
+                ("tiled", gemm::tiled::mm_nt_acc as MmFn),
+                ("simd", gemm::simd::mm_nt_acc as MmFn),
+            ] {
+                let mut got = init.clone();
+                f(&mut got, &a, &bt, m, k, n, alpha);
+                if bits(&want) != bits(&got) {
+                    return Err(format!("mm_nt_acc {label} != naive at {m}x{k}x{n} alpha {alpha}"));
+                }
             }
             let mut par = init.clone();
             gemm::mm_nt_acc_par(&mut par, &a, &bt, m, k, n, alpha, 3);
-            if bits(&got) != bits(&par) {
+            if bits(&want) != bits(&par) {
                 return Err(format!("mm_nt_acc_par(3) != serial at {m}x{k}x{n}"));
             }
 
             let mut want = init.clone();
             gemm::naive::mm_tn_acc(&mut want, &at, &b, k, m, n, alpha);
-            let mut got = init.clone();
-            gemm::tiled::mm_tn_acc(&mut got, &at, &b, k, m, n, alpha);
-            if bits(&want) != bits(&got) {
-                return Err(format!("mm_tn_acc tiled != naive at {m}x{k}x{n} alpha {alpha}"));
+            for (label, f) in [
+                ("tiled", gemm::tiled::mm_tn_acc as MmFn),
+                ("simd", gemm::simd::mm_tn_acc as MmFn),
+            ] {
+                let mut got = init.clone();
+                f(&mut got, &at, &b, k, m, n, alpha);
+                if bits(&want) != bits(&got) {
+                    return Err(format!("mm_tn_acc {label} != naive at {m}x{k}x{n} alpha {alpha}"));
+                }
             }
+            let mut par = init.clone();
+            gemm::mm_tn_acc_par(&mut par, &at, &b, k, m, n, alpha, 4);
+            if bits(&want) != bits(&par) {
+                return Err(format!("mm_tn_acc_par(4) != serial at {m}x{k}x{n}"));
+            }
+
+            // Batched-fused multi-adapter driver vs the per-adapter naive
+            // loop, with zero-padded ranks: each adapter's stored (k, m)
+            // Aᵀ slice loses its trailing `pad` columns (rank padding),
+            // so those output rows must be produced by the exact same
+            // skipped-term sequence in both paths.
+            let mut ab = buf(nb * k * m, 0.3);
+            let bb = buf(nb * k * n, 0.0);
+            for i in 0..nb {
+                for kk in 0..k {
+                    for c in m - pad..m {
+                        ab[i * k * m + kk * m + c] = 0.0;
+                    }
+                }
+            }
+            let alphas: Vec<f32> = (0..nb).map(|i| [alpha, 1.0, -0.6, 0.0][i % 4]).collect();
+            let binit = buf(nb * m * n, 0.0);
+            let mut want = binit.clone();
+            for i in 0..nb {
+                gemm::naive::mm_tn_acc(
+                    &mut want[i * m * n..(i + 1) * m * n],
+                    &ab[i * k * m..(i + 1) * k * m],
+                    &bb[i * k * n..(i + 1) * k * n],
+                    k,
+                    m,
+                    n,
+                    alphas[i],
+                );
+            }
+            let prev = gemm::mode();
+            for md in [gemm::Mode::Tiled, gemm::Mode::Simd, gemm::Mode::Naive] {
+                gemm::set_mode(md);
+                let mut got = binit.clone();
+                gemm::batched::mm_tn_acc(&mut got, &ab, &bb, nb, k, m, n, Some(&alphas));
+                let mut par = binit.clone();
+                gemm::batched::mm_tn_acc_par(&mut par, &ab, &bb, nb, k, m, n, Some(&alphas), 3);
+                let serial = bits(&got) == bits(&want);
+                let parallel = bits(&par) == bits(&want);
+                if !serial || !parallel {
+                    gemm::set_mode(prev);
+                    return Err(format!(
+                        "batched {md:?} != per-adapter naive at nb={nb} {m}x{k}x{n} \
+                         pad={pad} (serial ok: {serial}, par ok: {parallel})"
+                    ));
+                }
+            }
+            gemm::set_mode(prev);
             Ok(())
         },
     );
