@@ -4,7 +4,11 @@
 //! jobs, adapter-completion re-bucketing, elastic mid-job admission —
 //! plus the device axis: per-`d` sharded step times, the measured
 //! dp-efficiency figure, and the device-count-aware planner against a
-//! fixed-d baseline on the skewed scenario.
+//! fixed-d baseline on the skewed scenario. The pipeline axis rides
+//! along: per-`s` stage-pipelined step times on a fixed pack, and the
+//! heterogeneous-fleet placement gate — per-device-class calibration
+//! builds a skewed 1-fast + 3-slow fleet and hetero-aware LPT placement
+//! must beat the identical-device baseline on it.
 //!
 //! Emits `BENCH_session.json` (makespans + throughput + event counts:
 //! rebuckets, admissions, preemptions, the elastic-vs-FIFO makespan ratio
@@ -21,7 +25,7 @@ use plora::bench::Bench;
 use plora::cluster::{Allocation, ResourceMonitor};
 use plora::config::{pool, LoraConfig};
 use plora::costmodel::{DpStat, ExecMode, Pack, TrainBudget};
-use plora::planner::{JobPlanner, PlannedJob};
+use plora::planner::{hosts_from_fits, place_jobs, JobPlanner, PlannedJob};
 use plora::runtime::Runtime;
 use plora::session::{Policy, Session, SessionReport};
 use plora::train::{run_pack_on, TrainOptions};
@@ -45,7 +49,13 @@ fn queue() -> Vec<PlannedJob> {
             configs.push(cfg(id, tasks[(j + s) % tasks.len()], 8, bs));
             id += 1;
         }
-        jobs.push(PlannedJob { id: j, pack: Pack::new(configs), d: 1, mode: ExecMode::Packed });
+        jobs.push(PlannedJob {
+            id: j,
+            pack: Pack::new(configs),
+            d: 1,
+            s: 0,
+            mode: ExecMode::Packed,
+        });
     }
     jobs
 }
@@ -60,6 +70,7 @@ fn skewed_queue() -> Vec<PlannedJob> {
         id: 0,
         pack: Pack::new(vec![cfg(0, "modadd", 8, 1), cfg(1, "parity", 8, 2)]),
         d: 1,
+        s: 0,
         mode: ExecMode::Packed,
     }];
     for (i, task) in ["copy", "needle", "parity"].iter().enumerate() {
@@ -67,6 +78,7 @@ fn skewed_queue() -> Vec<PlannedJob> {
             id: 1 + i,
             pack: Pack::new(vec![cfg(2 + i, task, 8, 2)]),
             d: 1,
+            s: 0,
             mode: ExecMode::Packed,
         });
     }
@@ -191,6 +203,61 @@ fn main() -> anyhow::Result<()> {
         last = Some(run_session(&rt, fixed_jobs.clone(), 2, 32, Policy::Fifo, false, true));
     });
     let d_fixed = last.take().expect("at least one measured run");
+
+    // Stage axis: per-depth step times on the same fixed 4-adapter pack,
+    // run as a solo session job planned at depth `s`. nano's 2-layer
+    // stack clamps anything deeper to 2, so s=2 is the deepest effective
+    // depth here; the exported depth proves the pipeline actually ran.
+    let mut pipe_secs = std::collections::BTreeMap::new();
+    let mut pipe_depth = std::collections::BTreeMap::new();
+    for st in [1usize, 2] {
+        let job = PlannedJob {
+            id: 0,
+            pack: Pack::new(dp_cfgs.clone()),
+            d: 1,
+            s: st,
+            mode: ExecMode::Packed,
+        };
+        let mut step_secs = 0.0;
+        let mut depth = 0usize;
+        b.measure(&format!("pipelined_step_s{st}"), || {
+            let rep = run_session(&rt, vec![job.clone()], 1, 16, Policy::Fifo, false, false);
+            step_secs = rep.outcomes[0].report.step_secs;
+            depth = rep.outcomes[0].report.s;
+        });
+        pipe_secs.insert(st, step_secs);
+        pipe_depth.insert(st, depth);
+    }
+
+    // Heterogeneous-fleet placement gate: feed per-device-class step
+    // times into the calibrator (the measured per-d times as the fast
+    // tier, a synthetic 4x-slower tier alongside), build a skewed fleet
+    // (1 fast + 3 slow) from the per-class Amdahl fits exactly as the
+    // hetero planner would, and place the 8-job queue's modeled
+    // durations on it: hetero-aware LPT vs the identical-device
+    // baseline, both evaluated under the fleet's true speeds.
+    let class_stat = DpStat::new();
+    for (&d, &secs) in &dp_secs {
+        class_stat.record_class("fast", d, 4.0, secs);
+        class_stat.record_class("slow", d, 4.0, secs * 4.0);
+    }
+    let mut hcm = plora::search::live_cost_model(&rt, "nano")?;
+    hcm.calib.dp_fit_class = class_stat.class_fits();
+    let fleet =
+        hosts_from_fits(&hcm.calib, &[("fast".to_string(), 1), ("slow".to_string(), 3)], 1);
+    let slow_speed = fleet.last().map(|h| h.speed).unwrap_or(f64::NAN);
+    // Modeled reference duration of each queue job: its padded bucket
+    // rows at the measured d=1 per-step cost, over the queue's step
+    // budget. Only the *spread* matters to the placement ratio.
+    let durs: Vec<f64> = queue()
+        .iter()
+        .map(|j| {
+            let rows: usize = j.pack.configs.iter().map(|c| c.batch).sum();
+            rows as f64 * dp_secs[&1].max(1e-9) * 24.0
+        })
+        .collect();
+    let hetero_aware = place_jobs(&durs, &fleet, true);
+    let hetero_blind = place_jobs(&durs, &fleet, false);
     b.finish()?;
 
     let rank_units: usize = report
@@ -254,6 +321,20 @@ fn main() -> anyhow::Result<()> {
             "skew_d_aware_vs_fixed_d",
             Json::num(d_aware.makespan / d_fixed.makespan.max(1e-9)),
         ),
+        // Stage axis: per-depth step times plus the effective depth the
+        // runtime actually executed (nano clamps s to its layer count).
+        ("pipe_step_secs_s1", Json::num(pipe_secs[&1])),
+        ("pipe_step_secs_s2", Json::num(pipe_secs[&2])),
+        ("pipe_effective_depth_s2", Json::num(pipe_depth[&2] as f64)),
+        // Skewed-fleet placement gate: hetero-aware must not lose to the
+        // identical-device baseline (CI pins the ratio's max).
+        ("hetero_fleet_slow_speed", Json::num(slow_speed)),
+        ("hetero_makespan_aware_s", Json::num(hetero_aware.makespan)),
+        ("hetero_makespan_identical_s", Json::num(hetero_blind.makespan)),
+        (
+            "hetero_aware_vs_identical",
+            Json::num(hetero_aware.makespan / hetero_blind.makespan.max(1e-9)),
+        ),
     ]);
     let mut out = String::new();
     rec.write(&mut out);
@@ -295,6 +376,18 @@ fn main() -> anyhow::Result<()> {
     println!(
         "d-aware planner (d = {aware_ds:?}): {:.2}s vs fixed d=1 {:.2}s",
         d_aware.makespan, d_fixed.makespan,
+    );
+    println!(
+        "pipelined steps: s1 {:.4}s  s2 {:.4}s (effective depth {})",
+        pipe_secs[&1], pipe_secs[&2], pipe_depth[&2],
+    );
+    println!(
+        "skewed fleet (1 fast + 3 slow at {:.2}x): hetero-aware {:.2}s vs identical {:.2}s \
+         (ratio {:.2})",
+        slow_speed,
+        hetero_aware.makespan,
+        hetero_blind.makespan,
+        hetero_aware.makespan / hetero_blind.makespan.max(1e-9),
     );
     println!("wrote {}", path.display());
     Ok(())

@@ -101,6 +101,25 @@ pub struct Calib {
     /// pack when the modeled phase-time saving beats this term; defaults
     /// to 0 and is calibrated live from measured rebuild times.
     pub device_switch_cost: f64,
+    /// Per-device-class Amdahl fits keyed by speed tier (`"a100"`,
+    /// `"a10"`, …): the same `(a, b)` decomposition as [`Calib::dp_fit`],
+    /// but measured per class of host so a mixed fast/slow fleet gets one
+    /// efficiency curve per tier. [`Calib::dp_fit_for`] consults this map
+    /// first and falls back to the class-less fit. Fed from per-class
+    /// [`DpStat`] records (`DpStat::record_class`).
+    pub dp_fit_class: std::collections::BTreeMap<String, (f64, f64)>,
+    /// Fractional per-boundary cost of the stage pipeline: each extra
+    /// stage adds one activation/grad handoff per microbatch, charged as
+    /// this fraction of the step on top of the GPipe bubble (see
+    /// [`CostModel::pipeline_speedup`]). Calibrated so shallow pipelines
+    /// on few microbatches never look free.
+    pub stage_boundary_cost: f64,
+    /// Wall cost of one pipeline retarget (rebuild the per-stage worker
+    /// set and handoff channels at a new depth `s`). The session's
+    /// boundary stage offers only deepen a running pack when the modeled
+    /// phase-time saving beats this term; defaults to 0 and is calibrated
+    /// live from measured rebuild times.
+    pub stage_switch_cost: f64,
 }
 
 impl Default for Calib {
@@ -121,7 +140,20 @@ impl Default for Calib {
             bucket_switch_cost: 0.0,
             dp_fit: None,
             device_switch_cost: 0.0,
+            dp_fit_class: Default::default(),
+            stage_boundary_cost: 0.02,
+            stage_switch_cost: 0.0,
         }
+    }
+}
+
+impl Calib {
+    /// The Amdahl fit for one device class: the class-keyed entry when
+    /// per-class calibration recorded one, the class-less [`Calib::dp_fit`]
+    /// otherwise. An unknown class therefore degrades gracefully to the
+    /// fleet-wide curve instead of the static TP fallback.
+    pub fn dp_fit_for(&self, class: &str) -> Option<(f64, f64)> {
+        self.dp_fit_class.get(class).copied().or(self.dp_fit)
     }
 }
 
@@ -179,6 +211,42 @@ impl SwitchCost {
 pub struct DpStat {
     /// Per-d accumulator: d -> (sum of per-sample seconds, steps).
     inner: std::sync::Arc<std::sync::Mutex<std::collections::BTreeMap<usize, (f64, usize)>>>,
+    /// Per-device-class accumulator: class -> (d -> (sum, steps)). Steps
+    /// recorded with [`DpStat::record_class`] land here *and* in the
+    /// class-less accumulator, so the fleet-wide fit keeps improving.
+    #[allow(clippy::type_complexity)]
+    by_class: std::sync::Arc<
+        std::sync::Mutex<
+            std::collections::BTreeMap<String, std::collections::BTreeMap<usize, (f64, usize)>>,
+        >,
+    >,
+}
+
+/// Least-squares `(a, b)` of mean per-sample time on `1/d` over the
+/// distinct shard counts of one accumulator (needs at least two), clamped
+/// to the physically meaningful quadrant (`a, b ≥ 0`).
+fn amdahl_fit(g: &std::collections::BTreeMap<usize, (f64, usize)>) -> Option<(f64, f64)> {
+    if g.len() < 2 {
+        return None;
+    }
+    let pts: Vec<(f64, f64)> =
+        g.iter().map(|(&d, &(sum, cnt))| (1.0 / d as f64, sum / cnt.max(1) as f64)).collect();
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let den = n * sxx - sx * sx;
+    if den.abs() < 1e-18 {
+        return None;
+    }
+    let b = (n * sxy - sx * sy) / den;
+    let a = (sy - b * sx) / n;
+    let (a, b) = (a.max(0.0), b.max(0.0));
+    if a + b <= 0.0 {
+        return None;
+    }
+    Some((a, b))
 }
 
 impl DpStat {
@@ -198,6 +266,20 @@ impl DpStat {
         e.1 += 1;
     }
 
+    /// [`DpStat::record`] tagged with the executing host's device class
+    /// (speed tier). The sample feeds both the per-class accumulator —
+    /// whose fit [`Calib::dp_fit_for`] prefers — and the class-less one.
+    pub fn record_class(&self, class: &str, d: usize, samples: f64, secs: f64) {
+        if samples <= 0.0 || secs <= 0.0 {
+            return;
+        }
+        self.record(d, samples, secs);
+        let mut g = self.by_class.lock().unwrap();
+        let e = g.entry(class.to_string()).or_default().entry(d.max(1)).or_insert((0.0, 0));
+        e.0 += secs / samples;
+        e.1 += 1;
+    }
+
     /// Total recorded steps.
     pub fn samples(&self) -> usize {
         self.inner.lock().unwrap().values().map(|v| v.1).sum()
@@ -208,30 +290,24 @@ impl DpStat {
     /// the physically meaningful quadrant (`a, b ≥ 0`). `None` until the
     /// session has executed at more than one device count.
     pub fn fit(&self) -> Option<(f64, f64)> {
-        let g = self.inner.lock().unwrap();
-        if g.len() < 2 {
-            return None;
-        }
-        let pts: Vec<(f64, f64)> = g
+        amdahl_fit(&self.inner.lock().unwrap())
+    }
+
+    /// The per-class Amdahl fit for one device class (`None` until that
+    /// class has executed steps at two or more distinct shard counts).
+    pub fn fit_class(&self, class: &str) -> Option<(f64, f64)> {
+        self.by_class.lock().unwrap().get(class).and_then(amdahl_fit)
+    }
+
+    /// Every class with a publishable fit, for bulk export into
+    /// [`Calib::dp_fit_class`].
+    pub fn class_fits(&self) -> std::collections::BTreeMap<String, (f64, f64)> {
+        self.by_class
+            .lock()
+            .unwrap()
             .iter()
-            .map(|(&d, &(sum, cnt))| (1.0 / d as f64, sum / cnt.max(1) as f64))
-            .collect();
-        let n = pts.len() as f64;
-        let sx: f64 = pts.iter().map(|p| p.0).sum();
-        let sy: f64 = pts.iter().map(|p| p.1).sum();
-        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
-        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
-        let den = n * sxx - sx * sx;
-        if den.abs() < 1e-18 {
-            return None;
-        }
-        let b = (n * sxy - sx * sy) / den;
-        let a = (sy - b * sx) / n;
-        let (a, b) = (a.max(0.0), b.max(0.0));
-        if a + b <= 0.0 {
-            return None;
-        }
-        Some((a, b))
+            .filter_map(|(c, g)| amdahl_fit(g).map(|f| (c.clone(), f)))
+            .collect()
     }
 }
 
@@ -371,6 +447,38 @@ impl CostModel {
         }
     }
 
+    /// [`CostModel::parallel_speedup`] under one device class's own
+    /// Amdahl fit ([`Calib::dp_fit_for`]): a slow tier with a more
+    /// serial-dominated fit sees a smaller modeled speedup than the fast
+    /// tier at the same `d`. Falls back to the class-less behavior when
+    /// the class has no fit.
+    pub fn parallel_speedup_for(&self, class: &str, d: usize) -> f64 {
+        match self.calib.dp_fit_for(class) {
+            Some((a, b)) if a + b > 0.0 => {
+                let d = d.max(1) as f64;
+                (a + b) / (a + b / d).max(1e-18)
+            }
+            _ => self.tp_speedup(d),
+        }
+    }
+
+    /// Modeled speedup of streaming `microbatches` through an `s`-stage
+    /// pipeline (GPipe schedule, DESIGN.md §15): ideal utilization is
+    /// `s·M / (M + s − 1)` (the fill/drain bubble), discounted by
+    /// [`Calib::stage_boundary_cost`] per extra stage boundary (one
+    /// activation/grad handoff per microbatch each). `s = 1` is exactly
+    /// 1; one microbatch through a deep pipeline is pure overhead (< 1).
+    pub fn pipeline_speedup(&self, s: usize, microbatches: usize) -> f64 {
+        let s = s.max(1);
+        if s == 1 {
+            return 1.0;
+        }
+        let sf = s as f64;
+        let m = microbatches.max(1) as f64;
+        let fill = sf * m / (m + sf - 1.0);
+        fill / (1.0 + self.calib.stage_boundary_cost * (sf - 1.0))
+    }
+
     /// Real tokens processed per step by a job running `samples` sequences.
     pub fn step_tokens(&self, samples: f64) -> f64 {
         samples * self.calib.tokens_per_sample.min(self.geom.seq as f64)
@@ -458,6 +566,27 @@ impl CostModel {
         self.base_step_time(samples, d)
             + self.lora_time_units(bn, (bn * br) as f64, d, mode)
             + self.calib.step_overhead
+    }
+
+    /// [`CostModel::bucket_step_time`] composed with an `s`-stage
+    /// pipeline: the executed microbatch is one bucket slot, so `s`
+    /// stages stream `bn` microbatches per step and the whole step
+    /// divides by [`CostModel::pipeline_speedup`]. `s` clamps to the
+    /// layer stack exactly as `ShardedState` clamps the executed depth;
+    /// `s = 1` reproduces `bucket_step_time` bit-for-bit.
+    pub fn bucket_step_time_ds(
+        &self,
+        bucket: (usize, usize, usize),
+        d: usize,
+        s: usize,
+        mode: ExecMode,
+    ) -> f64 {
+        let t = self.bucket_step_time(bucket, d, mode);
+        let s = s.clamp(1, self.geom.n_layers.max(1));
+        if s <= 1 {
+            return t;
+        }
+        t / self.pipeline_speedup(s, bucket.0.max(1))
     }
 
     /// One fine-tuning step of `pack` on `d` devices under `mode`.
@@ -913,5 +1042,76 @@ mod tests {
         let (fa, fb, fc) = Calib::fit_live(&samples);
         assert!((fa - a).abs() < 1e-6 && (fb - b).abs() < 1e-9 && (fc - c).abs() < 1e-7,
             "fit ({fa:.2e},{fb:.2e},{fc:.2e})");
+    }
+
+    /// Pipeline speedup: identity at s=1, bounded by min(s, M), pure
+    /// overhead for one microbatch, and monotone in the microbatch count;
+    /// the `(d, s)` bucket time reproduces `bucket_step_time` at s=1 and
+    /// strictly beats it when many microbatches stream a deep pipeline.
+    #[test]
+    fn pipeline_speedup_shapes_and_ds_step_time() {
+        let m = cm();
+        assert_eq!(m.pipeline_speedup(1, 8), 1.0);
+        for s in [2usize, 4] {
+            for mb in [2usize, 8, 32] {
+                let v = m.pipeline_speedup(s, mb);
+                assert!(v <= (s.min(mb)) as f64 + 1e-12, "s={s} mb={mb}: {v}");
+            }
+            assert!(m.pipeline_speedup(s, 1) < 1.0, "one microbatch is pure bubble");
+            assert!(m.pipeline_speedup(s, 32) > m.pipeline_speedup(s, 2));
+        }
+        // Deep pipeline over many microbatches approaches s (minus the
+        // boundary discount): comfortably > 1.5 at s=2, M=32.
+        assert!(m.pipeline_speedup(2, 32) > 1.5);
+        let b = (8usize, 32usize, 1usize);
+        assert_eq!(
+            m.bucket_step_time_ds(b, 1, 1, ExecMode::Packed).to_bits(),
+            m.bucket_step_time(b, 1, ExecMode::Packed).to_bits(),
+            "s=1 must be the identity"
+        );
+        let t1 = m.bucket_step_time_ds(b, 1, 1, ExecMode::Packed);
+        let t2 = m.bucket_step_time_ds(b, 1, 2, ExecMode::Packed);
+        assert!(t2 < t1, "pipelining 8 microbatches must pay: {t2} !< {t1}");
+        // Depth clamps to the layer stack: beyond n_layers nothing changes.
+        let deep = m.bucket_step_time_ds(b, 1, 10_000, ExecMode::Packed);
+        let clamp = m.bucket_step_time_ds(b, 1, m.geom.n_layers, ExecMode::Packed);
+        assert_eq!(deep.to_bits(), clamp.to_bits());
+    }
+
+    /// Per-device-class calibration: class records feed both accumulators,
+    /// `fit_class`/`dp_fit_for` recover the planted per-tier curves, and
+    /// `parallel_speedup_for` ranks the fast tier above the slow one while
+    /// unknown classes fall back to the fleet-wide behavior.
+    #[test]
+    fn per_class_dp_fit_recovers_and_ranks_tiers() {
+        let st = DpStat::new();
+        // Fast tier: near-perfect scaling. Slow tier: serial-dominated.
+        let (fa, fb) = (1.0e-4, 9.0e-4);
+        let (sa, sb) = (8.0e-4, 2.0e-4);
+        for d in [1usize, 2, 4] {
+            st.record_class("fast", d, 4.0, (fa + fb / d as f64) * 4.0);
+            st.record_class("slow", d, 4.0, (sa + sb / d as f64) * 4.0);
+        }
+        let (ga, gb) = st.fit_class("fast").unwrap();
+        assert!((ga - fa).abs() < 1e-9 && (gb - fb).abs() < 1e-9, "fast fit ({ga:.2e},{gb:.2e})");
+        assert!(st.fit_class("slow").is_some());
+        assert!(st.fit_class("unknown").is_none());
+        // Class records also feed the class-less accumulator.
+        assert!(st.fit().is_some());
+        assert_eq!(st.class_fits().len(), 2);
+
+        let mut m = cm();
+        m.calib.dp_fit_class = st.class_fits();
+        assert_eq!(m.calib.dp_fit_for("fast"), st.fit_class("fast"));
+        // Unknown class falls back to the class-less fit.
+        m.calib.dp_fit = Some((1e-3, 1e-3));
+        assert_eq!(m.calib.dp_fit_for("unknown"), Some((1e-3, 1e-3)));
+        let fast = m.parallel_speedup_for("fast", 4);
+        let slow = m.parallel_speedup_for("slow", 4);
+        assert!(fast > slow, "fast tier must out-scale slow: {fast:.2} !> {slow:.2}");
+        // No fits anywhere: static TP curve, same as the class-less path.
+        m.calib.dp_fit = None;
+        m.calib.dp_fit_class.clear();
+        assert_eq!(m.parallel_speedup_for("fast", 4), m.tp_speedup(4));
     }
 }

@@ -317,6 +317,7 @@ pub fn run(rt: Arc<Runtime>, opts: DaemonOpts) -> Result<()> {
             id: sub.job,
             pack: Pack::new(remaining),
             d: sub.d,
+            s: 0, // depth inherits PLORA_STAGES; digests are depth-invariant
             mode: sub.mode,
         };
         session.submit_planned_resume(job, sub.priority, resume)?;
@@ -629,7 +630,7 @@ impl Daemon {
             let vj = Json::obj(view_fields(&view));
             inner.jobs.insert(job_id, view);
             let planned =
-                PlannedJob { id: job_id, pack: Pack::new(configs), d, mode };
+                PlannedJob { id: job_id, pack: Pack::new(configs), d, s: 0, mode };
             (planned, priority, vj)
         };
 

@@ -113,7 +113,7 @@ mod tests {
     }
 
     fn job(id: usize, d: usize, configs: Vec<LoraConfig>) -> PlannedJob {
-        PlannedJob { id, pack: Pack::new(configs), d, mode: ExecMode::Packed }
+        PlannedJob { id, pack: Pack::new(configs), d, s: 0, mode: ExecMode::Packed }
     }
 
     /// Two jobs on a 2-slot pool run concurrently; a third waits its turn.

@@ -691,6 +691,9 @@ fn render_event(ev: &Event) {
         Event::DeviceRetarget { job, from, to, .. } => {
             println!("[{at:7.2}s] job {job} device-retargeted: {from} -> {to} devices");
         }
+        Event::StageRetarget { job, from, to, .. } => {
+            println!("[{at:7.2}s] job {job} stage-retargeted: {from} -> {to} pipeline stages");
+        }
         Event::JobFinished { job, adapters, wall, .. } => {
             if *adapters == 0 {
                 println!("[{at:7.2}s] job {job} fully absorbed by running packs");

@@ -41,7 +41,7 @@ fn place_fixed_jobs(
                 g_avail -= d;
                 running.push((now + dur, d));
                 queue.push(ScheduledJob {
-                    job: PlannedJob { id: next_id, pack, d, mode: ExecMode::Sequential },
+                    job: PlannedJob { id: next_id, pack, d, s: 0, mode: ExecMode::Sequential },
                     start: now,
                     end: now + dur,
                 });

@@ -88,6 +88,7 @@ impl<'a> Dtm<'a> {
                         id: 0, // assigned by the job planner
                         pack: sol.pack,
                         d,
+                        s: 0, // depth chosen later (JobPlanner::choose_stages)
                         mode: self.mode,
                     });
                     self.helper(g - d, d, rest, current, best, stats);

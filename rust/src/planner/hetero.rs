@@ -1,0 +1,194 @@
+//! Heterogeneous-device-aware job placement (DESIGN.md §15): assign
+//! planned jobs to a mixed fast/slow fleet using per-device-class speed
+//! tiers instead of pretending every host is identical.
+//!
+//! The fleet is a list of [`Host`]s, each carrying a relative speed (1.0
+//! = the reference tier; a host at 0.5 runs every job twice as long).
+//! Speeds come from the per-device-class calibration
+//! ([`crate::costmodel::throughput::Calib::dp_fit_for`], fed from
+//! measured per-class step times via `DpStat::record_class`) through
+//! [`hosts_from_fits`]. Placement is greedy LPT — longest job first onto
+//! the host with the earliest *believed* finish time — where "believed"
+//! is the distinction under test:
+//!
+//! - **hetero-aware** ([`place_jobs`] with `aware = true`): the planner
+//!   believes the calibrated speeds, so a long job lands on a fast host
+//!   even when a slow one is idler.
+//! - **identical-device baseline** (`aware = false`): the planner
+//!   believes every host runs at speed 1 (the pre-calibration behavior)
+//!   and balances raw load only.
+//!
+//! Both placements are *evaluated* under the true speeds, so on a skewed
+//! fleet the identical-device baseline pays for parking long jobs on
+//! slow hosts — the makespan gap the skewed-fleet bench gate pins.
+
+use crate::costmodel::throughput::Calib;
+
+/// One host of a (possibly mixed) fleet.
+#[derive(Debug, Clone)]
+pub struct Host {
+    pub id: usize,
+    /// Device-class tag (speed tier) the host belongs to.
+    pub class: String,
+    /// Relative throughput: reference tier = 1.0; a job of baseline
+    /// duration `t` takes `t / speed` wall seconds here.
+    pub speed: f64,
+}
+
+impl Host {
+    /// A uniform fleet of `n` reference-speed hosts.
+    pub fn uniform(n: usize) -> Vec<Host> {
+        (0..n).map(|id| Host { id, class: "ref".into(), speed: 1.0 }).collect()
+    }
+}
+
+/// A placement of jobs onto hosts, evaluated under the fleet's true
+/// speeds.
+#[derive(Debug, Clone, Default)]
+pub struct HostPlacement {
+    /// `(job index, host id)` in placement order.
+    pub assignments: Vec<(usize, usize)>,
+    /// Per-host finish time (true speeds), indexed like the host slice.
+    pub finish: Vec<f64>,
+    /// Max over [`HostPlacement::finish`].
+    pub makespan: f64,
+}
+
+/// Build a fleet from per-class Amdahl fits: each `(class, count)` entry
+/// contributes `count` hosts whose speed is the class's modeled
+/// per-sample rate `1 / (a + b/d)` at width `d`, normalized so the
+/// fastest tier sits at 1.0. Classes without a fit (and without a
+/// class-less fallback) are treated as reference speed — calibration
+/// that never ran must not invent a skew.
+pub fn hosts_from_fits(calib: &Calib, classes: &[(String, usize)], d: usize) -> Vec<Host> {
+    let rate = |class: &str| -> f64 {
+        match calib.dp_fit_for(class) {
+            Some((a, b)) if a + b > 0.0 => 1.0 / (a + b / d.max(1) as f64).max(1e-18),
+            _ => 1.0,
+        }
+    };
+    let rates: Vec<f64> = classes.iter().map(|(c, _)| rate(c)).collect();
+    let top = rates.iter().fold(0.0f64, |m, &r| m.max(r)).max(1e-18);
+    let mut hosts = vec![];
+    let mut id = 0usize;
+    for ((class, count), r) in classes.iter().zip(rates) {
+        for _ in 0..*count {
+            hosts.push(Host { id, class: class.clone(), speed: r / top });
+            id += 1;
+        }
+    }
+    hosts
+}
+
+/// Greedy LPT placement of jobs (given by their reference-speed
+/// durations) onto `hosts`. With `aware` the planner schedules against
+/// the hosts' calibrated speeds; without it every host is believed to
+/// run at speed 1 (identical-device baseline). Either way the returned
+/// finish times and makespan are computed under the *true* speeds.
+pub fn place_jobs(durs: &[f64], hosts: &[Host], aware: bool) -> HostPlacement {
+    if hosts.is_empty() {
+        return HostPlacement::default();
+    }
+    let mut order: Vec<usize> = (0..durs.len()).collect();
+    // Longest first; ties keep input order for determinism.
+    order.sort_by(|&a, &b| durs[b].total_cmp(&durs[a]).then(a.cmp(&b)));
+    let mut believed = vec![0.0f64; hosts.len()];
+    let mut finish = vec![0.0f64; hosts.len()];
+    let mut assignments = vec![];
+    for j in order {
+        let dur = durs[j].max(0.0);
+        let (h, _) = hosts
+            .iter()
+            .enumerate()
+            .map(|(h, host)| {
+                let speed = if aware { host.speed.max(1e-18) } else { 1.0 };
+                (h, believed[h] + dur / speed)
+            })
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+            .unwrap();
+        let speed = if aware { hosts[h].speed.max(1e-18) } else { 1.0 };
+        believed[h] += dur / speed;
+        finish[h] += dur / hosts[h].speed.max(1e-18);
+        assignments.push((j, hosts[h].id));
+    }
+    let makespan = finish.iter().fold(0.0f64, |m, &f| m.max(f));
+    HostPlacement { assignments, finish, makespan }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed() -> Vec<Host> {
+        let mut hosts = vec![Host { id: 0, class: "fast".into(), speed: 1.0 }];
+        for id in 1..4 {
+            hosts.push(Host { id, class: "slow".into(), speed: 0.25 });
+        }
+        hosts
+    }
+
+    /// Every job is assigned exactly once and the makespan matches the
+    /// per-host finish times.
+    #[test]
+    fn placement_is_a_partition() {
+        let durs = vec![3.0, 1.0, 2.0, 5.0, 4.0];
+        let p = place_jobs(&durs, &skewed(), true);
+        let mut seen: Vec<usize> = p.assignments.iter().map(|&(j, _)| j).collect();
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        let top = p.finish.iter().fold(0.0f64, f64::max);
+        assert_eq!(p.makespan, top);
+        assert!(place_jobs(&durs, &[], true).assignments.is_empty());
+    }
+
+    /// On a uniform fleet the two believed-speed models coincide — being
+    /// speed-aware can never hurt when there is no skew.
+    #[test]
+    fn uniform_fleet_is_aware_invariant() {
+        let durs = vec![4.0, 3.0, 2.0, 2.0, 1.0, 1.0];
+        let hosts = Host::uniform(3);
+        let aware = place_jobs(&durs, &hosts, true);
+        let blind = place_jobs(&durs, &hosts, false);
+        assert_eq!(aware.makespan, blind.makespan);
+        assert_eq!(aware.assignments, blind.assignments);
+    }
+
+    /// The gate the skewed-fleet bench pins: on a mixed fast/slow fleet,
+    /// believing the calibrated speeds strictly beats believing every
+    /// host is identical (both evaluated under the true speeds).
+    #[test]
+    fn hetero_aware_beats_identical_on_skewed_fleet() {
+        let durs: Vec<f64> = (0..12).map(|i| 1.0 + (i % 4) as f64).collect();
+        let hosts = skewed();
+        let aware = place_jobs(&durs, &hosts, true);
+        let blind = place_jobs(&durs, &hosts, false);
+        assert!(
+            aware.makespan < blind.makespan,
+            "aware {:.2} !< identical {:.2}",
+            aware.makespan,
+            blind.makespan
+        );
+    }
+
+    /// Fleet construction from per-class fits: the faster tier normalizes
+    /// to 1.0, the slower tier lands strictly below it, and classes
+    /// without calibration default to reference speed.
+    #[test]
+    fn hosts_from_fits_rank_tiers() {
+        let mut calib = Calib::default();
+        calib.dp_fit_class.insert("fast".into(), (1.0e-4, 4.0e-4));
+        calib.dp_fit_class.insert("slow".into(), (8.0e-4, 8.0e-4));
+        let classes =
+            vec![("fast".to_string(), 1usize), ("slow".to_string(), 2), ("mystery".to_string(), 1)];
+        let hosts = hosts_from_fits(&calib, &classes, 2);
+        assert_eq!(hosts.len(), 4);
+        let speed =
+            |c: &str| hosts.iter().find(|h| h.class == c).map(|h| h.speed).unwrap();
+        assert!((speed("fast") - 1.0).abs() < 1e-12, "fastest tier normalizes to 1");
+        assert!(speed("slow") < speed("fast"));
+        assert!(speed("slow") > 0.0);
+        // Uncalibrated class: raw rate 1.0, normalized against the top.
+        assert!(speed("mystery") <= 1.0 && speed("mystery") > 0.0);
+        assert_eq!(hosts.iter().map(|h| h.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+}

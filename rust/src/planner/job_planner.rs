@@ -77,11 +77,26 @@ pub struct JobPlanner {
     pub mode: ExecMode,
     /// Pool size `G`.
     pub gpus: usize,
+    /// Choose a stage-pipeline depth `s` per job (the second parallelism
+    /// axis, DESIGN.md §15). Off by default: the pre-pipeline plans (and
+    /// the paper-pinned prediction tests) are reproduced exactly; when
+    /// on, every planned job gets the depth minimizing its modeled
+    /// duration under [`CostModel::pipeline_speedup`], and predicted
+    /// timelines account for it. Pipelining shares the job's devices
+    /// (stages are workers on the same allocation), so `s` never
+    /// consumes pool capacity.
+    pub stages: bool,
 }
 
 impl JobPlanner {
     pub fn new(cm: CostModel, gpus: usize) -> JobPlanner {
-        JobPlanner { cm, budget: TrainBudget::default(), mode: ExecMode::Packed, gpus }
+        JobPlanner {
+            cm,
+            budget: TrainBudget::default(),
+            mode: ExecMode::Packed,
+            gpus,
+            stages: false,
+        }
     }
 
     /// Plan the full search space. Errors if some configuration cannot fit
@@ -144,10 +159,15 @@ impl JobPlanner {
                     let spare = g_avail - jobs.iter().map(|j| j.d).sum::<usize>();
                     self.widen_jobs(&mut jobs, spare);
                 }
+                if self.stages {
+                    for job in &mut jobs {
+                        job.s = self.choose_stages(&job.pack);
+                    }
+                }
                 for mut job in jobs {
                     job.id = next_id;
                     next_id += 1;
-                    let dur = self.cm.job_time(&job.pack, job.d, job.mode, &self.budget);
+                    let dur = self.job_dur(&job);
                     g_avail -= job.d;
                     running.push((now + dur, job.d));
                     queue.push(ScheduledJob { job, start: now, end: now + dur });
@@ -232,6 +252,40 @@ impl JobPlanner {
             grew += extra;
         }
         grew
+    }
+
+    /// Modeled wall time of one planned job at its chosen `(d, s)`: the
+    /// phase-wise [`CostModel::job_time`] divided by the pipeline
+    /// utilization at depth `s` over the pack's slot count (the executed
+    /// microbatch is one slot). `s ≤ 1` reproduces `job_time` exactly.
+    pub fn job_dur(&self, job: &PlannedJob) -> f64 {
+        let t = self.cm.job_time(&job.pack, job.d, job.mode, &self.budget);
+        let s = job.stages().min(self.cm.geom.n_layers.max(1));
+        if s <= 1 {
+            return t;
+        }
+        t / self.cm.pipeline_speedup(s, job.pack.n().max(1))
+    }
+
+    /// The `s` half of the `(d, s)` choice: the power-of-two depth (≤ the
+    /// layer stack) maximizing the modeled pipeline speedup for this
+    /// pack's microbatch count. Depth 1 wins whenever no deeper pipeline
+    /// is *strictly* faster — a single-slot pack, or a boundary cost that
+    /// eats the bubble gain — so enabling stage planning can never slow a
+    /// modeled plan down.
+    pub fn choose_stages(&self, pack: &crate::costmodel::Pack) -> usize {
+        let m = pack.n().max(1);
+        let cap = self.cm.geom.n_layers.max(1);
+        let mut best = (1usize, 1.0f64);
+        let mut s = 2usize;
+        while s <= cap {
+            let sp = self.cm.pipeline_speedup(s, m);
+            if sp > best.1 * (1.0 + 1e-9) {
+                best = (s, sp);
+            }
+            s *= 2;
+        }
+        best.0
     }
 }
 
@@ -398,12 +452,14 @@ mod tests {
                     id: 0,
                     pack: Pack::new(vec![cfg(0), cfg(1), cfg(2)]),
                     d: 1,
+                    s: 0,
                     mode: ExecMode::Packed,
                 },
                 PlannedJob {
                     id: 1,
                     pack: Pack::new(vec![cfg(3)]),
                     d: 1,
+                    s: 0,
                     mode: ExecMode::Packed,
                 },
             ]
@@ -438,9 +494,27 @@ mod tests {
         };
         // bs 1 -> many steps (long); bs 4 -> few steps (short).
         let jobs = vec![
-            PlannedJob { id: 0, pack: Pack::new(vec![cfg(0, 1)]), d: 1, mode: ExecMode::Packed },
-            PlannedJob { id: 1, pack: Pack::new(vec![cfg(1, 4)]), d: 1, mode: ExecMode::Packed },
-            PlannedJob { id: 2, pack: Pack::new(vec![cfg(2, 4)]), d: 1, mode: ExecMode::Packed },
+            PlannedJob {
+                id: 0,
+                pack: Pack::new(vec![cfg(0, 1)]),
+                d: 1,
+                s: 0,
+                mode: ExecMode::Packed,
+            },
+            PlannedJob {
+                id: 1,
+                pack: Pack::new(vec![cfg(1, 4)]),
+                d: 1,
+                s: 0,
+                mode: ExecMode::Packed,
+            },
+            PlannedJob {
+                id: 2,
+                pack: Pack::new(vec![cfg(2, 4)]),
+                d: 1,
+                s: 0,
+                mode: ExecMode::Packed,
+            },
         ];
         let prios = sjf_priorities(&p.cm, &p.budget, &jobs);
         assert_eq!(prios.len(), 3);
@@ -449,5 +523,65 @@ mod tests {
         let mut sorted = prios.clone();
         sorted.sort();
         assert_eq!(sorted, vec![1, 2, 3], "ranks are a permutation of 1..=n");
+    }
+
+    /// The `(d, s)` chooser: with stage planning off every job keeps
+    /// `s = 0` (pre-pipeline plans are bit-stable); with it on, multi-slot
+    /// jobs get the modeled-fastest power-of-two depth, predicted
+    /// durations account for it, and the planned makespan never grows.
+    #[test]
+    fn stage_planning_chooses_depth_and_never_slows_the_plan() {
+        use crate::costmodel::Pack;
+        let p = planner("qwen2.5-7b");
+        let grid = SearchSpace::default().grid("t");
+        let base = p.plan(&grid[..8]).unwrap();
+        assert!(base.jobs.iter().all(|j| j.job.s == 0), "stages off: s stays unplanned");
+
+        let mut ps = planner("qwen2.5-7b");
+        ps.stages = true;
+        let plan = ps.plan(&grid[..8]).unwrap();
+        assert_eq!(plan.total_configs(), 8);
+        assert!(plan.jobs.iter().all(|j| j.job.s >= 1), "stages on: every job planned a depth");
+        assert!(
+            plan.jobs.iter().all(|j| j.job.s.is_power_of_two()
+                && j.job.s <= ps.cm.geom.n_layers.max(1)),
+            "depths are power-of-two and bounded by the layer stack"
+        );
+        assert!(
+            plan.jobs.iter().any(|j| j.job.pack.n() > 1 && j.job.s > 1),
+            "a multi-slot pack must pipeline when the model says it pays"
+        );
+        assert!(
+            plan.makespan <= base.makespan * (1.0 + 1e-9),
+            "pipelined plan {:.3} must not exceed flat plan {:.3}",
+            plan.makespan,
+            base.makespan
+        );
+        // Per-job: the chosen depth's modeled duration is the argmin over
+        // the candidate depths, and a single-slot pack never pipelines.
+        let solo_cfg = LoraConfig {
+            id: 9,
+            lr: 1e-4,
+            batch: 1,
+            rank: 32,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        let solo = Pack::new(vec![solo_cfg]);
+        assert_eq!(ps.choose_stages(&solo), 1, "one microbatch is pure bubble");
+        for j in &plan.jobs {
+            let chosen = ps.job_dur(&j.job);
+            let mut probe = j.job.clone();
+            for s in [1usize, 2, 4, 8] {
+                probe.s = s;
+                assert!(
+                    chosen <= ps.job_dur(&probe) * (1.0 + 1e-9),
+                    "job {}: s={} beats the chosen s={}",
+                    j.job.id,
+                    s,
+                    j.job.s
+                );
+            }
+        }
     }
 }

@@ -6,12 +6,14 @@
 
 pub mod baselines;
 pub mod dtm;
+pub mod hetero;
 pub mod ilp;
 pub mod job_planner;
 pub mod rebalance;
 
 pub use baselines::{max_gpu_plan, min_gpu_plan, sequential_plora_plan};
 pub use dtm::{Dtm, DtmStats};
+pub use hetero::{hosts_from_fits, place_jobs, Host, HostPlacement};
 pub use ilp::{PackProblem, PackSolution};
 pub use job_planner::{default_priorities, sjf_priorities, JobPlanner, Plan};
 pub use rebalance::rebalance_round;
@@ -19,25 +21,39 @@ pub use rebalance::rebalance_round;
 use crate::costmodel::{ExecMode, Pack};
 
 /// One fine-tuning job produced by planning: a pack of LoRA configurations
-/// plus the parallelism degree and kernel mode it will execute with.
+/// plus the parallelism degree, pipeline depth and kernel mode it will
+/// execute with.
 #[derive(Debug, Clone)]
 pub struct PlannedJob {
     pub id: usize,
     pub pack: Pack,
     /// Parallelism degree `d_j` (number of GPUs, power of two).
     pub d: usize,
+    /// Stage-pipeline depth `s_j` (contiguous layer stages streamed per
+    /// microbatch). `0` means "unplanned" — execution inherits the
+    /// `PLORA_STAGES` default; the planner's `(d, s)` chooser writes an
+    /// explicit depth ≥ 1. Trajectories are depth-invariant (DESIGN.md
+    /// §15), so `s` only moves the timeline.
+    pub s: usize,
     pub mode: ExecMode,
 }
 
 impl PlannedJob {
+    /// The pipeline depth execution should use: the planned `s`, or 1
+    /// slot-for-slot with the pre-pipeline behavior when unplanned.
+    pub fn stages(&self) -> usize {
+        self.s.max(1)
+    }
+
     /// Short human-readable summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "job{} [n={} r̄={} d={} {:?}]",
+            "job{} [n={} r̄={} d={} s={} {:?}]",
             self.id,
             self.pack.n(),
             self.pack.r_pad(),
             self.d,
+            self.stages(),
             self.mode
         )
     }

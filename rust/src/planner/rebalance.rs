@@ -166,7 +166,7 @@ mod tests {
     }
 
     fn job(id: usize, configs: Vec<LoraConfig>) -> PlannedJob {
-        PlannedJob { id, pack: Pack::new(configs), d: 1, mode: ExecMode::Sequential }
+        PlannedJob { id, pack: Pack::new(configs), d: 1, s: 0, mode: ExecMode::Sequential }
     }
 
     #[test]

@@ -48,6 +48,28 @@ pub trait ExecutionBackend: Send + Sync {
         let _ = (manifest, model, n, r, bs);
         Ok(None)
     }
+
+    /// Stage-pipeline split support: build one [`StageStepExec`] per
+    /// contiguous layer range of `ranges` (which must partition
+    /// `[0, n_layers)` in order). Each executor owns the forward/backward
+    /// of its layers at the `(n, r, bs)` sub-bucket and accumulates its
+    /// own slice of the LoRA gradients;
+    /// [`crate::runtime::pipeline::PipelinedExec`] streams microbatches
+    /// through them. `None` (the default) means the backend cannot split
+    /// the layer stack; the pipelining layer then falls back to the fused
+    /// or data-parallel path.
+    fn stages(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+        n: usize,
+        r: usize,
+        bs: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Option<Vec<Box<dyn StageStepExec>>>> {
+        let _ = (manifest, model, n, r, bs, ranges);
+        Ok(None)
+    }
 }
 
 /// The gradient half of one train step: per-tensor LoRA gradients in
@@ -128,6 +150,76 @@ pub trait ShardStepExec: Send + Sync {
         rmask: &HostTensor,
         scratch: &mut Scratch,
     ) -> Result<AdamOut>;
+}
+
+/// One pipeline stage of a train step: a contiguous layer range's
+/// forward/backward at an `(n, r, bs)` sub-bucket, driven one *slot
+/// window* (microbatch) at a time by
+/// [`crate::runtime::pipeline::PipelinedExec`].
+///
+/// The contract mirrors the monolithic step exactly: every activation,
+/// boundary tensor and gradient element is produced by exactly one
+/// `(stage, microbatch)` call with the same reduction order the fused
+/// step uses, so the pipelined step is bitwise identical to it
+/// (DESIGN.md §15). `&mut self` because each stage owns its workspace
+/// arena and gradient accumulators; one persistent worker drives each
+/// stage, so no `Sync` is required.
+pub trait StageStepExec: Send {
+    /// The `[lo, hi)` layer range this stage owns.
+    fn layer_range(&self) -> (usize, usize);
+
+    /// Reset per-step state: size the arena and zero this stage's LoRA
+    /// gradient accumulators. Called once per step before any microbatch.
+    fn begin_step(&mut self) -> Result<()>;
+
+    /// Forward slots `[slo, slo+nw)` through this stage's layers.
+    /// `x_in` is the boundary activation from the previous stage
+    /// (`None` on stage 0, which embeds `tokens` itself). Returns the
+    /// boundary activation for the next stage; the final stage runs the
+    /// head internally and returns an empty vec.
+    #[allow(clippy::too_many_arguments)]
+    fn run_fwd(
+        &mut self,
+        slo: usize,
+        nw: usize,
+        base: &[HostTensor],
+        lora: &[HostTensor],
+        scale: &[f32],
+        tokens: &HostTensor,
+        x_in: Option<&[f32]>,
+    ) -> Result<Vec<f32>>;
+
+    /// Final stage only: per-slot losses of `[slo, slo+nw)` plus the
+    /// backward seed (head + final-LN backward), kept internally for the
+    /// stage's own `run_bwd`.
+    fn run_loss(
+        &mut self,
+        slo: usize,
+        nw: usize,
+        base: &[HostTensor],
+        targets: &HostTensor,
+        mask: &HostTensor,
+    ) -> Result<Vec<f32>>;
+
+    /// Backward slots `[slo, slo+nw)`. `dx_in` is the boundary gradient
+    /// from the next stage (`None` on the final stage, whose seed was
+    /// placed by [`StageStepExec::run_loss`]). Accumulates this window's
+    /// LoRA gradients and returns the boundary gradient for the previous
+    /// stage; stage 0 returns an empty vec (embeddings are frozen).
+    fn run_bwd(
+        &mut self,
+        slo: usize,
+        nw: usize,
+        base: &[HostTensor],
+        lora: &[HostTensor],
+        scale: &[f32],
+        dx_in: Option<&[f32]>,
+    ) -> Result<Vec<f32>>;
+
+    /// The stage's accumulated LoRA gradients after a full step: 14 flat
+    /// buffers in `LORA_ORDER`, each shaped `(hi-lo, n, d2, d3)` — this
+    /// stage's layer slice of the full gradient tensors.
+    fn stage_grads(&self) -> &[Vec<f32>];
 }
 
 /// A prepared artifact. Inputs are pre-validated against the manifest by

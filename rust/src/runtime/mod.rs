@@ -23,6 +23,7 @@
 
 pub mod backend;
 pub mod manifest;
+pub mod pipeline;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;
@@ -32,9 +33,10 @@ pub mod tensor;
 pub mod tensor_file;
 
 pub use backend::{
-    AdamOut, BackendExecutable, ExecutionBackend, GradStep, Scratch, ShardStepExec,
+    AdamOut, BackendExecutable, ExecutionBackend, GradStep, Scratch, ShardStepExec, StageStepExec,
 };
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec};
+pub use pipeline::{stage_ranges, PipelinedExec, PipelinedState};
 pub use shard::ShardedState;
 pub use state::{JoinSource, MemberState, TrainState};
 pub use tensor::{DType, HostTensor, TensorData};
@@ -205,6 +207,22 @@ impl Runtime {
         bs: usize,
     ) -> Result<Option<Box<dyn ShardStepExec>>> {
         self.backend.shard(&self.manifest, model, n, r, bs)
+    }
+
+    /// Stage-pipeline split support: one executor per contiguous layer
+    /// range at an exact `(n, r, bs)` sub-bucket of `model` — the units
+    /// [`pipeline::PipelinedExec`] streams microbatches through. `None`
+    /// when the backend cannot split the layer stack; the pipelining
+    /// layer then falls back to the fused or data-parallel path.
+    pub fn stage_exec(
+        &self,
+        model: &str,
+        n: usize,
+        r: usize,
+        bs: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Option<Vec<Box<dyn StageStepExec>>>> {
+        self.backend.stages(&self.manifest, model, n, r, bs, ranges)
     }
 
     /// A model's frozen base weights in `BASE_ORDER` (the train/eval

@@ -1,0 +1,656 @@
+//! **Stage-pipelined execution** (DESIGN.md §15): the second parallelism
+//! axis next to the data-parallel shards of [`crate::runtime::shard`].
+//!
+//! A [`PipelinedExec`] splits the TinyLM layer stack into `s` contiguous
+//! stages (one [`StageStepExec`] per stage, built by
+//! [`crate::runtime::ExecutionBackend::stages`]) and streams the pack's
+//! bucket slots through them as microbatches — one persistent worker per
+//! stage, GPipe-style: every stage runs all `M` forward microbatches in
+//! ascending slot order, then all `M` backward microbatches in the same
+//! order. Stage boundaries hand activations (forward) and boundary
+//! gradients (backward) to their neighbor over per-step channels in
+//! **fixed microbatch order**, so the handoff schedule is deterministic
+//! regardless of worker timing.
+//!
+//! Bitwise identity with the fused step holds by construction:
+//!
+//! - a microbatch is one bucket *slot*, so every per-adapter loss
+//!   denominator and every `dA`/`dB` gradient element accumulates over
+//!   exactly one microbatch's rows — the same contributions in the same
+//!   order the fused step uses;
+//! - each activation / boundary-tensor / gradient element is produced by
+//!   exactly one `(stage, microbatch)` call into the very `tinylm`
+//!   routines the monolithic forward/backward delegate to, windowed to
+//!   `(slot, layer-range)` — no element's reduction tree changes;
+//! - the final gradient tensors are assembled by installing each stage's
+//!   layer slice into its own disjoint region (layer-major layout), a
+//!   pure placement with no floating-point reassociation.
+//!
+//! So every adapter trajectory is bitwise identical at `s = 1, 2, 4`,
+//! across uneven layer splits, and composed with the data-parallel axis
+//! (`rust/tests/session.rs` pins this). [`PipelinedExec`] implements
+//! [`ShardStepExec`], so a [`crate::runtime::shard::ShardedState`] shard
+//! can transparently execute its slot slice pipelined — that is the
+//! `d × s` composition. [`PipelinedState`] is the standalone sibling of
+//! `ShardedState` for pure stage-parallel (`d = 1`) execution.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::backend::{AdamOut, GradStep, Scratch, ShardStepExec, StageStepExec};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{Runtime, TrainState};
+use crate::util::threadpool::ThreadPool;
+
+/// Split `layers` into at most `s` contiguous, non-empty stage ranges
+/// covering `[0, layers)` in order. Earlier stages take the remainder
+/// (`layers % s`) one extra layer each, mirroring the slot split of the
+/// data-parallel shards. `s` is clamped to `[1, layers]`, so asking for
+/// more stages than layers degrades gracefully.
+pub fn stage_ranges(layers: usize, s: usize) -> Vec<(usize, usize)> {
+    let s = s.clamp(1, layers.max(1));
+    let base = layers / s;
+    let rem = layers % s;
+    let mut out = Vec::with_capacity(s);
+    let mut lo = 0usize;
+    for k in 0..s {
+        let nw = base + usize::from(k < rem);
+        out.push((lo, lo + nw));
+        lo += nw;
+    }
+    out
+}
+
+/// Marker embedded in channel-closure errors so the reduction can prefer
+/// the *originating* stage failure over the cascade it causes.
+const PIPE_CLOSED: &str = "pipeline handoff channel closed";
+
+/// The stage executors plus their worker pool, behind one lock:
+/// [`StageStepExec`] is `&mut self` (each stage owns its arena), while
+/// [`ShardStepExec::run_grads`] is `&self` — the mutex bridges the two.
+/// Steps are serialized per job anyway, so the lock is uncontended.
+struct PipeWork {
+    stages: Vec<Box<dyn StageStepExec>>,
+    pool: ThreadPool,
+}
+
+/// One step's channel endpoints for a single stage: forward activations
+/// arrive from the previous stage and leave toward the next; backward
+/// boundary gradients flow the other way. `None` marks the pipeline
+/// ends (stage 0 embeds; the final stage runs head + loss).
+struct StageIo {
+    f_rx: Option<mpsc::Receiver<Vec<f32>>>,
+    f_tx: Option<mpsc::Sender<Vec<f32>>>,
+    b_rx: Option<mpsc::Receiver<Vec<f32>>>,
+    b_tx: Option<mpsc::Sender<Vec<f32>>>,
+}
+
+/// Drive one stage through a full step: all `m` forward microbatches in
+/// ascending slot order, then all `m` backward microbatches in the same
+/// order (GPipe). Channels are unbounded, so the fixed schedule cannot
+/// deadlock: a stage blocks only on data its neighbor has not produced
+/// yet. `per` is the per-slot loss sink (final stage only).
+#[allow(clippy::too_many_arguments)]
+fn run_stage(
+    st: &mut dyn StageStepExec,
+    m: usize,
+    base: &[HostTensor],
+    lora: &[HostTensor],
+    scale: &[f32],
+    tokens: &HostTensor,
+    targets: &HostTensor,
+    mask: &HostTensor,
+    io: StageIo,
+    mut per: Option<&mut Vec<f32>>,
+) -> Result<()> {
+    let (lo, hi) = st.layer_range();
+    let closed = |dir: &str| anyhow!("stage [{lo}, {hi}): {dir} {PIPE_CLOSED}");
+    st.begin_step()?;
+    for mb in 0..m {
+        let x_in = match io.f_rx.as_ref() {
+            Some(rx) => Some(rx.recv().map_err(|_| closed("forward"))?),
+            None => None,
+        };
+        let x_out = st.run_fwd(mb, 1, base, lora, scale, tokens, x_in.as_deref())?;
+        match (io.f_tx.as_ref(), per.as_deref_mut()) {
+            (Some(tx), _) => tx.send(x_out).map_err(|_| closed("forward"))?,
+            (None, Some(p)) => {
+                let pl = st.run_loss(mb, 1, base, targets, mask)?;
+                if pl.len() != 1 {
+                    bail!("stage [{lo}, {hi}): {} losses for one microbatch", pl.len());
+                }
+                p[mb] = pl[0];
+            }
+            (None, None) => bail!("stage [{lo}, {hi}): final stage has no loss sink"),
+        }
+    }
+    for mb in 0..m {
+        let dx_in = match io.b_rx.as_ref() {
+            Some(rx) => Some(rx.recv().map_err(|_| closed("backward"))?),
+            None => None,
+        };
+        let dx_out = st.run_bwd(mb, 1, base, lora, scale, dx_in.as_deref())?;
+        if let Some(tx) = io.b_tx.as_ref() {
+            tx.send(dx_out).map_err(|_| closed("backward"))?;
+        }
+    }
+    Ok(())
+}
+
+/// A train step's gradient half executed stage-pipelined (module docs).
+/// Implements [`ShardStepExec`], so it drops into every slot of the
+/// execution stack a fused shard executor fits: a [`PipelinedState`]'s
+/// whole bucket, or one data-parallel shard of a
+/// [`crate::runtime::shard::ShardedState`] (the `d × s` composition).
+/// The optimizer half and eval delegate to the backend's fused shard
+/// executor — both are layer-monolithic operations.
+pub struct PipelinedExec {
+    work: Mutex<PipeWork>,
+    /// Fused full-range executor for the AdamW half and eval.
+    inner: Box<dyn ShardStepExec>,
+    /// Bucket slot count — also the microbatch count `M`.
+    n: usize,
+    ranges: Vec<(usize, usize)>,
+}
+
+impl PipelinedExec {
+    /// Build a pipelined executor over `s` stages at the `(n, r, bs)`
+    /// bucket shape, or `None` when pipelining cannot engage: `stages <=
+    /// 1` after clamping to the layer count, or the backend cannot split
+    /// the layer stack / the fused step. Callers fall back to the fused
+    /// or data-parallel path on `None` — the `PLORA_STAGES=1` default
+    /// never constructs one.
+    pub fn build(
+        rt: &Runtime,
+        model: &str,
+        n: usize,
+        r: usize,
+        bs: usize,
+        stages: usize,
+    ) -> Result<Option<PipelinedExec>> {
+        let layers = rt.manifest.model(model)?.n_layers;
+        if stages <= 1 || layers <= 1 {
+            return Ok(None);
+        }
+        let ranges = stage_ranges(layers, stages);
+        if ranges.len() <= 1 {
+            return Ok(None);
+        }
+        let Some(stage_execs) = rt.stage_exec(model, n, r, bs, &ranges)? else {
+            return Ok(None);
+        };
+        let Some(inner) = rt.shard_exec(model, n, r, bs)? else {
+            return Ok(None);
+        };
+        // One persistent worker per stage (`scoped` runs the last stage
+        // inline on the caller, so the pool is never oversubscribed).
+        let pool = ThreadPool::new(ranges.len());
+        Ok(Some(PipelinedExec {
+            work: Mutex::new(PipeWork { stages: stage_execs, pool }),
+            inner,
+            n,
+            ranges,
+        }))
+    }
+
+    /// Effective stage count (after clamping to the layer count).
+    pub fn stages(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The contiguous layer ranges, in stage order.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+}
+
+impl ShardStepExec for PipelinedExec {
+    fn run_grads(
+        &self,
+        base: &[HostTensor],
+        lora: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        mask: &HostTensor,
+        scale: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<GradStep> {
+        let m = self.n;
+        if scale.len() != m {
+            bail!("pipelined run_grads: {} scale entries for bucket of {m}", scale.len());
+        }
+        let mut guard = self.work.lock().map_err(|_| anyhow!("pipeline stage panicked"))?;
+        let PipeWork { stages, pool } = &mut *guard;
+        let s_count = stages.len();
+        if s_count < 2 {
+            bail!("pipelined run_grads: {s_count} stages built");
+        }
+
+        // Per-step boundary channels: stage k hands forward activations
+        // to k+1 and backward gradients to k-1. Unbounded, so the fixed
+        // GPipe schedule never blocks a producer.
+        let mut ios: Vec<StageIo> = (0..s_count)
+            .map(|_| StageIo { f_rx: None, f_tx: None, b_rx: None, b_tx: None })
+            .collect();
+        for k in 0..s_count - 1 {
+            let (ftx, frx) = mpsc::channel();
+            ios[k].f_tx = Some(ftx);
+            ios[k + 1].f_rx = Some(frx);
+            let (btx, brx) = mpsc::channel();
+            ios[k + 1].b_tx = Some(btx);
+            ios[k].b_rx = Some(brx);
+        }
+
+        let mut per = vec![0.0f32; m];
+        let mut outs: Vec<Option<Result<()>>> = (0..s_count).map(|_| None).collect();
+        {
+            let mut per_slot = Some(&mut per);
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(s_count);
+            for (k, ((st, io), out)) in
+                stages.iter_mut().zip(ios).zip(outs.iter_mut()).enumerate()
+            {
+                let p = if k + 1 == s_count { per_slot.take() } else { None };
+                tasks.push(Box::new(move || {
+                    *out = Some(run_stage(
+                        &mut **st,
+                        m,
+                        base,
+                        lora,
+                        scale,
+                        tokens,
+                        targets,
+                        mask,
+                        io,
+                        p,
+                    ));
+                }));
+            }
+            pool.scoped(tasks);
+        }
+
+        // A failing stage drops its channel ends, cascading "closed"
+        // errors through its neighbors — report the origin, not the wave.
+        let mut origin: Option<anyhow::Error> = None;
+        let mut cascade: Option<anyhow::Error> = None;
+        for (k, out) in outs.into_iter().enumerate() {
+            match out {
+                Some(Ok(())) => {}
+                Some(Err(e)) => {
+                    if !e.to_string().contains(PIPE_CLOSED) {
+                        origin.get_or_insert(e);
+                    } else {
+                        cascade.get_or_insert(e);
+                    }
+                }
+                None => {
+                    cascade.get_or_insert(anyhow!("pipeline stage {k} did not run"));
+                }
+            }
+        }
+        if let Some(e) = origin.or(cascade) {
+            return Err(e);
+        }
+
+        // Assemble the full gradient tensors: each stage's accumulators
+        // are its layer slice `(hi-lo, n, d2, d3)` of the layer-major
+        // `(L, n, d2, d3)` layout — one contiguous memcpy per stage per
+        // tensor, every element written by exactly one stage.
+        let mut grads = Vec::with_capacity(lora.len());
+        for (t_idx, full) in lora.iter().enumerate() {
+            let shape = full.shape.clone();
+            if shape.len() != 4 || shape[1] != m {
+                bail!("pipelined run_grads: lora[{t_idx}] shape {shape:?} for bucket of {m}");
+            }
+            let panel = shape[2] * shape[3];
+            let count: usize = shape.iter().product();
+            let mut buf = scratch.take_buf(count);
+            for st in stages.iter() {
+                let (lo, hi) = st.layer_range();
+                let sg = st.stage_grads();
+                if sg.len() != lora.len() {
+                    bail!("pipelined run_grads: stage produced {} grad tensors", sg.len());
+                }
+                let seg = &sg[t_idx];
+                if seg.len() != (hi - lo) * m * panel {
+                    bail!(
+                        "pipelined run_grads: stage [{lo}, {hi}) grad len {} != {}",
+                        seg.len(),
+                        (hi - lo) * m * panel
+                    );
+                }
+                buf[lo * m * panel..hi * m * panel].copy_from_slice(seg);
+            }
+            grads.push(HostTensor::f32(shape, buf)?);
+        }
+        Ok(GradStep { grads, per_loss: per })
+    }
+
+    fn run_eval(
+        &self,
+        base: &[HostTensor],
+        lora: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        mask: &HostTensor,
+        scale: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        // Eval is a logits-only forward — no stage state to keep, so the
+        // fused shard executor runs it (bitwise identical by DESIGN §11).
+        self.inner.run_eval(base, lora, tokens, targets, mask, scale, scratch)
+    }
+
+    fn run_adamw(
+        &self,
+        lora: &[HostTensor],
+        m: &[HostTensor],
+        v: &[HostTensor],
+        t: &[f32],
+        grads: &[HostTensor],
+        lr: &[f32],
+        rmask: &HostTensor,
+        scratch: &mut Scratch,
+    ) -> Result<AdamOut> {
+        self.inner.run_adamw(lora, m, v, t, grads, lr, rmask, scratch)
+    }
+}
+
+/// A [`TrainState`] executing stage-pipelined on one device-set slot —
+/// the stage-parallel sibling of [`crate::runtime::shard::ShardedState`].
+/// Where `ShardedState` splits the bucket's *slots* across devices, this
+/// splits the *layer stack* across stage workers; the trajectory is
+/// bitwise identical to the fused path either way (module docs).
+pub struct PipelinedState {
+    inner: TrainState,
+    exe: PipelinedExec,
+    scratch: Scratch,
+    bs: usize,
+}
+
+impl PipelinedState {
+    /// Wrap `inner` for `stages`-way pipelined execution. Unlike
+    /// [`crate::runtime::shard::ShardedState::new`] this does not fall
+    /// back silently: callers decide the fallback (the driver composes
+    /// pipelining through `ShardedState`, which does degrade to fused),
+    /// so an un-pipelinable request here is an error.
+    pub fn new(
+        rt: &Runtime,
+        model: &str,
+        inner: TrainState,
+        bs: usize,
+        stages: usize,
+    ) -> Result<PipelinedState> {
+        match PipelinedExec::build(rt, model, inner.n, inner.r, bs, stages)? {
+            Some(exe) => Ok(PipelinedState { inner, exe, scratch: Scratch::new(), bs }),
+            None => bail!("pipelined state: cannot split '{model}' into {stages} stages"),
+        }
+    }
+
+    /// The wrapped single-bucket training state.
+    pub fn inner(&self) -> &TrainState {
+        &self.inner
+    }
+
+    /// Unwrap (checkpointing and repack run on the plain state).
+    pub fn into_inner(self) -> TrainState {
+        self.inner
+    }
+
+    /// Effective pipeline depth (after clamping to the layer count).
+    pub fn stages(&self) -> usize {
+        self.exe.stages()
+    }
+
+    /// See [`TrainState::rank_mask`].
+    pub fn rank_mask(&self, ranks: &[usize]) -> Result<HostTensor> {
+        self.inner.rank_mask(ranks)
+    }
+
+    /// One training step — the same contract as [`TrainState::step`]:
+    /// pipelined gradient half, then one fused AdamW update.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        base: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        loss_mask: &HostTensor,
+        scale: &[f32],
+        lr: &[f32],
+        rmask: &HostTensor,
+    ) -> Result<Vec<f32>> {
+        let n = self.inner.n;
+        if tokens.shape != [n, self.bs, self.inner.model.seq] {
+            bail!(
+                "pipelined step: batch tensors {:?} do not match the built ({n}, {}, {}) layout",
+                tokens.shape,
+                self.bs,
+                self.inner.model.seq
+            );
+        }
+        if scale.len() != n || lr.len() != n {
+            bail!(
+                "pipelined step: {} scale / {} lr entries for pack of {n}",
+                scale.len(),
+                lr.len()
+            );
+        }
+        let GradStep { grads, per_loss } = self.exe.run_grads(
+            base,
+            &self.inner.lora,
+            tokens,
+            targets,
+            loss_mask,
+            scale,
+            &mut self.scratch,
+        )?;
+        let out = self.exe.run_adamw(
+            &self.inner.lora,
+            &self.inner.m,
+            &self.inner.v,
+            &self.inner.t,
+            &grads,
+            lr,
+            rmask,
+            &mut self.scratch,
+        )?;
+        let old_l = std::mem::replace(&mut self.inner.lora, out.lora);
+        let old_m = std::mem::replace(&mut self.inner.m, out.m);
+        let old_v = std::mem::replace(&mut self.inner.v, out.v);
+        self.inner.t = out.t;
+        for spent in old_l.into_iter().chain(old_m).chain(old_v).chain(grads) {
+            if let Some(buf) = spent.into_f32_vec() {
+                self.scratch.recycle(buf);
+            }
+        }
+        Ok(per_loss)
+    }
+
+    /// See [`TrainState::eval`]. Eval is layer-monolithic (logits-only
+    /// forward), so it runs on the fused shard executor — bitwise
+    /// identical to the fused eval executable.
+    pub fn eval(
+        &mut self,
+        base: &[HostTensor],
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        loss_mask: &HostTensor,
+        scale: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = self.inner.n;
+        if tokens.shape != [n, self.bs, self.inner.model.seq] {
+            bail!(
+                "pipelined eval: batch tensors {:?} do not match the built ({n}, {}, {}) layout",
+                tokens.shape,
+                self.bs,
+                self.inner.model.seq
+            );
+        }
+        if scale.len() != n {
+            bail!("pipelined eval: {} scale entries for pack of {n}", scale.len());
+        }
+        match self.exe.run_eval(
+            base,
+            &self.inner.lora,
+            tokens,
+            targets,
+            loss_mask,
+            scale,
+            &mut self.scratch,
+        )? {
+            Some(out) => Ok(out),
+            None => bail!("pipelined eval: backend cannot eval at bucket granularity"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn runtime() -> Runtime {
+        Runtime::load(&std::env::temp_dir().join("plora-pipeline-tests")).unwrap()
+    }
+
+    #[test]
+    fn stage_ranges_partition_the_stack() {
+        assert_eq!(stage_ranges(4, 2), vec![(0, 2), (2, 4)]);
+        assert_eq!(stage_ranges(4, 3), vec![(0, 2), (2, 3), (3, 4)]);
+        assert_eq!(stage_ranges(5, 2), vec![(0, 3), (3, 5)]);
+        assert_eq!(stage_ranges(3, 1), vec![(0, 3)]);
+        // More stages than layers: clamped, never an empty stage.
+        assert_eq!(stage_ranges(2, 4), vec![(0, 1), (1, 2)]);
+        // Every split covers [0, L) contiguously.
+        for layers in 1..9usize {
+            for s in 1..9usize {
+                let r = stage_ranges(layers, s);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, layers);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                    assert!(w[0].1 > w[0].0);
+                }
+            }
+        }
+    }
+
+    /// The tentpole invariant at the runtime layer: the same pack stepped
+    /// fused and stage-pipelined at s = 2 (and s = 4, clamped to nano's
+    /// two layers) produces bitwise-identical params, moments, step
+    /// counters and per-adapter losses.
+    #[test]
+    fn pipelined_steps_are_bitwise_identical_to_fused() {
+        let rt = runtime();
+        let mi = rt.manifest.model("nano").unwrap().clone();
+        let info = rt.manifest.train_bucket("nano", 4, 8, 1).unwrap().clone();
+        let exe = rt.executable(&info.name).unwrap();
+        let base = rt.base_weights("nano").unwrap();
+        let seq = mi.seq;
+        let seeds = [3u64, 5, 7, 9];
+        let ranks = [8usize, 4, 8, 6];
+        let scale = [1.0f32, 0.5, 1.0, 0.8];
+        let lrs = [2e-3f32, 1e-3, 2e-3, 1e-3];
+
+        let batch = |rng: &mut Rng| {
+            let tokens: Vec<i32> =
+                (0..4 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+            let mut targets = tokens.clone();
+            targets.rotate_left(1);
+            let tok = HostTensor::i32(vec![4, 1, seq], tokens).unwrap();
+            let tgt = HostTensor::i32(vec![4, 1, seq], targets).unwrap();
+            let msk = HostTensor::f32(vec![4, 1, seq], vec![1.0; 4 * seq]).unwrap();
+            (tok, tgt, msk)
+        };
+        let snap = |st: &TrainState| -> (Vec<Vec<f32>>, Vec<f32>, Vec<Vec<f32>>) {
+            (
+                st.lora.iter().map(|t| t.as_f32().unwrap().to_vec()).collect(),
+                st.t.clone(),
+                st.m.iter().map(|t| t.as_f32().unwrap().to_vec()).collect(),
+            )
+        };
+
+        // Fused baseline.
+        let (want, want_per) = {
+            let mut st = TrainState::init_per_adapter(&mi, 4, 8, &seeds, &ranks).unwrap();
+            let rmask = st.rank_mask(&ranks).unwrap();
+            let mut rng = Rng::new(41);
+            let mut losses = vec![];
+            for _ in 0..3 {
+                let (tok, tgt, msk) = batch(&mut rng);
+                losses.push(
+                    st.step(&exe, &base, &tok, &tgt, &msk, &scale, &lrs, &rmask).unwrap(),
+                );
+            }
+            (snap(&st), losses)
+        };
+        assert_eq!(want.1, vec![3.0; 4]);
+        assert!(want_per.iter().flatten().all(|l| l.is_finite()));
+
+        for s in [2usize, 4] {
+            let inner = TrainState::init_per_adapter(&mi, 4, 8, &seeds, &ranks).unwrap();
+            let mut st = PipelinedState::new(&rt, "nano", inner, 1, s).unwrap();
+            assert_eq!(st.stages(), s.min(mi.n_layers), "stage count clamps to the stack");
+            let rmask = st.rank_mask(&ranks).unwrap();
+            let mut rng = Rng::new(41);
+            let mut losses = vec![];
+            for _ in 0..3 {
+                let (tok, tgt, msk) = batch(&mut rng);
+                losses.push(st.step(&base, &tok, &tgt, &msk, &scale, &lrs, &rmask).unwrap());
+            }
+            let got = snap(st.inner());
+            assert_eq!(want_per, losses, "per-adapter losses diverged at s={s}");
+            assert_eq!(want.1, got.1, "step counters diverged at s={s}");
+            for (k, (a, b)) in want.0.iter().zip(&got.0).enumerate() {
+                assert_eq!(a, b, "lora[{k}] diverged at s={s}");
+            }
+            for (k, (a, b)) in want.2.iter().zip(&got.2).enumerate() {
+                assert_eq!(a, b, "m[{k}] diverged at s={s}");
+            }
+        }
+    }
+
+    /// Eval through a pipelined state matches the fused eval bitwise —
+    /// including mid-trajectory, after params have moved.
+    #[test]
+    fn pipelined_eval_matches_fused() {
+        let rt = runtime();
+        let mi = rt.manifest.model("nano").unwrap().clone();
+        let info = rt.manifest.train_bucket("nano", 2, 8, 1).unwrap().clone();
+        let exe = rt.executable(&info.name).unwrap();
+        let eval_exe = rt.executable(&rt.manifest.eval_for(&info).unwrap().name.clone()).unwrap();
+        let base = rt.base_weights("nano").unwrap();
+        let seq = mi.seq;
+        let scale = [1.0f32, 0.5];
+        let lrs = [2e-3f32, 1e-3];
+
+        let batch = |rng: &mut Rng| {
+            let tokens: Vec<i32> =
+                (0..2 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+            let mut targets = tokens.clone();
+            targets.rotate_left(1);
+            let tok = HostTensor::i32(vec![2, 1, seq], tokens).unwrap();
+            let tgt = HostTensor::i32(vec![2, 1, seq], targets).unwrap();
+            let msk = HostTensor::f32(vec![2, 1, seq], vec![1.0; 2 * seq]).unwrap();
+            (tok, tgt, msk)
+        };
+
+        let mut fused = TrainState::init_per_adapter(&mi, 2, 8, &[5, 9], &[8, 4]).unwrap();
+        let inner = TrainState::init_per_adapter(&mi, 2, 8, &[5, 9], &[8, 4]).unwrap();
+        let mut piped = PipelinedState::new(&rt, "nano", inner, 1, 2).unwrap();
+        let rmask = fused.rank_mask(&[8, 4]).unwrap();
+        let mut rng = Rng::new(17);
+        for _ in 0..2 {
+            let (tok, tgt, msk) = batch(&mut rng);
+            let (fl, fa) = fused.eval(&eval_exe, &base, &tok, &tgt, &msk, &scale).unwrap();
+            let (pl, pa) = piped.eval(&base, &tok, &tgt, &msk, &scale).unwrap();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&fl), bits(&pl), "eval losses diverged");
+            assert_eq!(bits(&fa), bits(&pa), "eval accs diverged");
+            fused.step(&exe, &base, &tok, &tgt, &msk, &scale, &lrs, &rmask).unwrap();
+            piped.step(&base, &tok, &tgt, &msk, &scale, &lrs, &rmask).unwrap();
+        }
+    }
+}

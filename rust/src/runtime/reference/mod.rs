@@ -25,6 +25,7 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::backend::{
     take_buf, AdamOut, BackendExecutable, ExecutionBackend, GradStep, Scratch, ShardStepExec,
+    StageStepExec,
 };
 use crate::runtime::manifest::{
     ArtifactInfo, ArtifactKind, Manifest, ModelInfo, TensorSpec, TokenLayout,
@@ -116,6 +117,61 @@ impl ExecutionBackend for RefBackend {
         };
         spec.check()?;
         Ok(Some(Box::new(ShardExec { spec, n, r, bs })))
+    }
+
+    /// The interpreter runs any contiguous layer range directly, so
+    /// stage-pipelined execution is available at exact `(n, r, bs)`
+    /// shapes — one [`RefStage`] per range, each owning its own workspace
+    /// arena and its layer slice of the gradient accumulators.
+    fn stages(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+        n: usize,
+        r: usize,
+        bs: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Option<Vec<Box<dyn StageStepExec>>>> {
+        let mi = manifest.model(model)?;
+        let spec = Spec {
+            vocab: mi.vocab,
+            d_model: mi.d_model,
+            n_layers: mi.n_layers,
+            n_heads: mi.n_heads,
+            d_ff: mi.d_ff,
+            seq: mi.seq,
+        };
+        spec.check()?;
+        if ranges.is_empty() {
+            return Err(anyhow!("stages: empty range list"));
+        }
+        let mut expect = 0usize;
+        let mut out: Vec<Box<dyn StageStepExec>> = Vec::with_capacity(ranges.len());
+        for (k, &(lo, hi)) in ranges.iter().enumerate() {
+            if lo != expect || hi <= lo || hi > spec.n_layers {
+                return Err(anyhow!("stages: bad range [{lo}, {hi}) at stage {k}"));
+            }
+            expect = hi;
+            let sub = Spec { n_layers: hi - lo, ..spec };
+            out.push(Box::new(RefStage {
+                spec,
+                sub,
+                lo,
+                hi,
+                n,
+                r,
+                bs,
+                last: hi == spec.n_layers,
+                ws: Workspace::new(),
+            }));
+        }
+        if expect != spec.n_layers {
+            return Err(anyhow!(
+                "stages: ranges cover [0, {expect}) of {} layers",
+                spec.n_layers
+            ));
+        }
+        Ok(Some(out))
     }
 }
 
@@ -243,6 +299,256 @@ impl ShardStepExec for ShardExec {
 /// Shared arity-error path of the [`ShardExec`] entry points.
 fn bail_shapes(what: &str, a: usize, b: usize, c: usize, n: usize) -> Result<()> {
     Err(anyhow!("{what}: bad arity (got {a}/{b}/{c} for n={n})"))
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline-stage executor (stage-parallel execution, DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// One pipeline stage of the train step: layers `[lo, hi)` of the stack
+/// at an exact `(n, r, bs)` shape, driven one slot window at a time.
+/// Calls the same windowed `tinylm` routines the monolithic
+/// forward/backward call at `slo=0, nw=n` — each activation/gradient
+/// element is produced by exactly one `(stage, microbatch)` call with an
+/// unchanged reduction order, so a stage-pipelined step is bitwise
+/// identical to the fused one. The workspace arena is sized by the
+/// stage's `sub` spec (`n_layers = hi - lo`), so its `layers` saves and
+/// `grads` accumulators hold only this stage's slice.
+struct RefStage {
+    spec: Spec,
+    sub: Spec,
+    lo: usize,
+    hi: usize,
+    n: usize,
+    r: usize,
+    bs: usize,
+    last: bool,
+    ws: Workspace,
+}
+
+impl StageStepExec for RefStage {
+    fn layer_range(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    fn begin_step(&mut self) -> Result<()> {
+        self.ws.ensure(&self.sub, self.n, self.bs, self.r, true);
+        for g in self.ws.grads.iter_mut() {
+            g.fill(0.0);
+        }
+        Ok(())
+    }
+
+    fn run_fwd(
+        &mut self,
+        slo: usize,
+        nw: usize,
+        base: &[HostTensor],
+        lora_t: &[HostTensor],
+        scale: &[f32],
+        tokens: &HostTensor,
+        x_in: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let (n, r, bs) = (self.n, self.r, self.bs);
+        if lora_t.len() != NL || base.len() != NB || scale.len() != n || slo + nw > n {
+            bail_shapes("stage run_fwd", lora_t.len(), base.len(), scale.len(), n)?;
+        }
+        let spec = self.spec;
+        let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+        let m = bs * s;
+        let rd = m * d;
+        let base_refs: Vec<&HostTensor> = base.iter().collect();
+        let lora_refs: Vec<&HostTensor> = lora_t.iter().collect();
+        let lora = lora_slices(&lora_refs)?;
+        let (lo, hi, last) = (self.lo, self.hi, self.last);
+        let ws = &mut self.ws;
+        ws.ensure(&self.sub, n, bs, r, true);
+        let xw = &mut ws.x[slo * rd..(slo + nw) * rd];
+        match x_in {
+            Some(xv) => {
+                if xv.len() != xw.len() {
+                    return Err(anyhow!(
+                        "stage run_fwd: boundary activation len {} != {}",
+                        xv.len(),
+                        xw.len()
+                    ));
+                }
+                xw.copy_from_slice(xv);
+            }
+            None => {
+                let embed = base_refs[tinylm::EMBED].as_f32()?;
+                let pos = base_refs[tinylm::POS].as_f32()?;
+                let toks = tokens.as_i32()?;
+                tinylm::embed_fwd(
+                    embed,
+                    pos,
+                    &toks[slo * m..(slo + nw) * m],
+                    xw,
+                    nw,
+                    bs,
+                    s,
+                    d,
+                    v,
+                )?;
+            }
+        }
+        let tw = &mut ws.tmp[slo * rd..(slo + nw) * rd];
+        for l in lo..hi {
+            let lw = tinylm::layer_weights(&base_refs, l, d, f)?;
+            tinylm::layer_fwd(
+                &spec,
+                &lw,
+                &lora,
+                scale,
+                l,
+                n,
+                slo,
+                nw,
+                bs,
+                r,
+                xw,
+                tw,
+                &mut ws.att,
+                &mut ws.layers[l - lo],
+            );
+        }
+        if last {
+            let embed = base_refs[tinylm::EMBED].as_f32()?;
+            let lnf = base_refs[tinylm::LNF].as_f32()?;
+            let hw = &mut ws.h[slo * rd..(slo + nw) * rd];
+            let xhw = &mut ws.xhatf[slo * rd..(slo + nw) * rd];
+            let invw = &mut ws.invf[slo * m..(slo + nw) * m];
+            let logw = &mut ws.logits[slo * m * v..(slo + nw) * m * v];
+            tinylm::head_fwd(embed, lnf, xw, hw, xhw, invw, logw, nw * m, d, v);
+            Ok(Vec::new())
+        } else {
+            Ok(xw.to_vec())
+        }
+    }
+
+    fn run_loss(
+        &mut self,
+        slo: usize,
+        nw: usize,
+        base: &[HostTensor],
+        targets: &HostTensor,
+        mask: &HostTensor,
+    ) -> Result<Vec<f32>> {
+        if !self.last {
+            return Err(anyhow!("run_loss on non-final stage [{}, {})", self.lo, self.hi));
+        }
+        let bs = self.bs;
+        let spec = self.spec;
+        let (d, s, v) = (spec.d_model, spec.seq, spec.vocab);
+        let m = bs * s;
+        let rd = m * d;
+        let targets_i = targets.as_i32()?;
+        let mask_f = mask.as_f32()?;
+        let base_refs: Vec<&HostTensor> = base.iter().collect();
+        let embed = base_refs[tinylm::EMBED].as_f32()?;
+        let lnf = base_refs[tinylm::LNF].as_f32()?;
+        let ws = &mut self.ws;
+        let logw = &ws.logits[slo * m * v..(slo + nw) * m * v];
+        let dlogw = &mut ws.dlogits[slo * m * v..(slo + nw) * m * v];
+        let per = tinylm::loss_dlogits(
+            &spec,
+            logw,
+            &targets_i[slo * m..(slo + nw) * m],
+            &mask_f[slo * m..(slo + nw) * m],
+            nw,
+            bs,
+            dlogw,
+        );
+        let xhw = &ws.xhatf[slo * rd..(slo + nw) * rd];
+        let invw = &ws.invf[slo * m..(slo + nw) * m];
+        let dxaw = &mut ws.dxa[slo * rd..(slo + nw) * rd];
+        let dxbw = &mut ws.dxb[slo * rd..(slo + nw) * rd];
+        tinylm::head_bwd(embed, lnf, dlogw, xhw, invw, dxaw, dxbw, &mut ws.dln, nw * m, d, v);
+        Ok(per)
+    }
+
+    fn run_bwd(
+        &mut self,
+        slo: usize,
+        nw: usize,
+        base: &[HostTensor],
+        lora_t: &[HostTensor],
+        scale: &[f32],
+        dx_in: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let (n, r, bs) = (self.n, self.r, self.bs);
+        if lora_t.len() != NL || base.len() != NB || scale.len() != n || slo + nw > n {
+            bail_shapes("stage run_bwd", lora_t.len(), base.len(), scale.len(), n)?;
+        }
+        let spec = self.spec;
+        let (d, f, s) = (spec.d_model, spec.d_ff, spec.seq);
+        let m = bs * s;
+        let rd = m * d;
+        let base_refs: Vec<&HostTensor> = base.iter().collect();
+        let lora_refs: Vec<&HostTensor> = lora_t.iter().collect();
+        let lora = lora_slices(&lora_refs)?;
+        let (lo, hi) = (self.lo, self.hi);
+        let ws = &mut self.ws;
+        if let Some(dxv) = dx_in {
+            let dxw = &mut ws.dxa[slo * rd..(slo + nw) * rd];
+            if dxv.len() != dxw.len() {
+                return Err(anyhow!(
+                    "stage run_bwd: boundary gradient len {} != {}",
+                    dxv.len(),
+                    dxw.len()
+                ));
+            }
+            dxw.copy_from_slice(dxv);
+        }
+        let (grads_a, grads_b) = ws.grads.split_at_mut(tinylm::B_DOWN);
+        let mut bufs = tinylm::BwdBufs {
+            dxa: &mut ws.dxa,
+            dxb: &mut ws.dxb,
+            dact: &mut ws.dact,
+            dup: &mut ws.dup,
+            dgate: &mut ws.dgate,
+            dh2: &mut ws.dh2,
+            dmid: &mut ws.dmid,
+            dq: &mut ws.dq,
+            dk: &mut ws.dk,
+            dv: &mut ws.dv,
+            dh: &mut ws.dh,
+            dp: &mut ws.dp,
+            dln: &mut ws.dln,
+            tmp: &mut ws.tmp,
+        };
+        for l in (lo..hi).rev() {
+            let lw = tinylm::layer_weights(&base_refs, l, d, f)?;
+            tinylm::layer_bwd(
+                &spec,
+                &lw,
+                &lora,
+                scale,
+                l,
+                l - lo,
+                n,
+                slo,
+                nw,
+                bs,
+                r,
+                &ws.layers[l - lo],
+                &mut bufs,
+                grads_a,
+                grads_b,
+            );
+        }
+        Ok(if lo == 0 {
+            // Stage 0: the embedding inputs are frozen — no upstream
+            // boundary gradient to hand off.
+            Vec::new()
+        } else {
+            ws.dxa[slo * rd..(slo + nw) * rd].to_vec()
+        })
+    }
+
+    fn stage_grads(&self) -> &[Vec<f32>] {
+        &self.ws.grads
+    }
 }
 
 /// The forward/backward half shared by the fused [`TrainEvalExec`] and

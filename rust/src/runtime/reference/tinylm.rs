@@ -23,7 +23,7 @@
 use anyhow::{bail, Result};
 
 use super::gemm;
-use super::workspace::Workspace;
+use super::workspace::{LayerSave, Workspace};
 use crate::runtime::tensor::HostTensor;
 
 /// Indices of the `LORA_ORDER` tensors (sorted `{a,b}_{proj}` names).
@@ -34,7 +34,7 @@ const A_O: usize = 3;
 const A_Q: usize = 4;
 const A_UP: usize = 5;
 const A_V: usize = 6;
-const B_DOWN: usize = 7;
+pub(crate) const B_DOWN: usize = 7;
 const B_GATE: usize = 8;
 const B_K: usize = 9;
 const B_O: usize = 10;
@@ -43,8 +43,8 @@ const B_UP: usize = 12;
 const B_V: usize = 13;
 
 /// Indices of the `BASE_ORDER` tensors.
-const EMBED: usize = 0;
-const POS: usize = 1;
+pub(crate) const EMBED: usize = 0;
+pub(crate) const POS: usize = 1;
 const LN1: usize = 2;
 const LN2: usize = 3;
 const WQ: usize = 4;
@@ -54,7 +54,7 @@ const WO: usize = 7;
 const WUP: usize = 8;
 const WGATE: usize = 9;
 const WDOWN: usize = 10;
-const LNF: usize = 11;
+pub(crate) const LNF: usize = 11;
 
 pub(crate) const ADAM_B1: f32 = 0.9;
 pub(crate) const ADAM_B2: f32 = 0.999;
@@ -441,7 +441,7 @@ fn proj_bwd_rows(
 
 /// Embedding + positional encoding into the residual stream `x`.
 #[allow(clippy::too_many_arguments)]
-fn embed_fwd(
+pub(crate) fn embed_fwd(
     embed: &[f32],
     pos: &[f32],
     tokens: &[i32],
@@ -472,6 +472,208 @@ fn embed_fwd(
     Ok(())
 }
 
+/// One transformer layer's frozen base weights (the layer-`l` slices of
+/// the `BASE_ORDER` tensors) — the unit both the monolithic layer loop and
+/// a pipeline stage's layer loop consume.
+pub(crate) struct LayerWeights<'a> {
+    pub ln1: &'a [f32],
+    pub ln2: &'a [f32],
+    pub wq: &'a [f32],
+    pub wk: &'a [f32],
+    pub wv: &'a [f32],
+    pub wo: &'a [f32],
+    pub wup: &'a [f32],
+    pub wgate: &'a [f32],
+    pub wdown: &'a [f32],
+}
+
+/// Slice layer `l`'s base weights out of the full `BASE_ORDER` set.
+pub(crate) fn layer_weights<'a>(
+    base: &[&'a HostTensor],
+    l: usize,
+    d: usize,
+    f: usize,
+) -> Result<LayerWeights<'a>> {
+    Ok(LayerWeights {
+        ln1: &base[LN1].as_f32()?[l * d..(l + 1) * d],
+        ln2: &base[LN2].as_f32()?[l * d..(l + 1) * d],
+        wq: &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d],
+        wk: &base[WK].as_f32()?[l * d * d..(l + 1) * d * d],
+        wv: &base[WV].as_f32()?[l * d * d..(l + 1) * d * d],
+        wo: &base[WO].as_f32()?[l * d * d..(l + 1) * d * d],
+        wup: &base[WUP].as_f32()?[l * d * f..(l + 1) * d * f],
+        wgate: &base[WGATE].as_f32()?[l * d * f..(l + 1) * d * f],
+        wdown: &base[WDOWN].as_f32()?[l * f * d..(l + 1) * f * d],
+    })
+}
+
+/// One transformer layer's forward over the slot window `[slo, slo+nw)`
+/// of a pack of `n_full` adapters: pre-LN attention + gated-SiLU MLP with
+/// residuals, all backward state written into `save`'s windowed slices.
+///
+/// Every flat buffer in the pack is slot-major, so a slot window of it is
+/// one contiguous range and the windowed call runs the *identical*
+/// per-element arithmetic the monolithic (`slo=0, nw=n_full`) call runs —
+/// each output element is produced by exactly one window with an unchanged
+/// reduction order. This is what makes stage-pipelined execution (one
+/// microbatch = one slot window) bitwise identical to the fused step
+/// (DESIGN.md §15). `x`/`tmp` are the *pre-windowed* `(nw·bs·seq, d)`
+/// residual stream and scratch; `att` is `≥ seq` scratch; `lora`/`scale`
+/// are full-pack and windowed internally.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn layer_fwd(
+    spec: &Spec,
+    lw: &LayerWeights,
+    lora: &[&[f32]; 14],
+    scale_full: &[f32],
+    l: usize,
+    n_full: usize,
+    slo: usize,
+    nw: usize,
+    bs: usize,
+    r: usize,
+    x: &mut [f32],
+    tmp: &mut [f32],
+    att: &mut [f32],
+    save: &mut LayerSave,
+) {
+    let (d, f, s) = (spec.d_model, spec.d_ff, spec.seq);
+    let (nh, dh) = (spec.n_heads, spec.d_head());
+    let m = bs * s; // rows per adapter
+    let n = nw;
+    let nm = n * m;
+    let sqrt_dh = (dh as f32).sqrt();
+    let scale = &scale_full[slo..slo + nw];
+    // Per-slot row strides of the save buffers; all are slot-major, so the
+    // window of each is one contiguous slice.
+    let (rd, rf, rr) = (m * d, m * f, m * r);
+    let rp = bs * nh * s * s;
+    let h = &mut save.h[slo * rd..(slo + nw) * rd];
+    let xhat1 = &mut save.xhat1[slo * rd..(slo + nw) * rd];
+    let inv1 = &mut save.inv1[slo * m..(slo + nw) * m];
+    let q = &mut save.q[slo * rd..(slo + nw) * rd];
+    let k = &mut save.k[slo * rd..(slo + nw) * rd];
+    let v = &mut save.v[slo * rd..(slo + nw) * rd];
+    let o = &mut save.o[slo * rd..(slo + nw) * rd];
+    let p = &mut save.p[slo * rp..(slo + nw) * rp];
+    let mid_q = &mut save.mid_q[slo * rr..(slo + nw) * rr];
+    let mid_k = &mut save.mid_k[slo * rr..(slo + nw) * rr];
+    let mid_v = &mut save.mid_v[slo * rr..(slo + nw) * rr];
+    let mid_o = &mut save.mid_o[slo * rr..(slo + nw) * rr];
+    let mid_up = &mut save.mid_up[slo * rr..(slo + nw) * rr];
+    let mid_gate = &mut save.mid_gate[slo * rr..(slo + nw) * rr];
+    let mid_down = &mut save.mid_down[slo * rr..(slo + nw) * rr];
+    let xhat2 = &mut save.xhat2[slo * rd..(slo + nw) * rd];
+    let inv2 = &mut save.inv2[slo * m..(slo + nw) * m];
+    let h2 = &mut save.h2[slo * rd..(slo + nw) * rd];
+    let up = &mut save.up[slo * rf..(slo + nw) * rf];
+    let gate = &mut save.gate[slo * rf..(slo + nw) * rf];
+    let act = &mut save.act[slo * rf..(slo + nw) * rf];
+    // Window-local LoRA slices: layer `l`, slots `[slo, slo+nw)` of the
+    // flat `(L, n_full, din, r)` / `(L, n_full, r, dout)` tensors.
+    let la = |idx: usize, din: usize| {
+        &lora[idx][(l * n_full + slo) * din * r..(l * n_full + slo + nw) * din * r]
+    };
+    let lb = |idx: usize, dout: usize| {
+        &lora[idx][(l * n_full + slo) * r * dout..(l * n_full + slo + nw) * r * dout]
+    };
+
+    ln_fwd(x, lw.ln1, nm, d, h, xhat1, inv1);
+
+    proj_fwd(q, mid_q, h, lw.wq, la(A_Q, d), lb(B_Q, d), scale, n, m, d, d, r);
+    proj_fwd(k, mid_k, h, lw.wk, la(A_K, d), lb(B_K, d), scale, n, m, d, d, r);
+    proj_fwd(v, mid_v, h, lw.wv, la(A_V, d), lb(B_V, d), scale, n, m, d, d, r);
+
+    // Causal attention per (adapter, batch, head), probabilities saved.
+    o.fill(0.0);
+    let logit_buf = &mut att[..s];
+    for i in 0..n {
+        for b in 0..bs {
+            for hh in 0..nh {
+                for t in 0..s {
+                    let base_t = ((i * bs + b) * s + t) * d + hh * dh;
+                    let qrow = &q[base_t..base_t + dh];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (u, lv) in logit_buf.iter_mut().enumerate().take(t + 1) {
+                        let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                        let krow = &k[base_u..base_u + dh];
+                        let mut dot = 0.0f32;
+                        for c in 0..dh {
+                            dot += qrow[c] * krow[c];
+                        }
+                        let val = dot / sqrt_dh;
+                        *lv = val;
+                        if val > mx {
+                            mx = val;
+                        }
+                    }
+                    let mut sum = 0.0f32;
+                    for lv in logit_buf.iter_mut().take(t + 1) {
+                        *lv = (*lv - mx).exp();
+                        sum += *lv;
+                    }
+                    let poff = (((i * bs + b) * nh + hh) * s + t) * s;
+                    let prow = &mut p[poff..poff + s];
+                    for (u, &e) in logit_buf.iter().enumerate().take(t + 1) {
+                        prow[u] = e / sum;
+                    }
+                    let orow = &mut o[base_t..base_t + dh];
+                    for (u, &w) in prow.iter().enumerate().take(t + 1) {
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                        let vrow = &v[base_u..base_u + dh];
+                        for c in 0..dh {
+                            orow[c] += w * vrow[c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Attention output projection + residual.
+    proj_fwd(tmp, mid_o, o, lw.wo, la(A_O, d), lb(B_O, d), scale, n, m, d, d, r);
+    for (xv, av) in x.iter_mut().zip(tmp.iter()) {
+        *xv += *av;
+    }
+
+    // MLP: pre-LN, gated SiLU, down projection + residual.
+    ln_fwd(x, lw.ln2, nm, d, h2, xhat2, inv2);
+    proj_fwd(up, mid_up, h2, lw.wup, la(A_UP, d), lb(B_UP, f), scale, n, m, d, f, r);
+    let (ga, gb) = (la(A_GATE, d), lb(B_GATE, f));
+    proj_fwd(gate, mid_gate, h2, lw.wgate, ga, gb, scale, n, m, d, f, r);
+    for j in 0..nm * f {
+        act[j] = silu(gate[j]) * up[j];
+    }
+    let (da_, db_) = (la(A_DOWN, f), lb(B_DOWN, d));
+    proj_fwd(tmp, mid_down, act, lw.wdown, da_, db_, scale, n, m, f, d, r);
+    for (xv, dv) in x.iter_mut().zip(tmp.iter()) {
+        *xv += *dv;
+    }
+}
+
+/// Final LN + tied-embedding head over `rows` residual rows.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn head_fwd(
+    embed: &[f32],
+    lnf: &[f32],
+    x: &[f32],
+    h: &mut [f32],
+    xhatf: &mut [f32],
+    invf: &mut [f32],
+    logits: &mut [f32],
+    rows: usize,
+    d: usize,
+    v: usize,
+) {
+    ln_fwd(x, lnf, rows, d, h, xhatf, invf);
+    logits.fill(0.0);
+    // logits = xf @ embed^T, embed stored (v, d).
+    gemm::mm_nt_acc_par(logits, h, embed, rows, d, v, 1.0, gemm::threads());
+}
+
 /// Packed forward. `base` in `BASE_ORDER`, `lora` 14 flat slices in
 /// `LORA_ORDER` (shapes `(L, n, din, r)` / `(L, n, r, dout)`), `tokens`
 /// `(n, bs, s)`. Leaves logits `(n, bs, s, vocab)` in `ws.logits` and
@@ -491,10 +693,8 @@ pub(crate) fn forward(
     spec.check()?;
     ws.ensure(spec, n, bs, r, true);
     let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
-    let (nh, dh) = (spec.n_heads, spec.d_head());
     let m = bs * s; // rows per adapter
     let nm = n * m;
-    let sqrt_dh = (dh as f32).sqrt();
 
     let embed = base[EMBED].as_f32()?;
     let pos = base[POS].as_f32()?;
@@ -502,106 +702,13 @@ pub(crate) fn forward(
     embed_fwd(embed, pos, tokens, x, n, bs, s, d, v)?;
 
     for l in 0..spec.n_layers {
-        let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
-        let ln2 = &base[LN2].as_f32()?[l * d..(l + 1) * d];
-        let wq = &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wk = &base[WK].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wv = &base[WV].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wo = &base[WO].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wup = &base[WUP].as_f32()?[l * d * f..(l + 1) * d * f];
-        let wgate = &base[WGATE].as_f32()?[l * d * f..(l + 1) * d * f];
-        let wdown = &base[WDOWN].as_f32()?[l * f * d..(l + 1) * f * d];
-        // Layer-l LoRA slices: (n, din, r) / (n, r, dout).
-        let la = |idx: usize, din: usize| &lora[idx][l * n * din * r..(l + 1) * n * din * r];
-        let lb = |idx: usize, dout: usize| &lora[idx][l * n * r * dout..(l + 1) * n * r * dout];
-        let save = &mut layers[l];
-
-        ln_fwd(x, ln1, nm, d, &mut save.h, &mut save.xhat1, &mut save.inv1);
-
-        let (qa, qb) = (la(A_Q, d), lb(B_Q, d));
-        proj_fwd(&mut save.q, &mut save.mid_q, &save.h, wq, qa, qb, scale, n, m, d, d, r);
-        let (ka, kb) = (la(A_K, d), lb(B_K, d));
-        proj_fwd(&mut save.k, &mut save.mid_k, &save.h, wk, ka, kb, scale, n, m, d, d, r);
-        let (va, vb) = (la(A_V, d), lb(B_V, d));
-        proj_fwd(&mut save.v, &mut save.mid_v, &save.h, wv, va, vb, scale, n, m, d, d, r);
-
-        // Causal attention per (adapter, batch, head), probabilities saved.
-        save.o.fill(0.0);
-        let logit_buf = &mut att[..s];
-        for i in 0..n {
-            for b in 0..bs {
-                for hh in 0..nh {
-                    for t in 0..s {
-                        let base_t = ((i * bs + b) * s + t) * d + hh * dh;
-                        let qrow = &save.q[base_t..base_t + dh];
-                        let mut mx = f32::NEG_INFINITY;
-                        for (u, lv) in logit_buf.iter_mut().enumerate().take(t + 1) {
-                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
-                            let krow = &save.k[base_u..base_u + dh];
-                            let mut dot = 0.0f32;
-                            for c in 0..dh {
-                                dot += qrow[c] * krow[c];
-                            }
-                            let val = dot / sqrt_dh;
-                            *lv = val;
-                            if val > mx {
-                                mx = val;
-                            }
-                        }
-                        let mut sum = 0.0f32;
-                        for lv in logit_buf.iter_mut().take(t + 1) {
-                            *lv = (*lv - mx).exp();
-                            sum += *lv;
-                        }
-                        let poff = (((i * bs + b) * nh + hh) * s + t) * s;
-                        let prow = &mut save.p[poff..poff + s];
-                        for (u, &e) in logit_buf.iter().enumerate().take(t + 1) {
-                            prow[u] = e / sum;
-                        }
-                        let orow = &mut save.o[base_t..base_t + dh];
-                        for (u, &w) in prow.iter().enumerate().take(t + 1) {
-                            if w == 0.0 {
-                                continue;
-                            }
-                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
-                            let vrow = &save.v[base_u..base_u + dh];
-                            for c in 0..dh {
-                                orow[c] += w * vrow[c];
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        // Attention output projection + residual.
-        proj_fwd(tmp, &mut save.mid_o, &save.o, wo, la(A_O, d), lb(B_O, d), scale, n, m, d, d, r);
-        for (xv, av) in x.iter_mut().zip(tmp.iter()) {
-            *xv += *av;
-        }
-
-        // MLP: pre-LN, gated SiLU, down projection + residual.
-        ln_fwd(x, ln2, nm, d, &mut save.h2, &mut save.xhat2, &mut save.inv2);
-        let (ua, ub) = (la(A_UP, d), lb(B_UP, f));
-        proj_fwd(&mut save.up, &mut save.mid_up, &save.h2, wup, ua, ub, scale, n, m, d, f, r);
-        let (ga, gb) = (la(A_GATE, d), lb(B_GATE, f));
-        proj_fwd(&mut save.gate, &mut save.mid_gate, &save.h2, wgate, ga, gb, scale, n, m, d, f, r);
-        for j in 0..nm * f {
-            save.act[j] = silu(save.gate[j]) * save.up[j];
-        }
-        let (da_, db_) = (la(A_DOWN, f), lb(B_DOWN, d));
-        proj_fwd(tmp, &mut save.mid_down, &save.act, wdown, da_, db_, scale, n, m, f, d, r);
-        for (xv, dv) in x.iter_mut().zip(tmp.iter()) {
-            *xv += *dv;
-        }
+        let lw = layer_weights(base, l, d, f)?;
+        layer_fwd(spec, &lw, lora, scale, l, n, 0, n, bs, r, x, tmp, att, &mut layers[l]);
     }
 
     // Final LN + tied-embedding head.
     let lnf = base[LNF].as_f32()?;
-    ln_fwd(x, lnf, nm, d, h, xhatf, invf);
-    logits.fill(0.0);
-    // logits = xf @ embed^T, embed stored (v, d).
-    gemm::mm_nt_acc_par(logits, h, embed, nm, d, v, 1.0, gemm::threads());
+    head_fwd(embed, lnf, x, h, xhatf, invf, logits, nm, d, v);
     Ok(())
 }
 
@@ -785,55 +892,21 @@ pub(crate) fn loss_and_acc(
     (loss, acc)
 }
 
-/// Backward pass over the state [`forward`] left in the workspace:
-/// returns per-adapter losses and leaves the gradients of every LoRA
-/// tensor in `ws.grads` (14 flat buffers in `LORA_ORDER`, shapes matching
-/// the inputs). The loss is the *sum* of per-adapter masked mean CE —
-/// adapter `i`'s gradient is independent of its pack neighbours (§3.2).
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn backward(
+/// Per-adapter losses + the loss gradient w.r.t. the logits. Zeroes and
+/// fills `dlogits`; masked-out rows stay zero. Each adapter's mean-CE
+/// denominator spans only its own `bs·seq` rows, so a slot window of the
+/// pack computes exactly the values the full pack computes for those slots.
+pub(crate) fn loss_dlogits(
     spec: &Spec,
-    base: &[&HostTensor],
-    lora: &[&[f32]; 14],
-    scale: &[f32],
+    logits: &[f32],
     targets: &[i32],
     mask: &[f32],
     n: usize,
     bs: usize,
-    r: usize,
-    ws: &mut Workspace,
-) -> Result<Vec<f32>> {
-    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
-    let (nh, dh) = (spec.n_heads, spec.d_head());
-    let m = bs * s;
-    let nm = n * m;
-    let sqrt_dh = (dh as f32).sqrt();
-    let embed = base[EMBED].as_f32()?;
-    let Workspace {
-        layers,
-        xhatf,
-        invf,
-        logits,
-        tmp,
-        dlogits,
-        dxa,
-        dxb,
-        dact,
-        dup,
-        dgate,
-        dh2,
-        dmid,
-        dq,
-        dk,
-        dv,
-        dh: dhbuf,
-        dp,
-        dln,
-        grads,
-        ..
-    } = ws;
-
-    // Per-adapter losses + dlogits.
+    dlogits: &mut [f32],
+) -> Vec<f32> {
+    let v = spec.vocab;
+    let m = bs * spec.seq;
     let mut per = vec![0.0f32; n];
     dlogits.fill(0.0);
     for i in 0..n {
@@ -870,13 +943,394 @@ pub(crate) fn backward(
         }
         per[i] /= denom;
     }
+    per
+}
 
-    // Head + final LN: dxf staged in dxb, running dx in dxa.
+/// Head + final-LN backward: seeds the running residual gradient `dxa`
+/// from `dlogits` (`dxb` is the dxf staging buffer, `dln` a `d`-row
+/// scratch).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn head_bwd(
+    embed: &[f32],
+    lnf: &[f32],
+    dlogits: &[f32],
+    xhatf: &[f32],
+    invf: &[f32],
+    dxa: &mut [f32],
+    dxb: &mut [f32],
+    dln: &mut [f32],
+    rows: usize,
+    d: usize,
+    v: usize,
+) {
     dxb.fill(0.0);
-    gemm::mm_acc_par(dxb, dlogits, embed, nm, v, d, 1.0, gemm::threads());
-    let lnf = base[LNF].as_f32()?;
+    gemm::mm_acc_par(dxb, dlogits, embed, rows, v, d, 1.0, gemm::threads());
     dxa.fill(0.0);
-    ln_bwd_acc(dxa, dxb, lnf, xhatf, invf, nm, d, dln);
+    ln_bwd_acc(dxa, dxb, lnf, xhatf, invf, rows, d, dln);
+}
+
+/// The backward-pass gradient/scratch buffer set [`layer_bwd`] works in —
+/// full-pack flat buffers (the `Workspace` fields of the same names);
+/// `layer_bwd` windows them per call. `dxa` carries the running residual
+/// gradient: on entry dL/d(layer output), on exit dL/d(layer input).
+pub(crate) struct BwdBufs<'a> {
+    pub dxa: &'a mut [f32],
+    pub dxb: &'a mut [f32],
+    pub dact: &'a mut [f32],
+    pub dup: &'a mut [f32],
+    pub dgate: &'a mut [f32],
+    pub dh2: &'a mut [f32],
+    pub dmid: &'a mut [f32],
+    pub dq: &'a mut [f32],
+    pub dk: &'a mut [f32],
+    pub dv: &'a mut [f32],
+    pub dh: &'a mut [f32],
+    pub dp: &'a mut [f32],
+    pub dln: &'a mut [f32],
+    pub tmp: &'a mut [f32],
+}
+
+/// One transformer layer's backward over the slot window `[slo, slo+nw)`,
+/// mirroring [`layer_fwd`]'s windowing: reads the windowed `save` state,
+/// advances the windowed `dxa` from dL/d(output) to dL/d(input), and
+/// accumulates this window's LoRA gradients into `grads_a`/`grads_b`
+/// (the `grads.split_at_mut(B_DOWN)` halves). `lg` is the layer's index
+/// within the gradient buffers — `l` for full-stack buffers, `l - lo` for
+/// a pipeline stage holding layers `[lo, hi)` only. Slot windows of the
+/// flat `(Lg, n_full, ·, ·)` gradient tensors are disjoint contiguous
+/// ranges, and `proj_bwd` accumulates only within its window, so windowed
+/// calls partition the gradient work element-exactly.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn layer_bwd(
+    spec: &Spec,
+    lw: &LayerWeights,
+    lora: &[&[f32]; 14],
+    scale_full: &[f32],
+    l: usize,
+    lg: usize,
+    n_full: usize,
+    slo: usize,
+    nw: usize,
+    bs: usize,
+    r: usize,
+    save: &LayerSave,
+    bufs: &mut BwdBufs,
+    grads_a: &mut [Vec<f32>],
+    grads_b: &mut [Vec<f32>],
+) {
+    let (d, f, s) = (spec.d_model, spec.d_ff, spec.seq);
+    let (nh, dh) = (spec.n_heads, spec.d_head());
+    let m = bs * s;
+    let n = nw;
+    let nm = n * m;
+    let sqrt_dh = (dh as f32).sqrt();
+    let scale = &scale_full[slo..slo + nw];
+    let (rd, rf, rr) = (m * d, m * f, m * r);
+    let rp = bs * nh * s * s;
+    // Slot windows of the gradient/scratch buffers (disjoint fields, so
+    // the mutable borrows coexist) and of the saved forward state.
+    let dxa = &mut bufs.dxa[slo * rd..(slo + nw) * rd];
+    let dxb = &mut bufs.dxb[slo * rd..(slo + nw) * rd];
+    let dact = &mut bufs.dact[slo * rf..(slo + nw) * rf];
+    let dup = &mut bufs.dup[slo * rf..(slo + nw) * rf];
+    let dgate = &mut bufs.dgate[slo * rf..(slo + nw) * rf];
+    let dh2 = &mut bufs.dh2[slo * rd..(slo + nw) * rd];
+    let dmid = &mut bufs.dmid[slo * rr..(slo + nw) * rr];
+    let dq = &mut bufs.dq[slo * rd..(slo + nw) * rd];
+    let dk = &mut bufs.dk[slo * rd..(slo + nw) * rd];
+    let dv = &mut bufs.dv[slo * rd..(slo + nw) * rd];
+    let dhbuf = &mut bufs.dh[slo * rd..(slo + nw) * rd];
+    let tmp = &mut bufs.tmp[slo * rd..(slo + nw) * rd];
+    let dp = &mut bufs.dp[..];
+    let dln = &mut bufs.dln[..];
+    let sv_h = &save.h[slo * rd..(slo + nw) * rd];
+    let sv_xhat1 = &save.xhat1[slo * rd..(slo + nw) * rd];
+    let sv_inv1 = &save.inv1[slo * m..(slo + nw) * m];
+    let sv_q = &save.q[slo * rd..(slo + nw) * rd];
+    let sv_k = &save.k[slo * rd..(slo + nw) * rd];
+    let sv_v = &save.v[slo * rd..(slo + nw) * rd];
+    let sv_o = &save.o[slo * rd..(slo + nw) * rd];
+    let sv_p = &save.p[slo * rp..(slo + nw) * rp];
+    let sv_mid_q = &save.mid_q[slo * rr..(slo + nw) * rr];
+    let sv_mid_k = &save.mid_k[slo * rr..(slo + nw) * rr];
+    let sv_mid_v = &save.mid_v[slo * rr..(slo + nw) * rr];
+    let sv_mid_o = &save.mid_o[slo * rr..(slo + nw) * rr];
+    let sv_mid_up = &save.mid_up[slo * rr..(slo + nw) * rr];
+    let sv_mid_gate = &save.mid_gate[slo * rr..(slo + nw) * rr];
+    let sv_mid_down = &save.mid_down[slo * rr..(slo + nw) * rr];
+    let sv_xhat2 = &save.xhat2[slo * rd..(slo + nw) * rd];
+    let sv_inv2 = &save.inv2[slo * m..(slo + nw) * m];
+    let sv_h2 = &save.h2[slo * rd..(slo + nw) * rd];
+    let sv_up = &save.up[slo * rf..(slo + nw) * rf];
+    let sv_gate = &save.gate[slo * rf..(slo + nw) * rf];
+    let sv_act = &save.act[slo * rf..(slo + nw) * rf];
+    let la = |idx: usize, din: usize| {
+        &lora[idx][(l * n_full + slo) * din * r..(l * n_full + slo + nw) * din * r]
+    };
+    let lb = |idx: usize, dout: usize| {
+        &lora[idx][(l * n_full + slo) * r * dout..(l * n_full + slo + nw) * r * dout]
+    };
+    macro_rules! ga {
+        ($idx:expr, $din:expr) => {
+            &mut grads_a[$idx]
+                [(lg * n_full + slo) * $din * r..(lg * n_full + slo + nw) * $din * r]
+        };
+    }
+    macro_rules! gb {
+        ($idx:expr, $dout:expr) => {
+            &mut grads_b[$idx - B_DOWN]
+                [(lg * n_full + slo) * r * $dout..(lg * n_full + slo + nw) * r * $dout]
+        };
+    }
+
+    // MLP branch: x2 = x1 + down(act).
+    dact.fill(0.0);
+    proj_bwd(
+        dact,
+        ga!(A_DOWN, f),
+        gb!(B_DOWN, d),
+        dmid,
+        dxa,
+        sv_act,
+        sv_mid_down,
+        lw.wdown,
+        la(A_DOWN, f),
+        lb(B_DOWN, d),
+        scale,
+        n,
+        m,
+        f,
+        d,
+        r,
+    );
+    for j in 0..nm * f {
+        dup[j] = dact[j] * silu(sv_gate[j]);
+        dgate[j] = dact[j] * sv_up[j] * dsilu(sv_gate[j]);
+    }
+    dh2.fill(0.0);
+    proj_bwd(
+        dh2,
+        ga!(A_UP, d),
+        gb!(B_UP, f),
+        dmid,
+        dup,
+        sv_h2,
+        sv_mid_up,
+        lw.wup,
+        la(A_UP, d),
+        lb(B_UP, f),
+        scale,
+        n,
+        m,
+        d,
+        f,
+        r,
+    );
+    proj_bwd(
+        dh2,
+        ga!(A_GATE, d),
+        gb!(B_GATE, f),
+        dmid,
+        dgate,
+        sv_h2,
+        sv_mid_gate,
+        lw.wgate,
+        la(A_GATE, d),
+        lb(B_GATE, f),
+        scale,
+        n,
+        m,
+        d,
+        f,
+        r,
+    );
+    // dx1 = dx (residual) + LN2 backward of dh2 — staged in dxb.
+    dxb.copy_from_slice(dxa);
+    ln_bwd_acc(dxb, dh2, lw.ln2, sv_xhat2, sv_inv2, nm, d, dln);
+
+    // Attention branch: x1 = x0 + o_proj(o). `tmp` plays do_.
+    tmp.fill(0.0);
+    proj_bwd(
+        tmp,
+        ga!(A_O, d),
+        gb!(B_O, d),
+        dmid,
+        dxb,
+        sv_o,
+        sv_mid_o,
+        lw.wo,
+        la(A_O, d),
+        lb(B_O, d),
+        scale,
+        n,
+        m,
+        d,
+        d,
+        r,
+    );
+
+    dq.fill(0.0);
+    dk.fill(0.0);
+    dv.fill(0.0);
+    for i in 0..n {
+        for b in 0..bs {
+            for hh in 0..nh {
+                for t in 0..s {
+                    let base_t = ((i * bs + b) * s + t) * d + hh * dh;
+                    let dorow = &tmp[base_t..base_t + dh];
+                    let prow = &sv_p[(((i * bs + b) * nh + hh) * s + t) * s
+                        ..(((i * bs + b) * nh + hh) * s + t) * s + s];
+                    // dP and softmax backward.
+                    let mut ds = 0.0f32;
+                    for u in 0..=t {
+                        let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                        let vrow = &sv_v[base_u..base_u + dh];
+                        let mut dot = 0.0f32;
+                        for c in 0..dh {
+                            dot += dorow[c] * vrow[c];
+                        }
+                        dp[u] = dot;
+                        ds += dot * prow[u];
+                        // dv += P[t,u] * do
+                        let dvrow = &mut dv[base_u..base_u + dh];
+                        for c in 0..dh {
+                            dvrow[c] += prow[u] * dorow[c];
+                        }
+                    }
+                    for u in 0..=t {
+                        let datt = prow[u] * (dp[u] - ds) / sqrt_dh;
+                        if datt == 0.0 {
+                            continue;
+                        }
+                        let base_u = ((i * bs + b) * s + u) * d + hh * dh;
+                        // dq[t] += datt * k[u]; dk[u] += datt * q[t]
+                        let krow = &sv_k[base_u..base_u + dh];
+                        let qrow = &sv_q[base_t..base_t + dh];
+                        let dqrow = &mut dq[base_t..base_t + dh];
+                        for c in 0..dh {
+                            dqrow[c] += datt * krow[c];
+                        }
+                        let dkrow = &mut dk[base_u..base_u + dh];
+                        for c in 0..dh {
+                            dkrow[c] += datt * qrow[c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    dhbuf.fill(0.0);
+    proj_bwd(
+        dhbuf,
+        ga!(A_Q, d),
+        gb!(B_Q, d),
+        dmid,
+        dq,
+        sv_h,
+        sv_mid_q,
+        lw.wq,
+        la(A_Q, d),
+        lb(B_Q, d),
+        scale,
+        n,
+        m,
+        d,
+        d,
+        r,
+    );
+    proj_bwd(
+        dhbuf,
+        ga!(A_K, d),
+        gb!(B_K, d),
+        dmid,
+        dk,
+        sv_h,
+        sv_mid_k,
+        lw.wk,
+        la(A_K, d),
+        lb(B_K, d),
+        scale,
+        n,
+        m,
+        d,
+        d,
+        r,
+    );
+    proj_bwd(
+        dhbuf,
+        ga!(A_V, d),
+        gb!(B_V, d),
+        dmid,
+        dv,
+        sv_h,
+        sv_mid_v,
+        lw.wv,
+        la(A_V, d),
+        lb(B_V, d),
+        scale,
+        n,
+        m,
+        d,
+        d,
+        r,
+    );
+    // dx0 = dx1 (residual) + LN1 backward of dh — back into dxa.
+    dxa.copy_from_slice(dxb);
+    ln_bwd_acc(dxa, dhbuf, lw.ln1, sv_xhat1, sv_inv1, nm, d, dln);
+}
+
+/// Backward pass over the state [`forward`] left in the workspace:
+/// returns per-adapter losses and leaves the gradients of every LoRA
+/// tensor in `ws.grads` (14 flat buffers in `LORA_ORDER`, shapes matching
+/// the inputs). The loss is the *sum* of per-adapter masked mean CE —
+/// adapter `i`'s gradient is independent of its pack neighbours (§3.2).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward(
+    spec: &Spec,
+    base: &[&HostTensor],
+    lora: &[&[f32]; 14],
+    scale: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    bs: usize,
+    r: usize,
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
+    let (d, f, s, v) = (spec.d_model, spec.d_ff, spec.seq, spec.vocab);
+    let m = bs * s;
+    let nm = n * m;
+    let embed = base[EMBED].as_f32()?;
+    let lnf = base[LNF].as_f32()?;
+    let Workspace {
+        layers,
+        xhatf,
+        invf,
+        logits,
+        tmp,
+        dlogits,
+        dxa,
+        dxb,
+        dact,
+        dup,
+        dgate,
+        dh2,
+        dmid,
+        dq,
+        dk,
+        dv,
+        dh: dhbuf,
+        dp,
+        dln,
+        grads,
+        ..
+    } = ws;
+
+    // Per-adapter losses + dlogits, then head + final LN: dxf staged in
+    // dxb, running dx in dxa.
+    let per = loss_dlogits(spec, logits, targets, mask, n, bs, dlogits);
+    head_bwd(embed, lnf, dlogits, xhatf, invf, dxa, dxb, dln, nm, d, v);
 
     // LoRA gradient buffers, zeroed for this step. Split at the a_*/b_*
     // boundary so one projection's backward can borrow its `da` and `db`
@@ -886,225 +1340,28 @@ pub(crate) fn backward(
     }
     let (grads_a, grads_b) = grads.split_at_mut(B_DOWN);
 
+    let mut bufs = BwdBufs {
+        dxa,
+        dxb,
+        dact,
+        dup,
+        dgate,
+        dh2,
+        dmid,
+        dq,
+        dk,
+        dv,
+        dh: dhbuf,
+        dp,
+        dln,
+        tmp,
+    };
     for l in (0..spec.n_layers).rev() {
-        let save = &layers[l];
-        let ln1 = &base[LN1].as_f32()?[l * d..(l + 1) * d];
-        let ln2 = &base[LN2].as_f32()?[l * d..(l + 1) * d];
-        let wq = &base[WQ].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wk = &base[WK].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wv = &base[WV].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wo = &base[WO].as_f32()?[l * d * d..(l + 1) * d * d];
-        let wup = &base[WUP].as_f32()?[l * d * f..(l + 1) * d * f];
-        let wgate = &base[WGATE].as_f32()?[l * d * f..(l + 1) * d * f];
-        let wdown = &base[WDOWN].as_f32()?[l * f * d..(l + 1) * f * d];
-        let la = |idx: usize, din: usize| &lora[idx][l * n * din * r..(l + 1) * n * din * r];
-        let lb = |idx: usize, dout: usize| &lora[idx][l * n * r * dout..(l + 1) * n * r * dout];
-        macro_rules! ga {
-            ($idx:expr, $din:expr) => {
-                &mut grads_a[$idx][l * n * $din * r..(l + 1) * n * $din * r]
-            };
-        }
-        macro_rules! gb {
-            ($idx:expr, $dout:expr) => {
-                &mut grads_b[$idx - B_DOWN][l * n * r * $dout..(l + 1) * n * r * $dout]
-            };
-        }
-
-        // MLP branch: x2 = x1 + down(act).
-        dact.fill(0.0);
-        proj_bwd(
-            dact,
-            ga!(A_DOWN, f),
-            gb!(B_DOWN, d),
-            dmid,
-            dxa,
-            &save.act,
-            &save.mid_down,
-            wdown,
-            la(A_DOWN, f),
-            lb(B_DOWN, d),
-            scale,
-            n,
-            m,
-            f,
-            d,
-            r,
+        let lw = layer_weights(base, l, d, f)?;
+        layer_bwd(
+            spec, &lw, lora, scale, l, l, n, 0, n, bs, r, &layers[l], &mut bufs, grads_a,
+            grads_b,
         );
-        for j in 0..nm * f {
-            dup[j] = dact[j] * silu(save.gate[j]);
-            dgate[j] = dact[j] * save.up[j] * dsilu(save.gate[j]);
-        }
-        dh2.fill(0.0);
-        proj_bwd(
-            dh2,
-            ga!(A_UP, d),
-            gb!(B_UP, f),
-            dmid,
-            dup,
-            &save.h2,
-            &save.mid_up,
-            wup,
-            la(A_UP, d),
-            lb(B_UP, f),
-            scale,
-            n,
-            m,
-            d,
-            f,
-            r,
-        );
-        proj_bwd(
-            dh2,
-            ga!(A_GATE, d),
-            gb!(B_GATE, f),
-            dmid,
-            dgate,
-            &save.h2,
-            &save.mid_gate,
-            wgate,
-            la(A_GATE, d),
-            lb(B_GATE, f),
-            scale,
-            n,
-            m,
-            d,
-            f,
-            r,
-        );
-        // dx1 = dx (residual) + LN2 backward of dh2 — staged in dxb.
-        dxb.copy_from_slice(dxa);
-        ln_bwd_acc(dxb, dh2, ln2, &save.xhat2, &save.inv2, nm, d, dln);
-
-        // Attention branch: x1 = x0 + o_proj(o). `tmp` plays do_.
-        tmp.fill(0.0);
-        proj_bwd(
-            tmp,
-            ga!(A_O, d),
-            gb!(B_O, d),
-            dmid,
-            dxb,
-            &save.o,
-            &save.mid_o,
-            wo,
-            la(A_O, d),
-            lb(B_O, d),
-            scale,
-            n,
-            m,
-            d,
-            d,
-            r,
-        );
-
-        dq.fill(0.0);
-        dk.fill(0.0);
-        dv.fill(0.0);
-        for i in 0..n {
-            for b in 0..bs {
-                for hh in 0..nh {
-                    for t in 0..s {
-                        let base_t = ((i * bs + b) * s + t) * d + hh * dh;
-                        let dorow = &tmp[base_t..base_t + dh];
-                        let prow = &save.p[(((i * bs + b) * nh + hh) * s + t) * s
-                            ..(((i * bs + b) * nh + hh) * s + t) * s + s];
-                        // dP and softmax backward.
-                        let mut ds = 0.0f32;
-                        for u in 0..=t {
-                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
-                            let vrow = &save.v[base_u..base_u + dh];
-                            let mut dot = 0.0f32;
-                            for c in 0..dh {
-                                dot += dorow[c] * vrow[c];
-                            }
-                            dp[u] = dot;
-                            ds += dot * prow[u];
-                            // dv += P[t,u] * do
-                            let dvrow = &mut dv[base_u..base_u + dh];
-                            for c in 0..dh {
-                                dvrow[c] += prow[u] * dorow[c];
-                            }
-                        }
-                        for u in 0..=t {
-                            let datt = prow[u] * (dp[u] - ds) / sqrt_dh;
-                            if datt == 0.0 {
-                                continue;
-                            }
-                            let base_u = ((i * bs + b) * s + u) * d + hh * dh;
-                            // dq[t] += datt * k[u]; dk[u] += datt * q[t]
-                            let krow = &save.k[base_u..base_u + dh];
-                            let qrow = &save.q[base_t..base_t + dh];
-                            let dqrow = &mut dq[base_t..base_t + dh];
-                            for c in 0..dh {
-                                dqrow[c] += datt * krow[c];
-                            }
-                            let dkrow = &mut dk[base_u..base_u + dh];
-                            for c in 0..dh {
-                                dkrow[c] += datt * qrow[c];
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        dhbuf.fill(0.0);
-        proj_bwd(
-            dhbuf,
-            ga!(A_Q, d),
-            gb!(B_Q, d),
-            dmid,
-            dq,
-            &save.h,
-            &save.mid_q,
-            wq,
-            la(A_Q, d),
-            lb(B_Q, d),
-            scale,
-            n,
-            m,
-            d,
-            d,
-            r,
-        );
-        proj_bwd(
-            dhbuf,
-            ga!(A_K, d),
-            gb!(B_K, d),
-            dmid,
-            dk,
-            &save.h,
-            &save.mid_k,
-            wk,
-            la(A_K, d),
-            lb(B_K, d),
-            scale,
-            n,
-            m,
-            d,
-            d,
-            r,
-        );
-        proj_bwd(
-            dhbuf,
-            ga!(A_V, d),
-            gb!(B_V, d),
-            dmid,
-            dv,
-            &save.h,
-            &save.mid_v,
-            wv,
-            la(A_V, d),
-            lb(B_V, d),
-            scale,
-            n,
-            m,
-            d,
-            d,
-            r,
-        );
-        // dx0 = dx1 (residual) + LN1 backward of dh — back into dxa.
-        dxa.copy_from_slice(dxb);
-        ln_bwd_acc(dxa, dhbuf, ln1, &save.xhat1, &save.inv1, nm, d, dln);
     }
 
     Ok(per)

@@ -40,10 +40,18 @@
 //! cannot split its fused step ([`crate::runtime::ExecutionBackend::shard`]
 //! returns `None`, e.g. AOT-compiled PJRT artifacts) — `step` and `eval`
 //! run the fused executables unchanged.
+//!
+//! **Stage composition** (DESIGN.md §15): with a requested pipeline depth
+//! `s > 1` ([`ShardedState::new_with_stages`], the `PLORA_STAGES` knob),
+//! each shard's executor is a [`PipelinedExec`] that streams the shard's
+//! slot slice through `s` layer-stage workers — the `d × s` composition.
+//! Both axes preserve every element's reduction order, so trajectories
+//! stay bitwise identical at any `(d, s)`.
 
 use anyhow::{bail, Result};
 
 use crate::runtime::backend::{GradStep, Scratch, ShardStepExec};
+use crate::runtime::pipeline::PipelinedExec;
 use crate::runtime::state::lora_shape;
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{Executable, Runtime, TrainState, LORA_ORDER};
@@ -99,6 +107,11 @@ pub struct ShardedState {
     opt_scratch: Scratch,
     /// The batch size the shard buffers were built for.
     bs: usize,
+    /// Requested pipeline depth (`PLORA_STAGES`); 1 = layer-monolithic.
+    stages: usize,
+    /// Effective pipeline depth the shard executors run with after
+    /// clamping to the layer count and backend support (1 = monolithic).
+    stages_eff: usize,
 }
 
 /// Copy slots `[lo, hi)` of a packed `(L, n, d2, d3)` tensor into the
@@ -161,6 +174,24 @@ impl ShardedState {
         bs: usize,
         devices: &[usize],
     ) -> Result<ShardedState> {
+        ShardedState::new_with_stages(rt, model, inner, bs, devices, 1)
+    }
+
+    /// Like [`ShardedState::new`], but with a requested pipeline depth
+    /// `stages` (the `PLORA_STAGES` knob): each shard's executor streams
+    /// its slot slice through `stages` layer-stage workers
+    /// ([`PipelinedExec`]) — the `d × s` composition. Falls back to
+    /// layer-monolithic shard executors (and, with one device, to fused
+    /// execution) when the backend cannot stage-split; trajectories are
+    /// bitwise identical either way.
+    pub fn new_with_stages(
+        rt: &Runtime,
+        model: &str,
+        inner: TrainState,
+        bs: usize,
+        devices: &[usize],
+        stages: usize,
+    ) -> Result<ShardedState> {
         let mut st = ShardedState {
             inner,
             devices: devices.to_vec(),
@@ -170,6 +201,8 @@ impl ShardedState {
             grads: vec![],
             opt_scratch: Scratch::new(),
             bs,
+            stages: stages.max(1),
+            stages_eff: 1,
         };
         st.build(rt, model)?;
         Ok(st)
@@ -184,14 +217,25 @@ impl ShardedState {
         self.build(rt, model)
     }
 
+    /// Rebuild the shard executors for a new pipeline depth (a boundary
+    /// stage retarget). Like [`ShardedState::set_devices`], the wrapped
+    /// training state is untouched — only the execution layout changes,
+    /// so trajectories stay bitwise identical.
+    pub fn set_stages(&mut self, rt: &Runtime, model: &str, stages: usize) -> Result<()> {
+        self.stages = stages.max(1);
+        self.build(rt, model)
+    }
+
     fn build(&mut self, rt: &Runtime, model: &str) -> Result<()> {
         self.shards.clear();
         self.opt = None;
         self.pool = None;
         self.grads.clear();
+        self.stages_eff = 1;
         let (n, r, bs) = (self.inner.n, self.inner.r, self.bs);
+        let s_req = self.stages.clamp(1, self.inner.model.n_layers.max(1));
         let d_eff = self.devices.len().min(n.max(1));
-        if d_eff <= 1 {
+        if d_eff <= 1 && s_req <= 1 {
             return Ok(());
         }
         let Some(opt) = rt.shard_exec(model, n, r, bs)? else {
@@ -199,19 +243,52 @@ impl ShardedState {
         };
         let mi = self.inner.model.clone();
         let seq = mi.seq;
-        let mut shards = Vec::with_capacity(d_eff);
-        let base_n = n / d_eff;
-        let rem = n % d_eff;
+        // With one device the bucket stays whole — a single full-range
+        // "shard" whose executor is the stage pipeline (pure `s` axis).
+        let devs: Vec<usize> = if d_eff <= 1 {
+            vec![self.devices.first().copied().unwrap_or(0)]
+        } else {
+            self.devices.iter().take(d_eff).copied().collect()
+        };
+        let d_w = devs.len();
+        let mut shards = Vec::with_capacity(d_w);
+        let mut s_eff = 1usize;
+        let base_n = n / d_w;
+        let rem = n % d_w;
         let mut lo = 0usize;
-        for (w, &dev) in self.devices.iter().take(d_eff).enumerate() {
+        for (w, &dev) in devs.iter().enumerate() {
             let nw = base_n + usize::from(w < rem);
             if nw == 0 {
                 continue;
             }
             let hi = lo + nw;
-            let Some(exe) = rt.shard_exec(model, nw, r, bs)? else {
-                self.shards.clear();
-                return Ok(());
+            let exe: Box<dyn ShardStepExec> = if s_req > 1 {
+                match PipelinedExec::build(rt, model, nw, r, bs, s_req)? {
+                    Some(pe) => {
+                        s_eff = s_eff.max(pe.stages());
+                        Box::new(pe)
+                    }
+                    // Backend cannot stage-split. With one device neither
+                    // axis engages — fused fallback; with several, fall
+                    // back to layer-monolithic shard executors.
+                    None if d_w <= 1 => {
+                        self.shards.clear();
+                        return Ok(());
+                    }
+                    None => {
+                        let Some(exe) = rt.shard_exec(model, nw, r, bs)? else {
+                            self.shards.clear();
+                            return Ok(());
+                        };
+                        exe
+                    }
+                }
+            } else {
+                let Some(exe) = rt.shard_exec(model, nw, r, bs)? else {
+                    self.shards.clear();
+                    return Ok(());
+                };
+                exe
             };
             let lora: Vec<HostTensor> = LORA_ORDER
                 .iter()
@@ -250,6 +327,7 @@ impl ShardedState {
         self.pool = Some(ThreadPool::new(shards.len()));
         self.opt = Some(opt);
         self.shards = shards;
+        self.stages_eff = s_eff;
         Ok(())
     }
 
@@ -267,6 +345,18 @@ impl ShardedState {
     /// Effective data-parallel width this state executes with (1 = fused).
     pub fn parallelism(&self) -> usize {
         self.shards.len().max(1)
+    }
+
+    /// Effective pipeline depth the shard executors run with (1 =
+    /// layer-monolithic execution).
+    pub fn stages(&self) -> usize {
+        self.stages_eff
+    }
+
+    /// The requested pipeline depth (before clamping to the layer count
+    /// and backend support) — what a rebuild would ask for again.
+    pub fn stages_requested(&self) -> usize {
+        self.stages
     }
 
     /// The allocation's device ids this state was built for.
@@ -683,6 +773,120 @@ mod tests {
         let moved = run(true);
         for (k, (a, b)) in plain.iter().zip(&moved).enumerate() {
             assert_eq!(a, b, "lora[{k}] diverged across the device retarget");
+        }
+    }
+
+    /// The `d × s` composition: the same pack stepped fused, pure
+    /// data-parallel (d=2), pure stage-pipelined (s=2) and composed
+    /// (d=2 × s=2) produces bitwise-identical trajectories and losses.
+    #[test]
+    fn stage_and_device_axes_compose_bitwise() {
+        let rt = runtime();
+        let mi = rt.manifest.model("nano").unwrap().clone();
+        let info = rt.manifest.train_bucket("nano", 4, 8, 1).unwrap().clone();
+        let exe = rt.executable(&info.name).unwrap();
+        let base = rt.base_weights("nano").unwrap();
+        let seq = mi.seq;
+        let seeds = [3u64, 5, 7, 9];
+        let ranks = [8usize, 4, 8, 6];
+
+        #[allow(clippy::type_complexity)]
+        let run = |devs: usize, stages: usize| -> (Vec<Vec<f32>>, Vec<f32>, Vec<Vec<f32>>) {
+            let inner = TrainState::init_per_adapter(&mi, 4, 8, &seeds, &ranks).unwrap();
+            let devices: Vec<usize> = (0..devs).collect();
+            let mut st =
+                ShardedState::new_with_stages(&rt, "nano", inner, 1, &devices, stages).unwrap();
+            if stages > 1 {
+                assert_eq!(st.stages(), stages.min(mi.n_layers), "pipeline depth engaged");
+            }
+            let rmask = st.rank_mask(&ranks).unwrap();
+            let mut rng = Rng::new(41);
+            let mut losses = vec![];
+            for _ in 0..3 {
+                let tokens: Vec<i32> =
+                    (0..4 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+                let mut targets = tokens.clone();
+                targets.rotate_left(1);
+                let tok = HostTensor::i32(vec![4, 1, seq], tokens).unwrap();
+                let tgt = HostTensor::i32(vec![4, 1, seq], targets).unwrap();
+                let msk = HostTensor::f32(vec![4, 1, seq], vec![1.0; 4 * seq]).unwrap();
+                let per = st
+                    .step(
+                        &exe,
+                        &base,
+                        &tok,
+                        &tgt,
+                        &msk,
+                        &[1.0, 0.5, 1.0, 0.8],
+                        &[2e-3, 1e-3, 2e-3, 1e-3],
+                        &rmask,
+                    )
+                    .unwrap();
+                losses.push(per);
+            }
+            let inner = st.into_inner();
+            let lora = inner.lora.iter().map(|t| t.as_f32().unwrap().to_vec()).collect();
+            let t = inner.t.clone();
+            let mut flat = vec![];
+            for l in losses {
+                flat.extend(l);
+            }
+            (lora, t, vec![flat])
+        };
+
+        let want = run(1, 1);
+        for (d, s) in [(1usize, 2usize), (2, 1), (2, 2), (2, 4), (3, 2)] {
+            let got = run(d, s);
+            assert_eq!(want.1, got.1, "step counters diverged at d={d} s={s}");
+            assert_eq!(want.2, got.2, "losses diverged at d={d} s={s}");
+            for (k, (a, b)) in want.0.iter().zip(&got.0).enumerate() {
+                assert_eq!(a, b, "lora[{k}] diverged at d={d} s={s}");
+            }
+        }
+    }
+
+    /// A mid-run stage retarget (s: 1 -> 2 -> 1) leaves the trajectory
+    /// bitwise unchanged — the pipeline analogue of the device retarget.
+    #[test]
+    fn stage_retarget_mid_run_is_bitwise_invariant() {
+        let rt = runtime();
+        let mi = rt.manifest.model("nano").unwrap().clone();
+        let info = rt.manifest.train_bucket("nano", 2, 8, 1).unwrap().clone();
+        let exe = rt.executable(&info.name).unwrap();
+        let base = rt.base_weights("nano").unwrap();
+        let seq = mi.seq;
+
+        let run = |retarget: bool| -> Vec<Vec<f32>> {
+            let inner = TrainState::init_per_adapter(&mi, 2, 8, &[5, 9], &[8, 4]).unwrap();
+            let mut st = ShardedState::new(&rt, "nano", inner, 1, &[0]).unwrap();
+            let rmask = st.rank_mask(&[8, 4]).unwrap();
+            let mut rng = Rng::new(13);
+            for step in 0..4 {
+                if retarget && step == 2 {
+                    st.set_stages(&rt, "nano", 2).unwrap();
+                    assert_eq!(st.stages(), 2);
+                    assert_eq!(st.parallelism(), 1, "pipelining leaves the d axis alone");
+                }
+                if retarget && step == 3 {
+                    st.set_stages(&rt, "nano", 1).unwrap();
+                    assert_eq!(st.stages(), 1);
+                }
+                let tokens: Vec<i32> =
+                    (0..2 * seq).map(|_| rng.below(mi.vocab as u64) as i32).collect();
+                let mut targets = tokens.clone();
+                targets.rotate_left(1);
+                let tok = HostTensor::i32(vec![2, 1, seq], tokens).unwrap();
+                let tgt = HostTensor::i32(vec![2, 1, seq], targets).unwrap();
+                let msk = HostTensor::f32(vec![2, 1, seq], vec![1.0; 2 * seq]).unwrap();
+                st.step(&exe, &base, &tok, &tgt, &msk, &[1.0, 0.5], &[2e-3, 1e-3], &rmask)
+                    .unwrap();
+            }
+            st.into_inner().lora.iter().map(|t| t.as_f32().unwrap().to_vec()).collect()
+        };
+        let plain = run(false);
+        let moved = run(true);
+        for (k, (a, b)) in plain.iter().zip(&moved).enumerate() {
+            assert_eq!(a, b, "lora[{k}] diverged across the stage retarget");
         }
     }
 }

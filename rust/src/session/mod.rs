@@ -40,6 +40,14 @@
 //! pack can grow its shard set onto freed devices (`DeviceRetarget`) —
 //! both gated on the live-calibrated data-parallel efficiency fit
 //! (`CalibUpdated::dp_fit`) versus the measured device-retarget cost.
+//!
+//! **Stage pipelining is a second parallelism axis** (DESIGN.md §15):
+//! jobs execute at a planner-chosen (or `PLORA_STAGES`-defaulted) depth
+//! `s` through the driver's `PipelinedState`, bitwise identically at any
+//! depth, and boundary offers may *retarget the depth* of a running pack
+//! (`StageRetarget`) when the modeled pipeline-utilization saving beats
+//! the measured pipeline-rebuild cost. Stages are workers on the job's
+//! existing allocation, so deepening never takes devices from the queue.
 
 use std::cmp::Reverse;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -59,7 +67,7 @@ use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
 use crate::train::{
     run_pack_phased, AdapterReport, BoundaryOffer, DeviceOffer, ElasticCtl, JobReport, Joiner,
-    MemberResume, PackPhaseEvent, TrainOptions,
+    MemberResume, PackPhaseEvent, StageOffer, TrainOptions,
 };
 
 /// How the dispatcher orders the job queue (and when it preempts).
@@ -98,6 +106,10 @@ pub struct JobSpec {
     pub adapters: Vec<AdapterSpec>,
     /// Parallelism degree `d_j` (devices held for the job's duration).
     pub d: usize,
+    /// Stage-pipeline depth `s_j` (0 = inherit the `PLORA_STAGES`
+    /// default). Depth-invariant trajectories: `s` only moves the
+    /// timeline, never the digest.
+    pub s: usize,
     pub mode: ExecMode,
     /// Queue priority (higher runs first under non-FIFO policies).
     pub priority: i32,
@@ -105,7 +117,7 @@ pub struct JobSpec {
 
 impl JobSpec {
     pub fn new(adapters: Vec<AdapterSpec>) -> JobSpec {
-        JobSpec { adapters, d: 1, mode: ExecMode::Packed, priority: 0 }
+        JobSpec { adapters, d: 1, s: 0, mode: ExecMode::Packed, priority: 0 }
     }
 
     pub fn with_priority(mut self, priority: i32) -> JobSpec {
@@ -157,6 +169,10 @@ pub enum Event {
     /// shard set onto freed devices); the trajectory is unchanged — only
     /// the execution layout moved.
     DeviceRetarget { job: usize, from: usize, to: usize, at: f64 },
+    /// A running pack retargeted its stage-pipeline depth at a boundary
+    /// (rebuilt its per-stage worker set); like `DeviceRetarget` the
+    /// trajectory is unchanged — only the execution layout moved.
+    StageRetarget { job: usize, from: usize, to: usize, at: f64 },
     JobFinished { job: usize, adapters: usize, wall: f64, at: f64 },
     /// The job errored; its devices were returned to the pool and the
     /// error is re-raised by the next `drain`.
@@ -186,6 +202,7 @@ impl Event {
             | Event::Rebucketed { at, .. }
             | Event::Preempted { at, .. }
             | Event::DeviceRetarget { at, .. }
+            | Event::StageRetarget { at, .. }
             | Event::JobFinished { at, .. }
             | Event::JobFailed { at, .. }
             | Event::CalibUpdated { at, .. } => *at,
@@ -225,6 +242,8 @@ pub struct SessionReport {
     pub dp_fit: Option<(f64, f64)>,
     /// Running mean of measured device-retarget wall times (seconds).
     pub device_switch_cost: f64,
+    /// Running mean of measured stage-retarget wall times (seconds).
+    pub stage_switch_cost: f64,
     /// The full event log up to this drain.
     pub events: Vec<Event>,
 }
@@ -252,6 +271,11 @@ impl SessionReport {
     /// Number of `DeviceRetarget` events in the log.
     pub fn device_retargets(&self) -> usize {
         self.events.iter().filter(|e| matches!(e, Event::DeviceRetarget { .. })).count()
+    }
+
+    /// Number of `StageRetarget` events in the log.
+    pub fn stage_retargets(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, Event::StageRetarget { .. })).count()
     }
 
     /// Padded rows summed over all executed segments — the deterministic
@@ -325,6 +349,11 @@ struct Shared {
     switch_cost: SwitchCost,
     /// Live device-retarget cost estimator (shard-set rebuild walls).
     device_cost: SwitchCost,
+    /// Live stage-retarget cost estimator (pipeline rebuild walls).
+    stage_cost: SwitchCost,
+    /// Speed-tier label of this session's host; when set, step samples
+    /// feed the per-class calibration behind `Calib::dp_fit_for`.
+    device_class: Mutex<Option<String>>,
     /// Live data-parallel efficiency samples (step times per shard count).
     dp_stat: DpStat,
     /// Cost model for device-retarget and cross-`d` admission decisions
@@ -572,6 +601,44 @@ impl Shared {
         grown.lock().unwrap().push(alloc);
         Some(ids)
     }
+
+    /// Boundary stage offer: deepen a running pack's stage pipeline when
+    /// the modeled utilization saving beats the calibrated stage-retarget
+    /// cost. Stages are workers on the job's *existing* allocation, so
+    /// unlike [`Shared::offer_devices`] no devices are acquired and a
+    /// non-empty queue does not block the grow. Depth doubles per offer;
+    /// the cost model clamps past the layer stack, so a maxed-out depth
+    /// shows zero saving and the offer declines.
+    fn offer_stages(&self, job: usize, mode: ExecMode, off: &StageOffer) -> Option<usize> {
+        {
+            let st = self.sched.lock().unwrap();
+            if !st.elastic {
+                return None;
+            }
+            match st.running.iter().find(|r| r.job == job) {
+                Some(r) if !r.flag.load(Ordering::SeqCst) => {}
+                _ => return None,
+            }
+        }
+        let cm0 = self.cm.as_ref()?;
+        if off.phase_steps == 0 {
+            return None;
+        }
+        let mut cm = cm0.clone();
+        if let Some(fit) = self.dp_stat.fit() {
+            cm.calib.dp_fit = Some(fit);
+        }
+        let from = off.s.max(1);
+        let to = from * 2;
+        let t_cur = cm.bucket_step_time_ds(off.bucket, off.d, from, mode);
+        let t_new = cm.bucket_step_time_ds(off.bucket, off.d, to, mode);
+        let saving = off.phase_steps as f64 * (t_cur - t_new);
+        let cost = self.stage_cost.estimate().max(cm.calib.stage_switch_cost);
+        if saving <= cost {
+            return None;
+        }
+        Some(to)
+    }
 }
 
 /// Two checkpoint-pool settings are admission-compatible when both are
@@ -701,6 +768,8 @@ impl Session {
             sched_cv: Condvar::new(),
             switch_cost: SwitchCost::new(0.0),
             device_cost: SwitchCost::new(0.0),
+            stage_cost: SwitchCost::new(0.0),
+            device_class: Mutex::new(None),
             dp_stat: DpStat::new(),
             cm,
             buckets,
@@ -766,6 +835,24 @@ impl Session {
         self.shared.device_cost.estimate()
     }
 
+    /// Running mean of measured stage-retarget wall times so far.
+    pub fn stage_switch_cost(&self) -> f64 {
+        self.shared.stage_cost.estimate()
+    }
+
+    /// Tag this session's host with a device-class (speed tier) label.
+    /// Step samples then also feed the per-class accumulator behind
+    /// `Calib::dp_fit_for` — the measured per-device-class step times
+    /// heterogeneous placement plans on.
+    pub fn set_device_class(&mut self, class: Option<String>) {
+        *self.shared.device_class.lock().unwrap() = class;
+    }
+
+    /// Per-class dp-efficiency fits measured so far (`class → (a, b)`).
+    pub fn class_fits(&self) -> std::collections::BTreeMap<String, (f64, f64)> {
+        self.shared.dp_stat.class_fits()
+    }
+
     /// Subscribe to the live event stream. Events emitted after this call
     /// are delivered to the returned receiver (in addition to the log).
     pub fn subscribe(&mut self) -> mpsc::Receiver<Event> {
@@ -804,6 +891,7 @@ impl Session {
             id: self.next_job_id,
             pack: Pack::new(configs),
             d: spec.d,
+            s: spec.s,
             mode: spec.mode,
         };
         self.next_job_id += 1;
@@ -921,6 +1009,7 @@ impl Session {
             switch_cost: self.shared.switch_cost.estimate(),
             dp_fit: self.shared.dp_stat.fit(),
             device_switch_cost: self.shared.device_cost.estimate(),
+            stage_switch_cost: self.shared.stage_cost.estimate(),
             events,
         })
     }
@@ -1067,6 +1156,9 @@ fn run_job(
         let mut device_offer = |off: &DeviceOffer| -> Option<Vec<usize>> {
             shared.offer_devices(job_id, host_mode, off, &grown)
         };
+        let mut stage_offer = |off: &StageOffer| -> Option<usize> {
+            shared.offer_stages(job_id, host_mode, off)
+        };
         let mut ctl = ElasticCtl {
             rebucket: p.rebucket,
             switch_cost: Some(shared.switch_cost.clone()),
@@ -1074,7 +1166,11 @@ fn run_job(
             offer: Some(&mut offer),
             devices: Some(&mut device_offer),
             device_cost: Some(shared.device_cost.clone()),
+            stages0: (p.job.s > 0).then_some(p.job.s),
+            stages: Some(&mut stage_offer),
+            stage_cost: Some(shared.stage_cost.clone()),
             dp_stat: Some(shared.dp_stat.clone()),
+            device_class: shared.device_class.lock().unwrap().clone(),
             resume: std::mem::take(&mut p.resume),
         };
         let mut on_ev = |ev: PackPhaseEvent<'_>| match ev {
@@ -1121,6 +1217,14 @@ fn run_job(
             }
             PackPhaseEvent::DeviceRetarget { from, to, .. } => {
                 shared.emit(Event::DeviceRetarget {
+                    job: job_id,
+                    from,
+                    to,
+                    at: shared.now(),
+                });
+            }
+            PackPhaseEvent::StageRetarget { from, to, .. } => {
+                shared.emit(Event::StageRetarget {
                     job: job_id,
                     from,
                     to,
@@ -1247,6 +1351,7 @@ fn run_job(
                     id: job_id,
                     pack: Pack::new(remaining),
                     d: p.job.d,
+                    s: p.job.s,
                     mode: p.job.mode,
                 },
                 priority: p.priority,

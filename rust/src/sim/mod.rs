@@ -46,6 +46,12 @@ pub struct SimOptions {
     /// (`DeviceRetarget`) when the modeled remaining-time saving beats
     /// `Calib::device_switch_cost`. Default off.
     pub grow_devices: bool,
+    /// Boundary stage retargeting: running packs deepen their stage
+    /// pipeline (`StageRetarget`) when the modeled utilization saving
+    /// beats `Calib::stage_switch_cost`. Stages are workers on the job's
+    /// own devices, so unlike `grow_devices` no pool capacity is taken.
+    /// Default off.
+    pub grow_stages: bool,
 }
 
 impl Default for SimOptions {
@@ -56,6 +62,7 @@ impl Default for SimOptions {
             policy: Policy::Fifo,
             elastic: false,
             grow_devices: false,
+            grow_stages: false,
         }
     }
 }
@@ -128,6 +135,8 @@ struct ResumeSim {
     factor: f64,
     /// Per-member remaining steps as of the interrupted phase's start.
     members: Vec<(LoraConfig, usize)>,
+    /// Stage-pipeline depth at preemption (retargets survive the resume).
+    stages: usize,
 }
 
 /// One job currently holding devices.
@@ -151,6 +160,10 @@ struct Run {
     /// elastic admission appends joiners here and the phase plan is
     /// rebuilt from it.
     members: Vec<(LoraConfig, usize)>,
+    /// Current stage-pipeline depth: phase durations are divided by the
+    /// cost model's pipeline speedup at this depth and the executing
+    /// bucket's slot count.
+    stages: usize,
 }
 
 /// The simulator.
@@ -196,6 +209,11 @@ impl Simulator {
         let mut rng = Rng::new(opts.seed);
         let switch_cost = self.cm.calib.bucket_switch_cost;
         let dev_switch = self.cm.calib.device_switch_cost;
+        let stage_switch = self.cm.calib.stage_switch_cost;
+        let layer_cap = self.cm.geom.n_layers.max(1);
+        // Pipeline speedup at depth `s` for a bucket of `n` slots
+        // (microbatch = slot — the driver's deterministic schedule).
+        let spd = |s: usize, n: usize| self.cm.pipeline_speedup(s.min(layer_cap), n.max(1));
         // Per-queue-entry remaining configs: elastic admission drains a
         // queued job's pack before (or instead of) its launch.
         let mut packs: Vec<Vec<LoraConfig>> =
@@ -262,7 +280,7 @@ impl Simulator {
                 let p = pending.remove(idx);
                 let job = &queue[p.qi];
                 let devices: Vec<usize> = free.drain(..job.d).collect();
-                let (phases, next, first_dur, shape, factor, members) = match p.resume {
+                let (phases, next, first_dur, shape, factor, members, stages) = match p.resume {
                     Some(r) => {
                         // Resuming pays the restore side of the switch.
                         (
@@ -272,6 +290,7 @@ impl Simulator {
                             r.shape,
                             r.factor,
                             r.members,
+                            r.stages,
                         )
                     }
                     None => {
@@ -288,13 +307,17 @@ impl Simulator {
                             1.0
                         };
                         let shape = (pk.n(), pk.r_pad(), pk.bs_pad());
-                        let d0 = phases.first().map(|p| p.dur * factor).unwrap_or(0.0);
+                        let stages = job.stages().min(layer_cap);
+                        let d0 = phases
+                            .first()
+                            .map(|p| p.dur * factor / spd(stages, shape.0))
+                            .unwrap_or(0.0);
                         let members: Vec<(LoraConfig, usize)> = pk
                             .configs
                             .iter()
                             .map(|c| (c.clone(), self.budget.steps(c.batch)))
                             .collect();
-                        (phases, 0usize, d0, shape, factor, members)
+                        (phases, 0usize, d0, shape, factor, members, stages)
                     }
                 };
                 stats
@@ -320,6 +343,7 @@ impl Simulator {
                     seg_start: now,
                     busy_start: now,
                     members,
+                    stages,
                 });
             }
 
@@ -389,7 +413,7 @@ impl Simulator {
                                 );
                                 let partial_left = phases
                                     .first()
-                                    .map(|p| frac * p.dur * r.factor)
+                                    .map(|p| frac * p.dur * r.factor / spd(r.stages, r.shape.0))
                                     .unwrap_or(0.0);
                                 ResumeSim {
                                     partial_left,
@@ -398,6 +422,7 @@ impl Simulator {
                                     shape: r.shape,
                                     factor: r.factor,
                                     members: r.members,
+                                    stages: r.stages,
                                 }
                             } else {
                                 ResumeSim {
@@ -407,6 +432,7 @@ impl Simulator {
                                     shape: r.shape,
                                     factor: r.factor,
                                     members: r.members,
+                                    stages: r.stages,
                                 }
                             };
                             pending.push(Pend {
@@ -641,6 +667,31 @@ impl Simulator {
                                 }
                             }
                         }
+                        // Stage retarget: deepen the pipeline when the
+                        // next phase's modeled saving beats the
+                        // stage-switch cost — the session's offer_stages
+                        // gate. Stages are workers on the job's own
+                        // devices, so free devices and the queue are
+                        // irrelevant to the decision.
+                        if opts.grow_stages && r.stages < layer_cap {
+                            let from = r.stages;
+                            let to = (from * 2).min(layer_cap);
+                            let d = r.devices.len();
+                            let steps = r.phases[r.next].steps as f64;
+                            let t_cur = self.cm.bucket_step_time_ds(r.shape, d, from, job.mode);
+                            let t_new = self.cm.bucket_step_time_ds(r.shape, d, to, job.mode);
+                            let saving = steps * (t_cur - t_new) * r.factor;
+                            if to > from && saving > stage_switch {
+                                log.push(Event::StageRetarget {
+                                    job: job.id,
+                                    from,
+                                    to,
+                                    at: now,
+                                });
+                                switch_pay += stage_switch;
+                                r.stages = to;
+                            }
+                        }
                     }
                     if rebuilt {
                         let alive: Vec<(LoraConfig, usize)> =
@@ -663,7 +714,8 @@ impl Simulator {
                         r.next = 0;
                     }
                     if r.next < r.phases.len() {
-                        r.phase_end = now + switch_pay + r.phases[r.next].dur * r.factor;
+                        let dur = r.phases[r.next].dur * r.factor / spd(r.stages, r.shape.0);
+                        r.phase_end = now + switch_pay + dur;
                         false
                     } else {
                         true
@@ -834,6 +886,7 @@ mod tests {
             id: 0,
             pack: Pack::new(vec![cfg(0, 1), cfg(1, 4)]),
             d: 1,
+            s: 0,
             mode: ExecMode::Packed,
         }];
         let res = s.run_queue(&queue, &SimOptions::default());
@@ -847,6 +900,7 @@ mod tests {
                 Event::Rebucketed { .. } => "rebucket",
                 Event::Preempted { .. } => "preempted",
                 Event::DeviceRetarget { .. } => "retarget",
+                Event::StageRetarget { .. } => "stage",
                 Event::JobFinished { .. } => "finished",
                 Event::JobFailed { .. } => "failed",
                 Event::CalibUpdated { .. } => "calib",
@@ -895,12 +949,14 @@ mod tests {
                 id: 0,
                 pack: Pack::new(vec![cfg(0, 1), cfg(1, 4)]),
                 d: 1,
+                s: 0,
                 mode: ExecMode::Packed,
             },
             PlannedJob {
                 id: 1,
                 pack: Pack::new(vec![cfg(2, 4)]),
                 d: 1,
+                s: 0,
                 mode: ExecMode::Packed,
             },
         ];
@@ -955,6 +1011,7 @@ mod tests {
             id: 0,
             pack: Pack::new(vec![cfg(0, 1), cfg(1, 1), cfg(2, 4)]),
             d: 1,
+            s: 0,
             mode: ExecMode::Packed,
         }];
         let plain = s.run_queue(&queue, &SimOptions::default());
@@ -986,6 +1043,94 @@ mod tests {
             .all(|e| !matches!(e, Event::DeviceRetarget { .. })));
     }
 
+    /// Stage pipelining in the sim: a planned depth divides each phase's
+    /// duration by the cost model's pipeline speedup at the executing
+    /// bucket's slot count, so the pipelined run lands exactly on the
+    /// modeled timeline — and strictly beats depth 1.
+    #[test]
+    fn planned_stage_depth_matches_modeled_pipeline_speedup() {
+        let s = sim("qwen2.5-7b");
+        let cfg = |id: usize, bs: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: bs,
+            rank: 16,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        let pack = Pack::new(vec![cfg(0, 1), cfg(1, 1), cfg(2, 1), cfg(3, 4)]);
+        let queue_at = |st: usize| {
+            vec![PlannedJob { id: 0, pack: pack.clone(), d: 1, s: st, mode: ExecMode::Packed }]
+        };
+        let base = s.run_queue(&queue_at(0), &SimOptions::default());
+        let piped = s.run_queue(&queue_at(2), &SimOptions::default());
+        assert!(
+            piped.makespan < base.makespan,
+            "s=2 {:.1}s !< s=1 {:.1}s",
+            piped.makespan,
+            base.makespan
+        );
+        // Exact timeline: phase 1 runs at the launch bucket (4 slots),
+        // phase 2 at the survivor bucket (3 slots), one bucket switch in
+        // between — each phase divided by its own pipeline speedup.
+        let ph = s.cm.job_phases(&pack, 1, ExecMode::Packed, &s.budget);
+        assert_eq!(ph.len(), 2);
+        let want = ph[0].dur / s.cm.pipeline_speedup(2, 4)
+            + s.cm.calib.bucket_switch_cost
+            + ph[1].dur / s.cm.pipeline_speedup(2, 3);
+        assert!(
+            (piped.makespan - want).abs() < 1e-9,
+            "piped {:.6}s vs modeled {:.6}s",
+            piped.makespan,
+            want
+        );
+    }
+
+    /// Boundary stage growth: a depth-1 run deepens at its first phase
+    /// boundary (`StageRetarget`) when the modeled saving beats the
+    /// stage-switch cost, and finishes earlier; a prohibitive cost pins
+    /// the depth.
+    #[test]
+    fn grow_stages_retargets_when_saving_beats_switch_cost() {
+        let mut s = sim("qwen2.5-7b");
+        let cfg = |id: usize, bs: usize| LoraConfig {
+            id,
+            lr: 1e-4,
+            batch: bs,
+            rank: 16,
+            alpha_ratio: 1.0,
+            task: "t".into(),
+        };
+        let queue = vec![PlannedJob {
+            id: 0,
+            pack: Pack::new(vec![cfg(0, 1), cfg(1, 1), cfg(2, 1), cfg(3, 4)]),
+            d: 1,
+            s: 0,
+            mode: ExecMode::Packed,
+        }];
+        let plain = s.run_queue(&queue, &SimOptions::default());
+        let grown =
+            s.run_queue(&queue, &SimOptions { grow_stages: true, ..SimOptions::default() });
+        let retargets = grown
+            .log
+            .iter()
+            .filter(|e| matches!(e, Event::StageRetarget { .. }))
+            .count();
+        assert_eq!(retargets, 1, "the pack must deepen at the boundary");
+        assert!(
+            grown.makespan < plain.makespan,
+            "grown {:.1}s !< plain {:.1}s",
+            grown.makespan,
+            plain.makespan
+        );
+        // A prohibitive stage-switch cost pins the pipeline at depth 1.
+        s.cm.calib.stage_switch_cost = f64::MAX;
+        let pinned =
+            s.run_queue(&queue, &SimOptions { grow_stages: true, ..SimOptions::default() });
+        assert!(pinned.log.iter().all(|e| !matches!(e, Event::StageRetarget { .. })));
+        assert!((pinned.makespan - plain.makespan).abs() < 1e-9);
+    }
+
     /// The policy path on a skewed arrival: a high-priority job arriving
     /// mid-run evicts both lower-priority running jobs under
     /// `PreemptLowest` (two `Preempted` events, resumes charged one
@@ -1008,6 +1153,7 @@ mod tests {
             id,
             pack: Pack::new(vec![cfg(c0)]),
             d,
+            s: 0,
             mode: ExecMode::Packed,
         };
         // A and B run on one device each; C (d=2, high priority) arrives

@@ -288,19 +288,25 @@ fn diff_adapter(id: usize, a: &AdapterDigest, b: &AdapterDigest, lines: &mut Vec
 pub struct TraceJob {
     pub id: usize,
     pub d: usize,
+    /// Planned stage-pipeline depth (0 = unplanned, inherit
+    /// `PLORA_STAGES`). Provenance like `d`: trajectories are
+    /// depth-invariant, so replay at any depth still matches.
+    pub s: usize,
     pub mode: ExecMode,
     pub priority: i32,
     pub configs: Vec<LoraConfig>,
 }
 
 /// Device-environment knobs in effect at record time. Provenance only:
-/// trajectories are bitwise invariant to all three, so a replay under a
+/// trajectories are bitwise invariant to all of them, so a replay under a
 /// different environment still matches — but a *timing* comparison should
 /// know what produced the recorded wall clocks.
 #[derive(Debug, Clone)]
 pub struct TraceEnv {
     pub devices: usize,
     pub threads: usize,
+    /// Stage-pipeline depth default (`PLORA_STAGES`) at record time.
+    pub stages: usize,
     pub gemm: String,
 }
 
@@ -316,6 +322,7 @@ impl TraceEnv {
         TraceEnv {
             devices: num("PLORA_DEVICES", 1),
             threads: num("PLORA_THREADS", 1),
+            stages: num("PLORA_STAGES", 1),
             gemm: std::env::var("PLORA_GEMM").unwrap_or_else(|_| "tiled".into()),
         }
     }
@@ -357,6 +364,7 @@ impl Trace {
                 Json::obj(vec![
                     ("devices", Json::num(self.env.devices as f64)),
                     ("threads", Json::num(self.env.threads as f64)),
+                    ("stages", Json::num(self.env.stages as f64)),
                     ("gemm", Json::str(self.env.gemm.as_str())),
                 ]),
             ),
@@ -390,6 +398,8 @@ impl Trace {
             env: TraceEnv {
                 devices: ju(env, "devices")?,
                 threads: ju(env, "threads")?,
+                // Absent in pre-pipeline recordings: default depth 1.
+                stages: ju(env, "stages").unwrap_or(1),
                 gemm: js(env, "gemm")?,
             },
             jobs,
@@ -482,6 +492,7 @@ impl TraceRecorder {
         self.trace.jobs.push(TraceJob {
             id: job.id,
             d: job.d,
+            s: job.s,
             mode: job.mode,
             priority,
             configs: job.pack.configs.clone(),
@@ -534,6 +545,7 @@ pub fn replay(rt: Arc<Runtime>, trace: &Trace) -> Result<ReplayOutcome> {
             id: j.id,
             pack: Pack::new(j.configs.clone()),
             d: j.d,
+            s: j.s,
             mode: j.mode,
         };
         session.submit_planned_at(job, j.priority)?;
@@ -578,6 +590,7 @@ pub fn replay_resume(
             id: j.id,
             pack: Pack::new(j.configs.clone()),
             d: j.d,
+            s: j.s,
             mode: j.mode,
         };
         session.submit_planned_resume(job, j.priority, resume)?;
@@ -609,6 +622,7 @@ pub fn replay_timing(cm: &CostModel, trace: &Trace) -> SimResult {
             id: j.id,
             pack: Pack::new(j.configs.clone()),
             d: j.d,
+            s: j.s,
             mode: j.mode,
         })
         .collect();
@@ -619,6 +633,7 @@ pub fn replay_timing(cm: &CostModel, trace: &Trace) -> SimResult {
         policy: trace.policy,
         elastic: trace.elastic,
         grow_devices: false,
+        grow_stages: false,
     };
     sim.run_queue_prio(&queue, &prios, &opts)
 }
@@ -798,6 +813,7 @@ fn job_to_json(j: &TraceJob) -> Json {
     Json::obj(vec![
         ("id", Json::num(j.id as f64)),
         ("d", Json::num(j.d as f64)),
+        ("s", Json::num(j.s as f64)),
         ("mode", Json::str(mode_name(j.mode))),
         ("priority", Json::num(j.priority as f64)),
         ("adapters", Json::arr(j.configs.iter().map(config_to_json))),
@@ -808,6 +824,8 @@ fn job_from_json(v: &Json) -> Result<TraceJob> {
     Ok(TraceJob {
         id: ju(v, "id")?,
         d: ju(v, "d")?,
+        // Absent in pre-pipeline recordings: unplanned depth.
+        s: ju(v, "s").unwrap_or(0),
         mode: mode_parse(&js(v, "mode")?)?,
         priority: ji(v, "priority")?,
         configs: jarr(v, "adapters")?
@@ -927,6 +945,13 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("to", unum(*to)),
             ("at", jnum(*at)),
         ]),
+        Event::StageRetarget { job, from, to, at } => Json::obj(vec![
+            ("ev", Json::str("stage_retarget")),
+            ("job", unum(*job)),
+            ("from", unum(*from)),
+            ("to", unum(*to)),
+            ("at", jnum(*at)),
+        ]),
         Event::JobFinished { job, adapters, wall, at } => Json::obj(vec![
             ("ev", Json::str("job_finished")),
             ("job", unum(*job)),
@@ -1001,6 +1026,12 @@ pub fn event_from_json(v: &Json) -> Result<Event> {
             to: ju(v, "to")?,
             at: jf(v, "at")?,
         },
+        "stage_retarget" => Event::StageRetarget {
+            job: ju(v, "job")?,
+            from: ju(v, "from")?,
+            to: ju(v, "to")?,
+            at: jf(v, "at")?,
+        },
         "job_finished" => Event::JobFinished {
             job: ju(v, "job")?,
             adapters: ju(v, "adapters")?,
@@ -1070,6 +1101,7 @@ mod tests {
             },
             Event::Preempted { job: 1, adapters: vec![5, 6], at: 2.0 },
             Event::DeviceRetarget { job: 0, from: 1, to: 2, at: 2.1 },
+            Event::StageRetarget { job: 0, from: 1, to: 2, at: 2.2 },
             Event::JobFinished { job: 0, adapters: 2, wall: 3.25, at: 3.75 },
             Event::JobFailed { job: 9, error: "boom \"quoted\"".into(), at: 4.0 },
             Event::CalibUpdated {

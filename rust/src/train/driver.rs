@@ -63,6 +63,20 @@ pub fn devices_default() -> usize {
         .unwrap_or(1)
 }
 
+/// Default pipeline depth: the `PLORA_STAGES` env knob, clamped to ≥ 1.
+/// At 1 (the default) execution is layer-monolithic and every existing
+/// path is unchanged; at `s > 1` each shard streams its rows through `s`
+/// layer-stage workers ([`crate::runtime::pipeline::PipelinedExec`]) —
+/// bitwise identically, which is how the CI pipelined leg
+/// (`PLORA_STAGES=2`) re-checks the golden digests.
+pub fn stages_default() -> usize {
+    std::env::var("PLORA_STAGES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&s| s >= 1)
+        .unwrap_or(1)
+}
+
 /// Options for one live job.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainOptions {
@@ -136,6 +150,11 @@ pub struct JobReport {
     pub d: usize,
     /// Device retargets performed at boundaries.
     pub dretargets: usize,
+    /// Largest effective pipeline depth this run executed with (1 =
+    /// layer-monolithic; grown/shrunk by boundary stage retargets).
+    pub s: usize,
+    /// Pipeline-stage retargets performed at boundaries.
+    pub sretargets: usize,
 }
 
 impl JobReport {
@@ -206,6 +225,22 @@ pub struct DeviceOffer {
     pub phase_steps: usize,
 }
 
+/// What the session's stage-retarget closure sees at a boundary: the
+/// pack's current pipeline depth and execution shape. The closure
+/// answers with a new depth to rebuild the stage workers at (gated
+/// session-side on the modeled `(d, s)` phase saving vs the calibrated
+/// switch cost), or `None` to stay.
+pub struct StageOffer {
+    /// Effective pipeline depth currently executing (1 = monolithic).
+    pub s: usize,
+    /// Devices currently held.
+    pub d: usize,
+    /// Bucket the next phase executes on.
+    pub bucket: (usize, usize, usize),
+    /// Steps until the next adapter-completion boundary.
+    pub phase_steps: usize,
+}
+
 /// The elastic-session control surface of [`run_pack_phased`]. A plain
 /// phased run uses [`ElasticCtl::none`]; the session wires all of it.
 pub struct ElasticCtl<'a> {
@@ -233,10 +268,27 @@ pub struct ElasticCtl<'a> {
     /// Live device-retarget cost calibration: every shard-set rebuild a
     /// retarget triggers `record()`s its measured wall time.
     pub device_cost: Option<SwitchCost>,
+    /// Initial pipeline depth for this job (the planner's chosen `s`);
+    /// `None` falls back to the `PLORA_STAGES` env knob.
+    pub stages0: Option<usize>,
+    /// Stage-retarget hook: called at every boundary; returns a new
+    /// pipeline depth to rebuild the stage workers at, or `None` to
+    /// stay. Like device retargets, only the execution layout changes —
+    /// trajectories stay bitwise identical.
+    #[allow(clippy::type_complexity)]
+    pub stages: Option<&'a mut dyn FnMut(&StageOffer) -> Option<usize>>,
+    /// Live stage-retarget cost calibration: every stage-set rebuild
+    /// `record()`s its measured wall time.
+    pub stage_cost: Option<SwitchCost>,
     /// Live data-parallel efficiency calibration: every executed step
     /// records `(shard count, padded samples, wall seconds)` — the
     /// samples behind `Calib::dp_fit`.
     pub dp_stat: Option<DpStat>,
+    /// Speed tier of the executing host. When set, step samples also
+    /// feed the per-class accumulator behind `Calib::dp_fit_for` — the
+    /// measured per-device-class step times heterogeneous placement
+    /// plans on.
+    pub device_class: Option<String>,
     /// Resume payloads for the *initial* members (continuation of a
     /// preempted job), keyed by adapter id.
     pub resume: Vec<(usize, MemberResume)>,
@@ -252,7 +304,11 @@ impl ElasticCtl<'_> {
             offer: None,
             devices: None,
             device_cost: None,
+            stages0: None,
+            stages: None,
+            stage_cost: None,
             dp_stat: None,
+            device_class: None,
             resume: vec![],
         }
     }
@@ -298,6 +354,16 @@ pub enum PackPhaseEvent<'a> {
         to: usize,
         /// Measured wall cost of the shard-set rebuild — feeds the live
         /// device-switch-cost calibration.
+        switch_secs: f64,
+    },
+    /// The pack's pipeline depth changed at a boundary; the stage
+    /// workers were rebuilt at the new depth (execution layout only —
+    /// the trajectory is bitwise unchanged).
+    StageRetarget {
+        from: usize,
+        to: usize,
+        /// Measured wall cost of the stage-set rebuild — feeds the live
+        /// stage-switch-cost calibration.
         switch_secs: f64,
     },
     /// The job was preempted: the listed config ids were checkpointed
@@ -521,7 +587,9 @@ pub fn run_pack_phased(
     // Build the initial state through the same merge path admission uses:
     // fresh members draw their own (seed, id) init stream, resumed members
     // restore params + moments + their own step counter — then wrap it for
-    // data-parallel execution on the allocation's devices.
+    // data-parallel execution on the allocation's devices, each shard
+    // stage-pipelined at the requested depth (`(d, s)` composition).
+    let mut stages_req = ctl.stages0.unwrap_or_else(stages_default).max(1);
     let mut state = {
         let shell = TrainState::empty(&mi, br);
         let joins: Vec<JoinSource<'_>> = cfgs
@@ -534,7 +602,8 @@ pub fn run_pack_phased(
                 },
             })
             .collect();
-        ShardedState::new(rt, model, shell.repack_merge(&[], &joins, bn, br)?, bbs, &devices)?
+        let merged = shell.repack_merge(&[], &joins, bn, br)?;
+        ShardedState::new_with_stages(rt, model, merged, bbs, &devices, stages_req)?
     };
     resume0.clear();
 
@@ -593,6 +662,8 @@ pub fn run_pack_phased(
     let mut admitted = 0usize;
     let mut dretargets = 0usize;
     let mut d_max = devices.len();
+    let mut sretargets = 0usize;
+    let mut s_max = state.stages();
     let mut preempted: Vec<(LoraConfig, MemberResume)> = vec![];
     let preempt_flag: Option<&AtomicBool> = ctl.preempt.as_deref();
 
@@ -664,7 +735,12 @@ pub fn run_pack_phased(
             let step_secs = s0.elapsed().as_secs_f64();
             profile.push((real_tokens as f64, alive as f64, step_secs));
             if let Some(ds) = &ctl.dp_stat {
-                ds.record(state.parallelism(), (bn * bbs) as f64, step_secs);
+                match &ctl.device_class {
+                    Some(class) => {
+                        ds.record_class(class, state.parallelism(), (bn * bbs) as f64, step_secs)
+                    }
+                    None => ds.record(state.parallelism(), (bn * bbs) as f64, step_secs),
+                }
             }
             for (s, &k) in slots.iter().enumerate() {
                 if !active[s] {
@@ -839,7 +915,15 @@ pub fn run_pack_phased(
                 // (the new bucket's slot count re-partitions across the
                 // held devices) — part of the measured switch window.
                 let merged = state.inner().repack_merge(&keep, &joins, nn, nr)?;
-                state = ShardedState::new(rt, model, merged, nbs, &devices)?;
+                state = ShardedState::new_with_stages(
+                    rt,
+                    model,
+                    merged,
+                    nbs,
+                    &devices,
+                    stages_req,
+                )?;
+                s_max = s_max.max(state.stages());
             }
             let mut switch_secs = sw0.elapsed().as_secs_f64();
             let from = (bn, br, bbs);
@@ -944,6 +1028,42 @@ pub fn run_pack_phased(
                 }
             }
         }
+        // Stage retarget: offer the boundary to the session's pipeline
+        // planner — the pack may deepen (or flatten) its stage workers
+        // for the next phase (gated session-side on the modeled `(d, s)`
+        // phase saving vs the calibrated stage-switch cost). Like a
+        // device retarget, only the execution layout changes. Skipped on
+        // fused-only backends, where a stage split can never engage.
+        if let (true, Some(soff)) = (can_shard, ctl.stages.as_mut()) {
+            let off = StageOffer {
+                s: state.stages(),
+                d: devices.len(),
+                bucket: (bn, br, bbs),
+                phase_steps: next_phase_steps,
+            };
+            if let Some(new_s) = (**soff)(&off) {
+                let new_s = new_s.max(1);
+                if new_s != stages_req {
+                    let from_s = state.stages();
+                    stages_req = new_s;
+                    let sv0 = Instant::now();
+                    state.set_stages(rt, model, stages_req)?;
+                    let sv_secs = sv0.elapsed().as_secs_f64();
+                    if let Some(sc) = &ctl.stage_cost {
+                        sc.record(sv_secs);
+                    }
+                    if state.stages() != from_s {
+                        sretargets += 1;
+                        s_max = s_max.max(state.stages());
+                        on_event(PackPhaseEvent::StageRetarget {
+                            from: from_s,
+                            to: state.stages(),
+                            switch_secs: sv_secs,
+                        });
+                    }
+                }
+            }
+        }
         // Rebuild the per-slot runtime vectors for the next phase, then
         // base-eval any member that has no base metrics yet (freshly
         // admitted joiners; resumed ones carried theirs). No-op at a
@@ -988,6 +1108,8 @@ pub fn run_pack_phased(
             admitted,
             d: d_max,
             dretargets,
+            s: s_max,
+            sretargets,
         },
         state: state.into_inner(),
         preempted,

@@ -8,6 +8,10 @@
 //!    every `(policy, d)` cell must produce the *same* digest — scheduling
 //!    policy and data-parallel degree may move the timeline, never the
 //!    trajectory. A mismatch fails with the digest's field-level diff.
+//!    The cells submit depth-unplanned jobs (`s = 0`), so CI's
+//!    `PLORA_STAGES=2` leg re-runs the whole grid through the stage
+//!    pipeline and re-checks the same pins — depth is trajectory-inert
+//!    too.
 //! 2. **Golden pins (machine-local):** the per-cell fingerprints are
 //!    compared against `tests/golden/nano_trajectories.json` *when that
 //!    file is pinned*. Absolute bit patterns depend on the platform's libm
@@ -77,6 +81,7 @@ fn run_cell(rt: &Arc<Runtime>, seed: u64, policy: Policy, d: usize) -> SessionDi
                     spec("parity", 8, 2, 2e-3).with_id(1),
                 ]),
                 d,
+                s: 0,
                 mode: ExecMode::Packed,
             },
             2,
@@ -86,6 +91,7 @@ fn run_cell(rt: &Arc<Runtime>, seed: u64, policy: Policy, d: usize) -> SessionDi
                 id: 1,
                 pack: Pack::new(vec![spec("copy", 8, 1, 2e-3).with_id(2)]),
                 d,
+                s: 0,
                 mode: ExecMode::Packed,
             },
             1,

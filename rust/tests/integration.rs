@@ -187,6 +187,7 @@ fn engine_fifo_with_single_device() {
             id: i,
             pack: plora::costmodel::Pack::new(vec![cfg(i, "copy", 8, 1)]),
             d: 1,
+            s: 0,
             mode: plora::costmodel::ExecMode::Packed,
         })
         .collect();

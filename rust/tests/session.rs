@@ -143,6 +143,7 @@ fn rebucketing_shrinks_work_and_makespan() {
             spec("copy", 8, 2, 2e-3).with_id(1),
         ]),
         d: 1,
+        s: 0,
         mode: ExecMode::Packed,
     };
     let run = |rebucket: bool| {
@@ -228,6 +229,7 @@ fn dynamic_admission_checkpoints_and_id_hygiene() {
             task: "copy".into(),
         }]),
         d: 1,
+        s: 0,
         mode: ExecMode::Packed,
     };
     assert!(session.submit_planned(bad).is_err());
@@ -352,6 +354,7 @@ fn preempt_and_resume_via_checkpoint_pool_is_bit_identical() {
         id: 0,
         pack: Pack::new(vec![spec("modadd", 8, 1, 2e-3).with_id(0)]),
         d: 1,
+        s: 0,
         mode: ExecMode::Packed,
     };
     session.submit_planned_at(low, 0).unwrap();
@@ -366,6 +369,7 @@ fn preempt_and_resume_via_checkpoint_pool_is_bit_identical() {
         id: 1,
         pack: Pack::new(vec![spec("parity", 8, 1, 2e-3).with_id(1)]),
         d: 1,
+        s: 0,
         mode: ExecMode::Packed,
     };
     session.submit_planned_at(high, 5).unwrap();
@@ -613,6 +617,7 @@ fn preempt_resume_bit_identical_across_device_counts() {
                 spec("copy", 8, 1, 2e-3).with_id(1),
             ]),
             d,
+            s: 0,
             mode: ExecMode::Packed,
         };
         s.submit_planned_at(low, 0).unwrap();
@@ -625,6 +630,7 @@ fn preempt_resume_bit_identical_across_device_counts() {
             id: 1,
             pack: Pack::new(vec![spec("parity", 8, 1, 2e-3).with_id(2)]),
             d,
+            s: 0,
             mode: ExecMode::Packed,
         };
         s.submit_planned_at(high, 5).unwrap();
@@ -675,6 +681,7 @@ fn queued_d2_job_splits_across_two_d1_hosts() {
                 spec(t1, 8, 2, 2e-3).with_id(id0 + 1),
             ]),
             d: 1,
+            s: 0,
             mode: ExecMode::Packed,
         };
         s.submit_planned(host).unwrap();
@@ -686,6 +693,7 @@ fn queued_d2_job_splits_across_two_d1_hosts() {
             spec("needle", 8, 2, 2e-3).with_id(5),
         ]),
         d: 2,
+        s: 0,
         mode: ExecMode::Packed,
     };
     s.submit_planned(queued).unwrap();
@@ -782,6 +790,203 @@ fn running_pack_grows_onto_freed_devices_bit_identically() {
     }
 }
 
+/// Stage-pipeline acceptance (a): **bitwise identity across pipeline
+/// depths**. The same mixed queue — a pack that re-buckets plus a solo
+/// job — runs at s = 1, 2 and 4 on one device; every adapter's full
+/// report must be bitwise identical across all depths (nano has 2
+/// layers, so s = 4 also pins the clamp to the layer stack), and the
+/// s = 1 run equals the solo `run_pack` path exactly.
+#[test]
+fn stage_pipelined_execution_bit_identical_across_depths() {
+    let rt = runtime();
+    let o = opts(32); // bs1 -> 32 steps, bs2 -> 16
+    let run_at = |st: usize| {
+        let mut s = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 1), "nano");
+        s.options = o.clone();
+        s.set_policy(policy_from_env());
+        let mut j0 = JobSpec::new(vec![
+            spec("modadd", 8, 1, 2e-3),
+            spec("parity", 8, 2, 2e-3),
+        ]);
+        j0.s = st;
+        s.submit(j0).unwrap();
+        let mut j1 = JobSpec::new(vec![spec("copy", 8, 1, 2e-3)]);
+        j1.s = st;
+        s.submit(j1).unwrap();
+        s.drain().unwrap()
+    };
+    let pick = |r: &plora::session::SessionReport, id: usize| {
+        r.outcomes
+            .iter()
+            .flat_map(|oc| oc.report.adapters.clone())
+            .find(|a| a.config.id == id)
+            .unwrap()
+    };
+    let base = run_at(1);
+    assert!(base.rebuckets() >= 1, "the mixed pack must re-bucket");
+    // Solo ground truth at depth 1 (exact equality).
+    for (id, task, batch) in [(0usize, "modadd", 1usize), (1, "parity", 2), (2, "copy", 1)] {
+        let solo_cfg =
+            LoraConfig { id, lr: 2e-3, batch, rank: 8, alpha_ratio: 1.0, task: task.into() };
+        let solo = run_pack(&rt, "nano", &[solo_cfg], &o).unwrap();
+        let (s, p) = (&solo.adapters[0], pick(&base, id));
+        assert_eq!(s.final_loss, p.final_loss, "{task}: s=1 final_loss vs solo");
+        assert_eq!(s.eval_loss, p.eval_loss, "{task}: s=1 eval_loss vs solo");
+    }
+    for st in [2usize, 4] {
+        let got = run_at(st);
+        assert_eq!(got.total_adapters(), 3);
+        // nano has 2 layers: both requests run at effective depth 2.
+        for oc in &got.outcomes {
+            assert_eq!(oc.report.s, 2, "effective depth at requested s={st}");
+        }
+        for id in 0..3usize {
+            let (a, b) = (pick(&base, id), pick(&got, id));
+            assert_eq!(a.first_loss, b.first_loss, "adapter {id} first_loss diverged at s={st}");
+            assert_eq!(a.final_loss, b.final_loss, "adapter {id} final_loss diverged at s={st}");
+            assert_eq!(a.eval_loss, b.eval_loss, "adapter {id} eval_loss diverged at s={st}");
+            assert_eq!(a.eval_acc, b.eval_acc, "adapter {id} eval_acc diverged at s={st}");
+            assert_eq!(a.base_loss, b.base_loss, "adapter {id} base_loss diverged at s={st}");
+            assert_eq!(a.curve, b.curve, "adapter {id} loss curve diverged at s={st}");
+            assert_eq!(a.steps, b.steps);
+        }
+    }
+}
+
+/// Stage-pipeline acceptance (b): **uneven stage splits**. `tiny` has 4
+/// layers; s = 3 forces a non-divisible split (2+1+1 layers per stage)
+/// — trajectories must still equal the depth-1 run bitwise.
+#[test]
+fn uneven_stage_split_bit_identical_on_tiny() {
+    let rt = runtime();
+    let o = opts(16);
+    let run_at = |st: usize| {
+        let mut s = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 1), "tiny");
+        s.options = o.clone();
+        let mut j = JobSpec::new(vec![spec("modadd", 8, 1, 2e-3), spec("copy", 8, 1, 2e-3)]);
+        j.s = st;
+        s.submit(j).unwrap();
+        s.drain().unwrap()
+    };
+    let base = run_at(1);
+    let got = run_at(3);
+    assert_eq!(got.outcomes[0].report.s, 3, "tiny must run the full 3-stage split");
+    for (a, b) in base.outcomes[0]
+        .report
+        .adapters
+        .iter()
+        .zip(&got.outcomes[0].report.adapters)
+    {
+        assert_eq!(a.final_loss, b.final_loss, "final_loss diverged on uneven split");
+        assert_eq!(a.eval_loss, b.eval_loss, "eval_loss diverged on uneven split");
+        assert_eq!(a.eval_acc, b.eval_acc, "eval_acc diverged on uneven split");
+        assert_eq!(a.curve, b.curve, "loss curve diverged on uneven split");
+    }
+}
+
+/// Stage-pipeline acceptance (c): **s × d composition**. A 2-adapter
+/// pack at d = 2 with a 2-stage pipeline per shard equals the plain
+/// d = 1, s = 1 run bitwise — the two parallelism axes compose without
+/// touching the math.
+#[test]
+fn stage_and_device_axes_compose_bit_identically() {
+    let rt = runtime();
+    let o = opts(16);
+    let run = |d: usize, st: usize| {
+        let mut s =
+            Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, d), "nano");
+        s.options = o.clone();
+        let job = PlannedJob {
+            id: 0,
+            pack: Pack::new(vec![
+                spec("modadd", 8, 1, 2e-3).with_id(0),
+                spec("parity", 8, 1, 2e-3).with_id(1),
+            ]),
+            d,
+            s: st,
+            mode: ExecMode::Packed,
+        };
+        s.submit_planned(job).unwrap();
+        s.drain().unwrap()
+    };
+    let base = run(1, 1);
+    let composed = run(2, 2);
+    assert_eq!(composed.outcomes[0].report.d, 2);
+    assert_eq!(composed.outcomes[0].report.s, 2);
+    for (a, b) in base.outcomes[0]
+        .report
+        .adapters
+        .iter()
+        .zip(&composed.outcomes[0].report.adapters)
+    {
+        assert_eq!(a.final_loss, b.final_loss, "final_loss diverged under s x d");
+        assert_eq!(a.eval_loss, b.eval_loss, "eval_loss diverged under s x d");
+        assert_eq!(a.eval_acc, b.eval_acc, "eval_acc diverged under s x d");
+        assert_eq!(a.curve, b.curve, "loss curve diverged under s x d");
+    }
+}
+
+/// Stage-pipeline acceptance (d): **preempt-then-resume at depth**. The
+/// pipelined pack is evicted mid-run by a higher-priority job and
+/// resumed; trajectories at s = 2 equal the s = 1 run exactly (the
+/// stage boundary handoff is deterministic, so the wall-clock-dependent
+/// preemption point cannot perturb results).
+#[test]
+fn preempt_resume_bit_identical_across_stage_depths() {
+    let rt = runtime();
+    let o = opts(192); // long enough that the preemption lands mid-run
+    let run_at = |st: usize| {
+        let mut s =
+            Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 1), "nano");
+        s.options = o.clone();
+        s.set_policy(Policy::PreemptLowest);
+        let rx = s.subscribe();
+        let low = PlannedJob {
+            id: 0,
+            pack: Pack::new(vec![
+                spec("modadd", 8, 1, 2e-3).with_id(0),
+                spec("copy", 8, 1, 2e-3).with_id(1),
+            ]),
+            d: 1,
+            s: st,
+            mode: ExecMode::Packed,
+        };
+        s.submit_planned_at(low, 0).unwrap();
+        for ev in rx.iter() {
+            if matches!(ev, Event::JobStarted { job: 0, .. }) {
+                break;
+            }
+        }
+        let high = PlannedJob {
+            id: 1,
+            pack: Pack::new(vec![spec("parity", 8, 1, 2e-3).with_id(2)]),
+            d: 1,
+            s: st,
+            mode: ExecMode::Packed,
+        };
+        s.submit_planned_at(high, 5).unwrap();
+        s.drain().unwrap()
+    };
+    let pick = |r: &plora::session::SessionReport, id: usize| {
+        r.outcomes
+            .iter()
+            .flat_map(|oc| oc.report.adapters.clone())
+            .find(|a| a.config.id == id)
+            .unwrap()
+    };
+    let base = run_at(1);
+    assert!(base.preemptions() >= 1, "the low-priority pack must be evicted");
+    let got = run_at(2);
+    assert!(got.preemptions() >= 1, "preemption must fire at s=2");
+    for id in 0..3usize {
+        let (a, b) = (pick(&base, id), pick(&got, id));
+        assert_eq!(a.final_loss, b.final_loss, "adapter {id} final_loss diverged at s=2");
+        assert_eq!(a.eval_loss, b.eval_loss, "adapter {id} eval_loss diverged at s=2");
+        assert_eq!(a.eval_acc, b.eval_acc, "adapter {id} eval_acc diverged at s=2");
+        assert_eq!(a.steps, b.steps);
+    }
+}
+
 /// The skewed-arrival acceptance scenario (mirrors `benches/session.rs`):
 /// elastic admission + retargeting strictly beats the FIFO/no-rebucket
 /// baseline — on the deterministic padded-row work proxy *and* on the
@@ -801,18 +1006,21 @@ fn elastic_session_beats_fifo_baseline_on_skewed_queue() {
                     spec("parity", 8, 2, 2e-3).with_id(1),
                 ]),
                 d: 1,
+                s: 0,
                 mode: ExecMode::Packed,
             },
             PlannedJob {
                 id: 1,
                 pack: Pack::new(vec![spec("copy", 8, 2, 2e-3).with_id(2)]),
                 d: 1,
+                s: 0,
                 mode: ExecMode::Packed,
             },
             PlannedJob {
                 id: 2,
                 pack: Pack::new(vec![spec("needle", 8, 2, 2e-3).with_id(3)]),
                 d: 1,
+                s: 0,
                 mode: ExecMode::Packed,
             },
         ]

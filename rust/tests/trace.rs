@@ -60,6 +60,7 @@ fn record_cell(rt: &Arc<Runtime>, policy: Policy, d: usize, elastic: bool) -> Tr
                     spec("parity", 8, 2, 2e-3).with_id(1),
                 ]),
                 d,
+                s: 0,
                 mode: ExecMode::Packed,
             },
             2,
@@ -69,6 +70,7 @@ fn record_cell(rt: &Arc<Runtime>, policy: Policy, d: usize, elastic: bool) -> Tr
                 id: 1,
                 pack: Pack::new(vec![spec("copy", 8, 1, 2e-3).with_id(2)]),
                 d: 1,
+                s: 0,
                 mode: ExecMode::Packed,
             },
             1,
@@ -144,6 +146,7 @@ fn preempted_session_records_and_replays_bit_identically() {
         id: 0,
         pack: Pack::new(vec![spec("modadd", 8, 1, 2e-3).with_id(0)]),
         d: 1,
+        s: 0,
         mode: ExecMode::Packed,
     };
     rec.submit(&low, 0);
@@ -159,6 +162,7 @@ fn preempted_session_records_and_replays_bit_identically() {
         id: 1,
         pack: Pack::new(vec![spec("parity", 8, 1, 2e-3).with_id(1)]),
         d: 1,
+        s: 0,
         mode: ExecMode::Packed,
     };
     rec.submit(&high, 5);
@@ -179,6 +183,43 @@ fn preempted_session_records_and_replays_bit_identically() {
     let loaded = Trace::load(&path).unwrap();
     let out = replay(rt.clone(), &loaded).unwrap();
     assert!(out.matches(), "preempt-resume replay diverged:\n{}", out.diff);
+}
+
+/// Stage depth travels with the trace: a recording whose job carries an
+/// explicit pipeline depth round-trips `s` (and the `PLORA_STAGES`
+/// settings snapshot) through save/load, and replays bit-identically —
+/// depth moves the timeline, never the digest.
+#[test]
+fn pipelined_recording_round_trips_and_replays() {
+    let rt = runtime();
+    let mut session = Session::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, 1), "nano");
+    session.options = opts(8);
+    let mut rec = TraceRecorder::for_session(&session);
+    let job = PlannedJob {
+        id: 0,
+        pack: Pack::new(vec![
+            spec("modadd", 8, 1, 2e-3).with_id(0),
+            spec("copy", 8, 1, 2e-3).with_id(1),
+        ]),
+        d: 1,
+        s: 2,
+        mode: ExecMode::Packed,
+    };
+    rec.submit(&job, 0);
+    session.submit_planned(job).unwrap();
+    let report = session.drain().unwrap();
+    let trace = rec.finish(&report);
+    assert_eq!(trace.env.stages, 1, "settings snapshot records the PLORA_STAGES default");
+    assert_eq!(trace.jobs[0].s, 2, "the explicit depth travels with the job");
+
+    let path = std::env::temp_dir().join("plora_trace_pipelined.json");
+    trace.save(&path).unwrap();
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded.jobs[0].s, 2, "depth changed across save/load");
+    assert_eq!(loaded.env.stages, trace.env.stages, "env snapshot changed across save/load");
+    assert_eq!(loaded.digest, trace.digest, "digest changed across save/load");
+    let out = replay(rt.clone(), &loaded).unwrap();
+    assert!(out.matches(), "pipelined replay diverged from recording:\n{}", out.diff);
 }
 
 /// Timing-only replay (`plora replay --sim`): the trace's queue and
