@@ -8,7 +8,9 @@
 //! along: per-`s` stage-pipelined step times on a fixed pack, and the
 //! heterogeneous-fleet placement gate — per-device-class calibration
 //! builds a skewed 1-fast + 3-slow fleet and hetero-aware LPT placement
-//! must beat the identical-device baseline on it.
+//! must beat the identical-device baseline on it. The tuner gate closes
+//! the set: the same LR sweep through `FullSweep` and `Asha`, with the
+//! ASHA makespan ratio and best-per-task quality parity CI enforces.
 //!
 //! Emits `BENCH_session.json` (makespans + throughput + event counts:
 //! rebuckets, admissions, preemptions, the elastic-vs-FIFO makespan ratio
@@ -27,6 +29,7 @@ use plora::config::{pool, LoraConfig};
 use plora::costmodel::{DpStat, ExecMode, Pack, TrainBudget};
 use plora::planner::{hosts_from_fits, place_jobs, JobPlanner, PlannedJob};
 use plora::runtime::Runtime;
+use plora::search::{best_per_task, Asha, FullSweep, SweepOptions, Tuner, TunerOutcome};
 use plora::session::{Policy, Session, SessionReport};
 use plora::train::{run_pack_on, TrainOptions};
 use plora::util::json::Json;
@@ -258,6 +261,52 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let hetero_aware = place_jobs(&durs, &fleet, true);
     let hetero_blind = place_jobs(&durs, &fleet, false);
+
+    // ASHA-vs-full tuner scenario: the same 8-trial LR sweep (two task
+    // groups with one clearly-best LR each) through both tuners on the
+    // same seed and policy. ASHA's eta=2 / 2-rung ladder trains every
+    // trial to 16 samples and only the top half of each group to the
+    // full 32, so its makespan must land strictly below the exhaustive
+    // sweep while the surviving best-per-task results stay bitwise
+    // identical to the full sweep's (CI pins both).
+    let asha_lrs = [2e-3, 1e-5, 2e-5, 5e-5];
+    let asha_cfgs: Vec<LoraConfig> = (0..8usize)
+        .map(|i| {
+            let task = if i < 4 { "modadd" } else { "copy" };
+            LoraConfig {
+                id: i,
+                lr: asha_lrs[i % 4],
+                batch: 1,
+                rank: 8,
+                alpha_ratio: 1.0,
+                task: task.into(),
+            }
+        })
+        .collect();
+    let sweep_opts = SweepOptions {
+        budget: TrainBudget { dataset: 32, epochs: 1 },
+        eval_batches: 2,
+        seed: 11,
+        gpus,
+        policy: Policy::Fifo,
+        elastic: false,
+    };
+    let mut tuner_out: Option<TunerOutcome> = None;
+    let s_full = b.measure("sweep_full", || {
+        tuner_out =
+            Some(FullSweep.run(&rt, "nano", &asha_cfgs, &sweep_opts, None).expect("full sweep"));
+    });
+    let full_out = tuner_out.take().expect("at least one measured run");
+    let asha = Asha { eta: 2, rungs: 2, ckpt_dir: None };
+    let s_asha = b.measure("sweep_asha", || {
+        tuner_out = Some(asha.run(&rt, "nano", &asha_cfgs, &sweep_opts, None).expect("asha sweep"));
+    });
+    let asha_out = tuner_out.take().expect("at least one measured run");
+    let full_best = best_per_task(&full_out.reports);
+    let asha_best = best_per_task(&asha_out.reports);
+    let parity = full_best.iter().all(|(task, fb)| {
+        asha_best.get(task).map_or(false, |ab| ab.eval_acc.to_bits() == fb.eval_acc.to_bits())
+    });
     b.finish()?;
 
     let rank_units: usize = report
@@ -335,6 +384,21 @@ fn main() -> anyhow::Result<()> {
             "hetero_aware_vs_identical",
             Json::num(hetero_aware.makespan / hetero_blind.makespan.max(1e-9)),
         ),
+        // ASHA tuner gate: early stopping must cut the sweep makespan
+        // without losing the full sweep's best-per-task result.
+        ("sweep_full_makespan_s", Json::num(full_out.session.makespan)),
+        ("sweep_asha_makespan_s", Json::num(asha_out.session.makespan)),
+        ("sweep_full_mean_wall_s", Json::num(s_full.mean)),
+        ("sweep_asha_mean_wall_s", Json::num(s_asha.mean)),
+        (
+            "asha_vs_full_makespan",
+            Json::num(asha_out.session.makespan / full_out.session.makespan.max(1e-9)),
+        ),
+        ("asha_quality_parity", Json::num(if parity { 1.0 } else { 0.0 })),
+        (
+            "asha_rung_trials",
+            Json::arr(asha_out.rungs.iter().map(|r| Json::num(r.trials as f64))),
+        ),
     ]);
     let mut out = String::new();
     rec.write(&mut out);
@@ -388,6 +452,13 @@ fn main() -> anyhow::Result<()> {
         hetero_aware.makespan,
         hetero_blind.makespan,
         hetero_aware.makespan / hetero_blind.makespan.max(1e-9),
+    );
+    println!(
+        "asha tuner: {:.2}s vs full sweep {:.2}s (ratio {:.2}, quality parity {})",
+        asha_out.session.makespan,
+        full_out.session.makespan,
+        asha_out.session.makespan / full_out.session.makespan.max(1e-9),
+        parity,
     );
     println!("wrote {}", path.display());
     Ok(())

@@ -91,6 +91,21 @@ impl Default for SearchSpace {
 }
 
 impl SearchSpace {
+    /// Early-stopping-oriented space: LR-dense, rank-narrow. "Learning
+    /// Rate Matters" (PAPERS.md) shows LR dominates rank for LoRA
+    /// quality, so a successive-halving tuner gets the most signal per
+    /// trial from many LRs at few ranks — most of the grid is
+    /// predictably-bad LRs that rung demotion kills after the first
+    /// budget fraction.
+    pub fn lr_dense() -> SearchSpace {
+        SearchSpace {
+            lrs: vec![1e-4, 3e-4, 5e-4, 1e-3, 2e-3, 3e-3, 5e-3, 8e-3],
+            batches: vec![1, 2],
+            ranks: vec![8],
+            alpha_ratios: vec![1.0],
+        }
+    }
+
     pub fn grid(&self, task: &str) -> Vec<LoraConfig> {
         let mut out = vec![];
         let mut id = 0;

@@ -713,6 +713,20 @@ impl CostModel {
         self.job_phases(pack, d, mode, budget).iter().map(|p| p.dur).sum()
     }
 
+    /// Rung-aware [`CostModel::job_time`]: wall time of a job from
+    /// explicit per-member `(config, remaining steps)` state — what a
+    /// successive-halving tuner's SJF priorities price, where a promoted
+    /// trial only runs the *increment* between its current rung's budget
+    /// and the next one's.
+    pub fn job_time_remaining(
+        &self,
+        members: &[(LoraConfig, usize)],
+        d: usize,
+        mode: ExecMode,
+    ) -> f64 {
+        self.phases_from_remaining(members, d, mode).iter().map(|p| p.dur).sum()
+    }
+
     /// DTM objective (Eq. 18): LoRA rank-units per second of the job.
     pub fn throughput(&self, pack: &Pack, d: usize, mode: ExecMode, budget: &TrainBudget) -> f64 {
         let t = self.job_time(pack, d, mode, budget);

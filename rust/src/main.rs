@@ -23,7 +23,7 @@ use anyhow::{anyhow, bail, Result};
 use plora::cluster::ResourceMonitor;
 use plora::config::{geometry, pool, LoraConfig, SearchSpace};
 use plora::costmodel::{CostModel, TrainBudget};
-use plora::engine::{CheckpointPool, Engine};
+use plora::engine::CheckpointPool;
 use plora::metrics::{fmt_dur, fmt_x, Table};
 use plora::planner::{max_gpu_plan, min_gpu_plan, sequential_plora_plan, JobPlanner};
 use plora::runtime::{HostTensor, Runtime};
@@ -42,10 +42,11 @@ USAGE: plora <subcommand> [flags]
 
   plan     --model <geom> --gpus N [--configs N] [--budget N]
   sim      --model <geom> --gpus N [--a10] [--qlora] [--noise S] [--policy P]
-           [--elastic] [--grow-devices]
+           [--elastic] [--grow-devices] [--tuner full|asha --eta N --rungs N]
   train    --model <tinylm> --task T [--rank R] [--lr X] [--batch B] [--steps N]
   sweep    --model <tinylm> --configs N [--gpus N] [--steps N] [--ckpt DIR]
-           [--record PATH]
+           [--record PATH] [--tuner full|asha --eta N --rungs N]
+           [--policy fifo|priority|preempt] [--elastic]
   serve    --model <tinylm> [--configs N] [--gpus N] [--steps N] [--no-rebucket]
            [--policy fifo|priority|preempt] [--elastic] [--record PATH]
            [--daemon --dir DIR --port P]  durable multi-tenant daemon mode
@@ -183,6 +184,11 @@ fn cmd_sim(args: &Args) -> Result<()> {
             .unwrap_or(Policy::Fifo),
         elastic: args.flag("elastic"),
         grow_devices: args.flag("grow-devices"),
+        tuner: match args.get("tuner") {
+            Some("asha") => Some((args.usize("eta", 2)?, args.usize("rungs", 3)?)),
+            Some("full") | None => None,
+            Some(other) => bail!("unknown tuner '{other}' (full|asha)"),
+        },
     };
 
     let run = |plan: &plora::planner::Plan| {
@@ -220,6 +226,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     t.print();
     println!("\nPLoRA planner AR bound: {:.3}", plora_plan.ar_bound);
+    if let Some((eta, rungs)) = opts.tuner {
+        let asha = sim.run_asha(&configs, &opts)?;
+        println!(
+            "ASHA (eta {eta}, {rungs} rungs): predicted makespan {} — {:.2}x of the full \
+             PLoRA sweep (synchronous-rung upper bound; live eager promotion does better)",
+            fmt_dur(asha.makespan),
+            asha.makespan / plora.makespan,
+        );
+    }
     Ok(())
 }
 
@@ -285,67 +300,87 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let gpus = args.usize("gpus", 4)?;
     let n = args.usize("configs", 8)?;
     let steps = args.usize("steps", 48)?;
+    let tuner_name = args.get_or("tuner", "full");
+    let tuner: Box<dyn search::Tuner> = match tuner_name {
+        "full" => Box::new(search::FullSweep),
+        "asha" => Box::new(search::Asha {
+            eta: args.usize("eta", 2)?,
+            rungs: args.usize("rungs", 3)?,
+            ckpt_dir: args.get("ckpt").map(PathBuf::from),
+        }),
+        other => bail!("unknown tuner '{other}' (full|asha)"),
+    };
 
-    // Plan against the live profile, then execute through the session
-    // (Engine::run is the submit-all + drain shim over it).
+    // Plan against the live profile for a full-sweep makespan prediction
+    // (the tuner replans internally — ASHA per rung).
     let configs = sampled_configs(&rt, &model, n);
+    let opts = search::SweepOptions {
+        budget: TrainBudget { dataset: steps, epochs: 1 },
+        eval_batches: 2,
+        seed: args.usize("seed", 17)? as u64,
+        gpus,
+        policy: args.get("policy").and_then(Policy::parse).unwrap_or(Policy::Fifo),
+        elastic: args.flag("elastic"),
+    };
     let mut planner = JobPlanner::new(search::live_cost_model(&rt, &model)?, gpus);
-    planner.budget = TrainBudget { dataset: steps, epochs: 1 };
+    planner.budget = opts.budget;
     let plan = planner.plan(&configs)?;
     println!(
-        "plan: {} jobs, predicted makespan {} (cost-model time)",
+        "plan: {} jobs, predicted full-sweep makespan {} (cost-model time), tuner {}",
         plan.jobs.len(),
-        fmt_dur(plan.makespan)
+        fmt_dur(plan.makespan),
+        tuner.name(),
     );
 
-    let mut engine = Engine::new(rt.clone(), ResourceMonitor::new(&pool::CPU_SIM, gpus));
-    engine.options.budget = planner.budget;
-    engine.options.eval_batches = 2;
-    engine.options.log_every = 0;
-    if let Some(dir) = args.get("ckpt") {
-        engine.checkpoints = Some(CheckpointPool::new(&PathBuf::from(dir), rt.clone())?);
-    }
-    let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
-    let report = engine.run_session(&model, &queue)?;
-    if let Some(path) = args.get("record") {
-        let mut rec = TraceRecorder::new(
-            &model,
-            gpus,
-            engine.policy,
-            engine.elastic,
-            engine.rebucket,
-            &engine.options,
-        );
-        for job in &queue {
-            rec.submit(job, 0);
-        }
-        rec.finish(&report).save(&PathBuf::from(path))?;
+    // The recorder snapshots the *full* final budget — under ASHA the
+    // session's own options hold the current rung's budget, so the trace
+    // is built here, not from the session.
+    let full_options = TrainOptions {
+        budget: opts.budget,
+        eval_batches: opts.eval_batches,
+        seed: opts.seed,
+        log_every: 0,
+    };
+    let mut rec = args
+        .get("record")
+        .map(|_| TraceRecorder::new(&model, gpus, opts.policy, opts.elastic, true, &full_options));
+    let out = tuner.run(&rt, &model, &configs, &opts, rec.as_mut())?;
+    if let (Some(rec), Some(path)) = (rec.take(), args.get("record")) {
+        rec.finish(&out.session).save(&PathBuf::from(path))?;
         println!("recorded trace -> {path}");
     }
 
+    for r in &out.rungs {
+        println!(
+            "rung {}: dataset {:>4}, {} trial(s), {} promoted",
+            r.rung, r.dataset, r.trials, r.promoted
+        );
+    }
     let mut t = Table::new(
-        &format!("Live sweep — {} configs on {model} ({} jobs)", n, report.outcomes.len()),
-        &["config", "task", "rank", "bs", "lr", "base acc", "eval acc"],
+        &format!("Live sweep — {} configs on {model} ({})", n, tuner.name()),
+        &["config", "task", "rank", "bs", "lr", "steps", "base acc", "eval acc"],
     );
-    for o in &report.outcomes {
-        for a in &o.report.adapters {
-            t.row(vec![
-                a.config.id.to_string(),
-                a.config.task.clone(),
-                a.config.rank.to_string(),
-                a.config.batch.to_string(),
-                format!("{:.0e}", a.config.lr),
-                format!("{:.3}", a.base_acc),
-                format!("{:.3}", a.eval_acc),
-            ]);
-        }
+    for a in &out.reports {
+        t.row(vec![
+            a.config.id.to_string(),
+            a.config.task.clone(),
+            a.config.rank.to_string(),
+            a.config.batch.to_string(),
+            format!("{:.0e}", a.config.lr),
+            a.steps.to_string(),
+            format!("{:.3}", a.base_acc),
+            format!("{:.3}", a.eval_acc),
+        ]);
     }
     t.print();
-    let (a, b, c) = report.calib_fit;
+    for (task, best) in search::best_per_task(&out.reports) {
+        println!("best {task}: config {} at eval acc {:.3}", best.config.id, best.eval_acc);
+    }
+    let (a, b, c) = out.session.calib_fit;
     println!(
         "\nlive makespan {}  adapters {}  calib fit: t = {:.4} + {:.2e}*tokens + {:.2e}*n",
-        fmt_dur(report.makespan),
-        report.total_adapters(),
+        fmt_dur(out.session.makespan),
+        out.session.total_adapters(),
         a,
         b,
         c
@@ -703,6 +738,15 @@ fn render_event(ev: &Event) {
         }
         Event::JobFailed { job, error, .. } => {
             println!("[{at:7.2}s] job {job} FAILED: {error}");
+        }
+        Event::TrialPromoted { rung, adapter, .. } => {
+            println!("[{at:7.2}s] tuner promoted adapter {adapter} out of rung {rung}");
+        }
+        Event::RungDecision { rung, task, survivors, demoted, .. } => {
+            println!(
+                "[{at:7.2}s] rung {rung} ({task}) complete: survivors {survivors:?}, \
+                 demoted {demoted:?}"
+            );
         }
         Event::CalibUpdated { fit: (a, b, c), samples, switch_cost, dp_fit, .. } => {
             let dp = match dp_fit {

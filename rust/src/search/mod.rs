@@ -10,18 +10,20 @@
 //! re-bucketing. The system being evaluated is also the system producing
 //! its own quality study, exactly as PLoRA is used in the paper.
 
+pub mod tuner;
+
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::cluster::ResourceMonitor;
 use crate::config::{geometry, pool, AdapterSpec, LoraConfig};
 use crate::costmodel::{CostModel, TrainBudget};
 use crate::metrics::Table;
-use crate::planner::JobPlanner;
 use crate::runtime::Runtime;
-use crate::session::{Policy, Session};
-use crate::train::{AdapterReport, TrainOptions};
+use crate::session::Policy;
+use crate::train::AdapterReport;
+
+pub use tuner::{parse_tuner, rung_datasets, Asha, FullSweep, RungSummary, Tuner, TunerOutcome};
 
 /// The default LoRA configuration a practitioner would start from
 /// (Unsloth-style defaults — Table 6's middle column). Id-less: bind one
@@ -86,45 +88,16 @@ pub fn live_cost_model(rt: &Runtime, model: &str) -> Result<CostModel> {
 
 /// Run every config through the planner + session (packs, re-bucketing and
 /// all) and return per-config reports in input-id order. Config ids must
-/// be unique within one sweep call.
+/// be unique within one sweep call. This is the exhaustive [`FullSweep`]
+/// tuner; for early-stopping search use [`Asha`] through the [`Tuner`]
+/// trait directly.
 pub fn sweep(
     rt: &Arc<Runtime>,
     model: &str,
     configs: &[LoraConfig],
     opts: &SweepOptions,
 ) -> Result<Vec<AdapterReport>> {
-    let mut planner = JobPlanner::new(live_cost_model(rt, model)?, opts.gpus);
-    planner.budget = opts.budget;
-    let plan = planner.plan(configs)?;
-
-    let monitor = ResourceMonitor::new(&pool::CPU_SIM, opts.gpus);
-    let mut session = Session::new(rt.clone(), monitor, model);
-    session.options = TrainOptions {
-        budget: opts.budget,
-        eval_batches: opts.eval_batches,
-        seed: opts.seed,
-        log_every: 0,
-    };
-    session.set_policy(opts.policy);
-    session.set_elastic(opts.elastic);
-    // Under a priority policy the sweep caller has no priorities to give:
-    // derive shortest-job-first ranks from modeled work (planner-side
-    // priority assignment).
-    let jobs: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
-    let prios = crate::planner::default_priorities(
-        &planner.cm,
-        &opts.budget,
-        &jobs,
-        opts.policy != Policy::Fifo,
-    );
-    for (j, prio) in jobs.into_iter().zip(prios) {
-        session.submit_planned_at(j, prio)?;
-    }
-    let report = session.drain()?;
-    let mut out: Vec<AdapterReport> =
-        report.outcomes.into_iter().flat_map(|o| o.report.adapters).collect();
-    out.sort_by_key(|a| a.config.id);
-    Ok(out)
+    FullSweep.run(rt, model, configs, opts, None).map(|o| o.reports)
 }
 
 /// Best (highest eval accuracy) report per task.

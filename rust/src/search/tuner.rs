@@ -1,0 +1,510 @@
+//! Pluggable **tuners**: search strategies driving the live
+//! [`Session`] (DESIGN.md §16).
+//!
+//! [`FullSweep`] is the paper's workflow — every configuration trains to
+//! its full budget. [`Asha`] layers successive halving on the elastic
+//! session: trials run a geometric ladder of *rung* budgets, and at each
+//! adapter-completion boundary the tuner ranks finished trials by
+//! held-out eval and only the top `1/eta` of each task group continues
+//! into the next rung — resumed bit-exactly from the finish-boundary
+//! checkpoint ([`Session::submit_promoted`]), so a surviving trial's
+//! trajectory is *identical* to its uninterrupted solo run at the full
+//! budget.
+//!
+//! **Determinism is the load-bearing constraint.** Rung decisions depend
+//! only on already-finalized eval bit patterns, ranked with a total order
+//! (eval-accuracy bits descending, eval-loss bits ascending, config id
+//! ascending). Promotion is *dominance-gated*: a trial continues the
+//! moment enough of its group has finished that no outcome of the
+//! still-running trials can push it out of the top `k` — eager like ASHA
+//! (no synchronization barrier on the slowest trial), yet the promoted
+//! *set* equals the synchronous successive-halving set exactly, because
+//! the dominance condition at full information is precisely "ranked in
+//! the top `k`". Timing races move *when* a continuation is submitted,
+//! never *which* trials continue — which is what lets `plora replay`
+//! re-run a recorded ASHA session and demand a bit-identical digest.
+//!
+//! Demotion is the kill mechanism: a trial that finished its rung budget
+//! and ranked out simply gets no continuation, so there is nothing left
+//! to interrupt at decision time — [`Session::cancel`] stays available as
+//! a backstop for externally aborted trials but is never needed on the
+//! rung path, and (unlike cancelling a provisional continuation) a
+//! no-continuation demotion can never race a completion into the digest.
+
+use std::cmp::Reverse;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::ResourceMonitor;
+use crate::config::{pool, LoraConfig};
+use crate::costmodel::{CostModel, ExecMode, Pack, TrainBudget};
+use crate::engine::CheckpointPool;
+use crate::planner::{default_priorities, JobPlanner, PlannedJob};
+use crate::runtime::Runtime;
+use crate::search::{live_cost_model, SweepOptions};
+use crate::session::{Event, Policy, Session, SessionReport};
+use crate::trace::TraceRecorder;
+use crate::train::{AdapterReport, TrainOptions};
+
+/// What any tuner returns: final per-trial reports (latest rung, sorted
+/// by config id), the full session report (timeline, events, makespan),
+/// and per-rung occupancy.
+#[derive(Debug, Clone)]
+pub struct TunerOutcome {
+    /// One report per submitted trial — for a demoted trial, its metrics
+    /// at the rung it stopped at; for a survivor, its full-budget result
+    /// (bit-identical to a solo full-budget run).
+    pub reports: Vec<AdapterReport>,
+    pub session: SessionReport,
+    /// Empty for [`FullSweep`].
+    pub rungs: Vec<RungSummary>,
+}
+
+/// Occupancy of one rung across all task groups.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RungSummary {
+    pub rung: usize,
+    /// Training-dataset budget of this rung.
+    pub dataset: usize,
+    /// Trials that ran this rung.
+    pub trials: usize,
+    /// Trials promoted out of it (0 for the final rung).
+    pub promoted: usize,
+}
+
+/// A search strategy driving one live session over a set of trials.
+pub trait Tuner {
+    fn name(&self) -> &'static str;
+
+    /// Run every trial per this tuner's schedule. Config ids must be
+    /// unique. When `rec` is given, enough provenance is recorded for
+    /// `plora replay` to reproduce the run bit-identically.
+    fn run(
+        &self,
+        rt: &Arc<Runtime>,
+        model: &str,
+        configs: &[LoraConfig],
+        opts: &SweepOptions,
+        rec: Option<&mut TraceRecorder>,
+    ) -> Result<TunerOutcome>;
+}
+
+/// Parse a CLI tuner spelling.
+pub fn parse_tuner(name: &str, eta: usize, rungs: usize) -> Option<Box<dyn Tuner>> {
+    match name.to_ascii_lowercase().as_str() {
+        "full" => Some(Box::new(FullSweep)),
+        "asha" => Some(Box::new(Asha { eta, rungs, ckpt_dir: None })),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FullSweep
+// ---------------------------------------------------------------------------
+
+/// The baseline strategy: plan all trials with [`JobPlanner`] and train
+/// every one to the full budget (the pre-tuner `search::sweep` body).
+pub struct FullSweep;
+
+impl Tuner for FullSweep {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn run(
+        &self,
+        rt: &Arc<Runtime>,
+        model: &str,
+        configs: &[LoraConfig],
+        opts: &SweepOptions,
+        mut rec: Option<&mut TraceRecorder>,
+    ) -> Result<TunerOutcome> {
+        let mut planner = JobPlanner::new(live_cost_model(rt, model)?, opts.gpus);
+        planner.budget = opts.budget;
+        let plan = planner.plan(configs)?;
+
+        let mut session = session_for(rt, model, opts);
+        // Under a priority policy the sweep caller has no priorities to
+        // give: derive shortest-job-first ranks from modeled work.
+        let jobs: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+        let prios = default_priorities(
+            &planner.cm,
+            &opts.budget,
+            &jobs,
+            opts.policy != Policy::Fifo,
+        );
+        for (j, prio) in jobs.into_iter().zip(prios) {
+            if let Some(r) = rec.as_deref_mut() {
+                r.submit(&j, prio);
+            }
+            session.submit_planned_at(j, prio)?;
+        }
+        let report = session.drain()?;
+        let mut reports: Vec<AdapterReport> =
+            report.outcomes.iter().flat_map(|o| o.report.adapters.clone()).collect();
+        reports.sort_by_key(|a| a.config.id);
+        Ok(TunerOutcome { reports, session: report, rungs: vec![] })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Asha
+// ---------------------------------------------------------------------------
+
+/// Successive-halving/ASHA over the elastic session (module docs).
+pub struct Asha {
+    /// Halving factor: each rung keeps the top `1/eta` of a task group
+    /// (at least one trial). Clamped to ≥ 2.
+    pub eta: usize,
+    /// Rung count: rung `k` of `R` trains to `dataset / eta^(R-1-k)`
+    /// samples, so the final rung is exactly the full budget. Clamped
+    /// to ≥ 1 (1 rung = no early stopping).
+    pub rungs: usize,
+    /// Where finish-boundary resume payloads live; `None` uses a
+    /// process-unique temp dir removed afterwards.
+    pub ckpt_dir: Option<PathBuf>,
+}
+
+/// The geometric rung ladder: ascending distinct datasets, final entry
+/// exactly `full`. Rungs whose integer budget collapses onto the next
+/// one are dropped (tiny budgets), so the returned ladder may be shorter
+/// than `rungs`.
+pub fn rung_datasets(full: usize, eta: usize, rungs: usize) -> Vec<usize> {
+    let eta = eta.max(2) as u32;
+    let rungs = rungs.max(1) as u32;
+    let mut ds: Vec<usize> = (0..rungs)
+        .map(|k| (full / (eta as usize).pow(rungs - 1 - k)).max(1))
+        .collect();
+    ds.dedup();
+    ds
+}
+
+/// Total-order ranking key: better trials sort *smaller*. Eval metrics
+/// are non-negative finite f32s in practice, so comparing bit patterns
+/// is comparing values — and stays a total order even for the NaN/inf
+/// corners where f32 comparison would not be.
+type RankKey = (Reverse<u32>, u32, usize);
+
+fn rank_key(id: usize, eval_acc: f32, eval_loss: f32) -> RankKey {
+    (Reverse(eval_acc.to_bits()), eval_loss.to_bits(), id)
+}
+
+/// Per-trial tuner state.
+struct Trial {
+    config: LoraConfig,
+    /// Rung currently running (or finalized, until promoted).
+    rung: usize,
+    /// Ranking key of the finalized result at `rung`.
+    key: Option<RankKey>,
+    /// Latest finished report (highest rung so far).
+    report: Option<AdapterReport>,
+    /// Decided: demoted at a rung, or finished the final rung.
+    done: bool,
+}
+
+/// Monotone suffix for auto-created checkpoint dirs (several ASHA runs
+/// may share one process — benches, tests).
+static ASHA_DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+impl Asha {
+    /// SJF priority from modeled remaining seconds (comparable across
+    /// rungs, unlike per-plan rank numbers): shorter remaining work runs
+    /// first. Zero under FIFO.
+    fn priority(
+        &self,
+        cm: &CostModel,
+        policy: Policy,
+        members: &[(LoraConfig, usize)],
+        d: usize,
+        mode: ExecMode,
+    ) -> i32 {
+        if policy == Policy::Fifo {
+            return 0;
+        }
+        -(cm.job_time_remaining(members, d, mode) * 1000.0) as i32
+    }
+}
+
+impl Tuner for Asha {
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+
+    fn run(
+        &self,
+        rt: &Arc<Runtime>,
+        model: &str,
+        configs: &[LoraConfig],
+        opts: &SweepOptions,
+        mut rec: Option<&mut TraceRecorder>,
+    ) -> Result<TunerOutcome> {
+        let ladder = rung_datasets(opts.budget.dataset, self.eta, self.rungs);
+        let n_rungs = ladder.len();
+        let eta = self.eta.max(2);
+        let budget_for = |r: usize| TrainBudget { dataset: ladder[r], epochs: opts.budget.epochs };
+
+        // Group sizes per rung are static: n_{r+1} = max(1, n_r / eta).
+        // That is what makes promotion dominance-checkable before the
+        // slow trials of a rung finish.
+        let mut group_n: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for c in configs {
+            group_n.entry(c.task.clone()).or_insert_with(|| vec![0; n_rungs])[0] += 1;
+        }
+        for sizes in group_n.values_mut() {
+            for r in 1..n_rungs {
+                sizes[r] = (sizes[r - 1] / eta).max(1);
+            }
+        }
+
+        let (ckpt_dir, auto_dir) = match &self.ckpt_dir {
+            Some(d) => (d.clone(), false),
+            None => {
+                let seq = ASHA_DIR_SEQ.fetch_add(1, Ordering::SeqCst);
+                let d = std::env::temp_dir()
+                    .join(format!("plora-asha-{}-{seq}", std::process::id()));
+                (d, true)
+            }
+        };
+        let ckpt = CheckpointPool::new(&ckpt_dir, rt.clone())?;
+
+        let cm = live_cost_model(rt, model)?;
+        let mut planner = JobPlanner::new(cm.clone(), opts.gpus);
+        planner.budget = budget_for(0);
+        let plan = planner.plan(configs)?;
+
+        let mut session = session_for(rt, model, opts);
+        session.options.budget = budget_for(0);
+        session.checkpoints = Some(ckpt.clone());
+        session.resume_finished = true;
+        let events = session.subscribe();
+        let reports = session.subscribe_reports();
+
+        let mut trials: BTreeMap<usize, Trial> = configs
+            .iter()
+            .map(|c| {
+                (
+                    c.id,
+                    Trial { config: c.clone(), rung: 0, key: None, report: None, done: false },
+                )
+            })
+            .collect();
+        if trials.len() != configs.len() {
+            bail!("asha: duplicate config ids");
+        }
+        let mut next_job_id = 0usize;
+        for pj in plan.jobs.iter().map(|j| j.job.clone()) {
+            let members: Vec<(LoraConfig, usize)> = pj
+                .pack
+                .configs
+                .iter()
+                .map(|c| (c.clone(), budget_for(0).steps(c.batch)))
+                .collect();
+            let prio = self.priority(&cm, opts.policy, &members, pj.d, pj.mode);
+            next_job_id = next_job_id.max(pj.id + 1);
+            if let Some(r) = rec.as_deref_mut() {
+                r.submit(&pj, prio);
+            }
+            session.submit_planned_at(pj, prio)?;
+        }
+        if let Some(r) = rec.as_deref_mut() {
+            r.set_tuner(self.eta, self.rungs);
+        }
+
+        let mut promoted_per_rung = vec![0usize; n_rungs];
+        // Promoted ids per (task, rung) — the survivors a later
+        // `RungDecision` reports (a fast survivor may already sit rungs
+        // ahead by the time its old group completes).
+        let mut promoted_ids: BTreeMap<(String, usize), Vec<usize>> = BTreeMap::new();
+        let mut undecided = trials.len();
+        let mut failed = false;
+        while undecided > 0 && !failed {
+            let rep = match reports.recv_timeout(Duration::from_millis(200)) {
+                Ok((_job, rep)) => Some(rep),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    bail!("asha: session report stream closed")
+                }
+            };
+            while let Ok(ev) = events.try_recv() {
+                if matches!(ev, Event::JobFailed { .. }) {
+                    failed = true;
+                }
+            }
+            let Some(rep) = rep else { continue };
+
+            // Finalize the trial at its current rung.
+            let id = rep.config.id;
+            let (task, rung) = {
+                let t = trials
+                    .get_mut(&id)
+                    .ok_or_else(|| anyhow!("asha: report for unknown trial {id}"))?;
+                t.key = Some(rank_key(id, rep.eval_acc, rep.eval_loss));
+                t.report = Some(rep);
+                if t.rung + 1 == n_rungs {
+                    t.done = true;
+                    undecided -= 1;
+                }
+                (t.config.task.clone(), t.rung)
+            };
+            if rung + 1 == n_rungs {
+                continue;
+            }
+
+            // Dominance-gated eager promotion over the (task, rung)
+            // group: promote every finalized trial that can no longer
+            // rank out of the top k, whatever the still-running trials
+            // score. At full information the condition degenerates to
+            // exact top-k membership, so the promoted set is timing-free.
+            let n_r = group_n[&task][rung];
+            let k = group_n[&task][rung + 1];
+            let finalized: Vec<(usize, RankKey)> = trials
+                .values()
+                .filter(|t| t.config.task == task && t.rung == rung)
+                .filter_map(|t| t.key.map(|key| (t.config.id, key)))
+                .collect();
+            let unfinished = n_r - finalized.len();
+            let mut promote: Vec<usize> = vec![];
+            for &(uid, ukey) in &finalized {
+                if trials[&uid].done {
+                    continue;
+                }
+                let above = finalized.iter().filter(|&&(_, vkey)| vkey < ukey).count();
+                if above + unfinished < k {
+                    promote.push(uid);
+                }
+            }
+            for uid in promote {
+                let t = trials.get_mut(&uid).unwrap();
+                let config = t.config.clone();
+                let steps_done = t.report.as_ref().map(|r| r.steps).unwrap_or(0);
+                promoted_per_rung[rung] += 1;
+                promoted_ids.entry((task.clone(), rung)).or_default().push(uid);
+                session.note(Event::TrialPromoted {
+                    rung,
+                    adapter: uid,
+                    at: session.elapsed(),
+                });
+                let resume = ckpt.load_resume(model, uid)?;
+                let next_budget = budget_for(rung + 1);
+                let remaining =
+                    next_budget.steps(config.batch).saturating_sub(steps_done);
+                let members = vec![(config.clone(), remaining)];
+                let prio = self.priority(&cm, opts.policy, &members, 1, ExecMode::Packed);
+                session.options.budget = next_budget;
+                let pj = PlannedJob {
+                    id: next_job_id,
+                    pack: Pack::new(vec![config]),
+                    d: 1,
+                    s: 0,
+                    mode: ExecMode::Packed,
+                };
+                next_job_id += 1;
+                session.submit_promoted(pj, prio, vec![(uid, resume)])?;
+                let t = trials.get_mut(&uid).unwrap();
+                t.rung = rung + 1;
+                t.key = None;
+            }
+
+            // Group complete at this rung: everyone not promoted is
+            // demoted. Record the decision in the event stream — part of
+            // the trace a replay reproduces.
+            if unfinished == 0 {
+                // Promoted trials cleared their key and moved on; the
+                // trials still keyed at this rung are exactly the ones
+                // ranked out. Report them best-first.
+                let mut ranked: Vec<(usize, RankKey)> = trials
+                    .values()
+                    .filter(|t| t.config.task == task && t.rung == rung)
+                    .filter_map(|t| t.key.map(|key| (t.config.id, key)))
+                    .collect();
+                ranked.sort_by_key(|&(_, key)| key);
+                let mut survivors =
+                    promoted_ids.get(&(task.clone(), rung)).cloned().unwrap_or_default();
+                survivors.sort_unstable();
+                let demoted: Vec<usize> = ranked.iter().map(|&(id, _)| id).collect();
+                for &id in &demoted {
+                    let t = trials.get_mut(&id).unwrap();
+                    if !t.done {
+                        t.done = true;
+                        undecided -= 1;
+                    }
+                }
+                session.note(Event::RungDecision {
+                    rung,
+                    task: task.clone(),
+                    survivors,
+                    demoted,
+                    at: session.elapsed(),
+                });
+            }
+        }
+
+        let report = session.drain()?;
+        if failed {
+            bail!("asha: a job failed but the session drained clean");
+        }
+        if auto_dir {
+            let _ = std::fs::remove_dir_all(&ckpt_dir);
+        }
+        let mut out: Vec<AdapterReport> =
+            trials.into_values().filter_map(|t| t.report).collect();
+        out.sort_by_key(|a| a.config.id);
+        let rungs = (0..n_rungs)
+            .map(|r| RungSummary {
+                rung: r,
+                dataset: ladder[r],
+                trials: group_n.values().map(|sizes| sizes[r]).sum(),
+                promoted: promoted_per_rung[r],
+            })
+            .collect();
+        Ok(TunerOutcome { reports: out, session: report, rungs })
+    }
+}
+
+/// A fresh session on a simulated CPU pool, configured from sweep
+/// options (what both tuners drive).
+fn session_for(rt: &Arc<Runtime>, model: &str, opts: &SweepOptions) -> Session {
+    let monitor = ResourceMonitor::new(&pool::CPU_SIM, opts.gpus);
+    let mut session = Session::new(rt.clone(), monitor, model);
+    session.options = TrainOptions {
+        budget: opts.budget,
+        eval_batches: opts.eval_batches,
+        seed: opts.seed,
+        log_every: 0,
+    };
+    session.set_policy(opts.policy);
+    session.set_elastic(opts.elastic);
+    session
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rung_ladder_is_geometric_and_ends_full() {
+        assert_eq!(rung_datasets(128, 2, 3), vec![32, 64, 128]);
+        assert_eq!(rung_datasets(128, 4, 2), vec![32, 128]);
+        assert_eq!(rung_datasets(128, 2, 1), vec![128]);
+        // Tiny budgets collapse onto later rungs instead of duplicating.
+        assert_eq!(rung_datasets(2, 2, 4), vec![1, 2]);
+        assert_eq!(rung_datasets(1, 2, 3), vec![1]);
+    }
+
+    #[test]
+    fn rank_key_orders_acc_desc_then_loss_asc_then_id() {
+        let best = rank_key(3, 0.9, 0.2);
+        let tied_worse_loss = rank_key(1, 0.9, 0.3);
+        let worse_acc = rank_key(0, 0.8, 0.1);
+        let mut v = vec![worse_acc, tied_worse_loss, best];
+        v.sort();
+        assert_eq!(v, vec![best, tied_worse_loss, worse_acc]);
+        // Full tie: lower id wins deterministically.
+        assert!(rank_key(1, 0.5, 0.5) < rank_key(2, 0.5, 0.5));
+    }
+}

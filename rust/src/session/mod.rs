@@ -177,6 +177,20 @@ pub enum Event {
     /// The job errored; its devices were returned to the pool and the
     /// error is re-raised by the next `drain`.
     JobFailed { job: usize, error: String, at: f64 },
+    /// A tuner promoted a trial into the next rung (injected via
+    /// [`Session::note`]; the session itself never emits this).
+    TrialPromoted { rung: usize, adapter: usize, at: f64 },
+    /// A tuner closed a rung for one task group: `survivors` continue
+    /// into rung `rung + 1`, `demoted` stop at the rung budget. Decisions
+    /// depend only on finalized eval bit patterns under a total order, so
+    /// a replay reproduces them exactly (DESIGN.md §16).
+    RungDecision {
+        rung: usize,
+        task: String,
+        survivors: Vec<usize>,
+        demoted: Vec<usize>,
+        at: f64,
+    },
     /// The live cost-model fit `t = a + b·tokens + c·n` was refreshed from
     /// accumulated step profiles, together with the running mean of the
     /// measured bucket-switch wall times, the data-parallel efficiency
@@ -205,6 +219,8 @@ impl Event {
             | Event::StageRetarget { at, .. }
             | Event::JobFinished { at, .. }
             | Event::JobFailed { at, .. }
+            | Event::TrialPromoted { at, .. }
+            | Event::RungDecision { at, .. }
             | Event::CalibUpdated { at, .. } => *at,
         }
     }
@@ -294,6 +310,9 @@ struct PendingJob {
     priority: i32,
     opts: TrainOptions,
     rebucket: bool,
+    /// Checkpoint a durable [`MemberResume`] at every adapter's *finish*
+    /// boundary too (tuner rung handoffs), not just on preemption.
+    resume_finished: bool,
     checkpoints: Option<CheckpointPool>,
     resume: Vec<(usize, MemberResume)>,
 }
@@ -419,6 +438,7 @@ impl Shared {
         host_job: usize,
         host_opts: &TrainOptions,
         host_rebucket: bool,
+        host_resume_finished: bool,
         host_ckpt: &Option<CheckpointPool>,
         host_mode: ExecMode,
         bo: &BoundaryOffer<'_>,
@@ -451,6 +471,7 @@ impl Shared {
                     p.priority <= host_priority
                         && p.opts == *host_opts
                         && p.rebucket == host_rebucket
+                        && p.resume_finished == host_resume_finished
                         && (p.job.d == host_d || self.cross_d_ok(p, host_d, bo))
                         && p.job.mode == host_mode
                         && ckpt_compat(&p.checkpoints, host_ckpt)
@@ -732,6 +753,13 @@ pub struct Session {
     /// adapter-completion boundaries (default on; off reproduces the
     /// pre-session pad-to-job-end engine).
     pub rebucket: bool,
+    /// Also checkpoint a durable [`MemberResume`] when an adapter
+    /// *finishes* its budget (not just on preemption), so a tuner can
+    /// promote it into a larger budget via
+    /// [`Session::submit_promoted`]. Requires an attached
+    /// checkpoint pool; default off. Snapshotted per job at submit time
+    /// (admission compatibility requires equal settings).
+    pub resume_finished: bool,
     next_job_id: usize,
     next_adapter_id: usize,
     used_adapter_ids: std::collections::BTreeSet<usize>,
@@ -784,6 +812,7 @@ impl Session {
             options: TrainOptions::default(),
             checkpoints: None,
             rebucket: true,
+            resume_finished: false,
             next_job_id: 0,
             next_adapter_id: 0,
             used_adapter_ids: std::collections::BTreeSet::new(),
@@ -851,6 +880,21 @@ impl Session {
     /// Per-class dp-efficiency fits measured so far (`class → (a, b)`).
     pub fn class_fits(&self) -> std::collections::BTreeMap<String, (f64, f64)> {
         self.shared.dp_stat.class_fits()
+    }
+
+    /// Seconds since the session started — the timestamp scale of every
+    /// [`Event`] (what callers stamp injected [`Session::note`] events
+    /// with).
+    pub fn elapsed(&self) -> f64 {
+        self.shared.now()
+    }
+
+    /// Inject an event into the session's log and live stream. The hook
+    /// tuners use to make their rung decisions part of the recorded
+    /// provenance ([`Event::RungDecision`], [`Event::TrialPromoted`]) —
+    /// the session itself never emits those variants.
+    pub fn note(&self, ev: Event) {
+        self.shared.emit(ev);
     }
 
     /// Subscribe to the live event stream. Events emitted after this call
@@ -946,6 +990,46 @@ impl Session {
         self.enqueue_resume(job, priority, resume)
     }
 
+    /// Submit a tuner *promotion*: a job whose members continue adapters
+    /// this session already ran (a finished rung's trials resuming into a
+    /// larger budget), so — unlike [`Session::submit_planned_resume`] —
+    /// already-used adapter ids are expected rather than rejected. Every
+    /// member must carry a resume payload: that is what makes the reuse
+    /// a continuation of the same trial instead of a conflicting new
+    /// adapter. Job ids must still be fresh (provenance stays unambiguous
+    /// per executed segment).
+    pub fn submit_promoted(
+        &mut self,
+        job: PlannedJob,
+        priority: i32,
+        resume: Vec<(usize, MemberResume)>,
+    ) -> Result<JobHandle> {
+        if job.pack.n() == 0 {
+            bail!("submit: empty pack in job {}", job.id);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &job.pack.configs {
+            if c.id == usize::MAX {
+                bail!("submit: sentinel adapter id in job {} (task '{}')", job.id, c.task);
+            }
+            if !seen.insert(c.id) {
+                bail!("submit: adapter id {} duplicated in job {}", c.id, job.id);
+            }
+            if !resume.iter().any(|(id, _)| *id == c.id) {
+                bail!(
+                    "submit: promoted adapter {} in job {} has no resume payload",
+                    c.id,
+                    job.id
+                );
+            }
+        }
+        if job.id < self.next_job_id {
+            bail!("submit: job id {} already used in this session", job.id);
+        }
+        self.next_job_id = job.id + 1;
+        self.enqueue_resume(job, priority, resume)
+    }
+
     fn enqueue(&mut self, job: PlannedJob, priority: i32) -> Result<JobHandle> {
         self.enqueue_resume(job, priority, vec![])
     }
@@ -969,6 +1053,7 @@ impl Session {
             priority,
             opts: self.options.clone(),
             rebucket: self.rebucket,
+            resume_finished: self.resume_finished,
             checkpoints: self.checkpoints.clone(),
             resume,
         };
@@ -1149,9 +1234,18 @@ fn run_job(
         let checkpoints = p.checkpoints.clone();
         let opts = p.opts.clone();
         let rebucket = p.rebucket;
+        let resume_finished = p.resume_finished;
         let host_mode = p.job.mode;
         let mut offer = |bo: &BoundaryOffer<'_>| -> Vec<Joiner> {
-            shared.offer_joiners(job_id, &opts, rebucket, &checkpoints, host_mode, bo)
+            shared.offer_joiners(
+                job_id,
+                &opts,
+                rebucket,
+                resume_finished,
+                &checkpoints,
+                host_mode,
+                bo,
+            )
         };
         let mut device_offer = |off: &DeviceOffer| -> Option<Vec<usize>> {
             shared.offer_devices(job_id, host_mode, off, &grown)
@@ -1182,6 +1276,25 @@ fn run_job(
                         .and_then(|_| ckpt.save_adapter(&shared.model, job_id, report));
                     if let Err(e) = saved {
                         ckpt_err.get_or_insert(e);
+                    }
+                    // Rung handoff: a finished adapter leaves a durable
+                    // resume payload so a tuner can promote it into a
+                    // larger budget exactly where it stopped.
+                    if p.resume_finished {
+                        let saved = state
+                            .extract_member(slot, c.rank)
+                            .map(|member| MemberResume {
+                                state: member,
+                                steps_done: report.steps,
+                                first_loss: report.first_loss,
+                                base_loss: report.base_loss,
+                                base_acc: report.base_acc,
+                                curve: report.curve.clone(),
+                            })
+                            .and_then(|r| ckpt.save_resume(&shared.model, c.id, &r));
+                        if let Err(e) = saved {
+                            ckpt_err.get_or_insert(e);
+                        }
                     }
                 }
                 shared.emit(Event::AdapterFinished {
@@ -1357,6 +1470,7 @@ fn run_job(
                 priority: p.priority,
                 opts: p.opts,
                 rebucket: p.rebucket,
+                resume_finished: p.resume_finished,
                 checkpoints: p.checkpoints,
                 resume,
             };

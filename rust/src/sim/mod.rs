@@ -23,9 +23,12 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::Result;
+
 use crate::config::LoraConfig;
 use crate::costmodel::{CostModel, JobPhase, Pack, TrainBudget};
-use crate::planner::PlannedJob;
+use crate::planner::{JobPlanner, PlannedJob};
+use crate::search::rung_datasets;
 use crate::session::{Event, Policy};
 use crate::util::rng::Rng;
 
@@ -52,6 +55,10 @@ pub struct SimOptions {
     /// own devices, so unlike `grow_devices` no pool capacity is taken.
     /// Default off.
     pub grow_stages: bool,
+    /// Early-stopping tuner `(eta, rungs)` modeled by
+    /// [`Simulator::run_asha`] — predicts the ASHA makespan win before a
+    /// live `plora sweep --tuner asha` pays for it. `None` = full sweep.
+    pub tuner: Option<(usize, usize)>,
 }
 
 impl Default for SimOptions {
@@ -63,6 +70,7 @@ impl Default for SimOptions {
             elastic: false,
             grow_devices: false,
             grow_stages: false,
+            tuner: None,
         }
     }
 }
@@ -792,6 +800,75 @@ impl Simulator {
         let makespan = jobs.iter().map(|j| j.end).fold(0.0, f64::max);
         SimResult { jobs, makespan, device_busy: busy, events, log }
     }
+
+    /// Structural ASHA makespan model (`plora sim --tuner asha`,
+    /// `opts.tuner = (eta, rungs)`): rung `k` keeps the first
+    /// `max(1, n/eta)` trials per task — the sim cannot know quality, and
+    /// the makespan depends only on the survivor *count* — each paying
+    /// only the incremental steps from the previous rung's dataset, with
+    /// each rung planned and simulated as its own queue on the full pool.
+    ///
+    /// Rungs execute synchronously here (rung `k+1` starts when rung
+    /// `k`'s last job finishes); the live tuner promotes eagerly at
+    /// adapter boundaries, so this is a conservative (upper) estimate of
+    /// the ASHA makespan. Per-rung sub-logs are not carried over — the
+    /// returned log holds one [`Event::RungDecision`] per task per
+    /// non-final rung, timestamped at the rung boundary.
+    pub fn run_asha(&self, configs: &[LoraConfig], opts: &SimOptions) -> Result<SimResult> {
+        let (eta, rungs) = opts.tuner.unwrap_or((2, 3));
+        let ladder = rung_datasets(self.budget.dataset, eta, rungs.max(1));
+        let mut groups: BTreeMap<&str, Vec<&LoraConfig>> = BTreeMap::new();
+        for c in configs {
+            groups.entry(c.task.as_str()).or_default().push(c);
+        }
+        let mut counts: BTreeMap<&str, usize> =
+            groups.iter().map(|(&t, g)| (t, g.len())).collect();
+        let mut jobs: Vec<SimJob> = vec![];
+        let mut busy = vec![0.0f64; self.gpus];
+        let mut events = 0usize;
+        let mut log: Vec<Event> = vec![];
+        let mut offset = 0.0f64;
+        let mut prev_dataset = 0usize;
+        for (k, &dk) in ladder.iter().enumerate() {
+            let rung_cfgs: Vec<LoraConfig> = groups
+                .iter()
+                .flat_map(|(t, g)| g.iter().take(counts[t]).map(|&c| c.clone()))
+                .collect();
+            let inc = TrainBudget { dataset: dk - prev_dataset, epochs: self.budget.epochs };
+            let mut planner = JobPlanner::new(self.cm.clone(), self.gpus);
+            planner.budget = inc;
+            let plan = planner.plan(&rung_cfgs)?;
+            let queue: Vec<PlannedJob> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+            let sub = Simulator { cm: self.cm.clone(), budget: inc, gpus: self.gpus };
+            let res = sub.run_queue(&queue, &SimOptions { tuner: None, ..opts.clone() });
+            for mut j in res.jobs {
+                j.start += offset;
+                j.end += offset;
+                jobs.push(j);
+            }
+            for (b, add) in busy.iter_mut().zip(&res.device_busy) {
+                *b += add;
+            }
+            events += res.events;
+            offset += res.makespan;
+            prev_dataset = dk;
+            if k + 1 < ladder.len() {
+                for (&t, n) in counts.iter_mut() {
+                    let keep = (*n / eta).max(1);
+                    let g = &groups[t];
+                    log.push(Event::RungDecision {
+                        rung: k,
+                        task: t.to_string(),
+                        survivors: g.iter().take(keep).map(|c| c.id).collect(),
+                        demoted: g.iter().take(*n).skip(keep).map(|c| c.id).collect(),
+                        at: offset,
+                    });
+                    *n = keep;
+                }
+            }
+        }
+        Ok(SimResult { jobs, makespan: offset, device_busy: busy, events, log })
+    }
 }
 
 #[cfg(test)]
@@ -857,6 +934,39 @@ mod tests {
         assert_eq!(noisy.jobs.len(), clean.jobs.len());
     }
 
+    /// The ASHA model predicts a strict makespan win over the full sweep
+    /// of the same grid, and records one rung decision per task per
+    /// non-final rung with survivor counts shrunk by eta.
+    #[test]
+    fn asha_sim_predicts_makespan_win() {
+        let s = sim("qwen2.5-7b");
+        let grid = SearchSpace::default().grid("t");
+        let plan = JobPlanner::new(s.cm.clone(), 8).plan(&grid).unwrap();
+        let queue: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
+        let full = s.run_queue(&queue, &SimOptions::default());
+        let asha = s
+            .run_asha(&grid, &SimOptions { tuner: Some((2, 3)), ..Default::default() })
+            .unwrap();
+        assert!(
+            asha.makespan < full.makespan,
+            "asha {:.0}s !< full {:.0}s",
+            asha.makespan,
+            full.makespan
+        );
+        let decisions: Vec<_> = asha
+            .log
+            .iter()
+            .filter_map(|e| match e {
+                Event::RungDecision { rung, survivors, demoted, .. } => {
+                    Some((*rung, survivors.len(), demoted.len()))
+                }
+                _ => None,
+            })
+            .collect();
+        // 120-trial grid, eta=2: 120 -> 60 -> 30 over 3 rungs.
+        assert_eq!(decisions, vec![(0, 60, 60), (1, 30, 30)]);
+    }
+
     #[test]
     fn utilization_and_throughput_positive() {
         let s = sim("qwen2.5-3b");
@@ -903,6 +1013,8 @@ mod tests {
                 Event::StageRetarget { .. } => "stage",
                 Event::JobFinished { .. } => "finished",
                 Event::JobFailed { .. } => "failed",
+                Event::TrialPromoted { .. } => "promoted",
+                Event::RungDecision { .. } => "rung",
                 Event::CalibUpdated { .. } => "calib",
             })
             .collect();

@@ -43,6 +43,7 @@ use crate::costmodel::{CostModel, ExecMode, Pack, TrainBudget};
 use crate::engine::CheckpointPool;
 use crate::planner::PlannedJob;
 use crate::runtime::Runtime;
+use crate::search::{Asha, SweepOptions, Tuner};
 use crate::session::{Event, Policy, Session, SessionReport};
 use crate::sim::{SimOptions, SimResult, Simulator};
 use crate::train::{AdapterReport, TrainOptions};
@@ -328,6 +329,17 @@ impl TraceEnv {
     }
 }
 
+/// The early-stopping tuner that drove a recorded sweep. Unlike timings
+/// this is a *replay obligation*: an ASHA trace's recorded jobs are the
+/// rung-0 submissions only (promotions are tuner decisions, re-derived
+/// deterministically), so the replayer must re-run the same tuner to
+/// reproduce the digest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TunerSpec {
+    pub eta: usize,
+    pub rungs: usize,
+}
+
 /// A recorded session: settings snapshot, submitted jobs, the ordered
 /// event stream, and the deterministic digest of the final report.
 #[derive(Debug, Clone)]
@@ -339,6 +351,10 @@ pub struct Trace {
     pub policy: Policy,
     pub elastic: bool,
     pub rebucket: bool,
+    /// Early-stopping tuner of the recorded sweep (`None` = plain
+    /// submit-everything session). `options.budget` is the *full* final
+    /// budget; rung budgets are re-derived from it.
+    pub tuner: Option<TunerSpec>,
     pub options: TrainOptions,
     pub env: TraceEnv,
     pub jobs: Vec<TraceJob>,
@@ -358,6 +374,16 @@ impl Trace {
             ("policy", Json::str(policy_name(self.policy))),
             ("elastic", Json::Bool(self.elastic)),
             ("rebucket", Json::Bool(self.rebucket)),
+            (
+                "tuner",
+                match &self.tuner {
+                    Some(t) => Json::obj(vec![
+                        ("eta", Json::num(t.eta as f64)),
+                        ("rungs", Json::num(t.rungs as f64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
             ("options", options_to_json(&self.options)),
             (
                 "env",
@@ -387,6 +413,11 @@ impl Trace {
         let jobs = jarr(v, "jobs")?.iter().map(job_from_json).collect::<Result<Vec<_>>>()?;
         let events =
             jarr(v, "events")?.iter().map(event_from_json).collect::<Result<Vec<_>>>()?;
+        // Absent in pre-tuner recordings: plain session.
+        let tuner = match v.field("tuner") {
+            Ok(Json::Null) | Err(_) => None,
+            Ok(t) => Some(TunerSpec { eta: ju(t, "eta")?, rungs: ju(t, "rungs")? }),
+        };
         Ok(Trace {
             schema,
             model: js(v, "model")?,
@@ -394,6 +425,7 @@ impl Trace {
             policy,
             elastic: jb(v, "elastic")?,
             rebucket: jb(v, "rebucket")?,
+            tuner,
             options: options_from_json(v.field("options")?)?,
             env: TraceEnv {
                 devices: ju(env, "devices")?,
@@ -465,6 +497,7 @@ impl TraceRecorder {
                 policy,
                 elastic,
                 rebucket,
+                tuner: None,
                 options: options.clone(),
                 env: TraceEnv::capture(),
                 jobs: vec![],
@@ -486,6 +519,15 @@ impl TraceRecorder {
             session.rebucket,
             &session.options,
         )
+    }
+
+    /// Tag the trace as driven by an early-stopping tuner. The recorder's
+    /// `options` must then hold the *full* final budget — not a rung's —
+    /// so create it via [`TraceRecorder::new`], not
+    /// [`TraceRecorder::for_session`] (the live session's options hold
+    /// the current rung budget).
+    pub fn set_tuner(&mut self, eta: usize, rungs: usize) {
+        self.trace.tuner = Some(TunerSpec { eta, rungs });
     }
 
     pub fn submit(&mut self, job: &PlannedJob, priority: i32) {
@@ -534,6 +576,9 @@ impl ReplayOutcome {
 /// suite pins as bit-identical. Timings, event interleavings and
 /// admission hosting may differ from the recording; the digest may not.
 pub fn replay(rt: Arc<Runtime>, trace: &Trace) -> Result<ReplayOutcome> {
+    if let Some(t) = trace.tuner {
+        return replay_tuner(rt, trace, t);
+    }
     let monitor = ResourceMonitor::new(&pool::CPU_SIM, trace.gpus);
     let mut session = Session::new(rt, monitor, &trace.model);
     session.options = trace.options.clone();
@@ -556,6 +601,29 @@ pub fn replay(rt: Arc<Runtime>, trace: &Trace) -> Result<ReplayOutcome> {
     Ok(ReplayOutcome { report, digest, recorded: trace.digest.clone(), diff })
 }
 
+/// Replay a tuner-driven sweep: the recorded jobs are the rung-0 trials
+/// only, so re-run the same [`Asha`] tuner over them. Rung decisions
+/// depend only on finalized eval bit patterns ranked with a total order,
+/// so the replay makes the same promotions and the digest obligation is
+/// unchanged — bit-for-bit.
+fn replay_tuner(rt: Arc<Runtime>, trace: &Trace, spec: TunerSpec) -> Result<ReplayOutcome> {
+    let configs: Vec<LoraConfig> =
+        trace.jobs.iter().flat_map(|j| j.configs.iter().cloned()).collect();
+    let opts = SweepOptions {
+        budget: trace.options.budget,
+        eval_batches: trace.options.eval_batches,
+        seed: trace.options.seed,
+        gpus: trace.gpus,
+        policy: trace.policy,
+        elastic: trace.elastic,
+    };
+    let tuner = Asha { eta: spec.eta, rungs: spec.rungs, ckpt_dir: None };
+    let out = tuner.run(&rt, &trace.model, &configs, &opts, None)?;
+    let digest = SessionDigest::of(&out.session);
+    let diff = trace.digest.diff(&digest);
+    Ok(ReplayOutcome { report: out.session, digest, recorded: trace.digest.clone(), diff })
+}
+
 /// [`replay`] starting from checkpoint **midpoints** (`plora replay
 /// --from-checkpoint <dir>`): adapters with a durable resume payload in
 /// `ckpt` — left behind by a preempted or suspended session's drain —
@@ -570,6 +638,12 @@ pub fn replay_resume(
     trace: &Trace,
     ckpt: &CheckpointPool,
 ) -> Result<ReplayOutcome> {
+    if trace.tuner.is_some() {
+        bail!(
+            "tuner-driven traces replay through the tuner itself (`plora replay <path>`); \
+             --from-checkpoint applies to plain sessions only"
+        );
+    }
     let monitor = ResourceMonitor::new(&pool::CPU_SIM, trace.gpus);
     let mut session = Session::new(rt, monitor, &trace.model);
     session.options = trace.options.clone();
@@ -634,6 +708,7 @@ pub fn replay_timing(cm: &CostModel, trace: &Trace) -> SimResult {
         elastic: trace.elastic,
         grow_devices: false,
         grow_stages: false,
+        tuner: trace.tuner.map(|t| (t.eta, t.rungs)),
     };
     sim.run_queue_prio(&queue, &prios, &opts)
 }
@@ -965,6 +1040,20 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("error", Json::str(error.as_str())),
             ("at", jnum(*at)),
         ]),
+        Event::TrialPromoted { rung, adapter, at } => Json::obj(vec![
+            ("ev", Json::str("trial_promoted")),
+            ("rung", unum(*rung)),
+            ("adapter", unum(*adapter)),
+            ("at", jnum(*at)),
+        ]),
+        Event::RungDecision { rung, task, survivors, demoted, at } => Json::obj(vec![
+            ("ev", Json::str("rung_decision")),
+            ("rung", unum(*rung)),
+            ("task", Json::str(task.as_str())),
+            ("survivors", uvec(survivors)),
+            ("demoted", uvec(demoted)),
+            ("at", jnum(*at)),
+        ]),
         Event::CalibUpdated { fit, samples, switch_cost, dp_fit, device_switch_cost, at } => {
             let dp = match dp_fit {
                 Some((a, b)) => Json::arr([jnum(*a), jnum(*b)]),
@@ -1043,6 +1132,18 @@ pub fn event_from_json(v: &Json) -> Result<Event> {
             error: js(v, "error")?,
             at: jf(v, "at")?,
         },
+        "trial_promoted" => Event::TrialPromoted {
+            rung: ju(v, "rung")?,
+            adapter: ju(v, "adapter")?,
+            at: jf(v, "at")?,
+        },
+        "rung_decision" => Event::RungDecision {
+            rung: ju(v, "rung")?,
+            task: js(v, "task")?,
+            survivors: jvec_usize(v, "survivors")?,
+            demoted: jvec_usize(v, "demoted")?,
+            at: jf(v, "at")?,
+        },
         "calib_updated" => {
             let fit = jarr(v, "fit")?;
             if fit.len() != 3 {
@@ -1104,6 +1205,14 @@ mod tests {
             Event::StageRetarget { job: 0, from: 1, to: 2, at: 2.2 },
             Event::JobFinished { job: 0, adapters: 2, wall: 3.25, at: 3.75 },
             Event::JobFailed { job: 9, error: "boom \"quoted\"".into(), at: 4.0 },
+            Event::TrialPromoted { rung: 0, adapter: 3, at: 4.1 },
+            Event::RungDecision {
+                rung: 0,
+                task: "modadd".into(),
+                survivors: vec![3],
+                demoted: vec![5, 6],
+                at: 4.2,
+            },
             Event::CalibUpdated {
                 fit: (0.1, 2e-6, 3e-3),
                 samples: 40,

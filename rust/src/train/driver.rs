@@ -45,9 +45,10 @@ use crate::cluster::Allocation;
 use crate::config::LoraConfig;
 use crate::costmodel::{DpStat, Pack, SwitchCost, TrainBudget};
 use crate::planner::rebalance::retarget_bucket;
+use crate::runtime::manifest::TokenLayout;
 use crate::runtime::state::{JoinSource, MemberState};
 use crate::runtime::{Executable, HostTensor, ModelInfo, Runtime, ShardedState, TrainState};
-use crate::train::tasks::{self, SampleBuf};
+use crate::train::tasks::{self, Sample, SampleBuf};
 use crate::util::rng::Rng;
 
 /// Default device count for standalone (pool-less) runs: the
@@ -1139,20 +1140,31 @@ fn eval_members(
 ) -> Result<(Vec<f32>, Vec<f32>)> {
     let bn = state.inner().n;
     let (seq, vocab) = (mi.seq, mi.vocab);
-    let mut ergs: Vec<Rng> = slots
-        .iter()
-        .map(|&k| Rng::new(stream_seed(opts.seed, configs[k].id, EVAL_SALT)))
-        .collect();
     let mut loss = vec![0.0f32; bn];
     let mut acc = vec![0.0f32; bn];
     let batches = opts.eval_batches.max(1);
+    // Held-out rows come from the process-global stream cache: a tuner
+    // re-ranking trials at every rung pays for generation once per
+    // `(seed, id)` stream, not once per ranking pass.
+    let rows: Vec<Vec<Sample>> = slots
+        .iter()
+        .enumerate()
+        .map(|(s, &k)| {
+            if let Some(m) = only {
+                if !m[s] {
+                    return Ok(vec![]);
+                }
+            }
+            let c = &configs[k];
+            cached_eval_rows(&rt.manifest.tokens, c, opts.seed, seq, vocab, batches * c.batch)
+        })
+        .collect::<Result<_>>()?;
     // One set of batch tensors for the whole eval, refilled per batch.
     // Rows outside the written set (padding / masked-out slots) stay zero.
     let mut tok_t = HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?;
     let mut tgt_t = HostTensor::i32(vec![bn, bbs, seq], vec![0; bn * bbs * seq])?;
     let mut msk_t = HostTensor::f32(vec![bn, bbs, seq], vec![0.0; bn * bbs * seq])?;
-    let mut sbuf = SampleBuf::new();
-    for _ in 0..batches {
+    for bi in 0..batches {
         {
             let tokens = tok_t.as_i32_mut()?;
             let targets = tgt_t.as_i32_mut()?;
@@ -1165,15 +1177,7 @@ fn eval_members(
                 }
                 let c = &configs[k];
                 for b in 0..c.batch {
-                    tasks::gen_into(
-                        &c.task,
-                        &rt.manifest.tokens,
-                        &mut ergs[s],
-                        seq,
-                        vocab,
-                        &mut sbuf,
-                    )?;
-                    let smp = &sbuf.sample;
+                    let smp = &rows[s][bi * c.batch + b];
                     let off = (s * bbs + b) * seq;
                     tokens[off..off + seq].copy_from_slice(&smp.tokens);
                     targets[off..off + seq].copy_from_slice(&smp.targets);
@@ -1193,6 +1197,52 @@ fn eval_members(
         acc[s] /= kf;
     }
     Ok((loss, acc))
+}
+
+/// Everything one adapter's held-out rows depend on. Eval streams are
+/// keyed per adapter id ([`EVAL_SALT`]), never advanced by training, and
+/// consumed front-to-first on every eval — so the i-th row is a pure
+/// function of this key and can be generated once per process.
+type EvalKey = (u64, usize, String, usize, usize, (i32, i32, i32, i32, i32));
+
+/// One adapter's eval stream: the rows generated so far plus the RNG
+/// positioned to extend them (a later eval with more batches appends).
+struct EvalStream {
+    rng: Rng,
+    rows: Vec<Sample>,
+}
+
+static EVAL_CACHE: std::sync::OnceLock<
+    std::sync::Mutex<std::collections::HashMap<EvalKey, EvalStream>>,
+> = std::sync::OnceLock::new();
+
+/// The first `need` rows of an adapter's held-out eval stream, from the
+/// process-global cache. Bit-exact by construction: rows are generated by
+/// the same RNG stream in the same order as direct generation, just
+/// memoized — a successive-halving tuner evaluating every rung boundary
+/// regenerates nothing.
+fn cached_eval_rows(
+    tl: &TokenLayout,
+    c: &LoraConfig,
+    seed: u64,
+    seq: usize,
+    vocab: usize,
+    need: usize,
+) -> Result<Vec<Sample>> {
+    let key: EvalKey =
+        (seed, c.id, c.task.clone(), seq, vocab, (tl.pad, tl.bos, tl.sep, tl.eos, tl.alpha0));
+    let cache = EVAL_CACHE.get_or_init(Default::default);
+    let mut cache = cache.lock().unwrap();
+    let stream = cache.entry(key).or_insert_with(|| EvalStream {
+        rng: Rng::new(stream_seed(seed, c.id, EVAL_SALT)),
+        rows: vec![],
+    });
+    let mut sbuf = SampleBuf::new();
+    while stream.rows.len() < need {
+        tasks::gen_into(&c.task, tl, &mut stream.rng, seq, vocab, &mut sbuf)?;
+        stream.rows.push(sbuf.sample.clone());
+    }
+    Ok(stream.rows[..need].to_vec())
 }
 
 #[cfg(test)]

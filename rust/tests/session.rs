@@ -429,6 +429,66 @@ fn preempt_and_resume_via_checkpoint_pool_is_bit_identical() {
     assert_eq!(session.available(), 1);
 }
 
+/// ASHA tuner acceptance: every rung **survivor's** full-budget result is
+/// bitwise identical to its uninterrupted solo run — the rung stop at the
+/// finish boundary plus the `MemberResume` continuation add nothing to
+/// the trajectory — while demoted trials stop at their rung budget. Runs
+/// under every `PLORA_POLICY` cell: rung decisions are policy-invariant.
+#[test]
+fn asha_rung_survivors_bit_identical_to_solo() {
+    use plora::search::{Asha, SweepOptions, Tuner};
+
+    let rt = runtime();
+    // Two 4-trial task groups over an LR spread with one clear winner
+    // each; dataset 32 with a 2-rung eta=2 ladder puts the cut at 16.
+    let lrs = [2e-3, 1e-5, 2e-5, 5e-5];
+    let configs: Vec<LoraConfig> = (0..8usize)
+        .map(|i| {
+            let task = if i < 4 { "modadd" } else { "copy" };
+            spec(task, 8, 1, lrs[i % 4]).with_id(i)
+        })
+        .collect();
+    let sweep = SweepOptions {
+        budget: TrainBudget { dataset: 32, epochs: 1 },
+        eval_batches: 2,
+        seed: 17,
+        gpus: 2,
+        policy: policy_from_env(),
+        elastic: false,
+    };
+    let tuner = Asha { eta: 2, rungs: 2, ckpt_dir: None };
+    let out = tuner.run(&rt, "nano", &configs, &sweep, None).unwrap();
+    assert_eq!(out.reports.len(), 8, "every trial reports at its last rung");
+    assert_eq!(out.rungs.len(), 2);
+    assert_eq!((out.rungs[0].trials, out.rungs[0].promoted), (8, 4));
+    assert_eq!((out.rungs[1].trials, out.rungs[1].promoted), (4, 0));
+
+    let o = TrainOptions {
+        budget: sweep.budget,
+        eval_batches: sweep.eval_batches,
+        seed: sweep.seed,
+        log_every: 0,
+    };
+    let full_steps = sweep.budget.steps(1);
+    let survivors: Vec<_> = out.reports.iter().filter(|a| a.steps == full_steps).collect();
+    assert_eq!(survivors.len(), 4, "eta=2 keeps half of each 4-trial group");
+    for p in survivors {
+        let solo = run_pack(&rt, "nano", &[p.config.clone()], &o).unwrap();
+        let s = &solo.adapters[0];
+        let what = format!("survivor {} ({})", p.config.id, p.config.task);
+        assert_eq!(s.steps, p.steps, "{what}: steps");
+        assert_eq!(s.first_loss, p.first_loss, "{what}: first_loss not bit-identical");
+        assert_eq!(s.final_loss, p.final_loss, "{what}: final_loss not bit-identical");
+        assert_eq!(s.eval_loss, p.eval_loss, "{what}: eval_loss not bit-identical");
+        assert_eq!(s.eval_acc, p.eval_acc, "{what}: eval_acc not bit-identical");
+        assert_eq!(s.param_hash, p.param_hash, "{what}: weights not bit-identical");
+        assert_eq!(s.curve, p.curve, "{what}: loss curve not bit-identical");
+    }
+    for p in out.reports.iter().filter(|a| a.steps != full_steps) {
+        assert_eq!(p.steps, 16, "demoted trial {} stops at the rung budget", p.config.id);
+    }
+}
+
 /// Tentpole acceptance (c): **property test** — `retarget_bucket` never
 /// picks a move whose modeled phase-time saving is at or below the switch
 /// cost (when staying is feasible), always returns an admitting bucket,

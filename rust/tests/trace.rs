@@ -6,8 +6,9 @@
 //! The property is exercised across the full settings matrix
 //! (`Policy` × job device count × elastic on/off), through an on-disk
 //! save/load round trip each time, plus a preempt-then-resume recording
-//! (the replay resumes in memory, without a checkpoint pool) and a
-//! timing-only replay through the simulator's cost model.
+//! (the replay resumes in memory, without a checkpoint pool), an
+//! ASHA-tuner recording (the replay re-runs the tuner from the rung-0
+//! queue), and a timing-only replay through the simulator's cost model.
 
 use std::sync::Arc;
 
@@ -183,6 +184,69 @@ fn preempted_session_records_and_replays_bit_identically() {
     let loaded = Trace::load(&path).unwrap();
     let out = replay(rt.clone(), &loaded).unwrap();
     assert!(out.matches(), "preempt-resume replay diverged:\n{}", out.diff);
+}
+
+/// An ASHA-driven sweep records through the same trace schema (the
+/// rung-0 queue plus a tuner tag) and **replays bit-identically**: the
+/// replay re-runs the tuner itself, whose rung decisions depend only on
+/// already-finalized eval bit patterns ranked with a total order, so the
+/// digest matches across the on-disk round trip even though the replay
+/// races its own timeline.
+#[test]
+fn asha_recording_replays_bit_identically() {
+    use plora::search::{Asha, SweepOptions, Tuner};
+    use plora::trace::TunerSpec;
+
+    let rt = runtime();
+    let lrs = [2e-3, 1e-5, 2e-5, 5e-5];
+    let configs: Vec<plora::config::LoraConfig> = (0..8usize)
+        .map(|i| {
+            let task = if i < 4 { "modadd" } else { "copy" };
+            spec(task, 8, 1, lrs[i % 4]).with_id(i)
+        })
+        .collect();
+    let sweep = SweepOptions {
+        budget: TrainBudget { dataset: 32, epochs: 1 },
+        eval_batches: 1,
+        seed: 17,
+        gpus: 2,
+        policy: Policy::Fifo,
+        elastic: false,
+    };
+    // The recorder holds the *full* final budget — rung budgets are the
+    // tuner's business, reproduced from the tag at replay.
+    let full = TrainOptions {
+        budget: sweep.budget,
+        eval_batches: sweep.eval_batches,
+        seed: sweep.seed,
+        log_every: 0,
+    };
+    let mut rec = TraceRecorder::new("nano", sweep.gpus, sweep.policy, sweep.elastic, true, &full);
+    let tuner = Asha { eta: 2, rungs: 2, ckpt_dir: None };
+    let out = tuner.run(&rt, "nano", &configs, &sweep, Some(&mut rec)).unwrap();
+    let trace = rec.finish(&out.session);
+    assert_eq!(trace.tuner, Some(TunerSpec { eta: 2, rungs: 2 }));
+    assert_eq!(
+        trace.jobs.iter().map(|j| j.configs.len()).sum::<usize>(),
+        8,
+        "the trace records the rung-0 queue only; continuations are the tuner's job"
+    );
+    assert!(
+        trace.events.iter().any(|e| matches!(e, Event::RungDecision { .. })),
+        "recorded timeline must contain the rung decisions"
+    );
+    assert!(
+        trace.events.iter().any(|e| matches!(e, Event::TrialPromoted { .. })),
+        "recorded timeline must contain the promotions"
+    );
+
+    let path = std::env::temp_dir().join("plora_trace_asha.json");
+    trace.save(&path).unwrap();
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded.tuner, trace.tuner, "tuner tag changed across save/load");
+    assert_eq!(loaded.digest, trace.digest, "digest changed across save/load");
+    let res = replay(rt.clone(), &loaded).unwrap();
+    assert!(res.matches(), "asha replay diverged from recording:\n{}", res.diff);
 }
 
 /// Stage depth travels with the trace: a recording whose job carries an
