@@ -293,8 +293,8 @@ fn main() -> anyhow::Result<()> {
     };
     let mut tuner_out: Option<TunerOutcome> = None;
     let s_full = b.measure("sweep_full", || {
-        tuner_out =
-            Some(FullSweep.run(&rt, "nano", &asha_cfgs, &sweep_opts, None).expect("full sweep"));
+        let full = FullSweep::default();
+        tuner_out = Some(full.run(&rt, "nano", &asha_cfgs, &sweep_opts, None).expect("full sweep"));
     });
     let full_out = tuner_out.take().expect("at least one measured run");
     let asha = Asha { eta: 2, rungs: 2, ckpt_dir: None };

@@ -302,7 +302,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let steps = args.usize("steps", 48)?;
     let tuner_name = args.get_or("tuner", "full");
     let tuner: Box<dyn search::Tuner> = match tuner_name {
-        "full" => Box::new(search::FullSweep),
+        "full" => Box::new(search::FullSweep { ckpt_dir: args.get("ckpt").map(PathBuf::from) }),
         "asha" => Box::new(search::Asha {
             eta: args.usize("eta", 2)?,
             rungs: args.usize("rungs", 3)?,

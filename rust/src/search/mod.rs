@@ -97,7 +97,7 @@ pub fn sweep(
     configs: &[LoraConfig],
     opts: &SweepOptions,
 ) -> Result<Vec<AdapterReport>> {
-    FullSweep.run(rt, model, configs, opts, None).map(|o| o.reports)
+    FullSweep::default().run(rt, model, configs, opts, None).map(|o| o.reports)
 }
 
 /// Best (highest eval accuracy) report per task.

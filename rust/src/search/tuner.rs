@@ -97,7 +97,7 @@ pub trait Tuner {
 /// Parse a CLI tuner spelling.
 pub fn parse_tuner(name: &str, eta: usize, rungs: usize) -> Option<Box<dyn Tuner>> {
     match name.to_ascii_lowercase().as_str() {
-        "full" => Some(Box::new(FullSweep)),
+        "full" => Some(Box::new(FullSweep::default())),
         "asha" => Some(Box::new(Asha { eta, rungs, ckpt_dir: None })),
         _ => None,
     }
@@ -109,7 +109,12 @@ pub fn parse_tuner(name: &str, eta: usize, rungs: usize) -> Option<Box<dyn Tuner
 
 /// The baseline strategy: plan all trials with [`JobPlanner`] and train
 /// every one to the full budget (the pre-tuner `search::sweep` body).
-pub struct FullSweep;
+#[derive(Default)]
+pub struct FullSweep {
+    /// Attach a [`CheckpointPool`] at this dir so finished adapters are
+    /// checkpointed (`plora sweep --ckpt DIR` under the default tuner).
+    pub ckpt_dir: Option<PathBuf>,
+}
 
 impl Tuner for FullSweep {
     fn name(&self) -> &'static str {
@@ -129,6 +134,9 @@ impl Tuner for FullSweep {
         let plan = planner.plan(configs)?;
 
         let mut session = session_for(rt, model, opts);
+        if let Some(dir) = &self.ckpt_dir {
+            session.checkpoints = Some(CheckpointPool::new(dir, rt.clone())?);
+        }
         // Under a priority policy the sweep caller has no priorities to
         // give: derive shortest-job-first ranks from modeled work.
         let jobs: Vec<_> = plan.jobs.iter().map(|j| j.job.clone()).collect();
@@ -211,6 +219,19 @@ struct Trial {
 /// may share one process — benches, tests).
 static ASHA_DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
 
+/// Removes an auto-created checkpoint dir when dropped, so early bails
+/// (duplicate ids, failed jobs, resume/submit errors) don't leak temp
+/// dirs. Holds `None` when the caller supplied the dir.
+struct TempDirGuard(Option<PathBuf>);
+
+impl Drop for TempDirGuard {
+    fn drop(&mut self) {
+        if let Some(d) = &self.0 {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}
+
 impl Asha {
     /// SJF priority from modeled remaining seconds (comparable across
     /// rungs, unlike per-plan rank numbers): shorter remaining work runs
@@ -270,6 +291,9 @@ impl Tuner for Asha {
                 (d, true)
             }
         };
+        // Auto-created dirs are cleaned on *every* exit path (early bails
+        // included), not just success.
+        let _dir_guard = TempDirGuard(auto_dir.then(|| ckpt_dir.clone()));
         let ckpt = CheckpointPool::new(&ckpt_dir, rt.clone())?;
 
         let cm = live_cost_model(rt, model)?;
@@ -358,23 +382,28 @@ impl Tuner for Asha {
             // Dominance-gated eager promotion over the (task, rung)
             // group: promote every finalized trial that can no longer
             // rank out of the top k, whatever the still-running trials
-            // score. At full information the condition degenerates to
-            // exact top-k membership, so the promoted set is timing-free.
+            // score. Already-promoted trials left `finalized` (their key
+            // cleared and rung advanced), so count them explicitly: they
+            // are provably top-k, so they occupy promotion slots exactly
+            // like finalized trials ranked above. At full information the
+            // condition degenerates to exact top-k membership, so the
+            // promoted set is timing-free.
             let n_r = group_n[&task][rung];
             let k = group_n[&task][rung + 1];
+            let promoted = promoted_ids.get(&(task.clone(), rung)).map_or(0, |v| v.len());
             let finalized: Vec<(usize, RankKey)> = trials
                 .values()
                 .filter(|t| t.config.task == task && t.rung == rung)
                 .filter_map(|t| t.key.map(|key| (t.config.id, key)))
                 .collect();
-            let unfinished = n_r - finalized.len();
+            let unfinished = n_r - finalized.len() - promoted;
             let mut promote: Vec<usize> = vec![];
             for &(uid, ukey) in &finalized {
                 if trials[&uid].done {
                     continue;
                 }
                 let above = finalized.iter().filter(|&&(_, vkey)| vkey < ukey).count();
-                if above + unfinished < k {
+                if above + unfinished + promoted < k {
                     promote.push(uid);
                 }
             }
@@ -447,9 +476,6 @@ impl Tuner for Asha {
         let report = session.drain()?;
         if failed {
             bail!("asha: a job failed but the session drained clean");
-        }
-        if auto_dir {
-            let _ = std::fs::remove_dir_all(&ckpt_dir);
         }
         let mut out: Vec<AdapterReport> =
             trials.into_values().filter_map(|t| t.report).collect();

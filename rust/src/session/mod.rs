@@ -1075,6 +1075,12 @@ impl Session {
                 done = self.shared.done_cv.wait(done).unwrap();
             }
         }
+        // The sweep this session hosted is over: release its cached eval
+        // streams so a long-running process (the serve daemon, bench
+        // loops) doesn't accumulate held-out rows per drained session.
+        // Best-effort — a later submit for the same adapter regenerates
+        // the identical rows.
+        crate::train::evict_eval_rows(self.options.seed, self.used_adapter_ids.iter().copied());
         {
             let errors = std::mem::take(&mut *self.shared.errors.lock().unwrap());
             if let Some(first) = errors.first() {

@@ -816,6 +816,9 @@ impl Simulator {
     /// non-final rung, timestamped at the rung boundary.
     pub fn run_asha(&self, configs: &[LoraConfig], opts: &SimOptions) -> Result<SimResult> {
         let (eta, rungs) = opts.tuner.unwrap_or((2, 3));
+        // Clamp once for both the ladder and the survivor counts below —
+        // `--eta 0` must not divide by zero, `--eta 1` must still halve.
+        let eta = eta.max(2);
         let ladder = rung_datasets(self.budget.dataset, eta, rungs.max(1));
         let mut groups: BTreeMap<&str, Vec<&LoraConfig>> = BTreeMap::new();
         for c in configs {

@@ -1146,13 +1146,13 @@ fn eval_members(
     // Held-out rows come from the process-global stream cache: a tuner
     // re-ranking trials at every rung pays for generation once per
     // `(seed, id)` stream, not once per ranking pass.
-    let rows: Vec<Vec<Sample>> = slots
+    let rows: Vec<Arc<Vec<Sample>>> = slots
         .iter()
         .enumerate()
         .map(|(s, &k)| {
             if let Some(m) = only {
                 if !m[s] {
-                    return Ok(vec![]);
+                    return Ok(Arc::new(vec![]));
                 }
             }
             let c = &configs[k];
@@ -1207,20 +1207,35 @@ type EvalKey = (u64, usize, String, usize, usize, (i32, i32, i32, i32, i32));
 
 /// One adapter's eval stream: the rows generated so far plus the RNG
 /// positioned to extend them (a later eval with more batches appends).
+/// Rows are behind an [`Arc`] so a cache hit hands out a reference, not
+/// a per-eval clone of every `Sample` under the global lock.
 struct EvalStream {
     rng: Rng,
-    rows: Vec<Sample>,
+    rows: Arc<Vec<Sample>>,
+    /// Last-touched tick for LRU eviction.
+    tick: u64,
 }
 
-static EVAL_CACHE: std::sync::OnceLock<
-    std::sync::Mutex<std::collections::HashMap<EvalKey, EvalStream>>,
-> = std::sync::OnceLock::new();
+#[derive(Default)]
+struct EvalCache {
+    streams: std::collections::HashMap<EvalKey, EvalStream>,
+    tick: u64,
+}
+
+/// Stream-count bound on [`EVAL_CACHE`]: one entry per live (seed,
+/// adapter) pair, least-recently-used evicted past this — a backstop so
+/// the long-running serve daemon can't accumulate eval rows without
+/// limit across tenants. Eviction is purely a perf event: a re-inserted
+/// stream regenerates the same bits.
+const EVAL_CACHE_CAP: usize = 1024;
+
+static EVAL_CACHE: std::sync::OnceLock<std::sync::Mutex<EvalCache>> = std::sync::OnceLock::new();
 
 /// The first `need` rows of an adapter's held-out eval stream, from the
 /// process-global cache. Bit-exact by construction: rows are generated by
 /// the same RNG stream in the same order as direct generation, just
 /// memoized — a successive-halving tuner evaluating every rung boundary
-/// regenerates nothing.
+/// regenerates nothing. The returned `Arc` holds at least `need` rows.
 fn cached_eval_rows(
     tl: &TokenLayout,
     c: &LoraConfig,
@@ -1228,21 +1243,50 @@ fn cached_eval_rows(
     seq: usize,
     vocab: usize,
     need: usize,
-) -> Result<Vec<Sample>> {
+) -> Result<Arc<Vec<Sample>>> {
     let key: EvalKey =
         (seed, c.id, c.task.clone(), seq, vocab, (tl.pad, tl.bos, tl.sep, tl.eos, tl.alpha0));
     let cache = EVAL_CACHE.get_or_init(Default::default);
     let mut cache = cache.lock().unwrap();
-    let stream = cache.entry(key).or_insert_with(|| EvalStream {
-        rng: Rng::new(stream_seed(seed, c.id, EVAL_SALT)),
-        rows: vec![],
-    });
-    let mut sbuf = SampleBuf::new();
-    while stream.rows.len() < need {
-        tasks::gen_into(&c.task, tl, &mut stream.rng, seq, vocab, &mut sbuf)?;
-        stream.rows.push(sbuf.sample.clone());
+    cache.tick += 1;
+    let tick = cache.tick;
+    if !cache.streams.contains_key(&key) && cache.streams.len() >= EVAL_CACHE_CAP {
+        if let Some(oldest) =
+            cache.streams.iter().min_by_key(|(_, s)| s.tick).map(|(k, _)| k.clone())
+        {
+            cache.streams.remove(&oldest);
+        }
     }
-    Ok(stream.rows[..need].to_vec())
+    let stream = cache.streams.entry(key).or_insert_with(|| EvalStream {
+        rng: Rng::new(stream_seed(seed, c.id, EVAL_SALT)),
+        rows: Arc::new(vec![]),
+        tick,
+    });
+    stream.tick = tick;
+    if stream.rows.len() < need {
+        // Clones the backing Vec only if an earlier eval still holds the
+        // shorter Arc (rare: evals of one adapter don't overlap).
+        let rows = Arc::make_mut(&mut stream.rows);
+        let mut sbuf = SampleBuf::new();
+        while rows.len() < need {
+            tasks::gen_into(&c.task, tl, &mut stream.rng, seq, vocab, &mut sbuf)?;
+            rows.push(sbuf.sample.clone());
+        }
+    }
+    Ok(stream.rows.clone())
+}
+
+/// Drop the cached eval streams of `adapters` under `seed` — called when
+/// a session drains so sweep-scoped streams don't outlive their sweep in
+/// a long-running process. Purely a perf event (see [`EVAL_CACHE_CAP`]).
+pub fn evict_eval_rows(seed: u64, adapters: impl IntoIterator<Item = usize>) {
+    let Some(cache) = EVAL_CACHE.get() else { return };
+    let ids: std::collections::BTreeSet<usize> = adapters.into_iter().collect();
+    if ids.is_empty() {
+        return;
+    }
+    let mut cache = cache.lock().unwrap();
+    cache.streams.retain(|k, _| k.0 != seed || !ids.contains(&k.1));
 }
 
 #[cfg(test)]

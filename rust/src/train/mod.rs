@@ -6,8 +6,8 @@ pub mod driver;
 pub mod tasks;
 
 pub use driver::{
-    devices_default, run_pack, run_pack_full, run_pack_on, run_pack_phased, AdapterReport,
-    BoundaryOffer, DeviceOffer, ElasticCtl, JobReport, Joiner, MemberResume, PackPhaseEvent,
-    PhasedOutcome, TrainOptions,
+    devices_default, evict_eval_rows, run_pack, run_pack_full, run_pack_on, run_pack_phased,
+    AdapterReport, BoundaryOffer, DeviceOffer, ElasticCtl, JobReport, Joiner, MemberResume,
+    PackPhaseEvent, PhasedOutcome, TrainOptions,
 };
 pub use tasks::{packed_batch, PackedBatch, Sample, SampleBuf, TASKS};
